@@ -1,0 +1,44 @@
+//! Quickstart: train a tiny GPT-2 with RMNP for 60 steps on the synthetic
+//! Markov corpus and print the loss curve plus final held-out perplexity.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use rmnp::config::{DataSpec, RunConfig, Schedule};
+use rmnp::coordinator::train;
+use rmnp::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = RunConfig {
+        model: "gpt2_tiny".into(),
+        optimizer: "rmnp".into(),
+        lr: 4e-3,
+        schedule: Schedule::CosineWarmup { warmup_frac: 0.1, min_ratio: 0.1 },
+        steps: 60,
+        seed: 7,
+        data: DataSpec::Markov,
+        eval_every: 20,
+        eval_batches: 4,
+        dominance_every: 0,
+        checkpoint_every: 0,
+        out_dir: "runs/quickstart".into(),
+        artifacts: "artifacts".into(),
+    };
+    let engine = Engine::new(&cfg.artifacts)?;
+    println!(
+        "training {} with {} for {} steps on `{}`...",
+        cfg.model, cfg.optimizer, cfg.steps, cfg.data.name()
+    );
+    let result = train::run(&engine, &cfg)?;
+    println!(
+        "final: train loss {:.4}  |  eval loss {:.4}  |  ppl {:.2}  |  {:.1}s",
+        result.final_train_loss,
+        result.final_eval_loss,
+        result.final_ppl,
+        result.seconds
+    );
+    println!("metrics: runs/quickstart/metrics.csv");
+    // random guessing is ln(512) = 6.24 nats; anything meaningfully lower
+    // means the device-resident pipeline is learning.
+    assert!(result.final_train_loss < 5.5, "no learning happened");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! End-to-end driver (the DESIGN.md §4 "required e2e run"): train the
+//! ~100M-parameter GPT-2 (`gpt2_e2e`: d=768, 14 layers, seq 256) with RMNP
+//! for a few hundred steps on the synthetic Markov corpus, logging the
+//! loss curve to `runs/e2e_gpt2/metrics.csv`.
+//!
+//!     cargo run --release --example train_gpt2 -- [steps] [optimizer]
+//!
+//! Defaults: 300 steps, rmnp. On this CPU testbed a step takes a few
+//! seconds — the recorded run lives in EXPERIMENTS.md §E2E.
+
+use rmnp::config::{DataSpec, RunConfig, Schedule};
+use rmnp::coordinator::train;
+use rmnp::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let optimizer = std::env::args().nth(2).unwrap_or_else(|| "rmnp".into());
+    let cfg = RunConfig {
+        model: "gpt2_e2e".into(),
+        optimizer: optimizer.clone(),
+        lr: 2e-3,
+        schedule: Schedule::CosineWarmup { warmup_frac: 0.1, min_ratio: 0.1 },
+        steps,
+        seed: 42,
+        data: DataSpec::Markov,
+        eval_every: (steps / 6).max(1),
+        eval_batches: 2,
+        dominance_every: 0,
+        checkpoint_every: 0,
+        out_dir: format!("runs/e2e_gpt2_{optimizer}").into(),
+        artifacts: "artifacts".into(),
+    };
+    let engine = Engine::new(&cfg.artifacts)?;
+    let params = engine.manifest.model(&cfg.model)?.param_count;
+    println!(
+        "e2e: {} ({:.1}M params) x {} steps with {}",
+        cfg.model,
+        params as f64 / 1e6,
+        cfg.steps,
+        cfg.optimizer
+    );
+    let t0 = std::time::Instant::now();
+    let result = train::run(&engine, &cfg)?;
+    println!(
+        "e2e done in {:.1}s ({:.2}s/step): train {:.4} -> eval {:.4} (ppl {:.2})",
+        t0.elapsed().as_secs_f64(),
+        t0.elapsed().as_secs_f64() / cfg.steps as f64,
+        result.final_train_loss,
+        result.final_eval_loss,
+        result.final_ppl
+    );
+    println!("loss curve: {}/metrics.csv", cfg.out_dir.display());
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path: L1 Pallas kernels, L2 JAX graphs, AOT lowering.
+
+Nothing in this package runs at serving/training time — `make artifacts`
+invokes :mod:`compile.aot` once and the rust coordinator consumes the
+resulting HLO-text artifacts through PJRT.
+"""

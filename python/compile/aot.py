@@ -1,0 +1,219 @@
+"""AOT artifact builder: lower every graph in the registry to HLO text.
+
+Usage (from python/):
+
+    python -m compile.aot --out ../artifacts [--only TAG ...] [--skip-e2e]
+
+Emits:
+
+* `train_<tag>_<opt>.hlo.txt`, `init_<tag>_<opt>.hlo.txt`,
+  `eval_<tag>_<opt>.hlo.txt`, `dom_<tag>_<opt>.hlo.txt` per registry entry;
+* `ns5_<m>x<n>.hlo.txt` / `rownorm_<m>x<n>.hlo.txt` preconditioner ops for
+  every Table 4 shape (the Table 2 / Figure 1 bench);
+* `manifest.json` describing every graph's I/O so the rust runtime is
+  fully manifest-driven.
+
+This is the only entry point that runs Python; the rust binary consumes
+the artifacts through PJRT and never imports this package.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+from . import configs, trainstep
+from .hlo import out_specs, spec, to_hlo_text
+from .kernels import ref
+from .kernels.newton_schulz import (fits_single_block, flops,
+                                    newton_schulz as ns5_pallas,
+                                    rownorm_flops)
+from .kernels.rownorm import rownorm as rownorm_pallas, vmem_bytes
+from .models.common import count_params
+
+
+def _io_entry(names, specs):
+    return [
+        [n, [int(d) for d in s.shape], str(s.dtype)]
+        for n, s in zip(names, specs)
+    ]
+
+
+def _write(outdir, name, text):
+    path = os.path.join(outdir, name + ".hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return os.path.basename(path)
+
+
+def _lower_graph(outdir, manifest, name, fn, in_names, in_specs,
+                 out_names=None):
+    outs = out_specs(fn, in_specs)
+    if out_names is None:
+        out_names = [f"out{i}" for i in range(len(outs))]
+    fname = _write(outdir, name, to_hlo_text(fn, in_specs))
+    manifest["graphs"][name] = {
+        "file": fname,
+        "inputs": _io_entry(in_names, in_specs),
+        "outputs": _io_entry(out_names, outs),
+    }
+    print(f"  lowered {name} ({len(in_specs)} in / {len(outs)} out)")
+
+
+def build_model_artifacts(outdir, manifest, model_spec, opt_name):
+    tag = f"{model_spec.tag}_{opt_name}"
+    pnames, snames, shapes, dtypes = trainstep.state_layout(
+        model_spec, opt_name
+    )
+    state_names = pnames + snames
+    state_specs = [
+        spec(shapes[n], "i32" if dtypes[n] == "int32" else "f32")
+        for n in state_names
+    ]
+    batch = model_spec.batch_specs()
+    batch_names = [b[0] for b in batch]
+    batch_specs = [spec(b[1], b[2]) for b in batch]
+
+    # init(seed) -> state
+    _lower_graph(
+        outdir, manifest, f"init_{tag}",
+        trainstep.build_init(model_spec, opt_name),
+        ["seed"], [spec((), "i32")], out_names=state_names,
+    )
+    # train(*state, *batch, lr) -> (state', loss, gnorm, clipped)
+    _lower_graph(
+        outdir, manifest, f"train_{tag}",
+        trainstep.build_train(model_spec, opt_name),
+        state_names + batch_names + ["lr"],
+        state_specs + batch_specs + [spec((), "f32")],
+        out_names=state_names + ["loss", "grad_norm", "clipped"],
+    )
+    # eval(*params, *batch) -> loss
+    _lower_graph(
+        outdir, manifest, f"eval_{tag}",
+        trainstep.build_eval(model_spec, opt_name),
+        pnames + batch_names,
+        state_specs[: len(pnames)] + batch_specs,
+        out_names=["loss"],
+    )
+    entry = {
+        "train": f"train_{tag}",
+        "init": f"init_{tag}",
+        "eval": f"eval_{tag}",
+        "state_names": state_names,
+        "n_params": len(pnames),
+    }
+    # dominance(*momenta) -> f32[K,3] (only for momentum-carrying matrix opts)
+    dom_fn, dom_names = trainstep.build_dominance(model_spec, opt_name)
+    if dom_names:
+        dom_indices, _ = trainstep.dominance_state_indices(
+            model_spec, opt_name
+        )
+        dom_specs = [state_specs[i] for i in dom_indices]
+        _lower_graph(
+            outdir, manifest, f"dom_{tag}", dom_fn,
+            dom_names, dom_specs, out_names=["ratios"],
+        )
+        entry["dominance"] = f"dom_{tag}"
+        entry["dom_indices"] = dom_indices
+        entry["dom_names"] = dom_names
+    return entry
+
+
+def build_precond_artifacts(outdir, manifest):
+    shapes, per_model = configs.precond_shapes()
+    ops = {}
+    for m, n in shapes:
+        v = spec((m, n), "f32")
+
+        def ns_op(x):
+            if fits_single_block(*x.shape):
+                return ns5_pallas(x)
+            return ref.newton_schulz_ref(x)
+
+        def rn_op(x):
+            return rownorm_pallas(x)
+
+        name_ns = f"ns5_{m}x{n}"
+        name_rn = f"rownorm_{m}x{n}"
+        _lower_graph(outdir, manifest, name_ns, ns_op, ["v"], [v],
+                     out_names=["d"])
+        _lower_graph(outdir, manifest, name_rn, rn_op, ["v"], [v],
+                     out_names=["d"])
+        ops[f"{m}x{n}"] = {
+            "ns5": name_ns, "rownorm": name_rn,
+            "ns5_flops": flops(m, n),
+            "rownorm_flops": rownorm_flops(m, n),
+            "vmem_bytes": vmem_bytes(m, n),
+        }
+    manifest["precond"] = {
+        "shapes": [list(s) for s in shapes],
+        "per_model": per_model,
+        "ops": ops,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="restrict to these model tags")
+    ap.add_argument("--skip-e2e", action="store_true",
+                    help="skip the ~100M e2e graphs (fast CI builds)")
+    ap.add_argument("--skip-precond", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"vocab": configs.VOCAB, "graphs": {}, "models": {}}
+
+    for tag, model_spec in configs.REGISTRY.items():
+        if args.only and tag not in args.only:
+            continue
+        if args.skip_e2e and model_spec.scale == "e2e":
+            continue
+        params = jax.eval_shape(
+            lambda k, ms=model_spec: ms.module().init(ms.cfg, k),
+            jax.random.PRNGKey(0),
+        )
+        entry = {
+            "family": model_spec.family,
+            "scale": model_spec.scale,
+            "batch_specs": [
+                [b[0], [int(d) for d in b[1]], b[2]]
+                for b in model_spec.batch_specs()
+            ],
+            "param_count": count_params(params),
+            "lr_adamw_ratio": model_spec.lr_adamw_ratio,
+            "optimizers": {},
+        }
+        print(f"[{tag}] params={entry['param_count']:,}")
+        for opt_name in model_spec.optimizers:
+            entry["optimizers"][opt_name] = build_model_artifacts(
+                args.out, manifest, model_spec, opt_name
+            )
+        manifest["models"][tag] = entry
+
+    if not args.skip_precond:
+        print("[precond ops]")
+        build_precond_artifacts(args.out, manifest)
+
+    path = os.path.join(args.out, "manifest.json")
+    # merge with an existing manifest so --only builds stay incremental
+    if (args.only or args.skip_e2e or args.skip_precond) and os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+        old["graphs"].update(manifest["graphs"])
+        old["models"].update(manifest["models"])
+        if "precond" in manifest:
+            old["precond"] = manifest["precond"]
+        manifest = old
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {path} ({len(manifest['graphs'])} graphs)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

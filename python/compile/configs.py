@@ -1,0 +1,152 @@
+"""Experiment configuration registry — the single source of truth for which
+artifacts exist. The rust coordinator discovers everything through the
+manifest that `aot.py` generates from this registry; keep tags stable.
+
+Scaling note (DESIGN.md §3): model dims are scaled versions of the paper's
+GPT-2/LLaMA families so that the full experiment grid runs on a CPU PJRT
+testbed. The `e2e` config is the required ~100M-parameter end-to-end
+driver. Preconditioner-op shapes for Table 2 use the paper's *true*
+Table 4 d_model values.
+"""
+
+from .models import convnet, gpt2, llama, ssm
+
+VOCAB = 512  # byte-pair vocabulary produced by the rust tokenizer
+
+
+class ModelSpec:
+    """One (family, scale): model config + batch geometry + optimizers."""
+
+    def __init__(self, family, scale, cfg, batch, optimizers,
+                 lr_adamw_ratio=1.0):
+        self.family = family
+        self.scale = scale
+        self.cfg = cfg
+        self.batch = batch
+        self.optimizers = optimizers
+        self.lr_adamw_ratio = lr_adamw_ratio
+
+    @property
+    def tag(self):
+        return f"{self.family}_{self.scale}"
+
+    def module(self):
+        return {
+            "gpt2": gpt2,
+            "llama": llama,
+            "ssm": ssm,
+            "vision": convnet,
+        }[self.family]
+
+    def batch_specs(self):
+        """Input tensors the rust data pipeline must feed per step."""
+        if self.family == "vision":
+            b = self.batch
+            hw = self.cfg.image_hw
+            return [
+                ("images", (b, 3, hw, hw), "f32"),
+                ("labels", (b,), "i32"),
+            ]
+        return [("tokens", (self.batch, self.cfg.seq_len + 1), "i32")]
+
+
+def _gpt2(scale, d, layers, heads, seq=128, batch=16,
+          optimizers=("adamw", "muon", "rmnp"), **kw):
+    cfg = gpt2.GPT2Config(VOCAB, d, layers, heads, seq)
+    return ModelSpec("gpt2", scale, cfg, batch, list(optimizers), **kw)
+
+
+def _llama(scale, d, layers, heads, ff, seq=128, batch=16,
+           optimizers=("adamw", "muon", "rmnp"), covers_embed=False, **kw):
+    cfg = llama.LlamaConfig(
+        VOCAB, d, layers, heads, ff, seq,
+        matrix_covers_embeddings=covers_embed,
+    )
+    return ModelSpec("llama", scale, cfg, batch, list(optimizers), **kw)
+
+
+def build_registry():
+    """All (family, scale) specs keyed by tag."""
+    specs = [
+        # GPT-2 family (OpenWebText-analogue protocol: matrix optimizer
+        # covers embeddings + head; lr_adamw fixed relative to lr_matrix).
+        _gpt2("tiny", 64, 2, 2,
+              optimizers=("adamw", "muon", "rmnp", "shampoo", "soap")),
+        _gpt2("small", 128, 4, 4),
+        _gpt2("medium", 192, 6, 6),
+        _gpt2("large", 256, 8, 8),
+        # Required end-to-end driver: ~100M params.
+        _gpt2("e2e", 768, 14, 12, seq=256, batch=4,
+              optimizers=("rmnp", "muon")),
+        # LLaMA family (C4-analogue protocol: embeddings/head on AdamW,
+        # shared-LR convention lr_adamw == lr_matrix).
+        _llama("s60", 64, 3, 4, 176,
+               optimizers=("adamw", "muon", "rmnp", "shampoo", "soap")),
+        _llama("s130", 96, 4, 6, 256,
+               optimizers=("adamw", "muon", "rmnp", "shampoo", "soap")),
+        _llama("s350", 128, 6, 8, 352),
+        _llama("s1b", 160, 8, 8, 432),
+        # Appendix D.4 ablation: matrix optimizer also covers embeddings.
+        _llama("s60emb", 64, 3, 4, 176, covers_embed=True,
+               optimizers=("muon", "rmnp")),
+        _llama("s130emb", 96, 4, 6, 256, covers_embed=True,
+               optimizers=("muon", "rmnp")),
+    ]
+    # Mamba-like SSM (Appendix E.5).
+    specs.append(ModelSpec(
+        "ssm", "base",
+        ssm.SSMConfig(VOCAB, 128, 128, 4, 128),
+        16, ["adamw", "muon", "rmnp"],
+    ))
+    # ResNet-18-like CNN (Appendix E.6).
+    specs.append(ModelSpec(
+        "vision", "base",
+        convnet.ConvNetConfig(n_classes=10, width=32, n_blocks=3),
+        32, ["adamw", "muon", "rmnp"],
+    ))
+    return {s.tag: s for s in specs}
+
+
+REGISTRY = build_registry()
+
+#: Table 4 of the paper: GPT-2 configs used for the preconditioning
+#: wall-clock benchmark (true d_model values; layer counts for per-model
+#: matrix multiplicity).
+TABLE4_CONFIGS = [
+    # (name, params-label, layers, d_model)
+    ("60M", "60M", 6, 640),
+    ("125M", "125M", 12, 768),
+    ("200M", "200M", 16, 896),
+    ("355M", "355M", 24, 1024),
+    ("500M", "500M", 28, 1152),
+    ("770M", "770M", 36, 1280),
+    ("1.3B", "1.3B", 44, 1536),
+    ("1.5B", "1.5B", 48, 1600),
+]
+
+
+def precond_shapes():
+    """Unique matrix shapes across all Table 4 configs, with per-model
+    multiplicity recorded for the bench harness.
+
+    Each transformer block holds qkv (3d, d), attn-out (d, d),
+    mlp-in (4d, d), mlp-out (d, 4d); embeddings/head are (VOCAB, d)
+    (vocab scaled, DESIGN.md §3).
+    """
+    shapes = {}
+    per_model = []
+    for name, label, layers, d in TABLE4_CONFIGS:
+        counts = {
+            (3 * d, d): layers,
+            (d, d): layers,
+            (4 * d, d): layers,
+            (d, 4 * d): layers,
+            (VOCAB, d): 2,
+        }
+        for shape in counts:
+            shapes[shape] = True
+        per_model.append(
+            {"name": name, "layers": layers, "d_model": d,
+             "counts": [[list(k), v] for k, v in counts.items()]}
+        )
+    return sorted(shapes.keys()), per_model

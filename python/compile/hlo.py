@@ -1,0 +1,38 @@
+"""Lowering helper: jitted-jax function -> HLO *text*.
+
+HLO text (never `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import jax
+from jax._src.lib import xla_client as xc
+
+DTYPES = {"f32": "float32", "i32": "int32", "u32": "uint32"}
+
+
+def to_hlo_text(fn, arg_specs):
+    """Lower `fn` at the given ShapeDtypeStructs and return HLO text.
+
+    `return_tuple=True` so the root is always a tuple; the rust side runs
+    executables with `untuple_result`, receiving one buffer per element.
+    """
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    import jax.numpy as jnp
+
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(DTYPES[dtype]))
+
+
+def out_specs(fn, arg_specs):
+    """Output ShapeDtypeStructs (flattened) via eval_shape."""
+    outs = jax.eval_shape(fn, *arg_specs)
+    return jax.tree_util.tree_leaves(outs)

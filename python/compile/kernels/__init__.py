@@ -1,0 +1,27 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO graphs).
+
+Public surface:
+
+* :func:`rownorm.rownorm` — RMNP's row-wise l2 normalization preconditioner.
+* :func:`newton_schulz.newton_schulz` — Muon's NS5 orthogonalization.
+* :func:`momentum.momentum` / :func:`momentum.adamw_update` — fused
+  elementwise optimizer-state updates.
+* :mod:`ref` — pure-jnp oracles for all of the above.
+"""
+
+from . import ref
+from .momentum import adamw_update, momentum
+from .newton_schulz import fits_single_block, flops, newton_schulz, rownorm_flops
+from .rownorm import rownorm, vmem_bytes
+
+__all__ = [
+    "ref",
+    "rownorm",
+    "newton_schulz",
+    "momentum",
+    "adamw_update",
+    "fits_single_block",
+    "flops",
+    "rownorm_flops",
+    "vmem_bytes",
+]

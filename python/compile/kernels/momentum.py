@@ -1,0 +1,112 @@
+"""L1 Pallas kernels for the elementwise optimizer-state updates.
+
+Two kernels:
+
+* `momentum` — the EMA update V' = beta*V + (1-beta)*G shared by Muon and
+  RMNP (Algorithms 1/2, line 4).
+* `adamw_update` — the fused AdamW parameter/moment update used for
+  non-matrix parameters in the mixed strategy (paper Section 4.1).
+
+Both are purely elementwise, so the BlockSpec tiles a flattened view into
+fixed-size VMEM panels; arithmetic intensity is O(1) FLOP/byte and the ops
+are bandwidth-bound on any backend. interpret=True as everywhere.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Elementwise panel size: 64 Ki elements x 4 B = 256 KiB per operand.
+BLOCK = 64 * 1024
+
+
+def _pad_flat(x):
+    """Flatten to 1-D and pad to a BLOCK multiple; returns (flat, n)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    padded = (n + BLOCK - 1) // BLOCK * BLOCK
+    if padded != n:
+        flat = jnp.pad(flat, (0, padded - n))
+    return flat, n
+
+
+def _momentum_kernel(v_ref, g_ref, o_ref, *, beta):
+    o_ref[...] = beta * v_ref[...] + (1.0 - beta) * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("beta",))
+def momentum(v, g, *, beta):
+    """EMA momentum via the Pallas elementwise kernel (any shape)."""
+    vf, n = _pad_flat(v)
+    gf, _ = _pad_flat(g)
+    blocks = vf.shape[0] // BLOCK
+    out = pl.pallas_call(
+        functools.partial(_momentum_kernel, beta=beta),
+        out_shape=jax.ShapeDtypeStruct(vf.shape, vf.dtype),
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=True,
+    )(vf, gf)
+    return out[:n].reshape(v.shape)
+
+
+def _adamw_kernel(p_ref, g_ref, m_ref, v_ref, lr_ref, t_ref, o_p, o_m, o_v,
+                  *, beta1, beta2, eps, wd):
+    g = g_ref[...]
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    t = t_ref[0].astype(jnp.float32)
+    lr = lr_ref[0]
+    mhat = m / (1.0 - beta1**t)
+    vhat = v / (1.0 - beta2**t)
+    p = p_ref[...]
+    o_p[...] = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    o_m[...] = m
+    o_v[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("beta1", "beta2", "eps", "wd"))
+def adamw_update(p, g, m, v, lr, t, *, beta1=0.9, beta2=0.95, eps=1e-8,
+                 wd=0.1):
+    """Fused AdamW step via the Pallas elementwise kernel.
+
+    `lr` is a scalar f32 array, `t` a scalar i32 step index (1-based).
+    Returns (p', m', v').
+    """
+    pf, n = _pad_flat(p)
+    gf, _ = _pad_flat(g)
+    mf, _ = _pad_flat(m)
+    vf, _ = _pad_flat(v)
+    blocks = pf.shape[0] // BLOCK
+    lr1 = jnp.reshape(lr, (1,)).astype(jnp.float32)
+    t1 = jnp.reshape(t, (1,)).astype(jnp.int32)
+    shape = jax.ShapeDtypeStruct(pf.shape, pf.dtype)
+    po, mo, vo = pl.pallas_call(
+        functools.partial(
+            _adamw_kernel, beta1=beta1, beta2=beta2, eps=eps, wd=wd
+        ),
+        out_shape=(shape, shape, shape),
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ),
+        interpret=True,
+    )(pf, gf, mf, vf, lr1, t1)
+    unshape = lambda x: x[:n].reshape(p.shape)
+    return unshape(po), unshape(mo), unshape(vo)

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these references to tight tolerances. They are also
+used directly by the L2 graphs when a shape falls outside a kernel's tiling
+assumptions (e.g. 1-D bias vectors).
+"""
+
+import jax.numpy as jnp
+
+#: Muon's quintic Newton-Schulz coefficients (Jordan et al., 2024).
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+#: Numerical floor for row norms / Frobenius norms.
+EPS = 1e-7
+
+
+def rownorm_ref(v, eps=EPS):
+    """RMNP preconditioned direction: RN(V) = diag(VV^T)^{-1/2} V.
+
+    Each row (the d_out index) is divided by its l2 norm along d_in
+    (paper Eq. 4). Zero rows are left at zero via the eps floor.
+    """
+    norms = jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True))
+    return v / jnp.maximum(norms, eps)
+
+
+def gram_diag_ref(v):
+    """diag(VV^T): squared l2 norm of each row of V."""
+    return jnp.sum(v * v, axis=-1)
+
+
+def newton_schulz_ref(g, steps=5, eps=EPS):
+    """Muon's NS5 orthogonalization: X ~ (GG^T)^{-1/2} G.
+
+    Follows the Muon reference implementation: normalize by the Frobenius
+    norm, then iterate the quintic polynomial X <- aX + (bA + cA^2)X with
+    A = XX^T. Operates on the leading (smaller) dimension; transposes
+    internally when m > n (paper Section 3.1, 'WLOG m <= n').
+    """
+    a, b, c = NS_COEFFS
+    x = g / (jnp.linalg.norm(g) + eps)
+    transpose = x.shape[0] > x.shape[1]
+    if transpose:
+        x = x.T
+    for _ in range(steps):
+        gram = x @ x.T
+        poly = b * gram + c * (gram @ gram)
+        x = a * x + poly @ x
+    if transpose:
+        x = x.T
+    return x
+
+
+def momentum_ref(v, g, beta):
+    """EMA momentum (Algorithm 1/2 line 4): V' = beta*V + (1-beta)*G."""
+    return beta * v + (1.0 - beta) * g
+
+
+def adamw_update_ref(p, g, m, v, lr, beta1, beta2, eps, wd, t):
+    """One decoupled-weight-decay Adam step; returns (p', m', v').
+
+    `t` is the 1-based step index used for bias correction.
+    """
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * (g * g)
+    mhat = m / (1.0 - beta1**t)
+    vhat = v / (1.0 - beta2**t)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p, m, v
+
+
+def rms_lr_scale(shape):
+    """Muon/RMNP learning-rate shape correction max(1, sqrt(m/n))
+    (paper Eq. 17/18)."""
+    m, n = shape[-2], shape[-1]
+    return max(1.0, (m / n) ** 0.5)

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: row-wise l2 normalization — the RMNP preconditioner.
+
+This is the paper's core operator (Algorithm 2, line 5):
+
+    D_t = diag(V_t V_t^T)^{-1/2} V_t   ==   V_t[i,:] / ||V_t[i,:]||_2
+
+Hardware adaptation (DESIGN.md §2): the paper implements this as a rowwise
+CUDA reduction. On TPU the analogue is a VPU reduction over the lane
+dimension with the row resident in VMEM. The BlockSpec grid tiles the row
+dimension into `block_rows`-row panels; each panel holds the *entire* row
+(shape `(block_rows, n)`) so the reduction never crosses a block boundary —
+one HBM read + one HBM write per element, the bandwidth roofline for this
+memory-bound op.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered through the interpreter into plain
+HLO. Correctness vs `ref.rownorm_ref` is asserted in
+python/tests/test_kernels.py; the real-TPU performance estimate lives in
+DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS
+
+#: Default number of rows per VMEM panel. 128 rows x 4096 cols x 4B = 2 MiB,
+#: comfortably double-bufferable in a 16 MiB VMEM.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _rownorm_kernel(x_ref, o_ref, *, eps):
+    """One grid step: normalize a (block_rows, n) panel of rows."""
+    v = x_ref[...]
+    # VPU reduction along the lane (last) dimension; keepdims so the
+    # divide broadcasts back over the row.
+    norms = jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True))
+    o_ref[...] = v / jnp.maximum(norms, eps)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps"))
+def rownorm(v, *, block_rows=DEFAULT_BLOCK_ROWS, eps=EPS):
+    """Row-l2-normalize a 2-D matrix via the Pallas kernel.
+
+    Pads the row dimension up to a multiple of `block_rows` (padding rows
+    are zero and normalize to zero thanks to the eps floor), runs the
+    panel grid, then slices the result back.
+    """
+    m, n = v.shape
+    bm = min(block_rows, m)
+    padded = (m + bm - 1) // bm * bm
+    vp = jnp.pad(v, ((0, padded - m), (0, 0))) if padded != m else v
+    out = pl.pallas_call(
+        functools.partial(_rownorm_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct(vp.shape, vp.dtype),
+        grid=(padded // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        interpret=True,
+    )(vp)
+    return out[:m] if padded != m else out
+
+
+def vmem_bytes(m, n, block_rows=DEFAULT_BLOCK_ROWS, dtype_bytes=4):
+    """Estimated VMEM footprint of one grid step (input + output panel).
+
+    Used by DESIGN.md §8 and the `rmnp bench precond --analyze` report to
+    sanity-check that every paper shape fits VMEM with double buffering.
+    """
+    bm = min(block_rows, m)
+    return 2 * bm * n * dtype_bytes

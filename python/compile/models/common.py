@@ -1,0 +1,101 @@
+"""Shared model plumbing: parameter dictionaries, initializers, losses.
+
+Conventions (binding for every model family):
+
+* Parameters live in a flat ``dict[str, jnp.ndarray]``; graph lowering
+  orders them by sorted key, and ``aot.py`` records that order in the
+  manifest so the rust side can treat state as an opaque buffer list.
+* Every linear weight is stored ``(d_out, d_in)`` and applied as
+  ``x @ W.T`` — rows index d_out, so RMNP's row normalization along the
+  last axis is exactly the paper's "row-wise (d_in) l2 normalization".
+* ``param_groups`` labels each parameter ``"matrix"`` (preconditioned by
+  Muon/RMNP/Shampoo/SOAP) or ``"adamw"`` (vector-like, or embeddings/head
+  when the config excludes them — paper Section 4.1 / Appendix D.4).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_init(key, d_out, d_in, scale=None):
+    """Gaussian init with 1/sqrt(d_in) fan-in scaling (GPT-2 convention)."""
+    if scale is None:
+        scale = d_in**-0.5
+    return jax.random.normal(key, (d_out, d_in), jnp.float32) * scale
+
+
+def apply_linear(x, w):
+    """x: (..., d_in) @ W(d_out, d_in)^T -> (..., d_out)."""
+    return x @ w.T
+
+
+def layernorm(x, gain, eps=1e-5):
+    """LayerNorm without bias (paper disables biases)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gain
+
+
+def rmsnorm(x, gain, eps=1e-6):
+    """RMSNorm (LLaMA convention)."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def gelu(x):
+    """tanh-approximate GELU (GPT-2's activation; avoids the erf custom
+    call so artifacts stay portable across PJRT plugins)."""
+    return (
+        0.5
+        * x
+        * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+    )
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def causal_attention(q, k, v, n_heads):
+    """Multi-head causal attention over (B, T, D) tensors."""
+    b, t, d = q.shape
+    hd = d // n_heads
+
+    def split(x):
+        return x.reshape(b, t, n_heads, hd).transpose(0, 2, 1, 3)
+
+    qh, kh, vh = split(q), split(k), split(v)
+    att = (qh @ kh.transpose(0, 1, 3, 2)) * (hd**-0.5)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = att @ vh  # (b, h, t, hd)
+    return out.transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+def cross_entropy_lm(logits, targets):
+    """Mean next-token cross entropy. logits: (B,T,V), targets: (B,T) i32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def cross_entropy_cls(logits, labels):
+    """Mean classification cross entropy. logits: (B,C), labels: (B,) i32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def split_tokens(tokens):
+    """(B, T+1) token block -> (inputs (B,T), targets (B,T))."""
+    return tokens[:, :-1], tokens[:, 1:]
+
+
+def count_params(params):
+    return int(sum(int(p.size) for p in params.values()))
+
+
+def ordered_names(params):
+    """The canonical (manifest) parameter ordering."""
+    return sorted(params.keys())

@@ -1,0 +1,83 @@
+"""GPT-2-style decoder LM (pre-LN, learned positions, GELU MLP, no biases).
+
+Mirrors the paper's GPT-2 configuration (Section 4.1 / Table 5): dropout 0,
+biases disabled, untied LM head. Following Appendix D.1, the token
+embedding and LM head are *matrix* parameters for this family (the matrix
+optimizer covers them) unless the config overrides it.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+
+
+class GPT2Config:
+    def __init__(self, vocab, d_model, n_layers, n_heads, seq_len,
+                 matrix_covers_embeddings=True):
+        assert d_model % n_heads == 0
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.seq_len = seq_len
+        self.matrix_covers_embeddings = matrix_covers_embeddings
+
+
+def init(cfg, key):
+    """Build the parameter dict."""
+    d = cfg.d_model
+    keys = iter(jax.random.split(key, 4 + 6 * cfg.n_layers))
+    p = {
+        "tok_emb": jax.random.normal(next(keys), (cfg.vocab, d)) * 0.02,
+        "pos_emb": jax.random.normal(next(keys), (cfg.seq_len, d)) * 0.01,
+        "final_ln": jnp.ones((d,)),
+        "head": C.linear_init(next(keys), cfg.vocab, d, scale=0.02),
+    }
+    # residual-branch output projections get the GPT-2 depth-scaled init
+    proj_scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    for i in range(cfg.n_layers):
+        pre = f"h{i:02d}."
+        p[pre + "ln1"] = jnp.ones((d,))
+        p[pre + "ln2"] = jnp.ones((d,))
+        p[pre + "attn_qkv"] = C.linear_init(next(keys), 3 * d, d, scale=0.02)
+        p[pre + "attn_out"] = C.linear_init(next(keys), d, d, scale=proj_scale)
+        p[pre + "mlp_in"] = C.linear_init(next(keys), 4 * d, d, scale=0.02)
+        p[pre + "mlp_out"] = C.linear_init(next(keys), d, 4 * d, scale=proj_scale)
+    return p
+
+
+def param_groups(cfg, params):
+    """Label each parameter matrix/adamw (see common.py docstring)."""
+    groups = {}
+    for name, v in params.items():
+        is_embed = name in ("tok_emb", "pos_emb", "head")
+        if v.ndim == 2 and (cfg.matrix_covers_embeddings or not is_embed):
+            groups[name] = "matrix"
+        else:
+            groups[name] = "adamw"
+    return groups
+
+
+def forward(cfg, params, inputs):
+    """inputs: (B, T) i32 -> logits (B, T, V)."""
+    t = inputs.shape[1]
+    x = params["tok_emb"][inputs] + params["pos_emb"][:t][None]
+    for i in range(cfg.n_layers):
+        pre = f"h{i:02d}."
+        h = C.layernorm(x, params[pre + "ln1"])
+        qkv = C.apply_linear(h, params[pre + "attn_qkv"])
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        att = C.causal_attention(q, k, v, cfg.n_heads)
+        x = x + C.apply_linear(att, params[pre + "attn_out"])
+        h = C.layernorm(x, params[pre + "ln2"])
+        h = C.gelu(C.apply_linear(h, params[pre + "mlp_in"]))
+        x = x + C.apply_linear(h, params[pre + "mlp_out"])
+    x = C.layernorm(x, params["final_ln"])
+    return C.apply_linear(x, params["head"])
+
+
+def loss(cfg, params, tokens):
+    """tokens: (B, T+1) i32 -> scalar LM loss."""
+    inputs, targets = C.split_tokens(tokens)
+    return C.cross_entropy_lm(forward(cfg, params, inputs), targets)

@@ -1,0 +1,107 @@
+"""LLaMA-style decoder LM: RMSNorm, rotary positions, SwiGLU MLP, no biases.
+
+Matches the paper's LLaMA protocol (Section 4.1): by default the LM head
+and token embedding are handled by AdamW (`matrix_covers_embeddings=False`);
+Appendix D.4's ablation flips that flag.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+
+
+class LlamaConfig:
+    def __init__(self, vocab, d_model, n_layers, n_heads, d_ff, seq_len,
+                 matrix_covers_embeddings=False, rope_base=10000.0):
+        assert d_model % n_heads == 0
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_layers = n_layers
+        self.n_heads = n_heads
+        self.d_ff = d_ff
+        self.seq_len = seq_len
+        self.matrix_covers_embeddings = matrix_covers_embeddings
+        self.rope_base = rope_base
+
+
+def init(cfg, key):
+    d, f = cfg.d_model, cfg.d_ff
+    keys = iter(jax.random.split(key, 4 + 7 * cfg.n_layers))
+    p = {
+        "tok_emb": jax.random.normal(next(keys), (cfg.vocab, d)) * 0.02,
+        "final_norm": jnp.ones((d,)),
+        "head": C.linear_init(next(keys), cfg.vocab, d, scale=0.02),
+    }
+    proj_scale = 0.02 / (2 * cfg.n_layers) ** 0.5
+    for i in range(cfg.n_layers):
+        pre = f"h{i:02d}."
+        p[pre + "norm1"] = jnp.ones((d,))
+        p[pre + "norm2"] = jnp.ones((d,))
+        p[pre + "attn_qkv"] = C.linear_init(next(keys), 3 * d, d, scale=0.02)
+        p[pre + "attn_out"] = C.linear_init(next(keys), d, d, scale=proj_scale)
+        p[pre + "mlp_gate"] = C.linear_init(next(keys), f, d, scale=0.02)
+        p[pre + "mlp_up"] = C.linear_init(next(keys), f, d, scale=0.02)
+        p[pre + "mlp_down"] = C.linear_init(next(keys), d, f, scale=proj_scale)
+    return p
+
+
+def param_groups(cfg, params):
+    groups = {}
+    for name, v in params.items():
+        is_embed = name in ("tok_emb", "head")
+        if v.ndim == 2 and (cfg.matrix_covers_embeddings or not is_embed):
+            groups[name] = "matrix"
+        else:
+            groups[name] = "adamw"
+    return groups
+
+
+def _rope(x, base):
+    """Rotary position embedding over (B, H, T, hd)."""
+    b, h, t, hd = x.shape
+    half = hd // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)  # (T, half)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+
+
+def _attention(cfg, q, k, v):
+    b, t, d = q.shape
+    h, hd = cfg.n_heads, d // cfg.n_heads
+
+    def split(x):
+        return x.reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+
+    qh = _rope(split(q), cfg.rope_base)
+    kh = _rope(split(k), cfg.rope_base)
+    vh = split(v)
+    att = (qh @ kh.transpose(0, 1, 3, 2)) * (hd**-0.5)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jax.nn.softmax(jnp.where(mask, att, -1e9), axis=-1)
+    return (att @ vh).transpose(0, 2, 1, 3).reshape(b, t, d)
+
+
+def forward(cfg, params, inputs):
+    x = params["tok_emb"][inputs]
+    for i in range(cfg.n_layers):
+        pre = f"h{i:02d}."
+        hN = C.rmsnorm(x, params[pre + "norm1"])
+        qkv = C.apply_linear(hN, params[pre + "attn_qkv"])
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        x = x + C.apply_linear(_attention(cfg, q, k, v), params[pre + "attn_out"])
+        hN = C.rmsnorm(x, params[pre + "norm2"])
+        gate = C.silu(C.apply_linear(hN, params[pre + "mlp_gate"]))
+        up = C.apply_linear(hN, params[pre + "mlp_up"])
+        x = x + C.apply_linear(gate * up, params[pre + "mlp_down"])
+    x = C.rmsnorm(x, params["final_norm"])
+    return C.apply_linear(x, params["head"])
+
+
+def loss(cfg, params, tokens):
+    inputs, targets = C.split_tokens(tokens)
+    return C.cross_entropy_lm(forward(cfg, params, inputs), targets)

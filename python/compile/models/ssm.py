@@ -1,0 +1,94 @@
+"""Minimal selective state-space LM ("Mamba-like", Appendix E.5).
+
+A faithful Mamba block needs hardware-aware scan kernels; what the paper's
+Appendix E.5 actually tests is whether RMNP's row-normalized preconditioner
+generalizes to *state-space* matrix parameters. This block keeps that
+structure: input/gate projections, an input-dependent (selective) decay
+gate driving a diagonal state recurrence along time, and an output
+projection — all 2-D matrix parameters that the matrix optimizer
+preconditions. The recurrence is a first-order scan
+
+    s_t = a_t * s_{t-1} + (1 - a_t) * u_t,   a_t = sigmoid(W_a x_t + b)
+
+implemented with jax.lax.scan over time (lowering to a pure-HLO while
+loop; no custom calls).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+
+
+class SSMConfig:
+    def __init__(self, vocab, d_model, d_state, n_layers, seq_len,
+                 matrix_covers_embeddings=False):
+        self.vocab = vocab
+        self.d_model = d_model
+        self.d_state = d_state
+        self.n_layers = n_layers
+        self.seq_len = seq_len
+        self.matrix_covers_embeddings = matrix_covers_embeddings
+
+
+def init(cfg, key):
+    d, s = cfg.d_model, cfg.d_state
+    keys = iter(jax.random.split(key, 2 + 5 * cfg.n_layers))
+    p = {
+        "tok_emb": jax.random.normal(next(keys), (cfg.vocab, d)) * 0.02,
+        "final_norm": jnp.ones((d,)),
+        "head": C.linear_init(next(keys), cfg.vocab, d, scale=0.02),
+    }
+    for i in range(cfg.n_layers):
+        pre = f"h{i:02d}."
+        p[pre + "norm"] = jnp.ones((d,))
+        p[pre + "in_proj"] = C.linear_init(next(keys), s, d, scale=0.02)
+        p[pre + "gate_proj"] = C.linear_init(next(keys), s, d, scale=0.02)
+        p[pre + "decay_proj"] = C.linear_init(next(keys), s, d, scale=0.02)
+        p[pre + "out_proj"] = C.linear_init(next(keys), d, s, scale=0.02)
+    return p
+
+
+def param_groups(cfg, params):
+    groups = {}
+    for name, v in params.items():
+        is_embed = name in ("tok_emb", "head")
+        if v.ndim == 2 and (cfg.matrix_covers_embeddings or not is_embed):
+            groups[name] = "matrix"
+        else:
+            groups[name] = "adamw"
+    return groups
+
+
+def _selective_scan(u, a):
+    """s_t = a_t s_{t-1} + (1-a_t) u_t over axis 1 of (B, T, S)."""
+
+    def step(s, ua):
+        u_t, a_t = ua
+        s = a_t * s + (1.0 - a_t) * u_t
+        return s, s
+
+    u_t = u.transpose(1, 0, 2)  # (T, B, S)
+    a_t = a.transpose(1, 0, 2)
+    s0 = jnp.zeros_like(u[:, 0, :])
+    _, ys = jax.lax.scan(step, s0, (u_t, a_t))
+    return ys.transpose(1, 0, 2)
+
+
+def forward(cfg, params, inputs):
+    x = params["tok_emb"][inputs]
+    for i in range(cfg.n_layers):
+        pre = f"h{i:02d}."
+        h = C.rmsnorm(x, params[pre + "norm"])
+        u = C.apply_linear(h, params[pre + "in_proj"])
+        gate = C.silu(C.apply_linear(h, params[pre + "gate_proj"]))
+        decay = jax.nn.sigmoid(C.apply_linear(h, params[pre + "decay_proj"]) + 2.0)
+        s = _selective_scan(u, decay)
+        x = x + C.apply_linear(s * gate, params[pre + "out_proj"])
+    x = C.rmsnorm(x, params["final_norm"])
+    return C.apply_linear(x, params["head"])
+
+
+def loss(cfg, params, tokens):
+    inputs, targets = C.split_tokens(tokens)
+    return C.cross_entropy_lm(forward(cfg, params, inputs), targets)

@@ -1,0 +1,348 @@
+"""L2 optimizer update graphs: AdamW, Muon, RMNP, Shampoo-lite, SOAP-lite.
+
+All five implement the same mixed-update protocol as the paper
+(Section 4.1): *matrix* parameters get the matrix optimizer, everything
+else gets AdamW with beta=(0.9, 0.95), wd=0.1. The matrix learning rate is
+RMS-rescaled by max(1, sqrt(m/n)) (Eq. 17/18).
+
+State layout (per optimizer) is a flat dict name -> array; ordering is by
+sorted key so the manifest ordering matches rust's expectations:
+
+* adamw:   m.<p>, v.<p> for every param; plus scalar step "t".
+* muon:    mom.<p> for matrix params, m.<p>/v.<p> for adamw params, "t".
+* rmnp:    identical layout to muon.
+* shampoo: mom.<p>, pl.<p> (m x m), pr.<p> (n x n) for matrix params,
+           m./v. for adamw params, "t".
+* soap:    shampoo layout plus vsq.<p> second-moment accumulators.
+
+Shampoo/SOAP substitution note (DESIGN.md §3): the published versions take
+inverse 4th roots via eigendecomposition; `eigh` lowers to LAPACK custom
+calls that xla_extension 0.5.1 cannot load, so we compute inverse p-th
+roots with a coupled Newton iteration (matmul-only, same fixed point) and
+run SOAP as Adam-in-preconditioned-space. These appear only as sweep
+baselines (paper Tables 11/12).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.newton_schulz import fits_single_block
+from .kernels.newton_schulz import newton_schulz as ns5_pallas
+from .kernels.rownorm import rownorm as rownorm_pallas
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+WEIGHT_DECAY = 0.1
+MATRIX_BETA = 0.95  # Muon/RMNP momentum (Appendix B)
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+
+
+def rms_scale(shape):
+    m, n = shape
+    return jnp.float32(max(1.0, (m / n) ** 0.5))
+
+
+def adamw_param_update(p, g, m, v, lr, t, wd=WEIGHT_DECAY):
+    """Single-tensor AdamW with bias correction; `t` is 1-based i32."""
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    tf = t.astype(jnp.float32)
+    mhat = m / (1.0 - ADAM_B1**tf)
+    vhat = v / (1.0 - ADAM_B2**tf)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS) + wd * p)
+    return p, m, v
+
+
+def _precondition_rownorm(vmom):
+    """RMNP direction via the L1 Pallas kernel (falls back to the jnp
+    oracle for 1-D/oversized operands — same math)."""
+    if vmom.ndim == 2:
+        return rownorm_pallas(vmom)
+    return ref.rownorm_ref(vmom)
+
+
+def _precondition_ns5(vmom):
+    """Muon direction via the L1 Pallas kernel when the single-block
+    tiling applies, else the jnp reference (identical iteration)."""
+    m, n = vmom.shape
+    if fits_single_block(m, n):
+        return ns5_pallas(vmom)
+    return ref.newton_schulz_ref(vmom)
+
+
+# ---------------------------------------------------------------------------
+# inverse p-th root via coupled Newton (Shampoo substrate)
+
+
+def _inv_root_newton(a, p=4, iters=25):
+    """X ~ (A + ridge I)^(-1/p) for SPD A, matmul-only.
+
+    Coupled Newton iteration (Higham, *Functions of Matrices*, alg. 7.12):
+      M_0 = A/c, X_0 = I;  X <- X((p+1)I - M)/p,  M <- (((p+1)I - M)/p)^p M.
+    Normalizing by c = tr(A) (an upper bound on lambda_max for PSD A) keeps
+    every eigenvalue of M_0 in (0, 1], where the iteration is provably
+    non-expanding — a mean-eigenvalue normalizer diverges whenever the
+    condition number exceeds p+1, which happens on the near-rank-1
+    statistics of early training. A relative ridge keeps the smallest
+    eigenvalues within the iteration's reach.
+    """
+    dim = a.shape[0]
+    ident = jnp.eye(dim, dtype=a.dtype)
+    ridge = 1e-4 * jnp.trace(a) / dim + 1e-10
+    a = a + ridge * ident
+    c = jnp.trace(a)
+    m = a / c
+    x = ident
+    alpha = -1.0 / p
+    for _ in range(iters):
+        t = (1.0 - alpha) * ident + alpha * m
+        x = x @ t
+        # m <- t^p m  (p = 4: square twice)
+        t2 = t @ t
+        m = t2 @ t2 @ m
+    return x * c**alpha
+
+
+def shampoo_matrix_update(p_, g, mom, pl, pr, lr, beta=MATRIX_BETA,
+                          accum=0.95, wd=WEIGHT_DECAY):
+    """One Shampoo-lite step on a matrix parameter.
+
+    L/R statistics are EMAs of GG^T and G^T G; the preconditioned direction
+    is L^{-1/4} V R^{-1/4}, Frobenius-rescaled to match the Muon/RMNP
+    update magnitude.
+    """
+    mom = beta * mom + (1.0 - beta) * g
+    pl = accum * pl + (1.0 - accum) * (g @ g.T)
+    pr = accum * pr + (1.0 - accum) * (g.T @ g)
+    d = _inv_root_newton(pl) @ mom @ _inv_root_newton(pr)
+    # normalize to unit RMS like Muon's orthogonal update (Frobenius ~ sqrt(m))
+    d = d * (jnp.sqrt(jnp.float32(mom.shape[0])) / (jnp.linalg.norm(d) + 1e-8))
+    p_ = p_ - lr * rms_scale(p_.shape) * (d + wd * p_)
+    return p_, mom, pl, pr
+
+
+def soap_matrix_update(p_, g, mom, pl, pr, vsq, lr, beta=MATRIX_BETA,
+                       accum=0.95, wd=WEIGHT_DECAY):
+    """SOAP-lite: Shampoo's preconditioned direction with an Adam-style
+    second moment accumulated in the *preconditioned* space."""
+    mom = beta * mom + (1.0 - beta) * g
+    pl = accum * pl + (1.0 - accum) * (g @ g.T)
+    pr = accum * pr + (1.0 - accum) * (g.T @ g)
+    gp = _inv_root_newton(pl) @ g @ _inv_root_newton(pr)
+    vsq = ADAM_B2 * vsq + (1.0 - ADAM_B2) * gp * gp
+    dp = _inv_root_newton(pl) @ mom @ _inv_root_newton(pr)
+    d = dp / (jnp.sqrt(vsq) + 1e-8)
+    d = d * (jnp.sqrt(jnp.float32(mom.shape[0])) / (jnp.linalg.norm(d) + 1e-8))
+    p_ = p_ - lr * rms_scale(p_.shape) * (d + wd * p_)
+    return p_, mom, pl, pr, vsq
+
+
+# ---------------------------------------------------------------------------
+# optimizer objects
+
+
+class Optimizer:
+    """Builds init-state and apply-update graphs over a param dict.
+
+    `groups` maps param name -> "matrix"|"adamw"; `lr_adamw_ratio` is the
+    fixed ratio lr_adamw / lr_matrix used by the mixed protocol (rust
+    passes lr_matrix each step; the AdamW LR follows at this ratio, which
+    mirrors the paper's fixed-lr_AdamW + swept-lr_Matrix setup).
+    """
+
+    name = "base"
+
+    def __init__(self, groups, lr_adamw_ratio=1.0):
+        self.groups = groups
+        self.lr_adamw_ratio = lr_adamw_ratio
+
+    def matrix_names(self):
+        return sorted(n for n, g in self.groups.items() if g == "matrix")
+
+    def adamw_names(self):
+        return sorted(n for n, g in self.groups.items() if g == "adamw")
+
+    def init_state(self, params):
+        raise NotImplementedError
+
+    def apply(self, params, grads, state, lr):
+        raise NotImplementedError
+
+    def _apply_adamw_group(self, params, grads, state, new_state, lr, t):
+        lr_a = lr * self.lr_adamw_ratio
+        for name in self.adamw_names():
+            p, m, v = adamw_param_update(
+                params[name], grads[name], state["m." + name],
+                state["v." + name], lr_a, t,
+            )
+            params[name] = p
+            new_state["m." + name] = m
+            new_state["v." + name] = v
+
+
+class AdamW(Optimizer):
+    name = "adamw"
+
+    def __init__(self, groups, **kw):
+        # AdamW ignores the matrix/adamw split: everything is elementwise.
+        groups = {k: "adamw" for k in groups}
+        super().__init__(groups, **kw)
+
+    def init_state(self, params):
+        s = {"t": jnp.zeros((), jnp.int32)}
+        for name in self.adamw_names():
+            s["m." + name] = jnp.zeros_like(params[name])
+            s["v." + name] = jnp.zeros_like(params[name])
+        return s
+
+    def apply(self, params, grads, state, lr):
+        params = dict(params)
+        t = state["t"] + 1
+        new_state = {"t": t}
+        self._apply_adamw_group(params, grads, state, new_state, lr, t)
+        return params, new_state
+
+
+class _MatrixMomentumOpt(Optimizer):
+    """Shared scaffolding for Muon and RMNP (identical except for the
+    preconditioner on line 5 of Algorithms 1/2)."""
+
+    def _precondition(self, vmom):
+        raise NotImplementedError
+
+    def init_state(self, params):
+        s = {"t": jnp.zeros((), jnp.int32)}
+        for name in self.matrix_names():
+            s["mom." + name] = jnp.zeros_like(params[name])
+        for name in self.adamw_names():
+            s["m." + name] = jnp.zeros_like(params[name])
+            s["v." + name] = jnp.zeros_like(params[name])
+        return s
+
+    def apply(self, params, grads, state, lr):
+        params = dict(params)
+        t = state["t"] + 1
+        new_state = {"t": t}
+        for name in self.matrix_names():
+            vmom = MATRIX_BETA * state["mom." + name] + (1.0 - MATRIX_BETA) * grads[name]
+            d = self._precondition(vmom)
+            scale = rms_scale(params[name].shape)
+            params[name] = params[name] - lr * scale * (d + WEIGHT_DECAY * params[name])
+            new_state["mom." + name] = vmom
+        self._apply_adamw_group(params, grads, state, new_state, lr, t)
+        return params, new_state
+
+
+class Muon(_MatrixMomentumOpt):
+    name = "muon"
+
+    def _precondition(self, vmom):
+        return _precondition_ns5(vmom)
+
+
+class RMNP(_MatrixMomentumOpt):
+    name = "rmnp"
+
+    def _precondition(self, vmom):
+        return _precondition_rownorm(vmom)
+
+
+class Shampoo(Optimizer):
+    name = "shampoo"
+
+    def init_state(self, params):
+        s = {"t": jnp.zeros((), jnp.int32)}
+        for name in self.matrix_names():
+            m, n = params[name].shape
+            s["mom." + name] = jnp.zeros_like(params[name])
+            s["pl." + name] = jnp.zeros((m, m), jnp.float32)
+            s["pr." + name] = jnp.zeros((n, n), jnp.float32)
+        for name in self.adamw_names():
+            s["m." + name] = jnp.zeros_like(params[name])
+            s["v." + name] = jnp.zeros_like(params[name])
+        return s
+
+    def apply(self, params, grads, state, lr):
+        params = dict(params)
+        t = state["t"] + 1
+        new_state = {"t": t}
+        for name in self.matrix_names():
+            p, mom, pl, pr = shampoo_matrix_update(
+                params[name], grads[name], state["mom." + name],
+                state["pl." + name], state["pr." + name], lr,
+            )
+            params[name] = p
+            new_state["mom." + name] = mom
+            new_state["pl." + name] = pl
+            new_state["pr." + name] = pr
+        self._apply_adamw_group(params, grads, state, new_state, lr, t)
+        return params, new_state
+
+
+class Soap(Optimizer):
+    name = "soap"
+
+    def init_state(self, params):
+        s = {"t": jnp.zeros((), jnp.int32)}
+        for name in self.matrix_names():
+            m, n = params[name].shape
+            s["mom." + name] = jnp.zeros_like(params[name])
+            s["pl." + name] = jnp.zeros((m, m), jnp.float32)
+            s["pr." + name] = jnp.zeros((n, n), jnp.float32)
+            s["vsq." + name] = jnp.zeros_like(params[name])
+        for name in self.adamw_names():
+            s["m." + name] = jnp.zeros_like(params[name])
+            s["v." + name] = jnp.zeros_like(params[name])
+        return s
+
+    def apply(self, params, grads, state, lr):
+        params = dict(params)
+        t = state["t"] + 1
+        new_state = {"t": t}
+        for name in self.matrix_names():
+            p, mom, pl, pr, vsq = soap_matrix_update(
+                params[name], grads[name], state["mom." + name],
+                state["pl." + name], state["pr." + name],
+                state["vsq." + name], lr,
+            )
+            params[name] = p
+            new_state["mom." + name] = mom
+            new_state["pl." + name] = pl
+            new_state["pr." + name] = pr
+            new_state["vsq." + name] = vsq
+        self._apply_adamw_group(params, grads, state, new_state, lr, t)
+        return params, new_state
+
+
+OPTIMIZERS = {
+    "adamw": AdamW,
+    "muon": Muon,
+    "rmnp": RMNP,
+    "shampoo": Shampoo,
+    "soap": Soap,
+}
+
+
+def make(name, groups, lr_adamw_ratio=1.0):
+    return OPTIMIZERS[name](groups, lr_adamw_ratio=lr_adamw_ratio)
+
+
+# ---------------------------------------------------------------------------
+# dominance metrics (paper Section 3.2 / Appendix B)
+
+
+def dominance_metrics(vmom):
+    """(r_avg, r_min, r_max) of the Gram matrix V V^T for one matrix
+    parameter (Eqs. 5-6). Transposes tall matrices so the Gram side is the
+    smaller dimension, matching the paper's m <= n convention."""
+    v = vmom if vmom.shape[0] <= vmom.shape[1] else vmom.T
+    m = v.shape[0]
+    gram = v @ v.T
+    diag = jnp.diag(gram)
+    offdiag_sum = jnp.sum(jnp.abs(gram), axis=1) - jnp.abs(diag)
+    denom = offdiag_sum / jnp.maximum(m - 1, 1)
+    r = diag / jnp.maximum(denom, 1e-12)
+    return jnp.stack([jnp.mean(r), jnp.min(r), jnp.max(r)])

@@ -1,0 +1,161 @@
+"""Fused train-step / init / eval / dominance graph builders.
+
+Every graph is a pure function over flat positional arrays so its lowered
+HLO has a stable parameter order the rust runtime can rely on:
+
+* ``init(seed)                         -> (state...)``
+* ``train(*state, *batch, lr)          -> (state'..., loss, gnorm, clipped)``
+* ``eval(*params, *batch)              -> loss``
+* ``dominance(*matrix_momenta)         -> f32[K, 3]  (r_avg, r_min, r_max)``
+
+State order is canonical: sorted parameter names, then sorted optimizer
+state keys (see optim.py). The manifest records names, shapes, dtypes and
+the index ranges so rust treats state as an opaque buffer list and feeds
+output buffers of step t straight back into step t+1 (device-resident via
+the patched `execute_b_untupled`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import optim as O
+
+CLIP_NORM = 1.0  # standard global-norm clip; clip-rate figures count hits
+
+
+# ---------------------------------------------------------------------------
+# state packing
+
+
+def make_optimizer(spec, opt_name):
+    module = spec.module()
+    # params are only needed for shapes here — use eval_shape to stay cheap
+    shapes = jax.eval_shape(lambda k: module.init(spec.cfg, k),
+                            jax.random.PRNGKey(0))
+    groups = module.param_groups(spec.cfg, shapes)
+    return O.make(opt_name, groups, lr_adamw_ratio=spec.lr_adamw_ratio)
+
+
+def state_layout(spec, opt_name):
+    """(param_names, opt_state_names, shapes dict, dtypes dict)."""
+    module = spec.module()
+    pshapes = jax.eval_shape(lambda k: module.init(spec.cfg, k),
+                             jax.random.PRNGKey(0))
+    opt = make_optimizer(spec, opt_name)
+    sshapes = jax.eval_shape(opt.init_state, pshapes)
+    pnames = sorted(pshapes.keys())
+    snames = sorted(sshapes.keys())
+    shapes = {n: tuple(pshapes[n].shape) for n in pnames}
+    shapes.update({n: tuple(sshapes[n].shape) for n in snames})
+    dtypes = {n: str(pshapes[n].dtype) for n in pnames}
+    dtypes.update({n: str(sshapes[n].dtype) for n in snames})
+    return pnames, snames, shapes, dtypes
+
+
+def _pack(params, state, pnames, snames):
+    return tuple(params[n] for n in pnames) + tuple(state[n] for n in snames)
+
+
+def _unpack(flat, pnames, snames):
+    params = {n: flat[i] for i, n in enumerate(pnames)}
+    state = {n: flat[len(pnames) + i] for i, n in enumerate(snames)}
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# loss dispatch
+
+
+def loss_fn(spec, params, batch):
+    module = spec.module()
+    if spec.family == "vision":
+        images, labels = batch
+        return module.loss(spec.cfg, params, images, labels)
+    (tokens,) = batch
+    return module.loss(spec.cfg, params, tokens)
+
+
+# ---------------------------------------------------------------------------
+# graph builders
+
+
+def build_init(spec, opt_name):
+    """fn(seed: i32[]) -> flat state tuple."""
+    module = spec.module()
+    opt = make_optimizer(spec, opt_name)
+    pnames, snames, _, _ = state_layout(spec, opt_name)
+
+    def init(seed):
+        key = jax.random.PRNGKey(seed)
+        params = module.init(spec.cfg, key)
+        state = opt.init_state(params)
+        return _pack(params, state, pnames, snames)
+
+    return init
+
+
+def build_train(spec, opt_name):
+    """fn(*state, *batch, lr) -> (*state', loss, grad_norm, clipped)."""
+    opt = make_optimizer(spec, opt_name)
+    pnames, snames, _, _ = state_layout(spec, opt_name)
+    n_batch = len(spec.batch_specs())
+
+    def train(*args):
+        flat = args[: len(pnames) + len(snames)]
+        batch = args[len(pnames) + len(snames):-1]
+        lr = args[-1]
+        assert len(batch) == n_batch
+        params, state = _unpack(flat, pnames, snames)
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(spec, p, batch)
+        )(params)
+        # global-norm clipping + clip indicator (Figures 29-32)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(g * g) for g in grads.values())
+        )
+        scale = jnp.minimum(1.0, CLIP_NORM / jnp.maximum(gnorm, 1e-12))
+        clipped = (gnorm > CLIP_NORM).astype(jnp.float32)
+        grads = {n: g * scale for n, g in grads.items()}
+        new_params, new_state = opt.apply(params, grads, state, lr)
+        return _pack(new_params, new_state, pnames, snames) + (
+            loss, gnorm, clipped,
+        )
+
+    return train
+
+
+def build_eval(spec, opt_name):
+    """fn(*params, *batch) -> loss (parameters only, no optimizer state)."""
+    pnames, _, _, _ = state_layout(spec, opt_name)
+
+    def evaluate(*args):
+        params = {n: args[i] for i, n in enumerate(pnames)}
+        batch = args[len(pnames):]
+        return loss_fn(spec, params, batch)
+
+    return evaluate
+
+
+def build_dominance(spec, opt_name):
+    """fn(*matrix momenta) -> f32[K,3] of (r_avg, r_min, r_max) rows.
+
+    Inputs are the `mom.<p>` entries of the optimizer state, in state
+    order; the manifest lists their state indices so rust can feed the
+    corresponding live buffers without copies.
+    """
+    opt = make_optimizer(spec, opt_name)
+    matrix = opt.matrix_names()
+
+    def dominance(*moms):
+        rows = [O.dominance_metrics(v) for v in moms]
+        return jnp.stack(rows)
+
+    return dominance, ["mom." + n for n in matrix]
+
+
+def dominance_state_indices(spec, opt_name):
+    """Indices into the flat state of each matrix-momentum buffer."""
+    pnames, snames, _, _ = state_layout(spec, opt_name)
+    _, wanted = build_dominance(spec, opt_name)
+    all_names = pnames + snames
+    return [all_names.index(w) for w in wanted], wanted

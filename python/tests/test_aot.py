@@ -1,0 +1,103 @@
+"""Manifest/artifact contract tests (run against the built `artifacts/`).
+
+Skipped when artifacts haven't been built yet (e.g. a fresh checkout
+running unit tests before `make artifacts`).
+"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_every_graph_file_exists(manifest):
+    for name, g in manifest["graphs"].items():
+        path = os.path.join(ART, g["file"])
+        assert os.path.exists(path), name
+        assert os.path.getsize(path) > 100, name
+
+
+def test_model_entries_reference_known_graphs(manifest):
+    for tag, model in manifest["models"].items():
+        for opt, entry in model["optimizers"].items():
+            for role in ("train", "init", "eval"):
+                assert entry[role] in manifest["graphs"], (tag, opt, role)
+            if "dominance" in entry:
+                assert entry["dominance"] in manifest["graphs"]
+
+
+def test_train_io_contract(manifest):
+    """train inputs = state + batch + lr; outputs = state + 3 metrics, with
+    matching names/shapes so rust can feed outputs back as inputs."""
+    for tag, model in manifest["models"].items():
+        batch_names = [b[0] for b in model["batch_specs"]]
+        for opt, entry in model["optimizers"].items():
+            g = manifest["graphs"][entry["train"]]
+            names_in = [i[0] for i in g["inputs"]]
+            names_out = [o[0] for o in g["outputs"]]
+            state = entry["state_names"]
+            assert names_in == state + batch_names + ["lr"], (tag, opt)
+            assert names_out == state + ["loss", "grad_norm", "clipped"]
+            # state element shapes identical between input and output
+            for i in range(len(state)):
+                assert g["inputs"][i][1] == g["outputs"][i][1], (tag, opt, i)
+                assert g["inputs"][i][2] == g["outputs"][i][2]
+
+
+def test_eval_takes_params_only(manifest):
+    for tag, model in manifest["models"].items():
+        for opt, entry in model["optimizers"].items():
+            g = manifest["graphs"][entry["eval"]]
+            n_params = entry["n_params"]
+            batch = len(model["batch_specs"])
+            assert len(g["inputs"]) == n_params + batch, (tag, opt)
+            assert [o[0] for o in g["outputs"]] == ["loss"]
+
+
+def test_dominance_indices_point_at_momenta(manifest):
+    for tag, model in manifest["models"].items():
+        for opt, entry in model["optimizers"].items():
+            if "dominance" not in entry:
+                continue
+            for idx, name in zip(entry["dom_indices"], entry["dom_names"]):
+                assert entry["state_names"][idx] == name, (tag, opt)
+
+
+def test_precond_ops_cover_table4(manifest):
+    pre = manifest["precond"]
+    assert len(pre["per_model"]) == 8
+    for model in pre["per_model"]:
+        for (shape, _count) in model["counts"]:
+            key = f"{shape[0]}x{shape[1]}"
+            assert key in pre["ops"], key
+            for role in ("ns5", "rownorm"):
+                gname = pre["ops"][key][role]
+                assert gname in manifest["graphs"], gname
+
+
+def test_precond_flops_gap_grows(manifest):
+    """The arithmetic-complexity ratio (the paper's core claim) must grow
+    with d_model across the Table 4 shape set."""
+    pre = manifest["precond"]
+    ratios = []
+    for model in pre["per_model"]:
+        d = model["d_model"]
+        key = f"{4 * d}x{d}"
+        ops = pre["ops"][key]
+        ratios.append(ops["ns5_flops"] / ops["rownorm_flops"])
+    assert ratios == sorted(ratios)
+    assert ratios[-1] > 10 * ratios[0] / 10  # strictly increasing overall
+    assert ratios[-1] > 1000

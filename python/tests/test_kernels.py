@@ -1,0 +1,173 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Every Pallas kernel (interpret=True) must match its pure-jnp reference in
+`compile.kernels.ref` across a hypothesis sweep of shapes and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+dims = st.integers(min_value=1, max_value=97)
+small_dims = st.integers(min_value=1, max_value=48)
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+class TestRownorm:
+    @settings(max_examples=25, deadline=None)
+    @given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, n, seed):
+        v = rand((m, n), seed)
+        got = kernels.rownorm(v)
+        want = ref.rownorm_ref(v)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+    def test_unit_rows(self, m, n, seed):
+        # Lemma A.1(i): every row of RN(V) has unit l2 norm (a.s.).
+        v = rand((m, n), seed) + 0.1
+        d = kernels.rownorm(v)
+        norms = jnp.linalg.norm(d, axis=-1)
+        np.testing.assert_allclose(norms, np.ones(m), rtol=1e-4)
+
+    def test_zero_rows_stay_zero(self):
+        v = jnp.zeros((4, 8))
+        d = kernels.rownorm(v)
+        assert bool(jnp.all(d == 0.0))
+        assert bool(jnp.all(jnp.isfinite(d)))
+
+    def test_blocking_invariance(self):
+        # Result must not depend on the BlockSpec tiling.
+        v = rand((300, 33), 7)
+        a = kernels.rownorm(v, block_rows=128)
+        b = kernels.rownorm(v, block_rows=64)
+        c = kernels.rownorm(v, block_rows=301)
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+        np.testing.assert_allclose(a, c, rtol=1e-6)
+
+    def test_scale_invariance(self):
+        # RN(cV) == RN(V) for c > 0 — normalization kills row scale.
+        v = rand((16, 32), 3) + 0.05
+        np.testing.assert_allclose(
+            kernels.rownorm(v), kernels.rownorm(17.0 * v), rtol=1e-4, atol=1e-6
+        )
+
+
+class TestNewtonSchulz:
+    @settings(max_examples=15, deadline=None)
+    @given(m=small_dims, n=small_dims, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, n, seed):
+        g = rand((m, n), seed)
+        got = kernels.newton_schulz(g)
+        want = ref.newton_schulz_ref(g)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+    def test_approx_orthogonalizes(self):
+        # After NS5, singular values should be pushed toward 1.
+        g = rand((32, 64), 11)
+        x = np.asarray(kernels.newton_schulz(g))
+        s = np.linalg.svd(x, compute_uv=False)
+        assert s.max() < 1.6
+        assert s.min() > 0.3
+
+    def test_transpose_consistency(self):
+        # Tall matrices go through the internal transpose path.
+        g = rand((64, 24), 5)
+        got = kernels.newton_schulz(g)
+        want = ref.newton_schulz_ref(g)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+    def test_fits_single_block(self):
+        assert kernels.fits_single_block(1024, 1024)
+        assert not kernels.fits_single_block(4096, 4096)
+
+    def test_flops_ordering(self):
+        # NS5 cost dwarfs rownorm cost and the gap grows with m (Table 2).
+        small = kernels.flops(64, 256) / kernels.rownorm_flops(64, 256)
+        big = kernels.flops(1024, 4096) / kernels.rownorm_flops(1024, 4096)
+        assert big > small > 10
+
+
+class TestMomentum:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=dims,
+        n=dims,
+        beta=st.sampled_from([0.0, 0.5, 0.9, 0.95, 0.99]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, m, n, beta, seed):
+        v = rand((m, n), seed)
+        g = rand((m, n), seed + 1)
+        got = kernels.momentum(v, g, beta=beta)
+        want = ref.momentum_ref(v, g, beta)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+    def test_beta_zero_is_gradient(self):
+        v = rand((8, 8), 1)
+        g = rand((8, 8), 2)
+        np.testing.assert_allclose(
+            kernels.momentum(v, g, beta=0.0), g, rtol=1e-6
+        )
+
+    def test_large_unaligned_shape(self):
+        # Exceeds one BLOCK and isn't a multiple of it.
+        v = rand((257, 300), 3)
+        g = rand((257, 300), 4)
+        got = kernels.momentum(v, g, beta=0.9)
+        want = ref.momentum_ref(v, g, 0.9)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+class TestAdamW:
+    @settings(max_examples=10, deadline=None)
+    @given(n=dims, t=st.integers(1, 1000), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, n, t, seed):
+        p = rand((n, 7), seed)
+        g = rand((n, 7), seed + 1)
+        m = rand((n, 7), seed + 2, scale=0.1)
+        v = jnp.abs(rand((n, 7), seed + 3, scale=0.01))
+        lr = jnp.float32(3e-3)
+        po, mo, vo = kernels.adamw_update(
+            p, g, m, v, lr, jnp.int32(t), beta1=0.9, beta2=0.95, eps=1e-8, wd=0.1
+        )
+        pw, mw, vw = ref.adamw_update_ref(
+            p, g, m, v, lr, 0.9, 0.95, 1e-8, 0.1, t
+        )
+        np.testing.assert_allclose(po, pw, rtol=2e-5, atol=1e-6)
+        np.testing.assert_allclose(mo, mw, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(vo, vw, rtol=1e-6, atol=1e-7)
+
+    def test_descends_on_quadratic(self):
+        # 30 AdamW steps on f(p)=||p||^2/2 must shrink the norm.
+        p = rand((16, 16), 9)
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        start = float(jnp.linalg.norm(p))
+        for t in range(1, 31):
+            g = p  # grad of ||p||^2/2
+            p, m, v = kernels.adamw_update(
+                p, g, m, v, jnp.float32(0.05), jnp.int32(t), wd=0.0
+            )
+        assert float(jnp.linalg.norm(p)) < 0.5 * start
+
+
+class TestVmemEstimates:
+    def test_vmem_fits_all_paper_shapes(self):
+        # Every matrix shape in the paper's Table 4 configs must fit a
+        # double-buffered 16 MiB VMEM with the default panel.
+        for d in [640, 768, 896, 1024, 1152, 1280, 1536, 1600]:
+            for shape in [(d, d), (3 * d, d), (4 * d, d), (d, 4 * d)]:
+                assert kernels.vmem_bytes(*shape) <= 16 * 2**20, shape

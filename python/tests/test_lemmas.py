@@ -1,0 +1,98 @@
+"""Numerical checks of the paper's key lemmas (Appendix A.3).
+
+The convergence proofs rest on exact algebraic identities of the RN
+operator; each is a checkable invariant:
+
+  Lemma A.1: ||RN(V)||_F = sqrt(m);  <V, RN(V)> = sum_i ||V_i||_2 >= ||V||_F
+  Lemma A.2: ||RN(V)||_{inf,2} = 1;  <V, RN(V)> = ||V||_{1,2}
+  Section 5.1 duality: |<A,B>| <= ||A||_{1,2} ||B||_{inf,2}
+  Lemma A.9/A.10 tool: ||A||_{1,2} <= sqrt(m) ||A||_F
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+dims = st.integers(min_value=1, max_value=64)
+
+
+def rand(shape, seed, scale):
+    rng = np.random.default_rng(seed)
+    # bound rows away from zero so RN is well-conditioned
+    x = rng.standard_normal(shape).astype(np.float32) * scale
+    x += 0.05 * np.sign(x + 1e-9)
+    return jnp.asarray(x)
+
+
+def one2(a):
+    return float(np.sum(np.linalg.norm(np.asarray(a), axis=1)))
+
+
+def inf2(a):
+    return float(np.max(np.linalg.norm(np.asarray(a), axis=1)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1),
+       scale=st.sampled_from([0.01, 1.0, 30.0]))
+def test_lemma_a1(m, n, seed, scale):
+    v = rand((m, n), seed, scale)
+    d = ref.rownorm_ref(v)
+    # (i) ||D||_F = sqrt(m)
+    assert abs(float(jnp.linalg.norm(d)) - m**0.5) < 1e-2 * m**0.5
+    # (ii) <V, D> = sum_i ||V_i|| >= ||V||_F
+    pairing = float(jnp.sum(v * d))
+    assert abs(pairing - one2(v)) < 1e-3 * max(one2(v), 1.0)
+    assert pairing >= float(jnp.linalg.norm(v)) - 1e-3 * max(one2(v), 1.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1),
+       scale=st.sampled_from([0.01, 1.0, 30.0]))
+def test_lemma_a2(m, n, seed, scale):
+    v = rand((m, n), seed, scale)
+    d = ref.rownorm_ref(v)
+    # (i) ||D||_{inf,2} = 1
+    assert abs(inf2(d) - 1.0) < 1e-4
+    # (ii) <V, D> = ||V||_{1,2}
+    pairing = float(jnp.sum(v * d))
+    assert abs(pairing - one2(v)) < 1e-3 * max(one2(v), 1.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=dims, n=dims, s1=st.integers(0, 2**31 - 1),
+       s2=st.integers(0, 2**31 - 1))
+def test_duality_pairing(m, n, s1, s2):
+    a = rand((m, n), s1, 1.0)
+    b = rand((m, n), s2, 2.0)
+    lhs = abs(float(jnp.sum(a * b)))
+    rhs = one2(a) * inf2(b)
+    assert lhs <= rhs * (1 + 1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_one2_vs_frobenius(m, n, seed):
+    a = rand((m, n), seed, 1.0)
+    f = float(jnp.linalg.norm(a))
+    assert one2(a) <= m**0.5 * f * (1 + 1e-5)
+    assert f <= one2(a) * (1 + 1e-5)
+
+
+def test_descent_lemma_a4_numeric():
+    """Simulate Lemma A.4 on a quadratic f(W) = L/2 ||W||_F^2: the descent
+    inequality f(W_t) - f(W_{t+1}) >= eta<grad, D> - L eta^2 m / 2 must
+    hold exactly for the RN update."""
+    rng = np.random.default_rng(0)
+    lf, eta = 2.0, 0.05
+    w = jnp.asarray(rng.standard_normal((8, 20)).astype(np.float32))
+    for _ in range(20):
+        grad = lf * w
+        d = ref.rownorm_ref(grad)
+        w_next = w - eta * d
+        lhs = 0.5 * lf * (float(jnp.sum(w * w)) - float(jnp.sum(w_next * w_next)))
+        rhs = eta * float(jnp.sum(grad * d)) - lf * eta**2 * 8 / 2
+        assert lhs >= rhs - 1e-4
+        w = w_next

@@ -1,0 +1,171 @@
+"""Model-level checks: shapes, causality, loss behaviour, param grouping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs
+from compile.models import common as C
+from compile.models import convnet, gpt2, llama, ssm
+
+
+def key(i=0):
+    return jax.random.PRNGKey(i)
+
+
+@pytest.fixture(scope="module")
+def gpt2_cfg():
+    return gpt2.GPT2Config(vocab=64, d_model=32, n_layers=2, n_heads=2,
+                           seq_len=16)
+
+
+@pytest.fixture(scope="module")
+def llama_cfg():
+    return llama.LlamaConfig(vocab=64, d_model=32, n_layers=2, n_heads=2,
+                             d_ff=64, seq_len=16)
+
+
+@pytest.fixture(scope="module")
+def ssm_cfg():
+    return ssm.SSMConfig(vocab=64, d_model=32, d_state=24, n_layers=2,
+                         seq_len=16)
+
+
+class TestGPT2:
+    def test_forward_shape(self, gpt2_cfg):
+        params = gpt2.init(gpt2_cfg, key())
+        toks = jnp.zeros((3, 16), jnp.int32)
+        logits = gpt2.forward(gpt2_cfg, params, toks)
+        assert logits.shape == (3, 16, 64)
+
+    def test_causality(self, gpt2_cfg):
+        # changing a future token must not change past logits
+        params = gpt2.init(gpt2_cfg, key())
+        a = jnp.arange(16, dtype=jnp.int32)[None] % 64
+        b = a.at[0, 10].set(13)
+        la = gpt2.forward(gpt2_cfg, params, a)
+        lb = gpt2.forward(gpt2_cfg, params, b)
+        np.testing.assert_allclose(la[0, :10], lb[0, :10], atol=1e-5)
+        assert not np.allclose(la[0, 10:], lb[0, 10:], atol=1e-5)
+
+    def test_initial_loss_near_uniform(self, gpt2_cfg):
+        params = gpt2.init(gpt2_cfg, key())
+        toks = jax.random.randint(key(1), (4, 17), 0, 64)
+        loss = gpt2.loss(gpt2_cfg, params, toks)
+        assert abs(float(loss) - np.log(64)) < 0.5
+
+    def test_param_groups_cover_embeddings(self, gpt2_cfg):
+        params = gpt2.init(gpt2_cfg, key())
+        groups = gpt2.param_groups(gpt2_cfg, params)
+        assert groups["tok_emb"] == "matrix"  # GPT-2 protocol
+        assert groups["head"] == "matrix"
+        assert groups["h00.ln1"] == "adamw"
+
+    def test_grads_flow_everywhere(self, gpt2_cfg):
+        params = gpt2.init(gpt2_cfg, key())
+        toks = jax.random.randint(key(2), (2, 17), 0, 64)
+        grads = jax.grad(lambda p: gpt2.loss(gpt2_cfg, p, toks))(params)
+        for name, g in grads.items():
+            assert float(jnp.max(jnp.abs(g))) > 0, f"dead grad: {name}"
+
+
+class TestLlama:
+    def test_forward_shape(self, llama_cfg):
+        params = llama.init(llama_cfg, key())
+        toks = jnp.zeros((3, 16), jnp.int32)
+        assert llama.forward(llama_cfg, params, toks).shape == (3, 16, 64)
+
+    def test_param_groups_exclude_embeddings(self, llama_cfg):
+        params = llama.init(llama_cfg, key())
+        groups = llama.param_groups(llama_cfg, params)
+        assert groups["tok_emb"] == "adamw"  # LLaMA protocol
+        assert groups["head"] == "adamw"
+        assert groups["h00.attn_qkv"] == "matrix"
+
+    def test_rope_is_position_sensitive(self, llama_cfg):
+        params = llama.init(llama_cfg, key())
+        tok = jax.random.randint(key(3), (1, 16), 0, 64)
+        rolled = jnp.roll(tok, 3, axis=1)
+        la = llama.forward(llama_cfg, params, tok)
+        lb = llama.forward(llama_cfg, params, rolled)
+        # same tokens at shifted positions produce different logits
+        assert not np.allclose(la[0, 5], lb[0, 8], atol=1e-4)
+
+    def test_causality(self, llama_cfg):
+        params = llama.init(llama_cfg, key())
+        a = jnp.arange(16, dtype=jnp.int32)[None] % 64
+        b = a.at[0, 12].set(1)
+        la = llama.forward(llama_cfg, params, a)
+        lb = llama.forward(llama_cfg, params, b)
+        np.testing.assert_allclose(la[0, :12], lb[0, :12], atol=1e-5)
+
+
+class TestSSM:
+    def test_forward_shape(self, ssm_cfg):
+        params = ssm.init(ssm_cfg, key())
+        toks = jnp.zeros((2, 16), jnp.int32)
+        assert ssm.forward(ssm_cfg, params, toks).shape == (2, 16, 64)
+
+    def test_scan_is_causal(self, ssm_cfg):
+        params = ssm.init(ssm_cfg, key())
+        a = jnp.arange(16, dtype=jnp.int32)[None] % 64
+        b = a.at[0, 15].set(2)
+        la = ssm.forward(ssm_cfg, params, a)
+        lb = ssm.forward(ssm_cfg, params, b)
+        np.testing.assert_allclose(la[0, :15], lb[0, :15], atol=1e-5)
+
+    def test_selective_scan_matches_loop(self):
+        u = jax.random.normal(key(4), (2, 8, 4))
+        a = jax.nn.sigmoid(jax.random.normal(key(5), (2, 8, 4)))
+        got = ssm._selective_scan(u, a)
+        s = np.zeros((2, 4), np.float32)
+        for t in range(8):
+            s = np.asarray(a[:, t]) * s + (1 - np.asarray(a[:, t])) * np.asarray(u[:, t])
+            np.testing.assert_allclose(got[:, t], s, rtol=1e-5, atol=1e-6)
+
+
+class TestConvNet:
+    def test_forward_shape(self):
+        cfg = convnet.ConvNetConfig(n_classes=10, width=8, n_blocks=2)
+        params = convnet.init(cfg, key())
+        imgs = jax.random.normal(key(6), (4, 3, 32, 32))
+        assert convnet.forward(cfg, params, imgs).shape == (4, 10)
+
+    def test_conv_weights_are_matrices(self):
+        cfg = convnet.ConvNetConfig(width=8, n_blocks=2)
+        params = convnet.init(cfg, key())
+        groups = convnet.param_groups(cfg, params)
+        assert params["stem"].ndim == 2
+        assert groups["stem"] == "matrix"
+        assert groups["b00.norm1"] == "adamw"
+
+    def test_loss_finite_and_near_uniform(self):
+        cfg = convnet.ConvNetConfig(width=8, n_blocks=2)
+        params = convnet.init(cfg, key())
+        imgs = jax.random.normal(key(7), (8, 3, 32, 32))
+        labels = jnp.zeros((8,), jnp.int32)
+        loss = convnet.loss(cfg, params, imgs, labels)
+        assert np.isfinite(float(loss))
+        assert abs(float(loss) - np.log(10)) < 2.5
+
+
+class TestRegistry:
+    def test_all_tags_resolve(self):
+        for tag, spec in configs.REGISTRY.items():
+            assert spec.module() is not None
+            assert spec.batch_specs(), tag
+
+    def test_e2e_is_about_100m_params(self):
+        spec = configs.REGISTRY["gpt2_e2e"]
+        shapes = jax.eval_shape(
+            lambda k: spec.module().init(spec.cfg, k), key()
+        )
+        total = sum(int(np.prod(s.shape)) for s in shapes.values())
+        assert 8e7 < total < 1.5e8, total
+
+    def test_precond_shape_set(self):
+        shapes, per_model = configs.precond_shapes()
+        assert len(per_model) == 8  # Table 4 rows
+        assert (3 * 640, 640) in shapes
+        assert (1600, 6400) in shapes

@@ -1,0 +1,155 @@
+"""Optimizer-graph correctness: each update rule vs hand-computed numpy.
+
+These run the L2 update functions eagerly (same code that gets lowered
+into the train-step artifacts) and check them against independent numpy
+implementations of Algorithms 1/2 and AdamW.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import optim as O
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32) * scale)
+
+
+def groups_for(names, matrix):
+    return {n: ("matrix" if n in matrix else "adamw") for n in names}
+
+
+class TestAdamWGraph:
+    def test_single_step_matches_numpy(self):
+        p = rand((6, 4), 0)
+        g = rand((6, 4), 1)
+        opt = O.AdamW(groups_for(["w"], []))
+        state = opt.init_state({"w": p})
+        newp, news = opt.apply({"w": p}, {"w": g}, state, jnp.float32(1e-2))
+        # numpy reference
+        pn, gn = np.asarray(p), np.asarray(g)
+        m = 0.1 * gn
+        v = 0.05 * gn * gn
+        mhat = m / (1 - 0.9)
+        vhat = v / (1 - 0.95)
+        want = pn - 1e-2 * (mhat / (np.sqrt(vhat) + 1e-8) + 0.1 * pn)
+        np.testing.assert_allclose(newp["w"], want, rtol=1e-5, atol=1e-6)
+        assert int(news["t"]) == 1
+
+    def test_all_params_treated_elementwise(self):
+        opt = O.AdamW(groups_for(["a", "b"], ["a"]))
+        assert opt.matrix_names() == []
+        assert set(opt.adamw_names()) == {"a", "b"}
+
+
+class TestMuonRmnpGraphs:
+    def _run(self, opt_cls, p, g):
+        opt = opt_cls(groups_for(["w"], ["w"]))
+        state = opt.init_state({"w": p})
+        return opt.apply({"w": p}, {"w": g}, state, jnp.float32(0.01))
+
+    def test_rmnp_update_is_row_normalized_momentum(self):
+        p = rand((8, 16), 2)
+        g = rand((8, 16), 3)
+        newp, news = self._run(O.RMNP, p, g)
+        vmom = 0.05 * np.asarray(g)  # beta=0.95, V0=0
+        norms = np.linalg.norm(vmom, axis=1, keepdims=True)
+        d = vmom / np.maximum(norms, 1e-7)
+        want = np.asarray(p) - 0.01 * (d + 0.1 * np.asarray(p))
+        np.testing.assert_allclose(newp["w"], want, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(news["mom.w"], vmom, rtol=1e-5)
+
+    def test_muon_update_direction_is_orthogonalized(self):
+        p = rand((8, 16), 4)
+        g = rand((8, 16), 5)
+        newp, _ = self._run(O.Muon, p, g)
+        # implied direction d = (p - p' )/lr - wd*p must be ~ orthogonal rows
+        d = (np.asarray(p) - np.asarray(newp["w"])) / 0.01 - 0.1 * np.asarray(p)
+        s = np.linalg.svd(d, compute_uv=False)
+        assert s.max() < 1.7 and s.min() > 0.15
+
+    def test_rms_scale_applied_for_tall_matrices(self):
+        # (32, 8): scale = sqrt(32/8) = 2
+        p = rand((32, 8), 6)
+        g = rand((32, 8), 7)
+        opt = O.RMNP(groups_for(["w"], ["w"]))
+        state = opt.init_state({"w": p})
+        newp, _ = opt.apply({"w": p}, {"w": g}, state, jnp.float32(0.01))
+        d_eff = (np.asarray(p) - np.asarray(newp["w"])) / 0.01
+        vmom = 0.05 * np.asarray(g)
+        d = vmom / np.maximum(np.linalg.norm(vmom, axis=1, keepdims=True), 1e-7)
+        want = 2.0 * (d + 0.1 * np.asarray(p))
+        np.testing.assert_allclose(d_eff, want, rtol=1e-4, atol=1e-5)
+
+    def test_mixed_groups_route_correctly(self):
+        p = {"w": rand((4, 4), 8), "b": rand((4,), 9)}
+        g = {"w": rand((4, 4), 10), "b": rand((4,), 11)}
+        opt = O.RMNP(groups_for(["w", "b"], ["w"]))
+        state = opt.init_state(p)
+        assert "mom.w" in state and "m.b" in state and "v.b" in state
+        newp, news = opt.apply(dict(p), g, state, jnp.float32(0.01))
+        assert newp["w"].shape == (4, 4) and newp["b"].shape == (4,)
+        assert int(news["t"]) == 1
+
+
+class TestShampooSoap:
+    def test_inv_root_newton_accuracy(self):
+        rng = np.random.default_rng(0)
+        b = rng.standard_normal((12, 12)).astype(np.float32)
+        a = jnp.asarray(b @ b.T + 0.5 * np.eye(12, dtype=np.float32))
+        x = O._inv_root_newton(a, p=4, iters=25)
+        # verify X^4 A ~ I
+        x4 = x @ x @ x @ x
+        np.testing.assert_allclose(
+            np.asarray(x4 @ a), np.eye(12), rtol=0, atol=5e-2
+        )
+
+    def test_shampoo_step_shapes_and_descent_scale(self):
+        p = rand((8, 12), 12)
+        g = rand((8, 12), 13)
+        opt = O.Shampoo(groups_for(["w"], ["w"]))
+        state = opt.init_state({"w": p})
+        assert state["pl.w"].shape == (8, 8)
+        assert state["pr.w"].shape == (12, 12)
+        newp, news = opt.apply({"w": p}, {"w": g}, state, jnp.float32(0.01))
+        assert np.all(np.isfinite(np.asarray(newp["w"])))
+        assert news["pl.w"].shape == (8, 8)
+
+    def test_soap_step_finite(self):
+        p = rand((8, 12), 14)
+        g = rand((8, 12), 15)
+        opt = O.Soap(groups_for(["w"], ["w"]))
+        state = opt.init_state({"w": p})
+        newp, news = opt.apply({"w": p}, {"w": g}, state, jnp.float32(0.01))
+        assert np.all(np.isfinite(np.asarray(newp["w"])))
+        assert "vsq.w" in news
+
+
+class TestDominanceMetrics:
+    def test_identity_rows_are_perfectly_dominant(self):
+        # orthogonal rows -> off-diagonals ~ 0 -> huge ratios
+        v = jnp.eye(6, dtype=jnp.float32)
+        r = np.asarray(O.dominance_metrics(v))
+        assert r[0] > 1e6 and r[1] > 1e6 and r[2] > 1e6
+
+    def test_rank_one_is_non_dominant(self):
+        # identical rows -> diag == offdiag -> ratios ~ 1
+        row = rand((1, 32), 16)
+        v = jnp.tile(row, (8, 1))
+        r = np.asarray(O.dominance_metrics(v))
+        np.testing.assert_allclose(r, np.ones(3), rtol=1e-3)
+
+    def test_ordering_min_avg_max(self):
+        v = rand((16, 64), 17)
+        r_avg, r_min, r_max = np.asarray(O.dominance_metrics(v))
+        assert r_min <= r_avg <= r_max
+        assert r_min > 0
+
+    def test_transposes_tall_input(self):
+        v = rand((64, 16), 18)
+        r1 = np.asarray(O.dominance_metrics(v))
+        r2 = np.asarray(O.dominance_metrics(v.T))
+        np.testing.assert_allclose(r1, r2, rtol=1e-5)

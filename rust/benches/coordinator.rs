@@ -1,0 +1,78 @@
+//! `cargo bench --bench coordinator` — host-side substrate costs: the
+//! pure-rust optimizer references (cross-check of the Table 2 arithmetic
+//! gap without PJRT), dominance metric computation, schedules, and
+//! checkpoint I/O. The native NS5/rownorm ratio should show the same
+//! O(min(m,n)) growth as the artifact path.
+
+use rmnp::bench::{bench, BenchOpts};
+use rmnp::coordinator::checkpoint::{self, NamedBuffer};
+use rmnp::coordinator::lr_at;
+use rmnp::config::Schedule;
+use rmnp::optim::lemmas::dominance_ratios;
+use rmnp::optim::newton_schulz5;
+use rmnp::tensor::Matrix;
+use rmnp::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let opts = BenchOpts { sample_target: 0.1, samples: 6, budget: 8.0, warmup: 1 };
+    let mut rng = Rng::new(1);
+
+    println!("native preconditioner ops (rust reference, Table 2 cross-check):");
+    let mut ratios = Vec::new();
+    for d in [64usize, 128, 256] {
+        let v = Matrix::randn(4 * d, d, 0.02, &mut rng);
+        let ns = bench(&format!("ns5 {}x{}", 4 * d, d), opts, || {
+            let _ = newton_schulz5(&v, 5);
+        });
+        let rn = bench(&format!("rownorm {}x{}", 4 * d, d), opts, || {
+            let _ = v.row_normalize(1e-7);
+        });
+        let ratio = ns.median() / rn.median();
+        println!("  {}", ns.report_line());
+        println!("  {}", rn.report_line());
+        println!("  -> native speedup {ratio:.1}x");
+        ratios.push(ratio);
+    }
+    assert!(
+        ratios.windows(2).all(|w| w[1] > w[0]),
+        "native speedup must grow with d: {ratios:?}"
+    );
+
+    println!("\ndominance metric (Gram + ratios):");
+    for (m, n) in [(128usize, 512usize), (256, 1024)] {
+        let v = Matrix::randn(m, n, 0.02, &mut rng);
+        let r = bench(&format!("dominance {m}x{n}"), opts, || {
+            let _ = dominance_ratios(&v);
+        });
+        println!("  {}", r.report_line());
+    }
+
+    println!("\nLR schedule (1e6 evaluations):");
+    let sched = Schedule::CosineWarmup { warmup_frac: 0.1, min_ratio: 0.1 };
+    let r = bench("cosine_warmup x1e6", opts, || {
+        let mut acc = 0.0;
+        for t in 0..1_000_000 {
+            acc += lr_at(sched, 1e-3, t, 1_000_000);
+        }
+        std::hint::black_box(acc);
+    });
+    println!("  {}", r.report_line());
+
+    println!("\ncheckpoint save+load (8 MiB state):");
+    let buffers: Vec<NamedBuffer> = (0..16)
+        .map(|i| NamedBuffer {
+            name: format!("p{i}"),
+            data: vec![0.5f32; 128 * 1024],
+        })
+        .collect();
+    let dir = std::env::temp_dir().join("rmnp-bench-ckpt");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("step-1.ckpt");
+    let r = bench("ckpt roundtrip 8MiB", opts, || {
+        checkpoint::save(&path, &buffers).unwrap();
+        let back = checkpoint::load(&path).unwrap();
+        assert_eq!(back.len(), 16);
+    });
+    println!("  {}", r.report_line());
+    Ok(())
+}

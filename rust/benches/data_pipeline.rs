@@ -1,0 +1,51 @@
+//! `cargo bench --bench data_pipeline` — throughput of the synthetic
+//! corpora and the prefetching loader. The data path must comfortably
+//! out-produce the training consumer (tokens/s here vs ~1e5 tokens/s
+//! consumed by the largest CPU model), or the L3 pipeline would become
+//! the bottleneck the paper's coordinator exists to avoid.
+
+use rmnp::bench::{bench, BenchOpts};
+use rmnp::config::DataSpec;
+use rmnp::data::corpus::token_source;
+use rmnp::data::images::ImageSource;
+use rmnp::data::loader::token_batches;
+use rmnp::data::tokenizer::BpeTokenizer;
+
+fn main() {
+    let opts = BenchOpts { sample_target: 0.1, samples: 8, budget: 6.0, warmup: 1 };
+    const N: usize = 16 * 129;
+
+    println!("corpus generation ({N} tokens/call):");
+    for spec in [DataSpec::Markov, DataSpec::Zipf, DataSpec::Ngram] {
+        let mut src = token_source(spec, 1, 0);
+        let mut buf = vec![0i32; N];
+        let r = bench(spec.name(), opts, || src.fill(&mut buf));
+        let tps = N as f64 / r.median();
+        println!("  {}  ({:.1}M tokens/s)", r.report_line(), tps / 1e6);
+        assert!(tps > 1e5, "{} too slow: {tps} tokens/s", spec.name());
+    }
+
+    println!("\nprefetching loader (depth 4):");
+    let loader = token_batches(token_source(DataSpec::Markov, 1, 0), 16, 129, 4);
+    let r = bench("loader.next", opts, || {
+        let b = loader.next();
+        assert_eq!(b.tokens.len(), N);
+    });
+    println!("  {}", r.report_line());
+
+    println!("\nimage synthesis (32x32x3 x 32):");
+    let mut img = ImageSource::new(10, 32, 3, 0);
+    let mut images = vec![0f32; 32 * 3 * 32 * 32];
+    let mut labels = vec![0i32; 32];
+    let r = bench("images", opts, || img.fill(32, &mut images, &mut labels));
+    println!("  {}", r.report_line());
+
+    println!("\nBPE tokenizer:");
+    let text = "the quick brown fox jumps over the lazy dog ".repeat(64);
+    let tok = BpeTokenizer::train(&text, 320);
+    let r = bench("bpe.encode", opts, || {
+        let _ = tok.encode(&text);
+    });
+    let bps = text.len() as f64 / r.median();
+    println!("  {}  ({:.2} MB/s)", r.report_line(), bps / 1e6);
+}

@@ -1,0 +1,36 @@
+//! `cargo bench --bench precond` — regenerates paper Table 2/3 + Figure 1:
+//! preconditioner wall-clock, Muon NS5 vs RMNP row normalization, over the
+//! Table 4 GPT-2 shape sets. Pass `--max-d N` via BENCH_MAX_D to cap the
+//! largest config (full sweep to d=1600 takes several minutes of NS5 time
+//! on CPU).
+
+use rmnp::exp::{precond, ExpOpts};
+
+fn main() -> anyhow::Result<()> {
+    let max_d: usize = std::env::var("BENCH_MAX_D")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let repeats: usize = std::env::var("BENCH_REPEATS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let opts = ExpOpts::default();
+    let rows = precond::run(&opts, max_d, repeats)?;
+    println!("{}", precond::format_table(&rows));
+    println!("{}", precond::format_figure1(&rows));
+    // reproduction checks: RMNP always wins and the gap grows with d_model
+    let speedups: Vec<f64> = rows.iter().map(|r| r.speedup).collect();
+    assert!(speedups.iter().all(|&s| s > 1.0), "RMNP must win every size");
+    if speedups.len() >= 3 {
+        let first = speedups.first().unwrap();
+        let last = speedups.last().unwrap();
+        // On GPU the gap grows monotonically (paper Table 2); on CPU PJRT
+        // the small/mid sizes are flatter because the whole NS5 chain still
+        // fits cache. Warn rather than fail if the trend is noisy.
+        if last <= first {
+            eprintln!("WARNING: speedup did not grow with size: {speedups:?}");
+        }
+    }
+    Ok(())
+}

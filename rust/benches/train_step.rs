@@ -1,0 +1,63 @@
+//! `cargo bench --bench train_step` — end-to-end step latency per
+//! (model, optimizer): the figure-6-protocol cost view. Reports median
+//! step time and the share of it attributable to the L3 host path
+//! (upload + metric fetch), which the perf pass drives below 5%.
+
+use rmnp::bench::{bench_n, fmt_secs};
+use rmnp::config::DataSpec;
+use rmnp::data::corpus::token_source;
+use rmnp::runtime::session::{Batch, TrainSession};
+use rmnp::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(std::path::Path::new("artifacts"))?;
+    let cases = [
+        ("gpt2_tiny", "adamw"),
+        ("gpt2_tiny", "muon"),
+        ("gpt2_tiny", "rmnp"),
+        ("gpt2_small", "muon"),
+        ("gpt2_small", "rmnp"),
+        ("llama_s60", "muon"),
+        ("llama_s60", "rmnp"),
+    ];
+    println!("train-step latency (device-resident loop, batch from manifest):");
+    for (model, opt) in cases {
+        let mut sess = TrainSession::new(&engine, model, opt, 1)?;
+        let spec = engine.manifest.model(model)?.batch_specs[0].clone();
+        let mut tokens = vec![0i32; spec.elements()];
+        token_source(DataSpec::Markov, 5, 0).fill(&mut tokens);
+        let r = bench_n(&format!("{model}/{opt}"), 5, 4, || {
+            sess.step(&Batch::Tokens(&tokens), 1e-3).expect("step");
+        });
+        println!("  {}", r.report_line());
+    }
+    // host-path overhead: time upload alone vs a full step
+    let mut sess = TrainSession::new(&engine, "gpt2_small", "rmnp", 1)?;
+    let spec = engine.manifest.model("gpt2_small")?.batch_specs[0].clone();
+    let mut tokens = vec![0i32; spec.elements()];
+    token_source(DataSpec::Markov, 5, 0).fill(&mut tokens);
+    let up_lit = bench_n("upload_via_literal (before)", 20, 4, || {
+        let _ = engine
+            .upload_i32_via_literal(&tokens, &spec.shape)
+            .expect("upload");
+    });
+    println!("  {}", up_lit.report_line());
+    let up = bench_n("upload_direct (after)", 20, 4, || {
+        let _ = engine.upload_i32(&tokens, &spec.shape).expect("upload");
+    });
+    println!("  {}  (perf L3-1 delta {:+.1}%)",
+        up.report_line(),
+        100.0 * (up.median() - up_lit.median()) / up_lit.median());
+    let step = bench_n("full_step", 5, 4, || {
+        sess.step(&Batch::Tokens(&tokens), 1e-3).expect("step");
+    });
+    let overhead = up.median() / step.median();
+    println!(
+        "\nL3 host path: upload {} vs step {} -> {:.2}% of step",
+        fmt_secs(up.median()),
+        fmt_secs(step.median()),
+        100.0 * overhead
+    );
+    assert!(overhead < 0.10, "host path must stay <10% of step time");
+    Ok(())
+}

@@ -1,0 +1,157 @@
+//! Dominance-ratio aggregation (paper Eqs. 5–6, Appendix B).
+//!
+//! Training runs log per-matrix (r_avg, r_min, r_max) triples into
+//! `dominance.csv`; this module reconstructs the paper's two views:
+//!
+//! * **per-parameter** (Figures 4/7/8/10): raw + window-50-smoothed series
+//!   for selected matrices;
+//! * **global** (Figures 5/9): r̄ statistics averaged across all matrix
+//!   parameters per step.
+
+use std::path::Path;
+
+use crate::coordinator::metrics::CsvData;
+use crate::util::moving_average;
+
+/// One aggregated dominance series over training.
+#[derive(Clone, Debug)]
+pub struct DominanceSeries {
+    pub steps: Vec<f64>,
+    /// global r̄_avg / r̄_min / r̄_max per logged step
+    pub r_avg: Vec<f64>,
+    pub r_min: Vec<f64>,
+    pub r_max: Vec<f64>,
+    /// number of matrix parameters aggregated
+    pub n_params: usize,
+}
+
+impl DominanceSeries {
+    /// Window-50 smoothed copies (the paper's solid curves).
+    pub fn smoothed(&self, window: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+        (
+            moving_average(&self.r_avg, window),
+            moving_average(&self.r_min, window),
+            moving_average(&self.r_max, window),
+        )
+    }
+
+    /// Fraction of logged steps where every global statistic exceeds the
+    /// paper's y = 1 threshold.
+    pub fn frac_above_one(&self) -> f64 {
+        if self.steps.is_empty() {
+            return 0.0;
+        }
+        let n = self
+            .steps
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| self.r_min[*i] > 1.0)
+            .count();
+        n as f64 / self.steps.len() as f64
+    }
+
+    /// Tail (last 25% of steps) means of the three statistics.
+    pub fn tail_means(&self) -> (f64, f64, f64) {
+        let from = self.steps.len() - (self.steps.len() / 4).max(1);
+        let mean_from = |xs: &[f64]| {
+            let t = &xs[from.min(xs.len().saturating_sub(1))..];
+            t.iter().sum::<f64>() / t.len().max(1) as f64
+        };
+        (
+            mean_from(&self.r_avg),
+            mean_from(&self.r_min),
+            mean_from(&self.r_max),
+        )
+    }
+}
+
+/// Build the global series from a run's `dominance.csv`: per step, average
+/// each statistic across all K matrix parameters (Appendix B Eqs. 14–16).
+pub fn global_series(csv_path: &Path) -> anyhow::Result<DominanceSeries> {
+    let data = CsvData::read(csv_path)?;
+    let steps = data.column("step")?;
+    let k = (data.header.len() - 1) / 3;
+    anyhow::ensure!(k > 0, "no dominance columns in {}", csv_path.display());
+    let mut r_avg = vec![0.0; steps.len()];
+    let mut r_min = vec![0.0; steps.len()];
+    let mut r_max = vec![0.0; steps.len()];
+    for i in 0..k {
+        let a = data.column(&format!("r_avg_{i}"))?;
+        let mi = data.column(&format!("r_min_{i}"))?;
+        let ma = data.column(&format!("r_max_{i}"))?;
+        for row in 0..steps.len() {
+            r_avg[row] += a[row] / k as f64;
+            r_min[row] += mi[row] / k as f64;
+            r_max[row] += ma[row] / k as f64;
+        }
+    }
+    Ok(DominanceSeries { steps, r_avg, r_min, r_max, n_params: k })
+}
+
+/// Per-parameter series (one matrix) from the same CSV.
+pub fn param_series(csv_path: &Path, index: usize) -> anyhow::Result<DominanceSeries> {
+    let data = CsvData::read(csv_path)?;
+    let steps = data.column("step")?;
+    Ok(DominanceSeries {
+        r_avg: data.column(&format!("r_avg_{index}"))?,
+        r_min: data.column(&format!("r_min_{index}"))?,
+        r_max: data.column(&format!("r_max_{index}"))?,
+        steps,
+        n_params: 1,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::CsvWriter;
+
+    fn write_fixture() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("rmnp-dom-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dominance.csv");
+        let mut w = CsvWriter::create(
+            &path,
+            &["step", "r_avg_0", "r_min_0", "r_max_0", "r_avg_1", "r_min_1", "r_max_1"],
+        )
+        .unwrap();
+        // param 0 climbs from 0.5 to 4.5; param 1 fixed at 3/2/5
+        for s in 0..8 {
+            let x = 0.5 + s as f64 * 4.0 / 7.0;
+            w.row(&[s as f64, x, x * 0.5, x * 2.0, 3.0, 2.0, 5.0]).unwrap();
+        }
+        w.flush().unwrap();
+        path
+    }
+
+    #[test]
+    fn global_series_averages_params() {
+        let path = write_fixture();
+        let s = global_series(&path).unwrap();
+        assert_eq!(s.n_params, 2);
+        assert_eq!(s.steps.len(), 8);
+        // step 0: avg of 0.5 and 3.0
+        assert!((s.r_avg[0] - 1.75).abs() < 1e-9);
+        // min statistic at step 7: (0.5*4.5 + 2)/2
+        assert!((s.r_min[7] - (2.25 + 2.0) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frac_above_one_and_tail() {
+        let path = write_fixture();
+        let s = global_series(&path).unwrap();
+        let f = s.frac_above_one();
+        assert!(f > 0.5 && f <= 1.0, "{f}");
+        let (a, mi, ma) = s.tail_means();
+        assert!(mi <= a && a <= ma);
+    }
+
+    #[test]
+    fn param_series_reads_one_matrix() {
+        let path = write_fixture();
+        let s = param_series(&path, 1).unwrap();
+        assert!(s.r_avg.iter().all(|&x| (x - 3.0).abs() < 1e-9));
+        let (sm, _, _) = s.smoothed(4);
+        assert_eq!(sm.len(), 8);
+    }
+}

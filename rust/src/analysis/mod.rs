@@ -1,0 +1,8 @@
+//! Analysis passes over run outputs: dominance-ratio aggregation
+//! (paper Section 3.2 / Appendix B) and paper-style report formatting.
+
+pub mod dominance;
+pub mod report;
+
+pub use dominance::{global_series, DominanceSeries};
+pub use report::markdown_table;

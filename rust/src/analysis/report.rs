@@ -1,0 +1,119 @@
+//! Paper-style report rendering: aligned text/markdown tables shared by
+//! every experiment harness.
+
+use std::fmt::Write;
+
+/// Render a markdown-style table with right-aligned numeric columns.
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(cols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        let _ = write!(out, "|");
+        for (i, c) in cells.iter().enumerate().take(cols) {
+            let _ = write!(out, " {:>width$} |", c, width = widths[i]);
+        }
+        let _ = writeln!(out);
+    };
+    line(&mut out, &header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let _ = write!(out, "|");
+    for w in &widths {
+        let _ = write!(out, "{:-<width$}|", "", width = w + 2);
+    }
+    let _ = writeln!(out);
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// Format seconds with 3 decimals (paper Table 2 convention).
+pub fn secs3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Format a perplexity with 2 decimals, flagging the per-column winner
+/// elsewhere (callers mark with `*`).
+pub fn ppl2(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.2}")
+    } else {
+        "—".to_string()
+    }
+}
+
+/// Mark the minimum entry of each column (row-major `values[row][col]`)
+/// with a trailing `*` — the paper bolds the winner per column.
+pub fn mark_column_winners(values: &[Vec<f64>]) -> Vec<Vec<String>> {
+    if values.is_empty() {
+        return vec![];
+    }
+    let cols = values[0].len();
+    let mut best = vec![f64::INFINITY; cols];
+    for row in values {
+        for (c, v) in row.iter().enumerate() {
+            if v.is_finite() && *v < best[c] {
+                best[c] = *v;
+            }
+        }
+    }
+    values
+        .iter()
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .map(|(c, v)| {
+                    if v.is_finite() && (*v - best[c]).abs() < 1e-9 {
+                        format!("{}*", ppl2(*v))
+                    } else {
+                        ppl2(*v)
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_aligned() {
+        let t = markdown_table(
+            &["opt", "ppl"],
+            &[
+                vec!["rmnp".into(), "22.82".into()],
+                vec!["adamw".into(), "24.19".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(t.contains("rmnp"));
+    }
+
+    #[test]
+    fn winners_marked_per_column() {
+        let rows = mark_column_winners(&[
+            vec![24.19, 18.80],
+            vec![22.86, 17.38],
+            vec![22.82, 17.31],
+        ]);
+        assert_eq!(rows[2][0], "22.82*");
+        assert_eq!(rows[2][1], "17.31*");
+        assert_eq!(rows[0][0], "24.19");
+    }
+
+    #[test]
+    fn handles_nan() {
+        assert_eq!(ppl2(f64::NAN), "—");
+        let rows = mark_column_winners(&[vec![f64::NAN], vec![3.0]]);
+        assert_eq!(rows[1][0], "3.00*");
+    }
+}

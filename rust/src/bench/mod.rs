@@ -1,0 +1,166 @@
+//! Hand-rolled micro-benchmark harness (criterion-style; criterion is not
+//! in the offline vendor set).
+//!
+//! Adaptive: measures a calibration run, picks an iteration count to hit a
+//! target measurement window, then reports mean/median/p10/p90 over
+//! multiple samples. Heavy benchmarks (NS5 at d=1600 takes seconds per
+//! call on CPU) automatically degrade to fewer iterations instead of
+//! blowing the time budget.
+
+use std::time::Instant;
+
+use crate::util::{mean, percentile};
+
+/// One benchmark's summary statistics, all in seconds per iteration.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters_per_sample: usize,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        mean(&self.samples)
+    }
+    pub fn median(&self) -> f64 {
+        percentile(&self.samples, 50.0)
+    }
+    pub fn p10(&self) -> f64 {
+        percentile(&self.samples, 10.0)
+    }
+    pub fn p90(&self) -> f64 {
+        percentile(&self.samples, 90.0)
+    }
+
+    /// `name  median  [p10 .. p90]  (n samples x m iters)` line.
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12} [{} .. {}] ({}x{})",
+            self.name,
+            fmt_secs(self.median()),
+            fmt_secs(self.p10()),
+            fmt_secs(self.p90()),
+            self.samples.len(),
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// Pretty seconds: ns/µs/ms/s.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    /// Target seconds per sample window.
+    pub sample_target: f64,
+    /// Number of samples.
+    pub samples: usize,
+    /// Hard cap on total seconds for one benchmark.
+    pub budget: f64,
+    /// Warmup iterations.
+    pub warmup: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { sample_target: 0.2, samples: 10, budget: 10.0, warmup: 1 }
+    }
+}
+
+/// Run `f` under the harness and return per-iteration statistics.
+pub fn bench(name: &str, opts: BenchOpts, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..opts.warmup {
+        f();
+    }
+    // calibrate
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((opts.sample_target / once).round() as usize).clamp(1, 1_000_000);
+    let mut samples = Vec::with_capacity(opts.samples);
+    let deadline = Instant::now() + std::time::Duration::from_secs_f64(opts.budget);
+    for _ in 0..opts.samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t.elapsed().as_secs_f64() / iters as f64);
+        if Instant::now() > deadline {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), iters_per_sample: iters, samples }
+}
+
+/// Fixed-iteration-count variant (for exact paper protocols like
+/// "time per 100 steps").
+pub fn bench_n(name: &str, iters: usize, repeats: usize, mut f: impl FnMut()) -> BenchResult {
+    f(); // warmup
+    let mut samples = Vec::with_capacity(repeats);
+    for _ in 0..repeats.max(1) {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t.elapsed().as_secs_f64() / iters as f64);
+    }
+    BenchResult { name: name.to_string(), iters_per_sample: iters, samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_duration() {
+        let r = bench(
+            "sleep",
+            BenchOpts { sample_target: 0.01, samples: 3, budget: 2.0, warmup: 0 },
+            || std::thread::sleep(std::time::Duration::from_millis(2)),
+        );
+        assert!(r.median() >= 0.0018, "median {}", r.median());
+        assert!(r.median() < 0.05);
+        assert!(!r.report_line().is_empty());
+    }
+
+    #[test]
+    fn bench_n_respects_iters() {
+        let mut count = 0usize;
+        let r = bench_n("count", 7, 2, || count += 1);
+        // 1 warmup + 7*2
+        assert_eq!(count, 15);
+        assert_eq!(r.iters_per_sample, 7);
+        assert_eq!(r.samples.len(), 2);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters_per_sample: 1,
+            samples: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        };
+        assert!(r.p10() <= r.median() && r.median() <= r.p90());
+        assert_eq!(r.mean(), 3.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Tiny argument parser: positional subcommands + `--flag value` /
+//! `--flag` switches (no external crates offline).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// positional arguments in order (subcommands first)
+    pub positional: Vec<String>,
+    /// `--key value` pairs; bare `--key` stores "true"
+    flags: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value or --key value or bare --key
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else {
+                    let takes_value = iter
+                        .peek()
+                        .map(|next| !next.starts_with("--"))
+                        .unwrap_or(false);
+                    let v = if takes_value {
+                        iter.next().unwrap()
+                    } else {
+                        "true".to_string()
+                    };
+                    args.flags.entry(name.to_string()).or_default().push(v);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self, depth: usize) -> Option<&str> {
+        self.positional.get(depth).map(String::as_str)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// All occurrences of a repeatable flag (e.g. --set a=1 --set b=2).
+    pub fn flag_all(&self, name: &str) -> Vec<&str> {
+        self.flags
+            .get(name)
+            .map(|v| v.iter().map(String::as_str).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.flag(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, name: &str) -> Vec<String> {
+        self.flag(name)
+            .map(|s| s.split(',').map(|x| x.trim().to_string()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommands_and_flags() {
+        let a = parse("exp pretrain --family gpt2 --steps 300 --quiet");
+        assert_eq!(a.subcommand(0), Some("exp"));
+        assert_eq!(a.subcommand(1), Some("pretrain"));
+        assert_eq!(a.flag("family"), Some("gpt2"));
+        assert_eq!(a.usize_or("steps", 0), 300);
+        assert!(a.has("quiet"));
+        assert_eq!(a.flag("quiet"), Some("true"));
+    }
+
+    #[test]
+    fn eq_form_and_repeats() {
+        let a = parse("train --set a=1 --set b=2 --lr=0.5");
+        assert_eq!(a.flag_all("set"), vec!["a=1", "b=2"]);
+        assert_eq!(a.f64_or("lr", 0.0), 0.5);
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse("exp --scales tiny,small");
+        assert_eq!(a.list("scales"), vec!["tiny", "small"]);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.str_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn negative_numbers_are_values() {
+        let a = parse("bench --offset -3");
+        // "-3" doesn't start with --, so it's the value
+        assert_eq!(a.flag("offset"), Some("-3"));
+    }
+}

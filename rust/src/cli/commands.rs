@@ -1,0 +1,326 @@
+//! Subcommand implementations.
+
+use std::path::{Path, PathBuf};
+
+use crate::cli::args::Args;
+use crate::config::{DataSpec, RunConfig};
+use crate::coordinator::train;
+use crate::data::corpus::token_source;
+use crate::data::tokenizer::BpeTokenizer;
+use crate::exp::{self, ExpOpts};
+use crate::runtime::Engine;
+use crate::util::human_bytes;
+use crate::info;
+
+fn exp_opts(args: &Args) -> ExpOpts {
+    ExpOpts {
+        artifacts: PathBuf::from(args.str_or("artifacts", "artifacts")),
+        out: PathBuf::from(args.str_or("out", "runs")),
+        steps: args.usize_or("steps", 200),
+        seed: args.usize_or("seed", 1234) as u64,
+        workers: args.usize_or("workers", 2),
+        scales: args.list("scales"),
+    }
+}
+
+/// `rmnp train`
+pub fn train(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => RunConfig::from_file(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    for kv in args.flag_all("set") {
+        cfg.apply_override(kv)?;
+    }
+    if let Some(a) = args.flag("artifacts") {
+        cfg.artifacts = PathBuf::from(a);
+    }
+    let engine = Engine::new(&cfg.artifacts)?;
+    let result = train::run(&engine, &cfg)?;
+    println!(
+        "done: final train loss {:.4}, eval loss {:.4}, ppl {:.2}, clip rate {:.1}%, {:.1}s",
+        result.final_train_loss,
+        result.final_eval_loss,
+        result.final_ppl,
+        100.0 * result.mean_clip_rate,
+        result.seconds
+    );
+    Ok(())
+}
+
+/// `rmnp exp <name>`
+pub fn exp(args: &Args) -> anyhow::Result<()> {
+    let opts = exp_opts(args);
+    match args.subcommand(1) {
+        Some("precond") => {
+            let rows = exp::precond::run(
+                &opts,
+                args.usize_or("max-d", 0),
+                args.usize_or("repeats", 3),
+            )?;
+            println!("{}", exp::precond::format_table(&rows));
+            println!("{}", exp::precond::format_figure1(&rows));
+            Ok(())
+        }
+        Some("pretrain") => {
+            let family = args.str_or("family", "gpt2");
+            let (default_scales, default_data, title): (&[&str], _, _) = match family {
+                "gpt2" => (&["tiny", "small", "medium", "large"], "markov", "Table 17"),
+                "llama" => (&["s60", "s130", "s350", "s1b"], "zipf", "Table 19"),
+                "ssm" => (&["base"], "ngram", "Table 20"),
+                "vision" => (&["base"], "images", "Table 21"),
+                other => anyhow::bail!("unknown family `{other}`"),
+            };
+            let dataset = DataSpec::parse(args.str_or("dataset", default_data))?;
+            let scales: Vec<String> = if opts.scales.is_empty() {
+                default_scales.iter().map(|s| s.to_string()).collect()
+            } else {
+                opts.scales.clone()
+            };
+            let scale_refs: Vec<&str> = scales.iter().map(String::as_str).collect();
+            let optimizers = args.list("optimizers");
+            let opt_refs: Vec<&str> = if optimizers.is_empty() {
+                vec!["adamw", "muon", "rmnp"]
+            } else {
+                optimizers.iter().map(String::as_str).collect()
+            };
+            let grid = exp::pretrain::compare(
+                &opts, family, &scale_refs, &opt_refs, dataset, 1,
+            )?;
+            println!("{}", exp::pretrain::format_grid(&grid, title));
+            Ok(())
+        }
+        Some("sweep") => {
+            let model = args.str_or("model", "gpt2_tiny").to_string();
+            let dataset = DataSpec::parse(args.str_or(
+                "dataset",
+                if model.starts_with("llama") { "zipf" } else { "markov" },
+            ))?;
+            let optimizers = args.list("optimizers");
+            let opt_refs: Vec<&str> = if optimizers.is_empty() {
+                if model.starts_with("llama") {
+                    vec!["muon", "rmnp", "shampoo", "soap"]
+                } else {
+                    vec!["muon", "rmnp"]
+                }
+            } else {
+                optimizers.iter().map(String::as_str).collect()
+            };
+            let cells = exp::sweeps::run(&opts, &model, &opt_refs, dataset)?;
+            println!("{}", exp::sweeps::format(&model, &cells));
+            for (opt, lr, ppl) in exp::sweeps::winners(&cells) {
+                println!("  best {opt}: lr {lr:.2e} -> ppl {ppl:.2}");
+            }
+            Ok(())
+        }
+        Some("dominance") => {
+            let engine = Engine::new(&opts.artifacts)?;
+            let models = {
+                let m = args.list("models");
+                if m.is_empty() {
+                    vec!["gpt2_tiny".to_string(), "gpt2_small".to_string(),
+                         "gpt2_medium".to_string()]
+                } else {
+                    m
+                }
+            };
+            let optimizer = args.str_or("optimizer", "muon");
+            let mut runs = Vec::new();
+            for model in &models {
+                // per-family default corpus (vision needs image batches)
+                let dataset = if model.starts_with("llama") {
+                    DataSpec::Zipf
+                } else if model.starts_with("ssm") {
+                    DataSpec::Ngram
+                } else if model.starts_with("vision") {
+                    DataSpec::Images
+                } else {
+                    DataSpec::Markov
+                };
+                runs.push(exp::dominance_exp::run_one(
+                    &opts, &engine, model, optimizer, dataset,
+                )?);
+            }
+            for r in &runs {
+                println!("{}", exp::dominance_exp::format_per_param(r));
+            }
+            println!("{}", exp::dominance_exp::format_global(&runs));
+            for r in &runs {
+                println!(
+                    "  dominance reproduced on {}: {}",
+                    r.model,
+                    exp::dominance_exp::reproduces_dominance(r)
+                );
+            }
+            Ok(())
+        }
+        Some("extended") => {
+            for (title, grid) in exp::pretrain::extended(&opts)? {
+                println!("{}", exp::pretrain::format_grid(&grid, &format!("Table 14 — {title}")));
+            }
+            Ok(())
+        }
+        Some("ablation-embed") => {
+            let rows = exp::pretrain::embed_ablation(&opts)?;
+            println!("{}", exp::pretrain::format_embed_ablation(&rows));
+            Ok(())
+        }
+        Some("ssm") => {
+            let grid = exp::pretrain::ssm(&opts)?;
+            println!("{}", exp::pretrain::format_grid(&grid, "Table 20 — Mamba-like SSM"));
+            Ok(())
+        }
+        Some("vision") => {
+            let grid = exp::pretrain::vision(&opts)?;
+            println!("{}", exp::pretrain::format_grid(&grid, "Table 21 — CNN (exp CE)"));
+            Ok(())
+        }
+        Some("cliprate") => {
+            let runs_dir = PathBuf::from(args.str_or("runs", "runs"));
+            let summaries = exp::cliprate::scan(&runs_dir)?;
+            println!("{}", exp::cliprate::format(&summaries));
+            Ok(())
+        }
+        Some("all") => run_all(args, &opts),
+        other => anyhow::bail!("unknown exp `{other:?}` (see `rmnp help`)"),
+    }
+}
+
+/// `rmnp exp all` — a scaled-down pass over every experiment.
+fn run_all(args: &Args, opts: &ExpOpts) -> anyhow::Result<()> {
+    info!("=== exp all: precond (capped) ===");
+    let rows = exp::precond::run(opts, args.usize_or("max-d", 1024), 2)?;
+    println!("{}", exp::precond::format_table(&rows));
+
+    info!("=== exp all: gpt2 pretrain ===");
+    let grid = exp::pretrain::compare(
+        opts, "gpt2", &["tiny", "small"], &["adamw", "muon", "rmnp"],
+        DataSpec::Markov, 1,
+    )?;
+    println!("{}", exp::pretrain::format_grid(&grid, "Table 17 (scaled)"));
+
+    info!("=== exp all: llama pretrain ===");
+    let grid = exp::pretrain::compare(
+        opts, "llama", &["s60", "s130"], &["adamw", "muon", "rmnp"],
+        DataSpec::Zipf, 1,
+    )?;
+    println!("{}", exp::pretrain::format_grid(&grid, "Table 19 (scaled)"));
+
+    info!("=== exp all: dominance ===");
+    let engine = Engine::new(&opts.artifacts)?;
+    let r = exp::dominance_exp::run_one(
+        opts, &engine, "gpt2_tiny", "muon", DataSpec::Markov,
+    )?;
+    println!("{}", exp::dominance_exp::format_global(&[r]));
+
+    info!("=== exp all: ssm + vision ===");
+    let grid = exp::pretrain::ssm(opts)?;
+    println!("{}", exp::pretrain::format_grid(&grid, "Table 20"));
+    let grid = exp::pretrain::vision(opts)?;
+    println!("{}", exp::pretrain::format_grid(&grid, "Table 21"));
+
+    info!("=== exp all: clip rates ===");
+    let summaries = exp::cliprate::scan(&opts.out)?;
+    println!("{}", exp::cliprate::format(&summaries));
+    Ok(())
+}
+
+/// `rmnp report <what>`
+pub fn report(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand(1) {
+        Some("cliprate") => {
+            let runs_dir = PathBuf::from(args.str_or("runs", "runs"));
+            let summaries = exp::cliprate::scan(&runs_dir)?;
+            println!("{}", exp::cliprate::format(&summaries));
+            Ok(())
+        }
+        Some("curves") => {
+            let runs_dir = PathBuf::from(args.str_or("runs", "runs"));
+            let mut found = 0;
+            for entry in std::fs::read_dir(&runs_dir)? {
+                let dir = entry?.path();
+                let csv = dir.join("metrics.csv");
+                if csv.exists() {
+                    let data = crate::coordinator::metrics::CsvData::read(&csv)?;
+                    let loss = data.column("loss")?;
+                    let n = loss.len();
+                    if n == 0 {
+                        continue;
+                    }
+                    found += 1;
+                    let pick = |f: f64| loss[((n - 1) as f64 * f) as usize];
+                    println!(
+                        "{:<48} steps {:>5}  loss {:.3} -> {:.3} -> {:.3}",
+                        dir.file_name().unwrap().to_string_lossy(),
+                        n,
+                        pick(0.0),
+                        pick(0.5),
+                        pick(1.0)
+                    );
+                }
+            }
+            anyhow::ensure!(found > 0, "no metrics.csv under {}", runs_dir.display());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown report `{other:?}`"),
+    }
+}
+
+/// `rmnp data <sample|encode>`
+pub fn data(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand(1) {
+        Some("sample") => {
+            let spec = DataSpec::parse(args.str_or("corpus", "markov"))?;
+            let n = args.usize_or("n", 64);
+            let mut src = token_source(spec, args.usize_or("seed", 1) as u64, 0);
+            let mut tokens = vec![0i32; n];
+            src.fill(&mut tokens);
+            println!("{tokens:?}");
+            Ok(())
+        }
+        Some("encode") => {
+            let text = args
+                .flag("text")
+                .ok_or_else(|| anyhow::anyhow!("--text required"))?;
+            let tok = BpeTokenizer::train(text, args.usize_or("vocab", 300));
+            let ids = tok.encode(text);
+            println!(
+                "vocab {} | {} bytes -> {} tokens | {ids:?}",
+                tok.vocab_size(),
+                text.len(),
+                ids.len()
+            );
+            let back = tok.decode(&ids);
+            anyhow::ensure!(back == text.as_bytes(), "roundtrip failed");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown data command `{other:?}`"),
+    }
+}
+
+/// `rmnp info`
+pub fn info(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let man = crate::runtime::Manifest::load(&dir)?;
+    println!("artifacts: {} ({} graphs)", dir.display(), man.graphs.len());
+    println!("vocab: {}", man.vocab);
+    println!("models:");
+    for (tag, m) in &man.models {
+        let opts: Vec<&str> = m.optimizers.keys().map(String::as_str).collect();
+        println!(
+            "  {tag:<16} {} params {:<12} opts [{}]",
+            m.family,
+            m.param_count.to_string(),
+            opts.join(", ")
+        );
+    }
+    println!("precond shapes: {}", man.precond_ops.len());
+    let total: u64 = man
+        .graphs
+        .values()
+        .filter_map(|g| std::fs::metadata(man.dir.join(&g.file)).ok())
+        .map(|m| m.len())
+        .sum();
+    println!("artifact bytes: {}", human_bytes(total));
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Command-line interface: `rmnp <command> ...`.
+//!
+//! ```text
+//! rmnp train   [--config F] [--set k=v]...      one training run
+//! rmnp exp     <precond|pretrain|sweep|dominance|extended|ablation-embed|
+//!               ssm|vision|cliprate|all> [opts]  paper experiments
+//! rmnp report  <cliprate|curves> --runs DIR      re-render from saved CSVs
+//! rmnp data    <sample|encode> [opts]            data-pipeline utilities
+//! rmnp info                                      manifest summary
+//! ```
+
+pub mod args;
+pub mod commands;
+
+use args::Args;
+
+const USAGE: &str = "\
+rmnp — RMNP optimizer reproduction (rust + JAX + Pallas, AOT via PJRT)
+
+USAGE:
+  rmnp train   [--config FILE] [--set section.key=value]...
+  rmnp exp precond        [--max-d N] [--repeats N]
+  rmnp exp pretrain       --family gpt2|llama|ssm|vision [--dataset markov|zipf|ngram|images]
+                          [--scales a,b,...] [--steps N] [--workers N]
+  rmnp exp sweep          --model TAG [--dataset NAME] [--optimizers a,b] [--steps N]
+  rmnp exp dominance      [--models TAG,TAG] [--optimizer muon] [--steps N]
+  rmnp exp extended       [--steps N]
+  rmnp exp ablation-embed [--steps N]
+  rmnp exp ssm|vision     [--steps N]
+  rmnp exp cliprate       [--runs DIR]
+  rmnp exp all            [--steps N] (scaled-down full suite)
+  rmnp report cliprate    [--runs DIR]
+  rmnp data sample        [--corpus markov] [--n 64] [--seed 1]
+  rmnp data encode        --text STRING [--vocab 300]
+  rmnp info               [--artifacts DIR]
+
+Common flags: --artifacts DIR (default artifacts), --out DIR (default runs),
+              --seed N, --verbose
+";
+
+/// CLI entry point (called from main).
+pub fn run() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    if args.has("verbose") {
+        crate::util::logging::set_level(crate::util::Level::Debug);
+    }
+    match args.subcommand(0) {
+        Some("train") => commands::train(&args),
+        Some("exp") => commands::exp(&args),
+        Some("report") => commands::report(&args),
+        Some("data") => commands::data(&args),
+        Some("info") => commands::info(&args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command `{other}`\n{USAGE}");
+            anyhow::bail!("unknown command `{other}`");
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Experiment configuration: TOML-subset parser + typed run configs.
+//!
+//! A run is fully described by a [`RunConfig`]; `configs/*.toml` hold the
+//! presets mirroring the paper's protocols and the CLI can override any
+//! field (`--set train.steps=200`).
+
+pub mod toml;
+
+use std::path::{Path, PathBuf};
+
+pub use toml::{Document, Value};
+
+/// Learning-rate schedule shape (paper: cosine with 10% warmup).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// Linear warmup over `warmup` steps then cosine decay to
+    /// `min_ratio * lr`.
+    CosineWarmup { warmup_frac: f64, min_ratio: f64 },
+}
+
+/// Synthetic-corpus choice (DESIGN.md §3 substitutions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataSpec {
+    /// Order-2 Markov chain over words — OpenWebText analogue.
+    Markov,
+    /// Zipfian unigram stream with local repetition — C4 analogue.
+    Zipf,
+    /// Repeated-ngram corpus — FineWeb-Edu analogue.
+    Ngram,
+    /// Class-conditional synthetic images (vision experiments).
+    Images,
+}
+
+impl DataSpec {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "markov" => DataSpec::Markov,
+            "zipf" => DataSpec::Zipf,
+            "ngram" => DataSpec::Ngram,
+            "images" => DataSpec::Images,
+            other => anyhow::bail!("unknown dataset `{other}`"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            DataSpec::Markov => "markov",
+            DataSpec::Zipf => "zipf",
+            DataSpec::Ngram => "ngram",
+            DataSpec::Images => "images",
+        }
+    }
+}
+
+/// Everything needed to run one training job.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Registry tag, e.g. "gpt2_small".
+    pub model: String,
+    /// Optimizer name, e.g. "rmnp".
+    pub optimizer: String,
+    /// Peak matrix learning rate (lr_adamw follows at the manifest ratio).
+    pub lr: f64,
+    pub schedule: Schedule,
+    pub steps: usize,
+    pub seed: u64,
+    pub data: DataSpec,
+    /// Evaluate on held-out batches every `eval_every` steps (0 = end only).
+    pub eval_every: usize,
+    /// Number of held-out batches per evaluation.
+    pub eval_batches: usize,
+    /// Log dominance ratios every N steps (0 = never).
+    pub dominance_every: usize,
+    /// Checkpoint every N steps (0 = never).
+    pub checkpoint_every: usize,
+    /// Output directory for metrics/checkpoints.
+    pub out_dir: PathBuf,
+    /// Artifact directory.
+    pub artifacts: PathBuf,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "gpt2_tiny".into(),
+            optimizer: "rmnp".into(),
+            lr: 4e-3,
+            schedule: Schedule::CosineWarmup { warmup_frac: 0.1, min_ratio: 0.1 },
+            steps: 200,
+            seed: 1234,
+            data: DataSpec::Markov,
+            eval_every: 50,
+            eval_batches: 4,
+            dominance_every: 0,
+            checkpoint_every: 0,
+            out_dir: PathBuf::from("runs/default"),
+            artifacts: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML document (missing keys fall back to defaults).
+    pub fn from_document(doc: &Document) -> anyhow::Result<Self> {
+        let mut cfg = RunConfig::default();
+        cfg.apply_document(doc)?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> anyhow::Result<Self> {
+        Self::from_document(&toml::parse_file(path)?)
+    }
+
+    /// Apply every recognized key from the document over the current values.
+    pub fn apply_document(&mut self, doc: &Document) -> anyhow::Result<()> {
+        let d = doc;
+        self.model = d.str_or("model.tag", &self.model).to_string();
+        self.optimizer = d.str_or("train.optimizer", &self.optimizer).to_string();
+        self.lr = d.float_or("train.lr", self.lr);
+        self.steps = d.int_or("train.steps", self.steps as i64) as usize;
+        self.seed = d.int_or("train.seed", self.seed as i64) as u64;
+        self.eval_every = d.int_or("eval.every", self.eval_every as i64) as usize;
+        self.eval_batches =
+            d.int_or("eval.batches", self.eval_batches as i64) as usize;
+        self.dominance_every =
+            d.int_or("analysis.dominance_every", self.dominance_every as i64) as usize;
+        self.checkpoint_every =
+            d.int_or("train.checkpoint_every", self.checkpoint_every as i64) as usize;
+        if let Some(v) = d.get("data.corpus") {
+            self.data = DataSpec::parse(
+                v.as_str().ok_or_else(|| anyhow::anyhow!("data.corpus must be a string"))?,
+            )?;
+        }
+        if let Some(v) = d.get("out.dir") {
+            self.out_dir = PathBuf::from(
+                v.as_str().ok_or_else(|| anyhow::anyhow!("out.dir must be a string"))?,
+            );
+        }
+        if let Some(v) = d.get("artifacts.dir") {
+            self.artifacts = PathBuf::from(
+                v.as_str().ok_or_else(|| anyhow::anyhow!("artifacts.dir must be a string"))?,
+            );
+        }
+        match d.str_or("train.schedule", "") {
+            "" => {}
+            "constant" => self.schedule = Schedule::Constant,
+            "cosine" => {
+                self.schedule = Schedule::CosineWarmup {
+                    warmup_frac: d.float_or("train.warmup_frac", 0.1),
+                    min_ratio: d.float_or("train.min_lr_ratio", 0.1),
+                }
+            }
+            other => anyhow::bail!("unknown schedule `{other}`"),
+        }
+        Ok(())
+    }
+
+    /// Apply one `section.key=value` CLI override.
+    pub fn apply_override(&mut self, kv: &str) -> anyhow::Result<()> {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("override must be key=value: `{kv}`"))?;
+        let mut doc = Document::default();
+        // try to parse as scalar; fall back to string
+        let val = toml::parse(&format!("x = {v}"))
+            .ok()
+            .and_then(|d| d.get("x").cloned())
+            .unwrap_or_else(|| Value::Str(v.to_string()));
+        doc.insert(k, val);
+        self.apply_document(&doc)
+    }
+
+    /// The artifact tag (`<model>_<optimizer>`).
+    pub fn tag(&self) -> String {
+        format!("{}_{}", self.model, self.optimizer)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_then_document() {
+        let doc = toml::parse(
+            r#"
+[model]
+tag = "llama_s60"
+[train]
+optimizer = "muon"
+lr = 0.01
+steps = 500
+schedule = "cosine"
+warmup_frac = 0.2
+[data]
+corpus = "zipf"
+"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.model, "llama_s60");
+        assert_eq!(cfg.optimizer, "muon");
+        assert_eq!(cfg.steps, 500);
+        assert_eq!(cfg.data, DataSpec::Zipf);
+        match cfg.schedule {
+            Schedule::CosineWarmup { warmup_frac, .. } => {
+                assert!((warmup_frac - 0.2).abs() < 1e-12)
+            }
+            _ => panic!("expected cosine"),
+        }
+        assert_eq!(cfg.tag(), "llama_s60_muon");
+    }
+
+    #[test]
+    fn overrides() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_override("train.steps=42").unwrap();
+        cfg.apply_override("train.lr=0.5").unwrap();
+        cfg.apply_override("model.tag=ssm_base").unwrap();
+        assert_eq!(cfg.steps, 42);
+        assert!((cfg.lr - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.model, "ssm_base");
+        assert!(cfg.apply_override("no_equals").is_err());
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        let doc = toml::parse("[train]\nschedule = \"nope\"").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err());
+        let doc = toml::parse("[data]\ncorpus = \"wat\"").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err());
+    }
+}

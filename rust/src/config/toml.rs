@@ -1,0 +1,349 @@
+//! Minimal TOML-subset parser (no external crates are available offline).
+//!
+//! Supported: `[section]` / `[a.b]` headers, `key = value` with strings,
+//! integers, floats, booleans, and flat arrays of those; `#` comments;
+//! blank lines. Unsupported TOML (multi-line strings, inline tables,
+//! datetimes, array-of-tables) is rejected with a line-numbered error —
+//! the experiment configs in `configs/` only need the subset.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Parsed document: dotted-path key -> value ("section.key").
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(Value::as_str).unwrap_or(default)
+    }
+    pub fn int_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(Value::as_int).unwrap_or(default)
+    }
+    pub fn float_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_float).unwrap_or(default)
+    }
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn require_str(&self, path: &str) -> anyhow::Result<&str> {
+        self.get(path)
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("config: missing string key `{path}`"))
+    }
+
+    /// All keys under a section prefix ("train." -> ["train.lr", ...]).
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .map(String::as_str)
+            .collect()
+    }
+
+    pub fn insert(&mut self, path: &str, v: Value) {
+        self.entries.insert(path.to_string(), v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+fn err(line_no: usize, msg: &str) -> anyhow::Error {
+    anyhow::anyhow!("toml parse error at line {}: {}", line_no + 1, msg)
+}
+
+fn parse_scalar(s: &str, line_no: usize) -> anyhow::Result<Value> {
+    let s = s.trim();
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| err(line_no, "unterminated string"))?;
+        // basic escapes
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => {
+                        return Err(err(
+                            line_no,
+                            &format!("bad escape \\{other:?}"),
+                        ))
+                    }
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(line_no, &format!("cannot parse value `{s}`")))
+}
+
+/// Split a top-level array body on commas (no nested arrays supported).
+fn parse_array(body: &str, line_no: usize) -> anyhow::Result<Value> {
+    let body = body.trim();
+    if body.is_empty() {
+        return Ok(Value::Array(vec![]));
+    }
+    let mut items = Vec::new();
+    let mut depth_quote = false;
+    let mut cur = String::new();
+    for c in body.chars() {
+        match c {
+            '"' => {
+                depth_quote = !depth_quote;
+                cur.push(c);
+            }
+            ',' if !depth_quote => {
+                items.push(parse_scalar(&cur, line_no)?);
+                cur.clear();
+            }
+            '[' | ']' if !depth_quote => {
+                return Err(err(line_no, "nested arrays unsupported"))
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        items.push(parse_scalar(&cur, line_no)?);
+    }
+    Ok(Value::Array(items))
+}
+
+/// Strip a trailing comment that is not inside a string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> anyhow::Result<Document> {
+    let mut doc = Document::default();
+    let mut section = String::new();
+    for (line_no, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(stripped) = line.strip_prefix('[') {
+            if line.starts_with("[[") {
+                return Err(err(line_no, "array-of-tables unsupported"));
+            }
+            let name = stripped
+                .strip_suffix(']')
+                .ok_or_else(|| err(line_no, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(line_no, "empty section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(line_no, "expected `key = value`"))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(line_no, "empty key"));
+        }
+        let vtext = line[eq + 1..].trim();
+        let value = if let Some(body) = vtext.strip_prefix('[') {
+            let body = body
+                .strip_suffix(']')
+                .ok_or_else(|| err(line_no, "unterminated array"))?;
+            parse_array(body, line_no)?
+        } else {
+            parse_scalar(vtext, line_no)?
+        };
+        let path = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        doc.insert(&path, value);
+    }
+    Ok(doc)
+}
+
+/// Parse from a file path.
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Document> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_document() {
+        let doc = parse(
+            r#"
+# experiment
+name = "demo"
+steps = 400
+lr = 4e-3
+debug = true
+
+[model]
+tag = "gpt2_small"
+dims = [1, 2, 3]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "demo");
+        assert_eq!(doc.int_or("steps", 0), 400);
+        assert!((doc.float_or("lr", 0.0) - 4e-3).abs() < 1e-12);
+        assert!(doc.bool_or("debug", false));
+        assert_eq!(doc.str_or("model.tag", ""), "gpt2_small");
+        let dims = doc.get("model.dims").unwrap().as_array().unwrap();
+        assert_eq!(dims.len(), 3);
+        assert_eq!(dims[1].as_int(), Some(2));
+    }
+
+    #[test]
+    fn strings_with_escapes_and_comments() {
+        let doc = parse("s = \"a # not comment\\n\" # real comment").unwrap();
+        assert_eq!(doc.str_or("s", ""), "a # not comment\n");
+    }
+
+    #[test]
+    fn dotted_sections() {
+        let doc = parse("[a.b]\nc = 1").unwrap();
+        assert_eq!(doc.int_or("a.b.c", 0), 1);
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse("i = 3\nf = 3.5\nu = 1_000").unwrap();
+        assert_eq!(doc.get("i"), Some(&Value::Int(3)));
+        assert_eq!(doc.get("f"), Some(&Value::Float(3.5)));
+        assert_eq!(doc.int_or("u", 0), 1000);
+        // ints coerce to float on demand
+        assert_eq!(doc.float_or("i", 0.0), 3.0);
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(parse("x =").is_err());
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("x = [1, [2]]").is_err());
+        assert!(parse("[[aot]]").is_err());
+        assert!(parse("x = @").is_err());
+        let e = parse("\n\nbad line").unwrap_err().to_string();
+        assert!(e.contains("line 3"), "{e}");
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = parse("[t]\na = 1\nb = 2\n[u]\nc = 3").unwrap();
+        assert_eq!(doc.keys_under("t.").len(), 2);
+    }
+
+    #[test]
+    fn bool_array_roundtrip_display() {
+        let doc = parse("xs = [true, false]").unwrap();
+        assert_eq!(format!("{}", doc.get("xs").unwrap()), "[true, false]");
+    }
+}

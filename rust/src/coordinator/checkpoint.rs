@@ -1,0 +1,149 @@
+//! Checkpoint store: raw little-endian binary format with a text index.
+//!
+//! Layout of `<dir>/step-N.ckpt`:
+//!
+//! ```text
+//! magic "RMNPCKPT"            8 bytes
+//! version u32                 4
+//! n_buffers u32               4
+//! for each buffer:
+//!   name_len u32, name bytes
+//!   elem_count u32
+//!   f32 data (little endian)
+//! ```
+//!
+//! The scalar step counter "t" (an i32 on device) is stored through its
+//! f32 bits like everything else — the restore path reinterprets it, so
+//! round-trips are exact.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"RMNPCKPT";
+const VERSION: u32 = 1;
+
+/// One named state buffer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NamedBuffer {
+    pub name: String,
+    pub data: Vec<f32>,
+}
+
+/// Write a checkpoint file.
+pub fn save(path: &Path, buffers: &[NamedBuffer]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    out.write_all(MAGIC)?;
+    out.write_all(&VERSION.to_le_bytes())?;
+    out.write_all(&(buffers.len() as u32).to_le_bytes())?;
+    for b in buffers {
+        let name = b.name.as_bytes();
+        out.write_all(&(name.len() as u32).to_le_bytes())?;
+        out.write_all(name)?;
+        out.write_all(&(b.data.len() as u32).to_le_bytes())?;
+        for v in &b.data {
+            out.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a checkpoint file.
+pub fn load(path: &Path) -> anyhow::Result<Vec<NamedBuffer>> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a checkpoint: {}", path.display());
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let version = u32::from_le_bytes(u32buf);
+    anyhow::ensure!(version == VERSION, "unsupported checkpoint v{version}");
+    f.read_exact(&mut u32buf)?;
+    let n = u32::from_le_bytes(u32buf) as usize;
+    let mut buffers = Vec::with_capacity(n);
+    for _ in 0..n {
+        f.read_exact(&mut u32buf)?;
+        let name_len = u32::from_le_bytes(u32buf) as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        f.read_exact(&mut u32buf)?;
+        let count = u32::from_le_bytes(u32buf) as usize;
+        let mut bytes = vec![0u8; count * 4];
+        f.read_exact(&mut bytes)?;
+        let data = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        buffers.push(NamedBuffer { name: String::from_utf8(name)?, data });
+    }
+    Ok(buffers)
+}
+
+/// Latest checkpoint in a directory (by step number in the filename).
+pub fn latest(dir: &Path) -> Option<(usize, PathBuf)> {
+    let mut best: Option<(usize, PathBuf)> = None;
+    for entry in std::fs::read_dir(dir).ok()? {
+        let path = entry.ok()?.path();
+        let name = path.file_name()?.to_str()?;
+        if let Some(step) = name
+            .strip_prefix("step-")
+            .and_then(|s| s.strip_suffix(".ckpt"))
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            if best.as_ref().map_or(true, |(b, _)| step > *b) {
+                best = Some((step, path));
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("rmnp-ckpt-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let dir = tmp("rt");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("step-5.ckpt");
+        let buffers = vec![
+            NamedBuffer { name: "w".into(), data: vec![1.5, -2.25, 0.0] },
+            NamedBuffer { name: "t".into(), data: vec![f32::from_bits(42)] },
+            NamedBuffer { name: "empty".into(), data: vec![] },
+        ];
+        save(&path, &buffers).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back, buffers);
+        // bit-exact i32 reinterpretation survives
+        assert_eq!(back[1].data[0].to_bits(), 42);
+    }
+
+    #[test]
+    fn latest_picks_max_step() {
+        let dir = tmp("latest");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for s in [3usize, 10, 7] {
+            save(&dir.join(format!("step-{s}.ckpt")), &[]).unwrap();
+        }
+        let (step, path) = latest(&dir).unwrap();
+        assert_eq!(step, 10);
+        assert!(path.ends_with("step-10.ckpt"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = tmp("bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.ckpt");
+        std::fs::write(&path, b"garbage!").unwrap();
+        assert!(load(&path).is_err());
+    }
+}

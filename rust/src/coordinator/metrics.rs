@@ -1,0 +1,175 @@
+//! Metric logging: per-step CSV series + JSONL run summaries.
+//!
+//! Every training run writes `metrics.csv` (step, lr, loss, grad_norm,
+//! clipped, eval_loss?) and optionally `dominance.csv` (per-matrix r
+//! statistics). The report harnesses read these back to print the paper's
+//! tables/series, so the writer/reader pair round-trips exactly.
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, columns: header.len() })
+    }
+
+    /// Write one row; NaN renders as empty cell.
+    pub fn row(&mut self, values: &[f64]) -> anyhow::Result<()> {
+        anyhow::ensure!(values.len() == self.columns, "csv row arity");
+        let mut line = String::new();
+        for (i, v) in values.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            if v.is_nan() {
+                // empty cell
+            } else {
+                write!(line, "{v}")?;
+            }
+        }
+        writeln!(self.out, "{line}")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Parsed CSV: header + rows (empty cells come back as NaN).
+pub struct CsvData {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<f64>>,
+}
+
+impl CsvData {
+    pub fn read(path: &Path) -> anyhow::Result<Self> {
+        let f = BufReader::new(File::open(path)?);
+        let mut lines = f.lines();
+        let header: Vec<String> = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty csv"))??
+            .split(',')
+            .map(String::from)
+            .collect();
+        let mut rows = Vec::new();
+        for line in lines {
+            let line = line?;
+            if line.is_empty() {
+                continue;
+            }
+            rows.push(
+                line.split(',')
+                    .map(|c| c.parse::<f64>().unwrap_or(f64::NAN))
+                    .collect(),
+            );
+        }
+        Ok(CsvData { header, rows })
+    }
+
+    /// Column by name.
+    pub fn column(&self, name: &str) -> anyhow::Result<Vec<f64>> {
+        let idx = self
+            .header
+            .iter()
+            .position(|h| h == name)
+            .ok_or_else(|| anyhow::anyhow!("csv: no column `{name}`"))?;
+        Ok(self.rows.iter().map(|r| r[idx]).collect())
+    }
+
+    /// Column with NaN entries removed.
+    pub fn column_dense(&self, name: &str) -> anyhow::Result<Vec<f64>> {
+        Ok(self.column(name)?.into_iter().filter(|v| !v.is_nan()).collect())
+    }
+}
+
+/// Append one JSON object per line to a run-summary file.
+pub fn append_jsonl(path: &Path, fields: &[(&str, String)]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    let mut line = String::from("{");
+    for (i, (k, v)) in fields.iter().enumerate() {
+        if i > 0 {
+            line.push(',');
+        }
+        write!(line, "{k:?}:{v}")?;
+    }
+    line.push('}');
+    writeln!(f, "{line}")?;
+    Ok(())
+}
+
+/// Quote a string for JSONL values.
+pub fn json_str(s: &str) -> String {
+    format!("{s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "rmnp-metrics-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn csv_roundtrip_with_gaps() {
+        let path = tmpdir().join("m.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["step", "loss", "eval"]).unwrap();
+            w.row(&[0.0, 3.5, f64::NAN]).unwrap();
+            w.row(&[1.0, 3.2, 3.4]).unwrap();
+            w.flush().unwrap();
+        }
+        let data = CsvData::read(&path).unwrap();
+        assert_eq!(data.header, vec!["step", "loss", "eval"]);
+        assert_eq!(data.column("loss").unwrap(), vec![3.5, 3.2]);
+        let eval = data.column("eval").unwrap();
+        assert!(eval[0].is_nan() && eval[1] == 3.4);
+        assert_eq!(data.column_dense("eval").unwrap(), vec![3.4]);
+        assert!(data.column("nope").is_err());
+    }
+
+    #[test]
+    fn csv_arity_enforced() {
+        let path = tmpdir().join("a.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        assert!(w.row(&[1.0]).is_err());
+    }
+
+    #[test]
+    fn jsonl_appends() {
+        let path = tmpdir().join("runs.jsonl");
+        let _ = std::fs::remove_file(&path);
+        append_jsonl(&path, &[("name", json_str("x")), ("ppl", "12.5".into())]).unwrap();
+        append_jsonl(&path, &[("name", json_str("y")), ("ppl", "11.0".into())]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<_> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let j = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(j.req_str("name").unwrap(), "x");
+        assert_eq!(j.get("ppl").unwrap().as_f64(), Some(12.5));
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator: training loop, LR schedules, metric logging,
+//! checkpointing, and the multi-threaded sweep executor.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod schedule;
+pub mod sweep;
+pub mod train;
+
+pub use schedule::lr_at;
+pub use sweep::{run_grid, SweepCell, SweepJob};
+pub use train::{run, RunResult};

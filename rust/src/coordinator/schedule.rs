@@ -1,0 +1,75 @@
+//! Learning-rate schedules (paper protocol: cosine annealing with 10%
+//! linear warmup; constant for microbenchmarks).
+
+use crate::config::Schedule;
+
+/// LR at 0-based step `t` of `total` steps with peak `lr`.
+pub fn lr_at(schedule: Schedule, lr: f64, t: usize, total: usize) -> f64 {
+    match schedule {
+        Schedule::Constant => lr,
+        Schedule::CosineWarmup { warmup_frac, min_ratio } => {
+            let total = total.max(1);
+            let warmup = ((total as f64 * warmup_frac).round() as usize).max(1);
+            if t < warmup {
+                // linear ramp ending at lr on step `warmup`
+                lr * (t + 1) as f64 / warmup as f64
+            } else {
+                let prog = (t - warmup) as f64
+                    / ((total.saturating_sub(warmup)).max(1)) as f64;
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * prog.min(1.0)).cos());
+                let floor = lr * min_ratio;
+                floor + (lr - floor) * cos
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const COS: Schedule = Schedule::CosineWarmup { warmup_frac: 0.1, min_ratio: 0.1 };
+
+    #[test]
+    fn constant_is_constant() {
+        for t in [0, 5, 99] {
+            assert_eq!(lr_at(Schedule::Constant, 3e-3, t, 100), 3e-3);
+        }
+    }
+
+    #[test]
+    fn warmup_ramps_to_peak() {
+        let total = 100;
+        let lrs: Vec<f64> = (0..10).map(|t| lr_at(COS, 1.0, t, total)).collect();
+        for w in lrs.windows(2) {
+            assert!(w[1] > w[0], "warmup must increase");
+        }
+        assert!((lrs[9] - 1.0).abs() < 1e-12, "peak at end of warmup: {}", lrs[9]);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let total = 100;
+        let end = lr_at(COS, 1.0, total - 1, total);
+        assert!((end - 0.1).abs() < 0.02, "end lr {end}");
+        let mid = lr_at(COS, 1.0, 55, total);
+        assert!(mid < 1.0 && mid > 0.1);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let total = 200;
+        let mut prev = f64::INFINITY;
+        for t in 20..total {
+            let lr = lr_at(COS, 1.0, t, total);
+            assert!(lr <= prev + 1e-12);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn degenerate_totals() {
+        assert!(lr_at(COS, 1.0, 0, 1) > 0.0);
+        assert!(lr_at(COS, 1.0, 0, 0) > 0.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Sweep executor: run a grid of (optimizer, lr) training jobs and collect
+//! final validation perplexities (paper Tables 9–13, 20, 21).
+//!
+//! Jobs can fan out across worker threads; PJRT client handles are not
+//! `Send`, so each worker owns a private [`Engine`] (compile caches are
+//! per-worker, which is fine at sweep model scales).
+
+use std::path::PathBuf;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+
+use crate::config::RunConfig;
+use crate::coordinator::train;
+use crate::runtime::Engine;
+use crate::{info, warnln};
+
+/// One grid cell request.
+#[derive(Clone, Debug)]
+pub struct SweepJob {
+    pub optimizer: String,
+    pub lr: f64,
+}
+
+/// One grid cell outcome.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    pub optimizer: String,
+    pub lr: f64,
+    pub final_ppl: f64,
+    pub final_eval_loss: f64,
+    pub seconds: f64,
+}
+
+/// Run `jobs` over `base` (model/steps/data fixed, optimizer+lr varied),
+/// with up to `workers` threads. Results keep job order.
+pub fn run_grid(
+    base: &RunConfig,
+    jobs: &[SweepJob],
+    workers: usize,
+) -> anyhow::Result<Vec<SweepCell>> {
+    let workers = workers.clamp(1, jobs.len().max(1));
+    let queue: Arc<Mutex<Vec<(usize, SweepJob)>>> = Arc::new(Mutex::new(
+        jobs.iter().cloned().enumerate().rev().collect(),
+    ));
+    let (tx, rx) = channel::<(usize, anyhow::Result<SweepCell>)>();
+
+    std::thread::scope(|scope| {
+        for wid in 0..workers {
+            let queue = queue.clone();
+            let tx = tx.clone();
+            let base = base.clone();
+            scope.spawn(move || {
+                // Each worker owns its own PJRT client (not Send).
+                let engine = match Engine::new(&base.artifacts) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        warnln!("worker {wid}: engine init failed: {e}");
+                        return;
+                    }
+                };
+                loop {
+                    let job = { queue.lock().unwrap().pop() };
+                    let Some((idx, job)) = job else { break };
+                    let mut cfg = base.clone();
+                    cfg.optimizer = job.optimizer.clone();
+                    cfg.lr = job.lr;
+                    cfg.out_dir = sweep_dir(&base.out_dir, &job);
+                    info!(
+                        "sweep[{idx}] {} {} lr={:.2e} (worker {wid})",
+                        cfg.model, cfg.optimizer, cfg.lr
+                    );
+                    let result = train::run(&engine, &cfg).map(|r| SweepCell {
+                        optimizer: job.optimizer,
+                        lr: job.lr,
+                        final_ppl: r.final_ppl,
+                        final_eval_loss: r.final_eval_loss,
+                        seconds: r.seconds,
+                    });
+                    let _ = tx.send((idx, result));
+                }
+            });
+        }
+        drop(tx);
+        let mut cells: Vec<Option<SweepCell>> = vec![None; jobs.len()];
+        for (idx, result) in rx {
+            cells[idx] = Some(result?);
+        }
+        cells
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| {
+                c.ok_or_else(|| anyhow::anyhow!("sweep job {i} never finished"))
+            })
+            .collect()
+    })
+}
+
+fn sweep_dir(base: &PathBuf, job: &SweepJob) -> PathBuf {
+    base.join(format!("{}_lr{:.0e}", job.optimizer, job.lr).replace(['+', '.'], ""))
+}
+
+/// Render cells as a paper-style block: one row per optimizer with its LR
+/// grid and perplexities (Tables 9–13 layout).
+pub fn format_table(model: &str, cells: &[SweepCell]) -> String {
+    use std::fmt::Write;
+    let mut by_opt: Vec<(String, Vec<&SweepCell>)> = Vec::new();
+    for c in cells {
+        match by_opt.iter_mut().find(|(o, _)| *o == c.optimizer) {
+            Some((_, v)) => v.push(c),
+            None => by_opt.push((c.optimizer.clone(), vec![c])),
+        }
+    }
+    let mut out = String::new();
+    let _ = writeln!(out, "LR sweep on {model} (validation perplexity, lower is better)");
+    for (opt, mut row) in by_opt {
+        row.sort_by(|a, b| a.lr.partial_cmp(&b.lr).unwrap());
+        let _ = write!(out, "  Matrix LR |");
+        for c in &row {
+            let _ = write!(out, " {:>9.2e} |", c.lr);
+        }
+        let _ = writeln!(out);
+        let _ = write!(out, "  {opt:<9} |");
+        let best = row
+            .iter()
+            .map(|c| c.final_ppl)
+            .fold(f64::INFINITY, f64::min);
+        for c in &row {
+            let mark = if (c.final_ppl - best).abs() < 1e-9 { "*" } else { " " };
+            let _ = write!(out, " {:>8.3}{mark}|", c.final_ppl);
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_dir_is_unique_per_job() {
+        let base = PathBuf::from("runs/x");
+        let a = sweep_dir(&base, &SweepJob { optimizer: "rmnp".into(), lr: 1e-3 });
+        let b = sweep_dir(&base, &SweepJob { optimizer: "rmnp".into(), lr: 2e-3 });
+        let c = sweep_dir(&base, &SweepJob { optimizer: "muon".into(), lr: 1e-3 });
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn format_table_marks_best() {
+        let cells = vec![
+            SweepCell {
+                optimizer: "rmnp".into(),
+                lr: 1e-3,
+                final_ppl: 12.0,
+                final_eval_loss: 2.48,
+                seconds: 1.0,
+            },
+            SweepCell {
+                optimizer: "rmnp".into(),
+                lr: 2e-3,
+                final_ppl: 11.0,
+                final_eval_loss: 2.40,
+                seconds: 1.0,
+            },
+        ];
+        let t = format_table("gpt2_tiny", &cells);
+        assert!(t.contains("11.000*"), "{t}");
+        assert!(t.contains("12.000 "), "{t}");
+    }
+}

@@ -1,0 +1,268 @@
+//! The training loop: config → data pipeline → device-resident stepping →
+//! metrics/eval/dominance/checkpoints.
+
+use std::path::Path;
+
+use crate::config::{DataSpec, RunConfig};
+use crate::coordinator::checkpoint::{self, NamedBuffer};
+use crate::coordinator::metrics::{append_jsonl, json_str, CsvWriter};
+use crate::coordinator::schedule::lr_at;
+use crate::data::corpus::token_source;
+use crate::data::images::ImageSource;
+use crate::data::loader::BatchLoader;
+use crate::runtime::session::{Batch, TrainSession};
+use crate::runtime::Engine;
+use crate::util::Timer;
+use crate::{debugln, info};
+
+/// Outcome of a full training run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub final_train_loss: f64,
+    pub final_eval_loss: f64,
+    /// exp(final_eval_loss) — the paper reports validation perplexity.
+    pub final_ppl: f64,
+    pub mean_clip_rate: f64,
+    pub steps: usize,
+    pub seconds: f64,
+    /// mean train loss over the last 10% of steps (smoother than the last
+    /// point for small-scale runs)
+    pub tail_train_loss: f64,
+}
+
+enum Feed {
+    Tokens(BatchLoader<Vec<i32>>),
+    Images(BatchLoader<(Vec<f32>, Vec<i32>)>),
+}
+
+fn make_feed(engine: &Engine, cfg: &RunConfig, split: u64) -> anyhow::Result<Feed> {
+    let model = engine.manifest.model(&cfg.model)?;
+    if model.family == "vision" {
+        anyhow::ensure!(
+            cfg.data == DataSpec::Images,
+            "vision models need data.corpus = \"images\""
+        );
+        let ispec = &model.batch_specs[0];
+        let b = ispec.shape[0];
+        let hw = *ispec.shape.last().unwrap();
+        let n_img = ispec.elements();
+        let mut src = ImageSource::new(10, hw, cfg.seed, split);
+        Ok(Feed::Images(BatchLoader::spawn(4, move || {
+            let mut images = vec![0.0f32; n_img];
+            let mut labels = vec![0i32; b];
+            src.fill(b, &mut images, &mut labels);
+            (images, labels)
+        })))
+    } else {
+        anyhow::ensure!(
+            cfg.data != DataSpec::Images,
+            "LM models need a token corpus, got images"
+        );
+        let spec = &model.batch_specs[0];
+        let count = spec.elements();
+        let mut src = token_source(cfg.data, cfg.seed, split);
+        Ok(Feed::Tokens(BatchLoader::spawn(4, move || {
+            let mut tokens = vec![0i32; count];
+            src.fill(&mut tokens);
+            tokens
+        })))
+    }
+}
+
+/// Run one training job to completion, writing metrics under
+/// `cfg.out_dir`. Returns the summary.
+pub fn run(engine: &Engine, cfg: &RunConfig) -> anyhow::Result<RunResult> {
+    let t_start = std::time::Instant::now();
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    let mut sess =
+        TrainSession::new(engine, &cfg.model, &cfg.optimizer, cfg.seed as i32)?;
+    let train_feed = make_feed(engine, cfg, 0)?;
+    let eval_feed = make_feed(engine, cfg, 1)?;
+
+    let mut csv = CsvWriter::create(
+        &cfg.out_dir.join("metrics.csv"),
+        &["step", "lr", "loss", "grad_norm", "clipped", "eval_loss"],
+    )?;
+    let mut dom_csv: Option<CsvWriter> = None;
+
+    let mut timer = Timer::new();
+    let mut clip_sum = 0.0f64;
+    let mut tail_losses = Vec::new();
+    let tail_from = cfg.steps - (cfg.steps / 10).max(1);
+    let mut last_train = f64::NAN;
+    let mut last_eval = f64::NAN;
+
+    let eval_now = |sess: &TrainSession, feed: &Feed, n: usize| -> anyhow::Result<f64> {
+        let mut acc = 0.0;
+        for _ in 0..n.max(1) {
+            let loss = match feed {
+                Feed::Tokens(l) => {
+                    let toks = l.next();
+                    sess.eval(&Batch::Tokens(&toks))?
+                }
+                Feed::Images(l) => {
+                    let (images, labels) = l.next();
+                    sess.eval(&Batch::Images { images: &images, labels: &labels })?
+                }
+            };
+            acc += loss as f64;
+        }
+        Ok(acc / n.max(1) as f64)
+    };
+
+    for step in 0..cfg.steps {
+        let lr = lr_at(cfg.schedule, cfg.lr, step, cfg.steps) as f32;
+        let metrics = match &train_feed {
+            Feed::Tokens(l) => {
+                let toks = timer.time("data", || l.next());
+                timer.time("step", || sess.step(&Batch::Tokens(&toks), lr))?
+            }
+            Feed::Images(l) => {
+                let (images, labels) = timer.time("data", || l.next());
+                timer.time("step", || {
+                    sess.step(&Batch::Images { images: &images, labels: &labels }, lr)
+                })?
+            }
+        };
+        clip_sum += metrics.clipped as f64;
+        last_train = metrics.loss as f64;
+        if step >= tail_from {
+            tail_losses.push(metrics.loss as f64);
+        }
+
+        let mut eval_loss = f64::NAN;
+        if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
+            eval_loss = timer.time("eval", || {
+                eval_now(&sess, &eval_feed, cfg.eval_batches)
+            })?;
+            last_eval = eval_loss;
+        }
+        csv.row(&[
+            step as f64,
+            lr as f64,
+            metrics.loss as f64,
+            metrics.grad_norm as f64,
+            metrics.clipped as f64,
+            eval_loss,
+        ])?;
+
+        if cfg.dominance_every > 0 && (step + 1) % cfg.dominance_every == 0 {
+            if let Ok(doms) = sess.dominance() {
+                let w = match &mut dom_csv {
+                    Some(w) => w,
+                    None => {
+                        let mut header = vec!["step".to_string()];
+                        for i in 0..doms.len() {
+                            header.push(format!("r_avg_{i}"));
+                            header.push(format!("r_min_{i}"));
+                            header.push(format!("r_max_{i}"));
+                        }
+                        let refs: Vec<&str> =
+                            header.iter().map(String::as_str).collect();
+                        dom_csv = Some(CsvWriter::create(
+                            &cfg.out_dir.join("dominance.csv"),
+                            &refs,
+                        )?);
+                        dom_csv.as_mut().unwrap()
+                    }
+                };
+                let mut row = vec![step as f64];
+                for (a, mi, ma) in doms {
+                    row.extend([a as f64, mi as f64, ma as f64]);
+                }
+                w.row(&row)?;
+            }
+        }
+
+        if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
+            timer.time("ckpt", || save_checkpoint(engine, &sess, cfg, step + 1))?;
+        }
+
+        if step % 25 == 0 || step + 1 == cfg.steps {
+            // keep long-run metrics observable from outside the process
+            csv.flush()?;
+        }
+        if step % 50 == 0 || step + 1 == cfg.steps {
+            info!(
+                "[{}/{}] {} step {step}/{} loss {:.4} gnorm {:.3} lr {:.2e}",
+                cfg.model, cfg.optimizer, cfg.data.name(), cfg.steps,
+                metrics.loss, metrics.grad_norm, lr
+            );
+        }
+    }
+
+    // final held-out evaluation (always)
+    let final_eval = eval_now(&sess, &eval_feed, cfg.eval_batches.max(4))?;
+    last_eval = final_eval;
+    csv.flush()?;
+    if let Some(w) = &mut dom_csv {
+        w.flush()?;
+    }
+
+    let seconds = t_start.elapsed().as_secs_f64();
+    debugln!("timer: {}", timer.report());
+    let tail = if tail_losses.is_empty() {
+        last_train
+    } else {
+        tail_losses.iter().sum::<f64>() / tail_losses.len() as f64
+    };
+    let result = RunResult {
+        final_train_loss: last_train,
+        final_eval_loss: last_eval,
+        final_ppl: last_eval.exp(),
+        mean_clip_rate: clip_sum / cfg.steps.max(1) as f64,
+        steps: cfg.steps,
+        seconds,
+        tail_train_loss: tail,
+    };
+    append_jsonl(
+        &cfg.out_dir.join("summary.jsonl"),
+        &[
+            ("model", json_str(&cfg.model)),
+            ("optimizer", json_str(&cfg.optimizer)),
+            ("data", json_str(cfg.data.name())),
+            ("lr", format!("{}", cfg.lr)),
+            ("steps", format!("{}", cfg.steps)),
+            ("final_train_loss", format!("{:.6}", result.final_train_loss)),
+            ("final_eval_loss", format!("{:.6}", result.final_eval_loss)),
+            ("final_ppl", format!("{:.4}", result.final_ppl)),
+            ("clip_rate", format!("{:.4}", result.mean_clip_rate)),
+            ("seconds", format!("{:.2}", result.seconds)),
+        ],
+    )?;
+    Ok(result)
+}
+
+fn save_checkpoint(
+    engine: &Engine,
+    sess: &TrainSession,
+    cfg: &RunConfig,
+    step: usize,
+) -> anyhow::Result<()> {
+    let entry = engine.manifest.opt_entry(&cfg.model, &cfg.optimizer)?;
+    let state = sess.download_state()?;
+    let buffers: Vec<NamedBuffer> = entry
+        .state_names
+        .iter()
+        .zip(state)
+        .map(|(name, data)| NamedBuffer { name: name.clone(), data })
+        .collect();
+    checkpoint::save(
+        &cfg.out_dir.join(format!("step-{step}.ckpt")),
+        &buffers,
+    )
+}
+
+/// Evaluate perplexity of a run result against a directory path (helper
+/// for tests and reports).
+pub fn read_final_ppl(out_dir: &Path) -> anyhow::Result<f64> {
+    let text = std::fs::read_to_string(out_dir.join("summary.jsonl"))?;
+    let last = text
+        .lines()
+        .last()
+        .ok_or_else(|| anyhow::anyhow!("empty summary"))?;
+    let j = crate::util::json::parse(last)?;
+    j.get("final_ppl")
+        .and_then(crate::util::json::Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("no final_ppl"))
+}

@@ -1,0 +1,130 @@
+//! Synthetic image data for the vision experiments (Appendix E.6).
+//!
+//! CIFAR-10 is replaced by class-conditional structured images: each class
+//! owns a deterministic frequency/orientation pattern (a mixture of 2-D
+//! sinusoids) plus per-sample Gaussian noise — linearly non-separable but
+//! comfortably learnable by a small CNN, which is all the optimizer
+//! comparison (Figure 27 / Table 21) needs.
+
+use crate::util::Rng;
+
+/// Deterministic synthetic image source.
+pub struct ImageSource {
+    classes: usize,
+    hw: usize,
+    rng: Rng,
+    /// per-class sinusoid parameters: (fx, fy, phase, weight) x 3
+    patterns: Vec<[(f32, f32, f32, f32); 3]>,
+    noise: f32,
+}
+
+impl ImageSource {
+    pub fn new(classes: usize, hw: usize, seed: u64, split: u64) -> Self {
+        let mut structure = Rng::new(seed.wrapping_add(0xBEEF));
+        let patterns = (0..classes)
+            .map(|_| {
+                let mut ps = [(0.0, 0.0, 0.0, 0.0); 3];
+                for p in &mut ps {
+                    *p = (
+                        0.5 + 3.0 * structure.next_f32(),
+                        0.5 + 3.0 * structure.next_f32(),
+                        std::f32::consts::TAU * structure.next_f32(),
+                        0.5 + structure.next_f32(),
+                    );
+                }
+                ps
+            })
+            .collect();
+        ImageSource {
+            classes,
+            hw,
+            rng: Rng::new(seed ^ split.wrapping_mul(0xCAFE_F00D).wrapping_add(11)),
+            patterns,
+            noise: 0.35,
+        }
+    }
+
+    /// Fill one batch: images (b, 3, hw, hw) row-major f32 and labels (b).
+    pub fn fill(&mut self, batch: usize, images: &mut [f32], labels: &mut [i32]) {
+        let chan = self.hw * self.hw;
+        assert_eq!(images.len(), batch * 3 * chan);
+        assert_eq!(labels.len(), batch);
+        for b in 0..batch {
+            let label = self.rng.below(self.classes as u64) as usize;
+            labels[b] = label as i32;
+            let ps = self.patterns[label];
+            for c in 0..3 {
+                let off = (b * 3 + c) * chan;
+                let (fx, fy, phase, w) = ps[c];
+                for y in 0..self.hw {
+                    for x in 0..self.hw {
+                        let xf = x as f32 / self.hw as f32;
+                        let yf = y as f32 / self.hw as f32;
+                        let signal = w
+                            * (std::f32::consts::TAU * (fx * xf + fy * yf) + phase)
+                                .sin();
+                        let noise = self.noise * self.rng.next_normal() as f32;
+                        images[off + y * self.hw + x] = signal + noise;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_label_range() {
+        let mut src = ImageSource::new(10, 8, 3, 0);
+        let mut imgs = vec![0.0f32; 4 * 3 * 64];
+        let mut labels = vec![0i32; 4];
+        src.fill(4, &mut imgs, &mut labels);
+        assert!(labels.iter().all(|&l| (0..10).contains(&l)));
+        assert!(imgs.iter().all(|x| x.is_finite()));
+        assert!(imgs.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn deterministic_and_split_dependent() {
+        let draw = |split| {
+            let mut src = ImageSource::new(10, 8, 3, split);
+            let mut imgs = vec![0.0f32; 2 * 3 * 64];
+            let mut labels = vec![0i32; 2];
+            src.fill(2, &mut imgs, &mut labels);
+            (imgs, labels)
+        };
+        assert_eq!(draw(0), draw(0));
+        assert_ne!(draw(0).0, draw(1).0);
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // mean absolute difference between class-0 and class-1 noiseless
+        // patterns should exceed the noise floor
+        let mut src = ImageSource::new(2, 16, 9, 0);
+        src.noise = 0.0;
+        let mut means = vec![vec![0.0f32; 3 * 256]; 2];
+        let mut counts = [0usize; 2];
+        for _ in 0..64 {
+            let mut imgs = vec![0.0f32; 3 * 256];
+            let mut labels = vec![0i32; 1];
+            src.fill(1, &mut imgs, &mut labels);
+            let l = labels[0] as usize;
+            for (m, v) in means[l].iter_mut().zip(&imgs) {
+                *m += v;
+            }
+            counts[l] += 1;
+        }
+        assert!(counts[0] > 0 && counts[1] > 0);
+        let diff: f32 = means[0]
+            .iter()
+            .zip(&means[1])
+            .map(|(a, b)| (a / counts[0] as f32 - b / counts[1] as f32).abs())
+            .sum::<f32>()
+            / (3.0 * 256.0);
+        assert!(diff > 0.1, "class separation {diff}");
+    }
+}

@@ -1,0 +1,30 @@
+//! Data substrate: synthetic corpora, tokenizers, batch loaders, images.
+//!
+//! The paper trains on OpenWebText / FineWeb-Edu / C4; those corpora are
+//! not available here, so each is replaced by a synthetic token source
+//! with matched *learnability structure* (DESIGN.md §3):
+//!
+//! * [`corpus::MarkovCorpus`] — order-2 Markov chain with Zipfian branch
+//!   weights (OpenWebText analogue; mid-entropy floor).
+//! * [`corpus::ZipfCorpus`] — Zipfian unigrams with burst repetition
+//!   (C4 analogue; higher floor, heavier tail).
+//! * [`corpus::NgramCorpus`] — template-bank n-gram corpus (FineWeb-Edu
+//!   analogue; low floor, "cleaner" data).
+//!
+//! All sources are deterministic from a seed, and train/valid streams use
+//! disjoint seed namespaces so held-out loss is a real generalization
+//! number. [`loader::BatchLoader`] runs any source on a background thread
+//! with a bounded channel (prefetch + backpressure).
+
+pub mod corpus;
+pub mod images;
+pub mod loader;
+pub mod tokenizer;
+
+pub use corpus::{token_source, MarkovCorpus, NgramCorpus, TokenSource, ZipfCorpus};
+pub use images::ImageSource;
+pub use loader::BatchLoader;
+pub use tokenizer::BpeTokenizer;
+
+/// Vocabulary size shared with the L2 graphs (manifest `vocab`).
+pub const VOCAB: usize = 512;

@@ -1,0 +1,193 @@
+//! Byte-level BPE tokenizer substrate.
+//!
+//! The LM experiments feed token streams directly (the corpora are
+//! synthetic), but a real framework needs the text path, so this module
+//! implements train/encode/decode byte-pair encoding to the shared
+//! 512-entry vocabulary: ids 0..=255 are raw bytes, ids 256.. are learned
+//! merges. `rmnp data encode` exposes it on the CLI.
+
+use std::collections::HashMap;
+
+/// Byte-level BPE tokenizer with a fixed maximum vocabulary.
+#[derive(Clone, Debug)]
+pub struct BpeTokenizer {
+    /// merges[i] = (left id, right id) creating id 256 + i.
+    merges: Vec<(u32, u32)>,
+    /// lookup: pair -> merged id.
+    merge_lookup: HashMap<(u32, u32), u32>,
+}
+
+impl BpeTokenizer {
+    /// Train on a text corpus until `vocab_size` (>= 256) ids exist or no
+    /// pair repeats.
+    pub fn train(text: &str, vocab_size: usize) -> Self {
+        assert!(vocab_size >= 256, "vocab must cover raw bytes");
+        let mut ids: Vec<u32> = text.bytes().map(u32::from).collect();
+        let mut merges = Vec::new();
+        let mut merge_lookup = HashMap::new();
+        while 256 + merges.len() < vocab_size {
+            // count adjacent pairs
+            let mut counts: HashMap<(u32, u32), u32> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            let Some((&pair, &count)) = counts
+                .iter()
+                .max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if count < 2 {
+                break;
+            }
+            let new_id = 256 + merges.len() as u32;
+            merges.push(pair);
+            merge_lookup.insert(pair, new_id);
+            ids = Self::apply_merge(&ids, pair, new_id);
+        }
+        BpeTokenizer { merges, merge_lookup }
+    }
+
+    fn apply_merge(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+        let mut out = Vec::with_capacity(ids.len());
+        let mut i = 0;
+        while i < ids.len() {
+            if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                out.push(new_id);
+                i += 2;
+            } else {
+                out.push(ids[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Encode text to token ids (applies merges in training order).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids: Vec<u32> = text.bytes().map(u32::from).collect();
+        loop {
+            // find the earliest-trained merge present
+            let mut best: Option<(usize, u32)> = None; // (merge rank, id)
+            for w in ids.windows(2) {
+                if let Some(&id) = self.merge_lookup.get(&(w[0], w[1])) {
+                    let rank = (id - 256) as usize;
+                    if best.map_or(true, |(r, _)| rank < r) {
+                        best = Some((rank, id));
+                    }
+                }
+            }
+            let Some((rank, id)) = best else { break };
+            ids = Self::apply_merge(&ids, self.merges[rank], id);
+        }
+        ids
+    }
+
+    /// Decode ids back to bytes (lossless inverse of encode).
+    pub fn decode(&self, ids: &[u32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &id in ids {
+            self.push_bytes(id, &mut out);
+        }
+        out
+    }
+
+    fn push_bytes(&self, id: u32, out: &mut Vec<u8>) {
+        if id < 256 {
+            out.push(id as u8);
+        } else {
+            let (l, r) = self.merges[(id - 256) as usize];
+            self.push_bytes(l, out);
+            self.push_bytes(r, out);
+        }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256 + self.merges.len()
+    }
+
+    /// Serialize merges to a simple text format (one pair per line).
+    pub fn to_text(&self) -> String {
+        let mut s = String::new();
+        for (l, r) in &self.merges {
+            s.push_str(&format!("{l} {r}\n"));
+        }
+        s
+    }
+
+    /// Inverse of [`Self::to_text`].
+    pub fn from_text(text: &str) -> anyhow::Result<Self> {
+        let mut merges = Vec::new();
+        let mut merge_lookup = HashMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (l, r) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow::anyhow!("bad merge line {}", i + 1))?;
+            let pair = (l.parse::<u32>()?, r.parse::<u32>()?);
+            merge_lookup.insert(pair, 256 + merges.len() as u32);
+            merges.push(pair);
+        }
+        Ok(BpeTokenizer { merges, merge_lookup })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "the quick brown fox jumps over the lazy dog. \
+        the quick brown fox jumps again and again and again. \
+        pack my box with five dozen liquor jugs.";
+
+    #[test]
+    fn roundtrip_lossless() {
+        let tok = BpeTokenizer::train(SAMPLE, 300);
+        let ids = tok.encode(SAMPLE);
+        assert_eq!(tok.decode(&ids), SAMPLE.as_bytes());
+        // non-training text also round-trips
+        let other = "completely unseen text with unicode: héllo ∑";
+        let ids = tok.encode(other);
+        assert_eq!(tok.decode(&ids), other.as_bytes());
+    }
+
+    #[test]
+    fn compression_happens() {
+        let tok = BpeTokenizer::train(SAMPLE, 320);
+        let ids = tok.encode(SAMPLE);
+        assert!(ids.len() < SAMPLE.len(), "{} !< {}", ids.len(), SAMPLE.len());
+        assert!(tok.vocab_size() > 256);
+    }
+
+    #[test]
+    fn vocab_limit_respected() {
+        let tok = BpeTokenizer::train(SAMPLE, 260);
+        assert!(tok.vocab_size() <= 260);
+    }
+
+    #[test]
+    fn ids_within_vocab() {
+        let tok = BpeTokenizer::train(SAMPLE, 512);
+        for id in tok.encode(SAMPLE) {
+            assert!((id as usize) < tok.vocab_size());
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let tok = BpeTokenizer::train(SAMPLE, 300);
+        let restored = BpeTokenizer::from_text(&tok.to_text()).unwrap();
+        assert_eq!(restored.encode(SAMPLE), tok.encode(SAMPLE));
+        assert!(BpeTokenizer::from_text("1 2 3\n").is_err());
+    }
+
+    #[test]
+    fn empty_text() {
+        let tok = BpeTokenizer::train("", 300);
+        assert_eq!(tok.vocab_size(), 256);
+        assert!(tok.encode("").is_empty());
+    }
+}

@@ -1,0 +1,143 @@
+//! Gradient clip-rate trajectories — Figures 29–32.
+//!
+//! Every pretrain run already logs the per-step clip indicator in
+//! `metrics.csv`; this harness reads those columns back, applies the
+//! paper's 50-step rolling mean, and reports the trajectory summary: the
+//! warm clip phase length (steps until the smoothed rate first drops
+//! below 0.5) and the final rate — the quantities the paper's figures
+//! visualize (larger models stay clipped longer; RMNP releases first).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::coordinator::metrics::CsvData;
+use crate::util::moving_average;
+
+/// Clip-rate summary for one run.
+#[derive(Clone, Debug)]
+pub struct ClipSummary {
+    pub label: String,
+    pub steps: usize,
+    pub mean_rate: f64,
+    /// first step where the 50-step rolling mean falls below 0.5
+    /// (usize::MAX if it never does — "clipped throughout", like AdamW on
+    /// GPT-2 XLarge in Figure 31)
+    pub release_step: usize,
+    pub final_rate: f64,
+}
+
+/// Summarize `metrics.csv` of one run directory.
+pub fn summarize(run_dir: &Path, label: &str) -> anyhow::Result<ClipSummary> {
+    let data = CsvData::read(&run_dir.join("metrics.csv"))?;
+    let clipped = data.column("clipped")?;
+    let smooth = moving_average(&clipped, 50);
+    let release_step = smooth
+        .iter()
+        .position(|&x| x < 0.5)
+        .unwrap_or(usize::MAX);
+    let mean = clipped.iter().sum::<f64>() / clipped.len().max(1) as f64;
+    Ok(ClipSummary {
+        label: label.to_string(),
+        steps: clipped.len(),
+        mean_rate: mean,
+        release_step,
+        final_rate: *smooth.last().unwrap_or(&0.0),
+    })
+}
+
+/// Scan a runs directory for `pretrain_*` outputs and summarize each.
+pub fn scan(runs_dir: &Path) -> anyhow::Result<Vec<ClipSummary>> {
+    let mut out = Vec::new();
+    let mut entries: Vec<_> = std::fs::read_dir(runs_dir)?
+        .filter_map(Result::ok)
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for dir in entries {
+        if !dir.is_dir() {
+            continue;
+        }
+        let name = dir.file_name().unwrap().to_string_lossy().to_string();
+        if !name.starts_with("pretrain_") && !name.starts_with("sweep_") {
+            continue;
+        }
+        // sweep/pretrain dirs contain per-job subdirs
+        for sub in std::fs::read_dir(&dir)?.filter_map(Result::ok) {
+            let sub = sub.path();
+            if sub.join("metrics.csv").exists() {
+                let label = format!(
+                    "{name}/{}",
+                    sub.file_name().unwrap().to_string_lossy()
+                );
+                if let Ok(s) = summarize(&sub, &label) {
+                    out.push(s);
+                }
+            }
+        }
+        if dir.join("metrics.csv").exists() {
+            if let Ok(s) = summarize(&dir, &name) {
+                out.push(s);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Figures 29–32 text rendering.
+pub fn format(summaries: &[ClipSummary]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Figures 29–32 — gradient clip-rate trajectories (50-step rolling mean)"
+    );
+    let _ = writeln!(
+        out,
+        "  {:<52} {:>6} {:>10} {:>12} {:>10}",
+        "run", "steps", "mean", "release@", "final"
+    );
+    for s in summaries {
+        let release = if s.release_step == usize::MAX {
+            "never".to_string()
+        } else {
+            s.release_step.to_string()
+        };
+        let _ = writeln!(
+            out,
+            "  {:<52} {:>6} {:>9.1}% {:>12} {:>9.1}%",
+            s.label,
+            s.steps,
+            100.0 * s.mean_rate,
+            release,
+            100.0 * s.final_rate
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::CsvWriter;
+
+    #[test]
+    fn summarize_release_point() {
+        let dir = std::env::temp_dir().join(format!("rmnp-clip-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = CsvWriter::create(
+            &dir.join("metrics.csv"),
+            &["step", "lr", "loss", "grad_norm", "clipped", "eval_loss"],
+        )
+        .unwrap();
+        for s in 0..100 {
+            let clipped = if s < 30 { 1.0 } else { 0.0 };
+            w.row(&[s as f64, 1e-3, 3.0, 1.0, clipped, f64::NAN]).unwrap();
+        }
+        w.flush().unwrap();
+        let s = summarize(&dir, "x").unwrap();
+        assert_eq!(s.steps, 100);
+        assert!((s.mean_rate - 0.3).abs() < 1e-9);
+        assert!(s.release_step > 30 && s.release_step < 70, "{}", s.release_step);
+        assert!(s.final_rate < 0.1);
+        assert!(format(&[s]).contains("release@"));
+    }
+}

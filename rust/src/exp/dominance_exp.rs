@@ -1,0 +1,142 @@
+//! Diagonal-dominance experiments — Figures 4/5 (and Appendix Figures
+//! 7–10, 26, 28).
+//!
+//! Trains the requested models with Muon while logging the per-matrix
+//! dominance ratios of the momentum Gram matrix every few steps, then
+//! prints both the paper's views: per-parameter trajectories for three
+//! representative matrices (Fig 4) and globally averaged statistics per
+//! scale (Fig 5). Raw series land in each run's `dominance.csv`.
+
+use std::fmt::Write as _;
+
+use crate::analysis::dominance::{global_series, param_series, DominanceSeries};
+use crate::config::{DataSpec, RunConfig, Schedule};
+use crate::coordinator::train;
+use crate::exp::{default_lr, ExpOpts};
+use crate::runtime::Engine;
+use crate::info;
+
+/// One model's dominance summary.
+#[derive(Clone, Debug)]
+pub struct DominanceRun {
+    pub model: String,
+    pub optimizer: String,
+    pub global: DominanceSeries,
+    /// three representative per-parameter series (first/middle/last matrix)
+    pub representative: Vec<(usize, DominanceSeries)>,
+}
+
+/// Train `model` with `optimizer` logging dominance every
+/// `steps / 40 + 1` steps; returns summaries.
+pub fn run_one(
+    opts: &ExpOpts,
+    engine: &Engine,
+    model: &str,
+    optimizer: &str,
+    dataset: DataSpec,
+) -> anyhow::Result<DominanceRun> {
+    let out_dir = opts.out.join(format!("dominance_{model}_{optimizer}"));
+    let cfg = RunConfig {
+        model: model.to_string(),
+        optimizer: optimizer.to_string(),
+        lr: default_lr(optimizer),
+        schedule: Schedule::CosineWarmup { warmup_frac: 0.1, min_ratio: 0.1 },
+        steps: opts.steps,
+        seed: opts.seed,
+        data: dataset,
+        eval_every: 0,
+        eval_batches: 2,
+        dominance_every: (opts.steps / 40).max(1),
+        checkpoint_every: 0,
+        out_dir: out_dir.clone(),
+        artifacts: opts.artifacts.clone(),
+    };
+    train::run(engine, &cfg)?;
+    let csv = out_dir.join("dominance.csv");
+    let global = global_series(&csv)?;
+    let k = global.n_params;
+    let picks = [0, k / 2, k.saturating_sub(1)];
+    let mut representative = Vec::new();
+    for &i in picks.iter() {
+        representative.push((i, param_series(&csv, i)?));
+    }
+    info!(
+        "dominance {model}/{optimizer}: tail r_avg {:.2} (frac>1: {:.0}%)",
+        global.tail_means().0,
+        100.0 * global.frac_above_one()
+    );
+    Ok(DominanceRun {
+        model: model.to_string(),
+        optimizer: optimizer.to_string(),
+        global,
+        representative,
+    })
+}
+
+/// Figure 4 view: per-parameter trajectories at 0/25/50/75/100% progress.
+pub fn format_per_param(run: &DominanceRun) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Figure 4 — per-parameter dominance ratios, {} ({})",
+        run.model, run.optimizer
+    );
+    for (idx, series) in &run.representative {
+        let (avg, min, max) = (
+            &series.r_avg,
+            &series.r_min,
+            &series.r_max,
+        );
+        let n = series.steps.len();
+        if n == 0 {
+            continue;
+        }
+        let _ = writeln!(out, "  matrix #{idx}:");
+        let _ = writeln!(
+            out,
+            "    progress:  {:>8} {:>8} {:>8} {:>8} {:>8}",
+            "0%", "25%", "50%", "75%", "100%"
+        );
+        for (name, xs) in [("r_avg", avg), ("r_min", min), ("r_max", max)] {
+            let at = |f: f64| xs[((n - 1) as f64 * f) as usize];
+            let _ = writeln!(
+                out,
+                "    {name:>8}: {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+                at(0.0), at(0.25), at(0.5), at(0.75), at(1.0)
+            );
+        }
+    }
+    out
+}
+
+/// Figure 5 view: global statistics across model scales.
+pub fn format_global(runs: &[DominanceRun]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Figure 5 — global dominance ratios (tail means; paper threshold y = 1)"
+    );
+    let _ = writeln!(
+        out,
+        "  {:<24} {:>8} {:>8} {:>8} {:>10}",
+        "model", "r̄_avg", "r̄_min", "r̄_max", "frac>1"
+    );
+    for r in runs {
+        let (a, mi, ma) = r.global.tail_means();
+        let _ = writeln!(
+            out,
+            "  {:<24} {:>8.2} {:>8.2} {:>8.2} {:>9.0}%",
+            format!("{} ({})", r.model, r.optimizer),
+            a, mi, ma,
+            100.0 * r.global.frac_above_one()
+        );
+    }
+    out
+}
+
+/// Whether the run reproduces the paper's qualitative claim: all three
+/// tail statistics above 1.
+pub fn reproduces_dominance(run: &DominanceRun) -> bool {
+    let (a, mi, ma) = run.global.tail_means();
+    a > 1.0 && mi > 1.0 && ma > 1.0
+}

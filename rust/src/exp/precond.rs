@@ -1,0 +1,171 @@
+//! Preconditioner wall-clock benchmark — Figure 1 + Tables 2/3.
+//!
+//! Protocol (paper Section 4.2): for each Table 4 GPT-2 config, time the
+//! preconditioner operator over every matrix parameter of the model and
+//! report the cumulative cost of 100 steps, Muon (NS5) vs RMNP (row
+//! normalization), plus the speedup factor. Table 3 adds memory: we report
+//! the operator buffer footprint (in + out bytes summed over the model's
+//! matrices), which is identical between the two methods — matching the
+//! paper's observation that memory usage is equal.
+//!
+//! Absolute times are CPU-PJRT numbers, not the paper's RTX 6000 numbers;
+//! the reproduction target is the *ratio* and its growth with d_model.
+//! NS5 at d ≥ 1280 costs seconds per call on CPU, so the harness times a
+//! small number of calls per shape and extrapolates to the 100-step
+//! protocol (documented in EXPERIMENTS.md).
+
+use std::fmt::Write as _;
+
+use crate::analysis::report::markdown_table;
+use crate::bench::{bench_n, fmt_secs};
+use crate::exp::ExpOpts;
+use crate::runtime::Engine;
+use crate::util::{human_bytes, Rng};
+use crate::info;
+
+/// One Table 2 row.
+#[derive(Clone, Debug)]
+pub struct PrecondRow {
+    pub model: String,
+    pub d_model: usize,
+    pub muon_100steps: f64,
+    pub rmnp_100steps: f64,
+    pub speedup: f64,
+    pub buffer_bytes: u64,
+}
+
+/// Run the full Table 2 protocol. `max_d` caps the largest d_model
+/// (useful for quick runs); 0 = all 8 configs.
+pub fn run(opts: &ExpOpts, max_d: usize, repeats: usize) -> anyhow::Result<Vec<PrecondRow>> {
+    let engine = Engine::new(&opts.artifacts)?;
+    let mut rng = Rng::new(opts.seed);
+    let mut rows = Vec::new();
+    for model in engine.manifest.precond_models.clone() {
+        if max_d > 0 && model.d_model > max_d {
+            continue;
+        }
+        let mut muon_total = 0.0f64;
+        let mut rmnp_total = 0.0f64;
+        let mut bytes = 0u64;
+        for ((m, n), count) in &model.counts {
+            let key = format!("{m}x{n}");
+            let op = engine
+                .manifest
+                .precond_ops
+                .get(&key)
+                .ok_or_else(|| anyhow::anyhow!("no precond op {key}"))?
+                .clone();
+            let ns5 = engine.executable(&op.ns5)?;
+            let rn = engine.executable(&op.rownorm)?;
+            // one shared random operand per shape (the operator cost does
+            // not depend on values)
+            let mut host = vec![0.0f32; m * n];
+            rng.fill_normal(&mut host, 0.02);
+            let v = engine.upload_f32(&host, &[*m, *n])?;
+            // calibrate iteration counts: big NS5 shapes run few times
+            let iters_ns = if m * n >= 4096 * 1280 { 1 } else { 3 };
+            let r_ns = bench_n(&format!("ns5_{key}"), iters_ns, repeats, || {
+                let out = ns5.execute_b_untupled(&[&v]).expect("ns5");
+                drop(out);
+            });
+            let r_rn = bench_n(&format!("rownorm_{key}"), 10, repeats, || {
+                let out = rn.execute_b_untupled(&[&v]).expect("rownorm");
+                drop(out);
+            });
+            muon_total += r_ns.median() * *count as f64 * 100.0;
+            rmnp_total += r_rn.median() * *count as f64 * 100.0;
+            bytes += (2 * m * n * 4 * count) as u64;
+        }
+        let row = PrecondRow {
+            model: model.name.clone(),
+            d_model: model.d_model,
+            muon_100steps: muon_total,
+            rmnp_100steps: rmnp_total,
+            speedup: muon_total / rmnp_total.max(1e-12),
+            buffer_bytes: bytes,
+        };
+        info!(
+            "precond {}: muon {} rmnp {} speedup {:.1}x",
+            row.model,
+            fmt_secs(row.muon_100steps),
+            fmt_secs(row.rmnp_100steps),
+            row.speedup
+        );
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Render Tables 2+3 (time + memory + speedup).
+pub fn format_table(rows: &[PrecondRow]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Table 2/3 — preconditioning cost per 100 steps (CPU PJRT; ratios are the \
+         reproduction target)"
+    );
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                r.d_model.to_string(),
+                format!("{:.3}", r.muon_100steps),
+                format!("{:.3}", r.rmnp_100steps),
+                format!("{:.1}x", r.speedup),
+                human_bytes(r.buffer_bytes),
+                human_bytes(r.buffer_bytes),
+            ]
+        })
+        .collect();
+    out.push_str(&markdown_table(
+        &["Size", "d_model", "Muon (s)", "RMNP (s)", "Speedup", "Mem Muon", "Mem RMNP"],
+        &table_rows,
+    ));
+    out
+}
+
+/// The Figure 1 view: cumulative preconditioning time over 100 steps for
+/// the largest benchmarked config, as two printed series.
+pub fn format_figure1(rows: &[PrecondRow]) -> String {
+    let Some(r) = rows.last() else {
+        return "no data".into();
+    };
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Figure 1 — cumulative preconditioning wall-clock, GPT-2 {} (d={})",
+        r.model, r.d_model
+    );
+    for frac in [0.25, 0.5, 0.75, 1.0] {
+        let steps = (100.0 * frac) as usize;
+        let _ = writeln!(
+            out,
+            "  steps {steps:>3}: muon {:>10}  rmnp {:>10}",
+            fmt_secs(r.muon_100steps * frac),
+            fmt_secs(r.rmnp_100steps * frac),
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formatting_smoke() {
+        let rows = vec![PrecondRow {
+            model: "60M".into(),
+            d_model: 640,
+            muon_100steps: 1.48,
+            rmnp_100steps: 0.115,
+            speedup: 12.9,
+            buffer_bytes: 7804 << 20,
+        }];
+        let t = format_table(&rows);
+        assert!(t.contains("12.9x"));
+        let f = format_figure1(&rows);
+        assert!(f.contains("steps 100"));
+    }
+}

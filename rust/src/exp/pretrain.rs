@@ -1,0 +1,206 @@
+//! Pretraining comparisons — Figure 6, Tables 17/18/19 (and the derived
+//! experiments: Table 14 extended budget, Tables 15/16 embedding ablation,
+//! Table 20 SSM, Table 21 vision, Figures 14–25 loss curves which land in
+//! each run directory's `metrics.csv`).
+
+use std::fmt::Write as _;
+
+use crate::analysis::report::{mark_column_winners, markdown_table};
+use crate::config::{DataSpec, RunConfig, Schedule};
+use crate::coordinator::sweep::{run_grid, SweepJob};
+use crate::exp::{default_lr, ExpOpts};
+use crate::info;
+
+/// Final validation perplexity grid: optimizers x scales.
+#[derive(Clone, Debug)]
+pub struct PplGrid {
+    pub family: String,
+    pub dataset: DataSpec,
+    pub scales: Vec<String>,
+    pub optimizers: Vec<String>,
+    /// ppl[opt][scale]
+    pub ppl: Vec<Vec<f64>>,
+}
+
+fn base_config(opts: &ExpOpts, dataset: DataSpec) -> RunConfig {
+    RunConfig {
+        lr: 0.0, // per-job
+        schedule: Schedule::CosineWarmup { warmup_frac: 0.1, min_ratio: 0.1 },
+        steps: opts.steps,
+        seed: opts.seed,
+        data: dataset,
+        eval_every: (opts.steps / 4).max(1),
+        eval_batches: 4,
+        dominance_every: 0,
+        checkpoint_every: 0,
+        artifacts: opts.artifacts.clone(),
+        ..RunConfig::default()
+    }
+}
+
+/// Train `optimizers` on each `<family>_<scale>` and collect final ppl.
+/// `steps_mult` scales the step budget (Table 14 uses 2).
+pub fn compare(
+    opts: &ExpOpts,
+    family: &str,
+    scales: &[&str],
+    optimizers: &[&str],
+    dataset: DataSpec,
+    steps_mult: usize,
+) -> anyhow::Result<PplGrid> {
+    let mut grid = PplGrid {
+        family: family.to_string(),
+        dataset,
+        scales: scales.iter().map(|s| s.to_string()).collect(),
+        optimizers: optimizers.iter().map(|s| s.to_string()).collect(),
+        ppl: vec![vec![f64::NAN; scales.len()]; optimizers.len()],
+    };
+    for (si, scale) in scales.iter().enumerate() {
+        let model = format!("{family}_{scale}");
+        let mut cfg = base_config(opts, dataset);
+        cfg.model = model.clone();
+        cfg.steps = opts.steps * steps_mult.max(1);
+        cfg.eval_every = (cfg.steps / 4).max(1);
+        cfg.out_dir = opts.out.join(format!(
+            "pretrain_{model}_{}{}",
+            dataset.name(),
+            if steps_mult > 1 { "_2x" } else { "" }
+        ));
+        let jobs: Vec<SweepJob> = optimizers
+            .iter()
+            .map(|o| SweepJob { optimizer: o.to_string(), lr: default_lr(o) })
+            .collect();
+        let cells = run_grid(&cfg, &jobs, opts.workers)?;
+        for (oi, cell) in cells.iter().enumerate() {
+            grid.ppl[oi][si] = cell.final_ppl;
+        }
+        info!("pretrain {model} done");
+    }
+    Ok(grid)
+}
+
+/// Tables 17/18/19 rendering.
+pub fn format_grid(grid: &PplGrid, title: &str) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{title} — final validation perplexity on `{}` (lower is better, * = column winner)",
+        grid.dataset.name()
+    );
+    let mut header = vec!["Optimizer"];
+    for s in &grid.scales {
+        header.push(s);
+    }
+    let marked = mark_column_winners(&grid.ppl);
+    let rows: Vec<Vec<String>> = grid
+        .optimizers
+        .iter()
+        .zip(marked)
+        .map(|(o, cells)| {
+            let mut row = vec![o.to_uppercase()];
+            row.extend(cells);
+            row
+        })
+        .collect();
+    out.push_str(&markdown_table(&header, &rows));
+    out
+}
+
+/// Table 14: 2× extended budget for the three paper cells.
+pub fn extended(opts: &ExpOpts) -> anyhow::Result<Vec<(String, PplGrid)>> {
+    let mut out = Vec::new();
+    out.push((
+        "LLaMA-60M (2x)".into(),
+        compare(opts, "llama", &["s60"], &["adamw", "muon", "rmnp"], DataSpec::Zipf, 2)?,
+    ));
+    out.push((
+        "LLaMA-130M (2x)".into(),
+        compare(opts, "llama", &["s130"], &["adamw", "muon", "rmnp"], DataSpec::Zipf, 2)?,
+    ));
+    out.push((
+        "GPT-2 Small (2x)".into(),
+        compare(opts, "gpt2", &["small"], &["adamw", "muon", "rmnp"], DataSpec::Markov, 2)?,
+    ));
+    Ok(out)
+}
+
+/// Tables 15/16: LM-head + embedding ablation. Compares the default LLaMA
+/// protocol (embeddings on AdamW) against the `*emb` registry variants
+/// (matrix optimizer covers embeddings).
+pub fn embed_ablation(opts: &ExpOpts) -> anyhow::Result<Vec<(String, f64, f64)>> {
+    let mut rows = Vec::new();
+    for (scale, emb_scale) in [("s60", "s60emb"), ("s130", "s130emb")] {
+        for optimizer in ["muon", "rmnp"] {
+            let a = compare(opts, "llama", &[scale], &[optimizer], DataSpec::Zipf, 1)?;
+            let b = compare(opts, "llama", &[emb_scale], &[optimizer], DataSpec::Zipf, 1)?;
+            rows.push((
+                format!("llama_{scale} {optimizer}"),
+                a.ppl[0][0],
+                b.ppl[0][0],
+            ));
+        }
+    }
+    Ok(rows)
+}
+
+pub fn format_embed_ablation(rows: &[(String, f64, f64)]) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "Tables 15/16 — LM-head/embedding ablation (ppl; adamw-embeds vs matrix-embeds)"
+    );
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(name, a, b)| {
+            vec![name.clone(), format!("{a:.2}"), format!("{b:.2}"), format!("{:+.2}", b - a)]
+        })
+        .collect();
+    out.push_str(&markdown_table(
+        &["Setting", "AdamW embeds", "Matrix embeds", "Δ"],
+        &table,
+    ));
+    out
+}
+
+/// Appendix E.5: Mamba-like SSM comparison (Figure 25 / Table 20).
+pub fn ssm(opts: &ExpOpts) -> anyhow::Result<PplGrid> {
+    compare(opts, "ssm", &["base"], &["adamw", "muon", "rmnp"], DataSpec::Ngram, 1)
+}
+
+/// Appendix E.6: CNN on synthetic images (Figure 27 / Table 21). Returns
+/// (optimizer, final train loss, final eval loss) rows — classification
+/// "perplexity" is exp(CE), also reported.
+pub fn vision(opts: &ExpOpts) -> anyhow::Result<PplGrid> {
+    compare(opts, "vision", &["base"], &["adamw", "muon", "rmnp"], DataSpec::Images, 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_formatting() {
+        let grid = PplGrid {
+            family: "gpt2".into(),
+            dataset: DataSpec::Markov,
+            scales: vec!["small".into(), "medium".into()],
+            optimizers: vec!["adamw".into(), "muon".into(), "rmnp".into()],
+            ppl: vec![
+                vec![24.19, 18.80],
+                vec![22.86, 17.38],
+                vec![22.82, 17.31],
+            ],
+        };
+        let t = format_grid(&grid, "Table 17");
+        assert!(t.contains("22.82*"));
+        assert!(t.contains("RMNP"));
+        assert!(t.contains("markov"));
+    }
+
+    #[test]
+    fn embed_ablation_formatting() {
+        let rows = vec![("llama_s60 rmnp".into(), 28.95, 29.03)];
+        let t = format_embed_ablation(&rows);
+        assert!(t.contains("+0.08"));
+    }
+}

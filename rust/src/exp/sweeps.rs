@@ -1,0 +1,103 @@
+//! Learning-rate sweeps — Tables 9–13 (GPT-2 + LLaMA, incl. Shampoo/SOAP
+//! baselines), Table 20 (Mamba) and Table 21 (vision) grids.
+
+use crate::config::{DataSpec, RunConfig, Schedule};
+use crate::coordinator::sweep::{format_table, run_grid, SweepCell, SweepJob};
+use crate::exp::ExpOpts;
+
+/// The per-optimizer LR grids, mirroring the paper's tables at our scale:
+/// Muon/Shampoo sweep a higher range than RMNP/SOAP exactly as in
+/// Tables 9–13.
+pub fn grid_for(optimizer: &str) -> Vec<f64> {
+    match optimizer {
+        "muon" => vec![5e-3, 1e-2, 2e-2, 3e-2],
+        "rmnp" => vec![1e-3, 2e-3, 4e-3, 8e-3],
+        "adamw" => vec![1e-3, 3e-3, 6e-3],
+        "shampoo" => vec![5e-3, 1e-2, 3e-2],
+        "soap" => vec![1e-3, 3e-3, 5e-3],
+        _ => vec![1e-3, 3e-3],
+    }
+}
+
+/// Run one sweep table: all grid points for each optimizer on `model`.
+pub fn run(
+    opts: &ExpOpts,
+    model: &str,
+    optimizers: &[&str],
+    dataset: DataSpec,
+) -> anyhow::Result<Vec<SweepCell>> {
+    let mut jobs = Vec::new();
+    for opt in optimizers {
+        for lr in grid_for(opt) {
+            jobs.push(SweepJob { optimizer: opt.to_string(), lr });
+        }
+    }
+    let cfg = RunConfig {
+        model: model.to_string(),
+        lr: 0.0,
+        schedule: Schedule::CosineWarmup { warmup_frac: 0.1, min_ratio: 0.1 },
+        steps: opts.steps,
+        seed: opts.seed,
+        data: dataset,
+        eval_every: 0,
+        eval_batches: 4,
+        dominance_every: 0,
+        checkpoint_every: 0,
+        out_dir: opts.out.join(format!("sweep_{model}_{}", dataset.name())),
+        artifacts: opts.artifacts.clone(),
+        optimizer: String::new(),
+    };
+    run_grid(&cfg, &jobs, opts.workers)
+}
+
+/// Render one Tables-9..13-style block.
+pub fn format(model: &str, cells: &[SweepCell]) -> String {
+    format_table(model, cells)
+}
+
+/// Best (optimizer, lr, ppl) per optimizer.
+pub fn winners(cells: &[SweepCell]) -> Vec<(String, f64, f64)> {
+    let mut best: Vec<(String, f64, f64)> = Vec::new();
+    for c in cells {
+        match best.iter_mut().find(|(o, _, _)| *o == c.optimizer) {
+            Some(slot) => {
+                if c.final_ppl < slot.2 {
+                    slot.1 = c.lr;
+                    slot.2 = c.final_ppl;
+                }
+            }
+            None => best.push((c.optimizer.clone(), c.lr, c.final_ppl)),
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grids_match_paper_shape() {
+        // RMNP grids sit below Muon grids (paper Tables 9/10)
+        let muon = grid_for("muon");
+        let rmnp = grid_for("rmnp");
+        assert!(muon.iter().cloned().fold(f64::MAX, f64::min)
+            > rmnp.iter().cloned().fold(f64::MAX, f64::min));
+        assert!(muon.len() >= 3 && rmnp.len() >= 3);
+    }
+
+    #[test]
+    fn winners_pick_minimum() {
+        let cells = vec![
+            SweepCell { optimizer: "rmnp".into(), lr: 1e-3, final_ppl: 12.0,
+                        final_eval_loss: 0.0, seconds: 0.0 },
+            SweepCell { optimizer: "rmnp".into(), lr: 2e-3, final_ppl: 11.0,
+                        final_eval_loss: 0.0, seconds: 0.0 },
+            SweepCell { optimizer: "muon".into(), lr: 1e-2, final_ppl: 11.5,
+                        final_eval_loss: 0.0, seconds: 0.0 },
+        ];
+        let w = winners(&cells);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0], ("rmnp".to_string(), 2e-3, 11.0));
+    }
+}

@@ -1,0 +1,45 @@
+//! # RMNP — Row-Momentum Normalized Preconditioning
+//!
+//! A three-layer reproduction of *"RMNP: Row-Momentum Normalized
+//! Preconditioning for Scalable Matrix-Based Optimization"* (CS.LG 2026):
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the RMNP row-ℓ2
+//!   normalization and Muon's Newton–Schulz-5 orthogonalization.
+//! * **L2** — JAX compute graphs (`python/compile/`): transformer / SSM /
+//!   CNN models and fused train-step graphs per optimizer, AOT-lowered to
+//!   HLO text artifacts at build time.
+//! * **L3** — this crate: a training framework that loads the artifacts via
+//!   PJRT and runs every experiment in the paper — data pipeline, training
+//!   loop, LR schedules, metric logging, checkpointing, sweeps, and the
+//!   benchmark harnesses that regenerate each table and figure.
+//!
+//! Python never runs on the training path: `make artifacts` is the only
+//! step that invokes it.
+//!
+//! Module map:
+//!
+//! | module | role |
+//! |---|---|
+//! | [`tensor`] | minimal f32 matrix/tensor substrate (host-side math) |
+//! | [`util`] | RNG, logging, timers, small helpers |
+//! | [`config`] | TOML-subset parser + typed experiment configuration |
+//! | [`cli`] | hand-rolled argument parser and subcommand dispatch |
+//! | [`data`] | synthetic corpora, tokenizers, batch loader, image data |
+//! | [`optim`] | pure-rust reference optimizers (AdamW/Muon/RMNP/...) |
+//! | [`runtime`] | PJRT client, artifact registry, device-resident state |
+//! | [`coordinator`] | training loop, schedules, metrics, checkpoints, sweeps |
+//! | [`analysis`] | dominance ratios, smoothing, paper-style reports |
+//! | [`exp`] | one harness per paper table/figure |
+//! | [`bench`] | micro-benchmark harness (criterion-style, hand-rolled) |
+
+pub mod analysis;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,166 @@
+//! Property tests for the paper's lemmas (Appendix A.3), plus the
+//! dominance-metric implementation shared with the analysis pass.
+//!
+//! These are exact algebraic identities of the RN operator, so they are
+//! tested over randomized matrices at several scales — a seeded,
+//! shrinking-free proptest substrate (`for_random_matrices`).
+
+use crate::tensor::{dual_pairing, frobenius, inf2_norm, one2_norm, Matrix};
+use crate::util::Rng;
+
+/// Run `check` over `cases` random matrices with varied shapes and scales.
+pub fn for_random_matrices(seed: u64, cases: usize, check: impl Fn(&Matrix)) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let m = 1 + rng.below(24) as usize;
+        let n = 1 + rng.below(24) as usize;
+        let scale = [0.01f32, 1.0, 50.0][case % 3];
+        let mut mat = Matrix::randn(m, n, scale, &mut rng);
+        // keep rows bounded away from zero so RN is well-conditioned
+        for v in mat.data_mut() {
+            *v += 0.05 * v.signum().max(0.0) + 0.01;
+        }
+        check(&mat);
+    }
+}
+
+/// Dominance ratios (r_avg, r_min, r_max) of the Gram matrix V Vᵀ
+/// (Eqs. 5–6) — the host-side mirror of the `dom_*` artifacts.
+pub fn dominance_ratios(v: &Matrix) -> (f64, f64, f64) {
+    let vt;
+    let v = if v.rows() <= v.cols() {
+        v
+    } else {
+        vt = v.transpose();
+        &vt
+    };
+    let m = v.rows();
+    let gram = v.gram();
+    let mut sum = 0.0f64;
+    let mut rmin = f64::INFINITY;
+    let mut rmax = 0.0f64;
+    for i in 0..m {
+        let diag = gram.get(i, i).abs() as f64;
+        let mut off = 0.0f64;
+        for j in 0..m {
+            if j != i {
+                off += gram.get(i, j).abs() as f64;
+            }
+        }
+        let denom = (off / (m.max(2) - 1) as f64).max(1e-12);
+        let r = diag / denom;
+        sum += r;
+        rmin = rmin.min(r);
+        rmax = rmax.max(r);
+    }
+    (sum / m as f64, rmin, rmax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lemma_a1_frobenius_of_rn_is_sqrt_m() {
+        for_random_matrices(101, 60, |v| {
+            let d = v.row_normalize(1e-7);
+            let want = (v.rows() as f64).sqrt();
+            let got = frobenius(&d);
+            assert!((got - want).abs() < 1e-3 * want, "{got} vs {want}");
+        });
+    }
+
+    #[test]
+    fn lemma_a1_pairing_equals_one2_and_dominates_frobenius() {
+        for_random_matrices(102, 60, |v| {
+            let d = v.row_normalize(1e-7);
+            let pairing = dual_pairing(v, &d);
+            let o = one2_norm(v);
+            let f = frobenius(v);
+            assert!((pairing - o).abs() < 1e-3 * o.max(1.0), "{pairing} vs {o}");
+            assert!(pairing >= f - 1e-3 * o.max(1.0));
+        });
+    }
+
+    #[test]
+    fn lemma_a2_inf2_of_rn_is_one() {
+        for_random_matrices(103, 60, |v| {
+            let d = v.row_normalize(1e-7);
+            assert!((inf2_norm(&d) - 1.0).abs() < 1e-4);
+        });
+    }
+
+    #[test]
+    fn duality_inequality() {
+        let mut rng = Rng::new(104);
+        for _ in 0..60 {
+            let m = 1 + rng.below(16) as usize;
+            let n = 1 + rng.below(16) as usize;
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let b = Matrix::randn(m, n, 2.0, &mut rng);
+            assert!(
+                dual_pairing(&a, &b).abs()
+                    <= one2_norm(&a) * inf2_norm(&b) * (1.0 + 1e-5)
+            );
+        }
+    }
+
+    #[test]
+    fn one2_sqrt_m_frobenius_sandwich() {
+        for_random_matrices(105, 60, |v| {
+            let o = one2_norm(v);
+            let f = frobenius(v);
+            let m = v.rows() as f64;
+            assert!(f <= o * (1.0 + 1e-5));
+            assert!(o <= m.sqrt() * f * (1.0 + 1e-5));
+        });
+    }
+
+    #[test]
+    fn descent_lemma_a4_on_quadratic() {
+        // f(W) = L/2 ||W||², one RN step must satisfy
+        // f(W) - f(W') >= η⟨∇f, D⟩ - L η² m / 2 exactly.
+        let mut rng = Rng::new(106);
+        let lf = 2.0f64;
+        let eta = 0.05f64;
+        let mut w = Matrix::randn(6, 18, 1.0, &mut rng);
+        for _ in 0..30 {
+            let grad = {
+                let mut g = w.clone();
+                g.scale_inplace(lf as f32);
+                g
+            };
+            let d = grad.row_normalize(1e-7);
+            let w_next = w.axpby(1.0, &d, -(eta as f32));
+            let f_cur = 0.5 * lf * frobenius(&w).powi(2);
+            let f_next = 0.5 * lf * frobenius(&w_next).powi(2);
+            let rhs = eta * dual_pairing(&grad, &d) - lf * eta * eta * 6.0 / 2.0;
+            assert!(f_cur - f_next >= rhs - 1e-4, "descent lemma violated");
+            w = w_next;
+        }
+    }
+
+    #[test]
+    fn dominance_ratio_properties() {
+        for_random_matrices(107, 40, |v| {
+            let (avg, min, max) = dominance_ratios(v);
+            assert!(min <= avg + 1e-9 && avg <= max + 1e-9);
+            assert!(min > 0.0);
+        });
+        // orthogonal rows -> enormous ratios
+        let eye = Matrix::eye(8);
+        let (avg, min, _) = dominance_ratios(&eye);
+        assert!(avg > 1e6 && min > 1e6);
+        // identical rows -> ratios ~ 1
+        let mut rng = Rng::new(108);
+        let row = Matrix::randn(1, 32, 1.0, &mut rng);
+        let mut tiled = Matrix::zeros(8, 32);
+        for i in 0..8 {
+            for j in 0..32 {
+                tiled.set(i, j, row.get(0, j));
+            }
+        }
+        let (avg, _, _) = dominance_ratios(&tiled);
+        assert!((avg - 1.0).abs() < 1e-3, "avg {avg}");
+    }
+}

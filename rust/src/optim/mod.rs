@@ -1,0 +1,42 @@
+//! Pure-rust reference optimizers.
+//!
+//! Exact ports of the paper's Algorithm 1 (Muon), Algorithm 2 (RMNP) and
+//! AdamW over [`crate::tensor::Matrix`]. They serve three purposes:
+//!
+//! 1. **Cross-checking** — integration tests run the HLO train artifacts
+//!    and these references side by side on identical inputs.
+//! 2. **Property tests** — [`lemmas`] numerically verifies the identities
+//!    (Lemmas A.1/A.2) the convergence theory rests on.
+//! 3. **Host-side benchmarking** — the Table 2 bench can compare the PJRT
+//!    operator path against straightforward native implementations.
+
+pub mod adamw;
+pub mod lemmas;
+pub mod muon;
+pub mod rmnp;
+
+pub use adamw::AdamWState;
+pub use muon::{newton_schulz5, MuonState};
+pub use rmnp::RmnpState;
+
+/// Muon/RMNP momentum coefficient (paper Appendix B).
+pub const MATRIX_BETA: f32 = 0.95;
+/// Decoupled weight decay (paper Section 4.1).
+pub const WEIGHT_DECAY: f32 = 0.1;
+
+/// The RMS learning-rate shape correction max(1, sqrt(m/n)) (Eq. 17/18).
+pub fn rms_scale(rows: usize, cols: usize) -> f32 {
+    (rows as f32 / cols as f32).sqrt().max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rms_scale_values() {
+        assert_eq!(rms_scale(8, 8), 1.0);
+        assert_eq!(rms_scale(32, 8), 2.0);
+        assert_eq!(rms_scale(8, 32), 1.0);
+    }
+}

@@ -1,0 +1,324 @@
+//! Typed view over `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{parse, Json};
+
+/// Element type of a graph input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "float32" | "f32" => Dtype::F32,
+            "int32" | "i32" => Dtype::I32,
+            other => anyhow::bail!("unsupported dtype `{other}`"),
+        })
+    }
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+/// One named tensor slot of a graph.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+    pub fn byte_size(&self) -> usize {
+        self.elements() * self.dtype.bytes()
+    }
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let name = j
+            .idx(0)
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("bad tensor spec"))?
+            .to_string();
+        let shape = j
+            .idx(1)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("bad tensor shape"))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        let dtype = Dtype::parse(
+            j.idx(2).and_then(Json::as_str).unwrap_or("float32"),
+        )?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One lowered graph.
+#[derive(Clone, Debug)]
+pub struct GraphSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Per-(model, optimizer) artifact set.
+#[derive(Clone, Debug)]
+pub struct OptEntry {
+    pub train: String,
+    pub init: String,
+    pub eval: String,
+    pub dominance: Option<String>,
+    pub dom_indices: Vec<usize>,
+    pub dom_names: Vec<String>,
+    pub state_names: Vec<String>,
+    pub n_params: usize,
+}
+
+/// Per-model metadata.
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub family: String,
+    pub scale: String,
+    pub param_count: usize,
+    pub batch_specs: Vec<TensorSpec>,
+    pub optimizers: BTreeMap<String, OptEntry>,
+}
+
+/// Preconditioner-op metadata (Table 2 bench).
+#[derive(Clone, Debug)]
+pub struct PrecondOp {
+    pub ns5: String,
+    pub rownorm: String,
+    pub ns5_flops: f64,
+    pub rownorm_flops: f64,
+    pub vmem_bytes: f64,
+}
+
+/// One Table 4 model row for the precond bench.
+#[derive(Clone, Debug)]
+pub struct PrecondModel {
+    pub name: String,
+    pub layers: usize,
+    pub d_model: usize,
+    /// (shape, multiplicity within the model)
+    pub counts: Vec<((usize, usize), usize)>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub graphs: BTreeMap<String, GraphSpec>,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub precond_ops: BTreeMap<String, PrecondOp>,
+    pub precond_models: Vec<PrecondModel>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                path.display()
+            )
+        })?;
+        let j = parse(&text)?;
+        let mut man = Manifest {
+            dir: dir.to_path_buf(),
+            vocab: j.req("vocab")?.as_usize().unwrap_or(0),
+            ..Default::default()
+        };
+        for (name, g) in j.req("graphs")?.as_obj().into_iter().flatten() {
+            let parse_list = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                g.req(key)?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            man.graphs.insert(
+                name.clone(),
+                GraphSpec {
+                    name: name.clone(),
+                    file: g.req_str("file")?.to_string(),
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                },
+            );
+        }
+        for (tag, m) in j.req("models")?.as_obj().into_iter().flatten() {
+            let mut opts = BTreeMap::new();
+            for (opt, e) in m.req("optimizers")?.as_obj().into_iter().flatten() {
+                let strs = |key: &str| -> Vec<String> {
+                    e.get(key)
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|x| x.as_str().map(String::from))
+                        .collect()
+                };
+                opts.insert(
+                    opt.clone(),
+                    OptEntry {
+                        train: e.req_str("train")?.to_string(),
+                        init: e.req_str("init")?.to_string(),
+                        eval: e.req_str("eval")?.to_string(),
+                        dominance: e
+                            .get("dominance")
+                            .and_then(Json::as_str)
+                            .map(String::from),
+                        dom_indices: e
+                            .get("dom_indices")
+                            .and_then(Json::as_arr)
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(Json::as_usize)
+                            .collect(),
+                        dom_names: strs("dom_names"),
+                        state_names: strs("state_names"),
+                        n_params: e
+                            .get("n_params")
+                            .and_then(Json::as_usize)
+                            .unwrap_or(0),
+                    },
+                );
+            }
+            man.models.insert(
+                tag.clone(),
+                ModelEntry {
+                    family: m.req_str("family")?.to_string(),
+                    scale: m.req_str("scale")?.to_string(),
+                    param_count: m
+                        .get("param_count")
+                        .and_then(Json::as_usize)
+                        .unwrap_or(0),
+                    batch_specs: m
+                        .req("batch_specs")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<anyhow::Result<_>>()?,
+                    optimizers: opts,
+                },
+            );
+        }
+        if let Some(pre) = j.get("precond") {
+            for (shape, op) in pre.req("ops")?.as_obj().into_iter().flatten() {
+                man.precond_ops.insert(
+                    shape.clone(),
+                    PrecondOp {
+                        ns5: op.req_str("ns5")?.to_string(),
+                        rownorm: op.req_str("rownorm")?.to_string(),
+                        ns5_flops: op
+                            .get("ns5_flops")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0),
+                        rownorm_flops: op
+                            .get("rownorm_flops")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0),
+                        vmem_bytes: op
+                            .get("vmem_bytes")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(0.0),
+                    },
+                );
+            }
+            for m in pre.req("per_model")?.as_arr().unwrap_or(&[]) {
+                let counts = m
+                    .req("counts")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|c| {
+                        let shape = c.idx(0)?;
+                        Some((
+                            (
+                                shape.idx(0)?.as_usize()?,
+                                shape.idx(1)?.as_usize()?,
+                            ),
+                            c.idx(1)?.as_usize()?,
+                        ))
+                    })
+                    .collect();
+                man.precond_models.push(PrecondModel {
+                    name: m.req_str("name")?.to_string(),
+                    layers: m.get("layers").and_then(Json::as_usize).unwrap_or(0),
+                    d_model: m.get("d_model").and_then(Json::as_usize).unwrap_or(0),
+                    counts,
+                });
+            }
+        }
+        Ok(man)
+    }
+
+    pub fn graph(&self, name: &str) -> anyhow::Result<&GraphSpec> {
+        self.graphs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("manifest: unknown graph `{name}`"))
+    }
+
+    pub fn model(&self, tag: &str) -> anyhow::Result<&ModelEntry> {
+        self.models
+            .get(tag)
+            .ok_or_else(|| anyhow::anyhow!("manifest: unknown model `{tag}`"))
+    }
+
+    pub fn opt_entry(&self, model: &str, opt: &str) -> anyhow::Result<&OptEntry> {
+        self.model(model)?.optimizers.get(opt).ok_or_else(|| {
+            anyhow::anyhow!("manifest: model `{model}` has no optimizer `{opt}`")
+        })
+    }
+
+    pub fn graph_path(&self, name: &str) -> anyhow::Result<PathBuf> {
+        Ok(self.dir.join(&self.graph(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = Manifest::load(dir).unwrap();
+        assert_eq!(man.vocab, 512);
+        assert!(man.models.contains_key("gpt2_tiny"));
+        let e = man.opt_entry("gpt2_tiny", "rmnp").unwrap();
+        assert!(e.n_params > 0);
+        assert_eq!(e.state_names.len() > e.n_params, true);
+        let g = man.graph(&e.train).unwrap();
+        // train inputs = state + tokens + lr
+        assert_eq!(g.inputs.len(), e.state_names.len() + 2);
+        // dominance indices point at matrix momenta
+        for (i, name) in e.dom_indices.iter().zip(&e.dom_names) {
+            assert_eq!(&e.state_names[*i], name);
+        }
+        assert!(!man.precond_ops.is_empty());
+        assert_eq!(man.precond_models.len(), 8);
+    }
+
+    #[test]
+    fn missing_file_is_friendly() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

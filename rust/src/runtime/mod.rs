@@ -1,0 +1,196 @@
+//! PJRT runtime: artifact loading, executable caching, device-resident
+//! training sessions.
+//!
+//! The flow (see DESIGN.md §2):
+//!
+//! 1. [`manifest::Manifest`] indexes every HLO-text artifact.
+//! 2. [`Engine`] owns the PJRT CPU client and a compile cache.
+//! 3. [`session::TrainSession`] holds the model/optimizer state as live
+//!    `PjRtBuffer`s and steps it with the patched `execute_b_untupled`,
+//!    so only the per-step batch (and three scalar metrics) cross the
+//!    host↔device boundary.
+
+pub mod manifest;
+pub mod session;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+pub use manifest::{Dtype, GraphSpec, Manifest, TensorSpec};
+pub use session::{StepMetrics, TrainSession};
+
+/// PJRT client + compiled-executable cache over one artifact directory.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create the CPU engine for an artifact directory.
+    pub fn new(artifacts: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(artifacts)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Compile (or fetch from cache) a graph by manifest name.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> anyhow::Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.graph_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf8 path"),
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Upload an i32 tensor (hot path: direct host-buffer transfer, no
+    /// intermediate Literal — see EXPERIMENTS.md §Perf L3-1).
+    pub fn upload_i32(
+        &self,
+        data: &[i32],
+        shape: &[usize],
+    ) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow::anyhow!("upload i32: {e}"))
+    }
+
+    /// Upload an f32 tensor (hot path, as above).
+    pub fn upload_f32(
+        &self,
+        data: &[f32],
+        shape: &[usize],
+    ) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, shape, None)
+            .map_err(|e| anyhow::anyhow!("upload f32: {e}"))
+    }
+
+    /// Upload via an intermediate Literal (the pre-perf-pass path; kept so
+    /// `cargo bench --bench train_step` can report the A/B delta).
+    pub fn upload_i32_via_literal(
+        &self,
+        data: &[i32],
+        shape: &[usize],
+    ) -> anyhow::Result<xla::PjRtBuffer> {
+        let lit = literal_i32(data, shape)?;
+        self.client
+            .buffer_from_host_literal(None, &lit)
+            .map_err(|e| anyhow::anyhow!("upload i32: {e}"))
+    }
+
+    /// Fetch a scalar f32 output buffer.
+    pub fn fetch_scalar_f32(&self, buf: &xla::PjRtBuffer) -> anyhow::Result<f32> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e}"))?;
+        let v = lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("scalar: {e}"))?;
+        v.first()
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("empty scalar buffer"))
+    }
+
+    /// Fetch a full f32 tensor. Integer buffers (the scalar step counter
+    /// "t") are returned through their raw bits so checkpoint round-trips
+    /// stay exact.
+    pub fn fetch_f32(&self, buf: &xla::PjRtBuffer) -> anyhow::Result<Vec<f32>> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e}"))?;
+        match lit.ty() {
+            Ok(xla::ElementType::S32) => Ok(lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("to_vec i32: {e}"))?
+                .into_iter()
+                .map(|x| f32::from_bits(x as u32))
+                .collect()),
+            _ => lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}")),
+        }
+    }
+}
+
+/// Build an i32 literal with a shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}
+
+/// Build an f32 literal with a shape.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e}"))
+}
+
+/// Global serializer for tests that create PJRT clients: concurrent client
+/// creation/destruction in one process segfaults in xla_extension 0.5.1.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Engine::new(dir).unwrap())
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let _guard = test_lock();
+        let Some(eng) = engine() else { return };
+        let name = eng.manifest.opt_entry("gpt2_tiny", "rmnp").unwrap().eval.clone();
+        let a = eng.executable(&name).unwrap();
+        let b = eng.executable(&name).unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+        assert_eq!(eng.cached(), 1);
+    }
+
+    #[test]
+    fn upload_roundtrip() {
+        let _guard = test_lock();
+        let Some(eng) = engine() else { return };
+        let buf = eng.upload_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let back = eng.fetch_f32(&buf).unwrap();
+        assert_eq!(back, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Dense row-major f32 matrix with exactly the operations the optimizer
+//! references and analysis passes need. Matmul is cache-blocked; everything
+//! else is straightforward slice arithmetic.
+
+use crate::util::Rng;
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix from an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Gaussian-initialized matrix with the given std.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, std);
+        m
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Borrow row `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transpose into a new matrix.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Cache-blocked matmul: `self (m×k) · other (k×n)`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        const BK: usize = 64;
+        for kk in (0..k).step_by(BK) {
+            let kend = (kk + BK).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for p in kk..kend {
+                    let a = arow[p];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &other.data[p * n..(p + 1) * n];
+                    for j in 0..n {
+                        orow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Gram matrix `self · selfᵀ` (m×m), the object whose diagonal
+    /// dominance Section 3.2 of the paper measures.
+    pub fn gram(&self) -> Matrix {
+        let m = self.rows;
+        let mut out = Matrix::zeros(m, m);
+        for i in 0..m {
+            let ri = self.row(i);
+            for j in i..m {
+                let rj = self.row(j);
+                let dot: f32 = ri.iter().zip(rj).map(|(a, b)| a * b).sum();
+                out.data[i * m + j] = dot;
+                out.data[j * m + i] = dot;
+            }
+        }
+        out
+    }
+
+    /// Elementwise: out = a*self + b*other.
+    pub fn axpby(&self, a: f32, other: &Matrix, b: f32) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(x, y)| a * x + b * y)
+            .collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place scale.
+    pub fn scale_inplace(&mut self, a: f32) {
+        for v in &mut self.data {
+            *v *= a;
+        }
+    }
+
+    /// Row-wise ℓ2 norms, `‖V_{i,:}‖₂` for each i.
+    pub fn row_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|x| x * x).sum::<f32>().sqrt())
+            .collect()
+    }
+
+    /// The RMNP preconditioned direction: row-wise ℓ2 normalization
+    /// `RN(V)_{i,:} = V_{i,:} / max(‖V_{i,:}‖₂, eps)` (Algorithm 2, line 5).
+    pub fn row_normalize(&self, eps: f32) -> Matrix {
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let norm = self.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
+            let inv = 1.0 / norm.max(eps);
+            for v in &mut out.data[i * self.cols..(i + 1) * self.cols] {
+                *v *= inv;
+            }
+        }
+        out
+    }
+
+    /// Maximum absolute element.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(7, 5, 1.0, &mut rng);
+        let c = a.matmul(&Matrix::eye(5));
+        for (x, y) in a.data().iter().zip(c.data()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(33, 65, 1.0, &mut rng);
+        let b = Matrix::randn(65, 17, 1.0, &mut rng);
+        let c = a.matmul(&b);
+        // naive triple loop
+        for i in 0..33 {
+            for j in 0..17 {
+                let mut s = 0.0f32;
+                for k in 0..65 {
+                    s += a.get(i, k) * b.get(k, j);
+                }
+                assert!((s - c.get(i, j)).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(4, 9, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(6, 11, 1.0, &mut rng);
+        let g1 = a.gram();
+        let g2 = a.matmul(&a.transpose());
+        for (x, y) in g1.data().iter().zip(g2.data()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn row_normalize_unit_rows() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(8, 16, 2.0, &mut rng);
+        let d = a.row_normalize(1e-12);
+        for n in d.row_norms() {
+            assert!((n - 1.0).abs() < 1e-5, "row norm {n}");
+        }
+    }
+
+    #[test]
+    fn row_normalize_zero_row_safe() {
+        let a = Matrix::zeros(3, 4);
+        let d = a.row_normalize(1e-8);
+        assert!(d.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn axpby_linear() {
+        let a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Matrix::from_vec(1, 3, vec![10.0, 10.0, 10.0]);
+        let c = a.axpby(2.0, &b, 0.5);
+        assert_eq!(c.data(), &[7.0, 9.0, 11.0]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Host-side f32 matrix substrate.
+//!
+//! The PJRT artifacts do all heavy compute; this module exists so the crate
+//! can (a) run exact pure-rust reference implementations of every optimizer
+//! for cross-checking the HLO path, (b) compute analysis metrics (Gram
+//! diagonal dominance) on checkpoints, and (c) property-test the paper's
+//! lemmas without any Python in the loop.
+
+mod matrix;
+mod norms;
+
+pub use matrix::Matrix;
+pub use norms::{dual_pairing, frobenius, inf2_norm, one2_norm};

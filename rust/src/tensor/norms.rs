@@ -1,0 +1,91 @@
+//! The matrix norms used throughout the paper's theory (Section 5.1):
+//! Frobenius ‖·‖F, the mixed norm ‖·‖₁,₂ = Σᵢ‖row i‖₂, and
+//! ‖·‖∞,₂ = maxᵢ‖row i‖₂, together with the trace inner product. These back
+//! the property tests for Lemmas A.1/A.2 (`crate::optim::lemmas`).
+
+use super::Matrix;
+
+/// Frobenius norm ‖W‖F.
+pub fn frobenius(w: &Matrix) -> f64 {
+    w.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Mixed norm ‖W‖₁,₂ = Σᵢ ‖W_{i,:}‖₂.
+pub fn one2_norm(w: &Matrix) -> f64 {
+    (0..w.rows())
+        .map(|i| {
+            w.row(i)
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .sum()
+}
+
+/// Norm ‖W‖∞,₂ = maxᵢ ‖W_{i,:}‖₂.
+pub fn inf2_norm(w: &Matrix) -> f64 {
+    (0..w.rows())
+        .map(|i| {
+            w.row(i)
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .fold(0.0f64, f64::max)
+}
+
+/// Trace inner product ⟨Z, W⟩ = Tr(Zᵀ W) = Σᵢⱼ ZᵢⱼWᵢⱼ.
+pub fn dual_pairing(z: &Matrix, w: &Matrix) -> f64 {
+    assert_eq!((z.rows(), z.cols()), (w.rows(), w.cols()));
+    z.data()
+        .iter()
+        .zip(w.data())
+        .map(|(&a, &b)| (a as f64) * (b as f64))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn frobenius_known() {
+        let w = Matrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]);
+        assert!((frobenius(&w) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn norm_ordering() {
+        // ‖W‖∞,₂ ≤ ‖W‖F ≤ ‖W‖₁,₂ ≤ √m ‖W‖F for any W.
+        let mut rng = Rng::new(8);
+        for _ in 0..20 {
+            let m = 1 + rng.below(12) as usize;
+            let n = 1 + rng.below(12) as usize;
+            let w = Matrix::randn(m, n, 1.0, &mut rng);
+            let f = frobenius(&w);
+            let o = one2_norm(&w);
+            let i = inf2_norm(&w);
+            assert!(i <= f + 1e-6);
+            assert!(f <= o + 1e-6);
+            assert!(o <= (m as f64).sqrt() * f + 1e-6);
+        }
+    }
+
+    #[test]
+    fn pairing_duality_bound() {
+        // |⟨A,B⟩| ≤ ‖A‖₁,₂ ‖B‖∞,₂ (Section 5.1).
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let m = 1 + rng.below(10) as usize;
+            let n = 1 + rng.below(10) as usize;
+            let a = Matrix::randn(m, n, 1.5, &mut rng);
+            let b = Matrix::randn(m, n, 0.7, &mut rng);
+            let lhs = dual_pairing(&a, &b).abs();
+            let rhs = one2_norm(&a) * inf2_norm(&b);
+            assert!(lhs <= rhs + 1e-6, "lhs {lhs} rhs {rhs}");
+        }
+    }
+}

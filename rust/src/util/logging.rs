@@ -1,0 +1,76 @@
+//! Minimal leveled logging to stderr. The verbosity is a process-global so
+//! the CLI can set it once; defaults to `Info`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Log severity.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static VERBOSITY: AtomicU8 = AtomicU8::new(1);
+
+/// Set the minimum level that will be printed.
+pub fn set_level(level: Level) {
+    VERBOSITY.store(level as u8, Ordering::Relaxed);
+}
+
+/// Current minimum level.
+pub fn level() -> Level {
+    match VERBOSITY.load(Ordering::Relaxed) {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+/// Emit one log line if `lvl` passes the filter.
+pub fn log_line(lvl: Level, msg: &str) {
+    if lvl < level() {
+        return;
+    }
+    let secs = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    let tag = match lvl {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    eprintln!("[{secs:.3} {tag}] {msg}");
+}
+
+/// `info!`-style convenience macros.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::log_line($crate::util::Level::Info, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warnln {
+    ($($arg:tt)*) => { $crate::util::log_line($crate::util::Level::Warn, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! debugln {
+    ($($arg:tt)*) => { $crate::util::log_line($crate::util::Level::Debug, &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_roundtrip() {
+        set_level(Level::Warn);
+        assert_eq!(level(), Level::Warn);
+        set_level(Level::Info);
+        assert_eq!(level(), Level::Info);
+    }
+}

@@ -1,0 +1,94 @@
+//! Wall-clock timing helpers used by the training loop and the bench
+//! harness. A `Timer` accumulates named spans so the coordinator can report
+//! a breakdown (data / upload / execute / metrics) per step window.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Accumulating multi-span timer.
+#[derive(Default)]
+pub struct Timer {
+    spans: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl Timer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`, accumulating into the span total.
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    /// Add an externally measured duration.
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        *self.spans.entry(name).or_default() += d;
+        *self.counts.entry(name).or_default() += 1;
+    }
+
+    /// Total accumulated seconds for a span.
+    pub fn seconds(&self, name: &str) -> f64 {
+        self.spans.get(name).map(|d| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    /// Number of samples accumulated for a span.
+    pub fn count(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or(0)
+    }
+
+    /// Reset all spans.
+    pub fn reset(&mut self) {
+        self.spans.clear();
+        self.counts.clear();
+    }
+
+    /// One-line report: `data=0.12s(10) exec=1.40s(10)`.
+    pub fn report(&self) -> String {
+        let mut parts = Vec::new();
+        for (name, d) in &self.spans {
+            parts.push(format!(
+                "{name}={:.3}s({})",
+                d.as_secs_f64(),
+                self.counts[name]
+            ));
+        }
+        parts.join(" ")
+    }
+}
+
+/// Measure a closure once, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_spans() {
+        let mut t = Timer::new();
+        t.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        t.time("a", || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(t.count("a"), 2);
+        assert!(t.seconds("a") >= 0.004);
+        assert_eq!(t.count("missing"), 0);
+        assert!(t.report().contains("a="));
+        t.reset();
+        assert_eq!(t.count("a"), 0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

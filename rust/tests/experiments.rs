@@ -1,0 +1,99 @@
+//! Experiment-harness integration tests: tiny-budget versions of each
+//! paper experiment, verifying the harness plumbing end to end (the full
+//! budgets are exercised by `rmnp exp ...` and recorded in
+//! EXPERIMENTS.md). Serialized like integration.rs.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use rmnp::config::DataSpec;
+use rmnp::exp::{cliprate, dominance_exp, precond, pretrain, sweeps, ExpOpts};
+use rmnp::runtime::Engine;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn opts(name: &str, steps: usize) -> Option<ExpOpts> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let out = std::env::temp_dir().join(format!("rmnp-exp-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out);
+    Some(ExpOpts { steps, out, workers: 1, ..Default::default() })
+}
+
+#[test]
+fn precond_bench_small_configs() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(o) = opts("precond", 0) else { return };
+    // cap at d=768 so the test stays fast; 2 repeats
+    let rows = precond::run(&o, 768, 2).unwrap();
+    assert_eq!(rows.len(), 2, "60M + 125M configs");
+    for r in &rows {
+        assert!(r.speedup > 1.0, "RMNP must beat NS5: {r:?}");
+        assert!(r.muon_100steps > 0.0 && r.rmnp_100steps > 0.0);
+    }
+    assert!(
+        rows[1].speedup > rows[0].speedup * 0.5,
+        "speedup roughly non-collapsing: {rows:?}"
+    );
+    let table = precond::format_table(&rows);
+    assert!(table.contains("Speedup"));
+}
+
+#[test]
+fn pretrain_compare_tiny() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(o) = opts("pretrain", 12) else { return };
+    let grid = pretrain::compare(
+        &o, "gpt2", &["tiny"], &["adamw", "rmnp"], DataSpec::Markov, 1,
+    )
+    .unwrap();
+    assert_eq!(grid.ppl.len(), 2);
+    assert!(grid.ppl[0][0].is_finite() && grid.ppl[1][0].is_finite());
+    let rendered = pretrain::format_grid(&grid, "test");
+    assert!(rendered.contains("ADAMW") && rendered.contains("RMNP"));
+}
+
+#[test]
+fn sweep_grid_runs_and_orders() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(mut o) = opts("sweep", 10) else { return };
+    o.workers = 2; // exercise the multi-worker path
+    let cells = sweeps::run(&o, "gpt2_tiny", &["rmnp"], DataSpec::Markov).unwrap();
+    assert_eq!(cells.len(), sweeps::grid_for("rmnp").len());
+    let w = sweeps::winners(&cells);
+    assert_eq!(w.len(), 1);
+    assert!(cells.iter().any(|c| (c.final_ppl - w[0].2).abs() < 1e-9));
+}
+
+#[test]
+fn dominance_exp_reproduces_claim_even_at_tiny_budget() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(o) = opts("dom", 30) else { return };
+    let engine = Engine::new(&o.artifacts).unwrap();
+    let run = dominance_exp::run_one(&o, &engine, "gpt2_tiny", "muon", DataSpec::Markov)
+        .unwrap();
+    assert!(run.global.steps.len() >= 10);
+    assert_eq!(run.representative.len(), 3);
+    // the structural claim (Figure 4/5): ratios sit above 1 from early on
+    assert!(
+        dominance_exp::reproduces_dominance(&run),
+        "tail means: {:?}",
+        run.global.tail_means()
+    );
+    let txt = dominance_exp::format_per_param(&run);
+    assert!(txt.contains("r_avg"));
+}
+
+#[test]
+fn cliprate_scan_reads_runs() {
+    let _guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(o) = opts("clip", 15) else { return };
+    // produce one pretrain run, then scan it
+    pretrain::compare(&o, "gpt2", &["tiny"], &["rmnp"], DataSpec::Markov, 1).unwrap();
+    let summaries = cliprate::scan(&o.out).unwrap();
+    assert!(!summaries.is_empty());
+    assert!(summaries[0].steps == 15);
+    assert!(cliprate::format(&summaries).contains("rolling mean"));
+}
