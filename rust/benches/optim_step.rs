@@ -1,0 +1,137 @@
+//! `cargo bench --bench optim_step` — native optimizer-step latency: the
+//! fused RMNP sweep and workspace-backed Muon NS5 step against seed-style
+//! unfused baselines, plus AdamW throughput. Writes
+//! `BENCH_train_step.json` so per-step cost is tracked across PRs (the
+//! `pjrt` train_step bench overwrites it with artifact-path numbers when
+//! it runs).
+
+use std::path::Path;
+
+use rmnp::bench::report::{self, bench_json, envelope, num, obj, text};
+use rmnp::bench::{bench_n, fmt_secs};
+use rmnp::optim::{
+    newton_schulz5_naive, rms_scale, AdamWState, MuonState, RmnpState, MATRIX_BETA,
+};
+use rmnp::tensor::Matrix;
+use rmnp::util::{Json, Rng};
+
+struct Case {
+    op: String,
+    rows: usize,
+    cols: usize,
+    fused: f64,
+    seed: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let repeats: usize = std::env::var("BENCH_REPEATS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    let mut rng = Rng::new(42);
+    let mut cases: Vec<Case> = Vec::new();
+
+    println!("fused RMNP step vs seed-style unfused step:");
+    for (m, n) in [(768usize, 768usize), (3072, 768), (768, 3072)] {
+        let g = Matrix::randn(m, n, 0.02, &mut rng);
+        let mut w = Matrix::randn(m, n, 0.02, &mut rng);
+        let mut st = RmnpState::new(m, n);
+        let fused = bench_n(&format!("rmnp_fused_{m}x{n}"), 20, repeats, || {
+            st.step(&mut w, &g, 1e-3);
+        });
+        let mut w2 = Matrix::randn(m, n, 0.02, &mut rng);
+        let mut st2 = RmnpState::new(m, n);
+        let seed = bench_n(&format!("rmnp_seed_{m}x{n}"), 20, repeats, || {
+            st2.step_unfused(&mut w2, &g, 1e-3);
+        });
+        println!("  {}", fused.report_line());
+        println!("  {}", seed.report_line());
+        println!("  -> {:.2}x", seed.median() / fused.median());
+        cases.push(Case {
+            op: "rmnp_step".into(),
+            rows: m,
+            cols: n,
+            fused: fused.median(),
+            seed: seed.median(),
+        });
+    }
+
+    println!("\nworkspace Muon step vs seed-style NS5 step:");
+    for (m, n) in [(256usize, 1024usize), (512, 512)] {
+        let g = Matrix::randn(m, n, 0.02, &mut rng);
+        let mut w = Matrix::randn(m, n, 0.02, &mut rng);
+        let mut st = MuonState::new(m, n);
+        let fused = bench_n(&format!("muon_ws_{m}x{n}"), 1, repeats, || {
+            st.step(&mut w, &g, 1e-3);
+        });
+        // seed-style: allocating axpby momentum + scalar-kernel NS5
+        let mut w2 = Matrix::randn(m, n, 0.02, &mut rng);
+        let mut mom = Matrix::zeros(m, n);
+        let scale = 1e-3 * rms_scale(m, n);
+        let seed = bench_n(&format!("muon_seed_{m}x{n}"), 1, repeats, || {
+            mom = mom.axpby(MATRIX_BETA, &g, 1.0 - MATRIX_BETA);
+            let d = newton_schulz5_naive(&mom, 5);
+            for (wv, dv) in w2.data_mut().iter_mut().zip(d.data()) {
+                *wv -= scale * (dv + 0.1 * *wv);
+            }
+        });
+        println!("  {}", fused.report_line());
+        println!("  {}", seed.report_line());
+        println!("  -> {:.2}x", seed.median() / fused.median());
+        cases.push(Case {
+            op: "muon_step".into(),
+            rows: m,
+            cols: n,
+            fused: fused.median(),
+            seed: seed.median(),
+        });
+    }
+
+    println!("\nAdamW flat-buffer step:");
+    let len = 768 * 768;
+    let mut st = AdamWState::new(len);
+    let mut w = vec![0.02f32; len];
+    let grad = vec![0.01f32; len];
+    let adamw = bench_n("adamw_589k", 20, repeats, || {
+        st.step(&mut w, &grad, 1e-3);
+    });
+    println!(
+        "  {}  ({:.1}M params/s)",
+        adamw.report_line(),
+        len as f64 / adamw.median() / 1e6
+    );
+
+    // fused/workspace paths must not be slower than the seed baselines
+    for c in &cases {
+        let ratio = c.seed / c.fused.max(1e-12);
+        assert!(
+            ratio > 0.9,
+            "{} {}x{} regressed vs seed path: {ratio:.2}x",
+            c.op, c.rows, c.cols
+        );
+    }
+
+    let entries: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("op", text(&c.op)),
+                ("rows", report::int(c.rows)),
+                ("cols", report::int(c.cols)),
+                ("fused_median_s", num(c.fused)),
+                ("seed_median_s", num(c.seed)),
+                ("improvement", num(c.seed / c.fused.max(1e-12))),
+            ])
+        })
+        .collect();
+    let doc = envelope(
+        "train_step_native",
+        vec![
+            ("steps", Json::Arr(entries)),
+            ("adamw", bench_json(&adamw)),
+        ],
+    );
+    report::write(Path::new("BENCH_train_step.json"), &doc)?;
+    println!("\nwrote BENCH_train_step.json ({})", fmt_secs(adamw.median()));
+    Ok(())
+}

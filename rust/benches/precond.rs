@@ -1,36 +1,71 @@
-//! `cargo bench --bench precond` — regenerates paper Table 2/3 + Figure 1:
-//! preconditioner wall-clock, Muon NS5 vs RMNP row normalization, over the
-//! Table 4 GPT-2 shape sets. Pass `--max-d N` via BENCH_MAX_D to cap the
-//! largest config (full sweep to d=1600 takes several minutes of NS5 time
-//! on CPU).
+//! `cargo bench --bench precond` — regenerates paper Table 2/3 + Figure 1
+//! on the native kernel layer: preconditioner wall-clock, Muon NS5 vs RMNP
+//! row normalization, over the GPT-2 shape sets, plus the seed-vs-kernel
+//! before/after deltas. Writes the machine-readable `BENCH_precond.json`
+//! (in the package root) so the perf trajectory is comparable across PRs.
+//!
+//! Env knobs: `BENCH_MAX_D` caps the largest d_model (default 640; the
+//! full native sweep to 768 takes a couple of minutes of NS5 time on CPU),
+//! `BENCH_REPEATS` sets samples per measurement (default 2), and
+//! `RMNP_THREADS` pins the kernel thread count.
 
-use rmnp::exp::{precond, ExpOpts};
+use std::path::Path;
+
+use rmnp::bench::report;
+use rmnp::exp::precond;
 
 fn main() -> anyhow::Result<()> {
     let max_d: usize = std::env::var("BENCH_MAX_D")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(0);
+        .unwrap_or(640);
     let repeats: usize = std::env::var("BENCH_REPEATS")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(3);
-    let opts = ExpOpts::default();
-    let rows = precond::run(&opts, max_d, repeats)?;
+        .unwrap_or(2);
+    println!(
+        "native precond bench: max_d={max_d} repeats={repeats} threads={}",
+        rmnp::tensor::kernels::num_threads()
+    );
+
+    let rows = precond::run_native(max_d, repeats);
+    anyhow::ensure!(!rows.is_empty(), "BENCH_MAX_D={max_d} excluded every config");
     println!("{}", precond::format_table(&rows));
     println!("{}", precond::format_figure1(&rows));
+
     // reproduction checks: RMNP always wins and the gap grows with d_model
     let speedups: Vec<f64> = rows.iter().map(|r| r.speedup).collect();
     assert!(speedups.iter().all(|&s| s > 1.0), "RMNP must win every size");
     if speedups.len() >= 3 {
         let first = speedups.first().unwrap();
         let last = speedups.last().unwrap();
-        // On GPU the gap grows monotonically (paper Table 2); on CPU PJRT
-        // the small/mid sizes are flatter because the whole NS5 chain still
+        // On GPU the gap grows monotonically (paper Table 2); on CPU the
+        // small/mid sizes are flatter because the whole NS5 chain still
         // fits cache. Warn rather than fail if the trend is noisy.
         if last <= first {
             eprintln!("WARNING: speedup did not grow with size: {speedups:?}");
         }
     }
+
+    // before/after: seed scalar paths vs the kernel layer. d=512 is the
+    // acceptance floor and is always measured; 640 joins when the cap
+    // allows it (max_d == 0 means uncapped).
+    let compare_ds: Vec<usize> = [512usize, 640]
+        .into_iter()
+        .filter(|&d| d == 512 || max_d == 0 || d <= max_d)
+        .collect();
+    let deltas = precond::seed_vs_kernel(&compare_ds, repeats.clamp(1, 2));
+    println!("seed scalar path vs kernel layer (same op, same shape):");
+    for d in &deltas {
+        println!(
+            "  {:<8} d={:<5} ({}x{}): seed {:>10.4}s  kernel {:>10.4}s  -> {:.2}x",
+            d.op, d.d_model, d.rows, d.cols, d.seed_median, d.kernel_median,
+            d.improvement
+        );
+    }
+
+    let doc = precond::json_report(&rows, &deltas, max_d);
+    report::write(Path::new("BENCH_precond.json"), &doc)?;
+    println!("wrote BENCH_precond.json");
     Ok(())
 }

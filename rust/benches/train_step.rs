@@ -1,13 +1,19 @@
-//! `cargo bench --bench train_step` — end-to-end step latency per
-//! (model, optimizer): the figure-6-protocol cost view. Reports median
-//! step time and the share of it attributable to the L3 host path
-//! (upload + metric fetch), which the perf pass drives below 5%.
+//! `cargo bench --bench train_step --features pjrt` — end-to-end step
+//! latency per (model, optimizer): the figure-6-protocol cost view.
+//! Reports median step time and the share of it attributable to the L3
+//! host path (upload + metric fetch), which the perf pass drives below
+//! 5%. Overwrites `BENCH_train_step.json` (native numbers come from
+//! `cargo bench --bench optim_step`) with the artifact-path measurements.
 
+use std::path::Path;
+
+use rmnp::bench::report::{self, bench_json, envelope, num};
 use rmnp::bench::{bench_n, fmt_secs};
 use rmnp::config::DataSpec;
 use rmnp::data::corpus::token_source;
 use rmnp::runtime::session::{Batch, TrainSession};
 use rmnp::runtime::Engine;
+use rmnp::util::Json;
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::new(std::path::Path::new("artifacts"))?;
@@ -20,6 +26,7 @@ fn main() -> anyhow::Result<()> {
         ("llama_s60", "muon"),
         ("llama_s60", "rmnp"),
     ];
+    let mut results: Vec<Json> = Vec::new();
     println!("train-step latency (device-resident loop, batch from manifest):");
     for (model, opt) in cases {
         let mut sess = TrainSession::new(&engine, model, opt, 1)?;
@@ -30,6 +37,7 @@ fn main() -> anyhow::Result<()> {
             sess.step(&Batch::Tokens(&tokens), 1e-3).expect("step");
         });
         println!("  {}", r.report_line());
+        results.push(bench_json(&r));
     }
     // host-path overhead: time upload alone vs a full step
     let mut sess = TrainSession::new(&engine, "gpt2_small", "rmnp", 1)?;
@@ -59,5 +67,18 @@ fn main() -> anyhow::Result<()> {
         100.0 * overhead
     );
     assert!(overhead < 0.10, "host path must stay <10% of step time");
+
+    let doc = envelope(
+        "train_step_pjrt",
+        vec![
+            ("results", Json::Arr(results)),
+            ("upload_direct", bench_json(&up)),
+            ("upload_via_literal", bench_json(&up_lit)),
+            ("full_step", bench_json(&step)),
+            ("host_path_share", num(overhead)),
+        ],
+    );
+    report::write(Path::new("BENCH_train_step.json"), &doc)?;
+    println!("wrote BENCH_train_step.json");
     Ok(())
 }

@@ -7,6 +7,8 @@
 //! call on CPU) automatically degrade to fewer iterations instead of
 //! blowing the time budget.
 
+pub mod report;
+
 use std::time::Instant;
 
 use crate::util::{mean, percentile};

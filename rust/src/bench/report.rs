@@ -1,0 +1,97 @@
+//! Machine-readable benchmark reports.
+//!
+//! Each bench binary assembles a [`crate::util::Json`] document and writes
+//! it next to the package root (`BENCH_precond.json`,
+//! `BENCH_train_step.json`, …) so the perf trajectory stays comparable
+//! across PRs: every run records the kernel thread count, the measured
+//! medians, and the derived speedups/improvements. `scripts/bench_check.sh`
+//! parses these files to gate regressions.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::bench::BenchResult;
+use crate::util::Json;
+
+/// Build a JSON object from key/value pairs (keys are sorted by BTreeMap,
+/// which keeps the files diff-stable).
+pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut map = BTreeMap::new();
+    for (k, v) in pairs {
+        map.insert(k.to_string(), v);
+    }
+    Json::Obj(map)
+}
+
+/// Shorthand constructors.
+pub fn num(x: f64) -> Json {
+    Json::Num(x)
+}
+pub fn int(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+pub fn text(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+/// One measured result as a JSON object (seconds per iteration).
+pub fn bench_json(r: &BenchResult) -> Json {
+    obj(vec![
+        ("name", text(&r.name)),
+        ("median_s", num(r.median())),
+        ("mean_s", num(r.mean())),
+        ("p10_s", num(r.p10())),
+        ("p90_s", num(r.p90())),
+        ("iters_per_sample", int(r.iters_per_sample)),
+        ("samples", int(r.samples.len())),
+    ])
+}
+
+/// Standard envelope: bench name + thread count + payload fields.
+pub fn envelope(bench: &str, fields: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("bench", text(bench)),
+        ("threads", int(crate::tensor::kernels::num_threads())),
+    ];
+    pairs.extend(fields);
+    obj(pairs)
+}
+
+/// Write a document as one JSON line + trailing newline.
+pub fn write(path: &Path, doc: &Json) -> anyhow::Result<()> {
+    std::fs::write(path, doc.render() + "\n")
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_json_has_all_stats() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters_per_sample: 3,
+            samples: vec![1.0, 2.0, 3.0],
+        };
+        let j = bench_json(&r);
+        assert_eq!(j.get("median_s").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("iters_per_sample").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn write_and_reparse() {
+        let doc = envelope(
+            "smoke",
+            vec![("results", Json::Arr(vec![num(0.5)]))],
+        );
+        let dir = std::env::temp_dir().join(format!("rmnp-report-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_smoke.json");
+        write(&path, &doc).unwrap();
+        let back = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.req_str("bench").unwrap(), "smoke");
+        assert!(back.get("threads").unwrap().as_usize().unwrap() >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

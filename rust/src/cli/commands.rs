@@ -1,16 +1,29 @@
 //! Subcommand implementations.
 
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+use std::path::Path;
+use std::path::PathBuf;
 
 use crate::cli::args::Args;
-use crate::config::{DataSpec, RunConfig};
+use crate::config::DataSpec;
+#[cfg(feature = "pjrt")]
+use crate::config::RunConfig;
+#[cfg(feature = "pjrt")]
 use crate::coordinator::train;
 use crate::data::corpus::token_source;
 use crate::data::tokenizer::BpeTokenizer;
 use crate::exp::{self, ExpOpts};
+#[cfg(feature = "pjrt")]
 use crate::runtime::Engine;
 use crate::util::human_bytes;
+#[cfg(feature = "pjrt")]
 use crate::info;
+
+#[cfg(not(feature = "pjrt"))]
+const NO_PJRT: &str = "this build has no PJRT runtime: rebuild with \
+`--features pjrt` (and real XLA bindings) to run artifact-backed \
+training/experiments. Native kernel benchmarks remain available via \
+`rmnp exp precond` and `cargo bench`.";
 
 fn exp_opts(args: &Args) -> ExpOpts {
     ExpOpts {
@@ -23,7 +36,14 @@ fn exp_opts(args: &Args) -> ExpOpts {
     }
 }
 
+/// `rmnp train` (needs the PJRT runtime)
+#[cfg(not(feature = "pjrt"))]
+pub fn train(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!(NO_PJRT)
+}
+
 /// `rmnp train`
+#[cfg(feature = "pjrt")]
 pub fn train(args: &Args) -> anyhow::Result<()> {
     let mut cfg = match args.flag("config") {
         Some(path) => RunConfig::from_file(Path::new(path))?,
@@ -35,6 +55,7 @@ pub fn train(args: &Args) -> anyhow::Result<()> {
     if let Some(a) = args.flag("artifacts") {
         cfg.artifacts = PathBuf::from(a);
     }
+    // thread knob is applied inside train::run (covers exp/sweep callers too)
     let engine = Engine::new(&cfg.artifacts)?;
     let result = train::run(&engine, &cfg)?;
     println!(
@@ -52,6 +73,7 @@ pub fn train(args: &Args) -> anyhow::Result<()> {
 pub fn exp(args: &Args) -> anyhow::Result<()> {
     let opts = exp_opts(args);
     match args.subcommand(1) {
+        #[cfg(feature = "pjrt")]
         Some("precond") => {
             let rows = exp::precond::run(
                 &opts,
@@ -62,6 +84,19 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
             println!("{}", exp::precond::format_figure1(&rows));
             Ok(())
         }
+        #[cfg(not(feature = "pjrt"))]
+        Some("precond") => {
+            // native kernel-layer path: no artifacts required
+            let _ = &opts;
+            let rows = exp::precond::run_native(
+                args.usize_or("max-d", 640),
+                args.usize_or("repeats", 2),
+            );
+            println!("{}", exp::precond::format_table(&rows));
+            println!("{}", exp::precond::format_figure1(&rows));
+            Ok(())
+        }
+        #[cfg(feature = "pjrt")]
         Some("pretrain") => {
             let family = args.str_or("family", "gpt2");
             let (default_scales, default_data, title): (&[&str], _, _) = match family {
@@ -90,6 +125,7 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
             println!("{}", exp::pretrain::format_grid(&grid, title));
             Ok(())
         }
+        #[cfg(feature = "pjrt")]
         Some("sweep") => {
             let model = args.str_or("model", "gpt2_tiny").to_string();
             let dataset = DataSpec::parse(args.str_or(
@@ -113,6 +149,7 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
             }
             Ok(())
         }
+        #[cfg(feature = "pjrt")]
         Some("dominance") => {
             let engine = Engine::new(&opts.artifacts)?;
             let models = {
@@ -154,22 +191,26 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
             }
             Ok(())
         }
+        #[cfg(feature = "pjrt")]
         Some("extended") => {
             for (title, grid) in exp::pretrain::extended(&opts)? {
                 println!("{}", exp::pretrain::format_grid(&grid, &format!("Table 14 — {title}")));
             }
             Ok(())
         }
+        #[cfg(feature = "pjrt")]
         Some("ablation-embed") => {
             let rows = exp::pretrain::embed_ablation(&opts)?;
             println!("{}", exp::pretrain::format_embed_ablation(&rows));
             Ok(())
         }
+        #[cfg(feature = "pjrt")]
         Some("ssm") => {
             let grid = exp::pretrain::ssm(&opts)?;
             println!("{}", exp::pretrain::format_grid(&grid, "Table 20 — Mamba-like SSM"));
             Ok(())
         }
+        #[cfg(feature = "pjrt")]
         Some("vision") => {
             let grid = exp::pretrain::vision(&opts)?;
             println!("{}", exp::pretrain::format_grid(&grid, "Table 21 — CNN (exp CE)"));
@@ -181,12 +222,19 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
             println!("{}", exp::cliprate::format(&summaries));
             Ok(())
         }
+        #[cfg(feature = "pjrt")]
         Some("all") => run_all(args, &opts),
+        #[cfg(not(feature = "pjrt"))]
+        Some(
+            "pretrain" | "sweep" | "dominance" | "extended" | "ablation-embed"
+            | "ssm" | "vision" | "all",
+        ) => anyhow::bail!(NO_PJRT),
         other => anyhow::bail!("unknown exp `{other:?}` (see `rmnp help`)"),
     }
 }
 
 /// `rmnp exp all` — a scaled-down pass over every experiment.
+#[cfg(feature = "pjrt")]
 fn run_all(args: &Args, opts: &ExpOpts) -> anyhow::Result<()> {
     info!("=== exp all: precond (capped) ===");
     let rows = exp::precond::run(opts, args.usize_or("max-d", 1024), 2)?;

@@ -77,6 +77,10 @@ pub struct RunConfig {
     pub out_dir: PathBuf,
     /// Artifact directory.
     pub artifacts: PathBuf,
+    /// Host tensor-kernel threads (`perf.threads`); 0 = auto (the
+    /// `RMNP_THREADS` env var, else `available_parallelism`). Applied via
+    /// [`crate::tensor::kernels::set_num_threads`].
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -95,6 +99,7 @@ impl Default for RunConfig {
             checkpoint_every: 0,
             out_dir: PathBuf::from("runs/default"),
             artifacts: PathBuf::from("artifacts"),
+            threads: 0,
         }
     }
 }
@@ -126,6 +131,8 @@ impl RunConfig {
             d.int_or("analysis.dominance_every", self.dominance_every as i64) as usize;
         self.checkpoint_every =
             d.int_or("train.checkpoint_every", self.checkpoint_every as i64) as usize;
+        // .max(0) so a negative value clamps instead of wrapping to 2^64-1
+        self.threads = d.int_or("perf.threads", self.threads as i64).max(0) as usize;
         if let Some(v) = d.get("data.corpus") {
             self.data = DataSpec::parse(
                 v.as_str().ok_or_else(|| anyhow::anyhow!("data.corpus must be a string"))?,
@@ -217,6 +224,8 @@ corpus = "zipf"
         cfg.apply_override("train.steps=42").unwrap();
         cfg.apply_override("train.lr=0.5").unwrap();
         cfg.apply_override("model.tag=ssm_base").unwrap();
+        cfg.apply_override("perf.threads=4").unwrap();
+        assert_eq!(cfg.threads, 4);
         assert_eq!(cfg.steps, 42);
         assert!((cfg.lr - 0.5).abs() < 1e-12);
         assert_eq!(cfg.model, "ssm_base");

@@ -1,12 +1,20 @@
 //! L3 coordinator: training loop, LR schedules, metric logging,
 //! checkpointing, and the multi-threaded sweep executor.
+//!
+//! The device-facing pieces ([`train`], [`sweep`]) drive PJRT and are
+//! gated behind the `pjrt` feature; schedules, metrics, and checkpoint
+//! I/O are pure host code and always available.
 
 pub mod checkpoint;
 pub mod metrics;
 pub mod schedule;
+#[cfg(feature = "pjrt")]
 pub mod sweep;
+#[cfg(feature = "pjrt")]
 pub mod train;
 
 pub use schedule::lr_at;
+#[cfg(feature = "pjrt")]
 pub use sweep::{run_grid, SweepCell, SweepJob};
+#[cfg(feature = "pjrt")]
 pub use train::{run, RunResult};

@@ -50,6 +50,7 @@ pub fn run_one(
         checkpoint_every: 0,
         out_dir: out_dir.clone(),
         artifacts: opts.artifacts.clone(),
+        threads: 0,
     };
     train::run(engine, &cfg)?;
     let csv = out_dir.join("dominance.csv");

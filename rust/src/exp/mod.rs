@@ -3,18 +3,26 @@
 //! | harness | regenerates |
 //! |---|---|
 //! | [`precond`] | Fig 1, Table 2, Table 3 (preconditioner wall-clock + memory) |
-//! | [`pretrain`] | Fig 6, Tables 17/18/19 (+ curves Figs 14–24) |
-//! | [`sweeps`] | Tables 9–13 (LR grids, incl. Shampoo/SOAP), 20, 21 |
-//! | [`dominance_exp`] | Figs 4/5/7–10, 26, 28 (diagonal dominance) |
-//! | [`pretrain::extended`] | Table 14 (2× budget) |
-//! | [`pretrain::embed_ablation`] | Tables 15/16 |
-//! | [`pretrain::ssm`] / [`pretrain::vision`] | Figs 25/27, Tables 20/21 |
+//! | `pretrain` | Fig 6, Tables 17/18/19 (+ curves Figs 14–24) |
+//! | `sweeps` | Tables 9–13 (LR grids, incl. Shampoo/SOAP), 20, 21 |
+//! | `dominance_exp` | Figs 4/5/7–10, 26, 28 (diagonal dominance) |
+//! | `pretrain::extended` | Table 14 (2× budget) |
+//! | `pretrain::embed_ablation` | Tables 15/16 |
+//! | `pretrain::ssm` / `pretrain::vision` | Figs 25/27, Tables 20/21 |
 //! | [`cliprate`] | Figs 29–32 (gradient clip-rate trajectories) |
+//!
+//! The training-loop harnesses (`pretrain`, `sweeps`, `dominance_exp`)
+//! require the PJRT artifacts and are gated behind the `pjrt` feature;
+//! `precond` additionally has a native kernel-layer path that runs in
+//! every build.
 
 pub mod cliprate;
+#[cfg(feature = "pjrt")]
 pub mod dominance_exp;
 pub mod precond;
+#[cfg(feature = "pjrt")]
 pub mod pretrain;
+#[cfg(feature = "pjrt")]
 pub mod sweeps;
 
 use std::path::PathBuf;

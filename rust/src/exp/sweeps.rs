@@ -46,6 +46,7 @@ pub fn run(
         out_dir: opts.out.join(format!("sweep_{model}_{}", dataset.name())),
         artifacts: opts.artifacts.clone(),
         optimizer: String::new(),
+        threads: 0,
     };
     run_grid(&cfg, &jobs, opts.workers)
 }

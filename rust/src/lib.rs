@@ -20,17 +20,21 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`tensor`] | minimal f32 matrix/tensor substrate (host-side math) |
-//! | [`util`] | RNG, logging, timers, small helpers |
+//! | [`tensor`] | f32 matrix substrate: tiled/threaded kernels, workspace arena |
+//! | [`util`] | RNG, logging, timers, JSON, small helpers |
 //! | [`config`] | TOML-subset parser + typed experiment configuration |
 //! | [`cli`] | hand-rolled argument parser and subcommand dispatch |
 //! | [`data`] | synthetic corpora, tokenizers, batch loader, image data |
-//! | [`optim`] | pure-rust reference optimizers (AdamW/Muon/RMNP/...) |
-//! | [`runtime`] | PJRT client, artifact registry, device-resident state |
-//! | [`coordinator`] | training loop, schedules, metrics, checkpoints, sweeps |
+//! | [`optim`] | fused pure-rust optimizers (AdamW/Muon/RMNP/...) |
+//! | [`runtime`] | artifact registry (+ PJRT client under `pjrt`) |
+//! | [`coordinator`] | schedules, metrics, checkpoints (+ train/sweeps under `pjrt`) |
 //! | [`analysis`] | dominance ratios, smoothing, paper-style reports |
 //! | [`exp`] | one harness per paper table/figure |
-//! | [`bench`] | micro-benchmark harness (criterion-style, hand-rolled) |
+//! | [`bench`] | micro-benchmark harness + JSON perf reports |
+//!
+//! The XLA/PJRT-backed runtime is behind the `pjrt` cargo feature so the
+//! default build is green offline; the native tensor kernel layer
+//! ([`tensor::kernels`]) covers the Table 2/3 benchmarks either way.
 
 pub mod analysis;
 pub mod bench;

@@ -25,19 +25,29 @@ impl AdamWState {
         }
     }
 
-    /// One fused AdamW step over `w` given `grad`.
+    /// One fused AdamW step over `w` given `grad`. Loop invariants (the
+    /// bias corrections and the 1−β factors) are hoisted so the per-element
+    /// body is pure mul/add plus the unavoidable sqrt/divide.
     pub fn step(&mut self, w: &mut [f32], grad: &[f32], lr: f32) {
         assert_eq!(w.len(), grad.len());
         assert_eq!(w.len(), self.m.len());
         self.t += 1;
         let bc1 = 1.0 - self.beta1.powi(self.t as i32);
         let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let (b1, ob1) = (self.beta1, 1.0 - self.beta1);
+        let (b2, ob2) = (self.beta2, 1.0 - self.beta2);
+        let (eps, wd) = (self.eps, self.weight_decay);
+        let m = &mut self.m[..w.len()];
+        let v = &mut self.v[..w.len()];
         for i in 0..w.len() {
-            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
-            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
-            let mhat = self.m[i] / bc1;
-            let vhat = self.v[i] / bc2;
-            w[i] -= lr * (mhat / (vhat.sqrt() + self.eps) + self.weight_decay * w[i]);
+            let g = grad[i];
+            let mi = b1 * m[i] + ob1 * g;
+            let vi = b2 * v[i] + ob2 * g * g;
+            m[i] = mi;
+            v[i] = vi;
+            let mhat = mi / bc1;
+            let vhat = vi / bc2;
+            w[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * w[i]);
         }
     }
 }

@@ -8,7 +8,13 @@
 //! 2. **Property tests** — [`lemmas`] numerically verifies the identities
 //!    (Lemmas A.1/A.2) the convergence theory rests on.
 //! 3. **Host-side benchmarking** — the Table 2 bench can compare the PJRT
-//!    operator path against straightforward native implementations.
+//!    operator path against the native implementations.
+//!
+//! The steps are *fused*: [`RmnpState::step`] is a single per-row sweep
+//! (momentum EMA + row norm + update, no intermediate matrices) and
+//! [`MuonState::step`] runs NS5 on a persistent
+//! [`crate::tensor::Workspace`] — both are allocation-free per call after
+//! warmup (`tests/alloc.rs` holds the line).
 
 pub mod adamw;
 pub mod lemmas;
@@ -16,13 +22,20 @@ pub mod muon;
 pub mod rmnp;
 
 pub use adamw::AdamWState;
-pub use muon::{newton_schulz5, MuonState};
+pub use muon::{newton_schulz5, newton_schulz5_into, newton_schulz5_naive, MuonState};
 pub use rmnp::RmnpState;
 
 /// Muon/RMNP momentum coefficient (paper Appendix B).
 pub const MATRIX_BETA: f32 = 0.95;
 /// Decoupled weight decay (paper Section 4.1).
 pub const WEIGHT_DECAY: f32 = 0.1;
+/// Row-norm floor for the RMNP preconditioner: `max(‖row‖₂, eps)`, the
+/// same semantics and value as `python/compile/kernels/rownorm.py`
+/// (`EPS = 1e-7` in `ref.py`). Zero rows normalize to zero.
+pub const ROW_EPS: f32 = 1e-7;
+/// Frobenius-norm eps in NS5, added to the norm before the divide exactly
+/// as `ref.py::newton_schulz_ref` does.
+pub const NS_EPS: f32 = 1e-7;
 
 /// The RMS learning-rate shape correction max(1, sqrt(m/n)) (Eq. 17/18).
 pub fn rms_scale(rows: usize, cols: usize) -> f32 {
@@ -38,5 +51,12 @@ mod tests {
         assert_eq!(rms_scale(8, 8), 1.0);
         assert_eq!(rms_scale(32, 8), 2.0);
         assert_eq!(rms_scale(8, 32), 1.0);
+    }
+
+    #[test]
+    fn eps_constants_match_python_ref() {
+        // python/compile/kernels/ref.py: EPS = 1e-7 shared by rownorm + NS5
+        assert_eq!(ROW_EPS, 1e-7);
+        assert_eq!(NS_EPS, 1e-7);
     }
 }

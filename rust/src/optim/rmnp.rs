@@ -1,6 +1,13 @@
 //! RMNP (Algorithm 2): momentum + row-wise ℓ2 normalization.
+//!
+//! [`RmnpState::step`] is fused: one sweep per row updates the momentum in
+//! place, reduces the row norm, and applies the normalized direction plus
+//! decoupled weight decay directly into the parameter — no intermediate
+//! `Matrix` is materialized and no heap allocation happens per call
+//! (verified by the counting-allocator test in `tests/alloc.rs`).
 
-use crate::optim::{rms_scale, MATRIX_BETA, WEIGHT_DECAY};
+use crate::optim::{rms_scale, MATRIX_BETA, ROW_EPS, WEIGHT_DECAY};
+use crate::tensor::kernels::row_sumsq;
 use crate::tensor::Matrix;
 
 /// Momentum state for one matrix parameter.
@@ -21,9 +28,45 @@ impl RmnpState {
     }
 
     /// One step: V ← βV + (1−β)G;  W ← W − η·max(1,√(m/n))·(RN(V) + λW).
+    ///
+    /// Fused per-row: momentum update (in place), row-norm reduction, and
+    /// parameter update run over each row while it is cache-resident.
     pub fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        let (rows, cols) = (w.rows(), w.cols());
+        assert_eq!(
+            (rows, cols),
+            (self.momentum.rows(), self.momentum.cols()),
+            "rmnp momentum shape"
+        );
+        assert_eq!((rows, cols), (grad.rows(), grad.cols()), "rmnp grad shape");
+        let scale = lr * rms_scale(rows, cols);
+        let wd = self.weight_decay;
+        let beta = self.beta;
+        let om = 1.0 - beta;
+        let vdata = self.momentum.data_mut();
+        let wdata = w.data_mut();
+        let gdata = grad.data();
+        for i in 0..rows {
+            let o = i * cols;
+            let vrow = &mut vdata[o..o + cols];
+            let grow = &gdata[o..o + cols];
+            for j in 0..cols {
+                vrow[j] = beta * vrow[j] + om * grow[j];
+            }
+            let inv = 1.0 / row_sumsq(vrow).sqrt().max(ROW_EPS);
+            let wrow = &mut wdata[o..o + cols];
+            for j in 0..cols {
+                wrow[j] -= scale * (vrow[j] * inv + wd * wrow[j]);
+            }
+        }
+    }
+
+    /// The seed's unfused step (axpby + row_normalize + apply), kept as
+    /// the parity baseline for tests and the "before" side of
+    /// `benches/optim_step.rs`.
+    pub fn step_unfused(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
         self.momentum = self.momentum.axpby(self.beta, grad, 1.0 - self.beta);
-        let d = self.momentum.row_normalize(1e-7);
+        let d = self.momentum.row_normalize_naive(ROW_EPS);
         let scale = lr * rms_scale(w.rows(), w.cols());
         let wd = self.weight_decay;
         for (wv, dv) in w.data_mut().iter_mut().zip(d.data()) {
@@ -33,7 +76,7 @@ impl RmnpState {
 
     /// The preconditioned direction RN(V) for the current momentum.
     pub fn direction(&self) -> Matrix {
-        self.momentum.row_normalize(1e-7)
+        self.momentum.row_normalize(ROW_EPS)
     }
 }
 
@@ -89,5 +132,45 @@ mod tests {
         }
         // and the total 1,2-norm of the step is m·lr (Lemma A.1 geometry)
         assert!((one2_norm(&w) - 4.0 * 0.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fused_matches_unfused_across_shapes() {
+        // rectangular, tall, wide, and zero-row inputs; momentum carried
+        // over several steps with nonzero weight decay
+        let mut rng = Rng::new(4);
+        for (m, n) in [(6, 10), (40, 8), (8, 40), (5, 5)] {
+            let mut w_f = Matrix::randn(m, n, 0.5, &mut rng);
+            let mut w_u = w_f.clone();
+            let mut st_f = RmnpState::new(m, n);
+            let mut st_u = RmnpState::new(m, n);
+            for _ in 0..4 {
+                let mut g = Matrix::randn(m, n, 1.0, &mut rng);
+                // zero out a row to exercise the eps floor
+                for v in g.data_mut()[0..n].iter_mut() {
+                    *v = 0.0;
+                }
+                st_f.step(&mut w_f, &g, 0.02);
+                st_u.step_unfused(&mut w_u, &g, 0.02);
+            }
+            for (x, y) in w_f.data().iter().zip(w_u.data()) {
+                assert!((x - y).abs() < 1e-4, "({m},{n}): {x} vs {y}");
+            }
+            for (x, y) in st_f.momentum.data().iter().zip(st_u.momentum.data()) {
+                assert!((x - y).abs() < 1e-4, "momentum ({m},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_momentum_zero_grad_keeps_weights_finite() {
+        let mut st = RmnpState::new(3, 4);
+        let mut w = Matrix::zeros(3, 4);
+        let g = Matrix::zeros(3, 4);
+        st.step(&mut w, &g, 0.1);
+        assert!(w.data().iter().all(|x| x.is_finite()));
+        // zero rows produce a zero direction (eps floor), so only weight
+        // decay acts — and w is zero, so nothing moves
+        assert!(w.data().iter().all(|&x| x == 0.0));
     }
 }

@@ -4,30 +4,42 @@
 //! The flow (see DESIGN.md §2):
 //!
 //! 1. [`manifest::Manifest`] indexes every HLO-text artifact.
-//! 2. [`Engine`] owns the PJRT CPU client and a compile cache.
-//! 3. [`session::TrainSession`] holds the model/optimizer state as live
+//! 2. `Engine` owns the PJRT CPU client and a compile cache.
+//! 3. `session::TrainSession` holds the model/optimizer state as live
 //!    `PjRtBuffer`s and steps it with the patched `execute_b_untupled`,
 //!    so only the per-step batch (and three scalar metrics) cross the
 //!    host↔device boundary.
+//!
+//! The manifest is pure JSON and always available (`rmnp info` works in
+//! every build); the engine/session pieces need the XLA bindings and are
+//! gated behind the `pjrt` feature.
 
 pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod session;
 
+#[cfg(feature = "pjrt")]
 use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::Path;
+#[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
 pub use manifest::{Dtype, GraphSpec, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use session::{StepMetrics, TrainSession};
 
 /// PJRT client + compiled-executable cache over one artifact directory.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create the CPU engine for an artifact directory.
     pub fn new(artifacts: &Path) -> anyhow::Result<Self> {
@@ -134,6 +146,7 @@ impl Engine {
 }
 
 /// Build an i32 literal with a shape.
+#[cfg(feature = "pjrt")]
 pub fn literal_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
     let lit = xla::Literal::vec1(data);
     if shape.is_empty() {
@@ -144,6 +157,7 @@ pub fn literal_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<xla::Literal
 }
 
 /// Build an f32 literal with a shape.
+#[cfg(feature = "pjrt")]
 pub fn literal_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
     if shape.is_empty() {
         return Ok(xla::Literal::scalar(data[0]));
@@ -155,13 +169,13 @@ pub fn literal_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal
 
 /// Global serializer for tests that create PJRT clients: concurrent client
 /// creation/destruction in one process segfaults in xla_extension 0.5.1.
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
     static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
     LOCK.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

@@ -1,0 +1,593 @@
+//! Performance-first tensor kernels: register-tiled, multi-threaded, and
+//! allocation-free.
+//!
+//! Every kernel here writes into a caller-provided `dst` slice so hot loops
+//! (NS5 iterations, fused optimizer steps) can run on preallocated
+//! [`super::Workspace`] buffers. Design notes:
+//!
+//! * **Matmul microkernel** — the inner loop is the axpy form
+//!   `dst_row[j] += a_ip * b_row[j]`, blocked 4 output rows at a time
+//!   ([`MR`]) so each streamed row of B feeds four accumulator rows
+//!   (4× the arithmetic intensity of the scalar loop), with a [`KC`]-wide
+//!   k-panel so the active B panel stays cache-resident. The four dst-row
+//!   streams are independent elementwise updates, which LLVM vectorizes;
+//!   the seed implementation's `a == 0.0` branch is gone from the inner
+//!   loop. Accumulation order over `p` is unchanged from the naive kernel,
+//!   so results are bit-identical on finite inputs.
+//! * **Reductions** — strict FP forbids LLVM from vectorizing
+//!   `s += x*y` loops, so dot products ([`dot`]) and row sum-of-squares
+//!   ([`row_sumsq`]) accumulate into 8 independent lanes and fold at the
+//!   end. This reassociates the sum (results differ from a sequential sum
+//!   by normal f32 rounding, covered by the parity tests).
+//! * **Threading** — row-block parallelism over `std::thread::scope`; the
+//!   symmetric [`gram_into`] balances its upper-triangle row blocks by
+//!   area. The thread count comes from [`num_threads`]: the
+//!   [`set_num_threads`] knob (wired to the `perf.threads` config key),
+//!   else the `RMNP_THREADS` env var, else `available_parallelism`.
+//!   Small problems stay single-threaded (spawn cost dominates).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Output rows per register tile in matmul/gram.
+const MR: usize = 4;
+/// k-panel width: `KC * 4B` per streamed B row chunk stays L1/L2-friendly.
+const KC: usize = 256;
+/// Reduction lanes (accumulator count) for dot-style loops.
+const LANES: usize = 8;
+/// Minimum multiply-adds before a matmul/gram goes multi-threaded.
+const PAR_MIN_MULS: usize = 1 << 20;
+/// Minimum elements before an elementwise/row kernel goes multi-threaded.
+const PAR_MIN_ELEMS: usize = 1 << 19;
+
+static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the kernel thread count (0 restores auto detection). Wired to the
+/// `perf.threads` config key and the CLI. Capped at 256: `plan_threads`
+/// clamps to the row count, so an absurd override would otherwise degrade
+/// into one-thread-per-row spawn storms.
+pub fn set_num_threads(n: usize) {
+    THREAD_OVERRIDE.store(n.min(256), Ordering::Relaxed);
+}
+
+/// Effective kernel thread count: explicit override, else `RMNP_THREADS`,
+/// else `available_parallelism` (capped at 16).
+pub fn num_threads() -> usize {
+    let n = THREAD_OVERRIDE.load(Ordering::Relaxed);
+    if n != 0 {
+        return n;
+    }
+    static AUTO: OnceLock<usize> = OnceLock::new();
+    *AUTO.get_or_init(|| {
+        std::env::var("RMNP_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+                    .min(16)
+            })
+    })
+}
+
+fn plan_threads(units: usize, work: usize, min_work: usize) -> usize {
+    if work < min_work || units < 2 {
+        1
+    } else {
+        num_threads().clamp(1, units)
+    }
+}
+
+/// 8-lane dot product of two equal-length slices.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let o = c * LANES;
+        let xb = &x[o..o + LANES];
+        let yb = &y[o..o + LANES];
+        for l in 0..LANES {
+            acc[l] += xb[l] * yb[l];
+        }
+    }
+    let mut s = 0.0f32;
+    for a in acc {
+        s += a;
+    }
+    for p in chunks * LANES..n {
+        s += x[p] * y[p];
+    }
+    s
+}
+
+/// 8-lane sum of squares of a row.
+#[inline]
+pub fn row_sumsq(row: &[f32]) -> f32 {
+    dot(row, row)
+}
+
+/// `dst (m×n) = a (m×k) · b (k×n)`. `dst` is fully overwritten.
+pub fn matmul_into(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(dst.len(), m * n, "matmul dst shape");
+    assert_eq!(a.len(), m * k, "matmul lhs shape");
+    assert_eq!(b.len(), k * n, "matmul rhs shape");
+    let t = plan_threads(m, m * n * k, PAR_MIN_MULS);
+    if t <= 1 {
+        matmul_rows(dst, a, b, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(t);
+    std::thread::scope(|s| {
+        let mut dst_rest = dst;
+        let mut i0 = 0usize;
+        while i0 < m {
+            let take = rows_per.min(m - i0);
+            let (chunk, rest) = std::mem::take(&mut dst_rest).split_at_mut(take * n);
+            dst_rest = rest;
+            let a_chunk = &a[i0 * k..(i0 + take) * k];
+            s.spawn(move || matmul_rows(chunk, a_chunk, b, k, n));
+            i0 += take;
+        }
+    });
+}
+
+/// Serial register-tiled matmul over a contiguous block of output rows.
+fn matmul_rows(dst: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize) {
+    dst.fill(0.0);
+    if n == 0 || k == 0 {
+        return;
+    }
+    let m = dst.len() / n;
+    let mut kk = 0;
+    while kk < k {
+        let kend = (kk + KC).min(k);
+        let mut i = 0;
+        // 4-row register tiles
+        while i + MR <= m {
+            let base = i * n;
+            let block = &mut dst[base..base + MR * n];
+            let (r0, rest) = block.split_at_mut(n);
+            let (r1, rest) = rest.split_at_mut(n);
+            let (r2, r3) = rest.split_at_mut(n);
+            for p in kk..kend {
+                let a0 = a[i * k + p];
+                let a1 = a[(i + 1) * k + p];
+                let a2 = a[(i + 2) * k + p];
+                let a3 = a[(i + 3) * k + p];
+                let brow = &b[p * n..p * n + n];
+                for j in 0..n {
+                    let x = brow[j];
+                    r0[j] += a0 * x;
+                    r1[j] += a1 * x;
+                    r2[j] += a2 * x;
+                    r3[j] += a3 * x;
+                }
+            }
+            i += MR;
+        }
+        // remainder rows
+        while i < m {
+            let row = &mut dst[i * n..(i + 1) * n];
+            for p in kk..kend {
+                let av = a[i * k + p];
+                let brow = &b[p * n..p * n + n];
+                for j in 0..n {
+                    row[j] += av * brow[j];
+                }
+            }
+            i += 1;
+        }
+        kk = kend;
+    }
+}
+
+/// `dst (m×m) = a (m×k) · aᵀ`. Computes the upper triangle with 4-row
+/// register tiles (each streamed row `a_j` feeds four dot lanes), threads
+/// over area-balanced row blocks, then mirrors to the lower triangle.
+pub fn gram_into(dst: &mut [f32], a: &[f32], m: usize, k: usize) {
+    assert_eq!(dst.len(), m * m, "gram dst shape");
+    assert_eq!(a.len(), m * k, "gram src shape");
+    // upper-triangle work ≈ m²k/2 multiply-adds
+    let t = plan_threads(m, m * m * k / 2, PAR_MIN_MULS);
+    if t <= 1 {
+        gram_rows(dst, a, 0, m, m, k);
+    } else {
+        let bounds = triangle_partition(m, t);
+        // reborrow (not move) so `dst` is usable again for the mirror pass
+        // once every scoped borrow has ended
+        let mut dst_rest: &mut [f32] = &mut *dst;
+        std::thread::scope(|s| {
+            for w in bounds.windows(2) {
+                let (i0, i1) = (w[0], w[1]);
+                if i1 <= i0 {
+                    continue;
+                }
+                let (chunk, rest) =
+                    std::mem::take(&mut dst_rest).split_at_mut((i1 - i0) * m);
+                dst_rest = rest;
+                s.spawn(move || gram_rows(chunk, a, i0, i1, m, k));
+            }
+        });
+    }
+    // mirror the strict lower triangle from the upper
+    mirror_lower(dst, m);
+}
+
+fn mirror_lower(dst: &mut [f32], m: usize) {
+    for i in 1..m {
+        for j in 0..i {
+            dst[i * m + j] = dst[j * m + i];
+        }
+    }
+}
+
+/// Row boundaries `0 = b0 < … < bt = m` splitting the upper-triangle area
+/// roughly evenly: rows `0..x` cover area `x·m − x(x−1)/2`, so the b-th
+/// boundary solves the quadratic for `b/t` of the total.
+fn triangle_partition(m: usize, t: usize) -> Vec<usize> {
+    let mut bounds = Vec::with_capacity(t + 1);
+    bounds.push(0usize);
+    let mf = m as f64;
+    let total = mf * (mf + 1.0) / 2.0;
+    for b in 1..t {
+        let target = total * b as f64 / t as f64;
+        let x = mf - (mf * mf - 2.0 * target).max(0.0).sqrt();
+        let prev = *bounds.last().unwrap();
+        bounds.push((x.round() as usize).clamp(prev, m));
+    }
+    bounds.push(m);
+    bounds
+}
+
+/// Upper-triangle rows `i0..i1` of the Gram matrix into `dst_chunk`
+/// (which holds full rows `i0..i1`, each of length `m`). Entries strictly
+/// left of the diagonal within a 4-row tile are computed too (they are
+/// correct values); the mirror pass makes the lower triangle consistent.
+fn gram_rows(dst_chunk: &mut [f32], a: &[f32], i0: usize, i1: usize, m: usize, k: usize) {
+    let mut i = i0;
+    while i < i1 {
+        if i + MR <= i1 {
+            let ri0 = &a[i * k..(i + 1) * k];
+            let ri1 = &a[(i + 1) * k..(i + 2) * k];
+            let ri2 = &a[(i + 2) * k..(i + 3) * k];
+            let ri3 = &a[(i + 3) * k..(i + 4) * k];
+            let base = (i - i0) * m;
+            let block = &mut dst_chunk[base..base + MR * m];
+            let (o0, rest) = block.split_at_mut(m);
+            let (o1, rest) = rest.split_at_mut(m);
+            let (o2, o3) = rest.split_at_mut(m);
+            let chunks = k / LANES;
+            for j in i..m {
+                let rj = &a[j * k..(j + 1) * k];
+                let mut acc0 = [0.0f32; LANES];
+                let mut acc1 = [0.0f32; LANES];
+                let mut acc2 = [0.0f32; LANES];
+                let mut acc3 = [0.0f32; LANES];
+                for c in 0..chunks {
+                    let o = c * LANES;
+                    let rjb = &rj[o..o + LANES];
+                    let r0b = &ri0[o..o + LANES];
+                    let r1b = &ri1[o..o + LANES];
+                    let r2b = &ri2[o..o + LANES];
+                    let r3b = &ri3[o..o + LANES];
+                    for l in 0..LANES {
+                        let x = rjb[l];
+                        acc0[l] += r0b[l] * x;
+                        acc1[l] += r1b[l] * x;
+                        acc2[l] += r2b[l] * x;
+                        acc3[l] += r3b[l] * x;
+                    }
+                }
+                let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+                for l in 0..LANES {
+                    s0 += acc0[l];
+                    s1 += acc1[l];
+                    s2 += acc2[l];
+                    s3 += acc3[l];
+                }
+                for p in chunks * LANES..k {
+                    let x = rj[p];
+                    s0 += ri0[p] * x;
+                    s1 += ri1[p] * x;
+                    s2 += ri2[p] * x;
+                    s3 += ri3[p] * x;
+                }
+                o0[j] = s0;
+                o1[j] = s1;
+                o2[j] = s2;
+                o3[j] = s3;
+            }
+            i += MR;
+        } else {
+            let ri = &a[i * k..(i + 1) * k];
+            let base = (i - i0) * m;
+            let orow = &mut dst_chunk[base..base + m];
+            for j in i..m {
+                orow[j] = dot(ri, &a[j * k..(j + 1) * k]);
+            }
+            i += 1;
+        }
+    }
+}
+
+/// `dst (cols×rows) = src (rows×cols)ᵀ`, 32×32 cache tiles.
+pub fn transpose_into(dst: &mut [f32], src: &[f32], rows: usize, cols: usize) {
+    assert_eq!(dst.len(), rows * cols, "transpose dst shape");
+    assert_eq!(src.len(), rows * cols, "transpose src shape");
+    const TB: usize = 32;
+    let mut ii = 0;
+    while ii < rows {
+        let iend = (ii + TB).min(rows);
+        let mut jj = 0;
+        while jj < cols {
+            let jend = (jj + TB).min(cols);
+            for i in ii..iend {
+                for j in jj..jend {
+                    dst[j * rows + i] = src[i * cols + j];
+                }
+            }
+            jj = jend;
+        }
+        ii = iend;
+    }
+}
+
+/// `dst = a·x + b·y` elementwise.
+pub fn axpby_into(dst: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
+    assert_eq!(dst.len(), x.len(), "axpby dst/x shape");
+    assert_eq!(x.len(), y.len(), "axpby x/y shape");
+    for i in 0..dst.len() {
+        dst[i] = a * x[i] + b * y[i];
+    }
+}
+
+/// `x = a·x + b·y` elementwise, in place.
+pub fn axpby_inplace(x: &mut [f32], a: f32, y: &[f32], b: f32) {
+    assert_eq!(x.len(), y.len(), "axpby_inplace shape");
+    for i in 0..x.len() {
+        x[i] = a * x[i] + b * y[i];
+    }
+}
+
+/// `dst[i,:] = src[i,:] / max(‖src[i,:]‖₂, eps)` — the RMNP preconditioner
+/// (Algorithm 2 line 5), single pass, threaded over row blocks.
+pub fn row_normalize_into(
+    dst: &mut [f32],
+    src: &[f32],
+    rows: usize,
+    cols: usize,
+    eps: f32,
+) {
+    assert_eq!(dst.len(), rows * cols, "rownorm dst shape");
+    assert_eq!(src.len(), rows * cols, "rownorm src shape");
+    let t = plan_threads(rows, rows * cols, PAR_MIN_ELEMS);
+    if t <= 1 {
+        row_normalize_rows(dst, src, cols, eps);
+        return;
+    }
+    let rows_per = rows.div_ceil(t);
+    std::thread::scope(|s| {
+        let mut dst_rest = dst;
+        let mut i0 = 0usize;
+        while i0 < rows {
+            let take = rows_per.min(rows - i0);
+            let (chunk, rest) = std::mem::take(&mut dst_rest).split_at_mut(take * cols);
+            dst_rest = rest;
+            let src_chunk = &src[i0 * cols..(i0 + take) * cols];
+            s.spawn(move || row_normalize_rows(chunk, src_chunk, cols, eps));
+            i0 += take;
+        }
+    });
+}
+
+fn row_normalize_rows(dst: &mut [f32], src: &[f32], cols: usize, eps: f32) {
+    if cols == 0 {
+        return;
+    }
+    let rows = dst.len() / cols;
+    for i in 0..rows {
+        let o = i * cols;
+        let srow = &src[o..o + cols];
+        let inv = 1.0 / row_sumsq(srow).sqrt().max(eps);
+        let drow = &mut dst[o..o + cols];
+        for j in 0..cols {
+            drow[j] = srow[j] * inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                for j in 0..n {
+                    out[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn randv(len: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut v = vec![0.0f32; len];
+        rng.fill_normal(&mut v, 1.0);
+        v
+    }
+
+    #[test]
+    fn matmul_matches_naive_across_shapes() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [
+            (1, 1, 1),
+            (4, 4, 4),
+            (5, 7, 3),
+            (33, 65, 17),
+            (2, 128, 130),
+            (130, 3, 2),
+            (8, 1, 8),
+        ] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let want = naive_matmul(&a, &b, m, k, n);
+            let mut got = vec![0.0f32; m * n];
+            matmul_into(&mut got, &a, &b, m, k, n);
+            for (x, y) in got.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-3, "({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_threaded_matches_serial() {
+        // force the parallel path by size, compare against the serial kernel
+        let mut rng = Rng::new(2);
+        let (m, k, n) = (67, 129, 131);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let mut serial = vec![0.0f32; m * n];
+        matmul_rows(&mut serial, &a, &b, k, n);
+        set_num_threads(3);
+        let mut par = vec![0.0f32; m * n];
+        matmul_into(&mut par, &a, &b, m, k, n);
+        set_num_threads(0);
+        // row partitioning does not change per-element accumulation order
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn gram_matches_matmul_transpose() {
+        let mut rng = Rng::new(3);
+        for (m, k) in [(1, 5), (6, 11), (13, 64), (40, 9), (4, 8)] {
+            let a = randv(m * k, &mut rng);
+            let mut at = vec![0.0f32; m * k];
+            transpose_into(&mut at, &a, m, k);
+            let want = naive_matmul(&a, &at, m, k, m);
+            let mut got = vec![0.0f32; m * m];
+            gram_into(&mut got, &a, m, k);
+            for (idx, (x, y)) in got.iter().zip(&want).enumerate() {
+                assert!((x - y).abs() < 1e-3, "({m},{k}) at {idx}: {x} vs {y}");
+            }
+            // exact symmetry by construction
+            for i in 0..m {
+                for j in 0..m {
+                    assert_eq!(got[i * m + j], got[j * m + i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gram_threaded_matches_serial() {
+        let mut rng = Rng::new(4);
+        // big enough to cross PAR_MIN_MULS so the threaded path runs
+        let (m, k) = (160, 90);
+        let a = randv(m * k, &mut rng);
+        let mut serial = vec![0.0f32; m * m];
+        gram_rows(&mut serial, &a, 0, m, m, k);
+        mirror_lower(&mut serial, m);
+        set_num_threads(4);
+        let mut par = vec![0.0f32; m * m];
+        gram_into(&mut par, &a, m, k);
+        set_num_threads(0);
+        for (x, y) in par.iter().zip(&serial) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn triangle_partition_covers_and_orders() {
+        for m in [1usize, 2, 7, 100, 1023] {
+            for t in [1usize, 2, 3, 8] {
+                let b = triangle_partition(m, t);
+                assert_eq!(*b.first().unwrap(), 0);
+                assert_eq!(*b.last().unwrap(), m);
+                assert!(b.windows(2).all(|w| w[0] <= w[1]), "{b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_blocked_matches_simple() {
+        let mut rng = Rng::new(5);
+        for (r, c) in [(1, 1), (3, 5), (33, 70), (64, 64)] {
+            let src = randv(r * c, &mut rng);
+            let mut dst = vec![0.0f32; r * c];
+            transpose_into(&mut dst, &src, r, c);
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(dst[j * r + i], src[i * c + j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpby_variants() {
+        let x = [1.0f32, 2.0, 3.0];
+        let y = [10.0f32, 10.0, 10.0];
+        let mut dst = [0.0f32; 3];
+        axpby_into(&mut dst, 2.0, &x, 0.5, &y);
+        assert_eq!(dst, [7.0, 9.0, 11.0]);
+        let mut xm = x;
+        axpby_inplace(&mut xm, 2.0, &y, 0.5);
+        assert_eq!(xm, [7.0, 9.0, 11.0]);
+    }
+
+    #[test]
+    fn rownorm_unit_rows_and_zero_rows() {
+        let mut rng = Rng::new(6);
+        let (rows, cols) = (9, 37);
+        let mut src = randv(rows * cols, &mut rng);
+        // make one row exactly zero
+        for v in &mut src[3 * cols..4 * cols] {
+            *v = 0.0;
+        }
+        let mut dst = vec![0.0f32; rows * cols];
+        row_normalize_into(&mut dst, &src, rows, cols, 1e-7);
+        for i in 0..rows {
+            let n = row_sumsq(&dst[i * cols..(i + 1) * cols]).sqrt();
+            if i == 3 {
+                assert_eq!(n, 0.0, "zero row must stay zero");
+            } else {
+                assert!((n - 1.0).abs() < 1e-5, "row {i} norm {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn rownorm_threaded_matches_serial() {
+        let mut rng = Rng::new(7);
+        // large enough to cross PAR_MIN_ELEMS so the threaded path runs
+        let (rows, cols) = (1024, 513);
+        let src = randv(rows * cols, &mut rng);
+        let mut serial = vec![0.0f32; rows * cols];
+        row_normalize_rows(&mut serial, &src, cols, 1e-7);
+        set_num_threads(5);
+        let mut par = vec![0.0f32; rows * cols];
+        row_normalize_into(&mut par, &src, rows, cols, 1e-7);
+        set_num_threads(0);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn dot_matches_sequential() {
+        let mut rng = Rng::new(8);
+        for len in [0usize, 1, 7, 8, 9, 64, 100] {
+            let x = randv(len, &mut rng);
+            let y = randv(len, &mut rng);
+            let seq: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert!((dot(&x, &y) - seq).abs() < 1e-3 * (1.0 + seq.abs()));
+        }
+    }
+}

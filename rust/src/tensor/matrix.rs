@@ -1,7 +1,14 @@
 //! Dense row-major f32 matrix with exactly the operations the optimizer
-//! references and analysis passes need. Matmul is cache-blocked; everything
-//! else is straightforward slice arithmetic.
+//! references and analysis passes need.
+//!
+//! The hot operations (`matmul`, `gram`, `transpose`, `row_normalize`,
+//! `axpby`) delegate to the register-tiled, multi-threaded kernels in
+//! [`super::kernels`], and each has an allocation-free `_into(dst)` variant
+//! for use with a [`super::Workspace`]. The seed's single-threaded scalar
+//! implementations are kept as `*_naive` — they are the parity baseline
+//! for the kernel tests and the "before" side of `benches/precond.rs`.
 
+use crate::tensor::kernels;
 use crate::util::Rng;
 
 /// Dense row-major matrix of f32.
@@ -53,6 +60,12 @@ impl Matrix {
         &mut self.data
     }
 
+    /// Consume the matrix, returning its backing buffer (used by
+    /// [`super::Workspace`] to recycle storage).
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
     /// Element accessor.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f32 {
@@ -68,19 +81,49 @@ impl Matrix {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Copy another matrix's contents into this one (shapes must match).
+    pub fn copy_from(&mut self, src: &Matrix) {
+        assert_eq!((self.rows, self.cols), (src.rows, src.cols), "copy_from shape");
+        self.data.copy_from_slice(&src.data);
+    }
+
     /// Transpose into a new matrix.
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                out.data[j * self.rows + i] = self.data[i * self.cols + j];
-            }
-        }
+        self.transpose_into(&mut out);
         out
     }
 
-    /// Cache-blocked matmul: `self (m×k) · other (k×n)`.
+    /// Transpose into a preallocated `cols × rows` matrix.
+    pub fn transpose_into(&self, dst: &mut Matrix) {
+        assert_eq!((dst.rows, dst.cols), (self.cols, self.rows), "transpose dst shape");
+        kernels::transpose_into(&mut dst.data, &self.data, self.rows, self.cols);
+    }
+
+    /// Matmul `self (m×k) · other (k×n)` into a new matrix.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// Matmul into a preallocated `m × n` matrix (fully overwritten).
+    pub fn matmul_into(&self, other: &Matrix, dst: &mut Matrix) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        assert_eq!((dst.rows, dst.cols), (self.rows, other.cols), "matmul dst shape");
+        kernels::matmul_into(
+            &mut dst.data,
+            &self.data,
+            &other.data,
+            self.rows,
+            self.cols,
+            other.cols,
+        );
+    }
+
+    /// The seed's cache-blocked scalar matmul, kept as the parity baseline
+    /// and the "before" side of the kernel benchmarks.
+    pub fn matmul_naive(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
@@ -108,6 +151,19 @@ impl Matrix {
     /// Gram matrix `self · selfᵀ` (m×m), the object whose diagonal
     /// dominance Section 3.2 of the paper measures.
     pub fn gram(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.rows);
+        self.gram_into(&mut out);
+        out
+    }
+
+    /// Gram matrix into a preallocated `m × m` matrix.
+    pub fn gram_into(&self, dst: &mut Matrix) {
+        assert_eq!((dst.rows, dst.cols), (self.rows, self.rows), "gram dst shape");
+        kernels::gram_into(&mut dst.data, &self.data, self.rows, self.cols);
+    }
+
+    /// The seed's scalar Gram loop (parity baseline).
+    pub fn gram_naive(&self) -> Matrix {
         let m = self.rows;
         let mut out = Matrix::zeros(m, m);
         for i in 0..m {
@@ -124,14 +180,22 @@ impl Matrix {
 
     /// Elementwise: out = a*self + b*other.
     pub fn axpby(&self, a: f32, other: &Matrix, b: f32) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        self.axpby_into(a, other, b, &mut out);
+        out
+    }
+
+    /// Elementwise `dst = a*self + b*other` into a preallocated matrix.
+    pub fn axpby_into(&self, a: f32, other: &Matrix, b: f32, dst: &mut Matrix) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        let data = self
-            .data
-            .iter()
-            .zip(&other.data)
-            .map(|(x, y)| a * x + b * y)
-            .collect();
-        Matrix { rows: self.rows, cols: self.cols, data }
+        assert_eq!((dst.rows, dst.cols), (self.rows, self.cols), "axpby dst shape");
+        kernels::axpby_into(&mut dst.data, a, &self.data, b, &other.data);
+    }
+
+    /// Elementwise `self = a*self + b*other`, in place.
+    pub fn axpby_inplace(&mut self, a: f32, other: &Matrix, b: f32) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        kernels::axpby_inplace(&mut self.data, a, &other.data, b);
     }
 
     /// In-place scale.
@@ -144,13 +208,28 @@ impl Matrix {
     /// Row-wise ℓ2 norms, `‖V_{i,:}‖₂` for each i.
     pub fn row_norms(&self) -> Vec<f32> {
         (0..self.rows)
-            .map(|i| self.row(i).iter().map(|x| x * x).sum::<f32>().sqrt())
+            .map(|i| kernels::row_sumsq(self.row(i)).sqrt())
             .collect()
     }
 
     /// The RMNP preconditioned direction: row-wise ℓ2 normalization
     /// `RN(V)_{i,:} = V_{i,:} / max(‖V_{i,:}‖₂, eps)` (Algorithm 2, line 5).
+    /// The `max(‖row‖, eps)` floor matches
+    /// `python/compile/kernels/rownorm.py` — zero rows normalize to zero.
     pub fn row_normalize(&self, eps: f32) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        self.row_normalize_into(&mut out, eps);
+        out
+    }
+
+    /// Row normalization into a preallocated same-shape matrix.
+    pub fn row_normalize_into(&self, dst: &mut Matrix, eps: f32) {
+        assert_eq!((dst.rows, dst.cols), (self.rows, self.cols), "rownorm dst shape");
+        kernels::row_normalize_into(&mut dst.data, &self.data, self.rows, self.cols, eps);
+    }
+
+    /// The seed's clone-then-scale row normalization (parity baseline).
+    pub fn row_normalize_naive(&self, eps: f32) -> Matrix {
         let mut out = self.clone();
         for i in 0..self.rows {
             let norm = self.row(i).iter().map(|x| x * x).sum::<f32>().sqrt();
@@ -209,6 +288,15 @@ mod tests {
     }
 
     #[test]
+    fn matmul_kernel_bitwise_matches_seed_path() {
+        // same per-element accumulation order => identical results
+        let mut rng = Rng::new(21);
+        let a = Matrix::randn(19, 70, 1.0, &mut rng);
+        let b = Matrix::randn(70, 23, 1.0, &mut rng);
+        assert_eq!(a.matmul(&b), a.matmul_naive(&b));
+    }
+
+    #[test]
     fn transpose_involution() {
         let mut rng = Rng::new(3);
         let a = Matrix::randn(4, 9, 1.0, &mut rng);
@@ -223,6 +311,19 @@ mod tests {
         let g2 = a.matmul(&a.transpose());
         for (x, y) in g1.data().iter().zip(g2.data()) {
             assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gram_matches_naive_baseline() {
+        let mut rng = Rng::new(14);
+        for (m, k) in [(1, 4), (6, 11), (17, 33), (32, 8)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let fast = a.gram();
+            let naive = a.gram_naive();
+            for (x, y) in fast.data().iter().zip(naive.data()) {
+                assert!((x - y).abs() < 1e-4, "({m},{k}): {x} vs {y}");
+            }
         }
     }
 
@@ -244,10 +345,73 @@ mod tests {
     }
 
     #[test]
+    fn row_normalize_matches_python_oracle() {
+        // hard-coded values from python/compile/kernels/ref.py::rownorm_ref
+        // (numpy f32, eps = 1e-7, max(norm, eps) floor)
+        let a = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let want = [0.267261, 0.534522, 0.801784, 0.455842, 0.569803, 0.683763];
+        for (got, want) in a.row_normalize(1e-7).data().iter().zip(want) {
+            assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+        }
+        // zero rows stay zero under the max(norm, eps) semantics
+        let b = Matrix::from_vec(
+            3,
+            4,
+            vec![0.5, -1.5, 2.0, 0.0, 0.0, 0.0, 0.0, 0.0, 3.0, 4.0, 0.0, 0.0],
+        );
+        let want = [
+            0.196116, -0.588348, 0.784465, 0.0, 0.0, 0.0, 0.0, 0.0, 0.6, 0.8, 0.0,
+            0.0,
+        ];
+        for (got, want) in b.row_normalize(1e-7).data().iter().zip(want) {
+            assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn row_normalize_matches_naive_baseline() {
+        let mut rng = Rng::new(15);
+        for (m, n) in [(1, 1), (8, 16), (16, 8), (5, 33)] {
+            let a = Matrix::randn(m, n, 2.0, &mut rng);
+            let fast = a.row_normalize(1e-7);
+            let naive = a.row_normalize_naive(1e-7);
+            for (x, y) in fast.data().iter().zip(naive.data()) {
+                assert!((x - y).abs() < 1e-6, "({m},{n}): {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
     fn axpby_linear() {
         let a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
         let b = Matrix::from_vec(1, 3, vec![10.0, 10.0, 10.0]);
         let c = a.axpby(2.0, &b, 0.5);
         assert_eq!(c.data(), &[7.0, 9.0, 11.0]);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ones() {
+        let mut rng = Rng::new(16);
+        let a = Matrix::randn(9, 13, 1.0, &mut rng);
+        let b = Matrix::randn(13, 7, 1.0, &mut rng);
+        let mut dst = Matrix::zeros(9, 7);
+        a.matmul_into(&b, &mut dst);
+        assert_eq!(dst, a.matmul(&b));
+        let mut g = Matrix::zeros(9, 9);
+        a.gram_into(&mut g);
+        assert_eq!(g, a.gram());
+        let mut t = Matrix::zeros(13, 9);
+        a.transpose_into(&mut t);
+        assert_eq!(t, a.transpose());
+        let a2 = Matrix::randn(9, 13, 1.0, &mut rng);
+        let mut s = Matrix::zeros(9, 13);
+        a.axpby_into(1.5, &a2, -0.5, &mut s);
+        assert_eq!(s, a.axpby(1.5, &a2, -0.5));
+        let mut ip = a.clone();
+        ip.axpby_inplace(1.5, &a2, -0.5);
+        assert_eq!(ip, s);
+        let mut rn = Matrix::zeros(9, 13);
+        a.row_normalize_into(&mut rn, 1e-7);
+        assert_eq!(rn, a.row_normalize(1e-7));
     }
 }

@@ -1,13 +1,32 @@
-//! Host-side f32 matrix substrate.
+//! Host-side f32 tensor substrate: matrix type, kernels, scratch arena.
 //!
-//! The PJRT artifacts do all heavy compute; this module exists so the crate
-//! can (a) run exact pure-rust reference implementations of every optimizer
-//! for cross-checking the HLO path, (b) compute analysis metrics (Gram
-//! diagonal dominance) on checkpoints, and (c) property-test the paper's
-//! lemmas without any Python in the loop.
+//! Layered as:
+//!
+//! * [`kernels`] — the performance layer: register-tiled matmul/Gram
+//!   microkernels, blocked transpose, fused row normalization, all with
+//!   caller-provided `dst` buffers and row-block multi-threading via
+//!   `std::thread::scope`. The thread count comes from the
+//!   [`kernels::set_num_threads`] knob (config key `perf.threads`), the
+//!   `RMNP_THREADS` env var, or `available_parallelism`, in that order.
+//! * [`Matrix`] — the ergonomic owner type. Hot ops delegate to
+//!   [`kernels`] and expose `_into(dst)` variants that do not allocate;
+//!   the seed's scalar paths survive as `*_naive` parity baselines.
+//! * [`Workspace`] — a best-fit scratch-buffer pool so multi-buffer
+//!   pipelines (Newton–Schulz iterations, fused optimizer steps) run
+//!   allocation-free after warmup.
+//! * [`norms`](self) — the paper's norm zoo (Section 5.1) used by the
+//!   lemma property tests.
+//!
+//! The PJRT artifacts do all heavy *training* compute when the `pjrt`
+//! feature is on; this module is the native path: exact pure-rust
+//! reference implementations for cross-checking, analysis metrics on
+//! checkpoints, and the Table 2/3 native benchmarks.
 
+pub mod kernels;
 mod matrix;
 mod norms;
+mod workspace;
 
 pub use matrix::Matrix;
 pub use norms::{dual_pairing, frobenius, inf2_norm, one2_norm};
+pub use workspace::Workspace;

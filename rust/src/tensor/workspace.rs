@@ -1,0 +1,150 @@
+//! Scratch-buffer arena so hot loops run allocation-free.
+//!
+//! A [`Workspace`] owns a pool of `Vec<f32>` buffers. [`Workspace::take`]
+//! hands out a zeroed buffer of the requested length, reusing pooled
+//! capacity best-fit (smallest sufficient buffer wins, so a steady-state
+//! call pattern maps each request onto the same buffer every time);
+//! [`Workspace::give`] returns it. After the first pass over a fixed set
+//! of shapes ("warmup"), no further heap allocation happens — verified by
+//! the counting-allocator test in `tests/alloc.rs` and the
+//! [`Workspace::fresh_allocs`] counter.
+
+use super::Matrix;
+
+/// Reusable pool of f32 scratch buffers.
+#[derive(Clone, Debug, Default)]
+pub struct Workspace {
+    pool: Vec<Vec<f32>>,
+    fresh_allocs: usize,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// A zero-filled buffer of exactly `len` elements. Reuses the pooled
+    /// buffer with the smallest sufficient capacity; allocates (and counts
+    /// it) only when no pooled buffer is large enough.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<(usize, usize)> = None; // (index, capacity)
+        for (idx, b) in self.pool.iter().enumerate() {
+            let cap = b.capacity();
+            let better = match best {
+                None => cap >= len,
+                Some((_, c)) => cap >= len && cap < c,
+            };
+            if better {
+                best = Some((idx, cap));
+            }
+        }
+        let mut buf = match best {
+            Some((idx, _)) => self.pool.swap_remove(idx),
+            None => Vec::new(),
+        };
+        if buf.capacity() < len {
+            self.fresh_allocs += 1;
+        }
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn give(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.pool.push(buf);
+        }
+    }
+
+    /// A zeroed `rows × cols` matrix backed by a pooled buffer.
+    pub fn take_matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, self.take(rows * cols))
+    }
+
+    /// Return a matrix's backing buffer to the pool.
+    pub fn give_matrix(&mut self, m: Matrix) {
+        self.give(m.into_vec());
+    }
+
+    /// Number of times `take` had to grow/allocate (warmup cost). Stable
+    /// across steady-state reuse.
+    pub fn fresh_allocs(&self) -> usize {
+        self.fresh_allocs
+    }
+
+    /// Number of buffers currently parked in the pool.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn take_is_always_zeroed_no_state_leaks() {
+        // property: whatever garbage a previous user wrote, a fresh take
+        // of any size sees only zeros
+        let mut ws = Workspace::new();
+        let mut rng = Rng::new(1);
+        for round in 0..50 {
+            let len = 1 + rng.below(256) as usize;
+            let mut buf = ws.take(len);
+            assert!(
+                buf.iter().all(|&x| x == 0.0),
+                "leaked state in round {round}"
+            );
+            rng.fill_normal(&mut buf, 10.0); // scribble
+            ws.give(buf);
+        }
+    }
+
+    #[test]
+    fn steady_state_reuse_stops_allocating() {
+        let mut ws = Workspace::new();
+        // warmup: the NS5-like shape set
+        let shapes = [(8usize, 24usize), (8, 8), (8, 8), (8, 8), (8, 24)];
+        let run = |ws: &mut Workspace| {
+            let taken: Vec<Matrix> =
+                shapes.iter().map(|&(r, c)| ws.take_matrix(r, c)).collect();
+            for m in taken {
+                ws.give_matrix(m);
+            }
+        };
+        run(&mut ws);
+        let after_warmup = ws.fresh_allocs();
+        assert!(after_warmup > 0);
+        for _ in 0..20 {
+            run(&mut ws);
+        }
+        assert_eq!(ws.fresh_allocs(), after_warmup, "steady state must not allocate");
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient() {
+        let mut ws = Workspace::new();
+        let small = ws.take(10);
+        let big = ws.take(1000);
+        ws.give(big);
+        ws.give(small);
+        let b = ws.take(10);
+        assert!(b.capacity() < 1000, "should reuse the small buffer");
+        ws.give(b);
+        assert_eq!(ws.pooled(), 2);
+    }
+
+    #[test]
+    fn matrix_roundtrip_preserves_capacity() {
+        let mut ws = Workspace::new();
+        let m = ws.take_matrix(4, 6);
+        assert_eq!((m.rows(), m.cols()), (4, 6));
+        ws.give_matrix(m);
+        let allocs = ws.fresh_allocs();
+        let m2 = ws.take_matrix(3, 8);
+        ws.give_matrix(m2);
+        assert_eq!(ws.fresh_allocs(), allocs, "same size class reuses");
+    }
+}

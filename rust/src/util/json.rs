@@ -55,6 +55,45 @@ impl Json {
             _ => None,
         }
     }
+    /// Serialize to compact JSON text. Inverse of [`parse`] (non-finite
+    /// numbers, which JSON cannot represent, render as `null`).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => render_num(*n, out),
+            Json::Str(s) => render_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, it) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    it.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_str(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
     /// Convenience: `self[key]` as &str or error.
     pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
         self.get(key)
@@ -65,6 +104,37 @@ impl Json {
         self.get(key)
             .ok_or_else(|| anyhow::anyhow!("json: missing key `{key}`"))
     }
+}
+
+fn render_num(n: f64, out: &mut String) {
+    use std::fmt::Write as _;
+    if !n.is_finite() {
+        out.push_str("null");
+    } else if n == n.trunc() && n.abs() < 1e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        // Rust's shortest round-trip e-notation is valid JSON number syntax
+        let _ = write!(out, "{n:e}");
+    }
+}
+
+fn render_str(s: &str, out: &mut String) {
+    use std::fmt::Write as _;
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -299,5 +369,24 @@ mod tests {
     fn unicode_passthrough() {
         let j = parse(r#""héllo ∑""#).unwrap();
         assert_eq!(j.as_str(), Some("héllo ∑"));
+    }
+
+    #[test]
+    fn render_roundtrips() {
+        let j = parse(
+            r#"{"a": [1, -2.5, 1e-7, true, null], "s": "quote \" and \\ and\nnewline", "n": {"x": 12.9}}"#,
+        )
+        .unwrap();
+        let re = parse(&j.render()).unwrap();
+        assert_eq!(j, re);
+        // integers render without exponents, strings escape correctly
+        let txt = Json::Arr(vec![
+            Json::Num(3.0),
+            Json::Num(0.25),
+            Json::Str("a\"b".into()),
+            Json::Num(f64::NAN),
+        ])
+        .render();
+        assert_eq!(txt, r#"[3,2.5e-1,"a\"b",null]"#);
     }
 }

@@ -1,0 +1,83 @@
+//! Counting-allocator proof of the allocation-free optimizer hot path:
+//! after warmup, `RmnpState::step` and (with a warm workspace)
+//! `MuonState::step` perform zero heap allocations per call.
+//!
+//! This file intentionally contains a single test: the counting allocator
+//! is process-global, so concurrent tests would pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use rmnp::optim::{MuonState, RmnpState};
+use rmnp::tensor::Matrix;
+use rmnp::util::Rng;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOC_CALLS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn optimizer_steps_are_allocation_free_after_warmup() {
+    // single-threaded kernels: spawning scoped threads allocates, which is
+    // thread machinery, not per-element work — the zero-alloc contract is
+    // for the compute path
+    rmnp::tensor::kernels::set_num_threads(1);
+    let mut rng = Rng::new(7);
+
+    // --- RMNP: fused step never allocates, even on the first call ---
+    let g = Matrix::randn(96, 64, 1.0, &mut rng);
+    let mut w = Matrix::randn(96, 64, 0.1, &mut rng);
+    let mut st = RmnpState::new(96, 64);
+    st.step(&mut w, &g, 1e-3); // warmup (cache warming only)
+    let before = allocs();
+    for _ in 0..10 {
+        st.step(&mut w, &g, 1e-3);
+    }
+    assert_eq!(
+        allocs(),
+        before,
+        "RmnpState::step must be allocation-free per call"
+    );
+
+    // --- Muon: NS5 intermediates come from the state's workspace, so the
+    // steady state after the first (warmup) call is allocation-free ---
+    let g = Matrix::randn(48, 96, 1.0, &mut rng);
+    let mut w = Matrix::randn(48, 96, 0.1, &mut rng);
+    let mut st = MuonState::new(48, 96);
+    st.step(&mut w, &g, 1e-3); // warmup: fills the workspace pool
+    let before = allocs();
+    for _ in 0..5 {
+        st.step(&mut w, &g, 1e-3);
+    }
+    assert_eq!(
+        allocs(),
+        before,
+        "warm MuonState::step must be allocation-free per call"
+    );
+    assert_eq!(st.workspace.fresh_allocs(), 6, "one alloc per NS5 buffer");
+}

@@ -51,6 +51,7 @@ fn quick_cfg(engine_model: &str, optimizer: &str, steps: usize, name: &str) -> R
         checkpoint_every: 0,
         out_dir: tmp_out(name),
         artifacts: "artifacts".into(),
+        threads: 0,
     }
 }
 

@@ -1,0 +1,118 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The repo builds in environments without the crates.io registry, so this
+//! vendored shim provides exactly the API surface the `rmnp` crate uses:
+//! [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!` macros,
+//! plus a blanket `From<E: std::error::Error>` so `?` works on std errors.
+//! Swap the path dependency for the real `anyhow` when a registry is
+//! available — no call sites need to change.
+
+use std::fmt;
+
+/// A stringly-typed error value. Unlike the real `anyhow::Error` it keeps
+/// only the rendered message (no backtrace, no source chain), which is all
+/// this crate's error reporting consumes.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`, which keeps
+// this blanket conversion coherent (same trick as the real anyhow).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>`: `Result<T, anyhow::Error>` with an overridable
+/// error type, matching the real crate's alias shape.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($msg:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($msg, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/zzz")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros() {
+        let e: Error = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        let e: Error = anyhow!(String::from("plain"));
+        assert_eq!(e.to_string(), "plain");
+        fn inner(ok: bool) -> Result<u32> {
+            ensure!(ok, "wanted ok, got {ok}");
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(inner(true).unwrap(), 7);
+        assert!(inner(false).is_err());
+    }
+}

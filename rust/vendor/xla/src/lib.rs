@@ -1,0 +1,249 @@
+//! Offline API stub for the XLA/PJRT bindings.
+//!
+//! The real dependency (xla_extension bindings) is unavailable in offline
+//! builds, so this crate mirrors the exact API surface `rmnp`'s `pjrt`
+//! feature consumes and fails at *runtime* with a clear message instead of
+//! failing at *compile* time. That keeps `cargo build --features pjrt`
+//! green everywhere while real-PJRT environments can substitute the actual
+//! bindings via the path dependency without touching rmnp code.
+//!
+//! Every constructor that would touch a device returns
+//! `Err(Error::unavailable())`; pure host-side containers ([`Literal`])
+//! work normally so code paths that only shuttle host data stay testable.
+
+use std::fmt;
+
+/// Error type mirroring the bindings' stringly errors.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable() -> Self {
+        Error(
+            "xla stub: PJRT is unavailable in this build (vendor/xla is an \
+             offline stub; substitute the real bindings to run artifacts)"
+                .to_string(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes the manifest declares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Scalar types that can cross the host boundary.
+pub trait NativeType: Copy + 'static {
+    const TY: ElementType;
+}
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host-side literal: dtype-tagged flat buffer + shape. Fully functional
+/// (the real Literal is host-side too); only device transfer is stubbed.
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Internal constructor dispatch so the public API can stay generic.
+pub trait IntoPayload: NativeType {
+    fn payload(data: Vec<Self>) -> Payload;
+    fn extract(p: &Payload) -> Option<Vec<Self>>;
+}
+impl IntoPayload for f32 {
+    fn payload(data: Vec<Self>) -> Payload {
+        Payload::F32(data)
+    }
+    fn extract(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::F32(v) => Some(v.clone()),
+            Payload::I32(_) => None,
+        }
+    }
+}
+impl IntoPayload for i32 {
+    fn payload(data: Vec<Self>) -> Payload {
+        Payload::I32(data)
+    }
+    fn extract(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::I32(v) => Some(v.clone()),
+            Payload::F32(_) => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: IntoPayload>(v: T) -> Literal {
+        Literal { payload: T::payload(vec![v]), dims: vec![] }
+    }
+
+    /// Rank-1 literal.
+    pub fn vec1<T: IntoPayload>(data: &[T]) -> Literal {
+        Literal {
+            payload: T::payload(data.to_vec()),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    /// Reshape to new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let have = match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+        };
+        if n as usize != have {
+            return Err(Error(format!("reshape {have} elements to {dims:?}")));
+        }
+        let payload = match &self.payload {
+            Payload::F32(v) => Payload::F32(v.clone()),
+            Payload::I32(v) => Payload::I32(v.clone()),
+        };
+        Ok(Literal { payload, dims: dims.to_vec() })
+    }
+
+    /// Flat host copy, checked against the stored dtype.
+    pub fn to_vec<T: IntoPayload>(&self) -> Result<Vec<T>> {
+        T::extract(&self.payload)
+            .ok_or_else(|| Error("literal dtype mismatch".to_string()))
+    }
+
+    /// Stored element type.
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(match &self.payload {
+            Payload::F32(_) => ElementType::F32,
+            Payload::I32(_) => ElementType::S32,
+        })
+    }
+
+    /// Declared dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (stub: retains nothing).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer (stub: cannot be constructed).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Compiled executable (stub: cannot be constructed).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_untupled<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn execute_b_untupled(
+        &self,
+        _args: &[&PjRtBuffer],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// PJRT client (stub: `cpu()` always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable())
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.ty().unwrap(), ElementType::S32);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert!(Literal::scalar(1.0f32).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn device_paths_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}

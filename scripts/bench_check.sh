@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# Perf + lint gate for the native kernel layer.
+#
+#   scripts/bench_check.sh
+#
+# Runs `cargo fmt --check` and `cargo clippy -D warnings`, then the capped
+# precond benchmark (BENCH_MAX_D=256), and fails if any recorded RMNP
+# speedup (Table 2 ratio) or seed-vs-kernel improvement drops below 1.0.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy (default features) =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo bench --bench precond (BENCH_MAX_D=${BENCH_MAX_D:-256}) =="
+BENCH_MAX_D="${BENCH_MAX_D:-256}" BENCH_REPEATS="${BENCH_REPEATS:-2}" \
+    cargo bench --bench precond
+
+echo "== checking BENCH_precond.json =="
+python3 - <<'EOF'
+import json, sys
+
+with open("BENCH_precond.json") as f:
+    doc = json.load(f)
+
+bad = []
+for row in doc["table2"]:
+    if row["speedup"] < 1.0:
+        bad.append(f"table2 {row['model']} speedup {row['speedup']:.2f} < 1.0")
+for d in doc["seed_vs_kernel"]:
+    if d["improvement"] < 1.0:
+        bad.append(
+            f"seed_vs_kernel {d['op']} d={d['d_model']} "
+            f"improvement {d['improvement']:.2f} < 1.0"
+        )
+
+for row in doc["table2"]:
+    print(f"  {row['model']:<6} d={row['d_model']:<5} speedup {row['speedup']:.1f}x")
+for d in doc["seed_vs_kernel"]:
+    print(f"  {d['op']:<8} d={d['d_model']:<5} kernel vs seed {d['improvement']:.2f}x")
+
+if bad:
+    print("FAIL:")
+    for b in bad:
+        print("  " + b)
+    sys.exit(1)
+print("bench check OK")
+EOF
