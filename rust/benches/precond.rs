@@ -24,8 +24,9 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or(2);
     println!(
-        "native precond bench: max_d={max_d} repeats={repeats} threads={}",
-        rmnp::tensor::kernels::num_threads()
+        "native precond bench: max_d={max_d} repeats={repeats} threads={} simd={}",
+        rmnp::tensor::kernels::num_threads(),
+        rmnp::tensor::simd::label()
     );
 
     let rows = precond::run_native(max_d, repeats);
@@ -64,7 +65,23 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let doc = precond::json_report(&rows, &deltas, max_d);
+    // dispatch-ladder delta: the same kernel-layer ops on the scalar rung
+    // vs the AVX2 rung (empty when the CPU has no AVX2/FMA)
+    let simd_deltas = precond::simd_vs_scalar(&compare_ds, repeats.clamp(1, 2));
+    if simd_deltas.is_empty() {
+        println!("simd vs scalar: skipped (no AVX2/FMA on this CPU)");
+    } else {
+        println!("scalar rung vs AVX2 rung (same op, same shape):");
+        for d in &simd_deltas {
+            println!(
+                "  {:<8} d={:<5} ({}x{}): scalar {:>10.4}s  avx2 {:>10.4}s  -> {:.2}x",
+                d.op, d.d_model, d.rows, d.cols, d.scalar_median, d.simd_median,
+                d.speedup
+            );
+        }
+    }
+
+    let doc = precond::json_report(&rows, &deltas, &simd_deltas, max_d);
     report::write(Path::new("BENCH_precond.json"), &doc)?;
     println!("wrote BENCH_precond.json");
     Ok(())

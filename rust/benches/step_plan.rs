@@ -1,0 +1,151 @@
+//! `cargo bench --bench step_plan` — sharded multi-param stepping: a
+//! GPT-2-shaped parameter list stepped sequentially (inner-matmul
+//! threading, PR 1's model) vs through a [`rmnp::optim::StepPlan`]
+//! (across-param sharding on the persistent pool). Writes
+//! `BENCH_step_plan.json` so the multi-param path's trajectory is
+//! comparable across PRs.
+//!
+//! Env knobs: `BENCH_PLAN_D` (RMNP width, default 512), `BENCH_REPEATS`
+//! (samples per measurement, default 3), `RMNP_THREADS`, `RMNP_SIMD`.
+
+use std::path::Path;
+
+use rmnp::bench::report::{self, envelope, int, num, obj, text};
+use rmnp::bench::{bench_n, fmt_secs};
+use rmnp::exp::precond::shape_counts;
+use rmnp::optim::plan::{tasks_from_shapes, OptKind, ParamTask, StepPlan};
+use rmnp::util::{Json, Rng};
+
+struct Case {
+    optimizer: &'static str,
+    d_model: usize,
+    layers: usize,
+    params: usize,
+    elems: usize,
+    seq_median: f64,
+    plan_median: f64,
+    plan_threads: usize,
+}
+
+/// Deterministic gradient fill shared by the baseline and the plan.
+fn fill_grads(tasks: &mut [ParamTask], seed: u64) {
+    for (i, t) in tasks.iter_mut().enumerate() {
+        let mut rng = Rng::new(seed ^ (i as u64 + 1));
+        rng.fill_normal(t.grad.data_mut(), 1.0);
+    }
+}
+
+fn run_case(
+    optimizer: &'static str,
+    kind: OptKind,
+    d: usize,
+    layers: usize,
+    steps_per_iter: usize,
+    repeats: usize,
+) -> Case {
+    let shapes = shape_counts(d, layers);
+    let mut rng = Rng::new(42);
+    // sequential baseline: the PR 1 model — one fused step at a time,
+    // intra-kernel threading active
+    let mut seq_tasks = tasks_from_shapes(&shapes, kind, 0.02, &mut rng);
+    fill_grads(&mut seq_tasks, 7);
+    let params = seq_tasks.len();
+    let elems: usize = seq_tasks.iter().map(|t| t.w.rows() * t.w.cols()).sum();
+    let seq = bench_n(&format!("{optimizer}_seq_d{d}"), steps_per_iter, repeats, || {
+        for t in seq_tasks.iter_mut() {
+            t.step(1e-3);
+        }
+    });
+
+    // sharded plan: same shapes/seeds, across-param pool
+    let mut rng = Rng::new(42);
+    let mut plan_tasks = tasks_from_shapes(&shapes, kind, 0.02, &mut rng);
+    fill_grads(&mut plan_tasks, 7);
+    let mut plan = StepPlan::new(plan_tasks, 0);
+    let plan_threads = plan.threads();
+    let sharded = bench_n(&format!("{optimizer}_plan_d{d}"), steps_per_iter, repeats, || {
+        plan.step_all(1e-3);
+    });
+
+    println!("  {}", seq.report_line());
+    println!("  {}", sharded.report_line());
+    println!(
+        "  -> {:.2}x across {} params ({} workers)",
+        seq.median() / sharded.median().max(1e-12),
+        params,
+        plan_threads
+    );
+    Case {
+        optimizer,
+        d_model: d,
+        layers,
+        params,
+        elems,
+        seq_median: seq.median(),
+        plan_median: sharded.median(),
+        plan_threads,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let d: usize = std::env::var("BENCH_PLAN_D")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
+    let repeats: usize = std::env::var("BENCH_REPEATS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    println!(
+        "step-plan bench: d={d} repeats={repeats} threads={} simd={}",
+        rmnp::tensor::kernels::num_threads(),
+        rmnp::tensor::simd::label()
+    );
+
+    println!("RMNP sharded vs sequential (d={d}, 6 layers):");
+    let rmnp_case = run_case("rmnp", OptKind::Rmnp, d, 6, 5, repeats);
+
+    // Muon's NS5 makes big widths CPU-hostile; half width and fewer
+    // layers keep the bench tractable while NS5 still dominates
+    let muon_d = (d / 2).max(128);
+    println!("Muon sharded vs sequential (d={muon_d}, 2 layers):");
+    let muon_case = run_case("muon", OptKind::Muon, muon_d, 2, 1, repeats);
+
+    let cases = [rmnp_case, muon_case];
+    // sharding must not make multi-param stepping slower than the
+    // sequential loop (some headroom for 1-2 core runners and noise)
+    for c in &cases {
+        let speedup = c.seq_median / c.plan_median.max(1e-12);
+        if speedup < 0.9 {
+            eprintln!(
+                "WARNING: {} plan slower than sequential: {speedup:.2}x \
+                 ({} workers)",
+                c.optimizer, c.plan_threads
+            );
+        }
+    }
+
+    let entries: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("optimizer", text(c.optimizer)),
+                ("d_model", int(c.d_model)),
+                ("layers", int(c.layers)),
+                ("params", int(c.params)),
+                ("elems", int(c.elems)),
+                ("seq_median_s", num(c.seq_median)),
+                ("plan_median_s", num(c.plan_median)),
+                ("speedup", num(c.seq_median / c.plan_median.max(1e-12))),
+                ("plan_threads", int(c.plan_threads)),
+            ])
+        })
+        .collect();
+    let doc = envelope("step_plan", vec![("cases", Json::Arr(entries))]);
+    report::write(Path::new("BENCH_step_plan.json"), &doc)?;
+    println!(
+        "wrote BENCH_step_plan.json (rmnp plan step {})",
+        fmt_secs(cases[0].plan_median)
+    );
+    Ok(())
+}

@@ -47,11 +47,13 @@ pub fn bench_json(r: &BenchResult) -> Json {
     ])
 }
 
-/// Standard envelope: bench name + thread count + payload fields.
+/// Standard envelope: bench name + thread count + SIMD rung + payload
+/// fields.
 pub fn envelope(bench: &str, fields: Vec<(&str, Json)>) -> Json {
     let mut pairs = vec![
         ("bench", text(bench)),
         ("threads", int(crate::tensor::kernels::num_threads())),
+        ("simd", text(crate::tensor::simd::label())),
     ];
     pairs.extend(fields);
     obj(pairs)

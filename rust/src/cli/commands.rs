@@ -222,6 +222,47 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
             println!("{}", exp::cliprate::format(&summaries));
             Ok(())
         }
+        // native sharded multi-param stepping demo/bench (no artifacts)
+        Some("stepplan") => {
+            use crate::bench::bench_n;
+            use crate::optim::plan::{self, OptKind};
+            use crate::tensor::simd;
+            use crate::util::Rng;
+
+            let d = args.usize_or("d", 512);
+            let layers = args.usize_or("layers", 6);
+            let steps = args.usize_or("steps", 5);
+            let threads = args.usize_or("threads", 0);
+            let kind = OptKind::parse(args.str_or("optimizer", "rmnp"))?;
+            if let Some(s) = args.flag("simd") {
+                simd::set_mode(simd::SimdMode::parse(s)?);
+            }
+            let shapes = exp::precond::shape_counts(d, layers);
+            let mut rng = Rng::new(opts.seed);
+            let tasks = plan::tasks_from_shapes(&shapes, kind, 0.02, &mut rng);
+            let mut plan = plan::StepPlan::new(tasks, threads);
+            for i in 0..plan.len() {
+                let grad_seed = opts.seed ^ (i as u64 + 1);
+                plan.with_task(i, |t| {
+                    let mut grng = Rng::new(grad_seed);
+                    grng.fill_normal(t.grad.data_mut(), 1.0);
+                });
+            }
+            println!(
+                "step plan: {} params ({} elems) at d={d}, optimizer {}, \
+                 pool {} workers, simd {}",
+                plan.len(),
+                plan.total_elems(),
+                kind.name(),
+                plan.threads(),
+                simd::label()
+            );
+            let elems = plan.total_elems();
+            let r = bench_n("step_all", steps.max(1), 2, || plan.step_all(1e-3));
+            println!("  {}", r.report_line());
+            println!("  {:.1}M params/s", elems as f64 / r.median() / 1e6);
+            Ok(())
+        }
         #[cfg(feature = "pjrt")]
         Some("all") => run_all(args, &opts),
         #[cfg(not(feature = "pjrt"))]

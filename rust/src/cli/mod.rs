@@ -28,6 +28,8 @@ USAGE:
   rmnp exp ablation-embed [--steps N]
   rmnp exp ssm|vision     [--steps N]
   rmnp exp cliprate       [--runs DIR]
+  rmnp exp stepplan       [--d 512] [--layers 6] [--optimizer rmnp|muon|adamw]
+                          [--steps N] [--threads N] [--simd auto|avx2|scalar]
   rmnp exp all            [--steps N] (scaled-down full suite)
   rmnp report cliprate    [--runs DIR]
   rmnp data sample        [--corpus markov] [--n 64] [--seed 1]
@@ -36,6 +38,8 @@ USAGE:
 
 Common flags: --artifacts DIR (default artifacts), --out DIR (default runs),
               --seed N, --verbose
+Perf knobs:   --set perf.threads=N  --set perf.simd=auto|avx2|scalar
+              --set perf.plan_threads=N  (env: RMNP_THREADS, RMNP_SIMD)
 ";
 
 /// CLI entry point (called from main).
@@ -44,6 +48,15 @@ pub fn run() -> anyhow::Result<()> {
     if args.has("verbose") {
         crate::util::logging::set_level(crate::util::Level::Debug);
     }
+    // announce the dispatch ladder's detection result once at startup
+    // (stderr). `perf.*` config overrides apply later, per command — the
+    // paths that apply them (`RunConfig::apply_perf`, `exp stepplan
+    // --simd`) announce the final active rung themselves.
+    crate::info!(
+        "kernels: detected simd={} threads={}",
+        crate::tensor::simd::label(),
+        crate::tensor::kernels::num_threads()
+    );
     match args.subcommand(0) {
         Some("train") => commands::train(&args),
         Some("exp") => commands::exp(&args),

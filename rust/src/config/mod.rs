@@ -81,6 +81,14 @@ pub struct RunConfig {
     /// `RMNP_THREADS` env var, else `available_parallelism`). Applied via
     /// [`crate::tensor::kernels::set_num_threads`].
     pub threads: usize,
+    /// SIMD dispatch mode (`perf.simd`): "auto" (detect AVX2+FMA once at
+    /// startup, the default), "avx2", or "scalar". Applied via
+    /// [`crate::tensor::simd::set_mode`]; the `RMNP_SIMD` env var covers
+    /// the auto case.
+    pub simd: String,
+    /// `StepPlan` worker count (`perf.plan_threads`); 0 = the kernel
+    /// thread count.
+    pub plan_threads: usize,
 }
 
 impl Default for RunConfig {
@@ -100,6 +108,8 @@ impl Default for RunConfig {
             out_dir: PathBuf::from("runs/default"),
             artifacts: PathBuf::from("artifacts"),
             threads: 0,
+            simd: "auto".into(),
+            plan_threads: 0,
         }
     }
 }
@@ -133,6 +143,15 @@ impl RunConfig {
             d.int_or("train.checkpoint_every", self.checkpoint_every as i64) as usize;
         // .max(0) so a negative value clamps instead of wrapping to 2^64-1
         self.threads = d.int_or("perf.threads", self.threads as i64).max(0) as usize;
+        self.plan_threads =
+            d.int_or("perf.plan_threads", self.plan_threads as i64).max(0) as usize;
+        if let Some(v) = d.get("perf.simd") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("perf.simd must be a string"))?;
+            crate::tensor::simd::SimdMode::parse(s)?; // reject bad values early
+            self.simd = s.to_string();
+        }
         if let Some(v) = d.get("data.corpus") {
             self.data = DataSpec::parse(
                 v.as_str().ok_or_else(|| anyhow::anyhow!("data.corpus must be a string"))?,
@@ -181,6 +200,22 @@ impl RunConfig {
     pub fn tag(&self) -> String {
         format!("{}_{}", self.model, self.optimizer)
     }
+
+    /// Apply the perf knobs to the process-global kernel configuration
+    /// (thread count + SIMD dispatch mode) and announce the now-active
+    /// rung — the startup banner only shows the pre-override detection.
+    pub fn apply_perf(&self) -> anyhow::Result<()> {
+        if self.threads > 0 {
+            crate::tensor::kernels::set_num_threads(self.threads);
+        }
+        crate::tensor::simd::set_mode(crate::tensor::simd::SimdMode::parse(&self.simd)?);
+        crate::info!(
+            "kernels: active simd={} threads={}",
+            crate::tensor::simd::label(),
+            crate::tensor::kernels::num_threads()
+        );
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -226,6 +261,12 @@ corpus = "zipf"
         cfg.apply_override("model.tag=ssm_base").unwrap();
         cfg.apply_override("perf.threads=4").unwrap();
         assert_eq!(cfg.threads, 4);
+        cfg.apply_override("perf.plan_threads=3").unwrap();
+        assert_eq!(cfg.plan_threads, 3);
+        cfg.apply_override("perf.simd=scalar").unwrap();
+        assert_eq!(cfg.simd, "scalar");
+        assert!(cfg.apply_override("perf.simd=sse9").is_err());
+        assert_eq!(cfg.simd, "scalar", "bad simd value must not stick");
         assert_eq!(cfg.steps, 42);
         assert!((cfg.lr - 0.5).abs() < 1e-12);
         assert_eq!(cfg.model, "ssm_base");

@@ -73,9 +73,7 @@ fn make_feed(engine: &Engine, cfg: &RunConfig, split: u64) -> anyhow::Result<Fee
 /// `cfg.out_dir`. Returns the summary.
 pub fn run(engine: &Engine, cfg: &RunConfig) -> anyhow::Result<RunResult> {
     let t_start = std::time::Instant::now();
-    if cfg.threads > 0 {
-        crate::tensor::kernels::set_num_threads(cfg.threads);
-    }
+    cfg.apply_perf()?;
     std::fs::create_dir_all(&cfg.out_dir)?;
     let mut sess =
         TrainSession::new(engine, &cfg.model, &cfg.optimizer, cfg.seed as i32)?;

@@ -29,7 +29,7 @@ use crate::analysis::report::markdown_table;
 use crate::bench::{bench_n, fmt_secs};
 use crate::info;
 use crate::optim::{newton_schulz5_into, newton_schulz5_naive, ROW_EPS};
-use crate::tensor::{Matrix, Workspace};
+use crate::tensor::{simd, Matrix, Workspace};
 use crate::util::{human_bytes, Rng};
 
 #[cfg(feature = "pjrt")]
@@ -61,6 +61,22 @@ pub struct SeedDelta {
     /// `seed_median / kernel_median` — ≥ 2.0 is the acceptance bar at
     /// d_model ≥ 512.
     pub improvement: f64,
+}
+
+/// One SIMD-vs-scalar measurement of a single operator shape: the same
+/// kernel-layer op timed on the scalar rung and on the AVX2 rung of the
+/// dispatch ladder.
+#[derive(Clone, Debug)]
+pub struct SimdDelta {
+    pub op: String,
+    pub d_model: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub scalar_median: f64,
+    pub simd_median: f64,
+    /// `scalar_median / simd_median` — the acceptance bar is ≥ 1.0 at
+    /// d_model ≥ 512 whenever AVX2 is available.
+    pub speedup: f64,
 }
 
 /// A GPT-2 config in the native shape registry (Table 4 analogue).
@@ -196,8 +212,70 @@ pub fn seed_vs_kernel(d_models: &[usize], repeats: usize) -> Vec<SeedDelta> {
     out
 }
 
+/// AVX2-rung vs scalar-rung timings on the MLP-up shape `(4d, d)` for
+/// each requested `d_model` — the acceptance numbers for this PR's SIMD
+/// microkernel layer. Empty when the CPU has no AVX2/FMA (the dispatch
+/// ladder then only has one rung to measure) and when the operator
+/// forced the scalar rung (`perf.simd = "scalar"` / `RMNP_SIMD=scalar`)
+/// — an explicit portable-rung request must not be overridden just to
+/// take a measurement. Restores the previously requested SIMD mode
+/// before returning.
+pub fn simd_vs_scalar(d_models: &[usize], repeats: usize) -> Vec<SimdDelta> {
+    if !simd::avx2_available() || simd::active() == simd::SimdPath::Scalar {
+        return Vec::new();
+    }
+    let prev = simd::mode();
+    let mut rng = Rng::new(99);
+    let mut ws = Workspace::new();
+    let mut out = Vec::new();
+    for &d in d_models {
+        let (m, n) = (4 * d, d);
+        let v = Matrix::randn(m, n, 0.02, &mut rng);
+        let mut dst = Matrix::zeros(m, n);
+        simd::set_mode(simd::SimdMode::Scalar);
+        let scalar_ns = bench_n(&format!("scalar_ns5_{m}x{n}"), 1, repeats, || {
+            newton_schulz5_into(&v, 5, &mut ws, &mut dst);
+        });
+        let scalar_rn = bench_n(&format!("scalar_rownorm_{m}x{n}"), 10, repeats, || {
+            v.row_normalize_into(&mut dst, ROW_EPS);
+        });
+        simd::set_mode(simd::SimdMode::Avx2);
+        let simd_ns = bench_n(&format!("avx2_ns5_{m}x{n}"), 1, repeats, || {
+            newton_schulz5_into(&v, 5, &mut ws, &mut dst);
+        });
+        let simd_rn = bench_n(&format!("avx2_rownorm_{m}x{n}"), 10, repeats, || {
+            v.row_normalize_into(&mut dst, ROW_EPS);
+        });
+        out.push(SimdDelta {
+            op: "ns5".into(),
+            d_model: d,
+            rows: m,
+            cols: n,
+            scalar_median: scalar_ns.median(),
+            simd_median: simd_ns.median(),
+            speedup: scalar_ns.median() / simd_ns.median().max(1e-12),
+        });
+        out.push(SimdDelta {
+            op: "rownorm".into(),
+            d_model: d,
+            rows: m,
+            cols: n,
+            scalar_median: scalar_rn.median(),
+            simd_median: simd_rn.median(),
+            speedup: scalar_rn.median() / simd_rn.median().max(1e-12),
+        });
+    }
+    simd::set_mode(prev);
+    out
+}
+
 /// Assemble the `BENCH_precond.json` document.
-pub fn json_report(rows: &[PrecondRow], deltas: &[SeedDelta], max_d: usize) -> crate::util::Json {
+pub fn json_report(
+    rows: &[PrecondRow],
+    deltas: &[SeedDelta],
+    simd_deltas: &[SimdDelta],
+    max_d: usize,
+) -> crate::util::Json {
     use crate::bench::report::{envelope, int, num, obj, text};
     use crate::util::Json;
     let table: Vec<Json> = rows
@@ -227,12 +305,27 @@ pub fn json_report(rows: &[PrecondRow], deltas: &[SeedDelta], max_d: usize) -> c
             ])
         })
         .collect();
+    let simd_arr: Vec<Json> = simd_deltas
+        .iter()
+        .map(|d| {
+            obj(vec![
+                ("op", text(&d.op)),
+                ("d_model", int(d.d_model)),
+                ("rows", int(d.rows)),
+                ("cols", int(d.cols)),
+                ("scalar_median_s", num(d.scalar_median)),
+                ("simd_median_s", num(d.simd_median)),
+                ("speedup", num(d.speedup)),
+            ])
+        })
+        .collect();
     envelope(
         "precond",
         vec![
             ("max_d", int(max_d)),
             ("table2", Json::Arr(table)),
             ("seed_vs_kernel", Json::Arr(before_after)),
+            ("simd_vs_scalar", Json::Arr(simd_arr)),
         ],
     )
 }
@@ -405,12 +498,29 @@ mod tests {
             kernel_median: 1.0,
             improvement: 3.0,
         }];
-        let doc = json_report(&rows, &deltas, 512);
+        let simd_deltas = vec![SimdDelta {
+            op: "ns5".into(),
+            d_model: 512,
+            rows: 2048,
+            cols: 512,
+            scalar_median: 2.0,
+            simd_median: 1.0,
+            speedup: 2.0,
+        }];
+        let doc = json_report(&rows, &deltas, &simd_deltas, 512);
         let back = crate::util::json::parse(&doc.render()).unwrap();
         assert_eq!(back.req_str("bench").unwrap(), "precond");
+        assert!(back.get("simd").is_some(), "envelope must record the rung");
         let t2 = back.get("table2").unwrap().idx(0).unwrap();
         assert_eq!(t2.get("d_model").unwrap().as_usize(), Some(512));
         let sk = back.get("seed_vs_kernel").unwrap().idx(0).unwrap();
         assert_eq!(sk.get("improvement").unwrap().as_f64(), Some(3.0));
+        let sv = back.get("simd_vs_scalar").unwrap().idx(0).unwrap();
+        assert_eq!(sv.get("speedup").unwrap().as_f64(), Some(2.0));
     }
+
+    // NOTE: simd_vs_scalar flips the process-global dispatch mode, so it
+    // has no unit test here (lib tests run concurrently and the flip could
+    // race bitwise assertions) — `cargo bench --bench precond` exercises
+    // it in a single-threaded process instead.
 }

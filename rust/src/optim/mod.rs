@@ -15,14 +15,21 @@
 //! [`MuonState::step`] runs NS5 on a persistent
 //! [`crate::tensor::Workspace`] — both are allocation-free per call after
 //! warmup (`tests/alloc.rs` holds the line).
+//!
+//! For multi-param models, [`plan::StepPlan`] shards the fused steps
+//! *across parameters* on a persistent worker pool (one task per matrix,
+//! work-stealing in cost order) instead of threading inside each matmul —
+//! see `benches/step_plan.rs` and the `rmnp exp stepplan` CLI surface.
 
 pub mod adamw;
 pub mod lemmas;
 pub mod muon;
+pub mod plan;
 pub mod rmnp;
 
 pub use adamw::AdamWState;
 pub use muon::{newton_schulz5, newton_schulz5_into, newton_schulz5_naive, MuonState};
+pub use plan::{OptKind, OptState, ParamTask, StepPlan};
 pub use rmnp::RmnpState;
 
 /// Muon/RMNP momentum coefficient (paper Appendix B).

@@ -1,11 +1,15 @@
 //! Muon (Algorithm 1): momentum + Newton–Schulz-5 orthogonalization.
 //!
 //! The NS5 iteration is the paper's Table 2 cost center, so it runs on the
-//! tiled/threaded kernels with every intermediate (`X`, `A = XXᵀ`, `A²`,
-//! the quintic polynomial, and the product buffer) drawn from a
+//! SIMD-dispatched tiled/threaded kernels with every intermediate (`X`,
+//! `A = XXᵀ`, the quintic polynomial, and the product buffer) drawn from a
 //! [`Workspace`] — [`newton_schulz5_into`] performs zero heap allocations
 //! once the workspace is warm, and [`MuonState::step`] carries one
-//! workspace across calls.
+//! workspace across calls. The polynomial `bA + cA²` is fused
+//! ([`crate::tensor::kernels::ns_poly_into`]): the second Gram matmul
+//! accumulates straight into the `b·A`-initialized buffer, so no m×m `A²`
+//! intermediate is materialized and one full memory pass per iteration is
+//! saved.
 
 use crate::optim::{rms_scale, MATRIX_BETA, NS_EPS, WEIGHT_DECAY};
 use crate::tensor::{frobenius, Matrix, Workspace};
@@ -59,13 +63,12 @@ pub fn newton_schulz5_into(g: &Matrix, steps: usize, ws: &mut Workspace, out: &m
     let inv_norm = (1.0 / (frobenius(&x) + NS_EPS as f64)) as f32;
     x.scale_inplace(inv_norm);
     let mut gram = ws.take_matrix(r, r);
-    let mut gram2 = ws.take_matrix(r, r);
     let mut poly = ws.take_matrix(r, r);
     let mut prod = ws.take_matrix(r, cdim);
     for _ in 0..steps {
         x.gram_into(&mut gram);
-        gram.matmul_into(&gram, &mut gram2);
-        gram.axpby_into(b, &gram2, c, &mut poly);
+        // poly = bA + cA², fused: no A² intermediate, one pass saved
+        crate::tensor::kernels::ns_poly_into(poly.data_mut(), gram.data(), r, b, c);
         poly.matmul_into(&x, &mut prod);
         x.axpby_inplace(a, &prod, 1.0);
     }
@@ -76,7 +79,6 @@ pub fn newton_schulz5_into(g: &Matrix, steps: usize, ws: &mut Workspace, out: &m
     }
     ws.give_matrix(prod);
     ws.give_matrix(poly);
-    ws.give_matrix(gram2);
     ws.give_matrix(gram);
     ws.give_matrix(x);
 }

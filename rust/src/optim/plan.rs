@@ -1,0 +1,470 @@
+//! Sharded multi-param stepping: a [`StepPlan`] walks every matrix
+//! parameter of a model and dispatches fused RMNP/Muon/AdamW steps across
+//! a persistent worker pool — one parameter per task — instead of
+//! spawning threads inside each matmul (the multi-param training path's
+//! replacement for per-matmul `thread::scope` fan-out).
+//!
+//! Design notes:
+//!
+//! * **Persistent pool** — `perf.plan_threads` workers are spawned once
+//!   at plan construction and parked on a condvar between rounds; a
+//!   [`StepPlan::step_all`] round costs two condvar broadcasts, not
+//!   per-matmul thread spawns.
+//! * **Work stealing by cost** — tasks are sorted by descending `m×n`
+//!   cost (× the Gram depth `min(m,n)` for Muon, whose NS5 dominates) and
+//!   workers claim them through one shared atomic cursor (`fetch_add`),
+//!   so the biggest parameter starts first and stragglers steal the tail
+//!   instead of idling behind a static partition.
+//! * **Determinism** — each worker pins its thread single-threaded
+//!   ([`kernels::pin_thread_single`]) and every task is stepped by
+//!   exactly one worker on state only it touches, so the updated bits are
+//!   identical for any `perf.plan_threads` value — including the poolless
+//!   sequential path (covered by `tests/kernels_parity.rs`).
+//! * **Allocation** — each task owns its optimizer state (Muon tasks keep
+//!   their private [`Workspace`](crate::tensor::Workspace)), so after the
+//!   first round the stepping itself is allocation-free per call, same as
+//!   the single-param fused steps.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::optim::{AdamWState, MuonState, RmnpState};
+use crate::tensor::{kernels, Matrix};
+use crate::util::Rng;
+
+/// Which fused optimizer updates one parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptKind {
+    Rmnp,
+    Muon,
+    AdamW,
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "rmnp" => OptKind::Rmnp,
+            "muon" => OptKind::Muon,
+            "adamw" => OptKind::AdamW,
+            other => anyhow::bail!("unknown optimizer `{other}` (rmnp|muon|adamw)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OptKind::Rmnp => "rmnp",
+            OptKind::Muon => "muon",
+            OptKind::AdamW => "adamw",
+        }
+    }
+}
+
+/// Per-parameter optimizer state.
+#[derive(Clone, Debug)]
+pub enum OptState {
+    Rmnp(RmnpState),
+    Muon(MuonState),
+    AdamW(AdamWState),
+}
+
+/// One parameter's task: weights, gradient buffer, and optimizer state.
+/// The plan steps it as a unit; callers fill `grad` between rounds via
+/// [`StepPlan::with_task`].
+#[derive(Clone, Debug)]
+pub struct ParamTask {
+    pub name: String,
+    pub w: Matrix,
+    pub grad: Matrix,
+    pub state: OptState,
+}
+
+impl ParamTask {
+    pub fn new(name: &str, w: Matrix, kind: OptKind) -> Self {
+        let (r, c) = (w.rows(), w.cols());
+        let state = match kind {
+            OptKind::Rmnp => OptState::Rmnp(RmnpState::new(r, c)),
+            OptKind::Muon => OptState::Muon(MuonState::new(r, c)),
+            OptKind::AdamW => OptState::AdamW(AdamWState::new(r * c)),
+        };
+        ParamTask { name: name.to_string(), grad: Matrix::zeros(r, c), w, state }
+    }
+
+    pub fn kind(&self) -> OptKind {
+        match self.state {
+            OptState::Rmnp(_) => OptKind::Rmnp,
+            OptState::Muon(_) => OptKind::Muon,
+            OptState::AdamW(_) => OptKind::AdamW,
+        }
+    }
+
+    /// Scheduling cost: `m×n` elements, scaled by the NS5 Gram depth
+    /// `min(m,n)` for Muon (its step is a chain of min-side matmuls).
+    pub fn cost(&self) -> usize {
+        let (m, n) = (self.w.rows(), self.w.cols());
+        match self.state {
+            OptState::Muon(_) => m * n * m.min(n).max(1),
+            _ => m * n,
+        }
+    }
+
+    /// One fused optimizer step on this parameter.
+    pub fn step(&mut self, lr: f32) {
+        match &mut self.state {
+            OptState::Rmnp(st) => st.step(&mut self.w, &self.grad, lr),
+            OptState::Muon(st) => st.step(&mut self.w, &self.grad, lr),
+            OptState::AdamW(st) => st.step(self.w.data_mut(), self.grad.data(), lr),
+        }
+    }
+}
+
+/// Build one [`ParamTask`] per `(shape, multiplicity)` entry (the format
+/// of `exp::precond::shape_counts`), Gaussian-initialized.
+pub fn tasks_from_shapes(
+    shapes: &[((usize, usize), usize)],
+    kind: OptKind,
+    std: f32,
+    rng: &mut Rng,
+) -> Vec<ParamTask> {
+    let mut tasks = Vec::new();
+    for &((m, n), count) in shapes {
+        for c in 0..count {
+            let w = Matrix::randn(m, n, std, rng);
+            tasks.push(ParamTask::new(&format!("{m}x{n}.{c}"), w, kind));
+        }
+    }
+    tasks
+}
+
+/// State the pool workers coordinate through.
+struct JobState {
+    /// bumped once per `step_all` round
+    round: u64,
+    lr: f32,
+    /// tasks completed in the current round
+    completed: usize,
+    /// workers currently parked on the start condvar
+    idle: usize,
+    /// a worker's task panicked this round (re-raised by `step_all`)
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PlanShared {
+    tasks: Vec<Mutex<ParamTask>>,
+    /// next unclaimed index into `tasks` for the current round
+    next: AtomicUsize,
+    job: Mutex<JobState>,
+    start: Condvar,
+    done: Condvar,
+}
+
+fn lock_job(shared: &PlanShared) -> std::sync::MutexGuard<'_, JobState> {
+    // a panicked worker poisons the mutex after setting `panicked`; the
+    // state itself stays consistent, so keep going and let step_all re-raise
+    shared.job.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn worker(shared: Arc<PlanShared>) {
+    // sharding across params replaces intra-matmul threading (and keeps
+    // the stepped bits independent of the worker count)
+    kernels::pin_thread_single(true);
+    let mut seen = 0u64;
+    loop {
+        let lr;
+        {
+            let mut job = lock_job(&shared);
+            job.idle += 1;
+            shared.done.notify_all();
+            while job.round == seen && !job.shutdown {
+                job = shared
+                    .start
+                    .wait(job)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+            if job.shutdown {
+                return;
+            }
+            seen = job.round;
+            lr = job.lr;
+            job.idle -= 1;
+        }
+        loop {
+            let idx = shared.next.fetch_add(1, Ordering::Relaxed);
+            if idx >= shared.tasks.len() {
+                break;
+            }
+            let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut task = shared.tasks[idx]
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner());
+                task.step(lr);
+            }));
+            let mut job = lock_job(&shared);
+            if stepped.is_err() {
+                job.panicked = true;
+            }
+            job.completed += 1;
+            if job.completed == shared.tasks.len() {
+                shared.done.notify_all();
+            }
+        }
+    }
+}
+
+/// A persistent sharded stepping plan over a model's parameter list.
+pub struct StepPlan {
+    shared: Arc<PlanShared>,
+    workers: Vec<JoinHandle<()>>,
+    rounds: u64,
+}
+
+impl StepPlan {
+    /// Build a plan over `tasks`. `threads == 0` means the kernel thread
+    /// count ([`kernels::num_threads`]); the pool never exceeds the task
+    /// count, and `threads <= 1` runs poolless on the caller's thread.
+    pub fn new(mut tasks: Vec<ParamTask>, threads: usize) -> Self {
+        // largest first, name as the deterministic tie-break
+        tasks.sort_by(|a, b| b.cost().cmp(&a.cost()).then(a.name.cmp(&b.name)));
+        let shared = Arc::new(PlanShared {
+            tasks: tasks.into_iter().map(Mutex::new).collect(),
+            next: AtomicUsize::new(0),
+            job: Mutex::new(JobState {
+                round: 0,
+                lr: 0.0,
+                completed: 0,
+                idle: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let requested = if threads == 0 { kernels::num_threads() } else { threads };
+        let nworkers = if shared.tasks.len() < 2 || requested <= 1 {
+            0
+        } else {
+            requested.min(shared.tasks.len())
+        };
+        let workers = (0..nworkers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("rmnp-plan-{i}"))
+                    .spawn(move || worker(shared))
+                    .expect("spawn plan worker")
+            })
+            .collect();
+        StepPlan { shared, workers, rounds: 0 }
+    }
+
+    /// Number of parameter tasks.
+    pub fn len(&self) -> usize {
+        self.shared.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shared.tasks.is_empty()
+    }
+
+    /// Pool size (0 = poolless sequential stepping).
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Completed `step_all` rounds.
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    /// Total parameter elements across all tasks.
+    pub fn total_elems(&self) -> usize {
+        self.shared
+            .tasks
+            .iter()
+            .map(|t| {
+                let t = t.lock().unwrap_or_else(|e| e.into_inner());
+                t.w.rows() * t.w.cols()
+            })
+            .sum()
+    }
+
+    /// Task names in scheduling (cost-descending) order.
+    pub fn names(&self) -> Vec<String> {
+        self.shared
+            .tasks
+            .iter()
+            .map(|t| t.lock().unwrap_or_else(|e| e.into_inner()).name.clone())
+            .collect()
+    }
+
+    /// Run `f` on task `idx` (scheduling order) under its lock — how
+    /// callers fill gradients before a round and read weights after.
+    pub fn with_task<R>(&self, idx: usize, f: impl FnOnce(&mut ParamTask) -> R) -> R {
+        let mut task = self.shared.tasks[idx]
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        f(&mut task)
+    }
+
+    /// One sharded step over every parameter.
+    ///
+    /// With a pool: reset the cursor, broadcast the round, wait until all
+    /// tasks completed *and* all workers re-parked (so the next round's
+    /// cursor reset cannot race a straggler's claim). Poolless: step
+    /// sequentially on the caller's thread with intra-kernel threading
+    /// pinned off, which yields bit-identical results to the pooled path.
+    pub fn step_all(&mut self, lr: f32) {
+        self.rounds += 1;
+        if self.workers.is_empty() {
+            for t in &self.shared.tasks {
+                let mut task = t.lock().unwrap_or_else(|e| e.into_inner());
+                kernels::run_single_threaded(|| task.step(lr));
+            }
+            return;
+        }
+        let ntasks = self.shared.tasks.len();
+        let nworkers = self.workers.len();
+        let mut job = lock_job(&self.shared);
+        // wait for every worker to park before touching the cursor
+        while job.idle < nworkers {
+            job = self.shared.done.wait(job).unwrap_or_else(|e| e.into_inner());
+        }
+        self.shared.next.store(0, Ordering::Relaxed);
+        job.round += 1;
+        job.lr = lr;
+        job.completed = 0;
+        job.panicked = false;
+        self.shared.start.notify_all();
+        while job.completed < ntasks || job.idle < nworkers {
+            job = self.shared.done.wait(job).unwrap_or_else(|e| e.into_inner());
+        }
+        let panicked = job.panicked;
+        drop(job);
+        assert!(!panicked, "a StepPlan task panicked during step_all");
+    }
+}
+
+impl Drop for StepPlan {
+    fn drop(&mut self) {
+        {
+            let mut job = lock_job(&self.shared);
+            job.shutdown = true;
+            self.shared.start.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_tasks(kind: OptKind, seed: u64) -> Vec<ParamTask> {
+        let mut rng = Rng::new(seed);
+        tasks_from_shapes(
+            &[((6, 10), 2), ((12, 4), 1), ((3, 3), 1)],
+            kind,
+            0.5,
+            &mut rng,
+        )
+    }
+
+    fn fill_grads(plan: &StepPlan, seed: u64) {
+        // deterministic per-task gradients keyed by name, so two plans
+        // with different scheduling internals see identical inputs
+        for i in 0..plan.len() {
+            plan.with_task(i, |t| {
+                let key = t.name.bytes().map(|b| b as u64).sum::<u64>();
+                let mut rng = Rng::new(seed ^ key);
+                rng.fill_normal(t.grad.data_mut(), 1.0);
+            });
+        }
+    }
+
+    #[test]
+    fn tasks_sort_largest_first() {
+        let plan = StepPlan::new(small_tasks(OptKind::Rmnp, 1), 1);
+        let costs: Vec<usize> = (0..plan.len())
+            .map(|i| plan.with_task(i, |t| t.cost()))
+            .collect();
+        assert!(costs.windows(2).all(|w| w[0] >= w[1]), "{costs:?}");
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan.total_elems(), 60 + 60 + 48 + 9);
+    }
+
+    #[test]
+    fn pooled_matches_sequential_exactly() {
+        // the core determinism contract at the unit level (the integration
+        // test in tests/kernels_parity.rs covers larger shapes and rounds)
+        for kind in [OptKind::Rmnp, OptKind::Muon, OptKind::AdamW] {
+            let mut seq = StepPlan::new(small_tasks(kind, 2), 1);
+            let mut par = StepPlan::new(small_tasks(kind, 2), 3);
+            assert_eq!(seq.threads(), 0);
+            assert_eq!(par.threads(), 3);
+            for round in 0..3 {
+                fill_grads(&seq, 100 + round);
+                fill_grads(&par, 100 + round);
+                seq.step_all(0.02);
+                par.step_all(0.02);
+            }
+            for i in 0..seq.len() {
+                let a = seq.with_task(i, |t| t.w.clone());
+                let b = par.with_task(i, |t| t.w.clone());
+                assert_eq!(a, b, "{:?} task {i} diverged", kind);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_survives_many_rounds_and_reports_state() {
+        let mut plan = StepPlan::new(small_tasks(OptKind::Rmnp, 3), 2);
+        for _ in 0..10 {
+            fill_grads(&plan, 7);
+            plan.step_all(0.01);
+        }
+        assert_eq!(plan.rounds(), 10);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.names().len(), plan.len());
+        // weights moved and stayed finite
+        for i in 0..plan.len() {
+            plan.with_task(i, |t| {
+                assert!(t.w.data().iter().all(|x| x.is_finite()));
+            });
+        }
+    }
+
+    #[test]
+    fn zero_threads_uses_kernel_count_and_single_task_stays_poolless() {
+        let plan = StepPlan::new(small_tasks(OptKind::Rmnp, 4), 0);
+        assert!(plan.threads() <= plan.len());
+        let mut rng = Rng::new(5);
+        let one = vec![ParamTask::new(
+            "only",
+            Matrix::randn(4, 4, 0.1, &mut rng),
+            OptKind::Rmnp,
+        )];
+        let single = StepPlan::new(one, 8);
+        assert_eq!(single.threads(), 0, "one task never needs a pool");
+    }
+
+    #[test]
+    fn optkind_parse_roundtrip() {
+        for kind in [OptKind::Rmnp, OptKind::Muon, OptKind::AdamW] {
+            assert_eq!(OptKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(OptKind::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn muon_cost_outranks_rmnp_at_same_shape() {
+        let mut rng = Rng::new(6);
+        let w = Matrix::randn(8, 16, 0.1, &mut rng);
+        let muon = ParamTask::new("m", w.clone(), OptKind::Muon);
+        let rmnp = ParamTask::new("r", w, OptKind::Rmnp);
+        assert!(muon.cost() > rmnp.cost());
+        assert_eq!(muon.kind(), OptKind::Muon);
+    }
+}

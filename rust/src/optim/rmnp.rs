@@ -4,10 +4,13 @@
 //! place, reduces the row norm, and applies the normalized direction plus
 //! decoupled weight decay directly into the parameter — no intermediate
 //! `Matrix` is materialized and no heap allocation happens per call
-//! (verified by the counting-allocator test in `tests/alloc.rs`).
+//! (verified by the counting-allocator test in `tests/alloc.rs`). The
+//! three per-row stages run on the SIMD-dispatched [`kernels`] primitives
+//! (`axpby_inplace` EMA, `row_sumsq` reduction, `axpby_inplace` update)
+//! while the row is cache-resident.
 
 use crate::optim::{rms_scale, MATRIX_BETA, ROW_EPS, WEIGHT_DECAY};
-use crate::tensor::kernels::row_sumsq;
+use crate::tensor::kernels::{self, row_sumsq};
 use crate::tensor::Matrix;
 
 /// Momentum state for one matrix parameter.
@@ -46,18 +49,15 @@ impl RmnpState {
         let vdata = self.momentum.data_mut();
         let wdata = w.data_mut();
         let gdata = grad.data();
+        // W ← (1 − η·λ·s)·W − (η·s/‖V‖)·V, the axpby form of
+        // W ← W − η·s·(V/‖V‖ + λW); the decay factor is row-independent
+        let wfac = 1.0 - scale * wd;
         for i in 0..rows {
             let o = i * cols;
             let vrow = &mut vdata[o..o + cols];
-            let grow = &gdata[o..o + cols];
-            for j in 0..cols {
-                vrow[j] = beta * vrow[j] + om * grow[j];
-            }
+            kernels::axpby_inplace(vrow, beta, &gdata[o..o + cols], om);
             let inv = 1.0 / row_sumsq(vrow).sqrt().max(ROW_EPS);
-            let wrow = &mut wdata[o..o + cols];
-            for j in 0..cols {
-                wrow[j] -= scale * (vrow[j] * inv + wd * wrow[j]);
-            }
+            kernels::axpby_inplace(&mut wdata[o..o + cols], wfac, vrow, -(scale * inv));
         }
     }
 

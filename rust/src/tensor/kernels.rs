@@ -1,46 +1,95 @@
-//! Performance-first tensor kernels: register-tiled, multi-threaded, and
-//! allocation-free.
+//! Performance-first tensor kernels: SIMD-dispatched, register-tiled,
+//! multi-threaded, and allocation-free.
 //!
-//! Every kernel here writes into a caller-provided `dst` slice so hot loops
-//! (NS5 iterations, fused optimizer steps) can run on preallocated
+//! Every kernel here writes into a caller-provided `dst` slice so hot
+//! loops (NS5 iterations, fused optimizer steps) can run on preallocated
 //! [`super::Workspace`] buffers. Design notes:
 //!
-//! * **Matmul microkernel** — the inner loop is the axpy form
-//!   `dst_row[j] += a_ip * b_row[j]`, blocked 4 output rows at a time
-//!   ([`MR`]) so each streamed row of B feeds four accumulator rows
-//!   (4× the arithmetic intensity of the scalar loop), with a [`KC`]-wide
-//!   k-panel so the active B panel stays cache-resident. The four dst-row
-//!   streams are independent elementwise updates, which LLVM vectorizes;
-//!   the seed implementation's `a == 0.0` branch is gone from the inner
-//!   loop. Accumulation order over `p` is unchanged from the naive kernel,
-//!   so results are bit-identical on finite inputs.
-//! * **Reductions** — strict FP forbids LLVM from vectorizing
-//!   `s += x*y` loops, so dot products ([`dot`]) and row sum-of-squares
-//!   ([`row_sumsq`]) accumulate into 8 independent lanes and fold at the
-//!   end. This reassociates the sum (results differ from a sequential sum
-//!   by normal f32 rounding, covered by the parity tests).
+//! * **Dispatch** — each public kernel resolves the
+//!   [`super::simd`] ladder (config override → `RMNP_SIMD` env →
+//!   `is_x86_feature_detected!`, cached once) and takes either the
+//!   explicit AVX2/FMA f32x8 path or the portable scalar tiles below.
+//!   The two paths agree within normal f32 rounding (1e-4 in the parity
+//!   tests); within one path results are bit-deterministic regardless of
+//!   thread count.
+//! * **Matmul** — the AVX2 path repacks B into the [`super::PackedB`]
+//!   strip-major panel layout (one thread-local packed buffer, reused
+//!   across calls) and runs a 4×16 register-tile microkernel whose
+//!   accumulators live in registers across the whole k loop. The scalar
+//!   fallback keeps PR 1's axpy-form 4-row tiles with a [`KC`]-wide
+//!   k-panel; its accumulation order matches the seed kernel exactly, so
+//!   the forced-scalar path is bit-identical to `matmul_naive`.
+//! * **NS5 polynomial fusion** — [`ns_poly_into`] computes `bA + cA²`
+//!   directly (init `b·A`, then accumulate `c·A·A` into the same buffer),
+//!   so Newton–Schulz no longer materializes the m×m `A²` intermediate.
+//! * **Reductions** — strict FP forbids LLVM from vectorizing `s += x*y`
+//!   loops, so the scalar [`dot`] accumulates into 8 independent lanes;
+//!   the AVX2 dot uses four f32x8 FMA accumulators. Both reassociate the
+//!   sum (covered by the parity tests).
 //! * **Threading** — row-block parallelism over `std::thread::scope`; the
 //!   symmetric [`gram_into`] balances its upper-triangle row blocks by
 //!   area. The thread count comes from [`num_threads`]: the
 //!   [`set_num_threads`] knob (wired to the `perf.threads` config key),
 //!   else the `RMNP_THREADS` env var, else `available_parallelism`.
-//!   Small problems stay single-threaded (spawn cost dominates).
+//!   Small problems stay single-threaded (spawn cost dominates), and a
+//!   thread that called [`pin_thread_single`] (a `StepPlan` worker) never
+//!   spawns nested kernel threads.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+use crate::tensor::simd;
+#[cfg(target_arch = "x86_64")]
+use crate::tensor::PackedB;
+#[cfg(target_arch = "x86_64")]
+use std::cell::RefCell;
 
 /// Output rows per register tile in matmul/gram.
 const MR: usize = 4;
 /// k-panel width: `KC * 4B` per streamed B row chunk stays L1/L2-friendly.
 const KC: usize = 256;
-/// Reduction lanes (accumulator count) for dot-style loops.
+/// Reduction lanes (accumulator count) for scalar dot-style loops.
 const LANES: usize = 8;
 /// Minimum multiply-adds before a matmul/gram goes multi-threaded.
 const PAR_MIN_MULS: usize = 1 << 20;
 /// Minimum elements before an elementwise/row kernel goes multi-threaded.
 const PAR_MIN_ELEMS: usize = 1 << 19;
+/// Minimum slice length before `dot`/`axpby` take the AVX2 call (below
+/// this the cross-crate call outweighs the vector win).
+#[cfg(target_arch = "x86_64")]
+const SIMD_MIN_ELEMS: usize = 16;
 
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// When set, kernels on this thread never spawn: `StepPlan` workers
+    /// pin themselves single-threaded so sharding across params composes
+    /// with (instead of multiplying) intra-kernel threading, and so the
+    /// stepped bits are identical for any `perf.plan_threads`.
+    static SINGLE_SCOPE: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Pin (or unpin) the calling thread to single-threaded kernel execution.
+pub fn pin_thread_single(single: bool) {
+    SINGLE_SCOPE.with(|c| c.set(single));
+}
+
+/// Run `f` with intra-kernel threading disabled on the calling thread,
+/// restoring the previous pin state afterwards — panics included (a drop
+/// guard unpins during unwind, so a caught panic cannot leave the thread
+/// permanently single-threaded).
+pub fn run_single_threaded<R>(f: impl FnOnce() -> R) -> R {
+    struct Restore(bool);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            SINGLE_SCOPE.with(|c| c.set(self.0));
+        }
+    }
+    let _restore = Restore(SINGLE_SCOPE.with(|c| c.replace(true)));
+    f()
+}
 
 /// Set the kernel thread count (0 restores auto detection). Wired to the
 /// `perf.threads` config key and the CLI. Capped at 256: `plan_threads`
@@ -73,17 +122,31 @@ pub fn num_threads() -> usize {
 }
 
 fn plan_threads(units: usize, work: usize, min_work: usize) -> usize {
-    if work < min_work || units < 2 {
+    if SINGLE_SCOPE.with(|c| c.get()) || work < min_work || units < 2 {
         1
     } else {
         num_threads().clamp(1, units)
     }
 }
 
-/// 8-lane dot product of two equal-length slices.
+/// Dot product of two equal-length slices (SIMD-dispatched).
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if x.len() >= SIMD_MIN_ELEMS && simd::active() == simd::SimdPath::Avx2 {
+            // SAFETY: active() returns Avx2 only when avx2+fma are detected
+            return unsafe { simd::avx2::dot(x, y) };
+        }
+    }
+    dot_scalar(x, y)
+}
+
+/// 8-lane scalar dot product (the portable rung, and the fold the scalar
+/// Gram tiles share).
+#[inline]
+fn dot_scalar(x: &[f32], y: &[f32]) -> f32 {
     let n = x.len();
     let chunks = n / LANES;
     let mut acc = [0.0f32; LANES];
@@ -105,7 +168,7 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     s
 }
 
-/// 8-lane sum of squares of a row.
+/// Sum of squares of a row.
 #[inline]
 pub fn row_sumsq(row: &[f32]) -> f32 {
     dot(row, row)
@@ -116,29 +179,84 @@ pub fn matmul_into(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n:
     assert_eq!(dst.len(), m * n, "matmul dst shape");
     assert_eq!(a.len(), m * k, "matmul lhs shape");
     assert_eq!(b.len(), k * n, "matmul rhs shape");
-    let t = plan_threads(m, m * n * k, PAR_MIN_MULS);
-    if t <= 1 {
-        matmul_rows(dst, a, b, k, n);
+    if m == 0 || n == 0 {
         return;
     }
-    let rows_per = m.div_ceil(t);
+    if k == 0 {
+        dst.fill(0.0);
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd::active() == simd::SimdPath::Avx2 {
+            matmul_avx2(dst, a, b, m, k, n);
+            return;
+        }
+    }
+    matmul_into_scalar(dst, a, b, m, k, n);
+}
+
+/// Split `dst` (`rows` rows of `row_len`) into contiguous row chunks and
+/// run `f(chunk, first_row, row_count)` on each — on the calling thread
+/// when `threads <= 1`, else one scoped thread per chunk. Every threaded
+/// kernel in this module shares this partition, so the chunking math
+/// lives in exactly one place.
+fn par_row_chunks<F>(dst: &mut [f32], rows: usize, row_len: usize, threads: usize, f: F)
+where
+    F: Fn(&mut [f32], usize, usize) + Sync,
+{
+    if threads <= 1 {
+        f(dst, 0, rows);
+        return;
+    }
+    let rows_per = rows.div_ceil(threads);
     std::thread::scope(|s| {
         let mut dst_rest = dst;
         let mut i0 = 0usize;
-        while i0 < m {
-            let take = rows_per.min(m - i0);
-            let (chunk, rest) = std::mem::take(&mut dst_rest).split_at_mut(take * n);
+        while i0 < rows {
+            let take = rows_per.min(rows - i0);
+            let (chunk, rest) =
+                std::mem::take(&mut dst_rest).split_at_mut(take * row_len);
             dst_rest = rest;
-            let a_chunk = &a[i0 * k..(i0 + take) * k];
-            s.spawn(move || matmul_rows(chunk, a_chunk, b, k, n));
+            let f = &f;
+            s.spawn(move || f(chunk, i0, take));
             i0 += take;
         }
     });
 }
 
-/// Serial register-tiled matmul over a contiguous block of output rows.
+/// The scalar-tile matmul path with row-block threading — the portable
+/// fallback, kept callable on its own as the bitwise baseline for tests
+/// (its accumulation order matches the seed kernel exactly).
+pub(crate) fn matmul_into_scalar(
+    dst: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let t = plan_threads(m, m * n * k, PAR_MIN_MULS);
+    par_row_chunks(dst, m, n, t, |chunk, i0, take| {
+        matmul_rows(chunk, &a[i0 * k..(i0 + take) * k], b, k, n)
+    });
+}
+
+/// Serial scalar register-tiled matmul over a contiguous block of output
+/// rows.
 fn matmul_rows(dst: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize) {
     dst.fill(0.0);
+    if n == 0 || k == 0 {
+        return;
+    }
+    matmul_rows_accum(dst, a, b, k, n, 1.0);
+}
+
+/// `dst += alpha · a · b` over a contiguous block of output rows, 4-row
+/// register tiles, k-panels of [`KC`]. With `alpha = 1.0` the per-element
+/// accumulation order (and bits) match the seed kernel; the fused NS5
+/// polynomial calls it with `alpha = c` on a `b·A`-initialized dst.
+fn matmul_rows_accum(dst: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize, alpha: f32) {
     if n == 0 || k == 0 {
         return;
     }
@@ -155,10 +273,10 @@ fn matmul_rows(dst: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize) {
             let (r1, rest) = rest.split_at_mut(n);
             let (r2, r3) = rest.split_at_mut(n);
             for p in kk..kend {
-                let a0 = a[i * k + p];
-                let a1 = a[(i + 1) * k + p];
-                let a2 = a[(i + 2) * k + p];
-                let a3 = a[(i + 3) * k + p];
+                let a0 = alpha * a[i * k + p];
+                let a1 = alpha * a[(i + 1) * k + p];
+                let a2 = alpha * a[(i + 2) * k + p];
+                let a3 = alpha * a[(i + 3) * k + p];
                 let brow = &b[p * n..p * n + n];
                 for j in 0..n {
                     let x = brow[j];
@@ -174,7 +292,7 @@ fn matmul_rows(dst: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize) {
         while i < m {
             let row = &mut dst[i * n..(i + 1) * n];
             for p in kk..kend {
-                let av = a[i * k + p];
+                let av = alpha * a[i * k + p];
                 let brow = &b[p * n..p * n + n];
                 for j in 0..n {
                     row[j] += av * brow[j];
@@ -184,6 +302,90 @@ fn matmul_rows(dst: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize) {
         }
         kk = kend;
     }
+}
+
+#[cfg(target_arch = "x86_64")]
+thread_local! {
+    /// Per-thread packed-B panel buffer for the AVX2 matmul paths. Packing
+    /// happens in the calling thread *before* any row-chunk workers spawn
+    /// (they share the packed panel read-only), and the buffer only grows,
+    /// so steady-state calls are allocation-free.
+    static PACK_TLS: RefCell<PackedB> = RefCell::new(PackedB::new());
+}
+
+/// AVX2 matmul: repack B once, then run the packed microkernel over
+/// row-block threads.
+#[cfg(target_arch = "x86_64")]
+fn matmul_avx2(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    PACK_TLS.with(|cell| {
+        let mut pb = cell.borrow_mut();
+        pb.pack(b, k, n);
+        let packed = pb.data();
+        let t = plan_threads(m, m * n * k, PAR_MIN_MULS);
+        par_row_chunks(dst, m, n, t, |chunk, i0, take| {
+            // SAFETY: the Avx2 dispatch rung implies avx2+fma support; the
+            // packed panel is shared read-only across chunks
+            unsafe {
+                simd::avx2::matmul_packed_rows(
+                    chunk,
+                    &a[i0 * k..(i0 + take) * k],
+                    packed,
+                    k,
+                    n,
+                    1.0,
+                    false,
+                )
+            }
+        });
+    });
+}
+
+/// Fused NS5 polynomial: `dst (m×m) = b·A + c·A²` without materializing
+/// `A²` — the init pass writes `b·A`, then `c·A·A` accumulates into the
+/// same buffer (saving one m×m workspace buffer and a full memory pass
+/// per Newton–Schulz iteration).
+pub fn ns_poly_into(dst: &mut [f32], a: &[f32], m: usize, b: f32, c: f32) {
+    assert_eq!(dst.len(), m * m, "ns_poly dst shape");
+    assert_eq!(a.len(), m * m, "ns_poly src shape");
+    if m == 0 {
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd::active() == simd::SimdPath::Avx2 {
+            ns_poly_avx2(dst, a, m, b, c);
+            return;
+        }
+    }
+    let t = plan_threads(m, m * m * m, PAR_MIN_MULS);
+    par_row_chunks(dst, m, m, t, |chunk, i0, take| {
+        ns_poly_rows(chunk, &a[i0 * m..(i0 + take) * m], a, m, b, c)
+    });
+}
+
+/// Scalar rows of the fused polynomial: init `b·a_rows`, accumulate
+/// `c · a_rows · a_full`.
+fn ns_poly_rows(dst: &mut [f32], a_rows: &[f32], a_full: &[f32], m: usize, b: f32, c: f32) {
+    for (d, s) in dst.iter_mut().zip(a_rows) {
+        *d = b * *s;
+    }
+    matmul_rows_accum(dst, a_rows, a_full, m, m, c);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn ns_poly_avx2(dst: &mut [f32], a: &[f32], m: usize, b: f32, c: f32) {
+    PACK_TLS.with(|cell| {
+        let mut pb = cell.borrow_mut();
+        pb.pack(a, m, m);
+        let packed = pb.data();
+        let t = plan_threads(m, m * m * m, PAR_MIN_MULS);
+        par_row_chunks(dst, m, m, t, |chunk, i0, take| {
+            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+            unsafe {
+                simd::avx2::ns_poly_rows(chunk, &a[i0 * m..(i0 + take) * m], packed, m, b, c)
+            }
+        });
+    });
 }
 
 /// `dst (m×m) = a (m×k) · aᵀ`. Computes the upper triangle with 4-row
@@ -245,10 +447,23 @@ fn triangle_partition(m: usize, t: usize) -> Vec<usize> {
 }
 
 /// Upper-triangle rows `i0..i1` of the Gram matrix into `dst_chunk`
-/// (which holds full rows `i0..i1`, each of length `m`). Entries strictly
-/// left of the diagonal within a 4-row tile are computed too (they are
-/// correct values); the mirror pass makes the lower triangle consistent.
+/// (which holds full rows `i0..i1`, each of length `m`), SIMD-dispatched.
+/// Entries strictly left of the diagonal within a 4-row tile are computed
+/// too (they are correct values); the mirror pass makes the lower
+/// triangle consistent.
 fn gram_rows(dst_chunk: &mut [f32], a: &[f32], i0: usize, i1: usize, m: usize, k: usize) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd::active() == simd::SimdPath::Avx2 {
+            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+            unsafe { simd::avx2::gram_rows(dst_chunk, a, i0, i1, m, k) };
+            return;
+        }
+    }
+    gram_rows_scalar(dst_chunk, a, i0, i1, m, k);
+}
+
+fn gram_rows_scalar(dst_chunk: &mut [f32], a: &[f32], i0: usize, i1: usize, m: usize, k: usize) {
     let mut i = i0;
     while i < i1 {
         if i + MR <= i1 {
@@ -308,7 +523,7 @@ fn gram_rows(dst_chunk: &mut [f32], a: &[f32], i0: usize, i1: usize, m: usize, k
             let base = (i - i0) * m;
             let orow = &mut dst_chunk[base..base + m];
             for j in i..m {
-                orow[j] = dot(ri, &a[j * k..(j + 1) * k]);
+                orow[j] = dot_scalar(ri, &a[j * k..(j + 1) * k]);
             }
             i += 1;
         }
@@ -337,18 +552,34 @@ pub fn transpose_into(dst: &mut [f32], src: &[f32], rows: usize, cols: usize) {
     }
 }
 
-/// `dst = a·x + b·y` elementwise.
+/// `dst = a·x + b·y` elementwise (SIMD-dispatched).
 pub fn axpby_into(dst: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
     assert_eq!(dst.len(), x.len(), "axpby dst/x shape");
     assert_eq!(x.len(), y.len(), "axpby x/y shape");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if dst.len() >= SIMD_MIN_ELEMS && simd::active() == simd::SimdPath::Avx2 {
+            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+            unsafe { simd::avx2::axpby(dst, a, x, b, y) };
+            return;
+        }
+    }
     for i in 0..dst.len() {
         dst[i] = a * x[i] + b * y[i];
     }
 }
 
-/// `x = a·x + b·y` elementwise, in place.
+/// `x = a·x + b·y` elementwise, in place (SIMD-dispatched).
 pub fn axpby_inplace(x: &mut [f32], a: f32, y: &[f32], b: f32) {
     assert_eq!(x.len(), y.len(), "axpby_inplace shape");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if x.len() >= SIMD_MIN_ELEMS && simd::active() == simd::SimdPath::Avx2 {
+            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+            unsafe { simd::avx2::axpby_inplace(x, a, y, b) };
+            return;
+        }
+    }
     for i in 0..x.len() {
         x[i] = a * x[i] + b * y[i];
     }
@@ -366,26 +597,25 @@ pub fn row_normalize_into(
     assert_eq!(dst.len(), rows * cols, "rownorm dst shape");
     assert_eq!(src.len(), rows * cols, "rownorm src shape");
     let t = plan_threads(rows, rows * cols, PAR_MIN_ELEMS);
-    if t <= 1 {
-        row_normalize_rows(dst, src, cols, eps);
-        return;
-    }
-    let rows_per = rows.div_ceil(t);
-    std::thread::scope(|s| {
-        let mut dst_rest = dst;
-        let mut i0 = 0usize;
-        while i0 < rows {
-            let take = rows_per.min(rows - i0);
-            let (chunk, rest) = std::mem::take(&mut dst_rest).split_at_mut(take * cols);
-            dst_rest = rest;
-            let src_chunk = &src[i0 * cols..(i0 + take) * cols];
-            s.spawn(move || row_normalize_rows(chunk, src_chunk, cols, eps));
-            i0 += take;
-        }
+    par_row_chunks(dst, rows, cols, t, |chunk, i0, take| {
+        row_normalize_rows(chunk, &src[i0 * cols..(i0 + take) * cols], cols, eps)
     });
 }
 
+/// One contiguous block of normalized rows (SIMD-dispatched).
 fn row_normalize_rows(dst: &mut [f32], src: &[f32], cols: usize, eps: f32) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if cols >= SIMD_MIN_ELEMS && simd::active() == simd::SimdPath::Avx2 {
+            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+            unsafe { simd::avx2::row_normalize_rows(dst, src, cols, eps) };
+            return;
+        }
+    }
+    row_normalize_rows_scalar(dst, src, cols, eps);
+}
+
+fn row_normalize_rows_scalar(dst: &mut [f32], src: &[f32], cols: usize, eps: f32) {
     if cols == 0 {
         return;
     }
@@ -393,7 +623,7 @@ fn row_normalize_rows(dst: &mut [f32], src: &[f32], cols: usize, eps: f32) {
     for i in 0..rows {
         let o = i * cols;
         let srow = &src[o..o + cols];
-        let inv = 1.0 / row_sumsq(srow).sqrt().max(eps);
+        let inv = 1.0 / dot_scalar(srow, srow).sqrt().max(eps);
         let drow = &mut dst[o..o + cols];
         for j in 0..cols {
             drow[j] = srow[j] * inv;
@@ -449,20 +679,75 @@ mod tests {
     }
 
     #[test]
+    fn matmul_scalar_path_matches_naive_bitwise() {
+        // the portable rung preserves the seed kernel's per-element
+        // accumulation order exactly, independent of the SIMD dispatch
+        let mut rng = Rng::new(2);
+        let (m, k, n) = (19, 70, 23);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let want = naive_matmul(&a, &b, m, k, n);
+        let mut got = vec![0.0f32; m * n];
+        matmul_into_scalar(&mut got, &a, &b, m, k, n);
+        assert_eq!(got, want);
+    }
+
+    #[test]
     fn matmul_threaded_matches_serial() {
-        // force the parallel path by size, compare against the serial kernel
+        // the row partition must not change bits on the active path: the
+        // tile and remainder kernels do identical per-row work
         let mut rng = Rng::new(2);
         let (m, k, n) = (67, 129, 131);
         let a = randv(m * k, &mut rng);
         let b = randv(k * n, &mut rng);
+        set_num_threads(1);
         let mut serial = vec![0.0f32; m * n];
-        matmul_rows(&mut serial, &a, &b, k, n);
+        matmul_into(&mut serial, &a, &b, m, k, n);
         set_num_threads(3);
         let mut par = vec![0.0f32; m * n];
         matmul_into(&mut par, &a, &b, m, k, n);
         set_num_threads(0);
-        // row partitioning does not change per-element accumulation order
         assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn matmul_dispatched_tracks_scalar_within_tolerance() {
+        // whatever rung is active, it stays within f32-rounding distance
+        // of the portable path (exact when the scalar rung is active)
+        let mut rng = Rng::new(12);
+        for (m, k, n) in [(7, 13, 9), (32, 64, 48), (65, 33, 17)] {
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let mut fast = vec![0.0f32; m * n];
+            matmul_into(&mut fast, &a, &b, m, k, n);
+            let mut scalar = vec![0.0f32; m * n];
+            matmul_into_scalar(&mut scalar, &a, &b, m, k, n);
+            for (x, y) in fast.iter().zip(&scalar) {
+                assert!((x - y).abs() < 1e-4, "({m},{k},{n}): {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn ns_poly_fusion_matches_unfused() {
+        // dst = b·A + c·A² against the two-buffer reference
+        let mut rng = Rng::new(13);
+        for m in [1usize, 3, 8, 17, 33] {
+            let a = randv(m * m, &mut rng);
+            let a2 = naive_matmul(&a, &a, m, m, m);
+            let mut want = vec![0.0f32; m * m];
+            for i in 0..m * m {
+                want[i] = -4.775 * a[i] + 2.0315 * a2[i];
+            }
+            let mut got = vec![0.0f32; m * m];
+            ns_poly_into(&mut got, &a, m, -4.775, 2.0315);
+            for (idx, (x, y)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (x - y).abs() < 1e-3 * (1.0 + y.abs()),
+                    "m={m} at {idx}: {x} vs {y}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -545,6 +830,22 @@ mod tests {
     }
 
     #[test]
+    fn axpby_long_dispatch_matches_scalar() {
+        // lengths past SIMD_MIN_ELEMS take the vector path when active
+        let mut rng = Rng::new(14);
+        for len in [16usize, 23, 64, 100] {
+            let x = randv(len, &mut rng);
+            let y = randv(len, &mut rng);
+            let mut dst = vec![0.0f32; len];
+            axpby_into(&mut dst, 1.25, &x, -2.0, &y);
+            for i in 0..len {
+                let want = 1.25 * x[i] - 2.0 * y[i];
+                assert!((dst[i] - want).abs() < 1e-5, "len {len} at {i}");
+            }
+        }
+    }
+
+    #[test]
     fn rownorm_unit_rows_and_zero_rows() {
         let mut rng = Rng::new(6);
         let (rows, cols) = (9, 37);
@@ -589,5 +890,19 @@ mod tests {
             let seq: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
             assert!((dot(&x, &y) - seq).abs() < 1e-3 * (1.0 + seq.abs()));
         }
+    }
+
+    #[test]
+    fn single_thread_pin_forces_serial_and_restores() {
+        assert!(!SINGLE_SCOPE.with(|c| c.get()));
+        let got = run_single_threaded(|| {
+            assert_eq!(plan_threads(1024, usize::MAX, 0), 1, "pinned");
+            7
+        });
+        assert_eq!(got, 7);
+        assert!(!SINGLE_SCOPE.with(|c| c.get()), "pin must restore");
+        pin_thread_single(true);
+        assert_eq!(plan_threads(1024, usize::MAX, 0), 1);
+        pin_thread_single(false);
     }
 }

@@ -288,12 +288,28 @@ mod tests {
     }
 
     #[test]
-    fn matmul_kernel_bitwise_matches_seed_path() {
-        // same per-element accumulation order => identical results
+    fn matmul_scalar_rung_bitwise_matches_seed_path() {
+        // the portable scalar rung keeps the seed kernel's per-element
+        // accumulation order => identical bits; the dispatched path (which
+        // may take AVX2/FMA) stays within f32-rounding distance
         let mut rng = Rng::new(21);
         let a = Matrix::randn(19, 70, 1.0, &mut rng);
         let b = Matrix::randn(70, 23, 1.0, &mut rng);
-        assert_eq!(a.matmul(&b), a.matmul_naive(&b));
+        let naive = a.matmul_naive(&b);
+        let mut scalar = Matrix::zeros(19, 23);
+        kernels::matmul_into_scalar(
+            scalar.data_mut(),
+            a.data(),
+            b.data(),
+            19,
+            70,
+            23,
+        );
+        assert_eq!(scalar, naive);
+        let fast = a.matmul(&b);
+        for (x, y) in fast.data().iter().zip(naive.data()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
     }
 
     #[test]

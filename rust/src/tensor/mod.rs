@@ -2,12 +2,20 @@
 //!
 //! Layered as:
 //!
-//! * [`kernels`] — the performance layer: register-tiled matmul/Gram
-//!   microkernels, blocked transpose, fused row normalization, all with
-//!   caller-provided `dst` buffers and row-block multi-threading via
-//!   `std::thread::scope`. The thread count comes from the
-//!   [`kernels::set_num_threads`] knob (config key `perf.threads`), the
-//!   `RMNP_THREADS` env var, or `available_parallelism`, in that order.
+//! * [`simd`] — the instruction-level layer: explicit AVX2/FMA f32x8
+//!   microkernels (dot, packed-B matmul, Gram, axpby, fused row
+//!   normalize, NS5 polynomial) behind a runtime dispatch ladder
+//!   resolved once at startup (`perf.simd` config key → `RMNP_SIMD` env
+//!   var → `is_x86_feature_detected!`). Scalar tiles are the portable
+//!   fallback rung.
+//! * [`kernels`] — the performance layer: SIMD-dispatched, register-tiled
+//!   matmul/Gram microkernels, blocked transpose, fused row
+//!   normalization, all with caller-provided `dst` buffers and row-block
+//!   multi-threading via `std::thread::scope`. The thread count comes
+//!   from the [`kernels::set_num_threads`] knob (config key
+//!   `perf.threads`), the `RMNP_THREADS` env var, or
+//!   `available_parallelism`, in that order; `StepPlan` workers pin their
+//!   thread single-threaded via [`kernels::pin_thread_single`].
 //! * [`Matrix`] — the ergonomic owner type. Hot ops delegate to
 //!   [`kernels`] and expose `_into(dst)` variants that do not allocate;
 //!   the seed's scalar paths survive as `*_naive` parity baselines.
@@ -25,8 +33,9 @@
 pub mod kernels;
 mod matrix;
 mod norms;
+pub mod simd;
 mod workspace;
 
 pub use matrix::Matrix;
 pub use norms::{dual_pairing, frobenius, inf2_norm, one2_norm};
-pub use workspace::Workspace;
+pub use workspace::{PackedB, Workspace};

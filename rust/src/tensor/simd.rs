@@ -1,0 +1,756 @@
+//! Explicit SIMD microkernels + runtime dispatch for the tensor layer.
+//!
+//! PR 1's kernels leaned on LLVM autovectorizing 4×row scalar tiles; this
+//! module adds hand-written AVX2/FMA f32x8 paths for the hot operations
+//! (`dot`, packed-B matmul, Gram, `axpby`, the fused row-normalize sweep,
+//! and the NS5 polynomial accumulate) and a one-time dispatch ladder:
+//!
+//! 1. `perf.simd` config key / [`set_mode`] — explicit `"avx2"` or
+//!    `"scalar"` override (the CLI prints the chosen rung at startup);
+//! 2. the `RMNP_SIMD` environment variable (same values) — this is how
+//!    CI's forced-scalar job keeps the portable path green;
+//! 3. `is_x86_feature_detected!("avx2") && ("fma")`, evaluated once per
+//!    process and cached.
+//!
+//! Forcing `"avx2"` on hardware without it quietly lands on the scalar
+//! rung — [`active`] never returns a path the CPU cannot execute. On
+//! non-x86 targets the ladder collapses to scalar at compile time; a NEON
+//! rung is a ROADMAP follow-on.
+//!
+//! Numerics: the AVX2 paths use FMA and 8-lane folds, so results differ
+//! from the scalar tiles by normal f32 rounding (reassociation + fused
+//! rounding). The parity tests in `tests/kernels_parity.rs` hold the
+//! SIMD, scalar, and naive paths within 1e-4 of each other. Within one
+//! path, results are bit-deterministic: the 4-row tile and the remainder
+//! row kernels perform the identical per-row operation sequence, so row
+//! partitioning (thread count) never changes output bits.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Requested dispatch mode (`perf.simd` / `RMNP_SIMD`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Detect at startup (the default).
+    Auto,
+    /// Force the AVX2/FMA path (falls back to scalar if unsupported).
+    Avx2,
+    /// Force the portable scalar tiles.
+    Scalar,
+}
+
+impl SimdMode {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "auto" => SimdMode::Auto,
+            "avx2" => SimdMode::Avx2,
+            "scalar" => SimdMode::Scalar,
+            other => anyhow::bail!(
+                "unknown simd mode `{other}` (expected auto|avx2|scalar)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Avx2 => "avx2",
+            SimdMode::Scalar => "scalar",
+        }
+    }
+}
+
+/// The resolved execution path — what the kernels actually run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdPath {
+    Avx2,
+    Scalar,
+}
+
+static MODE: AtomicU8 = AtomicU8::new(0); // 0 = auto, 1 = avx2, 2 = scalar
+
+/// Set the dispatch mode (wired to the `perf.simd` config key and the
+/// CLI). `Auto` restores env-var/detection resolution.
+pub fn set_mode(mode: SimdMode) {
+    let v = match mode {
+        SimdMode::Auto => 0,
+        SimdMode::Avx2 => 1,
+        SimdMode::Scalar => 2,
+    };
+    MODE.store(v, Ordering::Relaxed);
+}
+
+/// The currently requested mode (not the resolved path; see [`active`]).
+pub fn mode() -> SimdMode {
+    match MODE.load(Ordering::Relaxed) {
+        1 => SimdMode::Avx2,
+        2 => SimdMode::Scalar,
+        _ => SimdMode::Auto,
+    }
+}
+
+/// `RMNP_SIMD` env override, parsed once (invalid values mean `Auto`).
+fn env_mode() -> SimdMode {
+    static ENV: OnceLock<SimdMode> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("RMNP_SIMD")
+            .ok()
+            .and_then(|s| SimdMode::parse(&s).ok())
+            .unwrap_or(SimdMode::Auto)
+    })
+}
+
+/// Whether this CPU can run the AVX2/FMA kernels (detected once).
+pub fn avx2_available() -> bool {
+    static DET: OnceLock<bool> = OnceLock::new();
+    *DET.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// Resolve the dispatch ladder to the path the kernels will take.
+pub fn active() -> SimdPath {
+    let requested = match mode() {
+        SimdMode::Auto => env_mode(),
+        explicit => explicit,
+    };
+    match requested {
+        SimdMode::Scalar => SimdPath::Scalar,
+        SimdMode::Avx2 | SimdMode::Auto => {
+            if avx2_available() {
+                SimdPath::Avx2
+            } else {
+                SimdPath::Scalar
+            }
+        }
+    }
+}
+
+/// Human-readable label of the active path (printed at CLI startup and
+/// recorded in the bench JSON envelopes).
+pub fn label() -> &'static str {
+    match active() {
+        SimdPath::Avx2 => "avx2+fma (f32x8)",
+        SimdPath::Scalar => "scalar (autovec tiles)",
+    }
+}
+
+/// The AVX2/FMA kernel bodies. Every function is `unsafe` because it must
+/// only run on CPUs where [`avx2_available`] is true — the dispatch sites
+/// in [`super::kernels`] guarantee that via [`active`].
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// Packed-B strip width: 16 columns = two f32x8 accumulators per row.
+    pub const NR: usize = 16;
+
+    /// Horizontal sum of one f32x8.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    /// 4×f32x8 dot product (32 elements per unrolled step).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(xp.add(i)),
+                _mm256_loadu_ps(yp.add(i)),
+                acc0,
+            );
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(xp.add(i + 8)),
+                _mm256_loadu_ps(yp.add(i + 8)),
+                acc1,
+            );
+            acc2 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(xp.add(i + 16)),
+                _mm256_loadu_ps(yp.add(i + 16)),
+                acc2,
+            );
+            acc3 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(xp.add(i + 24)),
+                _mm256_loadu_ps(yp.add(i + 24)),
+                acc3,
+            );
+            i += 32;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(xp.add(i)),
+                _mm256_loadu_ps(yp.add(i)),
+                acc0,
+            );
+            i += 8;
+        }
+        let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+        let mut s = hsum(acc);
+        while i < n {
+            s += x[i] * y[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// `dst = a·x + b·y` elementwise.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpby(dst: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
+        debug_assert_eq!(dst.len(), x.len());
+        debug_assert_eq!(x.len(), y.len());
+        let n = dst.len();
+        let va = _mm256_set1_ps(a);
+        let vb = _mm256_set1_ps(b);
+        let dp = dst.as_mut_ptr();
+        let xp = x.as_ptr();
+        let yp = y.as_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let ax = _mm256_mul_ps(va, _mm256_loadu_ps(xp.add(i)));
+            let v = _mm256_fmadd_ps(vb, _mm256_loadu_ps(yp.add(i)), ax);
+            _mm256_storeu_ps(dp.add(i), v);
+            i += 8;
+        }
+        while i < n {
+            dst[i] = a * x[i] + b * y[i];
+            i += 1;
+        }
+    }
+
+    /// `x = a·x + b·y` elementwise, in place.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpby_inplace(x: &mut [f32], a: f32, y: &[f32], b: f32) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let va = _mm256_set1_ps(a);
+        let vb = _mm256_set1_ps(b);
+        let xp = x.as_mut_ptr();
+        let yp = y.as_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let ax = _mm256_mul_ps(va, _mm256_loadu_ps(xp.add(i)));
+            let v = _mm256_fmadd_ps(vb, _mm256_loadu_ps(yp.add(i)), ax);
+            _mm256_storeu_ps(xp.add(i), v);
+            i += 8;
+        }
+        while i < n {
+            x[i] = a * x[i] + b * y[i];
+            i += 1;
+        }
+    }
+
+    /// `dst = b · a` elementwise (the init pass of the fused NS5 poly).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn scale_into(dst: &mut [f32], a: &[f32], b: f32) {
+        debug_assert_eq!(dst.len(), a.len());
+        let n = dst.len();
+        let vb = _mm256_set1_ps(b);
+        let dp = dst.as_mut_ptr();
+        let ap = a.as_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(dp.add(i), _mm256_mul_ps(vb, _mm256_loadu_ps(ap.add(i))));
+            i += 8;
+        }
+        while i < n {
+            dst[i] = b * a[i];
+            i += 1;
+        }
+    }
+
+    /// Fused row normalization: `dst[i,:] = src[i,:] / max(‖src[i,:]‖₂, eps)`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn row_normalize_rows(dst: &mut [f32], src: &[f32], cols: usize, eps: f32) {
+        if cols == 0 {
+            return;
+        }
+        let rows = dst.len() / cols;
+        for i in 0..rows {
+            let o = i * cols;
+            let srow = &src[o..o + cols];
+            let inv = 1.0 / dot(srow, srow).sqrt().max(eps);
+            let vi = _mm256_set1_ps(inv);
+            let sp = srow.as_ptr();
+            let dp = dst.as_mut_ptr().add(o);
+            let mut j = 0usize;
+            while j + 8 <= cols {
+                _mm256_storeu_ps(dp.add(j), _mm256_mul_ps(vi, _mm256_loadu_ps(sp.add(j))));
+                j += 8;
+            }
+            while j < cols {
+                *dp.add(j) = srow[j] * inv;
+                j += 1;
+            }
+        }
+    }
+
+    /// One MR×NR register tile of the packed-B matmul: `R` output rows
+    /// (`row0..row0+R` of the dst/a chunks) across the full column range.
+    ///
+    /// The per-row operation sequence is identical for every `R`, so tile
+    /// (`R = 4`) and remainder (`R = 1`) rows produce the same bits — row
+    /// partitioning across threads never changes results.
+    #[allow(clippy::too_many_arguments)] // a microkernel is its registers
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn packed_tile<const R: usize>(
+        dp: *mut f32,
+        row0: usize,
+        ap: *const f32,
+        pp: *const f32,
+        k: usize,
+        n: usize,
+        alpha: f32,
+        accumulate: bool,
+    ) {
+        let full = n / NR;
+        let tail = n - full * NR;
+        for s in 0..full {
+            let j0 = s * NR;
+            let sp = pp.add(s * k * NR);
+            let mut acc = [[_mm256_setzero_ps(); 2]; R];
+            if accumulate {
+                for r in 0..R {
+                    acc[r][0] = _mm256_loadu_ps(dp.add((row0 + r) * n + j0));
+                    acc[r][1] = _mm256_loadu_ps(dp.add((row0 + r) * n + j0 + 8));
+                }
+            }
+            for p in 0..k {
+                let b0 = _mm256_loadu_ps(sp.add(p * NR));
+                let b1 = _mm256_loadu_ps(sp.add(p * NR + 8));
+                for r in 0..R {
+                    let av = _mm256_set1_ps(alpha * *ap.add((row0 + r) * k + p));
+                    acc[r][0] = _mm256_fmadd_ps(av, b0, acc[r][0]);
+                    acc[r][1] = _mm256_fmadd_ps(av, b1, acc[r][1]);
+                }
+            }
+            for r in 0..R {
+                _mm256_storeu_ps(dp.add((row0 + r) * n + j0), acc[r][0]);
+                _mm256_storeu_ps(dp.add((row0 + r) * n + j0 + 8), acc[r][1]);
+            }
+        }
+        if tail > 0 {
+            // partial strip: stage through a 16-wide stack buffer so loads
+            // and stores never touch memory past each row's end
+            let j0 = full * NR;
+            let sp = pp.add(full * k * NR);
+            let mut tmp = [[0.0f32; NR]; R];
+            if accumulate {
+                for r in 0..R {
+                    std::ptr::copy_nonoverlapping(
+                        dp.add((row0 + r) * n + j0),
+                        tmp[r].as_mut_ptr(),
+                        tail,
+                    );
+                }
+            }
+            let mut acc = [[_mm256_setzero_ps(); 2]; R];
+            for r in 0..R {
+                acc[r][0] = _mm256_loadu_ps(tmp[r].as_ptr());
+                acc[r][1] = _mm256_loadu_ps(tmp[r].as_ptr().add(8));
+            }
+            for p in 0..k {
+                let b0 = _mm256_loadu_ps(sp.add(p * NR));
+                let b1 = _mm256_loadu_ps(sp.add(p * NR + 8));
+                for r in 0..R {
+                    let av = _mm256_set1_ps(alpha * *ap.add((row0 + r) * k + p));
+                    acc[r][0] = _mm256_fmadd_ps(av, b0, acc[r][0]);
+                    acc[r][1] = _mm256_fmadd_ps(av, b1, acc[r][1]);
+                }
+            }
+            for r in 0..R {
+                _mm256_storeu_ps(tmp[r].as_mut_ptr(), acc[r][0]);
+                _mm256_storeu_ps(tmp[r].as_mut_ptr().add(8), acc[r][1]);
+                std::ptr::copy_nonoverlapping(
+                    tmp[r].as_ptr(),
+                    dp.add((row0 + r) * n + j0),
+                    tail,
+                );
+            }
+        }
+    }
+
+    /// `dst (mc×n) {=, +=} alpha · a (mc×k) · B` where `B` is packed in
+    /// [`crate::tensor::PackedB`] layout. `accumulate = false` overwrites
+    /// `dst`; `true` adds onto the existing contents (used by the fused
+    /// NS5 polynomial). The accumulators live in registers across the
+    /// whole k loop, so dst traffic is one store per element instead of
+    /// one read-modify-write per (element, p) pair.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matmul_packed_rows(
+        dst: &mut [f32],
+        a: &[f32],
+        packed: &[f32],
+        k: usize,
+        n: usize,
+        alpha: f32,
+        accumulate: bool,
+    ) {
+        if n == 0 {
+            return;
+        }
+        let mc = dst.len() / n;
+        debug_assert_eq!(dst.len(), mc * n);
+        debug_assert_eq!(a.len(), mc * k);
+        debug_assert!(packed.len() >= k * n.div_ceil(NR) * NR);
+        let dp = dst.as_mut_ptr();
+        let ap = a.as_ptr();
+        let pp = packed.as_ptr();
+        let mut i = 0usize;
+        while i + 4 <= mc {
+            packed_tile::<4>(dp, i, ap, pp, k, n, alpha, accumulate);
+            i += 4;
+        }
+        while i < mc {
+            packed_tile::<1>(dp, i, ap, pp, k, n, alpha, accumulate);
+            i += 1;
+        }
+    }
+
+    /// Fused NS5 polynomial rows: `dst = b·a_rows + c·(a_rows · A)` with
+    /// `A` (m×m) pre-packed — no m×m `A²` intermediate is materialized.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn ns_poly_rows(
+        dst: &mut [f32],
+        a_rows: &[f32],
+        packed: &[f32],
+        m: usize,
+        b: f32,
+        c: f32,
+    ) {
+        scale_into(dst, a_rows, b);
+        matmul_packed_rows(dst, a_rows, packed, m, m, c, true);
+    }
+
+    /// Gram rows `i0..i1` of `a·aᵀ` into `dst_chunk` (full rows, length
+    /// `m` each): 4-row tiles share each streamed `a_j` row across four
+    /// FMA accumulators; remainder rows fall back to [`dot`].
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn gram_rows(
+        dst_chunk: &mut [f32],
+        a: &[f32],
+        i0: usize,
+        i1: usize,
+        m: usize,
+        k: usize,
+    ) {
+        let mut i = i0;
+        while i < i1 {
+            if i + 4 <= i1 {
+                let r0 = a.as_ptr().add(i * k);
+                let r1 = a.as_ptr().add((i + 1) * k);
+                let r2 = a.as_ptr().add((i + 2) * k);
+                let r3 = a.as_ptr().add((i + 3) * k);
+                let base = (i - i0) * m;
+                for j in i..m {
+                    let rj = a.as_ptr().add(j * k);
+                    let mut acc0 = _mm256_setzero_ps();
+                    let mut acc1 = _mm256_setzero_ps();
+                    let mut acc2 = _mm256_setzero_ps();
+                    let mut acc3 = _mm256_setzero_ps();
+                    let mut p = 0usize;
+                    while p + 8 <= k {
+                        let x = _mm256_loadu_ps(rj.add(p));
+                        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(r0.add(p)), x, acc0);
+                        acc1 = _mm256_fmadd_ps(_mm256_loadu_ps(r1.add(p)), x, acc1);
+                        acc2 = _mm256_fmadd_ps(_mm256_loadu_ps(r2.add(p)), x, acc2);
+                        acc3 = _mm256_fmadd_ps(_mm256_loadu_ps(r3.add(p)), x, acc3);
+                        p += 8;
+                    }
+                    let mut s0 = hsum(acc0);
+                    let mut s1 = hsum(acc1);
+                    let mut s2 = hsum(acc2);
+                    let mut s3 = hsum(acc3);
+                    while p < k {
+                        let x = *rj.add(p);
+                        s0 += *r0.add(p) * x;
+                        s1 += *r1.add(p) * x;
+                        s2 += *r2.add(p) * x;
+                        s3 += *r3.add(p) * x;
+                        p += 1;
+                    }
+                    dst_chunk[base + j] = s0;
+                    dst_chunk[base + m + j] = s1;
+                    dst_chunk[base + 2 * m + j] = s2;
+                    dst_chunk[base + 3 * m + j] = s3;
+                }
+                i += 4;
+            } else {
+                let ri = &a[i * k..(i + 1) * k];
+                let base = (i - i0) * m;
+                for j in i..m {
+                    dst_chunk[base + j] = dot(ri, &a[j * k..(j + 1) * k]);
+                }
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_and_names() {
+        assert_eq!(SimdMode::parse("auto").unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse("avx2").unwrap(), SimdMode::Avx2);
+        assert_eq!(SimdMode::parse("scalar").unwrap(), SimdMode::Scalar);
+        assert!(SimdMode::parse("sse9").is_err());
+        assert_eq!(SimdMode::Avx2.name(), "avx2");
+    }
+
+    #[test]
+    fn active_is_consistent_with_availability() {
+        // whatever the mode, the resolved path must be runnable
+        if !avx2_available() {
+            assert_eq!(active(), SimdPath::Scalar);
+        }
+        assert!(!label().is_empty());
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    mod avx2_kernels {
+        use super::super::{avx2, avx2_available};
+        use crate::util::Rng;
+
+        fn randv(len: usize, rng: &mut Rng) -> Vec<f32> {
+            let mut v = vec![0.0f32; len];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        }
+
+        #[test]
+        fn dot_matches_sequential() {
+            if !avx2_available() {
+                return;
+            }
+            let mut rng = Rng::new(1);
+            for len in [0usize, 1, 7, 8, 9, 31, 32, 33, 64, 100, 257] {
+                let x = randv(len, &mut rng);
+                let y = randv(len, &mut rng);
+                let seq: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+                let got = unsafe { avx2::dot(&x, &y) };
+                assert!(
+                    (got - seq).abs() < 1e-3 * (1.0 + seq.abs()),
+                    "len {len}: {got} vs {seq}"
+                );
+            }
+        }
+
+        #[test]
+        fn axpby_matches_scalar() {
+            if !avx2_available() {
+                return;
+            }
+            let mut rng = Rng::new(2);
+            for len in [1usize, 5, 8, 9, 40, 100] {
+                let x = randv(len, &mut rng);
+                let y = randv(len, &mut rng);
+                let mut dst = vec![0.0f32; len];
+                unsafe { avx2::axpby(&mut dst, 1.5, &x, -0.5, &y) };
+                for i in 0..len {
+                    let want = 1.5 * x[i] - 0.5 * y[i];
+                    assert!((dst[i] - want).abs() < 1e-5, "{i}");
+                }
+                let mut ip = x.clone();
+                unsafe { avx2::axpby_inplace(&mut ip, 1.5, &y, -0.5) };
+                for i in 0..len {
+                    let want = 1.5 * x[i] - 0.5 * y[i];
+                    assert!((ip[i] - want).abs() < 1e-5, "{i}");
+                }
+            }
+        }
+
+        #[test]
+        fn packed_matmul_matches_naive_including_tails() {
+            if !avx2_available() {
+                return;
+            }
+            let mut rng = Rng::new(3);
+            // shapes straddling the 16-col strip and 4-row tile boundaries
+            for (m, k, n) in [
+                (1usize, 1usize, 1usize),
+                (4, 4, 16),
+                (5, 7, 3),
+                (4, 9, 17),
+                (9, 16, 33),
+                (33, 65, 19),
+                (2, 128, 130),
+            ] {
+                let a = randv(m * k, &mut rng);
+                let b = randv(k * n, &mut rng);
+                let mut packed = crate::tensor::PackedB::new();
+                packed.pack(&b, k, n);
+                let mut got = vec![0.0f32; m * n];
+                unsafe {
+                    avx2::matmul_packed_rows(&mut got, &a, packed.data(), k, n, 1.0, false)
+                };
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut want = 0.0f32;
+                        for p in 0..k {
+                            want += a[i * k + p] * b[p * n + j];
+                        }
+                        let x = got[i * n + j];
+                        assert!(
+                            (x - want).abs() < 1e-3 * (1.0 + want.abs()),
+                            "({m},{k},{n}) at ({i},{j}): {x} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+
+        #[test]
+        fn packed_matmul_accumulate_adds_scaled_product() {
+            if !avx2_available() {
+                return;
+            }
+            let mut rng = Rng::new(4);
+            let (m, k, n) = (6usize, 10usize, 21usize);
+            let a = randv(m * k, &mut rng);
+            let b = randv(k * n, &mut rng);
+            let init = randv(m * n, &mut rng);
+            let mut packed = crate::tensor::PackedB::new();
+            packed.pack(&b, k, n);
+            let mut got = init.clone();
+            unsafe {
+                avx2::matmul_packed_rows(&mut got, &a, packed.data(), k, n, 0.5, true)
+            };
+            for i in 0..m {
+                for j in 0..n {
+                    let mut prod = 0.0f32;
+                    for p in 0..k {
+                        prod += a[i * k + p] * b[p * n + j];
+                    }
+                    let want = init[i * n + j] + 0.5 * prod;
+                    let x = got[i * n + j];
+                    assert!(
+                        (x - want).abs() < 1e-3 * (1.0 + want.abs()),
+                        "({i},{j}): {x} vs {want}"
+                    );
+                }
+            }
+        }
+
+        #[test]
+        fn tile_and_remainder_rows_agree_bitwise() {
+            // the determinism contract: processing a row inside a 4-tile
+            // or as a remainder row gives identical bits
+            if !avx2_available() {
+                return;
+            }
+            let mut rng = Rng::new(5);
+            let (k, n) = (37usize, 29usize);
+            let a = randv(5 * k, &mut rng); // 5 rows: one 4-tile + 1 remainder
+            let b = randv(k * n, &mut rng);
+            let mut packed = crate::tensor::PackedB::new();
+            packed.pack(&b, k, n);
+            let mut whole = vec![0.0f32; 5 * n];
+            unsafe {
+                avx2::matmul_packed_rows(&mut whole, &a, packed.data(), k, n, 1.0, false)
+            };
+            // row 4 alone (remainder path) must equal row 4 of the block
+            let mut single = vec![0.0f32; n];
+            unsafe {
+                avx2::matmul_packed_rows(
+                    &mut single,
+                    &a[4 * k..5 * k],
+                    packed.data(),
+                    k,
+                    n,
+                    1.0,
+                    false,
+                )
+            };
+            assert_eq!(&whole[4 * n..5 * n], &single[..]);
+            // and row 0 computed alone must equal row 0 of the 4-tile
+            let mut first = vec![0.0f32; n];
+            unsafe {
+                avx2::matmul_packed_rows(
+                    &mut first,
+                    &a[0..k],
+                    packed.data(),
+                    k,
+                    n,
+                    1.0,
+                    false,
+                )
+            };
+            assert_eq!(&whole[0..n], &first[..]);
+        }
+
+        #[test]
+        fn rownorm_unit_and_zero_rows() {
+            if !avx2_available() {
+                return;
+            }
+            let mut rng = Rng::new(6);
+            let (rows, cols) = (5usize, 37usize);
+            let mut src = randv(rows * cols, &mut rng);
+            for v in &mut src[2 * cols..3 * cols] {
+                *v = 0.0;
+            }
+            let mut dst = vec![0.0f32; rows * cols];
+            unsafe { avx2::row_normalize_rows(&mut dst, &src, cols, 1e-7) };
+            for i in 0..rows {
+                let n: f32 = dst[i * cols..(i + 1) * cols]
+                    .iter()
+                    .map(|x| x * x)
+                    .sum::<f32>()
+                    .sqrt();
+                if i == 2 {
+                    assert_eq!(n, 0.0);
+                } else {
+                    assert!((n - 1.0).abs() < 1e-5, "row {i} norm {n}");
+                }
+            }
+        }
+
+        #[test]
+        fn gram_rows_matches_naive() {
+            if !avx2_available() {
+                return;
+            }
+            let mut rng = Rng::new(7);
+            for (m, k) in [(1usize, 5usize), (4, 8), (6, 11), (13, 64), (9, 7)] {
+                let a = randv(m * k, &mut rng);
+                let mut got = vec![0.0f32; m * m];
+                unsafe { avx2::gram_rows(&mut got, &a, 0, m, m, k) };
+                for i in 0..m {
+                    for j in i..m {
+                        let want: f32 = (0..k).map(|p| a[i * k + p] * a[j * k + p]).sum();
+                        let x = got[i * m + j];
+                        assert!(
+                            (x - want).abs() < 1e-3 * (1.0 + want.abs()),
+                            "({m},{k}) at ({i},{j})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,4 +1,5 @@
-//! Scratch-buffer arena so hot loops run allocation-free.
+//! Scratch-buffer arena so hot loops run allocation-free, plus the
+//! [`PackedB`] panel layout the AVX2 matmul microkernel consumes.
 //!
 //! A [`Workspace`] owns a pool of `Vec<f32>` buffers. [`Workspace::take`]
 //! hands out a zeroed buffer of the requested length, reusing pooled
@@ -10,6 +11,75 @@
 //! [`Workspace::fresh_allocs`] counter.
 
 use super::Matrix;
+
+/// A `k×n` B matrix repacked into the strip-major panel layout the AVX2
+/// microkernel streams: the columns are cut into [`PackedB::NR`]-wide
+/// strips, and each strip stores its `k` rows contiguously (zero-padded
+/// past `n`). One repack per matmul (or per NS5 iteration) replaces the
+/// strided row reads the axpy-form kernel would otherwise perform once
+/// per 4-row output tile — for k-panels that overflow L2 that means the
+/// panel is read from memory once instead of `m/4` times, and the
+/// microkernel's accumulators stay in registers across the whole k loop.
+///
+/// The backing `Vec` only ever grows ([`PackedB::pack`] reuses capacity),
+/// so a `PackedB` held per thread is allocation-free after warmup — the
+/// kernel layer keeps one in thread-local storage.
+#[derive(Clone, Debug, Default)]
+pub struct PackedB {
+    data: Vec<f32>,
+    k: usize,
+    n: usize,
+}
+
+impl PackedB {
+    /// Strip width in columns (two f32x8 vectors).
+    pub const NR: usize = 16;
+
+    pub fn new() -> Self {
+        PackedB::default()
+    }
+
+    /// Elements a packed `k×n` matrix occupies (strips are padded to NR).
+    pub fn packed_len(k: usize, n: usize) -> usize {
+        k * n.div_ceil(Self::NR) * Self::NR
+    }
+
+    /// Repack `b` (row-major `k×n`) into the panel layout, reusing the
+    /// existing allocation when it is large enough.
+    pub fn pack(&mut self, b: &[f32], k: usize, n: usize) {
+        assert_eq!(b.len(), k * n, "pack shape");
+        let nr = Self::NR;
+        let strips = n.div_ceil(nr);
+        let len = k * strips * nr;
+        if self.data.len() < len {
+            self.data.resize(len, 0.0);
+        }
+        self.k = k;
+        self.n = n;
+        for s in 0..strips {
+            let j0 = s * nr;
+            let w = nr.min(n - j0);
+            let base = s * k * nr;
+            for p in 0..k {
+                let dst = &mut self.data[base + p * nr..base + (p + 1) * nr];
+                dst[..w].copy_from_slice(&b[p * n + j0..p * n + j0 + w]);
+                for x in &mut dst[w..] {
+                    *x = 0.0;
+                }
+            }
+        }
+    }
+
+    /// The packed panel data for the last [`PackedB::pack`] call.
+    pub fn data(&self) -> &[f32] {
+        &self.data[..Self::packed_len(self.k, self.n)]
+    }
+
+    /// `(k, n)` of the currently packed matrix.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.k, self.n)
+    }
+}
 
 /// Reusable pool of f32 scratch buffers.
 #[derive(Clone, Debug, Default)]
@@ -134,6 +204,46 @@ mod tests {
         assert!(b.capacity() < 1000, "should reuse the small buffer");
         ws.give(b);
         assert_eq!(ws.pooled(), 2);
+    }
+
+    #[test]
+    fn packed_b_layout_roundtrip() {
+        // every (p, j) element must land at its strip-major slot, padded
+        // lanes must be zero, and repacking a smaller shape must reuse
+        // (not shrink) the allocation
+        let mut rng = Rng::new(2);
+        let (k, n) = (5usize, 37usize); // 3 strips: 16 + 16 + 5(+11 pad)
+        let mut b = vec![0.0f32; k * n];
+        rng.fill_normal(&mut b, 1.0);
+        let mut pb = PackedB::new();
+        pb.pack(&b, k, n);
+        assert_eq!(pb.dims(), (k, n));
+        let nr = PackedB::NR;
+        let data = pb.data();
+        assert_eq!(data.len(), PackedB::packed_len(k, n));
+        for p in 0..k {
+            for j in 0..n {
+                let s = j / nr;
+                let got = data[s * k * nr + p * nr + (j - s * nr)];
+                assert_eq!(got, b[p * n + j], "({p},{j})");
+            }
+        }
+        // padded tail lanes are zero
+        let last = 2 * k * nr;
+        for p in 0..k {
+            for lane in 5..nr {
+                assert_eq!(data[last + p * nr + lane], 0.0);
+            }
+        }
+        // repack smaller: capacity reused, dims/len updated
+        let cap_before = pb.data.capacity();
+        let b2 = vec![1.0f32; 2 * 3];
+        pb.pack(&b2, 2, 3);
+        assert_eq!(pb.dims(), (2, 3));
+        assert_eq!(pb.data().len(), PackedB::packed_len(2, 3));
+        assert_eq!(pb.data.capacity(), cap_before, "pack must not shrink");
+        assert_eq!(pb.data()[0], 1.0);
+        assert_eq!(pb.data()[3], 0.0, "padding re-zeroed");
     }
 
     #[test]

@@ -1,14 +1,30 @@
-//! Cross-layer parity: the tiled/threaded kernel layer and the fused
+//! Cross-layer parity: the SIMD-dispatched kernel layer and the fused
 //! optimizer steps must match the seed scalar implementations within 1e-4
 //! across rectangular, tall, wide, and zero-row shapes — including at
-//! sizes large enough to engage the multi-threaded paths.
+//! sizes large enough to engage the multi-threaded paths, on both rungs
+//! of the dispatch ladder (forced scalar and, where available, AVX2).
+//!
+//! Tests that flip the process-global SIMD mode or rely on bit-exact
+//! reproducibility across calls hold [`mode_lock`] so a concurrent flip
+//! can never change the active rung mid-assertion.
 
+use std::sync::{Mutex, MutexGuard};
+
+use rmnp::optim::plan::{tasks_from_shapes, OptKind, OptState, StepPlan};
 use rmnp::optim::{
     newton_schulz5_into, newton_schulz5_naive, rms_scale, MuonState, RmnpState,
     MATRIX_BETA, ROW_EPS, WEIGHT_DECAY,
 };
+use rmnp::tensor::simd::{self, SimdMode};
 use rmnp::tensor::{kernels, Matrix, Workspace};
 use rmnp::util::Rng;
+
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn mode_lock() -> MutexGuard<'static, ()> {
+    // a failed test poisons the lock; the () state cannot be corrupted
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 fn max_abs_diff(a: &Matrix, b: &Matrix) -> f32 {
     a.data()
@@ -19,6 +35,28 @@ fn max_abs_diff(a: &Matrix, b: &Matrix) -> f32 {
 
 /// Shapes covering rectangular, tall, wide, and threaded-size cases.
 const SHAPES: &[(usize, usize)] = &[(7, 13), (96, 24), (24, 96), (160, 161)];
+
+/// The full op-level parity suite against the seed scalar baselines,
+/// runnable under any dispatch mode.
+fn assert_ops_match_naive(tolerance: f32) {
+    let mut rng = Rng::new(1);
+    for &(m, k) in SHAPES {
+        let n = (k / 2).max(1) + 3;
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let d = max_abs_diff(&a.matmul(&b), &a.matmul_naive(&b));
+        assert!(d < tolerance, "matmul ({m},{k},{n}): {d}");
+        let d = max_abs_diff(&a.gram(), &a.gram_naive());
+        assert!(d < tolerance, "gram ({m},{k}): {d}");
+        let mut v = Matrix::randn(m, k, 2.0, &mut rng);
+        let mid = m / 2;
+        for x in v.data_mut()[mid * k..(mid + 1) * k].iter_mut() {
+            *x = 0.0; // zero row: eps-floor semantics must agree
+        }
+        let d = max_abs_diff(&v.row_normalize(ROW_EPS), &v.row_normalize_naive(ROW_EPS));
+        assert!(d < tolerance, "rownorm ({m},{k}): {d}");
+    }
+}
 
 #[test]
 fn parallel_matmul_matches_naive() {
@@ -97,7 +135,7 @@ fn fused_rmnp_step_matches_seed_semantics() {
         let dw = max_abs_diff(&w_fused, &w_seed);
         assert!(dw < 1e-4, "rmnp step ({m},{n}): {dw}");
         let dm = max_abs_diff(&st.momentum, &mom);
-        assert!(dm < 1e-4, "rmnp momentum ({m},{n}): {dm}");
+        assert!(dm < 1e-4, "rmnp momentum ({m},{n})");
     }
 }
 
@@ -128,6 +166,7 @@ fn fused_muon_step_matches_seed_semantics() {
 fn workspace_reuse_never_leaks_between_ops() {
     // run NS5 on matrix A, then on B, then on A again through the same
     // workspace: the second A result must equal the first exactly
+    let _guard = mode_lock(); // bit-exactness needs a stable dispatch rung
     let mut rng = Rng::new(7);
     let a = Matrix::randn(14, 22, 1.0, &mut rng);
     let b = Matrix::randn(22, 14, 3.0, &mut rng);
@@ -148,6 +187,7 @@ fn workspace_reuse_never_leaks_between_ops() {
 
 #[test]
 fn thread_count_does_not_change_results() {
+    let _guard = mode_lock(); // bit-exactness needs a stable dispatch rung
     let mut rng = Rng::new(8);
     let a = Matrix::randn(130, 90, 1.0, &mut rng);
     let b = Matrix::randn(90, 110, 1.0, &mut rng);
@@ -164,5 +204,142 @@ fn thread_count_does_not_change_results() {
     assert_eq!(serial_rn, par_rn);
     for (x, y) in serial_gram.data().iter().zip(par_gram.data()) {
         assert!((x - y).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn forced_scalar_dispatch_passes_full_suite() {
+    // `perf.simd = "scalar"` must keep every op on the portable rung and
+    // every parity bound intact — this is what CI's forced-scalar job
+    // checks on AVX2 runners too
+    let _guard = mode_lock();
+    let prev = simd::mode();
+    simd::set_mode(SimdMode::Scalar);
+    assert_eq!(simd::active(), simd::SimdPath::Scalar);
+    assert_ops_match_naive(1e-4);
+    // NS5 through the full scalar stack (fused polynomial included)
+    let mut rng = Rng::new(9);
+    let mut ws = Workspace::new();
+    for &(m, n) in &[(12usize, 40usize), (16, 16)] {
+        let g = Matrix::randn(m, n, 1.0, &mut rng);
+        let naive = newton_schulz5_naive(&g, 5);
+        let mut fast = Matrix::zeros(m, n);
+        newton_schulz5_into(&g, 5, &mut ws, &mut fast);
+        let d = max_abs_diff(&fast, &naive);
+        assert!(d < 1e-4, "scalar ns5 ({m},{n}): {d}");
+    }
+    simd::set_mode(prev);
+}
+
+#[test]
+fn simd_and_scalar_rungs_agree_within_1e4() {
+    // the ISSUE acceptance bar: SIMD, scalar, and naive paths within 1e-4
+    // of each other across rectangular/tall/wide/zero-row shapes
+    let _guard = mode_lock();
+    if !simd::avx2_available() {
+        return; // single-rung ladder: nothing to compare
+    }
+    let prev = simd::mode();
+    let mut rng = Rng::new(10);
+    for &(m, k) in SHAPES {
+        let n = (k / 2).max(1) + 3;
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let mut v = Matrix::randn(m, k, 2.0, &mut rng);
+        for x in v.data_mut()[0..k].iter_mut() {
+            *x = 0.0; // zero row
+        }
+        simd::set_mode(SimdMode::Scalar);
+        let mm_s = a.matmul(&b);
+        let gr_s = a.gram();
+        let rn_s = v.row_normalize(ROW_EPS);
+        simd::set_mode(SimdMode::Avx2);
+        assert_eq!(simd::active(), simd::SimdPath::Avx2);
+        let mm_v = a.matmul(&b);
+        let gr_v = a.gram();
+        let rn_v = v.row_normalize(ROW_EPS);
+        let d = max_abs_diff(&mm_s, &mm_v);
+        assert!(d < 1e-4, "matmul rungs ({m},{k},{n}): {d}");
+        let d = max_abs_diff(&gr_s, &gr_v);
+        assert!(d < 1e-4, "gram rungs ({m},{k}): {d}");
+        let d = max_abs_diff(&rn_s, &rn_v);
+        assert!(d < 1e-4, "rownorm rungs ({m},{k}): {d}");
+    }
+    // NS5 end-to-end across rungs
+    let mut ws = Workspace::new();
+    let g = Matrix::randn(24, 56, 1.0, &mut rng);
+    simd::set_mode(SimdMode::Scalar);
+    let mut ns_s = Matrix::zeros(24, 56);
+    newton_schulz5_into(&g, 5, &mut ws, &mut ns_s);
+    simd::set_mode(SimdMode::Avx2);
+    let mut ns_v = Matrix::zeros(24, 56);
+    newton_schulz5_into(&g, 5, &mut ws, &mut ns_v);
+    let d = max_abs_diff(&ns_s, &ns_v);
+    assert!(d < 1e-4, "ns5 rungs: {d}");
+    simd::set_mode(prev);
+}
+
+/// Mixed-optimizer parameter list for the StepPlan determinism check:
+/// overlapping costs force real scheduling differences between pools.
+fn plan_under_test(threads: usize) -> StepPlan {
+    let mut rng = Rng::new(11);
+    let mut tasks = tasks_from_shapes(
+        &[((48, 16), 2), ((16, 48), 1)],
+        OptKind::Rmnp,
+        0.3,
+        &mut rng,
+    );
+    tasks.extend(tasks_from_shapes(&[((20, 36), 2)], OptKind::Muon, 0.3, &mut rng));
+    tasks.extend(tasks_from_shapes(&[((32, 32), 1)], OptKind::AdamW, 0.3, &mut rng));
+    StepPlan::new(tasks, threads)
+}
+
+#[test]
+fn step_plan_bits_identical_across_plan_threads() {
+    // the `perf.plan_threads` contract: 1, 2, and 4 workers produce the
+    // same update bits — sharding must never change numerics
+    let _guard = mode_lock();
+    let mut plans: Vec<StepPlan> = [1usize, 2, 4].into_iter().map(plan_under_test).collect();
+    assert_eq!(plans[0].threads(), 0, "threads=1 runs poolless");
+    assert!(plans[2].threads() >= 2);
+    for round in 0..3u64 {
+        for plan in plans.iter_mut() {
+            for i in 0..plan.len() {
+                plan.with_task(i, |t| {
+                    // name-keyed grads: identical inputs per task whatever
+                    // the scheduling order
+                    let key = t.name.bytes().map(|b| b as u64).sum::<u64>();
+                    let mut rng = Rng::new(1000 + round * 131 + key);
+                    rng.fill_normal(t.grad.data_mut(), 1.0);
+                });
+            }
+            plan.step_all(0.02);
+        }
+    }
+    let reference: Vec<(String, Matrix)> = (0..plans[0].len())
+        .map(|i| plans[0].with_task(i, |t| (t.name.clone(), t.w.clone())))
+        .collect();
+    for plan in &plans[1..] {
+        for (i, (name, want)) in reference.iter().enumerate() {
+            let (got_name, got) = plan.with_task(i, |t| (t.name.clone(), t.w.clone()));
+            assert_eq!(&got_name, name, "scheduling order must be deterministic");
+            assert_eq!(&got, want, "task {name} diverged at {} workers", plan.threads());
+        }
+    }
+    // momentum state must agree too, not just the weights
+    for plan in &plans[1..] {
+        for i in 0..plan.len() {
+            let want = plans[0].with_task(i, |t| match &t.state {
+                OptState::Rmnp(s) => Some(s.momentum.clone()),
+                OptState::Muon(s) => Some(s.momentum.clone()),
+                OptState::AdamW(_) => None,
+            });
+            let got = plan.with_task(i, |t| match &t.state {
+                OptState::Rmnp(s) => Some(s.momentum.clone()),
+                OptState::Muon(s) => Some(s.momentum.clone()),
+                OptState::AdamW(_) => None,
+            });
+            assert_eq!(got, want, "momentum diverged on task {i}");
+        }
     }
 }

@@ -4,11 +4,23 @@
 #   scripts/bench_check.sh
 #
 # Runs `cargo fmt --check` and `cargo clippy -D warnings`, then the capped
-# precond benchmark (BENCH_MAX_D=256), and fails if any recorded RMNP
-# speedup (Table 2 ratio) or seed-vs-kernel improvement drops below 1.0.
+# precond benchmark (BENCH_MAX_D=256) and the optimizer-step benchmark,
+# and fails if:
+#   * any recorded RMNP speedup (Table 2 ratio) drops below 1.0,
+#   * any seed-vs-kernel improvement drops below 1.0,
+#   * any AVX2-vs-scalar ns5 speedup drops below 1.0, or rownorm below
+#     0.9 (rownorm is memory-bandwidth-bound, so parity + noise margin is
+#     the honest bar on shared runners; skipped entirely when the CPU has
+#     no AVX2/FMA or RMNP_SIMD=scalar forces the portable rung),
+#   * the median seed-vs-kernel improvement falls below half of the most
+#     recent bench_history/ snapshot (skipped with a notice on the first
+#     run, when no prior-PR snapshot exists yet).
+# On success it appends dated BENCH_precond / BENCH_train_step snapshots
+# to bench_history/ so the next PR has a trajectory baseline.
 set -euo pipefail
 
-cd "$(dirname "$0")/../rust"
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT/rust"
 
 echo "== cargo fmt --check =="
 cargo fmt --check
@@ -20,9 +32,16 @@ echo "== cargo bench --bench precond (BENCH_MAX_D=${BENCH_MAX_D:-256}) =="
 BENCH_MAX_D="${BENCH_MAX_D:-256}" BENCH_REPEATS="${BENCH_REPEATS:-2}" \
     cargo bench --bench precond
 
+echo "== cargo bench --bench optim_step =="
+BENCH_REPEATS="${BENCH_REPEATS:-2}" cargo bench --bench optim_step
+
 echo "== checking BENCH_precond.json =="
-python3 - <<'EOF'
+# newest prior-PR snapshot, if any (first run has none — that's fine)
+BASELINE="$(ls -1t "$ROOT"/bench_history/*_precond.json 2>/dev/null | head -n1 || true)"
+python3 - "${BASELINE:-}" <<'EOF'
 import json, sys
+
+baseline_path = sys.argv[1] if len(sys.argv) > 1 else ""
 
 with open("BENCH_precond.json") as f:
     doc = json.load(f)
@@ -37,11 +56,50 @@ for d in doc["seed_vs_kernel"]:
             f"seed_vs_kernel {d['op']} d={d['d_model']} "
             f"improvement {d['improvement']:.2f} < 1.0"
         )
+# ns5 is compute-bound and must win outright; rownorm is memory-bound, so
+# require parity minus a noise margin rather than a strict win
+SIMD_BAR = {"ns5": 1.0, "rownorm": 0.9}
+for d in doc.get("simd_vs_scalar", []):
+    bar = SIMD_BAR.get(d["op"], 1.0)
+    if d["speedup"] < bar:
+        bad.append(
+            f"simd_vs_scalar {d['op']} d={d['d_model']} "
+            f"speedup {d['speedup']:.2f} < {bar}"
+        )
 
 for row in doc["table2"]:
     print(f"  {row['model']:<6} d={row['d_model']:<5} speedup {row['speedup']:.1f}x")
 for d in doc["seed_vs_kernel"]:
     print(f"  {d['op']:<8} d={d['d_model']:<5} kernel vs seed {d['improvement']:.2f}x")
+simd = doc.get("simd_vs_scalar", [])
+if simd:
+    for d in simd:
+        print(f"  {d['op']:<8} d={d['d_model']:<5} avx2 vs scalar {d['speedup']:.2f}x")
+else:
+    print(f"  simd rung: {doc.get('simd', '?')} (no avx2-vs-scalar delta recorded)")
+
+# trajectory gate against the newest bench_history snapshot. Absolute
+# medians are machine-dependent, so compare the improvement *ratios*,
+# with generous headroom (fail only on a >2x collapse).
+def median_improvement(d):
+    xs = sorted(x["improvement"] for x in d.get("seed_vs_kernel", []))
+    return xs[len(xs) // 2] if xs else None
+
+if baseline_path:
+    with open(baseline_path) as f:
+        base = json.load(f)
+    b, c = median_improvement(base), median_improvement(doc)
+    if b is not None and c is not None:
+        name = baseline_path.rsplit("/", 1)[-1]
+        if c < 0.5 * b:
+            bad.append(
+                f"median seed_vs_kernel improvement {c:.2f} fell below half "
+                f"of baseline {b:.2f} ({name})"
+            )
+        else:
+            print(f"  baseline {name}: median improvement {b:.2f} -> {c:.2f}")
+else:
+    print("  no bench_history baseline yet — skipping trajectory gate (first run)")
 
 if bad:
     print("FAIL:")
@@ -50,3 +108,12 @@ if bad:
     sys.exit(1)
 print("bench check OK")
 EOF
+
+# record this run for the next PR's trajectory gate (only after the gates
+# above passed — failing runs must not become baselines)
+mkdir -p "$ROOT/bench_history"
+SHA="$(git -C "$ROOT" rev-parse --short HEAD 2>/dev/null || echo nogit)"
+STAMP="$(date -u +%Y%m%d%H%M%S)_${SHA}"
+cp BENCH_precond.json "$ROOT/bench_history/${STAMP}_precond.json"
+cp BENCH_train_step.json "$ROOT/bench_history/${STAMP}_train_step.json"
+echo "recorded bench_history/${STAMP}_{precond,train_step}.json"
