@@ -66,17 +66,18 @@ fn main() -> anyhow::Result<()> {
     }
 
     // dispatch-ladder delta: the same kernel-layer ops on the scalar rung
-    // vs the AVX2 rung (empty when the CPU has no AVX2/FMA)
+    // vs the best vector rung — AVX2 on x86-64, NEON on aarch64 (empty
+    // when the CPU has neither, or when the scalar rung was forced)
     let simd_deltas = precond::simd_vs_scalar(&compare_ds, repeats.clamp(1, 2));
     if simd_deltas.is_empty() {
-        println!("simd vs scalar: skipped (no AVX2/FMA on this CPU)");
+        println!("simd vs scalar: skipped (no vector rung on this CPU, or scalar forced)");
     } else {
-        println!("scalar rung vs AVX2 rung (same op, same shape):");
+        println!("scalar rung vs vector rung (same op, same shape):");
         for d in &simd_deltas {
             println!(
-                "  {:<8} d={:<5} ({}x{}): scalar {:>10.4}s  avx2 {:>10.4}s  -> {:.2}x",
-                d.op, d.d_model, d.rows, d.cols, d.scalar_median, d.simd_median,
-                d.speedup
+                "  {:<8} d={:<5} ({}x{}): scalar {:>10.4}s  {} {:>10.4}s  -> {:.2}x",
+                d.op, d.d_model, d.rows, d.cols, d.scalar_median, d.rung,
+                d.simd_median, d.speedup
             );
         }
     }

@@ -7,6 +7,10 @@
 //! call on CPU) automatically degrade to fewer iterations instead of
 //! blowing the time budget.
 
+// The crate-level `missing_docs` warning is enforced for tensor/ and
+// optim/; this module's full docs pass is still pending (ROADMAP.md).
+#![allow(missing_docs)]
+
 pub mod report;
 
 use std::time::Instant;

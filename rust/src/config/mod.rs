@@ -4,6 +4,10 @@
 //! presets mirroring the paper's protocols and the CLI can override any
 //! field (`--set train.steps=200`).
 
+// The crate-level `missing_docs` warning is enforced for tensor/ and
+// optim/; this module's full docs pass is still pending (ROADMAP.md).
+#![allow(missing_docs)]
+
 pub mod toml;
 
 use std::path::{Path, PathBuf};
@@ -81,8 +85,10 @@ pub struct RunConfig {
     /// `RMNP_THREADS` env var, else `available_parallelism`). Applied via
     /// [`crate::tensor::kernels::set_num_threads`].
     pub threads: usize,
-    /// SIMD dispatch mode (`perf.simd`): "auto" (detect AVX2+FMA once at
-    /// startup, the default), "avx2", or "scalar". Applied via
+    /// SIMD dispatch mode (`perf.simd`): "auto" (detect the best rung —
+    /// AVX2+FMA on x86-64, NEON on aarch64 — once at startup, the
+    /// default), "avx2", "neon", or "scalar". Forcing a rung the CPU
+    /// cannot run falls back to scalar. Applied via
     /// [`crate::tensor::simd::set_mode`]; the `RMNP_SIMD` env var covers
     /// the auto case.
     pub simd: String,
@@ -265,8 +271,10 @@ corpus = "zipf"
         assert_eq!(cfg.plan_threads, 3);
         cfg.apply_override("perf.simd=scalar").unwrap();
         assert_eq!(cfg.simd, "scalar");
+        cfg.apply_override("perf.simd=neon").unwrap();
+        assert_eq!(cfg.simd, "neon", "the neon rung is a legal override");
         assert!(cfg.apply_override("perf.simd=sse9").is_err());
-        assert_eq!(cfg.simd, "scalar", "bad simd value must not stick");
+        assert_eq!(cfg.simd, "neon", "bad simd value must not stick");
         assert_eq!(cfg.steps, 42);
         assert!((cfg.lr - 0.5).abs() < 1e-12);
         assert_eq!(cfg.model, "ssm_base");

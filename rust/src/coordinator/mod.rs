@@ -1,9 +1,13 @@
 //! L3 coordinator: training loop, LR schedules, metric logging,
 //! checkpointing, and the multi-threaded sweep executor.
 //!
-//! The device-facing pieces ([`train`], [`sweep`]) drive PJRT and are
+//! The device-facing pieces (`train`, `sweep`) drive PJRT and are
 //! gated behind the `pjrt` feature; schedules, metrics, and checkpoint
 //! I/O are pure host code and always available.
+
+// The crate-level `missing_docs` warning is enforced for tensor/ and
+// optim/; this module's full docs pass is still pending (ROADMAP.md).
+#![allow(missing_docs)]
 
 pub mod checkpoint;
 pub mod metrics;

@@ -16,6 +16,10 @@
 //! `precond` additionally has a native kernel-layer path that runs in
 //! every build.
 
+// The crate-level `missing_docs` warning is enforced for tensor/ and
+// optim/; this module's full docs pass is still pending (ROADMAP.md).
+#![allow(missing_docs)]
+
 pub mod cliprate;
 #[cfg(feature = "pjrt")]
 pub mod dominance_exp;

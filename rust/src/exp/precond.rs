@@ -64,18 +64,26 @@ pub struct SeedDelta {
 }
 
 /// One SIMD-vs-scalar measurement of a single operator shape: the same
-/// kernel-layer op timed on the scalar rung and on the AVX2 rung of the
-/// dispatch ladder.
+/// kernel-layer op timed on the scalar rung and on the best vector rung
+/// of the dispatch ladder (AVX2 on x86-64, NEON on aarch64).
 #[derive(Clone, Debug)]
 pub struct SimdDelta {
+    /// Operator name (`ns5` or `rownorm`).
     pub op: String,
+    /// The d_model whose MLP-up shape was measured.
     pub d_model: usize,
+    /// Operand rows (`4 * d_model`).
     pub rows: usize,
+    /// Operand columns (`d_model`).
     pub cols: usize,
+    /// Which vector rung was measured (`avx2` or `neon`).
+    pub rung: &'static str,
+    /// Median seconds per call on the scalar rung.
     pub scalar_median: f64,
+    /// Median seconds per call on the vector rung.
     pub simd_median: f64,
     /// `scalar_median / simd_median` — the acceptance bar is ≥ 1.0 at
-    /// d_model ≥ 512 whenever AVX2 is available.
+    /// d_model ≥ 512 whenever a vector rung is available.
     pub speedup: f64,
 }
 
@@ -212,18 +220,22 @@ pub fn seed_vs_kernel(d_models: &[usize], repeats: usize) -> Vec<SeedDelta> {
     out
 }
 
-/// AVX2-rung vs scalar-rung timings on the MLP-up shape `(4d, d)` for
-/// each requested `d_model` — the acceptance numbers for this PR's SIMD
-/// microkernel layer. Empty when the CPU has no AVX2/FMA (the dispatch
-/// ladder then only has one rung to measure) and when the operator
-/// forced the scalar rung (`perf.simd = "scalar"` / `RMNP_SIMD=scalar`)
-/// — an explicit portable-rung request must not be overridden just to
-/// take a measurement. Restores the previously requested SIMD mode
-/// before returning.
+/// Vector-rung vs scalar-rung timings on the MLP-up shape `(4d, d)` for
+/// each requested `d_model` — the acceptance numbers for the SIMD
+/// microkernel layer, measured against whichever vector rung this host
+/// detects (AVX2 on x86-64, NEON on aarch64). Empty when the CPU has no
+/// vector rung (the dispatch ladder then only has one rung to measure)
+/// and when the operator forced the scalar rung
+/// (`perf.simd = "scalar"` / `RMNP_SIMD=scalar`) — an explicit
+/// portable-rung request must not be overridden just to take a
+/// measurement. Restores the previously requested SIMD mode before
+/// returning.
 pub fn simd_vs_scalar(d_models: &[usize], repeats: usize) -> Vec<SimdDelta> {
-    if !simd::avx2_available() || simd::active() == simd::SimdPath::Scalar {
+    let best = simd::detected();
+    if best == simd::SimdPath::Scalar || simd::active() == simd::SimdPath::Scalar {
         return Vec::new();
     }
+    let rung = best.name();
     let prev = simd::mode();
     let mut rng = Rng::new(99);
     let mut ws = Workspace::new();
@@ -239,11 +251,11 @@ pub fn simd_vs_scalar(d_models: &[usize], repeats: usize) -> Vec<SimdDelta> {
         let scalar_rn = bench_n(&format!("scalar_rownorm_{m}x{n}"), 10, repeats, || {
             v.row_normalize_into(&mut dst, ROW_EPS);
         });
-        simd::set_mode(simd::SimdMode::Avx2);
-        let simd_ns = bench_n(&format!("avx2_ns5_{m}x{n}"), 1, repeats, || {
+        simd::set_mode(best.to_mode());
+        let simd_ns = bench_n(&format!("{rung}_ns5_{m}x{n}"), 1, repeats, || {
             newton_schulz5_into(&v, 5, &mut ws, &mut dst);
         });
-        let simd_rn = bench_n(&format!("avx2_rownorm_{m}x{n}"), 10, repeats, || {
+        let simd_rn = bench_n(&format!("{rung}_rownorm_{m}x{n}"), 10, repeats, || {
             v.row_normalize_into(&mut dst, ROW_EPS);
         });
         out.push(SimdDelta {
@@ -251,6 +263,7 @@ pub fn simd_vs_scalar(d_models: &[usize], repeats: usize) -> Vec<SimdDelta> {
             d_model: d,
             rows: m,
             cols: n,
+            rung,
             scalar_median: scalar_ns.median(),
             simd_median: simd_ns.median(),
             speedup: scalar_ns.median() / simd_ns.median().max(1e-12),
@@ -260,6 +273,7 @@ pub fn simd_vs_scalar(d_models: &[usize], repeats: usize) -> Vec<SimdDelta> {
             d_model: d,
             rows: m,
             cols: n,
+            rung,
             scalar_median: scalar_rn.median(),
             simd_median: simd_rn.median(),
             speedup: scalar_rn.median() / simd_rn.median().max(1e-12),
@@ -313,6 +327,7 @@ pub fn json_report(
                 ("d_model", int(d.d_model)),
                 ("rows", int(d.rows)),
                 ("cols", int(d.cols)),
+                ("rung", text(d.rung)),
                 ("scalar_median_s", num(d.scalar_median)),
                 ("simd_median_s", num(d.simd_median)),
                 ("speedup", num(d.speedup)),
@@ -503,6 +518,7 @@ mod tests {
             d_model: 512,
             rows: 2048,
             cols: 512,
+            rung: "avx2",
             scalar_median: 2.0,
             simd_median: 1.0,
             speedup: 2.0,
@@ -517,6 +533,7 @@ mod tests {
         assert_eq!(sk.get("improvement").unwrap().as_f64(), Some(3.0));
         let sv = back.get("simd_vs_scalar").unwrap().idx(0).unwrap();
         assert_eq!(sv.get("speedup").unwrap().as_f64(), Some(2.0));
+        assert_eq!(sv.req_str("rung").unwrap(), "avx2", "delta must name its rung");
     }
 
     // NOTE: simd_vs_scalar flips the process-global dispatch mode, so it

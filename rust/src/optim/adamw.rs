@@ -3,16 +3,25 @@
 /// Per-tensor AdamW state over flat f32 buffers (works for any shape).
 #[derive(Clone, Debug)]
 pub struct AdamWState {
+    /// First-moment EMA.
     pub m: Vec<f32>,
+    /// Second-moment EMA.
     pub v: Vec<f32>,
+    /// Step counter (drives the bias corrections).
     pub t: u32,
+    /// First-moment coefficient β₁.
     pub beta1: f32,
+    /// Second-moment coefficient β₂.
     pub beta2: f32,
+    /// Denominator floor ε.
     pub eps: f32,
+    /// Decoupled weight-decay coefficient λ.
     pub weight_decay: f32,
 }
 
 impl AdamWState {
+    /// Zeroed state for a flat parameter of `len` elements, with the
+    /// paper's default coefficients.
     pub fn new(len: usize) -> Self {
         AdamWState {
             m: vec![0.0; len],

@@ -108,15 +108,21 @@ pub fn newton_schulz5_naive(g: &Matrix, steps: usize) -> Matrix {
 /// Momentum state for one matrix parameter.
 #[derive(Clone, Debug)]
 pub struct MuonState {
+    /// The momentum EMA `V` (same shape as the parameter).
     pub momentum: Matrix,
+    /// EMA coefficient β (paper Appendix B).
     pub beta: f32,
+    /// Decoupled weight-decay coefficient λ.
     pub weight_decay: f32,
+    /// Newton–Schulz iterations per step (the paper uses 5).
     pub ns_steps: usize,
     /// Scratch buffers reused across NS iterations and across steps.
     pub workspace: Workspace,
 }
 
 impl MuonState {
+    /// Zero-momentum state for a `rows × cols` parameter, with the
+    /// paper's default β, λ, and NS iteration count.
     pub fn new(rows: usize, cols: usize) -> Self {
         MuonState {
             momentum: Matrix::zeros(rows, cols),

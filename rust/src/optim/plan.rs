@@ -36,12 +36,16 @@ use crate::util::Rng;
 /// Which fused optimizer updates one parameter.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OptKind {
+    /// RMNP (Algorithm 2): momentum + row-wise ℓ2 normalization.
     Rmnp,
+    /// Muon (Algorithm 1): momentum + Newton–Schulz-5 orthogonalization.
     Muon,
+    /// AdamW: per-element moments with decoupled weight decay.
     AdamW,
 }
 
 impl OptKind {
+    /// Parse a CLI/config optimizer name.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s {
             "rmnp" => OptKind::Rmnp,
@@ -51,6 +55,7 @@ impl OptKind {
         })
     }
 
+    /// The CLI/config spelling of this optimizer.
     pub fn name(self) -> &'static str {
         match self {
             OptKind::Rmnp => "rmnp",
@@ -63,8 +68,11 @@ impl OptKind {
 /// Per-parameter optimizer state.
 #[derive(Clone, Debug)]
 pub enum OptState {
+    /// RMNP momentum state.
     Rmnp(RmnpState),
+    /// Muon momentum state (owns its NS5 workspace).
     Muon(MuonState),
+    /// AdamW moment state.
     AdamW(AdamWState),
 }
 
@@ -73,13 +81,19 @@ pub enum OptState {
 /// [`StepPlan::with_task`].
 #[derive(Clone, Debug)]
 pub struct ParamTask {
+    /// Stable task name (the deterministic scheduling tie-break).
     pub name: String,
+    /// The parameter matrix.
     pub w: Matrix,
+    /// The gradient buffer callers fill before each round.
     pub grad: Matrix,
+    /// The per-parameter optimizer state.
     pub state: OptState,
 }
 
 impl ParamTask {
+    /// A task over `w` with freshly initialized `kind` optimizer state
+    /// and a zeroed gradient buffer.
     pub fn new(name: &str, w: Matrix, kind: OptKind) -> Self {
         let (r, c) = (w.rows(), w.cols());
         let state = match kind {
@@ -90,6 +104,7 @@ impl ParamTask {
         ParamTask { name: name.to_string(), grad: Matrix::zeros(r, c), w, state }
     }
 
+    /// Which optimizer steps this task.
     pub fn kind(&self) -> OptKind {
         match self.state {
             OptState::Rmnp(_) => OptKind::Rmnp,
@@ -213,6 +228,23 @@ fn worker(shared: Arc<PlanShared>) {
 }
 
 /// A persistent sharded stepping plan over a model's parameter list.
+///
+/// ```
+/// use rmnp::optim::plan::{OptKind, ParamTask, StepPlan};
+/// use rmnp::tensor::Matrix;
+/// use rmnp::util::Rng;
+/// let mut rng = Rng::new(7);
+/// let tasks = vec![
+///     ParamTask::new("fc1", Matrix::randn(8, 4, 0.1, &mut rng), OptKind::Rmnp),
+///     ParamTask::new("fc2", Matrix::randn(4, 8, 0.1, &mut rng), OptKind::AdamW),
+/// ];
+/// let mut plan = StepPlan::new(tasks, 2);
+/// for i in 0..plan.len() {
+///     plan.with_task(i, |t| t.grad.data_mut().fill(1.0)); // per-round grads
+/// }
+/// plan.step_all(0.01); // one sharded round over every parameter
+/// assert_eq!(plan.rounds(), 1);
+/// ```
 pub struct StepPlan {
     shared: Arc<PlanShared>,
     workers: Vec<JoinHandle<()>>,
@@ -263,6 +295,7 @@ impl StepPlan {
         self.shared.tasks.len()
     }
 
+    /// Whether the plan has no tasks.
     pub fn is_empty(&self) -> bool {
         self.shared.tasks.is_empty()
     }

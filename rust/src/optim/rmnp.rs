@@ -14,14 +14,32 @@ use crate::tensor::kernels::{self, row_sumsq};
 use crate::tensor::Matrix;
 
 /// Momentum state for one matrix parameter.
+///
+/// ```
+/// use rmnp::optim::RmnpState;
+/// use rmnp::tensor::Matrix;
+/// let mut st = RmnpState::new(2, 4);
+/// let mut w = Matrix::zeros(2, 4);
+/// let g = Matrix::from_vec(2, 4, vec![1.0; 8]);
+/// st.step(&mut w, &g, 0.1);
+/// // every updated row is the row-normalized direction scaled by lr
+/// for n in w.row_norms() {
+///     assert!((n - 0.1).abs() < 1e-4, "row norm {n}");
+/// }
+/// ```
 #[derive(Clone, Debug)]
 pub struct RmnpState {
+    /// The momentum EMA `V` (same shape as the parameter).
     pub momentum: Matrix,
+    /// EMA coefficient β (paper Appendix B).
     pub beta: f32,
+    /// Decoupled weight-decay coefficient λ.
     pub weight_decay: f32,
 }
 
 impl RmnpState {
+    /// Zero-momentum state for a `rows × cols` parameter, with the
+    /// paper's default β and λ.
     pub fn new(rows: usize, cols: usize) -> Self {
         RmnpState {
             momentum: Matrix::zeros(rows, cols),

@@ -14,6 +14,10 @@
 //! every build); the engine/session pieces need the XLA bindings and are
 //! gated behind the `pjrt` feature.
 
+// The crate-level `missing_docs` warning is enforced for tensor/ and
+// optim/; this module's full docs pass is still pending (ROADMAP.md).
+#![allow(missing_docs)]
+
 pub mod manifest;
 #[cfg(feature = "pjrt")]
 pub mod session;

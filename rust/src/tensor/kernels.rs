@@ -6,17 +6,25 @@
 //! [`super::Workspace`] buffers. Design notes:
 //!
 //! * **Dispatch** — each public kernel resolves the
-//!   [`super::simd`] ladder (config override → `RMNP_SIMD` env →
-//!   `is_x86_feature_detected!`, cached once) and takes either the
-//!   explicit AVX2/FMA f32x8 path or the portable scalar tiles below.
-//!   The two paths agree within normal f32 rounding (1e-4 in the parity
-//!   tests); within one path results are bit-deterministic regardless of
-//!   thread count.
-//! * **Matmul** — the AVX2 path repacks B into the [`super::PackedB`]
-//!   strip-major panel layout (one thread-local packed buffer, reused
-//!   across calls) and runs a 4×16 register-tile microkernel whose
-//!   accumulators live in registers across the whole k loop. The scalar
-//!   fallback keeps PR 1's axpy-form 4-row tiles with a [`KC`]-wide
+//!   [`super::simd`] ladder (config override → `RMNP_SIMD` env → runtime
+//!   feature detection, cached once) and takes the AVX2/FMA f32x8 path
+//!   (x86-64), the NEON f32x4 path (aarch64), or the portable scalar
+//!   tiles below. Both vector backends instantiate the same generic
+//!   microkernel bodies (`tensor/simd/lane.rs`), so they share one loop
+//!   structure and one set of invariants. All rungs agree within normal
+//!   f32 rounding (1e-4 in the parity tests); within one rung results are
+//!   bit-deterministic regardless of thread count.
+//! * **Matmul** — the vector path repacks B into the [`super::PackedB`]
+//!   strip-major panel layout and, for row counts past the
+//!   `PACK_A_MIN_ROWS` threshold, additionally repacks A into
+//!   [`super::PackedA`] 4-row panels (both packed once per matmul in the
+//!   calling thread into thread-local buffers, reused across calls), then
+//!   runs a 4-row × 16-column register-tile microkernel whose
+//!   accumulators live in registers across the whole k loop. Packed-A
+//!   swaps the tile's four `k`-strided A row walks (repeated once per
+//!   column strip) for one sequential panel stream; packing is an exact
+//!   copy, so the fast path never changes output bits. The scalar
+//!   fallback keeps PR 1's axpy-form 4-row tiles with a `KC`-wide
 //!   k-panel; its accumulation order matches the seed kernel exactly, so
 //!   the forced-scalar path is bit-identical to `matmul_naive`.
 //! * **NS5 polynomial fusion** — [`ns_poly_into`] computes `bA + cA²`
@@ -24,26 +32,28 @@
 //!   so Newton–Schulz no longer materializes the m×m `A²` intermediate.
 //! * **Reductions** — strict FP forbids LLVM from vectorizing `s += x*y`
 //!   loops, so the scalar [`dot`] accumulates into 8 independent lanes;
-//!   the AVX2 dot uses four f32x8 FMA accumulators. Both reassociate the
-//!   sum (covered by the parity tests).
-//! * **Threading** — row-block parallelism over `std::thread::scope`; the
-//!   symmetric [`gram_into`] balances its upper-triangle row blocks by
-//!   area. The thread count comes from [`num_threads`]: the
-//!   [`set_num_threads`] knob (wired to the `perf.threads` config key),
-//!   else the `RMNP_THREADS` env var, else `available_parallelism`.
-//!   Small problems stay single-threaded (spawn cost dominates), and a
-//!   thread that called [`pin_thread_single`] (a `StepPlan` worker) never
-//!   spawns nested kernel threads.
+//!   the vector dot uses four register FMA accumulators. Both
+//!   reassociate the sum (covered by the parity tests).
+//! * **Threading** — row-block parallelism over `std::thread::scope`,
+//!   with chunk boundaries aligned to the 4-row tile height so packed-A
+//!   panels split cleanly across workers; the symmetric [`gram_into`]
+//!   balances its upper-triangle row blocks by area. The thread count
+//!   comes from [`num_threads`]: the [`set_num_threads`] knob (wired to
+//!   the `perf.threads` config key), else the `RMNP_THREADS` env var,
+//!   else `available_parallelism`. Small problems stay single-threaded
+//!   (spawn cost dominates), and a thread that called
+//!   [`pin_thread_single`] (a `StepPlan` worker) never spawns nested
+//!   kernel threads.
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
-#[cfg(target_arch = "x86_64")]
-use crate::tensor::simd;
-#[cfg(target_arch = "x86_64")]
-use crate::tensor::PackedB;
-#[cfg(target_arch = "x86_64")]
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use crate::tensor::simd::{self, SimdPath};
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use crate::tensor::{PackedA, PackedB};
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
 use std::cell::RefCell;
 
 /// Output rows per register tile in matmul/gram.
@@ -56,10 +66,22 @@ const LANES: usize = 8;
 const PAR_MIN_MULS: usize = 1 << 20;
 /// Minimum elements before an elementwise/row kernel goes multi-threaded.
 const PAR_MIN_ELEMS: usize = 1 << 19;
-/// Minimum slice length before `dot`/`axpby` take the AVX2 call (below
+/// Minimum slice length before `dot`/`axpby` take the vector call (below
 /// this the cross-crate call outweighs the vector win).
-#[cfg(target_arch = "x86_64")]
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
 const SIMD_MIN_ELEMS: usize = 16;
+/// Minimum output rows before the vector matmul additionally packs A
+/// into [`PackedA`] panels. Packing costs one O(m·k) pass; the win is
+/// replacing `⌈n/16⌉` strided traversals of A with sequential panel
+/// reads, so it needs enough rows (and more than one column strip — see
+/// the `n > PackedB::NR` guard at the call sites) to pay for itself.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+const PACK_A_MIN_ROWS: usize = 64;
+
+// the scalar tile height must match the packed-A panel height, or the
+// aligned row partition would split panels across workers
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+const _: () = assert!(MR == PackedA::MR);
 
 static THREAD_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 
@@ -133,11 +155,16 @@ fn plan_threads(units: usize, work: usize, min_work: usize) -> usize {
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     debug_assert_eq!(x.len(), y.len());
-    #[cfg(target_arch = "x86_64")]
-    {
-        if x.len() >= SIMD_MIN_ELEMS && simd::active() == simd::SimdPath::Avx2 {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if x.len() >= SIMD_MIN_ELEMS {
+        match simd::active() {
+            #[cfg(target_arch = "x86_64")]
             // SAFETY: active() returns Avx2 only when avx2+fma are detected
-            return unsafe { simd::avx2::dot(x, y) };
+            SimdPath::Avx2 => return unsafe { simd::avx2::dot(x, y) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: active() returns Neon only when neon is detected
+            SimdPath::Neon => return unsafe { simd::neon::dot(x, y) },
+            _ => {}
         }
     }
     dot_scalar(x, y)
@@ -186,10 +213,11 @@ pub fn matmul_into(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n:
         dst.fill(0.0);
         return;
     }
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
     {
-        if simd::active() == simd::SimdPath::Avx2 {
-            matmul_avx2(dst, a, b, m, k, n);
+        let path = simd::active();
+        if path != SimdPath::Scalar {
+            matmul_simd(path, dst, a, b, m, k, n);
             return;
         }
     }
@@ -198,18 +226,27 @@ pub fn matmul_into(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n:
 
 /// Split `dst` (`rows` rows of `row_len`) into contiguous row chunks and
 /// run `f(chunk, first_row, row_count)` on each — on the calling thread
-/// when `threads <= 1`, else one scoped thread per chunk. Every threaded
-/// kernel in this module shares this partition, so the chunking math
-/// lives in exactly one place.
-fn par_row_chunks<F>(dst: &mut [f32], rows: usize, row_len: usize, threads: usize, f: F)
-where
+/// when `threads <= 1`, else one scoped thread per chunk. Chunk sizes are
+/// rounded up to a multiple of `align` (every chunk start is then
+/// `align`-aligned), so the packed-A panel lookup — which assumes chunks
+/// begin on a 4-row panel boundary — holds on every worker. Every
+/// threaded kernel in this module shares this partition, so the chunking
+/// math lives in exactly one place.
+fn par_row_chunks<F>(
+    dst: &mut [f32],
+    rows: usize,
+    row_len: usize,
+    threads: usize,
+    align: usize,
+    f: F,
+) where
     F: Fn(&mut [f32], usize, usize) + Sync,
 {
     if threads <= 1 {
         f(dst, 0, rows);
         return;
     }
-    let rows_per = rows.div_ceil(threads);
+    let rows_per = rows.div_ceil(threads).div_ceil(align) * align;
     std::thread::scope(|s| {
         let mut dst_rest = dst;
         let mut i0 = 0usize;
@@ -237,7 +274,7 @@ pub(crate) fn matmul_into_scalar(
     n: usize,
 ) {
     let t = plan_threads(m, m * n * k, PAR_MIN_MULS);
-    par_row_chunks(dst, m, n, t, |chunk, i0, take| {
+    par_row_chunks(dst, m, n, t, 1, |chunk, i0, take| {
         matmul_rows(chunk, &a[i0 * k..(i0 + take) * k], b, k, n)
     });
 }
@@ -304,37 +341,64 @@ fn matmul_rows_accum(dst: &mut [f32], a: &[f32], b: &[f32], k: usize, n: usize, 
     }
 }
 
-#[cfg(target_arch = "x86_64")]
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
 thread_local! {
-    /// Per-thread packed-B panel buffer for the AVX2 matmul paths. Packing
-    /// happens in the calling thread *before* any row-chunk workers spawn
-    /// (they share the packed panel read-only), and the buffer only grows,
-    /// so steady-state calls are allocation-free.
-    static PACK_TLS: RefCell<PackedB> = RefCell::new(PackedB::new());
+    /// Per-thread packed panel buffers (B strips + A panels) for the
+    /// vector matmul paths. Packing happens in the calling thread
+    /// *before* any row-chunk workers spawn (they share the panels
+    /// read-only), and the buffers only grow, so steady-state calls are
+    /// allocation-free.
+    static PACK_TLS: RefCell<(PackedB, PackedA)> =
+        RefCell::new((PackedB::new(), PackedA::new()));
 }
 
-/// AVX2 matmul: repack B once, then run the packed microkernel over
-/// row-block threads.
-#[cfg(target_arch = "x86_64")]
-fn matmul_avx2(dst: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+/// Vector-rung matmul: repack B (and, past [`PACK_A_MIN_ROWS`], A), then
+/// run the packed microkernel over panel-aligned row-block threads.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn matmul_simd(
+    path: SimdPath,
+    dst: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     PACK_TLS.with(|cell| {
-        let mut pb = cell.borrow_mut();
+        let mut packs = cell.borrow_mut();
+        let (pb, pa) = &mut *packs;
         pb.pack(b, k, n);
-        let packed = pb.data();
+        let use_pa = m >= PACK_A_MIN_ROWS && n > PackedB::NR;
+        if use_pa {
+            pa.pack(a, m, k);
+        }
+        let packed_b = pb.data();
+        let packed_a = if use_pa { pa.data() } else { &[][..] };
         let t = plan_threads(m, m * n * k, PAR_MIN_MULS);
-        par_row_chunks(dst, m, n, t, |chunk, i0, take| {
-            // SAFETY: the Avx2 dispatch rung implies avx2+fma support; the
-            // packed panel is shared read-only across chunks
+        par_row_chunks(dst, m, n, t, PackedA::MR, |chunk, i0, take| {
+            let a_rows = &a[i0 * k..(i0 + take) * k];
+            let pa_rows = if use_pa {
+                let mr = PackedA::MR;
+                &packed_a[(i0 / mr) * mr * k..(i0 / mr + take / mr) * mr * k]
+            } else {
+                &[][..]
+            };
+            // SAFETY: `path` came from simd::active(), so the required
+            // CPU features are present; the packed panels are shared
+            // read-only across chunks
             unsafe {
-                simd::avx2::matmul_packed_rows(
-                    chunk,
-                    &a[i0 * k..(i0 + take) * k],
-                    packed,
-                    k,
-                    n,
-                    1.0,
-                    false,
-                )
+                match path {
+                    #[cfg(target_arch = "x86_64")]
+                    SimdPath::Avx2 => simd::avx2::matmul_packed_rows(
+                        chunk, a_rows, pa_rows, packed_b, k, n, 1.0, false,
+                    ),
+                    #[cfg(target_arch = "aarch64")]
+                    SimdPath::Neon => simd::neon::matmul_packed_rows(
+                        chunk, a_rows, pa_rows, packed_b, k, n, 1.0, false,
+                    ),
+                    // defensive: an unexpected path falls back to scalar
+                    _ => matmul_rows(chunk, a_rows, b, k, n),
+                }
             }
         });
     });
@@ -350,15 +414,16 @@ pub fn ns_poly_into(dst: &mut [f32], a: &[f32], m: usize, b: f32, c: f32) {
     if m == 0 {
         return;
     }
-    #[cfg(target_arch = "x86_64")]
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
     {
-        if simd::active() == simd::SimdPath::Avx2 {
-            ns_poly_avx2(dst, a, m, b, c);
+        let path = simd::active();
+        if path != SimdPath::Scalar {
+            ns_poly_simd(path, dst, a, m, b, c);
             return;
         }
     }
     let t = plan_threads(m, m * m * m, PAR_MIN_MULS);
-    par_row_chunks(dst, m, m, t, |chunk, i0, take| {
+    par_row_chunks(dst, m, m, t, 1, |chunk, i0, take| {
         ns_poly_rows(chunk, &a[i0 * m..(i0 + take) * m], a, m, b, c)
     });
 }
@@ -372,17 +437,42 @@ fn ns_poly_rows(dst: &mut [f32], a_rows: &[f32], a_full: &[f32], m: usize, b: f3
     matmul_rows_accum(dst, a_rows, a_full, m, m, c);
 }
 
-#[cfg(target_arch = "x86_64")]
-fn ns_poly_avx2(dst: &mut [f32], a: &[f32], m: usize, b: f32, c: f32) {
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn ns_poly_simd(path: SimdPath, dst: &mut [f32], a: &[f32], m: usize, b: f32, c: f32) {
     PACK_TLS.with(|cell| {
-        let mut pb = cell.borrow_mut();
+        let mut packs = cell.borrow_mut();
+        let (pb, pa) = &mut *packs;
         pb.pack(a, m, m);
-        let packed = pb.data();
+        let use_pa = m >= PACK_A_MIN_ROWS && m > PackedB::NR;
+        if use_pa {
+            pa.pack(a, m, m);
+        }
+        let packed_b = pb.data();
+        let packed_a = if use_pa { pa.data() } else { &[][..] };
         let t = plan_threads(m, m * m * m, PAR_MIN_MULS);
-        par_row_chunks(dst, m, m, t, |chunk, i0, take| {
-            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+        par_row_chunks(dst, m, m, t, PackedA::MR, |chunk, i0, take| {
+            let a_rows = &a[i0 * m..(i0 + take) * m];
+            let pa_rows = if use_pa {
+                let mr = PackedA::MR;
+                &packed_a[(i0 / mr) * mr * m..(i0 / mr + take / mr) * mr * m]
+            } else {
+                &[][..]
+            };
+            // SAFETY: `path` came from simd::active(), so the required
+            // CPU features are present
             unsafe {
-                simd::avx2::ns_poly_rows(chunk, &a[i0 * m..(i0 + take) * m], packed, m, b, c)
+                match path {
+                    #[cfg(target_arch = "x86_64")]
+                    SimdPath::Avx2 => simd::avx2::ns_poly_rows(
+                        chunk, a_rows, pa_rows, packed_b, m, b, c,
+                    ),
+                    #[cfg(target_arch = "aarch64")]
+                    SimdPath::Neon => simd::neon::ns_poly_rows(
+                        chunk, a_rows, pa_rows, packed_b, m, b, c,
+                    ),
+                    // defensive: an unexpected path falls back to scalar
+                    _ => ns_poly_rows(chunk, a_rows, a, m, b, c),
+                }
             }
         });
     });
@@ -430,7 +520,13 @@ fn mirror_lower(dst: &mut [f32], m: usize) {
 
 /// Row boundaries `0 = b0 < … < bt = m` splitting the upper-triangle area
 /// roughly evenly: rows `0..x` cover area `x·m − x(x−1)/2`, so the b-th
-/// boundary solves the quadratic for `b/t` of the total.
+/// boundary solves the quadratic for `b/t` of the total. Interior
+/// boundaries are rounded to multiples of [`MR`]: the Gram remainder
+/// rows reduce through a different fold than the 4-row tiles, so the
+/// tile/remainder assignment must not depend on where the thread
+/// boundaries land — with aligned boundaries the 4-row blocks are the
+/// same for every thread count and Gram output bits never change with
+/// `perf.threads`.
 fn triangle_partition(m: usize, t: usize) -> Vec<usize> {
     let mut bounds = Vec::with_capacity(t + 1);
     bounds.push(0usize);
@@ -440,7 +536,8 @@ fn triangle_partition(m: usize, t: usize) -> Vec<usize> {
         let target = total * b as f64 / t as f64;
         let x = mf - (mf * mf - 2.0 * target).max(0.0).sqrt();
         let prev = *bounds.last().unwrap();
-        bounds.push((x.round() as usize).clamp(prev, m));
+        let aligned = ((x / MR as f64).round() as usize) * MR;
+        bounds.push(aligned.clamp(prev, m));
     }
     bounds.push(m);
     bounds
@@ -452,13 +549,15 @@ fn triangle_partition(m: usize, t: usize) -> Vec<usize> {
 /// too (they are correct values); the mirror pass makes the lower
 /// triangle consistent.
 fn gram_rows(dst_chunk: &mut [f32], a: &[f32], i0: usize, i1: usize, m: usize, k: usize) {
-    #[cfg(target_arch = "x86_64")]
-    {
-        if simd::active() == simd::SimdPath::Avx2 {
-            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
-            unsafe { simd::avx2::gram_rows(dst_chunk, a, i0, i1, m, k) };
-            return;
-        }
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    match simd::active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+        SimdPath::Avx2 => return unsafe { simd::avx2::gram_rows(dst_chunk, a, i0, i1, m, k) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: the Neon dispatch rung implies neon support
+        SimdPath::Neon => return unsafe { simd::neon::gram_rows(dst_chunk, a, i0, i1, m, k) },
+        _ => {}
     }
     gram_rows_scalar(dst_chunk, a, i0, i1, m, k);
 }
@@ -556,12 +655,16 @@ pub fn transpose_into(dst: &mut [f32], src: &[f32], rows: usize, cols: usize) {
 pub fn axpby_into(dst: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
     assert_eq!(dst.len(), x.len(), "axpby dst/x shape");
     assert_eq!(x.len(), y.len(), "axpby x/y shape");
-    #[cfg(target_arch = "x86_64")]
-    {
-        if dst.len() >= SIMD_MIN_ELEMS && simd::active() == simd::SimdPath::Avx2 {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if dst.len() >= SIMD_MIN_ELEMS {
+        match simd::active() {
+            #[cfg(target_arch = "x86_64")]
             // SAFETY: the Avx2 dispatch rung implies avx2+fma support
-            unsafe { simd::avx2::axpby(dst, a, x, b, y) };
-            return;
+            SimdPath::Avx2 => return unsafe { simd::avx2::axpby(dst, a, x, b, y) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: the Neon dispatch rung implies neon support
+            SimdPath::Neon => return unsafe { simd::neon::axpby(dst, a, x, b, y) },
+            _ => {}
         }
     }
     for i in 0..dst.len() {
@@ -572,12 +675,16 @@ pub fn axpby_into(dst: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
 /// `x = a·x + b·y` elementwise, in place (SIMD-dispatched).
 pub fn axpby_inplace(x: &mut [f32], a: f32, y: &[f32], b: f32) {
     assert_eq!(x.len(), y.len(), "axpby_inplace shape");
-    #[cfg(target_arch = "x86_64")]
-    {
-        if x.len() >= SIMD_MIN_ELEMS && simd::active() == simd::SimdPath::Avx2 {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if x.len() >= SIMD_MIN_ELEMS {
+        match simd::active() {
+            #[cfg(target_arch = "x86_64")]
             // SAFETY: the Avx2 dispatch rung implies avx2+fma support
-            unsafe { simd::avx2::axpby_inplace(x, a, y, b) };
-            return;
+            SimdPath::Avx2 => return unsafe { simd::avx2::axpby_inplace(x, a, y, b) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: the Neon dispatch rung implies neon support
+            SimdPath::Neon => return unsafe { simd::neon::axpby_inplace(x, a, y, b) },
+            _ => {}
         }
     }
     for i in 0..x.len() {
@@ -597,19 +704,27 @@ pub fn row_normalize_into(
     assert_eq!(dst.len(), rows * cols, "rownorm dst shape");
     assert_eq!(src.len(), rows * cols, "rownorm src shape");
     let t = plan_threads(rows, rows * cols, PAR_MIN_ELEMS);
-    par_row_chunks(dst, rows, cols, t, |chunk, i0, take| {
+    par_row_chunks(dst, rows, cols, t, 1, |chunk, i0, take| {
         row_normalize_rows(chunk, &src[i0 * cols..(i0 + take) * cols], cols, eps)
     });
 }
 
 /// One contiguous block of normalized rows (SIMD-dispatched).
 fn row_normalize_rows(dst: &mut [f32], src: &[f32], cols: usize, eps: f32) {
-    #[cfg(target_arch = "x86_64")]
-    {
-        if cols >= SIMD_MIN_ELEMS && simd::active() == simd::SimdPath::Avx2 {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if cols >= SIMD_MIN_ELEMS {
+        match simd::active() {
+            #[cfg(target_arch = "x86_64")]
             // SAFETY: the Avx2 dispatch rung implies avx2+fma support
-            unsafe { simd::avx2::row_normalize_rows(dst, src, cols, eps) };
-            return;
+            SimdPath::Avx2 => {
+                return unsafe { simd::avx2::row_normalize_rows(dst, src, cols, eps) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: the Neon dispatch rung implies neon support
+            SimdPath::Neon => {
+                return unsafe { simd::neon::row_normalize_rows(dst, src, cols, eps) }
+            }
+            _ => {}
         }
     }
     row_normalize_rows_scalar(dst, src, cols, eps);
@@ -666,6 +781,10 @@ mod tests {
             (2, 128, 130),
             (130, 3, 2),
             (8, 1, 8),
+            // rows past PACK_A_MIN_ROWS with several column strips, both
+            // m % 4 == 0 and a remainder-row tail: the packed-A path
+            (64, 24, 40),
+            (130, 40, 66),
         ] {
             let a = randv(m * k, &mut rng);
             let b = randv(k * n, &mut rng);
@@ -673,7 +792,7 @@ mod tests {
             let mut got = vec![0.0f32; m * n];
             matmul_into(&mut got, &a, &b, m, k, n);
             for (x, y) in got.iter().zip(&want) {
-                assert!((x - y).abs() < 1e-3, "({m},{k},{n})");
+                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "({m},{k},{n})");
             }
         }
     }
@@ -695,7 +814,8 @@ mod tests {
     #[test]
     fn matmul_threaded_matches_serial() {
         // the row partition must not change bits on the active path: the
-        // tile and remainder kernels do identical per-row work
+        // tile and remainder kernels do identical per-row work, and the
+        // packed-A panel lookup holds on 4-aligned chunk starts
         let mut rng = Rng::new(2);
         let (m, k, n) = (67, 129, 131);
         let a = randv(m * k, &mut rng);
@@ -713,9 +833,10 @@ mod tests {
     #[test]
     fn matmul_dispatched_tracks_scalar_within_tolerance() {
         // whatever rung is active, it stays within f32-rounding distance
-        // of the portable path (exact when the scalar rung is active)
+        // of the portable path (exact when the scalar rung is active);
+        // (65, 33, 17) and (80, 20, 33) straddle the packed-A threshold
         let mut rng = Rng::new(12);
-        for (m, k, n) in [(7, 13, 9), (32, 64, 48), (65, 33, 17)] {
+        for (m, k, n) in [(7, 13, 9), (32, 64, 48), (65, 33, 17), (80, 20, 33)] {
             let a = randv(m * k, &mut rng);
             let b = randv(k * n, &mut rng);
             let mut fast = vec![0.0f32; m * n];
@@ -730,9 +851,10 @@ mod tests {
 
     #[test]
     fn ns_poly_fusion_matches_unfused() {
-        // dst = b·A + c·A² against the two-buffer reference
+        // dst = b·A + c·A² against the two-buffer reference; m = 65/96
+        // cross PACK_A_MIN_ROWS so the packed-A polynomial path runs too
         let mut rng = Rng::new(13);
-        for m in [1usize, 3, 8, 17, 33] {
+        for m in [1usize, 3, 8, 17, 33, 65, 96] {
             let a = randv(m * m, &mut rng);
             let a2 = naive_matmul(&a, &a, m, m, m);
             let mut want = vec![0.0f32; m * m];
@@ -773,31 +895,67 @@ mod tests {
     }
 
     #[test]
-    fn gram_threaded_matches_serial() {
+    fn gram_threaded_matches_serial_bitwise() {
+        // the triangle boundaries are MR-aligned, so the tile/remainder
+        // row assignment — and therefore every output bit — is identical
+        // for any thread count, on every rung. (157 rows: the global
+        // m % 4 tail rows take the remainder fold in both runs.)
         let mut rng = Rng::new(4);
         // big enough to cross PAR_MIN_MULS so the threaded path runs
-        let (m, k) = (160, 90);
-        let a = randv(m * k, &mut rng);
-        let mut serial = vec![0.0f32; m * m];
-        gram_rows(&mut serial, &a, 0, m, m, k);
-        mirror_lower(&mut serial, m);
-        set_num_threads(4);
-        let mut par = vec![0.0f32; m * m];
-        gram_into(&mut par, &a, m, k);
-        set_num_threads(0);
-        for (x, y) in par.iter().zip(&serial) {
-            assert!((x - y).abs() < 1e-4);
+        for (m, k) in [(160usize, 90usize), (157, 90)] {
+            let a = randv(m * k, &mut rng);
+            let mut serial = vec![0.0f32; m * m];
+            gram_rows(&mut serial, &a, 0, m, m, k);
+            mirror_lower(&mut serial, m);
+            set_num_threads(4);
+            let mut par = vec![0.0f32; m * m];
+            gram_into(&mut par, &a, m, k);
+            set_num_threads(0);
+            assert_eq!(serial, par, "gram bits changed with threads (m={m})");
         }
     }
 
     #[test]
-    fn triangle_partition_covers_and_orders() {
+    fn triangle_partition_covers_orders_and_aligns() {
         for m in [1usize, 2, 7, 100, 1023] {
             for t in [1usize, 2, 3, 8] {
                 let b = triangle_partition(m, t);
                 assert_eq!(*b.first().unwrap(), 0);
                 assert_eq!(*b.last().unwrap(), m);
                 assert!(b.windows(2).all(|w| w[0] <= w[1]), "{b:?}");
+                // interior boundaries sit on tile-height multiples so the
+                // tile/remainder split is thread-count-invariant
+                for &x in &b[1..b.len() - 1] {
+                    assert!(x % MR == 0 || x == m, "unaligned boundary in {b:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_row_chunks_cover_exactly_once() {
+        // chunk starts must be align-multiples and the union must be a
+        // disjoint cover of 0..rows, whatever the thread/align combo
+        use std::sync::Mutex;
+        for rows in [1usize, 4, 7, 17, 64, 67] {
+            for threads in [1usize, 2, 3, 5] {
+                for align in [1usize, 4] {
+                    let mut dst = vec![0.0f32; rows * 3];
+                    let seen = Mutex::new(Vec::new());
+                    par_row_chunks(&mut dst, rows, 3, threads, align, |chunk, i0, take| {
+                        assert_eq!(chunk.len(), take * 3);
+                        assert_eq!(i0 % align, 0, "chunk start must be aligned");
+                        seen.lock().unwrap().push((i0, take));
+                    });
+                    let mut seen = seen.into_inner().unwrap();
+                    seen.sort();
+                    let mut next = 0usize;
+                    for (i0, take) in seen {
+                        assert_eq!(i0, next, "gap or overlap at {i0}");
+                        next = i0 + take;
+                    }
+                    assert_eq!(next, rows, "rows={rows} t={threads} a={align}");
+                }
             }
         }
     }

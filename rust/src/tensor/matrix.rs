@@ -47,15 +47,19 @@ impl Matrix {
         m
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
+    /// The row-major backing slice.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
+    /// The row-major backing slice, mutably.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
@@ -71,6 +75,7 @@ impl Matrix {
     pub fn get(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.cols + j]
     }
+    /// Element setter.
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f32) {
         self.data[i * self.cols + j] = v;
@@ -101,6 +106,16 @@ impl Matrix {
     }
 
     /// Matmul `self (m×k) · other (k×n)` into a new matrix.
+    ///
+    /// Runs on the SIMD-dispatched, multi-threaded kernel layer; use
+    /// [`Matrix::matmul_into`] with a [`super::Workspace`] buffer on hot
+    /// paths to avoid the allocation.
+    ///
+    /// ```
+    /// use rmnp::tensor::Matrix;
+    /// let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+    /// assert_eq!(a.matmul(&Matrix::eye(2)), a);
+    /// ```
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         let mut out = Matrix::zeros(self.rows, other.cols);
         self.matmul_into(other, &mut out);

@@ -1,12 +1,13 @@
 //! Host-side f32 tensor substrate: matrix type, kernels, scratch arena.
 //!
-//! Layered as:
+//! Layered as (see `docs/ARCHITECTURE.md` for the full book):
 //!
-//! * [`simd`] — the instruction-level layer: explicit AVX2/FMA f32x8
-//!   microkernels (dot, packed-B matmul, Gram, axpby, fused row
-//!   normalize, NS5 polynomial) behind a runtime dispatch ladder
-//!   resolved once at startup (`perf.simd` config key → `RMNP_SIMD` env
-//!   var → `is_x86_feature_detected!`). Scalar tiles are the portable
+//! * [`simd`] — the instruction-level layer: one set of generic
+//!   microkernel bodies (dot, packed matmul, Gram, axpby, fused row
+//!   normalize, NS5 polynomial) instantiated per backend — AVX2/FMA
+//!   f32x8 on x86-64, NEON f32x4 on aarch64 — behind a runtime dispatch
+//!   ladder resolved at startup (`perf.simd` config key → `RMNP_SIMD`
+//!   env var → feature detection). Scalar tiles are the portable
 //!   fallback rung.
 //! * [`kernels`] — the performance layer: SIMD-dispatched, register-tiled
 //!   matmul/Gram microkernels, blocked transpose, fused row
@@ -21,9 +22,12 @@
 //!   the seed's scalar paths survive as `*_naive` parity baselines.
 //! * [`Workspace`] — a best-fit scratch-buffer pool so multi-buffer
 //!   pipelines (Newton–Schulz iterations, fused optimizer steps) run
-//!   allocation-free after warmup.
-//! * [`norms`](self) — the paper's norm zoo (Section 5.1) used by the
-//!   lemma property tests.
+//!   allocation-free after warmup. [`PackedB`] (16-column strips) and
+//!   [`PackedA`] (4-row panels) are the pack layouts the vector matmul
+//!   microkernel streams; the kernel layer keeps one of each per thread.
+//! * `norms` — the paper's norm zoo (Section 5.1) used by the lemma
+//!   property tests ([`frobenius`], [`one2_norm`], [`inf2_norm`],
+//!   [`dual_pairing`]).
 //!
 //! The PJRT artifacts do all heavy *training* compute when the `pjrt`
 //! feature is on; this module is the native path: exact pure-rust
@@ -38,4 +42,4 @@ mod workspace;
 
 pub use matrix::Matrix;
 pub use norms::{dual_pairing, frobenius, inf2_norm, one2_norm};
-pub use workspace::{PackedB, Workspace};
+pub use workspace::{PackedA, PackedB, Workspace};

@@ -1,0 +1,152 @@
+//! The x86-64 AVX2/FMA backend: [`SimdLane`] implemented on 8-lane
+//! `__m256` registers, plus thin `#[target_feature(enable = "avx2,fma")]`
+//! wrappers around the generic bodies in [`super::lane`].
+//!
+//! Every function is `unsafe` because it must only run on CPUs where
+//! [`super::avx2_available`] is true — the dispatch sites in
+//! [`crate::tensor::kernels`] guarantee that via [`super::active`]. The
+//! arithmetic sequences are the generic layer's; this file only pins the
+//! register type and the ISA, so results are bit-identical to the
+//! pre-refactor hand-written AVX2 kernels (same intrinsics, same order).
+
+use core::arch::x86_64::*;
+
+use super::lane::{self, SimdLane};
+
+/// Packed-B strip width: 16 columns = two f32x8 accumulators per row.
+pub const NR: usize = lane::NR;
+
+/// Accumulator registers per strip row (`NR / 8`).
+const NV: usize = NR / 8;
+
+/// One AVX2 register of 8 f32 lanes.
+#[derive(Clone, Copy)]
+pub(crate) struct F32x8(__m256);
+
+impl SimdLane for F32x8 {
+    const LANES: usize = 8;
+
+    #[inline(always)]
+    unsafe fn zero() -> Self {
+        F32x8(_mm256_setzero_ps())
+    }
+
+    #[inline(always)]
+    unsafe fn splat(x: f32) -> Self {
+        F32x8(_mm256_set1_ps(x))
+    }
+
+    #[inline(always)]
+    unsafe fn load(p: *const f32) -> Self {
+        F32x8(_mm256_loadu_ps(p))
+    }
+
+    #[inline(always)]
+    unsafe fn store(self, p: *mut f32) {
+        _mm256_storeu_ps(p, self.0)
+    }
+
+    #[inline(always)]
+    unsafe fn add(self, other: Self) -> Self {
+        F32x8(_mm256_add_ps(self.0, other.0))
+    }
+
+    #[inline(always)]
+    unsafe fn mul(self, other: Self) -> Self {
+        F32x8(_mm256_mul_ps(self.0, other.0))
+    }
+
+    #[inline(always)]
+    unsafe fn fma(self, a: Self, b: Self) -> Self {
+        F32x8(_mm256_fmadd_ps(a.0, b.0, self.0))
+    }
+
+    #[inline(always)]
+    unsafe fn hsum(self) -> f32 {
+        let lo = _mm256_castps256_ps128(self.0);
+        let hi = _mm256_extractf128_ps(self.0, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+}
+
+/// 4×f32x8 dot product (32 elements per unrolled step).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+    lane::dot::<F32x8>(x, y)
+}
+
+/// `dst = a·x + b·y` elementwise.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn axpby(dst: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
+    lane::axpby::<F32x8>(dst, a, x, b, y)
+}
+
+/// `x = a·x + b·y` elementwise, in place.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn axpby_inplace(x: &mut [f32], a: f32, y: &[f32], b: f32) {
+    lane::axpby_inplace::<F32x8>(x, a, y, b)
+}
+
+/// `dst = b · a` elementwise (the init pass of the fused NS5 poly).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn scale_into(dst: &mut [f32], a: &[f32], b: f32) {
+    lane::scale_into::<F32x8>(dst, a, b)
+}
+
+/// Fused row normalization: `dst[i,:] = src[i,:] / max(‖src[i,:]‖₂, eps)`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn row_normalize_rows(dst: &mut [f32], src: &[f32], cols: usize, eps: f32) {
+    lane::row_normalize_rows::<F32x8>(dst, src, cols, eps)
+}
+
+/// `dst (mc×n) {=, +=} alpha · a (mc×k) · B` over the packed panels; see
+/// [`lane::matmul_packed_rows`]. `pa` is the chunk's
+/// [`crate::tensor::PackedA`] panels, or empty for the packed-B-only
+/// path (bit-identical).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn matmul_packed_rows(
+    dst: &mut [f32],
+    a: &[f32],
+    pa: &[f32],
+    pb: &[f32],
+    k: usize,
+    n: usize,
+    alpha: f32,
+    accumulate: bool,
+) {
+    lane::matmul_packed_rows::<F32x8, NV>(dst, a, pa, pb, k, n, alpha, accumulate)
+}
+
+/// Fused NS5 polynomial rows: `dst = b·a_rows + c·(a_rows · A)` with `A`
+/// (m×m) pre-packed — no m×m `A²` intermediate is materialized.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn ns_poly_rows(
+    dst: &mut [f32],
+    a_rows: &[f32],
+    pa: &[f32],
+    pb: &[f32],
+    m: usize,
+    b: f32,
+    c: f32,
+) {
+    lane::ns_poly_rows::<F32x8, NV>(dst, a_rows, pa, pb, m, b, c)
+}
+
+/// Gram rows `i0..i1` of `a·aᵀ` into `dst_chunk` (full rows, length `m`
+/// each): 4-row tiles share each streamed `a_j` row across four FMA
+/// accumulators; remainder rows fall back to [`dot`].
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn gram_rows(
+    dst_chunk: &mut [f32],
+    a: &[f32],
+    i0: usize,
+    i1: usize,
+    m: usize,
+    k: usize,
+) {
+    lane::gram_rows::<F32x8>(dst_chunk, a, i0, i1, m, k)
+}

@@ -1,0 +1,454 @@
+//! The backend-generic microkernel bodies, written once over a small
+//! [`SimdLane`] register abstraction and instantiated per backend
+//! ([`super::avx2`] with 8-lane `__m256`, [`super::neon`] with 4-lane
+//! `float32x4_t`).
+//!
+//! Everything here is `#[inline(always)]` and carries **no**
+//! `#[target_feature]` of its own: each backend module wraps these bodies
+//! in thin `#[target_feature(enable = ...)]`-annotated functions, the
+//! bodies inline into those wrappers, and the intrinsics behind the
+//! [`SimdLane`] methods then compile with the right ISA enabled (the
+//! same pattern `memchr`/`aho-corasick` use for their vector layers).
+//!
+//! **Bit-determinism contract.** For a fixed backend, the *matmul*
+//! per-row arithmetic sequence is identical whether a row is processed
+//! inside a 4-row tile or as a remainder row, and identical whether A
+//! values come from the raw matrix or from [`crate::tensor::PackedA`]
+//! panels (packing is an exact copy; only the read addresses change) —
+//! so matmul row partitioning and the packed-A fast path never change
+//! output bits. The *Gram* remainder rows reduce through [`dot`]'s
+//! 4-accumulator fold, which differs from the tile rows' one-register
+//! fold; Gram determinism instead comes from the caller keeping the
+//! tile/remainder assignment fixed — `kernels::triangle_partition`
+//! aligns its thread boundaries to [`MR`] so the same rows take the same
+//! fold at every thread count. Across backends results differ by normal
+//! f32 rounding (lane width changes the reduction tree); the parity
+//! suite holds all rungs within 1e-4 of the scalar tiles.
+
+use crate::tensor::{PackedA, PackedB};
+
+/// Packed-B strip width in columns — every backend covers one strip with
+/// `NR / LANES` accumulator registers per tile row.
+pub(crate) const NR: usize = PackedB::NR;
+
+/// Tile height in rows, matching the [`PackedA`] panel height.
+pub(crate) const MR: usize = PackedA::MR;
+
+/// One SIMD register of `LANES` f32 values.
+///
+/// All methods are `unsafe`: implementations are backed by arch
+/// intrinsics that must only execute on CPUs with the matching feature,
+/// which the dispatch ladder in [`super`] guarantees before any generic
+/// body runs.
+pub(crate) trait SimdLane: Copy {
+    /// f32 lanes per register (8 for AVX2, 4 for NEON).
+    const LANES: usize;
+    /// All-zero register.
+    unsafe fn zero() -> Self;
+    /// Broadcast one scalar to every lane.
+    unsafe fn splat(x: f32) -> Self;
+    /// Unaligned load of `LANES` consecutive f32.
+    unsafe fn load(p: *const f32) -> Self;
+    /// Unaligned store of `LANES` consecutive f32.
+    unsafe fn store(self, p: *mut f32);
+    /// Lanewise `self + other`.
+    unsafe fn add(self, other: Self) -> Self;
+    /// Lanewise `self * other`.
+    unsafe fn mul(self, other: Self) -> Self;
+    /// Lanewise fused `self + a * b`.
+    unsafe fn fma(self, a: Self, b: Self) -> Self;
+    /// Horizontal sum of all lanes.
+    unsafe fn hsum(self) -> f32;
+}
+
+/// Dot product with four register accumulators (`4 * LANES` elements per
+/// unrolled step), folded as `(acc0 + acc1) + (acc2 + acc3)`.
+#[inline(always)]
+pub(crate) unsafe fn dot<V: SimdLane>(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let l = V::LANES;
+    let xp = x.as_ptr();
+    let yp = y.as_ptr();
+    let mut acc0 = V::zero();
+    let mut acc1 = V::zero();
+    let mut acc2 = V::zero();
+    let mut acc3 = V::zero();
+    let mut i = 0usize;
+    while i + 4 * l <= n {
+        acc0 = acc0.fma(V::load(xp.add(i)), V::load(yp.add(i)));
+        acc1 = acc1.fma(V::load(xp.add(i + l)), V::load(yp.add(i + l)));
+        acc2 = acc2.fma(V::load(xp.add(i + 2 * l)), V::load(yp.add(i + 2 * l)));
+        acc3 = acc3.fma(V::load(xp.add(i + 3 * l)), V::load(yp.add(i + 3 * l)));
+        i += 4 * l;
+    }
+    while i + l <= n {
+        acc0 = acc0.fma(V::load(xp.add(i)), V::load(yp.add(i)));
+        i += l;
+    }
+    let mut s = acc0.add(acc1).add(acc2.add(acc3)).hsum();
+    while i < n {
+        s += x[i] * y[i];
+        i += 1;
+    }
+    s
+}
+
+/// `dst = a·x + b·y` elementwise.
+#[inline(always)]
+pub(crate) unsafe fn axpby<V: SimdLane>(dst: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
+    debug_assert_eq!(dst.len(), x.len());
+    debug_assert_eq!(x.len(), y.len());
+    let n = dst.len();
+    let l = V::LANES;
+    let va = V::splat(a);
+    let vb = V::splat(b);
+    let dp = dst.as_mut_ptr();
+    let xp = x.as_ptr();
+    let yp = y.as_ptr();
+    let mut i = 0usize;
+    while i + l <= n {
+        let ax = va.mul(V::load(xp.add(i)));
+        ax.fma(vb, V::load(yp.add(i))).store(dp.add(i));
+        i += l;
+    }
+    while i < n {
+        dst[i] = a * x[i] + b * y[i];
+        i += 1;
+    }
+}
+
+/// `x = a·x + b·y` elementwise, in place.
+#[inline(always)]
+pub(crate) unsafe fn axpby_inplace<V: SimdLane>(x: &mut [f32], a: f32, y: &[f32], b: f32) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let l = V::LANES;
+    let va = V::splat(a);
+    let vb = V::splat(b);
+    let xp = x.as_mut_ptr();
+    let yp = y.as_ptr();
+    let mut i = 0usize;
+    while i + l <= n {
+        let ax = va.mul(V::load(xp.add(i)));
+        ax.fma(vb, V::load(yp.add(i))).store(xp.add(i));
+        i += l;
+    }
+    while i < n {
+        x[i] = a * x[i] + b * y[i];
+        i += 1;
+    }
+}
+
+/// `dst = b · a` elementwise (the init pass of the fused NS5 poly).
+#[inline(always)]
+pub(crate) unsafe fn scale_into<V: SimdLane>(dst: &mut [f32], a: &[f32], b: f32) {
+    debug_assert_eq!(dst.len(), a.len());
+    let n = dst.len();
+    let l = V::LANES;
+    let vb = V::splat(b);
+    let dp = dst.as_mut_ptr();
+    let ap = a.as_ptr();
+    let mut i = 0usize;
+    while i + l <= n {
+        vb.mul(V::load(ap.add(i))).store(dp.add(i));
+        i += l;
+    }
+    while i < n {
+        dst[i] = b * a[i];
+        i += 1;
+    }
+}
+
+/// Fused row normalization: `dst[i,:] = src[i,:] / max(‖src[i,:]‖₂, eps)`.
+#[inline(always)]
+pub(crate) unsafe fn row_normalize_rows<V: SimdLane>(
+    dst: &mut [f32],
+    src: &[f32],
+    cols: usize,
+    eps: f32,
+) {
+    if cols == 0 {
+        return;
+    }
+    let l = V::LANES;
+    let rows = dst.len() / cols;
+    for i in 0..rows {
+        let o = i * cols;
+        let srow = &src[o..o + cols];
+        let inv = 1.0 / dot::<V>(srow, srow).sqrt().max(eps);
+        let vi = V::splat(inv);
+        let sp = srow.as_ptr();
+        let dp = dst.as_mut_ptr().add(o);
+        let mut j = 0usize;
+        while j + l <= cols {
+            vi.mul(V::load(sp.add(j))).store(dp.add(j));
+            j += l;
+        }
+        while j < cols {
+            *dp.add(j) = srow[j] * inv;
+            j += 1;
+        }
+    }
+}
+
+/// One `R × NR` register tile of the packed matmul: `R` output rows
+/// (`row0..row0+R` of the dst/a chunks) across the full column range,
+/// with `NV = NR / LANES` accumulator registers per row.
+///
+/// A values come from the raw chunk (`ap`, strided `(row0+r)·k + p`
+/// reads) when `USE_PA` is false, or sequentially from one packed
+/// [`PackedA`] panel (`pa`, `p·MR + r` reads) when it is true — same
+/// values, same arithmetic order, so the two modes produce identical
+/// bits. The per-row operation sequence is also identical for every `R`,
+/// so tile (`R = 4`) and remainder (`R = 1`) rows agree bitwise — row
+/// partitioning across threads never changes results.
+#[allow(clippy::too_many_arguments)] // a microkernel is its registers
+#[inline(always)]
+unsafe fn packed_tile<V: SimdLane, const R: usize, const NV: usize, const USE_PA: bool>(
+    dp: *mut f32,
+    row0: usize,
+    ap: *const f32,
+    pa: *const f32,
+    pp: *const f32,
+    k: usize,
+    n: usize,
+    alpha: f32,
+    accumulate: bool,
+) {
+    let l = V::LANES;
+    let full = n / NR;
+    let tail = n - full * NR;
+    for s in 0..full {
+        let j0 = s * NR;
+        let sp = pp.add(s * k * NR);
+        let mut acc = [[V::zero(); NV]; R];
+        if accumulate {
+            for (r, row) in acc.iter_mut().enumerate() {
+                for (v, reg) in row.iter_mut().enumerate() {
+                    *reg = V::load(dp.add((row0 + r) * n + j0 + v * l));
+                }
+            }
+        }
+        for p in 0..k {
+            let mut bv = [V::zero(); NV];
+            for (v, reg) in bv.iter_mut().enumerate() {
+                *reg = V::load(sp.add(p * NR + v * l));
+            }
+            for (r, row) in acc.iter_mut().enumerate() {
+                let a = alpha
+                    * if USE_PA {
+                        *pa.add(p * MR + r)
+                    } else {
+                        *ap.add((row0 + r) * k + p)
+                    };
+                let av = V::splat(a);
+                for (reg, b) in row.iter_mut().zip(bv) {
+                    *reg = reg.fma(av, b);
+                }
+            }
+        }
+        for (r, row) in acc.iter().enumerate() {
+            for (v, reg) in row.iter().enumerate() {
+                reg.store(dp.add((row0 + r) * n + j0 + v * l));
+            }
+        }
+    }
+    if tail > 0 {
+        // partial strip: stage through an NR-wide stack buffer so loads
+        // and stores never touch memory past each row's end
+        let j0 = full * NR;
+        let sp = pp.add(full * k * NR);
+        let mut tmp = [[0.0f32; NR]; R];
+        if accumulate {
+            for (r, row) in tmp.iter_mut().enumerate() {
+                std::ptr::copy_nonoverlapping(
+                    dp.add((row0 + r) * n + j0),
+                    row.as_mut_ptr(),
+                    tail,
+                );
+            }
+        }
+        let mut acc = [[V::zero(); NV]; R];
+        for (r, row) in acc.iter_mut().enumerate() {
+            for (v, reg) in row.iter_mut().enumerate() {
+                *reg = V::load(tmp[r].as_ptr().add(v * l));
+            }
+        }
+        for p in 0..k {
+            let mut bv = [V::zero(); NV];
+            for (v, reg) in bv.iter_mut().enumerate() {
+                *reg = V::load(sp.add(p * NR + v * l));
+            }
+            for (r, row) in acc.iter_mut().enumerate() {
+                let a = alpha
+                    * if USE_PA {
+                        *pa.add(p * MR + r)
+                    } else {
+                        *ap.add((row0 + r) * k + p)
+                    };
+                let av = V::splat(a);
+                for (reg, b) in row.iter_mut().zip(bv) {
+                    *reg = reg.fma(av, b);
+                }
+            }
+        }
+        for (r, row) in acc.iter().enumerate() {
+            for (v, reg) in row.iter().enumerate() {
+                reg.store(tmp[r].as_mut_ptr().add(v * l));
+            }
+            std::ptr::copy_nonoverlapping(tmp[r].as_ptr(), dp.add((row0 + r) * n + j0), tail);
+        }
+    }
+}
+
+/// `dst (mc×n) {=, +=} alpha · a (mc×k) · B` where `B` is packed in
+/// [`PackedB`] layout and `pa` optionally holds the chunk's rows packed
+/// in [`PackedA`] 4-row panels (`pa.is_empty()` selects the packed-B-only
+/// path that reads `a` strided — bit-identical, see [`packed_tile`]).
+/// `accumulate = false` overwrites `dst`; `true` adds onto the existing
+/// contents (used by the fused NS5 polynomial). Accumulators live in
+/// registers across the whole k loop, so dst traffic is one store per
+/// element instead of one read-modify-write per (element, p) pair.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+pub(crate) unsafe fn matmul_packed_rows<V: SimdLane, const NV: usize>(
+    dst: &mut [f32],
+    a: &[f32],
+    pa: &[f32],
+    pb: &[f32],
+    k: usize,
+    n: usize,
+    alpha: f32,
+    accumulate: bool,
+) {
+    if n == 0 {
+        return;
+    }
+    let mc = dst.len() / n;
+    debug_assert_eq!(dst.len(), mc * n);
+    debug_assert_eq!(a.len(), mc * k);
+    debug_assert_eq!(NV * V::LANES, NR);
+    debug_assert!(pb.len() >= PackedB::packed_len(k, n));
+    let use_pa = !pa.is_empty();
+    debug_assert!(!use_pa || pa.len() >= (mc / MR) * MR * k);
+    let dp = dst.as_mut_ptr();
+    let ap = a.as_ptr();
+    let pp = pb.as_ptr();
+    let mut i = 0usize;
+    while i + MR <= mc {
+        if use_pa {
+            let panel = pa.as_ptr().add((i / MR) * MR * k);
+            packed_tile::<V, MR, NV, true>(dp, i, ap, panel, pp, k, n, alpha, accumulate);
+        } else {
+            packed_tile::<V, MR, NV, false>(
+                dp,
+                i,
+                ap,
+                std::ptr::null(),
+                pp,
+                k,
+                n,
+                alpha,
+                accumulate,
+            );
+        }
+        i += MR;
+    }
+    while i < mc {
+        packed_tile::<V, 1, NV, false>(
+            dp,
+            i,
+            ap,
+            std::ptr::null(),
+            pp,
+            k,
+            n,
+            alpha,
+            accumulate,
+        );
+        i += 1;
+    }
+}
+
+/// Fused NS5 polynomial rows: `dst = b·a_rows + c·(a_rows · A)` with `A`
+/// (m×m) pre-packed as `pb` (and optionally as `pa` panels) — no m×m `A²`
+/// intermediate is materialized.
+#[inline(always)]
+pub(crate) unsafe fn ns_poly_rows<V: SimdLane, const NV: usize>(
+    dst: &mut [f32],
+    a_rows: &[f32],
+    pa: &[f32],
+    pb: &[f32],
+    m: usize,
+    b: f32,
+    c: f32,
+) {
+    scale_into::<V>(dst, a_rows, b);
+    matmul_packed_rows::<V, NV>(dst, a_rows, pa, pb, m, m, c, true);
+}
+
+/// Gram rows `i0..i1` of `a·aᵀ` into `dst_chunk` (full rows, length `m`
+/// each): 4-row tiles share each streamed `a_j` row across four fma
+/// accumulators; remainder rows fall back to [`dot`].
+#[inline(always)]
+pub(crate) unsafe fn gram_rows<V: SimdLane>(
+    dst_chunk: &mut [f32],
+    a: &[f32],
+    i0: usize,
+    i1: usize,
+    m: usize,
+    k: usize,
+) {
+    let l = V::LANES;
+    let mut i = i0;
+    while i < i1 {
+        if i + 4 <= i1 {
+            let r0 = a.as_ptr().add(i * k);
+            let r1 = a.as_ptr().add((i + 1) * k);
+            let r2 = a.as_ptr().add((i + 2) * k);
+            let r3 = a.as_ptr().add((i + 3) * k);
+            let base = (i - i0) * m;
+            for j in i..m {
+                let rj = a.as_ptr().add(j * k);
+                let mut acc0 = V::zero();
+                let mut acc1 = V::zero();
+                let mut acc2 = V::zero();
+                let mut acc3 = V::zero();
+                let mut p = 0usize;
+                while p + l <= k {
+                    let x = V::load(rj.add(p));
+                    acc0 = acc0.fma(V::load(r0.add(p)), x);
+                    acc1 = acc1.fma(V::load(r1.add(p)), x);
+                    acc2 = acc2.fma(V::load(r2.add(p)), x);
+                    acc3 = acc3.fma(V::load(r3.add(p)), x);
+                    p += l;
+                }
+                let mut s0 = acc0.hsum();
+                let mut s1 = acc1.hsum();
+                let mut s2 = acc2.hsum();
+                let mut s3 = acc3.hsum();
+                while p < k {
+                    let x = *rj.add(p);
+                    s0 += *r0.add(p) * x;
+                    s1 += *r1.add(p) * x;
+                    s2 += *r2.add(p) * x;
+                    s3 += *r3.add(p) * x;
+                    p += 1;
+                }
+                dst_chunk[base + j] = s0;
+                dst_chunk[base + m + j] = s1;
+                dst_chunk[base + 2 * m + j] = s2;
+                dst_chunk[base + 3 * m + j] = s3;
+            }
+            i += 4;
+        } else {
+            let ri = &a[i * k..(i + 1) * k];
+            let base = (i - i0) * m;
+            for j in i..m {
+                dst_chunk[base + j] = dot::<V>(ri, &a[j * k..(j + 1) * k]);
+            }
+            i += 1;
+        }
+    }
+}

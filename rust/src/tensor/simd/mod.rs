@@ -1,0 +1,586 @@
+//! Backend-generic SIMD microkernels + runtime dispatch for the tensor
+//! layer.
+//!
+//! PR 2 introduced hand-written AVX2/FMA kernels; this module now splits
+//! them into three pieces so new ISAs are one small file, not a rewrite:
+//!
+//! * `lane` — the shared tiling/loop structure (dot, axpby, fused
+//!   rownorm sweep, Gram tiles, packed matmul microkernel, fused NS5
+//!   polynomial) written once over the `SimdLane` register abstraction;
+//! * `avx2` — the x86-64 backend: 8-lane `__m256` + FMA (bit-identical
+//!   to the pre-refactor hand-written kernels: same intrinsics, same
+//!   order);
+//! * `neon` — the aarch64 backend: 4-lane `float32x4_t` + `vfmaq`, the
+//!   rung that lets ARM hosts leave the scalar tiles.
+//!
+//! The dispatch ladder resolves once per call site, cached where it
+//! matters:
+//!
+//! 1. `perf.simd` config key / [`set_mode`] — explicit `"avx2"`,
+//!    `"neon"`, or `"scalar"` override (the CLI prints the chosen rung at
+//!    startup);
+//! 2. the `RMNP_SIMD` environment variable (same values) — this is how
+//!    CI's forced-scalar job keeps the portable path green;
+//! 3. runtime detection ([`detected`]): `is_x86_feature_detected!` for
+//!    AVX2+FMA on x86-64, `is_aarch64_feature_detected!` for NEON on
+//!    aarch64, evaluated once per process and cached.
+//!
+//! Forcing a rung the CPU cannot execute quietly lands on the scalar
+//! tiles — [`active`] never returns a path the hardware cannot run, and
+//! a forced rung never silently substitutes a *different* vector rung
+//! (`RMNP_SIMD=neon` on x86 is scalar, not AVX2; the `tests/neon_rung.rs`
+//! suite pins that contract).
+//!
+//! Numerics: the vector paths use fused multiply-add and lane-wide folds,
+//! so results differ from the scalar tiles by normal f32 rounding
+//! (reassociation + fused rounding), and the two vector backends differ
+//! from each other the same way (different lane widths fold reductions
+//! differently). The parity tests in `tests/kernels_parity.rs` hold every
+//! rung within 1e-4 of the others. Within one rung, results are
+//! bit-deterministic: the matmul tile and remainder kernels perform the
+//! identical per-row operation sequence, the packed-A fast path reads
+//! the same values in the same order (see `tensor/simd/lane.rs`), and
+//! every threaded row partition — matmul chunks and the Gram triangle
+//! boundaries alike — is aligned to the 4-row tile height so the Gram
+//! tile/remainder fold assignment cannot move with the thread count.
+//! Neither threads nor packing ever change output bits.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+pub(crate) mod lane;
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+
+/// Requested dispatch mode (`perf.simd` / `RMNP_SIMD`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Detect at startup (the default).
+    Auto,
+    /// Force the AVX2/FMA path (falls back to scalar if unsupported).
+    Avx2,
+    /// Force the NEON path (falls back to scalar if unsupported).
+    Neon,
+    /// Force the portable scalar tiles.
+    Scalar,
+}
+
+impl SimdMode {
+    /// Parse a `perf.simd` / `RMNP_SIMD` value.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "auto" => SimdMode::Auto,
+            "avx2" => SimdMode::Avx2,
+            "neon" => SimdMode::Neon,
+            "scalar" => SimdMode::Scalar,
+            other => anyhow::bail!(
+                "unknown simd mode `{other}` (expected auto|avx2|neon|scalar)"
+            ),
+        })
+    }
+
+    /// The config-file spelling of this mode.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdMode::Auto => "auto",
+            SimdMode::Avx2 => "avx2",
+            SimdMode::Neon => "neon",
+            SimdMode::Scalar => "scalar",
+        }
+    }
+}
+
+/// The resolved execution path — what the kernels actually run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdPath {
+    /// The x86-64 AVX2/FMA backend (8-lane f32 registers).
+    Avx2,
+    /// The aarch64 NEON backend (4-lane f32 registers).
+    Neon,
+    /// The portable scalar tiles.
+    Scalar,
+}
+
+impl SimdPath {
+    /// The mode that forces exactly this path (used by benches to pin a
+    /// rung while measuring rung deltas).
+    pub fn to_mode(self) -> SimdMode {
+        match self {
+            SimdPath::Avx2 => SimdMode::Avx2,
+            SimdPath::Neon => SimdMode::Neon,
+            SimdPath::Scalar => SimdMode::Scalar,
+        }
+    }
+
+    /// Short rung name recorded in the bench JSON envelopes.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Neon => "neon",
+            SimdPath::Scalar => "scalar",
+        }
+    }
+}
+
+static MODE: AtomicU8 = AtomicU8::new(0); // 0 = auto, 1 = avx2, 2 = scalar, 3 = neon
+
+/// Set the dispatch mode (wired to the `perf.simd` config key and the
+/// CLI). `Auto` restores env-var/detection resolution.
+pub fn set_mode(mode: SimdMode) {
+    let v = match mode {
+        SimdMode::Auto => 0,
+        SimdMode::Avx2 => 1,
+        SimdMode::Scalar => 2,
+        SimdMode::Neon => 3,
+    };
+    MODE.store(v, Ordering::Relaxed);
+}
+
+/// The currently requested mode (not the resolved path; see [`active`]).
+pub fn mode() -> SimdMode {
+    match MODE.load(Ordering::Relaxed) {
+        1 => SimdMode::Avx2,
+        2 => SimdMode::Scalar,
+        3 => SimdMode::Neon,
+        _ => SimdMode::Auto,
+    }
+}
+
+/// `RMNP_SIMD` env override, parsed once (invalid values mean `Auto`).
+fn env_mode() -> SimdMode {
+    static ENV: OnceLock<SimdMode> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("RMNP_SIMD")
+            .ok()
+            .and_then(|s| SimdMode::parse(&s).ok())
+            .unwrap_or(SimdMode::Auto)
+    })
+}
+
+/// Whether this CPU can run the AVX2/FMA kernels (detected once).
+pub fn avx2_available() -> bool {
+    static DET: OnceLock<bool> = OnceLock::new();
+    *DET.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
+/// Whether this CPU can run the NEON kernels (detected once). aarch64
+/// guarantees NEON in its baseline, so on ARM hosts this is effectively
+/// always true; the check exists for ladder symmetry.
+pub fn neon_available() -> bool {
+    static DET: OnceLock<bool> = OnceLock::new();
+    *DET.get_or_init(|| {
+        #[cfg(target_arch = "aarch64")]
+        {
+            std::arch::is_aarch64_feature_detected!("neon")
+        }
+        #[cfg(not(target_arch = "aarch64"))]
+        {
+            false
+        }
+    })
+}
+
+/// The rung `Auto` resolves to on this host before any override — the
+/// best available backend. At most one vector rung exists per
+/// architecture, so there is no preference order to tune.
+pub fn detected() -> SimdPath {
+    if avx2_available() {
+        SimdPath::Avx2
+    } else if neon_available() {
+        SimdPath::Neon
+    } else {
+        SimdPath::Scalar
+    }
+}
+
+/// Resolve the dispatch ladder to the path the kernels will take.
+pub fn active() -> SimdPath {
+    let requested = match mode() {
+        SimdMode::Auto => env_mode(),
+        explicit => explicit,
+    };
+    match requested {
+        SimdMode::Scalar => SimdPath::Scalar,
+        SimdMode::Avx2 => {
+            if avx2_available() {
+                SimdPath::Avx2
+            } else {
+                SimdPath::Scalar
+            }
+        }
+        SimdMode::Neon => {
+            if neon_available() {
+                SimdPath::Neon
+            } else {
+                SimdPath::Scalar
+            }
+        }
+        SimdMode::Auto => detected(),
+    }
+}
+
+/// Human-readable label of the active path (printed at CLI startup and
+/// recorded in the bench JSON envelopes).
+pub fn label() -> &'static str {
+    match active() {
+        SimdPath::Avx2 => "avx2+fma (f32x8)",
+        SimdPath::Neon => "neon (f32x4)",
+        SimdPath::Scalar => "scalar (autovec tiles)",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_and_names() {
+        assert_eq!(SimdMode::parse("auto").unwrap(), SimdMode::Auto);
+        assert_eq!(SimdMode::parse("avx2").unwrap(), SimdMode::Avx2);
+        assert_eq!(SimdMode::parse("neon").unwrap(), SimdMode::Neon);
+        assert_eq!(SimdMode::parse("scalar").unwrap(), SimdMode::Scalar);
+        assert!(SimdMode::parse("sse9").is_err());
+        assert_eq!(SimdMode::Avx2.name(), "avx2");
+        assert_eq!(SimdMode::Neon.name(), "neon");
+        for path in [SimdPath::Avx2, SimdPath::Neon, SimdPath::Scalar] {
+            assert_eq!(SimdMode::parse(path.name()).unwrap(), path.to_mode());
+        }
+    }
+
+    #[test]
+    fn active_is_consistent_with_availability() {
+        // whatever the mode, the resolved path must be runnable
+        match active() {
+            SimdPath::Avx2 => assert!(avx2_available()),
+            SimdPath::Neon => assert!(neon_available()),
+            SimdPath::Scalar => {}
+        }
+        assert!(!label().is_empty());
+        // at most one vector rung per architecture
+        assert!(!(avx2_available() && neon_available()));
+        if !avx2_available() && !neon_available() {
+            assert_eq!(detected(), SimdPath::Scalar);
+        }
+    }
+
+    /// Backend kernel tests, written once against whichever vector
+    /// backend this architecture compiles (`avx2` on x86-64, `neon` on
+    /// aarch64) — the generic layer makes the expectations identical.
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    mod native_kernels {
+        #[cfg(target_arch = "x86_64")]
+        use super::super::{avx2 as native, avx2_available as native_available};
+        #[cfg(target_arch = "aarch64")]
+        use super::super::{neon as native, neon_available as native_available};
+        use crate::tensor::{PackedA, PackedB};
+        use crate::util::Rng;
+
+        fn randv(len: usize, rng: &mut Rng) -> Vec<f32> {
+            let mut v = vec![0.0f32; len];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        }
+
+        fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+            let mut out = vec![0.0f32; m * n];
+            for i in 0..m {
+                for p in 0..k {
+                    let av = a[i * k + p];
+                    for j in 0..n {
+                        out[i * n + j] += av * b[p * n + j];
+                    }
+                }
+            }
+            out
+        }
+
+        /// Rect/tall/wide shapes straddling the 16-col strip and 4-row
+        /// panel boundaries, including every `m % 4` residue.
+        const SHAPES: &[(usize, usize, usize)] = &[
+            (1, 1, 1),
+            (4, 4, 16),
+            (5, 7, 3),
+            (4, 9, 17),
+            (9, 16, 33),
+            (33, 65, 19),
+            (2, 128, 130),
+            (64, 32, 48),
+            (66, 20, 40),
+            (7, 40, 96),
+        ];
+
+        #[test]
+        fn dot_matches_sequential() {
+            if !native_available() {
+                return;
+            }
+            let mut rng = Rng::new(1);
+            for len in [0usize, 1, 7, 8, 9, 31, 32, 33, 64, 100, 257] {
+                let x = randv(len, &mut rng);
+                let y = randv(len, &mut rng);
+                let seq: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+                let got = unsafe { native::dot(&x, &y) };
+                assert!(
+                    (got - seq).abs() < 1e-3 * (1.0 + seq.abs()),
+                    "len {len}: {got} vs {seq}"
+                );
+            }
+        }
+
+        #[test]
+        fn axpby_matches_scalar() {
+            if !native_available() {
+                return;
+            }
+            let mut rng = Rng::new(2);
+            for len in [1usize, 5, 8, 9, 40, 100] {
+                let x = randv(len, &mut rng);
+                let y = randv(len, &mut rng);
+                let mut dst = vec![0.0f32; len];
+                unsafe { native::axpby(&mut dst, 1.5, &x, -0.5, &y) };
+                for i in 0..len {
+                    let want = 1.5 * x[i] - 0.5 * y[i];
+                    assert!((dst[i] - want).abs() < 1e-5, "{i}");
+                }
+                let mut ip = x.clone();
+                unsafe { native::axpby_inplace(&mut ip, 1.5, &y, -0.5) };
+                for i in 0..len {
+                    let want = 1.5 * x[i] - 0.5 * y[i];
+                    assert!((ip[i] - want).abs() < 1e-5, "{i}");
+                }
+            }
+        }
+
+        #[test]
+        fn packed_matmul_matches_naive_including_tails() {
+            if !native_available() {
+                return;
+            }
+            let mut rng = Rng::new(3);
+            for &(m, k, n) in SHAPES {
+                let a = randv(m * k, &mut rng);
+                let b = randv(k * n, &mut rng);
+                let mut pb = PackedB::new();
+                pb.pack(&b, k, n);
+                let mut pa = PackedA::new();
+                pa.pack(&a, m, k);
+                let want = naive(&a, &b, m, k, n);
+                // packed-B-only path (strided A reads)
+                let mut b_only = vec![0.0f32; m * n];
+                unsafe {
+                    native::matmul_packed_rows(&mut b_only, &a, &[], pb.data(), k, n, 1.0, false)
+                };
+                // packed-A path (panel A reads)
+                let mut with_pa = vec![0.0f32; m * n];
+                unsafe {
+                    native::matmul_packed_rows(
+                        &mut with_pa,
+                        &a,
+                        pa.data(),
+                        pb.data(),
+                        k,
+                        n,
+                        1.0,
+                        false,
+                    )
+                };
+                for i in 0..m {
+                    for j in 0..n {
+                        let w = want[i * n + j];
+                        let x = b_only[i * n + j];
+                        assert!(
+                            (x - w).abs() < 1e-3 * (1.0 + w.abs()),
+                            "b-only ({m},{k},{n}) at ({i},{j}): {x} vs {w}"
+                        );
+                    }
+                }
+                // packing A is an exact copy with unchanged arithmetic
+                // order, so the two paths must agree bit for bit
+                assert_eq!(
+                    b_only, with_pa,
+                    "packed-A changed bits at ({m},{k},{n})"
+                );
+            }
+        }
+
+        #[test]
+        fn packed_matmul_accumulate_adds_scaled_product() {
+            if !native_available() {
+                return;
+            }
+            let mut rng = Rng::new(4);
+            for &(m, k, n) in &[(6usize, 10usize, 21usize), (13, 8, 40)] {
+                let a = randv(m * k, &mut rng);
+                let b = randv(k * n, &mut rng);
+                let init = randv(m * n, &mut rng);
+                let mut pb = PackedB::new();
+                pb.pack(&b, k, n);
+                let mut pa = PackedA::new();
+                pa.pack(&a, m, k);
+                let want = naive(&a, &b, m, k, n);
+                for pa_data in [&[][..], pa.data()] {
+                    let mut got = init.clone();
+                    unsafe {
+                        native::matmul_packed_rows(
+                            &mut got, &a, pa_data, pb.data(), k, n, 0.5, true,
+                        )
+                    };
+                    for i in 0..m * n {
+                        let w = init[i] + 0.5 * want[i];
+                        assert!(
+                            (got[i] - w).abs() < 1e-3 * (1.0 + w.abs()),
+                            "({m},{k},{n}) at {i}: {} vs {w}",
+                            got[i]
+                        );
+                    }
+                }
+            }
+        }
+
+        #[test]
+        fn tile_and_remainder_rows_agree_bitwise() {
+            // the determinism contract: processing a row inside a 4-tile
+            // or as a remainder row gives identical bits
+            if !native_available() {
+                return;
+            }
+            let mut rng = Rng::new(5);
+            let (k, n) = (37usize, 29usize);
+            let a = randv(5 * k, &mut rng); // 5 rows: one 4-tile + 1 remainder
+            let b = randv(k * n, &mut rng);
+            let mut packed = PackedB::new();
+            packed.pack(&b, k, n);
+            let mut whole = vec![0.0f32; 5 * n];
+            unsafe {
+                native::matmul_packed_rows(&mut whole, &a, &[], packed.data(), k, n, 1.0, false)
+            };
+            // row 4 alone (remainder path) must equal row 4 of the block
+            let mut single = vec![0.0f32; n];
+            unsafe {
+                native::matmul_packed_rows(
+                    &mut single,
+                    &a[4 * k..5 * k],
+                    &[],
+                    packed.data(),
+                    k,
+                    n,
+                    1.0,
+                    false,
+                )
+            };
+            assert_eq!(&whole[4 * n..5 * n], &single[..]);
+            // and row 0 computed alone must equal row 0 of the 4-tile
+            let mut first = vec![0.0f32; n];
+            unsafe {
+                native::matmul_packed_rows(
+                    &mut first,
+                    &a[0..k],
+                    &[],
+                    packed.data(),
+                    k,
+                    n,
+                    1.0,
+                    false,
+                )
+            };
+            assert_eq!(&whole[0..n], &first[..]);
+        }
+
+        #[test]
+        fn rownorm_unit_and_zero_rows() {
+            if !native_available() {
+                return;
+            }
+            let mut rng = Rng::new(6);
+            let (rows, cols) = (5usize, 37usize);
+            let mut src = randv(rows * cols, &mut rng);
+            for v in &mut src[2 * cols..3 * cols] {
+                *v = 0.0;
+            }
+            let mut dst = vec![0.0f32; rows * cols];
+            unsafe { native::row_normalize_rows(&mut dst, &src, cols, 1e-7) };
+            for i in 0..rows {
+                let n: f32 = dst[i * cols..(i + 1) * cols]
+                    .iter()
+                    .map(|x| x * x)
+                    .sum::<f32>()
+                    .sqrt();
+                if i == 2 {
+                    assert_eq!(n, 0.0);
+                } else {
+                    assert!((n - 1.0).abs() < 1e-5, "row {i} norm {n}");
+                }
+            }
+        }
+
+        #[test]
+        fn gram_rows_matches_naive() {
+            if !native_available() {
+                return;
+            }
+            let mut rng = Rng::new(7);
+            for (m, k) in [(1usize, 5usize), (4, 8), (6, 11), (13, 64), (9, 7)] {
+                let a = randv(m * k, &mut rng);
+                let mut got = vec![0.0f32; m * m];
+                unsafe { native::gram_rows(&mut got, &a, 0, m, m, k) };
+                for i in 0..m {
+                    for j in i..m {
+                        let want: f32 = (0..k).map(|p| a[i * k + p] * a[j * k + p]).sum();
+                        let x = got[i * m + j];
+                        assert!(
+                            (x - want).abs() < 1e-3 * (1.0 + want.abs()),
+                            "({m},{k}) at ({i},{j})"
+                        );
+                    }
+                }
+            }
+        }
+
+        #[test]
+        fn ns_poly_rows_matches_two_pass() {
+            if !native_available() {
+                return;
+            }
+            let mut rng = Rng::new(8);
+            for m in [4usize, 9, 33] {
+                let a = randv(m * m, &mut rng);
+                let a2 = naive(&a, &a, m, m, m);
+                let want: Vec<f32> = a
+                    .iter()
+                    .zip(&a2)
+                    .map(|(x, y)| -4.775 * x + 2.0315 * y)
+                    .collect();
+                let mut pb = PackedB::new();
+                pb.pack(&a, m, m);
+                let mut pa = PackedA::new();
+                pa.pack(&a, m, m);
+                for pa_data in [&[][..], pa.data()] {
+                    let mut got = vec![0.0f32; m * m];
+                    unsafe {
+                        native::ns_poly_rows(&mut got, &a, pa_data, pb.data(), m, -4.775, 2.0315)
+                    };
+                    for i in 0..m * m {
+                        assert!(
+                            (got[i] - want[i]).abs() < 1e-3 * (1.0 + want[i].abs()),
+                            "m={m} at {i}: {} vs {}",
+                            got[i],
+                            want[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

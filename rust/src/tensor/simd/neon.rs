@@ -1,0 +1,154 @@
+//! The aarch64 NEON backend: [`SimdLane`] implemented on 4-lane
+//! `float32x4_t` registers, plus thin `#[target_feature(enable = "neon")]`
+//! wrappers around the generic bodies in [`super::lane`] — the rung that
+//! lets ARM hosts leave the scalar tiles.
+//!
+//! The generic layer fixes the loop structure, so this backend covers one
+//! 16-wide packed-B strip with **four** f32x4 registers per tile row
+//! (where AVX2 uses two f32x8), the dot/Gram reductions run four
+//! accumulators of 4 lanes (16 elements per unrolled step), and `vfmaq`
+//! provides the fused multiply-add. aarch64 guarantees NEON in its
+//! baseline, so [`super::neon_available`] is effectively always true
+//! there — the feature check is kept for symmetry with the AVX2 rung and
+//! for any future aarch64 profile without it.
+//!
+//! Every function is `unsafe` because it must only run when NEON is
+//! present, which the dispatch sites in [`crate::tensor::kernels`]
+//! guarantee via [`super::active`].
+
+use core::arch::aarch64::*;
+
+use super::lane::{self, SimdLane};
+
+/// Packed-B strip width: 16 columns = four f32x4 accumulators per row.
+pub const NR: usize = lane::NR;
+
+/// Accumulator registers per strip row (`NR / 4`).
+const NV: usize = NR / 4;
+
+/// One NEON register of 4 f32 lanes.
+#[derive(Clone, Copy)]
+pub(crate) struct F32x4(float32x4_t);
+
+impl SimdLane for F32x4 {
+    const LANES: usize = 4;
+
+    #[inline(always)]
+    unsafe fn zero() -> Self {
+        F32x4(vdupq_n_f32(0.0))
+    }
+
+    #[inline(always)]
+    unsafe fn splat(x: f32) -> Self {
+        F32x4(vdupq_n_f32(x))
+    }
+
+    #[inline(always)]
+    unsafe fn load(p: *const f32) -> Self {
+        F32x4(vld1q_f32(p))
+    }
+
+    #[inline(always)]
+    unsafe fn store(self, p: *mut f32) {
+        vst1q_f32(p, self.0)
+    }
+
+    #[inline(always)]
+    unsafe fn add(self, other: Self) -> Self {
+        F32x4(vaddq_f32(self.0, other.0))
+    }
+
+    #[inline(always)]
+    unsafe fn mul(self, other: Self) -> Self {
+        F32x4(vmulq_f32(self.0, other.0))
+    }
+
+    #[inline(always)]
+    unsafe fn fma(self, a: Self, b: Self) -> Self {
+        F32x4(vfmaq_f32(self.0, a.0, b.0))
+    }
+
+    #[inline(always)]
+    unsafe fn hsum(self) -> f32 {
+        vaddvq_f32(self.0)
+    }
+}
+
+/// 4×f32x4 dot product (16 elements per unrolled step).
+#[target_feature(enable = "neon")]
+pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+    lane::dot::<F32x4>(x, y)
+}
+
+/// `dst = a·x + b·y` elementwise.
+#[target_feature(enable = "neon")]
+pub unsafe fn axpby(dst: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
+    lane::axpby::<F32x4>(dst, a, x, b, y)
+}
+
+/// `x = a·x + b·y` elementwise, in place.
+#[target_feature(enable = "neon")]
+pub unsafe fn axpby_inplace(x: &mut [f32], a: f32, y: &[f32], b: f32) {
+    lane::axpby_inplace::<F32x4>(x, a, y, b)
+}
+
+/// `dst = b · a` elementwise (the init pass of the fused NS5 poly).
+#[target_feature(enable = "neon")]
+pub unsafe fn scale_into(dst: &mut [f32], a: &[f32], b: f32) {
+    lane::scale_into::<F32x4>(dst, a, b)
+}
+
+/// Fused row normalization: `dst[i,:] = src[i,:] / max(‖src[i,:]‖₂, eps)`.
+#[target_feature(enable = "neon")]
+pub unsafe fn row_normalize_rows(dst: &mut [f32], src: &[f32], cols: usize, eps: f32) {
+    lane::row_normalize_rows::<F32x4>(dst, src, cols, eps)
+}
+
+/// `dst (mc×n) {=, +=} alpha · a (mc×k) · B` over the packed panels; see
+/// [`lane::matmul_packed_rows`]. `pa` is the chunk's
+/// [`crate::tensor::PackedA`] panels, or empty for the packed-B-only
+/// path (bit-identical).
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub unsafe fn matmul_packed_rows(
+    dst: &mut [f32],
+    a: &[f32],
+    pa: &[f32],
+    pb: &[f32],
+    k: usize,
+    n: usize,
+    alpha: f32,
+    accumulate: bool,
+) {
+    lane::matmul_packed_rows::<F32x4, NV>(dst, a, pa, pb, k, n, alpha, accumulate)
+}
+
+/// Fused NS5 polynomial rows: `dst = b·a_rows + c·(a_rows · A)` with `A`
+/// (m×m) pre-packed — no m×m `A²` intermediate is materialized.
+#[target_feature(enable = "neon")]
+pub unsafe fn ns_poly_rows(
+    dst: &mut [f32],
+    a_rows: &[f32],
+    pa: &[f32],
+    pb: &[f32],
+    m: usize,
+    b: f32,
+    c: f32,
+) {
+    lane::ns_poly_rows::<F32x4, NV>(dst, a_rows, pa, pb, m, b, c)
+}
+
+/// Gram rows `i0..i1` of `a·aᵀ` into `dst_chunk` (full rows, length `m`
+/// each): 4-row tiles share each streamed `a_j` row across four fma
+/// accumulators; remainder rows fall back to [`dot`].
+#[target_feature(enable = "neon")]
+pub unsafe fn gram_rows(
+    dst_chunk: &mut [f32],
+    a: &[f32],
+    i0: usize,
+    i1: usize,
+    m: usize,
+    k: usize,
+) {
+    lane::gram_rows::<F32x4>(dst_chunk, a, i0, i1, m, k)
+}

@@ -1,5 +1,7 @@
 //! Scratch-buffer arena so hot loops run allocation-free, plus the
-//! [`PackedB`] panel layout the AVX2 matmul microkernel consumes.
+//! [`PackedB`] / [`PackedA`] panel layouts the vector matmul microkernel
+//! consumes (AVX2 and NEON rungs alike — the layouts are lane-width
+//! agnostic).
 //!
 //! A [`Workspace`] owns a pool of `Vec<f32>` buffers. [`Workspace::take`]
 //! hands out a zeroed buffer of the requested length, reusing pooled
@@ -9,17 +11,24 @@
 //! of shapes ("warmup"), no further heap allocation happens — verified by
 //! the counting-allocator test in `tests/alloc.rs` and the
 //! [`Workspace::fresh_allocs`] counter.
+//!
+//! **Packed-buffer lifetime rule:** `PackedA`/`PackedB` contents are only
+//! valid until the next `pack` call on the same instance; the kernel
+//! layer packs in the calling thread *before* spawning row-chunk workers,
+//! which then share the panels read-only for the duration of one kernel
+//! call (see `docs/ARCHITECTURE.md`).
 
 use super::Matrix;
 
-/// A `k×n` B matrix repacked into the strip-major panel layout the AVX2
-/// microkernel streams: the columns are cut into [`PackedB::NR`]-wide
-/// strips, and each strip stores its `k` rows contiguously (zero-padded
-/// past `n`). One repack per matmul (or per NS5 iteration) replaces the
-/// strided row reads the axpy-form kernel would otherwise perform once
-/// per 4-row output tile — for k-panels that overflow L2 that means the
-/// panel is read from memory once instead of `m/4` times, and the
-/// microkernel's accumulators stay in registers across the whole k loop.
+/// A `k×n` B matrix repacked into the strip-major panel layout the
+/// vector matmul microkernel streams: the columns are cut into
+/// [`PackedB::NR`]-wide strips, and each strip stores its `k` rows
+/// contiguously (zero-padded past `n`). One repack per matmul (or per
+/// NS5 iteration) replaces the strided row reads the axpy-form kernel
+/// would otherwise perform once per 4-row output tile — for k-panels
+/// that overflow L2 that means the panel is read from memory once
+/// instead of `m/4` times, and the microkernel's accumulators stay in
+/// registers across the whole k loop.
 ///
 /// The backing `Vec` only ever grows ([`PackedB::pack`] reuses capacity),
 /// so a `PackedB` held per thread is allocation-free after warmup — the
@@ -32,9 +41,11 @@ pub struct PackedB {
 }
 
 impl PackedB {
-    /// Strip width in columns (two f32x8 vectors).
+    /// Strip width in columns (two f32x8 vectors on AVX2, four f32x4 on
+    /// NEON — the layout is lane-width agnostic).
     pub const NR: usize = 16;
 
+    /// An empty pack buffer (no allocation until the first `pack`).
     pub fn new() -> Self {
         PackedB::default()
     }
@@ -81,7 +92,92 @@ impl PackedB {
     }
 }
 
+/// An `m×k` A matrix repacked into [`PackedA::MR`]-row panels for the
+/// vector matmul microkernel: rows are cut into 4-row panels, and panel
+/// `t` stores, for each `p` in `0..k`, the four values
+/// `a[(4t+r)·k + p]` contiguously (`p`-major, row-minor). A 4-row output
+/// tile then reads its A operands as one sequential stream instead of
+/// four `k`-strided row walks repeated once per 16-column strip — at
+/// large `m` that turns `n/16` strided traversals of A into a single
+/// sequential pass plus one O(m·k) pack.
+///
+/// Only full panels are packed: the `m % 4` remainder rows are read
+/// straight from the raw matrix by the remainder-row kernel (which is
+/// the same per-row arithmetic sequence, so the fast path never changes
+/// output bits — see `tensor/simd/lane.rs`).
+///
+/// Like [`PackedB`], the backing `Vec` only grows, so the thread-local
+/// instance the kernel layer keeps is allocation-free after warmup.
+#[derive(Clone, Debug, Default)]
+pub struct PackedA {
+    data: Vec<f32>,
+    m: usize,
+    k: usize,
+}
+
+impl PackedA {
+    /// Panel height in rows (matches the microkernel tile height).
+    pub const MR: usize = 4;
+
+    /// An empty pack buffer (no allocation until the first `pack`).
+    pub fn new() -> Self {
+        PackedA::default()
+    }
+
+    /// Elements a packed `m×k` matrix occupies (full panels only).
+    pub fn packed_len(m: usize, k: usize) -> usize {
+        (m / Self::MR) * Self::MR * k
+    }
+
+    /// Repack `a` (row-major `m×k`) into the panel layout, reusing the
+    /// existing allocation when it is large enough.
+    pub fn pack(&mut self, a: &[f32], m: usize, k: usize) {
+        assert_eq!(a.len(), m * k, "pack shape");
+        let mr = Self::MR;
+        let panels = m / mr;
+        let len = panels * mr * k;
+        if self.data.len() < len {
+            self.data.resize(len, 0.0);
+        }
+        self.m = m;
+        self.k = k;
+        for t in 0..panels {
+            let base = t * mr * k;
+            let r0 = t * mr;
+            // four sequential source streams, one interleaved dst stream
+            for p in 0..k {
+                let dst = &mut self.data[base + p * mr..base + (p + 1) * mr];
+                for (r, x) in dst.iter_mut().enumerate() {
+                    *x = a[(r0 + r) * k + p];
+                }
+            }
+        }
+    }
+
+    /// The packed panel data for the last [`PackedA::pack`] call.
+    pub fn data(&self) -> &[f32] {
+        &self.data[..Self::packed_len(self.m, self.k)]
+    }
+
+    /// `(m, k)` of the currently packed matrix (`m` includes the
+    /// unpacked remainder rows).
+    pub fn dims(&self) -> (usize, usize) {
+        (self.m, self.k)
+    }
+}
+
 /// Reusable pool of f32 scratch buffers.
+///
+/// ```
+/// use rmnp::tensor::Workspace;
+/// let mut ws = Workspace::new();
+/// let buf = ws.take(128);              // zeroed, counted as one alloc
+/// assert!(buf.iter().all(|&x| x == 0.0));
+/// ws.give(buf);
+/// let again = ws.take(64);             // reuses the pooled capacity
+/// assert_eq!(ws.fresh_allocs(), 1, "steady state allocates nothing");
+/// ws.give(again);
+/// ```
 #[derive(Clone, Debug, Default)]
 pub struct Workspace {
     pool: Vec<Vec<f32>>,
@@ -89,6 +185,7 @@ pub struct Workspace {
 }
 
 impl Workspace {
+    /// An empty pool (no allocation until the first `take`).
     pub fn new() -> Self {
         Workspace::default()
     }
@@ -244,6 +341,43 @@ mod tests {
         assert_eq!(pb.data.capacity(), cap_before, "pack must not shrink");
         assert_eq!(pb.data()[0], 1.0);
         assert_eq!(pb.data()[3], 0.0, "padding re-zeroed");
+    }
+
+    #[test]
+    fn packed_a_layout_roundtrip() {
+        // every (row, p) element of a full panel must land at its
+        // p-major/row-minor slot; remainder rows are not packed; and
+        // repacking a smaller shape reuses (not shrinks) the allocation
+        let mut rng = Rng::new(3);
+        let (m, k) = (11usize, 7usize); // 2 full panels + 3 remainder rows
+        let mut a = vec![0.0f32; m * k];
+        rng.fill_normal(&mut a, 1.0);
+        let mut pa = PackedA::new();
+        pa.pack(&a, m, k);
+        assert_eq!(pa.dims(), (m, k));
+        let mr = PackedA::MR;
+        let data = pa.data();
+        assert_eq!(data.len(), PackedA::packed_len(m, k));
+        assert_eq!(data.len(), (m / mr) * mr * k);
+        for t in 0..m / mr {
+            for p in 0..k {
+                for r in 0..mr {
+                    let got = data[t * mr * k + p * mr + r];
+                    assert_eq!(got, a[(t * mr + r) * k + p], "panel {t} ({p},{r})");
+                }
+            }
+        }
+        // repack smaller: capacity reused, dims/len updated
+        let cap_before = pa.data.capacity();
+        let a2 = vec![2.0f32; 4 * 3];
+        pa.pack(&a2, 4, 3);
+        assert_eq!(pa.dims(), (4, 3));
+        assert_eq!(pa.data().len(), PackedA::packed_len(4, 3));
+        assert_eq!(pa.data.capacity(), cap_before, "pack must not shrink");
+        assert!(pa.data().iter().all(|&x| x == 2.0));
+        // fewer than MR rows pack to an empty panel set
+        pa.pack(&[1.0, 2.0, 3.0], 3, 1);
+        assert!(pa.data().is_empty());
     }
 
     #[test]

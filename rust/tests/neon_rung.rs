@@ -1,0 +1,141 @@
+//! The forced-NEON suite: what `RMNP_SIMD=neon` must mean on every host.
+//!
+//! On aarch64 this is the NEON twin of the forced-scalar CI job: force
+//! the rung, verify the ladder resolved to it, and run the op-level
+//! parity suite against the seed scalar baselines. On any other
+//! architecture the suite is **cleanly skipped, not silently passed**:
+//! each test prints a visible `SKIP(neon)` line to stderr and then pins
+//! the documented fallback contract — forcing a rung the CPU cannot run
+//! resolves to the scalar tiles, never to a *different* vector rung — so
+//! an x86 run still asserts something real about the ladder.
+//!
+//! Tests here flip the process-global dispatch mode, so every test holds
+//! the shared mode lock.
+
+use std::sync::{Mutex, MutexGuard};
+
+use rmnp::optim::{newton_schulz5_into, newton_schulz5_naive, ROW_EPS};
+use rmnp::tensor::simd::{self, SimdMode, SimdPath};
+use rmnp::tensor::{Matrix, Workspace};
+use rmnp::util::Rng;
+
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn mode_lock() -> MutexGuard<'static, ()> {
+    // a failed test poisons the lock; the () state cannot be corrupted
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Force the NEON rung for the duration of `f` (restoring the previous
+/// mode), running `f` only when the host can actually execute it. On
+/// hosts without NEON, print the skip marker and assert the fallback
+/// contract instead.
+fn with_forced_neon(test: &str, f: impl FnOnce()) {
+    let _guard = mode_lock();
+    let prev = simd::mode();
+    simd::set_mode(SimdMode::Neon);
+    if simd::neon_available() {
+        assert_eq!(
+            simd::active(),
+            SimdPath::Neon,
+            "neon detected but the ladder did not resolve to it"
+        );
+        f();
+    } else {
+        eprintln!("SKIP(neon): {test}: no NEON on this host ({})", std::env::consts::ARCH);
+        // the fallback contract: forced-but-unavailable rungs land on
+        // scalar, never on another vector rung
+        assert_eq!(simd::active(), SimdPath::Scalar);
+    }
+    simd::set_mode(prev);
+}
+
+fn max_abs_diff(a: &Matrix, b: &Matrix) -> f32 {
+    a.data()
+        .iter()
+        .zip(b.data())
+        .fold(0.0f32, |m, (x, y)| m.max((x - y).abs()))
+}
+
+/// Rect/tall/wide shapes, including one past the packed-A threshold with
+/// a remainder-row tail.
+const SHAPES: &[(usize, usize)] = &[(7, 13), (96, 24), (24, 96), (130, 66)];
+
+#[test]
+fn forced_neon_matmul_and_gram_match_naive() {
+    with_forced_neon("matmul/gram parity", || {
+        let mut rng = Rng::new(1);
+        for &(m, k) in SHAPES {
+            let n = (k / 2).max(1) + 3;
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let d = max_abs_diff(&a.matmul(&b), &a.matmul_naive(&b));
+            assert!(d < 1e-4, "matmul ({m},{k},{n}): {d}");
+            let d = max_abs_diff(&a.gram(), &a.gram_naive());
+            assert!(d < 1e-4, "gram ({m},{k}): {d}");
+        }
+    });
+}
+
+#[test]
+fn forced_neon_rownorm_matches_naive_including_zero_rows() {
+    with_forced_neon("rownorm parity", || {
+        let mut rng = Rng::new(2);
+        for &(m, n) in SHAPES {
+            let mut v = Matrix::randn(m, n, 2.0, &mut rng);
+            let mid = m / 2;
+            for x in v.data_mut()[mid * n..(mid + 1) * n].iter_mut() {
+                *x = 0.0; // zero row: eps-floor semantics must agree
+            }
+            let d = max_abs_diff(&v.row_normalize(ROW_EPS), &v.row_normalize_naive(ROW_EPS));
+            assert!(d < 1e-4, "rownorm ({m},{n}): {d}");
+        }
+    });
+}
+
+#[test]
+fn forced_neon_ns5_matches_naive() {
+    with_forced_neon("ns5 parity", || {
+        let mut rng = Rng::new(3);
+        let mut ws = Workspace::new();
+        for &(m, n) in &[(12usize, 40usize), (40, 12), (16, 16)] {
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            let naive = newton_schulz5_naive(&g, 5);
+            let mut fast = Matrix::zeros(m, n);
+            newton_schulz5_into(&g, 5, &mut ws, &mut fast);
+            let d = max_abs_diff(&fast, &naive);
+            assert!(d < 1e-4, "ns5 ({m},{n}): {d}");
+        }
+    });
+}
+
+#[test]
+fn forced_neon_thread_count_does_not_change_bits() {
+    with_forced_neon("thread-count determinism", || {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(130, 90, 1.0, &mut rng);
+        let b = Matrix::randn(90, 110, 1.0, &mut rng);
+        rmnp::tensor::kernels::set_num_threads(1);
+        let serial = a.matmul(&b);
+        rmnp::tensor::kernels::set_num_threads(4);
+        let par = a.matmul(&b);
+        rmnp::tensor::kernels::set_num_threads(0);
+        assert_eq!(serial, par);
+    });
+}
+
+#[test]
+fn forcing_neon_never_lands_on_another_vector_rung() {
+    // runs meaningfully on every host: forced neon is neon where it
+    // exists and scalar everywhere else — never avx2
+    let _guard = mode_lock();
+    let prev = simd::mode();
+    simd::set_mode(SimdMode::Neon);
+    let path = simd::active();
+    assert!(
+        path == SimdPath::Neon || path == SimdPath::Scalar,
+        "forced neon resolved to {path:?}"
+    );
+    assert_eq!(path == SimdPath::Neon, simd::neon_available());
+    simd::set_mode(prev);
+}

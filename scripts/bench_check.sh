@@ -8,10 +8,11 @@
 # and fails if:
 #   * any recorded RMNP speedup (Table 2 ratio) drops below 1.0,
 #   * any seed-vs-kernel improvement drops below 1.0,
-#   * any AVX2-vs-scalar ns5 speedup drops below 1.0, or rownorm below
-#     0.9 (rownorm is memory-bandwidth-bound, so parity + noise margin is
-#     the honest bar on shared runners; skipped entirely when the CPU has
-#     no AVX2/FMA or RMNP_SIMD=scalar forces the portable rung),
+#   * any vector-rung-vs-scalar ns5 speedup drops below 1.0, or rownorm
+#     below 0.9 (rownorm is memory-bandwidth-bound, so parity + noise
+#     margin is the honest bar on shared runners; skipped entirely when
+#     the CPU has no vector rung — AVX2 on x86-64, NEON on aarch64 — or
+#     RMNP_SIMD=scalar forces the portable rung),
 #   * the median seed-vs-kernel improvement falls below half of the most
 #     recent bench_history/ snapshot (skipped with a notice on the first
 #     run, when no prior-PR snapshot exists yet).
@@ -74,9 +75,10 @@ for d in doc["seed_vs_kernel"]:
 simd = doc.get("simd_vs_scalar", [])
 if simd:
     for d in simd:
-        print(f"  {d['op']:<8} d={d['d_model']:<5} avx2 vs scalar {d['speedup']:.2f}x")
+        rung = d.get("rung", "simd")
+        print(f"  {d['op']:<8} d={d['d_model']:<5} {rung} vs scalar {d['speedup']:.2f}x")
 else:
-    print(f"  simd rung: {doc.get('simd', '?')} (no avx2-vs-scalar delta recorded)")
+    print(f"  simd rung: {doc.get('simd', '?')} (no vector-vs-scalar delta recorded)")
 
 # trajectory gate against the newest bench_history snapshot. Absolute
 # medians are machine-dependent, so compare the improvement *ratios*,
