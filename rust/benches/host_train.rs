@@ -1,0 +1,113 @@
+//! `cargo bench --bench host_train` — the native training backend end to
+//! end: batch assembly + scaled-model forward/backward + global-norm
+//! clip + sharded fused stepping through `StepPlan`, per optimizer.
+//! Writes `BENCH_host_train.json` so the whole-training-step trajectory
+//! is comparable across PRs (`scripts/bench_check.sh` snapshots it into
+//! `bench_history/`).
+//!
+//! Env knobs: `BENCH_REPEATS` (samples per measurement, default 3),
+//! `RMNP_THREADS`, `RMNP_SIMD`.
+
+use std::path::Path;
+
+use rmnp::bench::report::{self, envelope, int, num, obj, text};
+use rmnp::bench::{bench_n, fmt_secs};
+use rmnp::config::DataSpec;
+use rmnp::data::corpus::token_source;
+use rmnp::runtime::{Batch, NativeBackend, TrainBackend};
+use rmnp::util::Json;
+
+struct Case {
+    model: &'static str,
+    optimizer: &'static str,
+    params: usize,
+    elems: usize,
+    step_median: f64,
+    final_loss: f32,
+}
+
+fn run_case(
+    model: &'static str,
+    optimizer: &'static str,
+    steps_per_iter: usize,
+    repeats: usize,
+) -> anyhow::Result<Case> {
+    let mut backend = NativeBackend::new(model, optimizer, 42, 0)?;
+    let spec = backend.spec().clone();
+    let mut src = token_source(DataSpec::Markov, 7, 0);
+    let mut tokens = vec![0i32; spec.batch * spec.seq];
+    let params = backend.n_params();
+    let elems = backend.total_elems();
+    let mut last = 0.0f32;
+    // warm the workspace and the plan pool before timing
+    src.fill(&mut tokens);
+    backend.step(&Batch::Tokens(&tokens), 1e-3)?;
+    let r = bench_n(
+        &format!("{model}_{optimizer}_step"),
+        steps_per_iter,
+        repeats,
+        || {
+            src.fill(&mut tokens);
+            last = backend
+                .step(&Batch::Tokens(&tokens), 1e-3)
+                .expect("bench step")
+                .loss;
+        },
+    );
+    println!("  {}", r.report_line());
+    println!(
+        "  -> {:.1} steps/s over {params} params ({elems} elems), loss {last:.3}",
+        1.0 / r.median().max(1e-12)
+    );
+    assert!(last.is_finite(), "{model}/{optimizer} diverged in the bench");
+    Ok(Case {
+        model,
+        optimizer,
+        params,
+        elems,
+        step_median: r.median(),
+        final_loss: last,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let repeats: usize = std::env::var("BENCH_REPEATS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    println!(
+        "host-train bench: repeats={repeats} threads={} simd={}",
+        rmnp::tensor::kernels::num_threads(),
+        rmnp::tensor::simd::label()
+    );
+
+    let mut cases = Vec::new();
+    println!("gpt2_tiny full native train step:");
+    for optimizer in ["rmnp", "muon", "adamw"] {
+        cases.push(run_case("gpt2_tiny", optimizer, 5, repeats)?);
+    }
+    println!("gpt2_medium full native train step (rmnp):");
+    cases.push(run_case("gpt2_medium", "rmnp", 3, repeats)?);
+
+    let entries: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("model", text(c.model)),
+                ("optimizer", text(c.optimizer)),
+                ("params", int(c.params)),
+                ("elems", int(c.elems)),
+                ("step_median_s", num(c.step_median)),
+                ("steps_per_s", num(1.0 / c.step_median.max(1e-12))),
+                ("final_loss", num(c.final_loss as f64)),
+            ])
+        })
+        .collect();
+    let doc = envelope("host_train", vec![("cases", Json::Arr(entries))]);
+    report::write(Path::new("BENCH_host_train.json"), &doc)?;
+    println!(
+        "wrote BENCH_host_train.json (gpt2_tiny rmnp step {})",
+        fmt_secs(cases[0].step_median)
+    );
+    Ok(())
+}

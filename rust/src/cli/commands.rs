@@ -1,49 +1,39 @@
 //! Subcommand implementations.
 
-#[cfg(feature = "pjrt")]
-use std::path::Path;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use crate::cli::args::Args;
-use crate::config::DataSpec;
-#[cfg(feature = "pjrt")]
-use crate::config::RunConfig;
-#[cfg(feature = "pjrt")]
+use crate::config::{BackendKind, DataSpec, RunConfig};
 use crate::coordinator::train;
 use crate::data::corpus::token_source;
 use crate::data::tokenizer::BpeTokenizer;
 use crate::exp::{self, ExpOpts};
-#[cfg(feature = "pjrt")]
-use crate::runtime::Engine;
 use crate::util::human_bytes;
 #[cfg(feature = "pjrt")]
 use crate::info;
+#[cfg(feature = "pjrt")]
+use crate::runtime::Engine;
 
 #[cfg(not(feature = "pjrt"))]
-const NO_PJRT: &str = "this build has no PJRT runtime: rebuild with \
-`--features pjrt` (and real XLA bindings) to run artifact-backed \
-training/experiments. Native kernel benchmarks remain available via \
-`rmnp exp precond` and `cargo bench`.";
+const NO_PJRT: &str = "this experiment drives the PJRT engine directly: \
+rebuild with `--features pjrt` (and real XLA bindings) to run it. Every \
+training experiment (train, pretrain, sweep, …) runs offline on the \
+native backend.";
 
-fn exp_opts(args: &Args) -> ExpOpts {
-    ExpOpts {
+fn exp_opts(args: &Args) -> anyhow::Result<ExpOpts> {
+    Ok(ExpOpts {
         artifacts: PathBuf::from(args.str_or("artifacts", "artifacts")),
         out: PathBuf::from(args.str_or("out", "runs")),
         steps: args.usize_or("steps", 200),
         seed: args.usize_or("seed", 1234) as u64,
         workers: args.usize_or("workers", 2),
         scales: args.list("scales"),
-    }
+        backend: BackendKind::parse(args.str_or("backend", "native"))?,
+    })
 }
 
-/// `rmnp train` (needs the PJRT runtime)
-#[cfg(not(feature = "pjrt"))]
-pub fn train(_args: &Args) -> anyhow::Result<()> {
-    anyhow::bail!(NO_PJRT)
-}
-
-/// `rmnp train`
-#[cfg(feature = "pjrt")]
+/// `rmnp train` — one training run on the configured backend (native by
+/// default; no artifacts or `pjrt` feature needed).
 pub fn train(args: &Args) -> anyhow::Result<()> {
     let mut cfg = match args.flag("config") {
         Some(path) => RunConfig::from_file(Path::new(path))?,
@@ -55,9 +45,14 @@ pub fn train(args: &Args) -> anyhow::Result<()> {
     if let Some(a) = args.flag("artifacts") {
         cfg.artifacts = PathBuf::from(a);
     }
-    // thread knob is applied inside train::run (covers exp/sweep callers too)
-    let engine = Engine::new(&cfg.artifacts)?;
-    let result = train::run(&engine, &cfg)?;
+    if let Some(b) = args.flag("backend") {
+        cfg.backend = BackendKind::parse(b)?;
+    }
+    if args.has("resume") {
+        cfg.resume = true;
+    }
+    // perf knobs are applied inside train::run (covers exp/sweep callers too)
+    let result = train::run_auto(&cfg)?;
     println!(
         "done: final train loss {:.4}, eval loss {:.4}, ppl {:.2}, clip rate {:.1}%, {:.1}s",
         result.final_train_loss,
@@ -71,7 +66,7 @@ pub fn train(args: &Args) -> anyhow::Result<()> {
 
 /// `rmnp exp <name>`
 pub fn exp(args: &Args) -> anyhow::Result<()> {
-    let opts = exp_opts(args);
+    let opts = exp_opts(args)?;
     match args.subcommand(1) {
         #[cfg(feature = "pjrt")]
         Some("precond") => {
@@ -96,7 +91,6 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
             println!("{}", exp::precond::format_figure1(&rows));
             Ok(())
         }
-        #[cfg(feature = "pjrt")]
         Some("pretrain") => {
             let family = args.str_or("family", "gpt2");
             let (default_scales, default_data, title): (&[&str], _, _) = match family {
@@ -125,7 +119,6 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
             println!("{}", exp::pretrain::format_grid(&grid, title));
             Ok(())
         }
-        #[cfg(feature = "pjrt")]
         Some("sweep") => {
             let model = args.str_or("model", "gpt2_tiny").to_string();
             let dataset = DataSpec::parse(args.str_or(
@@ -134,7 +127,8 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
             ))?;
             let optimizers = args.list("optimizers");
             let opt_refs: Vec<&str> = if optimizers.is_empty() {
-                if model.starts_with("llama") {
+                // the Shampoo/SOAP baselines only exist as PJRT artifacts
+                if model.starts_with("llama") && opts.backend == BackendKind::Pjrt {
                     vec!["muon", "rmnp", "shampoo", "soap"]
                 } else {
                     vec!["muon", "rmnp"]
@@ -191,29 +185,25 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
             }
             Ok(())
         }
-        #[cfg(feature = "pjrt")]
         Some("extended") => {
             for (title, grid) in exp::pretrain::extended(&opts)? {
                 println!("{}", exp::pretrain::format_grid(&grid, &format!("Table 14 — {title}")));
             }
             Ok(())
         }
-        #[cfg(feature = "pjrt")]
         Some("ablation-embed") => {
             let rows = exp::pretrain::embed_ablation(&opts)?;
             println!("{}", exp::pretrain::format_embed_ablation(&rows));
             Ok(())
         }
-        #[cfg(feature = "pjrt")]
         Some("ssm") => {
             let grid = exp::pretrain::ssm(&opts)?;
             println!("{}", exp::pretrain::format_grid(&grid, "Table 20 — Mamba-like SSM"));
             Ok(())
         }
-        #[cfg(feature = "pjrt")]
         Some("vision") => {
             let grid = exp::pretrain::vision(&opts)?;
-            println!("{}", exp::pretrain::format_grid(&grid, "Table 21 — CNN (exp CE)"));
+            println!("{}", exp::pretrain::format_grid(&grid, "Table 21 — MLP (exp CE)"));
             Ok(())
         }
         Some("cliprate") => {
@@ -263,52 +253,51 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
             println!("  {:.1}M params/s", elems as f64 / r.median() / 1e6);
             Ok(())
         }
-        #[cfg(feature = "pjrt")]
         Some("all") => run_all(args, &opts),
         #[cfg(not(feature = "pjrt"))]
-        Some(
-            "pretrain" | "sweep" | "dominance" | "extended" | "ablation-embed"
-            | "ssm" | "vision" | "all",
-        ) => anyhow::bail!(NO_PJRT),
+        Some("dominance") => anyhow::bail!(NO_PJRT),
         other => anyhow::bail!("unknown exp `{other:?}` (see `rmnp help`)"),
     }
 }
 
 /// `rmnp exp all` — a scaled-down pass over every experiment.
-#[cfg(feature = "pjrt")]
 fn run_all(args: &Args, opts: &ExpOpts) -> anyhow::Result<()> {
-    info!("=== exp all: precond (capped) ===");
-    let rows = exp::precond::run(opts, args.usize_or("max-d", 1024), 2)?;
+    crate::info!("=== exp all: precond (capped, native kernels) ===");
+    let rows =
+        exp::precond::run_native(args.usize_or("max-d", 640), args.usize_or("repeats", 2));
     println!("{}", exp::precond::format_table(&rows));
 
-    info!("=== exp all: gpt2 pretrain ===");
+    crate::info!("=== exp all: gpt2 pretrain ===");
     let grid = exp::pretrain::compare(
         opts, "gpt2", &["tiny", "small"], &["adamw", "muon", "rmnp"],
         DataSpec::Markov, 1,
     )?;
     println!("{}", exp::pretrain::format_grid(&grid, "Table 17 (scaled)"));
 
-    info!("=== exp all: llama pretrain ===");
+    crate::info!("=== exp all: llama pretrain ===");
     let grid = exp::pretrain::compare(
         opts, "llama", &["s60", "s130"], &["adamw", "muon", "rmnp"],
         DataSpec::Zipf, 1,
     )?;
     println!("{}", exp::pretrain::format_grid(&grid, "Table 19 (scaled)"));
 
-    info!("=== exp all: dominance ===");
-    let engine = Engine::new(&opts.artifacts)?;
-    let r = exp::dominance_exp::run_one(
-        opts, &engine, "gpt2_tiny", "muon", DataSpec::Markov,
-    )?;
-    println!("{}", exp::dominance_exp::format_global(&[r]));
+    #[cfg(feature = "pjrt")]
+    if opts.backend == BackendKind::Pjrt {
+        info!("=== exp all: dominance (pjrt) ===");
+        let engine = Engine::new(&opts.artifacts)?;
+        let r = exp::dominance_exp::run_one(
+            opts, &engine, "gpt2_tiny", "muon", DataSpec::Markov,
+        )?;
+        println!("{}", exp::dominance_exp::format_global(&[r]));
+    }
 
-    info!("=== exp all: ssm + vision ===");
+    crate::info!("=== exp all: ssm + vision ===");
     let grid = exp::pretrain::ssm(opts)?;
     println!("{}", exp::pretrain::format_grid(&grid, "Table 20"));
     let grid = exp::pretrain::vision(opts)?;
     println!("{}", exp::pretrain::format_grid(&grid, "Table 21"));
 
-    info!("=== exp all: clip rates ===");
+    crate::info!("=== exp all: clip rates ===");
     let summaries = exp::cliprate::scan(&opts.out)?;
     println!("{}", exp::cliprate::format(&summaries));
     Ok(())

@@ -1,13 +1,18 @@
 //! Command-line interface: `rmnp <command> ...`.
 //!
 //! ```text
-//! rmnp train   [--config F] [--set k=v]...      one training run
+//! rmnp train   [--config F] [--set k=v]... [--resume]   one training run
 //! rmnp exp     <precond|pretrain|sweep|dominance|extended|ablation-embed|
 //!               ssm|vision|cliprate|all> [opts]  paper experiments
 //! rmnp report  <cliprate|curves> --runs DIR      re-render from saved CSVs
 //! rmnp data    <sample|encode> [opts]            data-pipeline utilities
 //! rmnp info                                      manifest summary
 //! ```
+//!
+//! Training commands default to the host-native backend and run offline
+//! in every build; `--backend pjrt` selects the artifact path in
+//! `--features pjrt` builds (`rmnp train` also accepts
+//! `--set runtime.backend=pjrt` / the config-file key).
 
 // The crate-level `missing_docs` warning is enforced for tensor/ and
 // optim/; this module's full docs pass is still pending (ROADMAP.md).
@@ -22,12 +27,12 @@ const USAGE: &str = "\
 rmnp — RMNP optimizer reproduction (rust + JAX + Pallas, AOT via PJRT)
 
 USAGE:
-  rmnp train   [--config FILE] [--set section.key=value]...
+  rmnp train   [--config FILE] [--set section.key=value]... [--resume]
   rmnp exp precond        [--max-d N] [--repeats N]
   rmnp exp pretrain       --family gpt2|llama|ssm|vision [--dataset markov|zipf|ngram|images]
                           [--scales a,b,...] [--steps N] [--workers N]
   rmnp exp sweep          --model TAG [--dataset NAME] [--optimizers a,b] [--steps N]
-  rmnp exp dominance      [--models TAG,TAG] [--optimizer muon] [--steps N]
+  rmnp exp dominance      [--models TAG,TAG] [--optimizer muon] [--steps N]  (pjrt builds)
   rmnp exp extended       [--steps N]
   rmnp exp ablation-embed [--steps N]
   rmnp exp ssm|vision     [--steps N]
@@ -40,6 +45,12 @@ USAGE:
   rmnp data encode        --text STRING [--vocab 300]
   rmnp info               [--artifacts DIR]
 
+Backends: training runs on the host-native backend by default (offline, no
+          artifacts); --backend pjrt selects the PJRT artifact path in
+          `--features pjrt` builds (rmnp train also reads
+          --set runtime.backend=... and the config-file key).
+Resume:   --resume / --set train.resume=true restores the latest
+          step-N.ckpt in out.dir and continues bit-exactly.
 Common flags: --artifacts DIR (default artifacts), --out DIR (default runs),
               --seed N, --verbose
 Perf knobs:   --set perf.threads=N  --set perf.simd=auto|avx2|neon|scalar

@@ -14,6 +14,35 @@ use std::path::{Path, PathBuf};
 
 pub use toml::{Document, Value};
 
+/// Which training backend executes a run (`runtime.backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Host-native matrices + `StepPlan` stepping — the default; runs
+    /// offline in every build.
+    Native,
+    /// PJRT artifact path (needs the `pjrt` feature and real XLA).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse a config/CLI backend name.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "native" => BackendKind::Native,
+            "pjrt" => BackendKind::Pjrt,
+            other => anyhow::bail!("unknown backend `{other}` (native|pjrt)"),
+        })
+    }
+
+    /// The config spelling of this backend.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
 /// Learning-rate schedule shape (paper: cosine with 10% warmup).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Schedule {
@@ -95,6 +124,12 @@ pub struct RunConfig {
     /// `StepPlan` worker count (`perf.plan_threads`); 0 = the kernel
     /// thread count.
     pub plan_threads: usize,
+    /// Which backend executes the run (`runtime.backend`): the host-native
+    /// path (default, offline) or the PJRT artifact path.
+    pub backend: BackendKind,
+    /// Resume from the latest checkpoint in `out_dir` (`train.resume`).
+    /// The restored trajectory is bit-identical to an uninterrupted run.
+    pub resume: bool,
 }
 
 impl Default for RunConfig {
@@ -116,6 +151,8 @@ impl Default for RunConfig {
             threads: 0,
             simd: "auto".into(),
             plan_threads: 0,
+            backend: BackendKind::Native,
+            resume: false,
         }
     }
 }
@@ -151,6 +188,13 @@ impl RunConfig {
         self.threads = d.int_or("perf.threads", self.threads as i64).max(0) as usize;
         self.plan_threads =
             d.int_or("perf.plan_threads", self.plan_threads as i64).max(0) as usize;
+        self.resume = d.bool_or("train.resume", self.resume);
+        if let Some(v) = d.get("runtime.backend") {
+            self.backend = BackendKind::parse(
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("runtime.backend must be a string"))?,
+            )?;
+        }
         if let Some(v) = d.get("perf.simd") {
             let s = v
                 .as_str()
@@ -275,6 +319,17 @@ corpus = "zipf"
         assert_eq!(cfg.simd, "neon", "the neon rung is a legal override");
         assert!(cfg.apply_override("perf.simd=sse9").is_err());
         assert_eq!(cfg.simd, "neon", "bad simd value must not stick");
+        assert_eq!(cfg.backend, BackendKind::Native, "native is the default");
+        cfg.apply_override("runtime.backend=pjrt").unwrap();
+        assert_eq!(cfg.backend, BackendKind::Pjrt);
+        cfg.apply_override("runtime.backend=native").unwrap();
+        assert_eq!(cfg.backend, BackendKind::Native);
+        assert!(cfg.apply_override("runtime.backend=tpu").is_err());
+        assert!(!cfg.resume);
+        cfg.apply_override("train.resume=true").unwrap();
+        assert!(cfg.resume);
+        cfg.apply_override("train.resume=false").unwrap();
+        assert!(!cfg.resume);
         assert_eq!(cfg.steps, 42);
         assert!((cfg.lr - 0.5).abs() < 1e-12);
         assert_eq!(cfg.model, "ssm_base");

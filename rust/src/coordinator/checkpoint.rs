@@ -1,48 +1,59 @@
-//! Checkpoint store: raw little-endian binary format with a text index.
+//! Checkpoint store: raw little-endian binary format with versioning.
 //!
-//! Layout of `<dir>/step-N.ckpt`:
+//! Layout of `<dir>/step-N.ckpt` (format **v2**):
 //!
 //! ```text
 //! magic "RMNPCKPT"            8 bytes
-//! version u32                 4
-//! n_buffers u32               4
-//! for each buffer:
+//! version u32                 4   (= 2)
+//! step u64                    8   (training steps taken)
+//! n_params u32                4   (parameter section length)
+//! n_opt u32                   4   (optimizer-state section length)
+//! for each buffer (params first, then optimizer state):
 //!   name_len u32, name bytes
 //!   elem_count u32
 //!   f32 data (little endian)
 //! ```
 //!
-//! The scalar step counter "t" (an i32 on device) is stored through its
-//! f32 bits like everything else — the restore path reinterprets it, so
-//! round-trips are exact.
+//! Format **v1** (no step, no section split — everything is one flat
+//! buffer list) is still readable: [`load_state`] maps a v1 file to a
+//! [`TrainState`] with `step = 0` and every buffer in the parameter
+//! section, and [`load`] returns the flat list for either version.
+//!
+//! Integer counters (the device-side `t`, AdamW's step count) are stored
+//! through their f32 bits — the restore path reinterprets them, so
+//! round-trips are bit-exact.
+//!
+//! The reader **validates before trusting**: counts and lengths from the
+//! file are checked against the actual file size, so a truncated or
+//! corrupted checkpoint is a clean error instead of a huge allocation or
+//! a short read deep inside a buffer. The writer refuses (rather than
+//! silently truncates) anything whose count doesn't fit the u32 fields.
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
-const MAGIC: &[u8; 8] = b"RMNPCKPT";
-const VERSION: u32 = 1;
+use crate::runtime::backend::TrainState;
 
-/// One named state buffer.
-#[derive(Clone, Debug, PartialEq)]
-pub struct NamedBuffer {
-    pub name: String,
-    pub data: Vec<f32>,
+// Defined at the backend layer (the trait's checkpoint currency);
+// re-exported here so `coordinator::checkpoint::NamedBuffer` keeps
+// working.
+pub use crate::runtime::backend::NamedBuffer;
+
+const MAGIC: &[u8; 8] = b"RMNPCKPT";
+const VERSION: u32 = 2;
+
+fn u32_of(n: usize, what: &str) -> anyhow::Result<u32> {
+    u32::try_from(n).map_err(|_| {
+        anyhow::anyhow!("checkpoint {what} {n} does not fit the u32 format field")
+    })
 }
 
-/// Write a checkpoint file.
-pub fn save(path: &Path, buffers: &[NamedBuffer]) -> anyhow::Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
-    out.write_all(MAGIC)?;
-    out.write_all(&VERSION.to_le_bytes())?;
-    out.write_all(&(buffers.len() as u32).to_le_bytes())?;
+fn write_buffers(out: &mut impl Write, buffers: &[NamedBuffer]) -> anyhow::Result<()> {
     for b in buffers {
         let name = b.name.as_bytes();
-        out.write_all(&(name.len() as u32).to_le_bytes())?;
+        out.write_all(&u32_of(name.len(), "name length")?.to_le_bytes())?;
         out.write_all(name)?;
-        out.write_all(&(b.data.len() as u32).to_le_bytes())?;
+        out.write_all(&u32_of(b.data.len(), "buffer length")?.to_le_bytes())?;
         for v in &b.data {
             out.write_all(&v.to_le_bytes())?;
         }
@@ -50,43 +61,188 @@ pub fn save(path: &Path, buffers: &[NamedBuffer]) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Read a checkpoint file.
-pub fn load(path: &Path) -> anyhow::Result<Vec<NamedBuffer>> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "not a checkpoint: {}", path.display());
-    let mut u32buf = [0u8; 4];
-    f.read_exact(&mut u32buf)?;
-    let version = u32::from_le_bytes(u32buf);
-    anyhow::ensure!(version == VERSION, "unsupported checkpoint v{version}");
-    f.read_exact(&mut u32buf)?;
-    let n = u32::from_le_bytes(u32buf) as usize;
-    let mut buffers = Vec::with_capacity(n);
-    for _ in 0..n {
-        f.read_exact(&mut u32buf)?;
-        let name_len = u32::from_le_bytes(u32buf) as usize;
-        let mut name = vec![0u8; name_len];
-        f.read_exact(&mut name)?;
-        f.read_exact(&mut u32buf)?;
-        let count = u32::from_le_bytes(u32buf) as usize;
-        let mut bytes = vec![0u8; count * 4];
-        f.read_exact(&mut bytes)?;
-        let data = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        buffers.push(NamedBuffer { name: String::from_utf8(name)?, data });
+/// Open a temp file next to `path` for an atomic write: the caller
+/// writes the full payload, then [`commit`] renames it into place, so a
+/// crash mid-write never leaves a truncated `step-N.ckpt` for a later
+/// resume to trip over (the `.tmp` suffix is invisible to [`latest`]).
+fn tmp_writer(path: &Path) -> anyhow::Result<(std::io::BufWriter<std::fs::File>, PathBuf)> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
     }
-    Ok(buffers)
+    let tmp = path.with_extension("ckpt.tmp");
+    Ok((std::io::BufWriter::new(std::fs::File::create(&tmp)?), tmp))
+}
+
+/// Flush and atomically rename a [`tmp_writer`] file into place.
+fn commit(out: std::io::BufWriter<std::fs::File>, tmp: &Path, path: &Path) -> anyhow::Result<()> {
+    out.into_inner()
+        .map_err(|e| anyhow::anyhow!("flushing checkpoint: {e}"))?;
+    std::fs::rename(tmp, path)?;
+    Ok(())
+}
+
+/// Write a v2 checkpoint: step counter + parameter and optimizer-state
+/// sections. The write is atomic (temp file + rename).
+pub fn save_state(path: &Path, state: &TrainState) -> anyhow::Result<()> {
+    let (mut out, tmp) = tmp_writer(path)?;
+    out.write_all(MAGIC)?;
+    out.write_all(&VERSION.to_le_bytes())?;
+    out.write_all(&state.step.to_le_bytes())?;
+    out.write_all(&u32_of(state.params.len(), "parameter count")?.to_le_bytes())?;
+    out.write_all(&u32_of(state.opt.len(), "optimizer-buffer count")?.to_le_bytes())?;
+    write_buffers(&mut out, &state.params)?;
+    write_buffers(&mut out, &state.opt)?;
+    commit(out, &tmp, path)
+}
+
+/// Write a legacy v1 checkpoint (flat buffer list, no step counter).
+/// Kept so the v1-read compatibility path stays covered; new code should
+/// use [`save_state`].
+pub fn save(path: &Path, buffers: &[NamedBuffer]) -> anyhow::Result<()> {
+    let (mut out, tmp) = tmp_writer(path)?;
+    out.write_all(MAGIC)?;
+    out.write_all(&1u32.to_le_bytes())?;
+    out.write_all(&u32_of(buffers.len(), "buffer count")?.to_le_bytes())?;
+    write_buffers(&mut out, buffers)?;
+    commit(out, &tmp, path)
+}
+
+/// Bounded reader state: tracks how many bytes may legally remain so
+/// counts read from the file can be validated before allocation.
+struct BoundedReader<R> {
+    inner: R,
+    remaining: u64,
+    path: PathBuf,
+}
+
+impl<R: Read> BoundedReader<R> {
+    fn take(&mut self, n: u64, what: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            n <= self.remaining,
+            "corrupt checkpoint {}: {what} needs {n} bytes but only {} remain \
+             (truncated file?)",
+            self.path.display(),
+            self.remaining
+        );
+        self.remaining -= n;
+        Ok(())
+    }
+
+    fn read_exact(&mut self, buf: &mut [u8], what: &str) -> anyhow::Result<()> {
+        self.take(buf.len() as u64, what)?;
+        self.inner
+            .read_exact(buf)
+            .map_err(|e| anyhow::anyhow!("reading {what}: {e}"))?;
+        Ok(())
+    }
+
+    fn read_u32(&mut self, what: &str) -> anyhow::Result<u32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b, what)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn read_u64(&mut self, what: &str) -> anyhow::Result<u64> {
+        let mut b = [0u8; 8];
+        self.read_exact(&mut b, what)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Read `n` bytes into a fresh buffer, validating against the file
+    /// size BEFORE allocating — a corrupt length field must error, not
+    /// attempt a giant allocation.
+    fn read_vec(&mut self, n: u64, what: &str) -> anyhow::Result<Vec<u8>> {
+        self.take(n, what)?;
+        let mut bytes = vec![0u8; n as usize];
+        self.inner
+            .read_exact(&mut bytes)
+            .map_err(|e| anyhow::anyhow!("reading {what}: {e}"))?;
+        Ok(bytes)
+    }
+
+    fn read_buffers(&mut self, n: usize) -> anyhow::Result<Vec<NamedBuffer>> {
+        // each buffer needs ≥ 8 header bytes, so n is bounded by the file
+        anyhow::ensure!(
+            (n as u64) <= self.remaining / 8,
+            "corrupt checkpoint {}: buffer count {n} exceeds what {} bytes \
+             can hold",
+            self.path.display(),
+            self.remaining
+        );
+        let mut buffers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = self.read_u32("name length")? as u64;
+            let name = self.read_vec(name_len, "buffer name")?;
+            let count = self.read_u32("element count")? as u64;
+            let bytes = self.read_vec(count * 4, "buffer data")?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            buffers.push(NamedBuffer { name: String::from_utf8(name)?, data });
+        }
+        Ok(buffers)
+    }
+}
+
+fn open(path: &Path) -> anyhow::Result<(BoundedReader<std::io::BufReader<std::fs::File>>, u32)> {
+    let file = std::fs::File::open(path)?;
+    let len = file.metadata()?.len();
+    let mut r = BoundedReader {
+        inner: std::io::BufReader::new(file),
+        remaining: len,
+        path: path.to_path_buf(),
+    };
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic, "magic")?;
+    anyhow::ensure!(&magic == MAGIC, "not a checkpoint: {}", path.display());
+    let version = r.read_u32("version")?;
+    anyhow::ensure!(
+        version == 1 || version == VERSION,
+        "unsupported checkpoint v{version} (this build reads v1/v2)"
+    );
+    Ok((r, version))
+}
+
+/// Read a checkpoint into a [`TrainState`]. v2 files restore the step
+/// counter and the parameter/optimizer split; v1 files come back with
+/// `step = 0` and every buffer in `params`.
+pub fn load_state(path: &Path) -> anyhow::Result<TrainState> {
+    let (mut r, version) = open(path)?;
+    if version == 1 {
+        let n = r.read_u32("buffer count")? as usize;
+        let params = r.read_buffers(n)?;
+        return Ok(TrainState { step: 0, params, opt: Vec::new() });
+    }
+    let step = r.read_u64("step counter")?;
+    let n_params = r.read_u32("parameter count")? as usize;
+    let n_opt = r.read_u32("optimizer-buffer count")? as usize;
+    let params = r.read_buffers(n_params)?;
+    let opt = r.read_buffers(n_opt)?;
+    Ok(TrainState { step, params, opt })
+}
+
+/// Read a checkpoint as one flat buffer list (v1 order; v2 parameters
+/// followed by optimizer state).
+pub fn load(path: &Path) -> anyhow::Result<Vec<NamedBuffer>> {
+    let state = load_state(path)?;
+    let mut all = state.params;
+    all.extend(state.opt);
+    Ok(all)
 }
 
 /// Latest checkpoint in a directory (by step number in the filename).
+/// Unreadable or non-UTF-8 entries are skipped, not treated as "no
+/// checkpoints" — a resume must never silently restart from scratch
+/// because one stray file broke the scan.
 pub fn latest(dir: &Path) -> Option<(usize, PathBuf)> {
     let mut best: Option<(usize, PathBuf)> = None;
     for entry in std::fs::read_dir(dir).ok()? {
-        let path = entry.ok()?.path();
-        let name = path.file_name()?.to_str()?;
+        let Ok(entry) = entry else { continue };
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
         if let Some(step) = name
             .strip_prefix("step-")
             .and_then(|s| s.strip_suffix(".ckpt"))
@@ -108,9 +264,42 @@ mod tests {
         std::env::temp_dir().join(format!("rmnp-ckpt-{}-{name}", std::process::id()))
     }
 
+    fn sample_state() -> TrainState {
+        TrainState {
+            step: 42,
+            params: vec![
+                NamedBuffer { name: "w".into(), data: vec![1.5, -2.25, 0.0] },
+                NamedBuffer { name: "embed".into(), data: vec![0.5; 8] },
+            ],
+            opt: vec![
+                NamedBuffer { name: "w.momentum".into(), data: vec![0.25, 0.0, -1.0] },
+                NamedBuffer { name: "w.t".into(), data: vec![f32::from_bits(7)] },
+                NamedBuffer { name: "empty".into(), data: vec![] },
+            ],
+        }
+    }
+
     #[test]
-    fn roundtrip_exact() {
-        let dir = tmp("rt");
+    fn v2_roundtrip_exact() {
+        let dir = tmp("rt2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("step-42.ckpt");
+        let state = sample_state();
+        save_state(&path, &state).unwrap();
+        let back = load_state(&path).unwrap();
+        assert_eq!(back, state);
+        // bit-exact integer reinterpretation survives
+        assert_eq!(back.opt[1].data[0].to_bits(), 7);
+        // flat view concatenates params then opt
+        let flat = load(&path).unwrap();
+        assert_eq!(flat.len(), 5);
+        assert_eq!(flat[0].name, "w");
+        assert_eq!(flat[2].name, "w.momentum");
+    }
+
+    #[test]
+    fn v1_files_still_load() {
+        let dir = tmp("v1");
         let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("step-5.ckpt");
         let buffers = vec![
@@ -121,8 +310,12 @@ mod tests {
         save(&path, &buffers).unwrap();
         let back = load(&path).unwrap();
         assert_eq!(back, buffers);
-        // bit-exact i32 reinterpretation survives
         assert_eq!(back[1].data[0].to_bits(), 42);
+        // v1 through the state API: step 0, everything in params
+        let state = load_state(&path).unwrap();
+        assert_eq!(state.step, 0);
+        assert_eq!(state.params, buffers);
+        assert!(state.opt.is_empty());
     }
 
     #[test]
@@ -139,11 +332,92 @@ mod tests {
     }
 
     #[test]
+    fn saves_are_atomic_and_leave_no_tmp_behind() {
+        let dir = tmp("atomic");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("step-9.ckpt");
+        save_state(&path, &sample_state()).unwrap();
+        // a crashed write would have left only the .tmp; a completed one
+        // leaves only the final file, and latest() never selects a .tmp
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["step-9.ckpt".to_string()], "{names:?}");
+        // simulate the crash: a stale tmp alongside real checkpoints is
+        // ignored by the scan
+        std::fs::write(dir.join("step-12.ckpt.tmp"), b"partial").unwrap();
+        let (step, _) = latest(&dir).unwrap();
+        assert_eq!(step, 9, "a .tmp from a crashed save must not win");
+    }
+
+    #[test]
     fn rejects_garbage() {
         let dir = tmp("bad");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("x.ckpt");
         std::fs::write(&path, b"garbage!").unwrap();
         assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_files() {
+        let dir = tmp("trunc");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("step-1.ckpt");
+        save_state(&path, &sample_state()).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // cut the file at every prefix length that can break a section:
+        // mid-header, mid-name, mid-data
+        for cut in [4usize, 12, 20, 27, 30, full.len() - 3] {
+            let short = dir.join("short.ckpt");
+            std::fs::write(&short, &full[..cut]).unwrap();
+            let err = load_state(&short);
+            assert!(err.is_err(), "cut at {cut} must fail");
+        }
+        // the untouched file still loads (the loop above didn't clobber it)
+        assert!(load_state(&path).is_ok());
+    }
+
+    #[test]
+    fn rejects_oversized_counts() {
+        let dir = tmp("counts");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("step-1.ckpt");
+        save_state(&path, &sample_state()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // corrupt n_params (offset 20: magic 8 + version 4 + step 8) to a
+        // count the file cannot possibly hold — must error, not allocate
+        bytes[20..24].copy_from_slice(&u32::MAX.to_le_bytes());
+        let bad = dir.join("huge-count.ckpt");
+        std::fs::write(&bad, &bytes).unwrap();
+        let err = load_state(&bad).unwrap_err().to_string();
+        assert!(err.contains("buffer count"), "{err}");
+
+        // corrupt the first buffer's elem_count instead: header is 28
+        // bytes (magic 8 + version 4 + step 8 + counts 8), then
+        // name_len(4) + "w"(1) puts elem_count at offset 33
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[33..37].copy_from_slice(&u32::MAX.to_le_bytes());
+        let bad = dir.join("huge-elems.ckpt");
+        std::fs::write(&bad, &bytes).unwrap();
+        let err = load_state(&bad).unwrap_err().to_string();
+        assert!(err.contains("buffer data"), "{err}");
+
+        // corrupt the first buffer's name length (offset 28)
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[28..32].copy_from_slice(&u32::MAX.to_le_bytes());
+        let bad = dir.join("huge-name.ckpt");
+        std::fs::write(&bad, &bytes).unwrap();
+        assert!(load_state(&bad).is_err());
+    }
+
+    #[test]
+    fn save_refuses_counts_beyond_u32() {
+        // a buffer whose length cannot be represented must be a clean
+        // error, not a silent truncation. (Allocating > u32::MAX floats is
+        // not feasible in a test, so exercise the guard directly.)
+        assert!(u32_of(usize::MAX, "test").is_err());
+        assert!(u32_of(42, "test").is_ok());
     }
 }

@@ -17,6 +17,7 @@ pub struct CsvWriter {
 }
 
 impl CsvWriter {
+    /// Create (or truncate) `path` and write the header row.
     pub fn create(path: &Path, header: &[&str]) -> anyhow::Result<Self> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -24,6 +25,21 @@ impl CsvWriter {
         let mut out = BufWriter::new(File::create(path)?);
         writeln!(out, "{}", header.join(","))?;
         Ok(CsvWriter { out, columns: header.len() })
+    }
+
+    /// Reopen an existing CSV for appending: the header row already on
+    /// disk determines the arity (how resumed training runs continue
+    /// their `metrics.csv` in place).
+    pub fn append(path: &Path) -> anyhow::Result<Self> {
+        let first = BufReader::new(File::open(path)?)
+            .lines()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("cannot append to headerless {}", path.display()))??;
+        let columns = first.split(',').count();
+        let out = BufWriter::new(
+            std::fs::OpenOptions::new().append(true).open(path)?,
+        );
+        Ok(CsvWriter { out, columns })
     }
 
     /// Write one row; NaN renders as empty cell.
@@ -44,6 +60,7 @@ impl CsvWriter {
         Ok(())
     }
 
+    /// Flush buffered rows to disk.
     pub fn flush(&mut self) -> anyhow::Result<()> {
         self.out.flush()?;
         Ok(())
@@ -52,11 +69,14 @@ impl CsvWriter {
 
 /// Parsed CSV: header + rows (empty cells come back as NaN).
 pub struct CsvData {
+    /// Column names from the header row.
     pub header: Vec<String>,
+    /// Data rows in file order.
     pub rows: Vec<Vec<f64>>,
 }
 
 impl CsvData {
+    /// Read and parse a whole CSV file.
     pub fn read(path: &Path) -> anyhow::Result<Self> {
         let f = BufReader::new(File::open(path)?);
         let mut lines = f.lines();
@@ -150,6 +170,26 @@ mod tests {
         assert!(eval[0].is_nan() && eval[1] == 3.4);
         assert_eq!(data.column_dense("eval").unwrap(), vec![3.4]);
         assert!(data.column("nope").is_err());
+    }
+
+    #[test]
+    fn csv_append_continues_in_place() {
+        let path = tmpdir().join("resume.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            w.row(&[0.0, 3.5]).unwrap();
+            w.flush().unwrap();
+        }
+        {
+            let mut w = CsvWriter::append(&path).unwrap();
+            w.row(&[1.0, 3.1]).unwrap();
+            assert!(w.row(&[1.0]).is_err(), "arity comes from the header");
+            w.flush().unwrap();
+        }
+        let data = CsvData::read(&path).unwrap();
+        assert_eq!(data.rows.len(), 2);
+        assert_eq!(data.column("loss").unwrap(), vec![3.5, 3.1]);
+        assert!(CsvWriter::append(&tmpdir().join("missing.csv")).is_err());
     }
 
     #[test]

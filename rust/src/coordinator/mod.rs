@@ -1,24 +1,18 @@
 //! L3 coordinator: training loop, LR schedules, metric logging,
 //! checkpointing, and the multi-threaded sweep executor.
 //!
-//! The device-facing pieces (`train`, `sweep`) drive PJRT and are
-//! gated behind the `pjrt` feature; schedules, metrics, and checkpoint
-//! I/O are pure host code and always available.
-
-// The crate-level `missing_docs` warning is enforced for tensor/ and
-// optim/; this module's full docs pass is still pending (ROADMAP.md).
-#![allow(missing_docs)]
+//! Everything here is host code and always available: [`train::run`]
+//! drives any [`TrainBackend`](crate::runtime::TrainBackend) — the
+//! native backend by default, the PJRT session when built with the
+//! `pjrt` feature — and [`sweep::run_grid`] fans training jobs out
+//! across worker threads through the same abstraction.
 
 pub mod checkpoint;
 pub mod metrics;
 pub mod schedule;
-#[cfg(feature = "pjrt")]
 pub mod sweep;
-#[cfg(feature = "pjrt")]
 pub mod train;
 
 pub use schedule::lr_at;
-#[cfg(feature = "pjrt")]
 pub use sweep::{run_grid, SweepCell, SweepJob};
-#[cfg(feature = "pjrt")]
-pub use train::{run, RunResult};
+pub use train::{run, run_auto, RunResult};

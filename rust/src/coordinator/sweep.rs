@@ -1,33 +1,40 @@
 //! Sweep executor: run a grid of (optimizer, lr) training jobs and collect
 //! final validation perplexities (paper Tables 9–13, 20, 21).
 //!
-//! Jobs can fan out across worker threads; PJRT client handles are not
-//! `Send`, so each worker owns a private [`Engine`] (compile caches are
-//! per-worker, which is fine at sweep model scales).
+//! Jobs fan out across worker threads. Each job builds its own backend
+//! through [`train::run_auto`] — native jobs need nothing but the
+//! config, and PJRT jobs each own a private engine (client handles are
+//! not `Send`; per-job compile caches are fine at sweep model scales).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::mpsc::channel;
 use std::sync::{Arc, Mutex};
 
 use crate::config::RunConfig;
 use crate::coordinator::train;
-use crate::runtime::Engine;
-use crate::{info, warnln};
+use crate::info;
 
 /// One grid cell request.
 #[derive(Clone, Debug)]
 pub struct SweepJob {
+    /// Optimizer name (validated against the registry by the run).
     pub optimizer: String,
+    /// Peak matrix learning rate for this cell.
     pub lr: f64,
 }
 
 /// One grid cell outcome.
 #[derive(Clone, Debug)]
 pub struct SweepCell {
+    /// Optimizer name of the cell.
     pub optimizer: String,
+    /// Peak matrix learning rate of the cell.
     pub lr: f64,
+    /// Final validation perplexity.
     pub final_ppl: f64,
+    /// Final held-out loss.
     pub final_eval_loss: f64,
+    /// Wall-clock seconds of the run.
     pub seconds: f64,
 }
 
@@ -49,35 +56,36 @@ pub fn run_grid(
             let queue = queue.clone();
             let tx = tx.clone();
             let base = base.clone();
-            scope.spawn(move || {
-                // Each worker owns its own PJRT client (not Send).
-                let engine = match Engine::new(&base.artifacts) {
-                    Ok(e) => e,
-                    Err(e) => {
-                        warnln!("worker {wid}: engine init failed: {e}");
-                        return;
-                    }
-                };
-                loop {
-                    let job = { queue.lock().unwrap().pop() };
-                    let Some((idx, job)) = job else { break };
-                    let mut cfg = base.clone();
-                    cfg.optimizer = job.optimizer.clone();
-                    cfg.lr = job.lr;
-                    cfg.out_dir = sweep_dir(&base.out_dir, &job);
-                    info!(
-                        "sweep[{idx}] {} {} lr={:.2e} (worker {wid})",
-                        cfg.model, cfg.optimizer, cfg.lr
-                    );
-                    let result = train::run(&engine, &cfg).map(|r| SweepCell {
-                        optimizer: job.optimizer,
-                        lr: job.lr,
-                        final_ppl: r.final_ppl,
-                        final_eval_loss: r.final_eval_loss,
-                        seconds: r.seconds,
-                    });
-                    let _ = tx.send((idx, result));
+            scope.spawn(move || loop {
+                let job = { queue.lock().unwrap().pop() };
+                let Some((idx, job)) = job else { break };
+                let mut cfg = base.clone();
+                cfg.optimizer = job.optimizer.clone();
+                cfg.lr = job.lr;
+                cfg.out_dir = sweep_dir(&base.out_dir, &job);
+                // divide the stepping-thread budget across concurrent
+                // jobs: each native job would otherwise spawn a
+                // full-width StepPlan pool and oversubscribe the cores
+                // (bits are plan_threads-invariant, so this is safe)
+                if workers > 1 && cfg.plan_threads == 0 {
+                    cfg.plan_threads =
+                        (crate::tensor::kernels::num_threads() / workers).max(1);
                 }
+                info!(
+                    "sweep[{idx}] {} {} lr={:.2e} ({} backend, worker {wid})",
+                    cfg.model,
+                    cfg.optimizer,
+                    cfg.lr,
+                    cfg.backend.name()
+                );
+                let result = train::run_auto(&cfg).map(|r| SweepCell {
+                    optimizer: job.optimizer,
+                    lr: job.lr,
+                    final_ppl: r.final_ppl,
+                    final_eval_loss: r.final_eval_loss,
+                    seconds: r.seconds,
+                });
+                let _ = tx.send((idx, result));
             });
         }
         drop(tx);
@@ -95,7 +103,7 @@ pub fn run_grid(
     })
 }
 
-fn sweep_dir(base: &PathBuf, job: &SweepJob) -> PathBuf {
+fn sweep_dir(base: &Path, job: &SweepJob) -> PathBuf {
     base.join(format!("{}_lr{:.0e}", job.optimizer, job.lr).replace(['+', '.'], ""))
 }
 

@@ -1,29 +1,48 @@
-//! The training loop: config → data pipeline → device-resident stepping →
+//! The training loop: config → data pipeline → backend stepping →
 //! metrics/eval/dominance/checkpoints.
+//!
+//! The loop is generic over [`TrainBackend`]: [`run`] drives any
+//! backend, and [`run_auto`] builds the one `cfg.backend` selects — the
+//! always-available [`NativeBackend`](crate::runtime::NativeBackend)
+//! (the default), or the PJRT session when the crate is built with the
+//! `pjrt` feature.
+//!
+//! ## Resume
+//!
+//! With `cfg.resume = true` and a checkpoint in `cfg.out_dir`, the run
+//! restores the latest checkpoint through the backend's named-buffer
+//! state (parameters **and** optimizer state, bit-exactly), fast-forwards
+//! the train/eval data streams to the saved step, and continues — the
+//! continued trajectory is bit-identical to an uninterrupted run for any
+//! `perf.plan_threads` (asserted by `tests/native_train.rs`).
 
 use std::path::Path;
 
-use crate::config::{DataSpec, RunConfig};
-use crate::coordinator::checkpoint::{self, NamedBuffer};
+use crate::config::{BackendKind, DataSpec, RunConfig};
+use crate::coordinator::checkpoint;
 use crate::coordinator::metrics::{append_jsonl, json_str, CsvWriter};
 use crate::coordinator::schedule::lr_at;
 use crate::data::corpus::token_source;
 use crate::data::images::ImageSource;
 use crate::data::loader::BatchLoader;
-use crate::runtime::session::{Batch, TrainSession};
-use crate::runtime::Engine;
+use crate::runtime::{Batch, BatchShape, NativeBackend, TrainBackend};
 use crate::util::Timer;
 use crate::{debugln, info};
 
 /// Outcome of a full training run.
 #[derive(Clone, Debug)]
 pub struct RunResult {
+    /// Training loss on the last batch.
     pub final_train_loss: f64,
+    /// Held-out loss of the final evaluation.
     pub final_eval_loss: f64,
     /// exp(final_eval_loss) — the paper reports validation perplexity.
     pub final_ppl: f64,
+    /// Fraction of steps where gradient clipping engaged.
     pub mean_clip_rate: f64,
+    /// Steps executed by this invocation (excludes restored steps).
     pub steps: usize,
+    /// Wall-clock seconds of this invocation.
     pub seconds: f64,
     /// mean train loss over the last 10% of steps (smoother than the last
     /// point for small-scale runs)
@@ -35,55 +54,147 @@ enum Feed {
     Images(BatchLoader<(Vec<f32>, Vec<i32>)>),
 }
 
-fn make_feed(engine: &Engine, cfg: &RunConfig, split: u64) -> anyhow::Result<Feed> {
-    let model = engine.manifest.model(&cfg.model)?;
-    if model.family == "vision" {
-        anyhow::ensure!(
-            cfg.data == DataSpec::Images,
-            "vision models need data.corpus = \"images\""
-        );
-        let ispec = &model.batch_specs[0];
-        let b = ispec.shape[0];
-        let hw = *ispec.shape.last().unwrap();
-        let n_img = ispec.elements();
-        let mut src = ImageSource::new(10, hw, cfg.seed, split);
-        Ok(Feed::Images(BatchLoader::spawn(4, move || {
-            let mut images = vec![0.0f32; n_img];
-            let mut labels = vec![0i32; b];
-            src.fill(b, &mut images, &mut labels);
-            (images, labels)
-        })))
-    } else {
-        anyhow::ensure!(
-            cfg.data != DataSpec::Images,
-            "LM models need a token corpus, got images"
-        );
-        let spec = &model.batch_specs[0];
-        let count = spec.elements();
-        let mut src = token_source(cfg.data, cfg.seed, split);
-        Ok(Feed::Tokens(BatchLoader::spawn(4, move || {
-            let mut tokens = vec![0i32; count];
-            src.fill(&mut tokens);
-            tokens
-        })))
+impl Feed {
+    /// Draw and discard `n` batches — how a resumed run fast-forwards the
+    /// deterministic stream to the position an uninterrupted run would be
+    /// at.
+    fn skip(&self, n: usize) {
+        for _ in 0..n {
+            match self {
+                Feed::Tokens(l) => {
+                    let _ = l.next();
+                }
+                Feed::Images(l) => {
+                    let _ = l.next();
+                }
+            }
+        }
     }
 }
 
-/// Run one training job to completion, writing metrics under
-/// `cfg.out_dir`. Returns the summary.
-pub fn run(engine: &Engine, cfg: &RunConfig) -> anyhow::Result<RunResult> {
+fn make_feed(backend: &dyn TrainBackend, cfg: &RunConfig, split: u64) -> anyhow::Result<Feed> {
+    match backend.batch_shape() {
+        BatchShape::Images { batch, hw, pixels } => {
+            anyhow::ensure!(
+                cfg.data == DataSpec::Images,
+                "vision models need data.corpus = \"images\""
+            );
+            let mut src = ImageSource::new(10, hw, cfg.seed, split);
+            Ok(Feed::Images(BatchLoader::spawn(4, move || {
+                let mut images = vec![0.0f32; pixels];
+                let mut labels = vec![0i32; batch];
+                src.fill(batch, &mut images, &mut labels);
+                (images, labels)
+            })))
+        }
+        BatchShape::Tokens { rows, cols } => {
+            anyhow::ensure!(
+                cfg.data != DataSpec::Images,
+                "LM models need a token corpus, got images"
+            );
+            let count = rows * cols;
+            let mut src = token_source(cfg.data, cfg.seed, split);
+            Ok(Feed::Tokens(BatchLoader::spawn(4, move || {
+                let mut tokens = vec![0i32; count];
+                src.fill(&mut tokens);
+                tokens
+            })))
+        }
+    }
+}
+
+/// Build the backend `cfg` selects and run the job to completion.
+pub fn run_auto(cfg: &RunConfig) -> anyhow::Result<RunResult> {
+    // apply perf knobs BEFORE the backend exists: NativeBackend sizes its
+    // StepPlan pool from the kernel thread count when plan_threads = 0,
+    // so `perf.threads` must already be in effect (run() re-applies,
+    // which is idempotent, for callers that build backends themselves)
+    cfg.apply_perf()?;
+    match cfg.backend {
+        BackendKind::Native => {
+            let mut backend = NativeBackend::new(
+                &cfg.model,
+                &cfg.optimizer,
+                cfg.seed,
+                cfg.plan_threads,
+            )?;
+            run(&mut backend, cfg)
+        }
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => {
+            let engine = crate::runtime::Engine::new(&cfg.artifacts)?;
+            let mut backend = crate::runtime::TrainSession::new(
+                &engine,
+                &cfg.model,
+                &cfg.optimizer,
+                cfg.seed as i32,
+            )?;
+            run(&mut backend, cfg)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => anyhow::bail!(
+            "runtime.backend = \"pjrt\" needs a build with `--features pjrt` \
+             (and real XLA bindings); the native backend runs offline"
+        ),
+    }
+}
+
+/// Run one training job on `backend` to completion, writing metrics
+/// under `cfg.out_dir`. Returns the summary.
+pub fn run(backend: &mut dyn TrainBackend, cfg: &RunConfig) -> anyhow::Result<RunResult> {
     let t_start = std::time::Instant::now();
     cfg.apply_perf()?;
     std::fs::create_dir_all(&cfg.out_dir)?;
-    let mut sess =
-        TrainSession::new(engine, &cfg.model, &cfg.optimizer, cfg.seed as i32)?;
-    let train_feed = make_feed(engine, cfg, 0)?;
-    let eval_feed = make_feed(engine, cfg, 1)?;
 
-    let mut csv = CsvWriter::create(
-        &cfg.out_dir.join("metrics.csv"),
-        &["step", "lr", "loss", "grad_norm", "clipped", "eval_loss"],
-    )?;
+    // resume: restore the newest checkpoint before touching the feeds
+    let mut start_step = 0usize;
+    if cfg.resume {
+        if let Some((step, path)) = checkpoint::latest(&cfg.out_dir) {
+            let state = checkpoint::load_state(&path)?;
+            anyhow::ensure!(
+                state.step == step as u64,
+                "checkpoint {} claims step {} but is named step-{step}",
+                path.display(),
+                state.step
+            );
+            backend.import_state(&state)?;
+            start_step = step;
+            info!(
+                "resumed {} from {} (step {start_step})",
+                cfg.tag(),
+                path.display()
+            );
+        }
+    }
+    anyhow::ensure!(
+        start_step <= cfg.steps,
+        "checkpoint is at step {start_step} but the run only has {} steps",
+        cfg.steps
+    );
+
+    let train_feed = make_feed(backend, cfg, 0)?;
+    let eval_feed = make_feed(backend, cfg, 1)?;
+    if start_step > 0 {
+        // replay the deterministic streams to where the saved run was
+        train_feed.skip(start_step);
+        if cfg.eval_every > 0 {
+            // eval_now draws n.max(1) batches per eval event — mirror it
+            eval_feed.skip((start_step / cfg.eval_every) * cfg.eval_batches.max(1));
+        }
+    }
+
+    let metrics_path = cfg.out_dir.join("metrics.csv");
+    let mut csv = if start_step > 0 && metrics_path.exists() {
+        // drop rows the interrupted run wrote past the restored step, so
+        // the continued file has no duplicate/out-of-order step entries
+        drop_rows_from(&metrics_path, start_step)?;
+        CsvWriter::append(&metrics_path)?
+    } else {
+        CsvWriter::create(
+            &metrics_path,
+            &["step", "lr", "loss", "grad_norm", "clipped", "eval_loss"],
+        )?
+    };
     let mut dom_csv: Option<CsvWriter> = None;
 
     let mut timer = Timer::new();
@@ -93,35 +204,39 @@ pub fn run(engine: &Engine, cfg: &RunConfig) -> anyhow::Result<RunResult> {
     let mut last_train = f64::NAN;
     let mut last_eval = f64::NAN;
 
-    let eval_now = |sess: &TrainSession, feed: &Feed, n: usize| -> anyhow::Result<f64> {
+    fn eval_now(
+        backend: &mut dyn TrainBackend,
+        feed: &Feed,
+        n: usize,
+    ) -> anyhow::Result<f64> {
         let mut acc = 0.0;
         for _ in 0..n.max(1) {
             let loss = match feed {
                 Feed::Tokens(l) => {
                     let toks = l.next();
-                    sess.eval(&Batch::Tokens(&toks))?
+                    backend.eval(&Batch::Tokens(&toks))?
                 }
                 Feed::Images(l) => {
                     let (images, labels) = l.next();
-                    sess.eval(&Batch::Images { images: &images, labels: &labels })?
+                    backend.eval(&Batch::Images { images: &images, labels: &labels })?
                 }
             };
             acc += loss as f64;
         }
         Ok(acc / n.max(1) as f64)
-    };
+    }
 
-    for step in 0..cfg.steps {
+    for step in start_step..cfg.steps {
         let lr = lr_at(cfg.schedule, cfg.lr, step, cfg.steps) as f32;
         let metrics = match &train_feed {
             Feed::Tokens(l) => {
                 let toks = timer.time("data", || l.next());
-                timer.time("step", || sess.step(&Batch::Tokens(&toks), lr))?
+                timer.time("step", || backend.step(&Batch::Tokens(&toks), lr))?
             }
             Feed::Images(l) => {
                 let (images, labels) = timer.time("data", || l.next());
                 timer.time("step", || {
-                    sess.step(&Batch::Images { images: &images, labels: &labels }, lr)
+                    backend.step(&Batch::Images { images: &images, labels: &labels }, lr)
                 })?
             }
         };
@@ -133,9 +248,8 @@ pub fn run(engine: &Engine, cfg: &RunConfig) -> anyhow::Result<RunResult> {
 
         let mut eval_loss = f64::NAN;
         if cfg.eval_every > 0 && (step + 1) % cfg.eval_every == 0 {
-            eval_loss = timer.time("eval", || {
-                eval_now(&sess, &eval_feed, cfg.eval_batches)
-            })?;
+            eval_loss = timer
+                .time("eval", || eval_now(&mut *backend, &eval_feed, cfg.eval_batches))?;
             last_eval = eval_loss;
         }
         csv.row(&[
@@ -148,22 +262,32 @@ pub fn run(engine: &Engine, cfg: &RunConfig) -> anyhow::Result<RunResult> {
         ])?;
 
         if cfg.dominance_every > 0 && (step + 1) % cfg.dominance_every == 0 {
-            if let Ok(doms) = sess.dominance() {
+            // best-effort diagnostics: a failed probe must never kill a
+            // training run that is otherwise making progress
+            let doms = backend.dominance().unwrap_or_else(|e| {
+                crate::warnln!("dominance probe failed at step {step}: {e}");
+                Vec::new()
+            });
+            if !doms.is_empty() {
                 let w = match &mut dom_csv {
                     Some(w) => w,
                     None => {
-                        let mut header = vec!["step".to_string()];
-                        for i in 0..doms.len() {
-                            header.push(format!("r_avg_{i}"));
-                            header.push(format!("r_min_{i}"));
-                            header.push(format!("r_max_{i}"));
-                        }
-                        let refs: Vec<&str> =
-                            header.iter().map(String::as_str).collect();
-                        dom_csv = Some(CsvWriter::create(
-                            &cfg.out_dir.join("dominance.csv"),
-                            &refs,
-                        )?);
+                        let path = cfg.out_dir.join("dominance.csv");
+                        let writer = if start_step > 0 && path.exists() {
+                            drop_rows_from(&path, start_step)?;
+                            CsvWriter::append(&path)?
+                        } else {
+                            let mut header = vec!["step".to_string()];
+                            for i in 0..doms.len() {
+                                header.push(format!("r_avg_{i}"));
+                                header.push(format!("r_min_{i}"));
+                                header.push(format!("r_max_{i}"));
+                            }
+                            let refs: Vec<&str> =
+                                header.iter().map(String::as_str).collect();
+                            CsvWriter::create(&path, &refs)?
+                        };
+                        dom_csv = Some(writer);
                         dom_csv.as_mut().unwrap()
                     }
                 };
@@ -176,7 +300,7 @@ pub fn run(engine: &Engine, cfg: &RunConfig) -> anyhow::Result<RunResult> {
         }
 
         if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
-            timer.time("ckpt", || save_checkpoint(engine, &sess, cfg, step + 1))?;
+            timer.time("ckpt", || save_checkpoint(&mut *backend, cfg, step + 1))?;
         }
 
         if step % 25 == 0 || step + 1 == cfg.steps {
@@ -185,15 +309,15 @@ pub fn run(engine: &Engine, cfg: &RunConfig) -> anyhow::Result<RunResult> {
         }
         if step % 50 == 0 || step + 1 == cfg.steps {
             info!(
-                "[{}/{}] {} step {step}/{} loss {:.4} gnorm {:.3} lr {:.2e}",
-                cfg.model, cfg.optimizer, cfg.data.name(), cfg.steps,
+                "[{}/{}/{}] {} step {step}/{} loss {:.4} gnorm {:.3} lr {:.2e}",
+                cfg.model, cfg.optimizer, backend.label(), cfg.data.name(), cfg.steps,
                 metrics.loss, metrics.grad_norm, lr
             );
         }
     }
 
     // final held-out evaluation (always)
-    let final_eval = eval_now(&sess, &eval_feed, cfg.eval_batches.max(4))?;
+    let final_eval = eval_now(backend, &eval_feed, cfg.eval_batches.max(4))?;
     last_eval = final_eval;
     csv.flush()?;
     if let Some(w) = &mut dom_csv {
@@ -207,12 +331,13 @@ pub fn run(engine: &Engine, cfg: &RunConfig) -> anyhow::Result<RunResult> {
     } else {
         tail_losses.iter().sum::<f64>() / tail_losses.len() as f64
     };
+    let steps_run = cfg.steps - start_step;
     let result = RunResult {
         final_train_loss: last_train,
         final_eval_loss: last_eval,
         final_ppl: last_eval.exp(),
-        mean_clip_rate: clip_sum / cfg.steps.max(1) as f64,
-        steps: cfg.steps,
+        mean_clip_rate: clip_sum / steps_run.max(1) as f64,
+        steps: steps_run,
         seconds,
         tail_train_loss: tail,
     };
@@ -221,6 +346,7 @@ pub fn run(engine: &Engine, cfg: &RunConfig) -> anyhow::Result<RunResult> {
         &[
             ("model", json_str(&cfg.model)),
             ("optimizer", json_str(&cfg.optimizer)),
+            ("backend", json_str(backend.label())),
             ("data", json_str(cfg.data.name())),
             ("lr", format!("{}", cfg.lr)),
             ("steps", format!("{}", cfg.steps)),
@@ -234,24 +360,41 @@ pub fn run(engine: &Engine, cfg: &RunConfig) -> anyhow::Result<RunResult> {
     Ok(result)
 }
 
+/// Rewrite a step-keyed CSV keeping the header and only the *complete*
+/// rows whose leading `step` column is below `start_step` — an
+/// interrupted run may have flushed rows past the checkpoint a resume
+/// restores from, and its final row may have died mid-flush.
+fn drop_rows_from(path: &Path, start_step: usize) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let columns = text.lines().next().map_or(0, |h| h.split(',').count());
+    let mut kept = String::new();
+    for (i, line) in text.lines().enumerate() {
+        let keep = i == 0
+            || (line.split(',').count() == columns
+                && line
+                    .split(',')
+                    .next()
+                    .and_then(|s| s.parse::<f64>().ok())
+                    .is_some_and(|step| step < start_step as f64));
+        if keep {
+            kept.push_str(line);
+            kept.push('\n');
+        }
+    }
+    std::fs::write(path, kept)?;
+    Ok(())
+}
+
 fn save_checkpoint(
-    engine: &Engine,
-    sess: &TrainSession,
+    backend: &mut dyn TrainBackend,
     cfg: &RunConfig,
     step: usize,
 ) -> anyhow::Result<()> {
-    let entry = engine.manifest.opt_entry(&cfg.model, &cfg.optimizer)?;
-    let state = sess.download_state()?;
-    let buffers: Vec<NamedBuffer> = entry
-        .state_names
-        .iter()
-        .zip(state)
-        .map(|(name, data)| NamedBuffer { name: name.clone(), data })
-        .collect();
-    checkpoint::save(
-        &cfg.out_dir.join(format!("step-{step}.ckpt")),
-        &buffers,
-    )
+    let mut state = backend.export_state()?;
+    // a backend reports steps across restores; the file is named by the
+    // absolute step
+    state.step = step as u64;
+    checkpoint::save_state(&cfg.out_dir.join(format!("step-{step}.ckpt")), &state)
 }
 
 /// Evaluate perplexity of a run result against a directory path (helper

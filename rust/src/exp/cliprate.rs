@@ -16,13 +16,17 @@ use crate::util::moving_average;
 /// Clip-rate summary for one run.
 #[derive(Clone, Debug)]
 pub struct ClipSummary {
+    /// Run label (directory-derived).
     pub label: String,
+    /// Number of logged steps.
     pub steps: usize,
+    /// Mean clip indicator over the whole run.
     pub mean_rate: f64,
     /// first step where the 50-step rolling mean falls below 0.5
     /// (usize::MAX if it never does — "clipped throughout", like AdamW on
     /// GPT-2 XLarge in Figure 31)
     pub release_step: usize,
+    /// Final smoothed clip rate.
     pub final_rate: f64,
 }
 

@@ -19,8 +19,11 @@ use crate::info;
 /// One model's dominance summary.
 #[derive(Clone, Debug)]
 pub struct DominanceRun {
+    /// Model tag the run trained.
     pub model: String,
+    /// Optimizer whose momenta were probed.
     pub optimizer: String,
+    /// Globally averaged dominance statistics per logged step.
     pub global: DominanceSeries,
     /// three representative per-parameter series (first/middle/last matrix)
     pub representative: Vec<(usize, DominanceSeries)>,
@@ -39,7 +42,7 @@ pub fn run_one(
     let cfg = RunConfig {
         model: model.to_string(),
         optimizer: optimizer.to_string(),
-        lr: default_lr(optimizer),
+        lr: default_lr(optimizer)?,
         schedule: Schedule::CosineWarmup { warmup_frac: 0.1, min_ratio: 0.1 },
         steps: opts.steps,
         seed: opts.seed,
@@ -50,9 +53,16 @@ pub fn run_one(
         checkpoint_every: 0,
         out_dir: out_dir.clone(),
         artifacts: opts.artifacts.clone(),
-        threads: 0,
+        backend: crate::config::BackendKind::Pjrt,
+        ..RunConfig::default()
     };
-    train::run(engine, &cfg)?;
+    let mut sess = crate::runtime::TrainSession::new(
+        engine,
+        &cfg.model,
+        &cfg.optimizer,
+        cfg.seed as i32,
+    )?;
+    train::run(&mut sess, &cfg)?;
     let csv = out_dir.join("dominance.csv");
     let global = global_series(&csv)?;
     let k = global.n_params;

@@ -3,47 +3,51 @@
 //! | harness | regenerates |
 //! |---|---|
 //! | [`precond`] | Fig 1, Table 2, Table 3 (preconditioner wall-clock + memory) |
-//! | `pretrain` | Fig 6, Tables 17/18/19 (+ curves Figs 14–24) |
-//! | `sweeps` | Tables 9–13 (LR grids, incl. Shampoo/SOAP), 20, 21 |
+//! | [`pretrain`] | Fig 6, Tables 17/18/19 (+ curves Figs 14–24) |
+//! | [`sweeps`] | Tables 9–13 (LR grids, incl. Shampoo/SOAP), 20, 21 |
 //! | `dominance_exp` | Figs 4/5/7–10, 26, 28 (diagonal dominance) |
-//! | `pretrain::extended` | Table 14 (2× budget) |
-//! | `pretrain::embed_ablation` | Tables 15/16 |
-//! | `pretrain::ssm` / `pretrain::vision` | Figs 25/27, Tables 20/21 |
+//! | [`pretrain::extended`] | Table 14 (2× budget) |
+//! | [`pretrain::embed_ablation`] | Tables 15/16 |
+//! | [`pretrain::ssm`] / [`pretrain::vision`] | Figs 25/27, Tables 20/21 |
 //! | [`cliprate`] | Figs 29–32 (gradient clip-rate trajectories) |
 //!
-//! The training-loop harnesses (`pretrain`, `sweeps`, `dominance_exp`)
-//! require the PJRT artifacts and are gated behind the `pjrt` feature;
+//! The training-loop harnesses (`pretrain`, `sweeps`) run on any
+//! [`TrainBackend`](crate::runtime::TrainBackend) — offline on the
+//! native backend by default, on PJRT artifacts when built with the
+//! `pjrt` feature and `--backend pjrt`. Only `dominance_exp` (which
+//! probes device state directly) still requires the PJRT engine;
 //! `precond` additionally has a native kernel-layer path that runs in
 //! every build.
-
-// The crate-level `missing_docs` warning is enforced for tensor/ and
-// optim/; this module's full docs pass is still pending (ROADMAP.md).
-#![allow(missing_docs)]
 
 pub mod cliprate;
 #[cfg(feature = "pjrt")]
 pub mod dominance_exp;
 pub mod precond;
-#[cfg(feature = "pjrt")]
 pub mod pretrain;
-#[cfg(feature = "pjrt")]
 pub mod sweeps;
 
 use std::path::PathBuf;
 
+use crate::config::BackendKind;
+
 /// Shared experiment options (scaled-budget knobs).
 #[derive(Clone, Debug)]
 pub struct ExpOpts {
+    /// Artifact directory (PJRT backend only).
     pub artifacts: PathBuf,
+    /// Output directory for run metrics and tables.
     pub out: PathBuf,
     /// training steps per run (paper budgets are scaled down; see
     /// EXPERIMENTS.md for the mapping used in the recorded runs)
     pub steps: usize,
+    /// Base RNG seed shared by every run of the experiment.
     pub seed: u64,
     /// sweep/pretrain parallel workers
     pub workers: usize,
     /// restrict to these model scales (empty = harness default)
     pub scales: Vec<String>,
+    /// Which training backend executes the runs.
+    pub backend: BackendKind,
 }
 
 impl Default for ExpOpts {
@@ -55,19 +59,27 @@ impl Default for ExpOpts {
             seed: 1234,
             workers: 2,
             scales: vec![],
+            backend: BackendKind::Native,
         }
     }
 }
 
-/// Default peak matrix LR per optimizer at our scaled model sizes
-/// (selected by the Tables 9–13 sweeps; see EXPERIMENTS.md).
-pub fn default_lr(optimizer: &str) -> f64 {
-    match optimizer {
-        "adamw" => 3e-3,
-        "muon" => 1e-2,
-        "rmnp" => 4e-3,
-        "shampoo" => 1e-2,
-        "soap" => 3e-3,
-        _ => 3e-3,
+/// Default peak matrix LR per optimizer (from the optimizer
+/// [registry](crate::optim::registry), selected by the Tables 9–13
+/// sweeps). Unknown optimizers are an error, not a silent `3e-3`.
+pub fn default_lr(optimizer: &str) -> anyhow::Result<f64> {
+    Ok(crate::optim::registry::spec(optimizer)?.default_lr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_lr_reads_registry_and_rejects_unknowns() {
+        assert_eq!(default_lr("rmnp").unwrap(), 4e-3);
+        assert_eq!(default_lr("muon").unwrap(), 1e-2);
+        assert_eq!(default_lr("shampoo").unwrap(), 1e-2);
+        assert!(default_lr("sgd").is_err(), "no silent fallthrough default");
     }
 }

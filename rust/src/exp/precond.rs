@@ -40,11 +40,18 @@ use crate::runtime::Engine;
 /// One Table 2 row.
 #[derive(Clone, Debug)]
 pub struct PrecondRow {
+    /// GPT-2 config label (Table 4 naming).
     pub model: String,
+    /// Transformer width of the config.
     pub d_model: usize,
+    /// Muon (NS5) preconditioning seconds per 100 steps.
     pub muon_100steps: f64,
+    /// RMNP (row-normalization) seconds per 100 steps.
     pub rmnp_100steps: f64,
+    /// `muon_100steps / rmnp_100steps` — the Table 2 ratio.
     pub speedup: f64,
+    /// Operator buffer footprint (in + out bytes over the model's
+    /// matrices), identical between methods (Table 3).
     pub buffer_bytes: u64,
 }
 
@@ -52,11 +59,17 @@ pub struct PrecondRow {
 /// scalar path vs the tiled/threaded kernel path.
 #[derive(Clone, Debug)]
 pub struct SeedDelta {
+    /// Operator name (`ns5` or `rownorm`).
     pub op: String,
+    /// The d_model whose MLP-up shape was measured.
     pub d_model: usize,
+    /// Operand rows (`4 * d_model`).
     pub rows: usize,
+    /// Operand columns (`d_model`).
     pub cols: usize,
+    /// Median seconds per call on the seed scalar path.
     pub seed_median: f64,
+    /// Median seconds per call on the kernel-layer path.
     pub kernel_median: f64,
     /// `seed_median / kernel_median` — ≥ 2.0 is the acceptance bar at
     /// d_model ≥ 512.
@@ -90,8 +103,11 @@ pub struct SimdDelta {
 /// A GPT-2 config in the native shape registry (Table 4 analogue).
 #[derive(Clone, Copy, Debug)]
 pub struct Gpt2Config {
+    /// Config label (parameter-count naming, e.g. `"60M"`).
     pub name: &'static str,
+    /// Transformer width.
     pub d_model: usize,
+    /// Transformer depth (matrix-shape multiplicity).
     pub layers: usize,
 }
 

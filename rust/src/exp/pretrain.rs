@@ -14,9 +14,13 @@ use crate::info;
 /// Final validation perplexity grid: optimizers x scales.
 #[derive(Clone, Debug)]
 pub struct PplGrid {
+    /// Model family the grid was trained on.
     pub family: String,
+    /// Corpus every cell used.
     pub dataset: DataSpec,
+    /// Model scales (columns).
     pub scales: Vec<String>,
+    /// Optimizer names (rows).
     pub optimizers: Vec<String>,
     /// ppl[opt][scale]
     pub ppl: Vec<Vec<f64>>,
@@ -34,6 +38,7 @@ fn base_config(opts: &ExpOpts, dataset: DataSpec) -> RunConfig {
         dominance_every: 0,
         checkpoint_every: 0,
         artifacts: opts.artifacts.clone(),
+        backend: opts.backend,
         ..RunConfig::default()
     }
 }
@@ -66,10 +71,10 @@ pub fn compare(
             dataset.name(),
             if steps_mult > 1 { "_2x" } else { "" }
         ));
-        let jobs: Vec<SweepJob> = optimizers
-            .iter()
-            .map(|o| SweepJob { optimizer: o.to_string(), lr: default_lr(o) })
-            .collect();
+        let mut jobs = Vec::with_capacity(optimizers.len());
+        for o in optimizers {
+            jobs.push(SweepJob { optimizer: o.to_string(), lr: default_lr(o)? });
+        }
         let cells = run_grid(&cfg, &jobs, opts.workers)?;
         for (oi, cell) in cells.iter().enumerate() {
             grid.ppl[oi][si] = cell.final_ppl;
@@ -143,6 +148,8 @@ pub fn embed_ablation(opts: &ExpOpts) -> anyhow::Result<Vec<(String, f64, f64)>>
     Ok(rows)
 }
 
+/// Tables 15/16 rendering: one row per (model, optimizer) with the ppl
+/// delta of moving embeddings onto the matrix optimizer.
 pub fn format_embed_ablation(rows: &[(String, f64, f64)]) -> String {
     let mut out = String::new();
     let _ = writeln!(

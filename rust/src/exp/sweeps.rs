@@ -5,18 +5,13 @@ use crate::config::{DataSpec, RunConfig, Schedule};
 use crate::coordinator::sweep::{format_table, run_grid, SweepCell, SweepJob};
 use crate::exp::ExpOpts;
 
-/// The per-optimizer LR grids, mirroring the paper's tables at our scale:
-/// Muon/Shampoo sweep a higher range than RMNP/SOAP exactly as in
-/// Tables 9–13.
-pub fn grid_for(optimizer: &str) -> Vec<f64> {
-    match optimizer {
-        "muon" => vec![5e-3, 1e-2, 2e-2, 3e-2],
-        "rmnp" => vec![1e-3, 2e-3, 4e-3, 8e-3],
-        "adamw" => vec![1e-3, 3e-3, 6e-3],
-        "shampoo" => vec![5e-3, 1e-2, 3e-2],
-        "soap" => vec![1e-3, 3e-3, 5e-3],
-        _ => vec![1e-3, 3e-3],
-    }
+/// The per-optimizer LR grid from the optimizer
+/// [registry](crate::optim::registry), mirroring the paper's tables at
+/// our scale: Muon/Shampoo sweep a higher range than RMNP/SOAP exactly
+/// as in Tables 9–13. Unknown optimizers are an error, not a default
+/// grid.
+pub fn grid_for(optimizer: &str) -> anyhow::Result<Vec<f64>> {
+    Ok(crate::optim::registry::spec(optimizer)?.lr_grid.to_vec())
 }
 
 /// Run one sweep table: all grid points for each optimizer on `model`.
@@ -28,7 +23,7 @@ pub fn run(
 ) -> anyhow::Result<Vec<SweepCell>> {
     let mut jobs = Vec::new();
     for opt in optimizers {
-        for lr in grid_for(opt) {
+        for lr in grid_for(opt)? {
             jobs.push(SweepJob { optimizer: opt.to_string(), lr });
         }
     }
@@ -41,12 +36,11 @@ pub fn run(
         data: dataset,
         eval_every: 0,
         eval_batches: 4,
-        dominance_every: 0,
-        checkpoint_every: 0,
         out_dir: opts.out.join(format!("sweep_{model}_{}", dataset.name())),
         artifacts: opts.artifacts.clone(),
         optimizer: String::new(),
-        threads: 0,
+        backend: opts.backend,
+        ..RunConfig::default()
     };
     run_grid(&cfg, &jobs, opts.workers)
 }
@@ -80,11 +74,12 @@ mod tests {
     #[test]
     fn grids_match_paper_shape() {
         // RMNP grids sit below Muon grids (paper Tables 9/10)
-        let muon = grid_for("muon");
-        let rmnp = grid_for("rmnp");
+        let muon = grid_for("muon").unwrap();
+        let rmnp = grid_for("rmnp").unwrap();
         assert!(muon.iter().cloned().fold(f64::MAX, f64::min)
             > rmnp.iter().cloned().fold(f64::MAX, f64::min));
         assert!(muon.len() >= 3 && rmnp.len() >= 3);
+        assert!(grid_for("sgd").is_err(), "unknown optimizers are errors");
     }
 
     #[test]

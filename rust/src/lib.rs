@@ -25,16 +25,19 @@
 //! | [`config`] | TOML-subset parser + typed experiment configuration |
 //! | [`cli`] | hand-rolled argument parser and subcommand dispatch |
 //! | [`data`] | synthetic corpora, tokenizers, batch loader, image data |
-//! | [`optim`] | fused pure-rust optimizers (AdamW/Muon/RMNP/...) |
-//! | [`runtime`] | artifact registry (+ PJRT client under `pjrt`) |
-//! | [`coordinator`] | schedules, metrics, checkpoints (+ train/sweeps under `pjrt`) |
+//! | [`optim`] | fused pure-rust optimizers behind the `MatrixOptimizer` trait |
+//! | [`runtime`] | training backends: native (host matrices + StepPlan) and PJRT |
+//! | [`coordinator`] | training loop, schedules, metrics, checkpoints, sweeps |
 //! | [`analysis`] | dominance ratios, smoothing, paper-style reports |
 //! | [`exp`] | one harness per paper table/figure |
 //! | [`bench`] | micro-benchmark harness + JSON perf reports |
 //!
 //! The XLA/PJRT-backed runtime is behind the `pjrt` cargo feature so the
-//! default build is green offline; the native tensor kernel layer
-//! ([`tensor::kernels`]) covers the Table 2/3 benchmarks either way.
+//! default build is green offline; training itself no longer needs it —
+//! the [`runtime::NativeBackend`] (default `runtime.backend = native`)
+//! computes the scaled-model loss/gradients host-side and steps through
+//! [`optim::StepPlan`], so `rmnp train` and the pretrain/sweep
+//! experiment grids run end to end in every build.
 
 // Every public item needs a doc comment. Fully enforced for the kernel
 // and optimizer layers ([`tensor`], [`optim`]); the other modules carry a

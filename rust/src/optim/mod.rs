@@ -20,16 +20,26 @@
 //! *across parameters* on a persistent worker pool (one task per matrix,
 //! work-stealing in cost order) instead of threading inside each matmul —
 //! see `benches/step_plan.rs` and the `rmnp exp stepplan` CLI surface.
+//!
+//! The three states are unified behind the
+//! [`registry::MatrixOptimizer`] trait (fused `step`, the `rms_scale`
+//! hook, named state export/import for checkpointing), and
+//! [`registry::REGISTRY`] is the single name table — default LRs, sweep
+//! grids, and native-vs-PJRT-only capability all live there, so an
+//! unknown optimizer name is an error everywhere instead of a silent
+//! fallthrough default.
 
 pub mod adamw;
 pub mod lemmas;
 pub mod muon;
 pub mod plan;
+pub mod registry;
 pub mod rmnp;
 
 pub use adamw::AdamWState;
 pub use muon::{newton_schulz5, newton_schulz5_into, newton_schulz5_naive, MuonState};
 pub use plan::{OptKind, OptState, ParamTask, StepPlan};
+pub use registry::{native_kind, spec, MatrixOptimizer, NamedState, OptSpec, REGISTRY};
 pub use rmnp::RmnpState;
 
 /// Muon/RMNP momentum coefficient (paper Appendix B).

@@ -29,6 +29,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+use crate::optim::registry::MatrixOptimizer;
 use crate::optim::{AdamWState, MuonState, RmnpState};
 use crate::tensor::{kernels, Matrix};
 use crate::util::Rng;
@@ -45,14 +46,11 @@ pub enum OptKind {
 }
 
 impl OptKind {
-    /// Parse a CLI/config optimizer name.
+    /// Parse a CLI/config optimizer name through the
+    /// [registry](crate::optim::registry): unknown names and
+    /// PJRT-only optimizers (shampoo/soap) are precise errors.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        Ok(match s {
-            "rmnp" => OptKind::Rmnp,
-            "muon" => OptKind::Muon,
-            "adamw" => OptKind::AdamW,
-            other => anyhow::bail!("unknown optimizer `{other}` (rmnp|muon|adamw)"),
-        })
+        crate::optim::registry::native_kind(s)
     }
 
     /// The CLI/config spelling of this optimizer.
@@ -65,7 +63,9 @@ impl OptKind {
     }
 }
 
-/// Per-parameter optimizer state.
+/// Per-parameter optimizer state. Implements
+/// [`MatrixOptimizer`](crate::optim::registry::MatrixOptimizer) by
+/// delegating to the wrapped fused state.
 #[derive(Clone, Debug)]
 pub enum OptState {
     /// RMNP momentum state.
@@ -74,6 +74,70 @@ pub enum OptState {
     Muon(MuonState),
     /// AdamW moment state.
     AdamW(AdamWState),
+}
+
+impl OptState {
+    /// Freshly initialized state of `kind` for a `rows × cols` parameter.
+    pub fn new(kind: OptKind, rows: usize, cols: usize) -> Self {
+        match kind {
+            OptKind::Rmnp => OptState::Rmnp(RmnpState::new(rows, cols)),
+            OptKind::Muon => OptState::Muon(MuonState::new(rows, cols)),
+            OptKind::AdamW => OptState::AdamW(AdamWState::new(rows * cols)),
+        }
+    }
+
+    /// The matrix momentum, when this state has one (RMNP/Muon); `None`
+    /// for element-wise AdamW. Used by the native backend's dominance
+    /// probe (paper Section 3.2).
+    pub fn momentum(&self) -> Option<&Matrix> {
+        match self {
+            OptState::Rmnp(st) => Some(&st.momentum),
+            OptState::Muon(st) => Some(&st.momentum),
+            OptState::AdamW(_) => None,
+        }
+    }
+
+    /// The wrapped state as a trait object (dispatch helper).
+    fn as_opt(&self) -> &dyn MatrixOptimizer {
+        match self {
+            OptState::Rmnp(st) => st,
+            OptState::Muon(st) => st,
+            OptState::AdamW(st) => st,
+        }
+    }
+
+    /// The wrapped state as a mutable trait object (dispatch helper).
+    fn as_opt_mut(&mut self) -> &mut dyn MatrixOptimizer {
+        match self {
+            OptState::Rmnp(st) => st,
+            OptState::Muon(st) => st,
+            OptState::AdamW(st) => st,
+        }
+    }
+}
+
+impl MatrixOptimizer for OptState {
+    fn kind(&self) -> OptKind {
+        self.as_opt().kind()
+    }
+    fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        self.as_opt_mut().step(w, grad, lr);
+    }
+    fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
+        self.as_opt().rms_scale(rows, cols)
+    }
+    fn state_names(&self) -> Vec<&'static str> {
+        self.as_opt().state_names()
+    }
+    fn export_state(&self) -> Vec<crate::optim::registry::NamedState> {
+        self.as_opt().export_state()
+    }
+    fn import_state(
+        &mut self,
+        state: &[crate::optim::registry::NamedState],
+    ) -> anyhow::Result<()> {
+        self.as_opt_mut().import_state(state)
+    }
 }
 
 /// One parameter's task: weights, gradient buffer, and optimizer state.
@@ -96,21 +160,13 @@ impl ParamTask {
     /// and a zeroed gradient buffer.
     pub fn new(name: &str, w: Matrix, kind: OptKind) -> Self {
         let (r, c) = (w.rows(), w.cols());
-        let state = match kind {
-            OptKind::Rmnp => OptState::Rmnp(RmnpState::new(r, c)),
-            OptKind::Muon => OptState::Muon(MuonState::new(r, c)),
-            OptKind::AdamW => OptState::AdamW(AdamWState::new(r * c)),
-        };
+        let state = OptState::new(kind, r, c);
         ParamTask { name: name.to_string(), grad: Matrix::zeros(r, c), w, state }
     }
 
     /// Which optimizer steps this task.
     pub fn kind(&self) -> OptKind {
-        match self.state {
-            OptState::Rmnp(_) => OptKind::Rmnp,
-            OptState::Muon(_) => OptKind::Muon,
-            OptState::AdamW(_) => OptKind::AdamW,
-        }
+        MatrixOptimizer::kind(&self.state)
     }
 
     /// Scheduling cost: `m×n` elements, scaled by the NS5 Gram depth
@@ -123,13 +179,10 @@ impl ParamTask {
         }
     }
 
-    /// One fused optimizer step on this parameter.
+    /// One fused optimizer step on this parameter (through the
+    /// [`MatrixOptimizer`] trait).
     pub fn step(&mut self, lr: f32) {
-        match &mut self.state {
-            OptState::Rmnp(st) => st.step(&mut self.w, &self.grad, lr),
-            OptState::Muon(st) => st.step(&mut self.w, &self.grad, lr),
-            OptState::AdamW(st) => st.step(self.w.data_mut(), self.grad.data(), lr),
-        }
+        self.state.step(&mut self.w, &self.grad, lr);
     }
 }
 
@@ -338,6 +391,29 @@ impl StepPlan {
             .lock()
             .unwrap_or_else(|e| e.into_inner());
         f(&mut task)
+    }
+
+    /// Run `f` with **every** task locked at once, in scheduling order —
+    /// how a training backend computes a whole-model forward/backward
+    /// (which needs all weights simultaneously) and writes every
+    /// gradient buffer before a round. Workers are parked between
+    /// rounds, so taking all the locks never contends with stepping.
+    pub fn with_all_tasks<R>(
+        &self,
+        f: impl FnOnce(&mut [std::sync::MutexGuard<'_, ParamTask>]) -> R,
+    ) -> R {
+        let mut guards: Vec<std::sync::MutexGuard<'_, ParamTask>> = self
+            .shared
+            .tasks
+            .iter()
+            .map(|t| t.lock().unwrap_or_else(|e| e.into_inner()))
+            .collect();
+        f(&mut guards)
+    }
+
+    /// Index of the task named `name` in scheduling order, if present.
+    pub fn task_index(&self, name: &str) -> Option<usize> {
+        (0..self.len()).find(|&i| self.with_task(i, |t| t.name == name))
     }
 
     /// One sharded step over every parameter.

@@ -1,0 +1,333 @@
+//! The optimizer registry and the [`MatrixOptimizer`] trait.
+//!
+//! Before this module existed, three places each kept their own
+//! per-optimizer `match` on string names — `OptKind::parse`, the
+//! `default_lr` table in `exp/`, and the LR grids in `exp/sweeps` — with
+//! silent fallthrough defaults, and the fused states
+//! ([`RmnpState`]/[`MuonState`]/[`AdamWState`]) exposed three different
+//! `step` signatures and no common checkpointing surface. This module
+//! unifies both:
+//!
+//! * [`MatrixOptimizer`] is the single trait the training backends step
+//!   through: a fused `step`, the `rms_scale` learning-rate shape hook,
+//!   and **named state export/import** whose round-trip is bit-exact
+//!   (the checkpoint contract — see `docs/ARCHITECTURE.md` §Training
+//!   backends).
+//! * [`REGISTRY`] is the one table of optimizer names. Look-ups go
+//!   through [`spec`], which returns an error for unknown names instead
+//!   of a quiet default; `shampoo`/`soap` are registered as PJRT-only
+//!   (no native fused implementation), so the native backend rejects
+//!   them with a precise message rather than an "unknown optimizer".
+
+use crate::optim::plan::OptKind;
+use crate::optim::{rms_scale, AdamWState, MuonState, RmnpState};
+use crate::tensor::Matrix;
+
+/// One named state buffer of an optimizer (or a parameter), the unit of
+/// checkpoint export/import.
+pub type NamedState = (String, Vec<f32>);
+
+/// The common surface of the fused matrix optimizers.
+///
+/// Implementations must keep `export_state` → `import_state` bit-exact:
+/// importing the exported buffers into a freshly constructed state and
+/// stepping must produce exactly the bits an uninterrupted run produces.
+/// Integer counters (AdamW's `t`) travel through their raw `f32` bits.
+pub trait MatrixOptimizer {
+    /// Which registry kind this state implements.
+    fn kind(&self) -> OptKind;
+
+    /// One fused optimizer step on `w` given `grad` at learning rate `lr`.
+    fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32);
+
+    /// The learning-rate shape correction this optimizer applies for a
+    /// `rows × cols` parameter (Eq. 17/18 for the matrix methods; 1.0
+    /// for element-wise AdamW).
+    fn rms_scale(&self, rows: usize, cols: usize) -> f32;
+
+    /// The state buffers this optimizer checkpoints, in a fixed order.
+    fn state_names(&self) -> Vec<&'static str>;
+
+    /// Export every state buffer under its [`state_names`] name.
+    ///
+    /// [`state_names`]: MatrixOptimizer::state_names
+    fn export_state(&self) -> Vec<NamedState>;
+
+    /// Restore from buffers previously produced by
+    /// [`export_state`](MatrixOptimizer::export_state). Every expected
+    /// name must be present with the exact length; unknown names error.
+    fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()>;
+}
+
+fn find<'a>(state: &'a [NamedState], name: &str, len: usize) -> anyhow::Result<&'a [f32]> {
+    let (_, data) = state
+        .iter()
+        .find(|(n, _)| n == name)
+        .ok_or_else(|| anyhow::anyhow!("optimizer state: missing buffer `{name}`"))?;
+    anyhow::ensure!(
+        data.len() == len,
+        "optimizer state: buffer `{name}` has {} elements, expected {len}",
+        data.len()
+    );
+    Ok(data)
+}
+
+/// Enforce the import contract's "unknown names error" half: the caller
+/// must hand over exactly the buffers [`state_names`] lists, no strays.
+///
+/// [`state_names`]: MatrixOptimizer::state_names
+fn expect_exactly(state: &[NamedState], names: &[&str]) -> anyhow::Result<()> {
+    for (n, _) in state {
+        anyhow::ensure!(
+            names.contains(&n.as_str()),
+            "optimizer state: unknown buffer `{n}` (expected one of {names:?})"
+        );
+    }
+    anyhow::ensure!(
+        state.len() == names.len(),
+        "optimizer state: {} buffers provided, expected exactly {:?}",
+        state.len(),
+        names
+    );
+    Ok(())
+}
+
+impl MatrixOptimizer for RmnpState {
+    fn kind(&self) -> OptKind {
+        OptKind::Rmnp
+    }
+    fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        RmnpState::step(self, w, grad, lr);
+    }
+    fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
+        rms_scale(rows, cols)
+    }
+    fn state_names(&self) -> Vec<&'static str> {
+        vec!["momentum"]
+    }
+    fn export_state(&self) -> Vec<NamedState> {
+        vec![("momentum".to_string(), self.momentum.data().to_vec())]
+    }
+    fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
+        expect_exactly(state, &["momentum"])?;
+        let len = self.momentum.data().len();
+        let data = find(state, "momentum", len)?;
+        self.momentum.data_mut().copy_from_slice(data);
+        Ok(())
+    }
+}
+
+impl MatrixOptimizer for MuonState {
+    fn kind(&self) -> OptKind {
+        OptKind::Muon
+    }
+    fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        MuonState::step(self, w, grad, lr);
+    }
+    fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
+        rms_scale(rows, cols)
+    }
+    fn state_names(&self) -> Vec<&'static str> {
+        vec!["momentum"]
+    }
+    fn export_state(&self) -> Vec<NamedState> {
+        // the NS5 workspace is scratch, not state: it never affects bits
+        vec![("momentum".to_string(), self.momentum.data().to_vec())]
+    }
+    fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
+        expect_exactly(state, &["momentum"])?;
+        let len = self.momentum.data().len();
+        let data = find(state, "momentum", len)?;
+        self.momentum.data_mut().copy_from_slice(data);
+        Ok(())
+    }
+}
+
+impl MatrixOptimizer for AdamWState {
+    fn kind(&self) -> OptKind {
+        OptKind::AdamW
+    }
+    fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        AdamWState::step(self, w.data_mut(), grad.data(), lr);
+    }
+    fn rms_scale(&self, _rows: usize, _cols: usize) -> f32 {
+        1.0
+    }
+    fn state_names(&self) -> Vec<&'static str> {
+        vec!["m", "v", "t"]
+    }
+    fn export_state(&self) -> Vec<NamedState> {
+        vec![
+            ("m".to_string(), self.m.clone()),
+            ("v".to_string(), self.v.clone()),
+            // the step counter travels through its raw bits, like the
+            // checkpoint store's device-side "t" — round-trips are exact
+            ("t".to_string(), vec![f32::from_bits(self.t)]),
+        ]
+    }
+    fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
+        expect_exactly(state, &["m", "v", "t"])?;
+        let m = find(state, "m", self.m.len())?.to_vec();
+        let v = find(state, "v", self.v.len())?.to_vec();
+        let t = find(state, "t", 1)?[0].to_bits();
+        self.m = m;
+        self.v = v;
+        self.t = t;
+        Ok(())
+    }
+}
+
+/// One registry entry: the single source of truth for an optimizer name.
+#[derive(Clone, Copy, Debug)]
+pub struct OptSpec {
+    /// The CLI/config spelling.
+    pub name: &'static str,
+    /// The native fused implementation, when one exists. `None` marks a
+    /// PJRT-artifact-only optimizer (Shampoo/SOAP baselines).
+    pub native: Option<OptKind>,
+    /// Default peak matrix LR at our scaled model sizes (selected by the
+    /// Tables 9–13 sweeps; see EXPERIMENTS.md).
+    pub default_lr: f64,
+    /// The per-optimizer LR sweep grid, mirroring the paper's tables at
+    /// our scale: Muon/Shampoo sweep a higher range than RMNP/SOAP
+    /// exactly as in Tables 9–13.
+    pub lr_grid: &'static [f64],
+}
+
+/// Every optimizer the repo knows, native or PJRT-only.
+pub const REGISTRY: &[OptSpec] = &[
+    OptSpec {
+        name: "rmnp",
+        native: Some(OptKind::Rmnp),
+        default_lr: 4e-3,
+        lr_grid: &[1e-3, 2e-3, 4e-3, 8e-3],
+    },
+    OptSpec {
+        name: "muon",
+        native: Some(OptKind::Muon),
+        default_lr: 1e-2,
+        lr_grid: &[5e-3, 1e-2, 2e-2, 3e-2],
+    },
+    OptSpec {
+        name: "adamw",
+        native: Some(OptKind::AdamW),
+        default_lr: 3e-3,
+        lr_grid: &[1e-3, 3e-3, 6e-3],
+    },
+    OptSpec {
+        name: "shampoo",
+        native: None,
+        default_lr: 1e-2,
+        lr_grid: &[5e-3, 1e-2, 3e-2],
+    },
+    OptSpec {
+        name: "soap",
+        native: None,
+        default_lr: 3e-3,
+        lr_grid: &[1e-3, 3e-3, 5e-3],
+    },
+];
+
+/// Look up an optimizer by name. Unknown names are an **error**, never a
+/// silent default.
+pub fn spec(name: &str) -> anyhow::Result<&'static OptSpec> {
+    REGISTRY.iter().find(|s| s.name == name).ok_or_else(|| {
+        let known: Vec<&str> = REGISTRY.iter().map(|s| s.name).collect();
+        anyhow::anyhow!("unknown optimizer `{name}` (known: {})", known.join("|"))
+    })
+}
+
+/// Look up the native fused kind for an optimizer name; PJRT-only
+/// optimizers get a targeted error.
+pub fn native_kind(name: &str) -> anyhow::Result<OptKind> {
+    spec(name)?.native.ok_or_else(|| {
+        anyhow::anyhow!(
+            "optimizer `{name}` has no native fused implementation \
+             (PJRT-artifact-only); use runtime.backend = \"pjrt\""
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::plan::OptState;
+    use crate::util::Rng;
+
+    #[test]
+    fn registry_rejects_unknown_names() {
+        assert!(spec("sgd").is_err());
+        assert!(native_kind("sgd").is_err());
+        let err = native_kind("shampoo").unwrap_err().to_string();
+        assert!(err.contains("no native fused implementation"), "{err}");
+    }
+
+    #[test]
+    fn registry_matches_legacy_tables() {
+        // the values the old exp/ string matches carried
+        assert_eq!(spec("rmnp").unwrap().default_lr, 4e-3);
+        assert_eq!(spec("muon").unwrap().default_lr, 1e-2);
+        assert_eq!(spec("adamw").unwrap().default_lr, 3e-3);
+        assert_eq!(spec("shampoo").unwrap().default_lr, 1e-2);
+        assert_eq!(spec("soap").unwrap().default_lr, 3e-3);
+        assert_eq!(spec("muon").unwrap().lr_grid.len(), 4);
+        // every native name parses to its kind and back
+        for s in REGISTRY {
+            if let Some(kind) = s.native {
+                assert_eq!(kind.name(), s.name);
+                assert_eq!(OptKind::parse(s.name).unwrap(), kind);
+            }
+        }
+    }
+
+    #[test]
+    fn export_import_roundtrip_is_bit_exact() {
+        let mut rng = Rng::new(17);
+        for kind in [OptKind::Rmnp, OptKind::Muon, OptKind::AdamW] {
+            // evolve a state, export it, import into a fresh state, and
+            // step both — the continued bits must be identical
+            let mut w_a = Matrix::randn(6, 10, 0.5, &mut rng);
+            let mut w_b = w_a.clone();
+            let mut st_a = OptState::new(kind, 6, 10);
+            for s in 0..3u64 {
+                let mut g = Matrix::zeros(6, 10);
+                Rng::new(100 + s).fill_normal(g.data_mut(), 1.0);
+                st_a.step(&mut w_a, &g, 0.02);
+            }
+            let exported = st_a.export_state();
+            let mut st_b = OptState::new(kind, 6, 10);
+            st_b.import_state(&exported).unwrap();
+            w_b.data_mut().copy_from_slice(w_a.data());
+            let mut g = Matrix::zeros(6, 10);
+            Rng::new(999).fill_normal(g.data_mut(), 1.0);
+            st_a.step(&mut w_a, &g, 0.02);
+            st_b.step(&mut w_b, &g, 0.02);
+            assert_eq!(w_a.data(), w_b.data(), "{kind:?} diverged after import");
+            assert_eq!(st_a.export_state(), st_b.export_state(), "{kind:?} state");
+        }
+    }
+
+    #[test]
+    fn import_rejects_bad_shapes_and_missing_buffers() {
+        let mut st = OptState::new(OptKind::Rmnp, 4, 4);
+        assert!(st.import_state(&[]).is_err());
+        let wrong = vec![("momentum".to_string(), vec![0.0; 3])];
+        assert!(st.import_state(&wrong).is_err());
+        let mut ad = OptState::new(OptKind::AdamW, 2, 2);
+        let partial = vec![("m".to_string(), vec![0.0; 4])];
+        assert!(ad.import_state(&partial).is_err());
+        // stray buffers are rejected even when every expected one is there
+        let mut stray = st.export_state();
+        stray.push(("junk".to_string(), vec![0.0; 16]));
+        let err = st.import_state(&stray).unwrap_err().to_string();
+        assert!(err.contains("unknown buffer"), "{err}");
+    }
+
+    #[test]
+    fn rms_scale_hook_matches_kind() {
+        let r = OptState::new(OptKind::Rmnp, 32, 8);
+        let a = OptState::new(OptKind::AdamW, 32, 8);
+        assert_eq!(r.rms_scale(32, 8), 2.0);
+        assert_eq!(a.rms_scale(32, 8), 1.0);
+    }
+}

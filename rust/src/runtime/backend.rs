@@ -1,0 +1,127 @@
+//! The training-backend abstraction.
+//!
+//! [`TrainBackend`] is the seam between the training loop
+//! (`coordinator::train`) and whatever executes the model: the loop
+//! feeds batches and learning rates in, gets scalar metrics and named
+//! state out, and never touches an engine, a device buffer, or a host
+//! matrix directly. Two implementations exist:
+//!
+//! * [`NativeBackend`](crate::runtime::native::NativeBackend) — always
+//!   available. Holds the parameters as host
+//!   [`Matrix`](crate::tensor::Matrix)es, computes the scaled-model
+//!   loss/gradients on the CPU kernel layer, and steps them through
+//!   [`StepPlan`](crate::optim::StepPlan) so multi-parameter sharding
+//!   drives a real training trajectory. This is the default
+//!   (`runtime.backend = "native"`).
+//! * `TrainSession` (`runtime/session.rs`) — the PJRT artifact path,
+//!   gated behind the `pjrt` cargo feature (`runtime.backend = "pjrt"`).
+//!
+//! The checkpoint contract: [`TrainBackend::export_state`] returns a
+//! [`TrainState`] whose named buffers round-trip **bit-exactly** through
+//! [`TrainBackend::import_state`] — a run stepped to N, saved, restored,
+//! and continued produces exactly the bits of an uninterrupted run, for
+//! any `perf.plan_threads` (held by `tests/native_train.rs`).
+
+/// Scalar metrics from one training step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetrics {
+    /// Mean training loss of the batch.
+    pub loss: f32,
+    /// Global gradient norm before clipping.
+    pub grad_norm: f32,
+    /// 1.0 when global-norm clipping engaged this step.
+    pub clipped: f32,
+}
+
+/// Batch input: either tokens (LM) or images+labels (vision).
+pub enum Batch<'a> {
+    /// Row-major `rows × cols` token ids.
+    Tokens(&'a [i32]),
+    /// Flattened image pixels plus one label per image.
+    Images {
+        /// `batch × hw × hw` pixels, row-major.
+        images: &'a [f32],
+        /// One class label per image.
+        labels: &'a [i32],
+    },
+}
+
+/// The batch geometry a backend consumes — what the data feed needs to
+/// know to assemble inputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchShape {
+    /// LM token batches: `rows` sequences of `cols` tokens each.
+    Tokens {
+        /// Sequences per batch.
+        rows: usize,
+        /// Tokens per sequence (context + 1 target).
+        cols: usize,
+    },
+    /// Vision batches: `batch` square images plus labels.
+    Images {
+        /// Images per batch.
+        batch: usize,
+        /// Image side length (images are `hw × hw`).
+        hw: usize,
+        /// Total pixels per batch (`batch × hw × hw`).
+        pixels: usize,
+    },
+}
+
+/// One named state buffer (a parameter or an optimizer moment), the unit
+/// of checkpoint I/O. Defined here — at the backend layer — so both the
+/// checkpoint store (`coordinator::checkpoint`) and the backends speak
+/// the same type.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NamedBuffer {
+    /// Stable buffer name (e.g. `"embed"` or `"h1.mlp.momentum"`).
+    pub name: String,
+    /// Raw f32 payload; integer counters travel through their bits.
+    pub data: Vec<f32>,
+}
+
+/// Everything a backend checkpoints: the step counter, the parameters,
+/// and the optimizer state, all as named buffers.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    /// Training steps taken when the state was exported.
+    pub step: u64,
+    /// Model parameters, in a backend-stable order.
+    pub params: Vec<NamedBuffer>,
+    /// Optimizer state buffers (momenta, moments, counters).
+    pub opt: Vec<NamedBuffer>,
+}
+
+/// A live training run, independent of what executes it.
+///
+/// Object-safe on purpose: the coordinator drives `&mut dyn
+/// TrainBackend` so native and PJRT runs share one loop.
+pub trait TrainBackend {
+    /// Human-readable backend label for logs (`"native"` / `"pjrt"`).
+    fn label(&self) -> &'static str;
+
+    /// The batch geometry this backend consumes.
+    fn batch_shape(&self) -> BatchShape;
+
+    /// One fused train step: forward, backward, clip, optimizer update.
+    fn step(&mut self, batch: &Batch, lr: f32) -> anyhow::Result<StepMetrics>;
+
+    /// Held-out loss on one batch (parameters untouched).
+    fn eval(&mut self, batch: &Batch) -> anyhow::Result<f32>;
+
+    /// Dominance ratios (r_avg, r_min, r_max) per matrix momentum (paper
+    /// Section 3.2). Backends without matrix momenta return an empty vec.
+    fn dominance(&mut self) -> anyhow::Result<Vec<(f32, f32, f32)>>;
+
+    /// Export the full training state for checkpointing.
+    fn export_state(&mut self) -> anyhow::Result<TrainState>;
+
+    /// Restore a state previously produced by
+    /// [`export_state`](TrainBackend::export_state). Bit-exact: stepping
+    /// after an import must reproduce an uninterrupted run.
+    fn import_state(&mut self, state: &TrainState) -> anyhow::Result<()>;
+
+    /// Training steps taken so far (restored by
+    /// [`import_state`](TrainBackend::import_state)).
+    fn steps_taken(&self) -> usize;
+}

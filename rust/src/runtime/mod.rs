@@ -13,12 +13,19 @@
 //! The manifest is pure JSON and always available (`rmnp info` works in
 //! every build); the engine/session pieces need the XLA bindings and are
 //! gated behind the `pjrt` feature.
+//!
+//! Training is abstracted over [`backend::TrainBackend`]: the always-on
+//! [`native::NativeBackend`] (host matrices + `StepPlan`, the default)
+//! and the PJRT `TrainSession` (behind `pjrt`) implement the same trait,
+//! so `coordinator::train` runs whole pretrain/sweep workloads offline.
 
 // The crate-level `missing_docs` warning is enforced for tensor/ and
 // optim/; this module's full docs pass is still pending (ROADMAP.md).
 #![allow(missing_docs)]
 
+pub mod backend;
 pub mod manifest;
+pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod session;
 
@@ -31,9 +38,11 @@ use std::path::Path;
 #[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
+pub use backend::{Batch, BatchShape, NamedBuffer, StepMetrics, TrainBackend, TrainState};
 pub use manifest::{Dtype, GraphSpec, Manifest, TensorSpec};
+pub use native::{native_model, NativeBackend, NativeModelSpec};
 #[cfg(feature = "pjrt")]
-pub use session::{StepMetrics, TrainSession};
+pub use session::TrainSession;
 
 /// PJRT client + compiled-executable cache over one artifact directory.
 #[cfg(feature = "pjrt")]

@@ -15,28 +15,20 @@
 
 use std::rc::Rc;
 
+use crate::runtime::backend::{BatchShape, NamedBuffer, TrainBackend, TrainState};
 use crate::runtime::{Engine, TensorSpec};
 
-/// Scalar metrics from one training step.
-#[derive(Clone, Copy, Debug)]
-pub struct StepMetrics {
-    pub loss: f32,
-    pub grad_norm: f32,
-    /// 1.0 when global-norm clipping engaged this step.
-    pub clipped: f32,
-}
-
-/// Batch input: either tokens (LM) or images+labels (vision).
-pub enum Batch<'a> {
-    Tokens(&'a [i32]),
-    Images { images: &'a [f32], labels: &'a [i32] },
-}
+// `Batch` and `StepMetrics` moved to the always-available backend layer;
+// re-exported here so existing `runtime::session::{Batch, ...}` paths keep
+// working.
+pub use crate::runtime::backend::{Batch, StepMetrics};
 
 /// A live training run over one (model, optimizer) artifact set.
 pub struct TrainSession<'e> {
     engine: &'e Engine,
     pub model: String,
     pub optimizer: String,
+    family: String,
     state: Vec<xla::PjRtBuffer>,
     train_exe: Rc<xla::PjRtLoadedExecutable>,
     eval_exe: Rc<xla::PjRtLoadedExecutable>,
@@ -80,6 +72,7 @@ impl<'e> TrainSession<'e> {
             engine,
             model: model.to_string(),
             optimizer: optimizer.to_string(),
+            family: model_entry.family.clone(),
             state,
             train_exe,
             eval_exe,
@@ -197,6 +190,82 @@ impl<'e> TrainSession<'e> {
     }
     pub fn n_state(&self) -> usize {
         self.n_state
+    }
+}
+
+impl TrainBackend for TrainSession<'_> {
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn batch_shape(&self) -> BatchShape {
+        if self.family == "vision" {
+            let ispec = &self.batch_specs[0];
+            BatchShape::Images {
+                batch: ispec.shape[0],
+                hw: *ispec.shape.last().unwrap_or(&0),
+                pixels: ispec.elements(),
+            }
+        } else {
+            // rows × cols must multiply to the spec's element count even
+            // for rank-1 specs (a flat batch*seq buffer is 1 × N)
+            let spec = &self.batch_specs[0];
+            let rows = if spec.shape.len() >= 2 { spec.shape[0].max(1) } else { 1 };
+            BatchShape::Tokens { rows, cols: spec.elements() / rows }
+        }
+    }
+
+    fn step(&mut self, batch: &Batch, lr: f32) -> anyhow::Result<StepMetrics> {
+        TrainSession::step(self, batch, lr)
+    }
+
+    fn eval(&mut self, batch: &Batch) -> anyhow::Result<f32> {
+        TrainSession::eval(self, batch)
+    }
+
+    fn dominance(&mut self) -> anyhow::Result<Vec<(f32, f32, f32)>> {
+        if self.dom_exe.is_none() {
+            return Ok(Vec::new());
+        }
+        TrainSession::dominance(self)
+    }
+
+    fn export_state(&mut self) -> anyhow::Result<TrainState> {
+        let entry = self
+            .engine
+            .manifest
+            .opt_entry(&self.model, &self.optimizer)?
+            .clone();
+        let data = self.download_state()?;
+        anyhow::ensure!(
+            data.len() == entry.state_names.len(),
+            "session has {} buffers, manifest names {}",
+            data.len(),
+            entry.state_names.len()
+        );
+        let mut params = Vec::new();
+        let mut opt = Vec::new();
+        for (i, (name, data)) in entry.state_names.iter().zip(data).enumerate() {
+            let buf = NamedBuffer { name: name.clone(), data };
+            if i < self.n_params {
+                params.push(buf);
+            } else {
+                opt.push(buf);
+            }
+        }
+        Ok(TrainState { step: self.steps_taken as u64, params, opt })
+    }
+
+    fn import_state(&mut self, _state: &TrainState) -> anyhow::Result<()> {
+        anyhow::bail!(
+            "the PJRT session cannot restore checkpoints yet (uploading \
+             arbitrary-shaped state buffers needs real XLA bindings); use \
+             runtime.backend = \"native\" for resumable runs"
+        )
+    }
+
+    fn steps_taken(&self) -> usize {
+        self.steps_taken
     }
 }
 

@@ -6,7 +6,7 @@
 use std::path::Path;
 use std::sync::Mutex;
 
-use rmnp::config::DataSpec;
+use rmnp::config::{BackendKind, DataSpec};
 use rmnp::exp::{cliprate, dominance_exp, precond, pretrain, sweeps, ExpOpts};
 use rmnp::runtime::Engine;
 
@@ -19,7 +19,13 @@ fn opts(name: &str, steps: usize) -> Option<ExpOpts> {
     }
     let out = std::env::temp_dir().join(format!("rmnp-exp-{}-{name}", std::process::id()));
     let _ = std::fs::remove_dir_all(&out);
-    Some(ExpOpts { steps, out, workers: 1, ..Default::default() })
+    Some(ExpOpts {
+        steps,
+        out,
+        workers: 1,
+        backend: BackendKind::Pjrt,
+        ..Default::default()
+    })
 }
 
 #[test]
@@ -61,7 +67,7 @@ fn sweep_grid_runs_and_orders() {
     let Some(mut o) = opts("sweep", 10) else { return };
     o.workers = 2; // exercise the multi-worker path
     let cells = sweeps::run(&o, "gpt2_tiny", &["rmnp"], DataSpec::Markov).unwrap();
-    assert_eq!(cells.len(), sweeps::grid_for("rmnp").len());
+    assert_eq!(cells.len(), sweeps::grid_for("rmnp").unwrap().len());
     let w = sweeps::winners(&cells);
     assert_eq!(w.len(), 1);
     assert!(cells.iter().any(|c| (c.final_ppl - w[0].2).abs() < 1e-9));

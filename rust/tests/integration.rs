@@ -47,19 +47,25 @@ fn quick_cfg(engine_model: &str, optimizer: &str, steps: usize, name: &str) -> R
         data: DataSpec::Markov,
         eval_every: steps / 2,
         eval_batches: 2,
-        dominance_every: 0,
-        checkpoint_every: 0,
         out_dir: tmp_out(name),
         artifacts: "artifacts".into(),
-        threads: 0,
+        backend: rmnp::config::BackendKind::Pjrt,
+        ..RunConfig::default()
     }
+}
+
+/// Drive one run through the shared engine (the trait-based loop).
+fn run_with(engine: &Engine, cfg: &RunConfig) -> anyhow::Result<train::RunResult> {
+    let mut sess =
+        TrainSession::new(engine, &cfg.model, &cfg.optimizer, cfg.seed as i32)?;
+    train::run(&mut sess, cfg)
 }
 
 #[test]
 fn full_training_run_writes_metrics_and_learns() {
     with_engine(|engine| {
         let cfg = quick_cfg("gpt2_tiny", "rmnp", 40, "learn");
-        let result = train::run(engine, &cfg).expect("run");
+        let result = run_with(engine, &cfg).expect("run");
         assert!(result.final_train_loss < 6.0, "{result:?}");
         assert!(result.final_ppl.is_finite() && result.final_ppl > 1.0);
         let csv = CsvData::read(&cfg.out_dir.join("metrics.csv")).unwrap();
@@ -82,7 +88,7 @@ fn every_optimizer_trains_gpt2_tiny() {
                 "adamw" | "soap" => 3e-3,
                 _ => 4e-3,
             };
-            let result = train::run(engine, &cfg)
+            let result = run_with(engine, &cfg)
                 .unwrap_or_else(|e| panic!("{optimizer}: {e}"));
             assert!(
                 result.final_train_loss.is_finite(),
@@ -103,7 +109,7 @@ fn every_model_family_trains_one_step() {
             let mut cfg = quick_cfg(model, "rmnp", 3, model);
             cfg.data = data;
             cfg.eval_every = 0;
-            let result = train::run(engine, &cfg)
+            let result = run_with(engine, &cfg)
                 .unwrap_or_else(|e| panic!("{model}: {e}"));
             assert!(result.final_train_loss.is_finite(), "{model}");
         }
@@ -239,7 +245,7 @@ fn checkpoint_roundtrip_through_session() {
     with_engine(|engine| {
         let mut cfg = quick_cfg("gpt2_tiny", "rmnp", 6, "ckpt");
         cfg.checkpoint_every = 3;
-        train::run(engine, &cfg).unwrap();
+        run_with(engine, &cfg).unwrap();
         let (step, path) = checkpoint::latest(&cfg.out_dir).expect("checkpoint written");
         assert_eq!(step, 6);
         let buffers = checkpoint::load(&path).unwrap();
@@ -255,7 +261,7 @@ fn checkpoint_roundtrip_through_session() {
 fn eval_uses_heldout_split() {
     with_engine(|engine| {
         let cfg = quick_cfg("gpt2_tiny", "rmnp", 30, "heldout");
-        let result = train::run(engine, &cfg).unwrap();
+        let result = run_with(engine, &cfg).unwrap();
         // held-out loss should track train loss at this scale but not be
         // wildly lower (that would indicate a split leak)
         assert!(result.final_eval_loss > result.tail_train_loss - 0.5);
@@ -323,7 +329,7 @@ fn deterministic_runs_same_seed() {
     with_engine(|engine| {
         let run = |name: &str| {
             let cfg = quick_cfg("gpt2_tiny", "rmnp", 10, name);
-            train::run(engine, &cfg).unwrap().final_train_loss
+            run_with(engine, &cfg).unwrap().final_train_loss
         };
         assert_eq!(run("det-a"), run("det-b"));
     });

@@ -1,0 +1,228 @@
+//! End-to-end tests of the native training backend — the offline
+//! pretrain path through `StepPlan`, run with **default features** (no
+//! artifacts, no XLA).
+//!
+//! The heart of the suite is the resume contract: a run stepped to N,
+//! checkpointed, restored, and continued must be **bit-identical** to an
+//! uninterrupted run — parameters and optimizer state both, for every
+//! native optimizer, across `perf.plan_threads ∈ {1, 4}`. Checkpoints
+//! are compared as raw bytes, the strongest form of the assertion.
+
+use std::path::PathBuf;
+
+use rmnp::config::{DataSpec, RunConfig, Schedule};
+use rmnp::coordinator::{checkpoint, train};
+use rmnp::coordinator::metrics::CsvData;
+use rmnp::exp::{pretrain, sweeps, ExpOpts};
+
+fn tmp_out(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "rmnp-native-{}-{name}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cfg(optimizer: &str, steps: usize, plan_threads: usize, name: &str) -> RunConfig {
+    RunConfig {
+        model: "gpt2_tiny".into(),
+        optimizer: optimizer.into(),
+        lr: 4e-3,
+        schedule: Schedule::CosineWarmup { warmup_frac: 0.1, min_ratio: 0.1 },
+        steps,
+        seed: 11,
+        data: DataSpec::Markov,
+        eval_every: (steps / 2).max(1),
+        eval_batches: 2,
+        plan_threads,
+        out_dir: tmp_out(name),
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn native_pretrain_learns_and_writes_metrics() {
+    let cfg = cfg("rmnp", 40, 2, "learn");
+    let result = train::run_auto(&cfg).expect("native run");
+    assert!(result.final_train_loss.is_finite());
+    assert!(result.final_ppl.is_finite() && result.final_ppl > 1.0);
+    let csv = CsvData::read(&cfg.out_dir.join("metrics.csv")).unwrap();
+    assert_eq!(csv.rows.len(), 40);
+    let losses = csv.column("loss").unwrap();
+    assert!(
+        losses.last().unwrap() < &losses[0],
+        "no learning: {} -> {}",
+        losses[0],
+        losses.last().unwrap()
+    );
+    let ppl = train::read_final_ppl(&cfg.out_dir).unwrap();
+    assert!((ppl - result.final_ppl).abs() < 1e-2);
+}
+
+/// The acceptance-criteria centerpiece: save/restore/continue is
+/// bit-exact vs an uninterrupted run for rmnp, muon, and adamw, across
+/// plan_threads ∈ {1, 4}. Compares the final checkpoints byte-for-byte.
+#[test]
+fn checkpoint_resume_is_bit_exact_across_optimizers_and_threads() {
+    const STEPS: usize = 10;
+    const HALF: usize = 5;
+    for optimizer in ["rmnp", "muon", "adamw"] {
+        // reference checkpoint bytes, computed once per optimizer with
+        // plan_threads = 1
+        let mut reference: Option<Vec<u8>> = None;
+        for plan_threads in [1usize, 4] {
+            let tag = format!("{optimizer}-t{plan_threads}");
+            // (a) uninterrupted: 10 steps, checkpoint every 5
+            let mut full = cfg(optimizer, STEPS, plan_threads, &format!("full-{tag}"));
+            full.checkpoint_every = HALF;
+            train::run_auto(&full).unwrap();
+            let full_end = std::fs::read(full.out_dir.join("step-10.ckpt")).unwrap();
+
+            // (b) "interrupted" run: the same job restarted from the
+            // mid-run checkpoint in a fresh directory (as if the process
+            // had died at step 5) and continued to 10
+            let mut cont = cfg(optimizer, STEPS, plan_threads, &format!("cont-{tag}"));
+            cont.checkpoint_every = HALF;
+            cont.resume = true;
+            std::fs::create_dir_all(&cont.out_dir).unwrap();
+            std::fs::copy(
+                full.out_dir.join("step-5.ckpt"),
+                cont.out_dir.join("step-5.ckpt"),
+            )
+            .unwrap();
+            let (step, _) = checkpoint::latest(&cont.out_dir).unwrap();
+            assert_eq!(step, HALF);
+            train::run_auto(&cont).unwrap();
+            let resumed_end = std::fs::read(cont.out_dir.join("step-10.ckpt")).unwrap();
+
+            assert_eq!(
+                full_end, resumed_end,
+                "{optimizer} plan_threads={plan_threads}: resumed run is not \
+                 bit-identical to the uninterrupted run"
+            );
+            // and the trajectory is identical across plan_threads too
+            match &reference {
+                None => reference = Some(full_end),
+                Some(r) => assert_eq!(
+                    r, &full_end,
+                    "{optimizer}: plan_threads={plan_threads} diverged from \
+                     plan_threads=1"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn resume_appends_metrics_rows_in_place() {
+    let mut part = cfg("rmnp", 4, 1, "metrics-resume");
+    part.checkpoint_every = 4;
+    part.eval_every = 0;
+    train::run_auto(&part).unwrap();
+    let mut cont = part.clone();
+    cont.steps = 8;
+    cont.resume = true;
+    train::run_auto(&cont).unwrap();
+    let csv = CsvData::read(&cont.out_dir.join("metrics.csv")).unwrap();
+    assert_eq!(csv.rows.len(), 8, "4 original + 4 resumed rows");
+    let steps = csv.column("step").unwrap();
+    assert_eq!(steps, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+}
+
+#[test]
+fn resume_drops_rows_past_the_restored_checkpoint() {
+    // an interruption after the checkpoint but before the run finished:
+    // metrics.csv holds rows past the step the resume restores from
+    let mut c = cfg("rmnp", 8, 1, "metrics-trunc");
+    c.checkpoint_every = 4;
+    c.eval_every = 0;
+    train::run_auto(&c).unwrap();
+    // forget the final checkpoint -> latest is step-4, but rows 4..8 exist
+    std::fs::remove_file(c.out_dir.join("step-8.ckpt")).unwrap();
+    let mut cont = c.clone();
+    cont.resume = true;
+    train::run_auto(&cont).unwrap();
+    let csv = CsvData::read(&cont.out_dir.join("metrics.csv")).unwrap();
+    let steps = csv.column("step").unwrap();
+    assert_eq!(
+        steps,
+        vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0],
+        "stale rows past the checkpoint must be dropped, not duplicated"
+    );
+}
+
+#[test]
+fn resume_without_checkpoint_starts_fresh() {
+    let mut c = cfg("rmnp", 3, 1, "resume-fresh");
+    c.resume = true; // nothing to resume from — must run from step 0
+    let result = train::run_auto(&c).unwrap();
+    assert_eq!(result.steps, 3);
+}
+
+#[test]
+fn pjrt_only_optimizer_is_a_clean_error_on_native() {
+    let c = cfg("shampoo", 2, 1, "shampoo-native");
+    let err = train::run_auto(&c).unwrap_err().to_string();
+    assert!(err.contains("no native fused implementation"), "{err}");
+}
+
+#[test]
+fn pretrain_grid_runs_offline() {
+    let opts = ExpOpts {
+        steps: 6,
+        out: tmp_out("pretrain-grid"),
+        workers: 2,
+        ..Default::default()
+    };
+    let grid = pretrain::compare(
+        &opts,
+        "gpt2",
+        &["tiny"],
+        &["adamw", "rmnp"],
+        DataSpec::Markov,
+        1,
+    )
+    .unwrap();
+    assert_eq!(grid.ppl.len(), 2);
+    assert!(grid.ppl[0][0].is_finite() && grid.ppl[1][0].is_finite());
+    let rendered = pretrain::format_grid(&grid, "offline");
+    assert!(rendered.contains("ADAMW") && rendered.contains("RMNP"));
+}
+
+#[test]
+fn sweep_grid_runs_offline() {
+    let opts = ExpOpts {
+        steps: 4,
+        out: tmp_out("sweep-grid"),
+        workers: 2,
+        ..Default::default()
+    };
+    let cells = sweeps::run(&opts, "gpt2_tiny", &["rmnp"], DataSpec::Markov).unwrap();
+    assert_eq!(cells.len(), sweeps::grid_for("rmnp").unwrap().len());
+    let winners = sweeps::winners(&cells);
+    assert_eq!(winners.len(), 1);
+    assert!(winners[0].2.is_finite());
+}
+
+#[test]
+fn vision_family_trains_offline() {
+    let mut c = cfg("muon", 3, 1, "vision");
+    c.model = "vision_base".into();
+    c.data = DataSpec::Images;
+    c.eval_every = 0;
+    let result = train::run_auto(&c).unwrap();
+    assert!(result.final_train_loss.is_finite());
+}
+
+#[test]
+fn dominance_logging_works_natively() {
+    let mut c = cfg("muon", 6, 1, "dom");
+    c.dominance_every = 2;
+    c.eval_every = 0;
+    train::run_auto(&c).unwrap();
+    let csv = CsvData::read(&c.out_dir.join("dominance.csv")).unwrap();
+    assert_eq!(csv.rows.len(), 3, "logged every 2 steps over 6");
+    // gpt2_tiny has two matrix params (h0.in, h1.mlp) -> step + 2×3 cols
+    assert_eq!(csv.header.len(), 1 + 2 * 3);
+}

@@ -36,6 +36,9 @@ BENCH_MAX_D="${BENCH_MAX_D:-256}" BENCH_REPEATS="${BENCH_REPEATS:-2}" \
 echo "== cargo bench --bench optim_step =="
 BENCH_REPEATS="${BENCH_REPEATS:-2}" cargo bench --bench optim_step
 
+echo "== cargo bench --bench host_train (native backend end-to-end) =="
+BENCH_REPEATS="${BENCH_REPEATS:-2}" cargo bench --bench host_train
+
 echo "== checking BENCH_precond.json =="
 # newest prior-PR snapshot, if any (first run has none — that's fine)
 BASELINE="$(ls -1t "$ROOT"/bench_history/*_precond.json 2>/dev/null | head -n1 || true)"
@@ -111,6 +114,24 @@ if bad:
 print("bench check OK")
 EOF
 
+echo "== checking BENCH_host_train.json =="
+python3 - <<'EOF'
+import json
+
+with open("BENCH_host_train.json") as f:
+    doc = json.load(f)
+cases = doc["cases"]
+assert cases, "host_train bench produced no cases"
+for c in cases:
+    print(
+        f"  {c['model']:<12} {c['optimizer']:<6} "
+        f"{c['steps_per_s']:>8.1f} steps/s  loss {c['final_loss']:.3f}"
+    )
+    if not (0.0 < c["final_loss"] < 20.0):
+        raise SystemExit(f"implausible final loss in {c}")
+print("host_train envelope OK")
+EOF
+
 # record this run for the next PR's trajectory gate (only after the gates
 # above passed — failing runs must not become baselines)
 mkdir -p "$ROOT/bench_history"
@@ -118,4 +139,5 @@ SHA="$(git -C "$ROOT" rev-parse --short HEAD 2>/dev/null || echo nogit)"
 STAMP="$(date -u +%Y%m%d%H%M%S)_${SHA}"
 cp BENCH_precond.json "$ROOT/bench_history/${STAMP}_precond.json"
 cp BENCH_train_step.json "$ROOT/bench_history/${STAMP}_train_step.json"
-echo "recorded bench_history/${STAMP}_{precond,train_step}.json"
+cp BENCH_host_train.json "$ROOT/bench_history/${STAMP}_host_train.json"
+echo "recorded bench_history/${STAMP}_{precond,train_step,host_train}.json"
