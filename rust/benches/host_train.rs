@@ -1,9 +1,10 @@
 //! `cargo bench --bench host_train` — the native training backend end to
-//! end: batch assembly + scaled-model forward/backward + global-norm
-//! clip + sharded fused stepping through `StepPlan`, per optimizer.
-//! Writes `BENCH_host_train.json` so the whole-training-step trajectory
-//! is comparable across PRs (`scripts/bench_check.sh` snapshots it into
-//! `bench_history/`).
+//! end: batch assembly + model-layer forward/backward + global-norm
+//! clip + sharded fused stepping through `StepPlan`, per optimizer and
+//! per **architecture** (attention / gated MLP / SSM scan / conv stem).
+//! Writes `BENCH_host_train.json` with one arch-tagged case per row so
+//! the per-arch envelopes land in `bench_history/` and the README bench
+//! table (`scripts/bench_table.py` groups by the `arch` field).
 //!
 //! Env knobs: `BENCH_REPEATS` (samples per measurement, default 3),
 //! `RMNP_THREADS`, `RMNP_SIMD`.
@@ -14,11 +15,13 @@ use rmnp::bench::report::{self, envelope, int, num, obj, text};
 use rmnp::bench::{bench_n, fmt_secs};
 use rmnp::config::DataSpec;
 use rmnp::data::corpus::token_source;
-use rmnp::runtime::{Batch, NativeBackend, TrainBackend};
+use rmnp::data::images::ImageSource;
+use rmnp::runtime::{Batch, BatchShape, NativeBackend, TrainBackend};
 use rmnp::util::Json;
 
 struct Case {
     model: &'static str,
+    arch: &'static str,
     optimizer: &'static str,
     params: usize,
     elems: usize,
@@ -26,42 +29,78 @@ struct Case {
     final_loss: f32,
 }
 
+enum Feed {
+    Tokens { src: Box<dyn rmnp::data::TokenSource>, tokens: Vec<i32> },
+    Images { src: ImageSource, images: Vec<f32>, labels: Vec<i32> },
+}
+
+impl Feed {
+    fn new(backend: &NativeBackend, data: DataSpec) -> Self {
+        match backend.batch_shape() {
+            BatchShape::Tokens { rows, cols } => Feed::Tokens {
+                src: token_source(data, 7, 0),
+                tokens: vec![0i32; rows * cols],
+            },
+            BatchShape::Images { batch, hw, pixels } => Feed::Images {
+                src: ImageSource::new(10, hw, 7, 0),
+                images: vec![0.0f32; pixels],
+                labels: vec![0i32; batch],
+            },
+        }
+    }
+
+    fn step(&mut self, backend: &mut NativeBackend, lr: f32) -> f32 {
+        match self {
+            Feed::Tokens { src, tokens } => {
+                src.fill(tokens);
+                backend
+                    .step(&Batch::Tokens(tokens.as_slice()), lr)
+                    .expect("bench step")
+                    .loss
+            }
+            Feed::Images { src, images, labels } => {
+                let n = labels.len();
+                src.fill(n, images, labels);
+                let batch =
+                    Batch::Images { images: images.as_slice(), labels: labels.as_slice() };
+                backend.step(&batch, lr).expect("bench step").loss
+            }
+        }
+    }
+}
+
 fn run_case(
     model: &'static str,
+    data: DataSpec,
     optimizer: &'static str,
     steps_per_iter: usize,
     repeats: usize,
 ) -> anyhow::Result<Case> {
     let mut backend = NativeBackend::new(model, optimizer, 42, 0)?;
-    let spec = backend.spec().clone();
-    let mut src = token_source(DataSpec::Markov, 7, 0);
-    let mut tokens = vec![0i32; spec.batch * spec.seq];
+    let arch = backend.arch();
+    let mut feed = Feed::new(&backend, data);
     let params = backend.n_params();
     let elems = backend.total_elems();
     let mut last = 0.0f32;
     // warm the workspace and the plan pool before timing
-    src.fill(&mut tokens);
-    backend.step(&Batch::Tokens(&tokens), 1e-3)?;
+    feed.step(&mut backend, 1e-3);
     let r = bench_n(
         &format!("{model}_{optimizer}_step"),
         steps_per_iter,
         repeats,
         || {
-            src.fill(&mut tokens);
-            last = backend
-                .step(&Batch::Tokens(&tokens), 1e-3)
-                .expect("bench step")
-                .loss;
+            last = feed.step(&mut backend, 1e-3);
         },
     );
     println!("  {}", r.report_line());
     println!(
-        "  -> {:.1} steps/s over {params} params ({elems} elems), loss {last:.3}",
+        "  -> [{arch}] {:.1} steps/s over {params} params ({elems} elems), loss {last:.3}",
         1.0 / r.median().max(1e-12)
     );
     assert!(last.is_finite(), "{model}/{optimizer} diverged in the bench");
     Ok(Case {
         model,
+        arch,
         optimizer,
         params,
         elems,
@@ -82,18 +121,25 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut cases = Vec::new();
-    println!("gpt2_tiny full native train step:");
+    println!("gpt2_tiny (attention) full native train step:");
     for optimizer in ["rmnp", "muon", "adamw"] {
-        cases.push(run_case("gpt2_tiny", optimizer, 5, repeats)?);
+        cases.push(run_case("gpt2_tiny", DataSpec::Markov, optimizer, 5, repeats)?);
     }
-    println!("gpt2_medium full native train step (rmnp):");
-    cases.push(run_case("gpt2_medium", "rmnp", 3, repeats)?);
+    println!("gpt2_medium (attention, 3 blocks) full native train step (rmnp):");
+    cases.push(run_case("gpt2_medium", DataSpec::Markov, "rmnp", 3, repeats)?);
+    println!("llama_s60 (gated_mlp) full native train step (rmnp):");
+    cases.push(run_case("llama_s60", DataSpec::Zipf, "rmnp", 5, repeats)?);
+    println!("ssm_base (ssm scan) full native train step (rmnp):");
+    cases.push(run_case("ssm_base", DataSpec::Ngram, "rmnp", 5, repeats)?);
+    println!("vision_base (conv stem) full native train step (rmnp):");
+    cases.push(run_case("vision_base", DataSpec::Images, "rmnp", 5, repeats)?);
 
     let entries: Vec<Json> = cases
         .iter()
         .map(|c| {
             obj(vec![
                 ("model", text(c.model)),
+                ("arch", text(c.arch)),
                 ("optimizer", text(c.optimizer)),
                 ("params", int(c.params)),
                 ("elems", int(c.elems)),

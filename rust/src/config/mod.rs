@@ -4,10 +4,6 @@
 //! presets mirroring the paper's protocols and the CLI can override any
 //! field (`--set train.steps=200`).
 
-// The crate-level `missing_docs` warning is enforced for tensor/ and
-// optim/; this module's full docs pass is still pending (ROADMAP.md).
-#![allow(missing_docs)]
-
 pub mod toml;
 
 use std::path::{Path, PathBuf};
@@ -46,10 +42,16 @@ impl BackendKind {
 /// Learning-rate schedule shape (paper: cosine with 10% warmup).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Schedule {
+    /// Flat learning rate for the whole run.
     Constant,
-    /// Linear warmup over `warmup` steps then cosine decay to
+    /// Linear warmup over `warmup_frac` of the run then cosine decay to
     /// `min_ratio * lr`.
-    CosineWarmup { warmup_frac: f64, min_ratio: f64 },
+    CosineWarmup {
+        /// Fraction of total steps spent warming up.
+        warmup_frac: f64,
+        /// Final LR as a fraction of the peak.
+        min_ratio: f64,
+    },
 }
 
 /// Synthetic-corpus choice (DESIGN.md §3 substitutions).
@@ -66,6 +68,7 @@ pub enum DataSpec {
 }
 
 impl DataSpec {
+    /// Parse a `data.corpus` config value.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s {
             "markov" => DataSpec::Markov,
@@ -75,6 +78,7 @@ impl DataSpec {
             other => anyhow::bail!("unknown dataset `{other}`"),
         })
     }
+    /// The config spelling of this corpus.
     pub fn name(&self) -> &'static str {
         match self {
             DataSpec::Markov => "markov",
@@ -94,9 +98,13 @@ pub struct RunConfig {
     pub optimizer: String,
     /// Peak matrix learning rate (lr_adamw follows at the manifest ratio).
     pub lr: f64,
+    /// Learning-rate schedule shape.
     pub schedule: Schedule,
+    /// Total training steps.
     pub steps: usize,
+    /// Base RNG seed (init, data streams).
     pub seed: u64,
+    /// Which synthetic corpus feeds the run.
     pub data: DataSpec,
     /// Evaluate on held-out batches every `eval_every` steps (0 = end only).
     pub eval_every: usize,
@@ -165,6 +173,7 @@ impl RunConfig {
         Ok(cfg)
     }
 
+    /// Load from a TOML file (missing keys fall back to defaults).
     pub fn from_file(path: &Path) -> anyhow::Result<Self> {
         Self::from_document(&toml::parse_file(path)?)
     }

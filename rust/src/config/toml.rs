@@ -12,26 +12,34 @@ use std::fmt;
 /// A parsed TOML value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// An integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat array of scalars.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The integer payload, if this is an integer.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
             _ => None,
         }
     }
+    /// The float payload (integers coerce), if numeric.
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -39,12 +47,14 @@ impl Value {
             _ => None,
         }
     }
+    /// The boolean payload, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// The array payload, if this is an array.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -81,23 +91,29 @@ pub struct Document {
 }
 
 impl Document {
+    /// The value at a dotted path, if present.
     pub fn get(&self, path: &str) -> Option<&Value> {
         self.entries.get(path)
     }
 
+    /// String at `path`, else `default`.
     pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
         self.get(path).and_then(Value::as_str).unwrap_or(default)
     }
+    /// Integer at `path`, else `default`.
     pub fn int_or(&self, path: &str, default: i64) -> i64 {
         self.get(path).and_then(Value::as_int).unwrap_or(default)
     }
+    /// Float at `path` (integers coerce), else `default`.
     pub fn float_or(&self, path: &str, default: f64) -> f64 {
         self.get(path).and_then(Value::as_float).unwrap_or(default)
     }
+    /// Boolean at `path`, else `default`.
     pub fn bool_or(&self, path: &str, default: bool) -> bool {
         self.get(path).and_then(Value::as_bool).unwrap_or(default)
     }
 
+    /// String at `path`, or a "missing key" error.
     pub fn require_str(&self, path: &str) -> anyhow::Result<&str> {
         self.get(path)
             .and_then(Value::as_str)
@@ -113,13 +129,16 @@ impl Document {
             .collect()
     }
 
+    /// Set the value at a dotted path (CLI overrides use this).
     pub fn insert(&mut self, path: &str, v: Value) {
         self.entries.insert(path.to_string(), v);
     }
 
+    /// Number of keys in the document.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
+    /// Whether the document has no keys.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

@@ -345,6 +345,7 @@ pub fn run(backend: &mut dyn TrainBackend, cfg: &RunConfig) -> anyhow::Result<Ru
         &cfg.out_dir.join("summary.jsonl"),
         &[
             ("model", json_str(&cfg.model)),
+            ("arch", json_str(backend.arch())),
             ("optimizer", json_str(&cfg.optimizer)),
             ("backend", json_str(backend.label())),
             ("data", json_str(cfg.data.name())),

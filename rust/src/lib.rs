@@ -26,7 +26,8 @@
 //! | [`cli`] | hand-rolled argument parser and subcommand dispatch |
 //! | [`data`] | synthetic corpora, tokenizers, batch loader, image data |
 //! | [`optim`] | fused pure-rust optimizers behind the `MatrixOptimizer` trait |
-//! | [`runtime`] | training backends: native (host matrices + StepPlan) and PJRT |
+//! | [`model`] | architecture blocks (attention/gated-MLP/SSM/conv) behind `ModelArch` |
+//! | [`runtime`] | training backends: native (model layer + StepPlan) and PJRT |
 //! | [`coordinator`] | training loop, schedules, metrics, checkpoints, sweeps |
 //! | [`analysis`] | dominance ratios, smoothing, paper-style reports |
 //! | [`exp`] | one harness per paper table/figure |
@@ -35,13 +36,15 @@
 //! The XLA/PJRT-backed runtime is behind the `pjrt` cargo feature so the
 //! default build is green offline; training itself no longer needs it —
 //! the [`runtime::NativeBackend`] (default `runtime.backend = native`)
-//! computes the scaled-model loss/gradients host-side and steps through
+//! runs the [`model`] layer's architecture blocks (attention, gated MLP,
+//! SSM scan, conv stem) host-side and steps through
 //! [`optim::StepPlan`], so `rmnp train` and the pretrain/sweep
 //! experiment grids run end to end in every build.
 
-// Every public item needs a doc comment. Fully enforced for the kernel
-// and optimizer layers ([`tensor`], [`optim`]); the other modules carry a
-// module-level allow until their docs pass lands (tracked in ROADMAP.md).
+// Every public item needs a doc comment. Fully enforced for [`tensor`],
+// [`optim`], [`model`], [`runtime`], [`config`], [`coordinator`], and
+// [`exp`]; the remaining modules carry a module-level allow until their
+// docs pass lands (tracked in ROADMAP.md).
 #![warn(missing_docs)]
 
 pub mod analysis;
@@ -51,6 +54,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod exp;
+pub mod model;
 pub mod optim;
 pub mod runtime;
 pub mod tensor;

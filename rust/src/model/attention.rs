@@ -1,0 +1,412 @@
+//! Causal single-head attention blocks — the arch behind the `gpt2_*`
+//! tags.
+//!
+//! Per block `b` (stacked `spec.layers` deep, all at width `d_model`):
+//!
+//! ```text
+//! Xn   = rmsnorm(X) ⊙ gain_b
+//! Q    = Xn·Wq   K = Xn·Wk   V = Xn·Wv
+//! A    = row_softmax(causal_mask(Q·Kᵀ / √d))      (per sequence, T×T)
+//! X'   = X + (A·V)·Wo                             (residual)
+//! ```
+//!
+//! then `logits = X_last·W_head`, softmax cross-entropy against the next
+//! token: position `j` of each sequence predicts token `j+1`, so a
+//! `seq`-token batch row yields `T = seq−1` training positions with full
+//! causal context — real attention structure instead of the fixed
+//! order-2 window the pre-model-layer MLP used.
+//!
+//! The projections and their gradients run as full-batch matmuls on the
+//! kernel layer; only the `T×T` score/softmax pieces loop per sequence.
+//! The causal mask writes `−inf` into the score buffer, which
+//! [`kernels::row_softmax_into`] turns into exactly-zero probabilities —
+//! and exactly-zero gradients in the backward sweep, so masking needs no
+//! special handling anywhere else.
+
+use crate::data::VOCAB;
+use crate::model::common::{
+    check_token, gather_rows, scatter_add_rows, softmax_xent_fwd, xent_grad_inplace,
+};
+use crate::model::{
+    ArchKind, Batch, BatchShape, ModelArch, ModelSpec, ParamClass, ParamDef, ParamInit,
+    TaskGuard, RMS_EPS,
+};
+use crate::optim::plan::ParamTask;
+use crate::tensor::{kernels, Workspace};
+
+/// Layout position of the embedding table.
+const E: usize = 0;
+/// Parameters per attention block (gain, wq, wk, wv, wo).
+const PER_BLOCK: usize = 5;
+
+fn gain_i(b: usize) -> usize {
+    1 + PER_BLOCK * b
+}
+fn wq_i(b: usize) -> usize {
+    2 + PER_BLOCK * b
+}
+fn wk_i(b: usize) -> usize {
+    3 + PER_BLOCK * b
+}
+fn wv_i(b: usize) -> usize {
+    4 + PER_BLOCK * b
+}
+fn wo_i(b: usize) -> usize {
+    5 + PER_BLOCK * b
+}
+
+/// Stacked causal attention blocks with a tied softmax-CE head.
+pub struct AttentionArch {
+    spec: ModelSpec,
+    /// Input positions per sequence (`seq − 1`).
+    t: usize,
+    /// Total positions per batch (`batch · t`).
+    n: usize,
+    /// Context token per position (for the embedding scatter).
+    ctx: Vec<usize>,
+    /// Target class per position.
+    targets: Vec<usize>,
+    /// Block inputs: `xs[0]` is the embedding output, `xs[b+1]` the
+    /// residual output of block `b`. Each `n × d`.
+    xs: Vec<Vec<f32>>,
+    /// Saved per-block activations (`n × d` each).
+    xn: Vec<Vec<f32>>,
+    q: Vec<Vec<f32>>,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    ctxv: Vec<Vec<f32>>,
+    /// Saved attention probabilities per block, `batch · T × T`.
+    att: Vec<Vec<f32>>,
+    logits: Vec<f32>,
+    probs: Vec<f32>,
+    /// Per-sequence score scratch (`T × T`).
+    sc: Vec<f32>,
+    // backward scratch, `n × d` each
+    dx: Vec<f32>,
+    dxn: Vec<f32>,
+    dq: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+    dctx: Vec<f32>,
+    dtmp: Vec<f32>,
+    // per-sequence backward scratch, `T × T` each
+    datt: Vec<f32>,
+    dsc: Vec<f32>,
+    ws: Workspace,
+}
+
+impl AttentionArch {
+    /// Preallocate every activation/gradient buffer for `spec`.
+    pub fn new(spec: ModelSpec) -> Self {
+        // positions() is the single source of the per-arch windowing
+        let n = spec.positions();
+        let t = n / spec.batch;
+        let d = spec.d_model;
+        let c = spec.classes;
+        let l = spec.layers;
+        let nd = || vec![0.0f32; n * d];
+        AttentionArch {
+            t,
+            n,
+            ctx: vec![0; n],
+            targets: vec![0; n],
+            xs: (0..=l).map(|_| nd()).collect(),
+            xn: (0..l).map(|_| nd()).collect(),
+            q: (0..l).map(|_| nd()).collect(),
+            k: (0..l).map(|_| nd()).collect(),
+            v: (0..l).map(|_| nd()).collect(),
+            ctxv: (0..l).map(|_| nd()).collect(),
+            att: (0..l).map(|_| vec![0.0f32; spec.batch * t * t]).collect(),
+            logits: vec![0.0f32; n * c],
+            probs: vec![0.0f32; n * c],
+            sc: vec![0.0f32; t * t],
+            dx: nd(),
+            dxn: nd(),
+            dq: nd(),
+            dk: nd(),
+            dv: nd(),
+            dctx: nd(),
+            dtmp: nd(),
+            datt: vec![0.0f32; t * t],
+            dsc: vec![0.0f32; t * t],
+            ws: Workspace::new(),
+            spec,
+        }
+    }
+}
+
+impl ModelArch for AttentionArch {
+    fn arch(&self) -> ArchKind {
+        ArchKind::Attention
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn batch_shape(&self) -> BatchShape {
+        BatchShape::Tokens { rows: self.spec.batch, cols: self.spec.seq }
+    }
+
+    fn params(&self) -> Vec<ParamDef> {
+        let d = self.spec.d_model;
+        let sd = 1.0 / (d as f32).sqrt();
+        let mut defs = vec![ParamDef::new(
+            "embed",
+            VOCAB,
+            d,
+            ParamInit::Randn(1.0),
+            ParamClass::Embed,
+        )];
+        for b in 0..self.spec.layers {
+            defs.push(ParamDef::new(
+                format!("blk{b}.gain"),
+                1,
+                d,
+                ParamInit::Const(1.0),
+                ParamClass::Vector,
+            ));
+            for (suffix, std) in [("wq", sd), ("wk", sd), ("wv", sd), ("wo", 0.5 * sd)] {
+                defs.push(ParamDef::new(
+                    format!("blk{b}.{suffix}"),
+                    d,
+                    d,
+                    ParamInit::Randn(std),
+                    ParamClass::Matrix,
+                ));
+            }
+        }
+        defs.push(ParamDef::new(
+            "head",
+            d,
+            self.spec.classes,
+            ParamInit::Randn(sd),
+            ParamClass::Head,
+        ));
+        defs
+    }
+
+    fn load_batch(
+        &mut self,
+        tasks: &[TaskGuard<'_>],
+        idx: &[usize],
+        batch: &Batch,
+    ) -> anyhow::Result<()> {
+        let spec = &self.spec;
+        let Batch::Tokens(tokens) = batch else {
+            anyhow::bail!("attention arch consumes tokens, got images");
+        };
+        anyhow::ensure!(
+            tokens.len() == spec.batch * spec.seq,
+            "token batch has {} ids, model wants {}×{}",
+            tokens.len(),
+            spec.batch,
+            spec.seq
+        );
+        let t = self.t;
+        let mut r = 0usize;
+        for b in 0..spec.batch {
+            let row = &tokens[b * spec.seq..(b + 1) * spec.seq];
+            for j in 0..t {
+                self.ctx[r] = check_token(row[j])?;
+                self.targets[r] = check_token(row[j + 1])?;
+                r += 1;
+            }
+        }
+        debug_assert_eq!(r, self.n);
+        let embed = tasks[idx[E]].w.data();
+        gather_rows(&mut self.xs[0], embed, &self.ctx, spec.d_model);
+        Ok(())
+    }
+
+    fn forward(&mut self, tasks: &[TaskGuard<'_>], idx: &[usize]) -> f64 {
+        let (d, t, n) = (self.spec.d_model, self.t, self.n);
+        let alpha = 1.0 / (d as f32).sqrt();
+        for b in 0..self.spec.layers {
+            kernels::rmsnorm_into(
+                &mut self.xn[b],
+                &self.xs[b],
+                tasks[idx[gain_i(b)]].w.data(),
+                n,
+                d,
+                RMS_EPS,
+            );
+            let (wq, wk, wv) = (
+                tasks[idx[wq_i(b)]].w.data(),
+                tasks[idx[wk_i(b)]].w.data(),
+                tasks[idx[wv_i(b)]].w.data(),
+            );
+            kernels::matmul_into(&mut self.q[b], &self.xn[b], wq, n, d, d);
+            kernels::matmul_into(&mut self.k[b], &self.xn[b], wk, n, d, d);
+            kernels::matmul_into(&mut self.v[b], &self.xn[b], wv, n, d, d);
+            for s in 0..self.spec.batch {
+                let off = s * t * d;
+                let aoff = s * t * t;
+                // scores = (Q·Kᵀ)·α with the causal mask, per sequence
+                let mut kt = self.ws.take(d * t);
+                kernels::transpose_into(&mut kt, &self.k[b][off..off + t * d], t, d);
+                kernels::matmul_into(&mut self.sc, &self.q[b][off..off + t * d], &kt, t, d, t);
+                self.ws.give(kt);
+                for x in self.sc.iter_mut() {
+                    *x *= alpha;
+                }
+                for i in 0..t {
+                    for j in i + 1..t {
+                        self.sc[i * t + j] = f32::NEG_INFINITY;
+                    }
+                }
+                kernels::row_softmax_into(&mut self.att[b][aoff..aoff + t * t], &self.sc, t, t);
+                kernels::matmul_into(
+                    &mut self.ctxv[b][off..off + t * d],
+                    &self.att[b][aoff..aoff + t * t],
+                    &self.v[b][off..off + t * d],
+                    t,
+                    t,
+                    d,
+                );
+            }
+            // residual: xs[b+1] = xs[b] + ctxv·Wo
+            let wo = tasks[idx[wo_i(b)]].w.data();
+            kernels::matmul_into(&mut self.dtmp, &self.ctxv[b], wo, n, d, d);
+            let (lower, upper) = self.xs.split_at_mut(b + 1);
+            kernels::axpby_into(&mut upper[0], 1.0, &lower[b], 1.0, &self.dtmp);
+        }
+        let c = self.spec.classes;
+        kernels::matmul_into(
+            &mut self.logits,
+            &self.xs[self.spec.layers],
+            tasks[idx[1 + PER_BLOCK * self.spec.layers]].w.data(),
+            n,
+            d,
+            c,
+        );
+        softmax_xent_fwd(&self.logits, &mut self.probs, &self.targets, n, c)
+    }
+
+    fn backward(&mut self, tasks: &mut [TaskGuard<'_>], idx: &[usize]) {
+        let (d, t, n, c) = (self.spec.d_model, self.t, self.n, self.spec.classes);
+        let layers = self.spec.layers;
+        let head = 1 + PER_BLOCK * layers;
+        let alpha = 1.0 / (d as f32).sqrt();
+        xent_grad_inplace(&mut self.probs, &self.targets, n, c);
+        // dW_head = X_lastᵀ · dZ ; dX = dZ · W_headᵀ
+        {
+            let mut xt = self.ws.take(d * n);
+            kernels::transpose_into(&mut xt, &self.xs[layers], n, d);
+            kernels::matmul_into(tasks[idx[head]].grad.data_mut(), &xt, &self.probs, d, n, c);
+            self.ws.give(xt);
+            let mut ht = self.ws.take(c * d);
+            kernels::transpose_into(&mut ht, tasks[idx[head]].w.data(), d, c);
+            kernels::matmul_into(&mut self.dx, &self.probs, &ht, n, c, d);
+            self.ws.give(ht);
+        }
+        for b in (0..layers).rev() {
+            // attention branch: dO = dx (the residual keeps dx intact
+            // until the norm contribution is added at the end)
+            {
+                let mut ct = self.ws.take(d * n);
+                kernels::transpose_into(&mut ct, &self.ctxv[b], n, d);
+                kernels::matmul_into(tasks[idx[wo_i(b)]].grad.data_mut(), &ct, &self.dx, d, n, d);
+                self.ws.give(ct);
+                let mut wt = self.ws.take(d * d);
+                kernels::transpose_into(&mut wt, tasks[idx[wo_i(b)]].w.data(), d, d);
+                kernels::matmul_into(&mut self.dctx, &self.dx, &wt, n, d, d);
+                self.ws.give(wt);
+            }
+            for s in 0..self.spec.batch {
+                let off = s * t * d;
+                let aoff = s * t * t;
+                // dA = dCtx·Vᵀ ; dV = Aᵀ·dCtx
+                let mut vt = self.ws.take(d * t);
+                kernels::transpose_into(&mut vt, &self.v[b][off..off + t * d], t, d);
+                kernels::matmul_into(&mut self.datt, &self.dctx[off..off + t * d], &vt, t, d, t);
+                self.ws.give(vt);
+                let mut at = self.ws.take(t * t);
+                kernels::transpose_into(&mut at, &self.att[b][aoff..aoff + t * t], t, t);
+                kernels::matmul_into(
+                    &mut self.dv[off..off + t * d],
+                    &at,
+                    &self.dctx[off..off + t * d],
+                    t,
+                    t,
+                    d,
+                );
+                self.ws.give(at);
+                // through the softmax, then the 1/√d scale
+                kernels::row_softmax_grad_into(
+                    &mut self.dsc,
+                    &self.att[b][aoff..aoff + t * t],
+                    &self.datt,
+                    t,
+                    t,
+                );
+                for x in self.dsc.iter_mut() {
+                    *x *= alpha;
+                }
+                // dQ = dS·K ; dK = dSᵀ·Q
+                kernels::matmul_into(
+                    &mut self.dq[off..off + t * d],
+                    &self.dsc,
+                    &self.k[b][off..off + t * d],
+                    t,
+                    t,
+                    d,
+                );
+                let mut st = self.ws.take(t * t);
+                kernels::transpose_into(&mut st, &self.dsc, t, t);
+                kernels::matmul_into(
+                    &mut self.dk[off..off + t * d],
+                    &st,
+                    &self.q[b][off..off + t * d],
+                    t,
+                    t,
+                    d,
+                );
+                self.ws.give(st);
+            }
+            // projection weight grads: dW• = Xnᵀ · d•  (full batch)
+            {
+                let mut xnt = self.ws.take(d * n);
+                kernels::transpose_into(&mut xnt, &self.xn[b], n, d);
+                kernels::matmul_into(tasks[idx[wq_i(b)]].grad.data_mut(), &xnt, &self.dq, d, n, d);
+                kernels::matmul_into(tasks[idx[wk_i(b)]].grad.data_mut(), &xnt, &self.dk, d, n, d);
+                kernels::matmul_into(tasks[idx[wv_i(b)]].grad.data_mut(), &xnt, &self.dv, d, n, d);
+                self.ws.give(xnt);
+            }
+            // dXn = dQ·Wqᵀ + dK·Wkᵀ + dV·Wvᵀ
+            {
+                let mut wt = self.ws.take(d * d);
+                kernels::transpose_into(&mut wt, tasks[idx[wq_i(b)]].w.data(), d, d);
+                kernels::matmul_into(&mut self.dxn, &self.dq, &wt, n, d, d);
+                kernels::transpose_into(&mut wt, tasks[idx[wk_i(b)]].w.data(), d, d);
+                kernels::matmul_into(&mut self.dtmp, &self.dk, &wt, n, d, d);
+                kernels::axpby_inplace(&mut self.dxn, 1.0, &self.dtmp, 1.0);
+                kernels::transpose_into(&mut wt, tasks[idx[wv_i(b)]].w.data(), d, d);
+                kernels::matmul_into(&mut self.dtmp, &self.dv, &wt, n, d, d);
+                kernels::axpby_inplace(&mut self.dxn, 1.0, &self.dtmp, 1.0);
+                self.ws.give(wt);
+            }
+            // through the RMSNorm (gain grad lands in the task), then add
+            // the residual passthrough: dX_b = dX_{b+1} + d(norm branch)
+            {
+                let gt = &mut *tasks[idx[gain_i(b)]];
+                let ParamTask { w, grad, .. } = gt;
+                kernels::rmsnorm_grad_into(
+                    &mut self.dtmp,
+                    grad.data_mut(),
+                    &self.dxn,
+                    &self.xs[b],
+                    w.data(),
+                    n,
+                    d,
+                    RMS_EPS,
+                );
+            }
+            kernels::axpby_inplace(&mut self.dx, 1.0, &self.dtmp, 1.0);
+        }
+        // embedding scatter
+        let egrad = tasks[idx[E]].grad.data_mut();
+        egrad.fill(0.0);
+        scatter_add_rows(egrad, &self.dx, &self.ctx, d);
+    }
+}

@@ -1,0 +1,137 @@
+//! Shared pieces of the architecture implementations: the softmax
+//! cross-entropy head (forward + backward), token validation, and the
+//! embedding gather/scatter helpers.
+
+use crate::data::VOCAB;
+
+/// Row-wise softmax + mean cross-entropy in one sweep. Writes the
+/// softmax probabilities into `probs` and returns the mean CE over the
+/// `n` rows, accumulated in f64 (the same numerics the pre-model-layer
+/// backend used, so losses stay comparable across PRs).
+pub(crate) fn softmax_xent_fwd(
+    logits: &[f32],
+    probs: &mut [f32],
+    targets: &[usize],
+    n: usize,
+    c: usize,
+) -> f64 {
+    debug_assert_eq!(logits.len(), n * c);
+    debug_assert_eq!(probs.len(), n * c);
+    debug_assert_eq!(targets.len(), n);
+    let mut loss = 0.0f64;
+    for r in 0..n {
+        let row = &logits[r * c..(r + 1) * c];
+        let out = &mut probs[r * c..(r + 1) * c];
+        let mut max = f32::NEG_INFINITY;
+        for &v in row {
+            if v > max {
+                max = v;
+            }
+        }
+        let mut sum = 0.0f64;
+        for (o, &v) in out.iter_mut().zip(row) {
+            let e = (v - max).exp();
+            *o = e;
+            sum += e as f64;
+        }
+        let inv = (1.0 / sum) as f32;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+        let p = out[targets[r]].max(1e-30) as f64;
+        loss -= p.ln();
+    }
+    loss / n as f64
+}
+
+/// Cross-entropy backward in place over the forward's probabilities:
+/// `probs ← (softmax − onehot(target)) / n`, the gradient of the mean CE
+/// with respect to the logits.
+pub(crate) fn xent_grad_inplace(probs: &mut [f32], targets: &[usize], n: usize, c: usize) {
+    debug_assert_eq!(probs.len(), n * c);
+    let invn = 1.0 / n as f32;
+    for r in 0..n {
+        let row = &mut probs[r * c..(r + 1) * c];
+        row[targets[r]] -= 1.0;
+        for v in row.iter_mut() {
+            *v *= invn;
+        }
+    }
+}
+
+/// Validate that a token id is inside the shared vocabulary.
+pub(crate) fn check_token(t: i32) -> anyhow::Result<usize> {
+    anyhow::ensure!(
+        (0..VOCAB as i32).contains(&t),
+        "token id {t} out of vocab range (0..{VOCAB})"
+    );
+    Ok(t as usize)
+}
+
+/// Copy embedding rows for a context list: `dst` row `r` receives
+/// `table[ctx[r]]` (both row-major with width `d`).
+pub(crate) fn gather_rows(dst: &mut [f32], table: &[f32], ctx: &[usize], d: usize) {
+    debug_assert_eq!(dst.len(), ctx.len() * d);
+    for (r, &t) in ctx.iter().enumerate() {
+        dst[r * d..(r + 1) * d].copy_from_slice(&table[t * d..(t + 1) * d]);
+    }
+}
+
+/// Scatter-add position gradients back into an embedding-table gradient:
+/// `egrad[ctx[r]] += src[r]` for every position. The caller zeroes
+/// `egrad` first (each backward fully overwrites every gradient buffer).
+pub(crate) fn scatter_add_rows(egrad: &mut [f32], src: &[f32], ctx: &[usize], d: usize) {
+    debug_assert_eq!(src.len(), ctx.len() * d);
+    for (r, &t) in ctx.iter().enumerate() {
+        let dst = &mut egrad[t * d..(t + 1) * d];
+        for (a, &b) in dst.iter_mut().zip(&src[r * d..(r + 1) * d]) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xent_of_uniform_logits_is_ln_c() {
+        let (n, c) = (4usize, 8usize);
+        let logits = vec![0.0f32; n * c];
+        let mut probs = vec![0.0f32; n * c];
+        let targets = vec![3usize; n];
+        let loss = softmax_xent_fwd(&logits, &mut probs, &targets, n, c);
+        assert!((loss - (c as f64).ln()).abs() < 1e-6, "{loss}");
+        for &p in &probs {
+            assert!((p - 1.0 / c as f32).abs() < 1e-6);
+        }
+        xent_grad_inplace(&mut probs, &targets, n, c);
+        // rows of dZ sum to zero and the target entry is negative
+        for r in 0..n {
+            let row = &probs[r * c..(r + 1) * c];
+            let s: f32 = row.iter().sum();
+            assert!(s.abs() < 1e-6);
+            assert!(row[3] < 0.0);
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let d = 3;
+        let table: Vec<f32> = (0..12).map(|x| x as f32).collect(); // 4 rows
+        let ctx = vec![2usize, 0, 2];
+        let mut x = vec![0.0f32; 9];
+        gather_rows(&mut x, &table, &ctx, d);
+        assert_eq!(&x[0..3], &[6.0, 7.0, 8.0]);
+        assert_eq!(&x[3..6], &[0.0, 1.0, 2.0]);
+        let mut eg = vec![0.0f32; 12];
+        let src = vec![1.0f32; 9];
+        scatter_add_rows(&mut eg, &src, &ctx, d);
+        assert_eq!(&eg[6..9], &[2.0, 2.0, 2.0], "row 2 hit twice");
+        assert_eq!(&eg[0..3], &[1.0, 1.0, 1.0]);
+        assert_eq!(&eg[3..6], &[0.0, 0.0, 0.0]);
+        assert!(check_token(5).is_ok());
+        assert!(check_token(-1).is_err());
+        assert!(check_token(512).is_err());
+    }
+}

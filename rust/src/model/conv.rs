@@ -1,0 +1,262 @@
+//! Pixel/conv stem — the arch behind the `vision_*` tags.
+//!
+//! Per image (`hw × hw`, single input channel):
+//!
+//! ```text
+//! F   = relu(conv3x3(x, K))        (C channels, zero padding, stride 1)
+//! a   = relu(flatten(F)·W1)        (hw²·C → h)
+//! logits = a·W_head                (h → 10 classes)
+//! ```
+//!
+//! The 3×3 kernel bank is stored as a `C × 9` matrix parameter — one row
+//! per output channel — so RMNP's row normalization acts per-channel
+//! (exactly the per-neuron-norm view the paper's vision ablation needs).
+//! The conv is the first layer, so its backward only accumulates the
+//! kernel gradient (no input gradient is required), which keeps the
+//! stem's loops small enough to stay scalar.
+
+use crate::model::common::{softmax_xent_fwd, xent_grad_inplace};
+use crate::model::{
+    ArchKind, Batch, BatchShape, ModelArch, ModelSpec, ParamClass, ParamDef, ParamInit, TaskGuard,
+};
+use crate::tensor::{kernels, Workspace};
+
+/// Layout positions.
+const CONV: usize = 0;
+const FC: usize = 1;
+const HEAD: usize = 2;
+
+/// 3×3 conv stem + FC classifier.
+pub struct ConvArch {
+    spec: ModelSpec,
+    /// Images per batch (one loss position each).
+    n: usize,
+    targets: Vec<usize>,
+    /// Input pixels, `n × hw²`.
+    x: Vec<f32>,
+    /// Post-ReLU conv features, `n × hw²·C` (channel-major per image).
+    feat: Vec<f32>,
+    /// Post-ReLU FC activations, `n × h`.
+    a1: Vec<f32>,
+    logits: Vec<f32>,
+    probs: Vec<f32>,
+    // backward scratch
+    da1: Vec<f32>,
+    dfeat: Vec<f32>,
+    ws: Workspace,
+}
+
+impl ConvArch {
+    /// Preallocate every activation/gradient buffer for `spec`.
+    pub fn new(spec: ModelSpec) -> Self {
+        // positions() is the single source of the per-arch windowing
+        let n = spec.positions();
+        let px = spec.hw * spec.hw;
+        let fdim = px * spec.channels;
+        let (h, c) = (spec.d_hidden, spec.classes);
+        ConvArch {
+            n,
+            targets: vec![0; n],
+            x: vec![0.0f32; n * px],
+            feat: vec![0.0f32; n * fdim],
+            a1: vec![0.0f32; n * h],
+            logits: vec![0.0f32; n * c],
+            probs: vec![0.0f32; n * c],
+            da1: vec![0.0f32; n * h],
+            dfeat: vec![0.0f32; n * fdim],
+            ws: Workspace::new(),
+            spec,
+        }
+    }
+}
+
+impl ModelArch for ConvArch {
+    fn arch(&self) -> ArchKind {
+        ArchKind::Conv
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn batch_shape(&self) -> BatchShape {
+        BatchShape::Images {
+            batch: self.spec.batch,
+            hw: self.spec.hw,
+            pixels: self.spec.batch * self.spec.hw * self.spec.hw,
+        }
+    }
+
+    fn params(&self) -> Vec<ParamDef> {
+        let (hw, ch, h) = (self.spec.hw, self.spec.channels, self.spec.d_hidden);
+        let fdim = hw * hw * ch;
+        vec![
+            ParamDef::new(
+                "stem.conv",
+                ch,
+                9,
+                ParamInit::Randn((2.0f32 / 9.0).sqrt()),
+                ParamClass::Matrix,
+            ),
+            ParamDef::new(
+                "h0.in",
+                fdim,
+                h,
+                ParamInit::Randn((2.0 / fdim as f32).sqrt()),
+                ParamClass::Matrix,
+            ),
+            ParamDef::new(
+                "head",
+                h,
+                self.spec.classes,
+                ParamInit::Randn(1.0 / (h as f32).sqrt()),
+                ParamClass::Head,
+            ),
+        ]
+    }
+
+    fn load_batch(
+        &mut self,
+        _tasks: &[TaskGuard<'_>],
+        _idx: &[usize],
+        batch: &Batch,
+    ) -> anyhow::Result<()> {
+        let spec = &self.spec;
+        let Batch::Images { images, labels } = batch else {
+            anyhow::bail!("conv arch consumes images, got tokens");
+        };
+        let px = spec.hw * spec.hw;
+        anyhow::ensure!(
+            images.len() == spec.batch * px && labels.len() == spec.batch,
+            "image batch shape mismatch ({} pixels / {} labels, model wants {}×{px} / {})",
+            images.len(),
+            labels.len(),
+            spec.batch,
+            spec.batch
+        );
+        self.x.copy_from_slice(images);
+        for (r, &l) in labels.iter().enumerate() {
+            anyhow::ensure!((l as usize) < spec.classes, "label {l} out of range");
+            self.targets[r] = l as usize;
+        }
+        Ok(())
+    }
+
+    fn forward(&mut self, tasks: &[TaskGuard<'_>], idx: &[usize]) -> f64 {
+        let (hw, ch, h, n) = (self.spec.hw, self.spec.channels, self.spec.d_hidden, self.n);
+        let px = hw * hw;
+        let fdim = px * ch;
+        let kernel = tasks[idx[CONV]].w.data();
+        for im in 0..n {
+            let x = &self.x[im * px..(im + 1) * px];
+            let fimg = &mut self.feat[im * fdim..(im + 1) * fdim];
+            for c in 0..ch {
+                let krow = &kernel[c * 9..(c + 1) * 9];
+                for i in 0..hw {
+                    for j in 0..hw {
+                        let mut acc = 0.0f32;
+                        for u in 0..3usize {
+                            let xi = i + u;
+                            if !(1..=hw).contains(&xi) {
+                                continue; // zero padding (xi-1 out of range)
+                            }
+                            for v in 0..3usize {
+                                let xj = j + v;
+                                if !(1..=hw).contains(&xj) {
+                                    continue;
+                                }
+                                acc += krow[u * 3 + v] * x[(xi - 1) * hw + (xj - 1)];
+                            }
+                        }
+                        fimg[c * px + i * hw + j] = acc.max(0.0);
+                    }
+                }
+            }
+        }
+        kernels::matmul_into(&mut self.a1, &self.feat, tasks[idx[FC]].w.data(), n, fdim, h);
+        for a in self.a1.iter_mut() {
+            if *a < 0.0 {
+                *a = 0.0;
+            }
+        }
+        let c = self.spec.classes;
+        kernels::matmul_into(&mut self.logits, &self.a1, tasks[idx[HEAD]].w.data(), n, h, c);
+        softmax_xent_fwd(&self.logits, &mut self.probs, &self.targets, n, c)
+    }
+
+    fn backward(&mut self, tasks: &mut [TaskGuard<'_>], idx: &[usize]) {
+        let (hw, ch, h, n, c) = (
+            self.spec.hw,
+            self.spec.channels,
+            self.spec.d_hidden,
+            self.n,
+            self.spec.classes,
+        );
+        let px = hw * hw;
+        let fdim = px * ch;
+        xent_grad_inplace(&mut self.probs, &self.targets, n, c);
+        // head grad + da1 (ReLU-masked)
+        {
+            let mut at = self.ws.take(h * n);
+            kernels::transpose_into(&mut at, &self.a1, n, h);
+            kernels::matmul_into(tasks[idx[HEAD]].grad.data_mut(), &at, &self.probs, h, n, c);
+            self.ws.give(at);
+            let mut wt = self.ws.take(c * h);
+            kernels::transpose_into(&mut wt, tasks[idx[HEAD]].w.data(), h, c);
+            kernels::matmul_into(&mut self.da1, &self.probs, &wt, n, c, h);
+            self.ws.give(wt);
+            for (g, &a) in self.da1.iter_mut().zip(&self.a1) {
+                if a <= 0.0 {
+                    *g = 0.0;
+                }
+            }
+        }
+        // FC grad + dfeat (ReLU-masked)
+        {
+            let mut ft = self.ws.take(fdim * n);
+            kernels::transpose_into(&mut ft, &self.feat, n, fdim);
+            kernels::matmul_into(tasks[idx[FC]].grad.data_mut(), &ft, &self.da1, fdim, n, h);
+            self.ws.give(ft);
+            let mut wt = self.ws.take(h * fdim);
+            kernels::transpose_into(&mut wt, tasks[idx[FC]].w.data(), fdim, h);
+            kernels::matmul_into(&mut self.dfeat, &self.da1, &wt, n, h, fdim);
+            self.ws.give(wt);
+            for (g, &f) in self.dfeat.iter_mut().zip(&self.feat) {
+                if f <= 0.0 {
+                    *g = 0.0;
+                }
+            }
+        }
+        // conv kernel grad (first layer: no input gradient needed)
+        let kgrad = tasks[idx[CONV]].grad.data_mut();
+        kgrad.fill(0.0);
+        for im in 0..n {
+            let x = &self.x[im * px..(im + 1) * px];
+            let dimg = &self.dfeat[im * fdim..(im + 1) * fdim];
+            for c in 0..ch {
+                let krow = &mut kgrad[c * 9..(c + 1) * 9];
+                for i in 0..hw {
+                    for j in 0..hw {
+                        let g = dimg[c * px + i * hw + j];
+                        if g == 0.0 {
+                            continue;
+                        }
+                        for u in 0..3usize {
+                            let xi = i + u;
+                            if !(1..=hw).contains(&xi) {
+                                continue;
+                            }
+                            for v in 0..3usize {
+                                let xj = j + v;
+                                if !(1..=hw).contains(&xj) {
+                                    continue;
+                                }
+                                krow[u * 3 + v] += g * x[(xi - 1) * hw + (xj - 1)];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

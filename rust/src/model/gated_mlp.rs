@@ -1,0 +1,337 @@
+//! RMSNorm + silu-gated MLP blocks over order-2 context — the arch
+//! behind the `llama_*` tags (the transformer's SwiGLU-style FFN
+//! sublayer, isolated so the row-norm ablations see MLP behavior
+//! separately from attention behavior).
+//!
+//! Input follows the corpora's order-2 structure: each position embeds
+//! its two predecessor tokens, `x = [E[t−1], E[t−2]]`. Per block `i`:
+//!
+//! ```text
+//! N = rmsnorm(a) ⊙ gain_i          (a = x for the first block)
+//! a' = silu(N·G_i) ⊙ (N·U_i)       (silu(u) = u·σ(u))
+//! ```
+//!
+//! then `logits = a_last·W_head`. The per-block RMSNorm is what keeps
+//! the gated stack depth-stable: silu gating grows activations
+//! multiplicatively, so He-initialized unnormalized stacks blow up by
+//! `layers = 4` (llama_s1b) — normalizing each block input pins the
+//! activation scale at any depth (verified against the numpy oracle
+//! during development; `tests/model_grad.rs` holds the gradients).
+
+use crate::data::VOCAB;
+use crate::model::common::{check_token, softmax_xent_fwd, xent_grad_inplace};
+use crate::model::{
+    ArchKind, Batch, BatchShape, ModelArch, ModelSpec, ParamClass, ParamDef, ParamInit,
+    TaskGuard, RMS_EPS,
+};
+use crate::optim::plan::ParamTask;
+use crate::tensor::{kernels, Workspace};
+
+/// Layout position of the embedding table.
+const E: usize = 0;
+/// Parameters per gated block (gain, gate, up).
+const PER_BLOCK: usize = 3;
+
+fn gain_i(i: usize) -> usize {
+    1 + PER_BLOCK * i
+}
+fn gate_i(i: usize) -> usize {
+    2 + PER_BLOCK * i
+}
+fn up_i(i: usize) -> usize {
+    3 + PER_BLOCK * i
+}
+
+#[inline]
+fn sigmoid(u: f32) -> f32 {
+    1.0 / (1.0 + (-u).exp())
+}
+
+/// Stacked silu-gated MLP blocks over order-2 embedded context.
+pub struct GatedMlpArch {
+    spec: ModelSpec,
+    /// Positions per sequence (`seq − 2`: two context tokens each).
+    t: usize,
+    /// Total positions per batch.
+    n: usize,
+    /// Previous / previous-previous token per position.
+    t1: Vec<usize>,
+    t2: Vec<usize>,
+    targets: Vec<usize>,
+    /// Network input, `n × 2d`.
+    x: Vec<f32>,
+    /// Per-block normalized inputs (`n × k_i`, `k_0 = 2d`, else `h`).
+    norms: Vec<Vec<f32>>,
+    /// Per-block gate/up pre-activations and outputs, `n × h` each.
+    us: Vec<Vec<f32>>,
+    vs: Vec<Vec<f32>>,
+    acts: Vec<Vec<f32>>,
+    logits: Vec<f32>,
+    probs: Vec<f32>,
+    // backward scratch
+    da: Vec<f32>,
+    du: Vec<f32>,
+    dv: Vec<f32>,
+    dnorm: Vec<f32>,
+    dtmp: Vec<f32>,
+    ws: Workspace,
+}
+
+impl GatedMlpArch {
+    fn kdim(&self, i: usize) -> usize {
+        if i == 0 {
+            2 * self.spec.d_model
+        } else {
+            self.spec.d_hidden
+        }
+    }
+
+    /// Preallocate every activation/gradient buffer for `spec`.
+    pub fn new(spec: ModelSpec) -> Self {
+        // positions() is the single source of the per-arch windowing
+        let n = spec.positions();
+        let t = n / spec.batch;
+        let (d, h, c, l) = (spec.d_model, spec.d_hidden, spec.classes, spec.layers);
+        let kmax = (2 * d).max(h);
+        GatedMlpArch {
+            t,
+            n,
+            t1: vec![0; n],
+            t2: vec![0; n],
+            targets: vec![0; n],
+            x: vec![0.0f32; n * 2 * d],
+            norms: (0..l)
+                .map(|i| vec![0.0f32; n * if i == 0 { 2 * d } else { h }])
+                .collect(),
+            us: (0..l).map(|_| vec![0.0f32; n * h]).collect(),
+            vs: (0..l).map(|_| vec![0.0f32; n * h]).collect(),
+            acts: (0..l).map(|_| vec![0.0f32; n * h]).collect(),
+            logits: vec![0.0f32; n * c],
+            probs: vec![0.0f32; n * c],
+            da: vec![0.0f32; n * h],
+            du: vec![0.0f32; n * h],
+            dv: vec![0.0f32; n * h],
+            dnorm: vec![0.0f32; n * kmax],
+            dtmp: vec![0.0f32; n * kmax],
+            ws: Workspace::new(),
+            spec,
+        }
+    }
+}
+
+impl ModelArch for GatedMlpArch {
+    fn arch(&self) -> ArchKind {
+        ArchKind::GatedMlp
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn batch_shape(&self) -> BatchShape {
+        BatchShape::Tokens { rows: self.spec.batch, cols: self.spec.seq }
+    }
+
+    fn params(&self) -> Vec<ParamDef> {
+        let (d, h) = (self.spec.d_model, self.spec.d_hidden);
+        let mut defs = vec![ParamDef::new(
+            "embed",
+            VOCAB,
+            d,
+            ParamInit::Randn(1.0),
+            ParamClass::Embed,
+        )];
+        for i in 0..self.spec.layers {
+            let k = self.kdim(i);
+            let std = (2.0 / k as f32).sqrt();
+            defs.push(ParamDef::new(
+                format!("h{i}.gain"),
+                1,
+                k,
+                ParamInit::Const(1.0),
+                ParamClass::Vector,
+            ));
+            defs.push(ParamDef::new(
+                format!("h{i}.gate"),
+                k,
+                h,
+                ParamInit::Randn(std),
+                ParamClass::Matrix,
+            ));
+            defs.push(ParamDef::new(
+                format!("h{i}.up"),
+                k,
+                h,
+                ParamInit::Randn(std),
+                ParamClass::Matrix,
+            ));
+        }
+        defs.push(ParamDef::new(
+            "head",
+            h,
+            self.spec.classes,
+            ParamInit::Randn(1.0 / (h as f32).sqrt()),
+            ParamClass::Head,
+        ));
+        defs
+    }
+
+    fn load_batch(
+        &mut self,
+        tasks: &[TaskGuard<'_>],
+        idx: &[usize],
+        batch: &Batch,
+    ) -> anyhow::Result<()> {
+        let spec = &self.spec;
+        let Batch::Tokens(tokens) = batch else {
+            anyhow::bail!("gated-MLP arch consumes tokens, got images");
+        };
+        anyhow::ensure!(
+            tokens.len() == spec.batch * spec.seq,
+            "token batch has {} ids, model wants {}×{}",
+            tokens.len(),
+            spec.batch,
+            spec.seq
+        );
+        let mut r = 0usize;
+        for b in 0..spec.batch {
+            let row = &tokens[b * spec.seq..(b + 1) * spec.seq];
+            for j in 2..spec.seq {
+                self.t1[r] = check_token(row[j - 1])?;
+                self.t2[r] = check_token(row[j - 2])?;
+                self.targets[r] = check_token(row[j])?;
+                r += 1;
+            }
+        }
+        debug_assert_eq!(r, self.n);
+        let d = spec.d_model;
+        let embed = tasks[idx[E]].w.data();
+        for r in 0..self.n {
+            let dst = &mut self.x[r * 2 * d..(r + 1) * 2 * d];
+            let (t1, t2) = (self.t1[r], self.t2[r]);
+            dst[..d].copy_from_slice(&embed[t1 * d..(t1 + 1) * d]);
+            dst[d..].copy_from_slice(&embed[t2 * d..(t2 + 1) * d]);
+        }
+        Ok(())
+    }
+
+    fn forward(&mut self, tasks: &[TaskGuard<'_>], idx: &[usize]) -> f64 {
+        let (n, h) = (self.n, self.spec.d_hidden);
+        for i in 0..self.spec.layers {
+            let k = self.kdim(i);
+            {
+                let input = if i == 0 { &self.x } else { &self.acts[i - 1] };
+                kernels::rmsnorm_into(
+                    &mut self.norms[i],
+                    input,
+                    tasks[idx[gain_i(i)]].w.data(),
+                    n,
+                    k,
+                    RMS_EPS,
+                );
+            }
+            let (gate, up) = (tasks[idx[gate_i(i)]].w.data(), tasks[idx[up_i(i)]].w.data());
+            kernels::matmul_into(&mut self.us[i], &self.norms[i], gate, n, k, h);
+            kernels::matmul_into(&mut self.vs[i], &self.norms[i], up, n, k, h);
+            let (u_i, v_i) = (&self.us[i], &self.vs[i]);
+            let a_i = &mut self.acts[i];
+            // a = silu(u) ⊙ v, one fused elementwise sweep
+            for ((a, &u), &v) in a_i.iter_mut().zip(u_i).zip(v_i) {
+                *a = u * sigmoid(u) * v;
+            }
+        }
+        let c = self.spec.classes;
+        kernels::matmul_into(
+            &mut self.logits,
+            &self.acts[self.spec.layers - 1],
+            tasks[idx[1 + PER_BLOCK * self.spec.layers]].w.data(),
+            n,
+            h,
+            c,
+        );
+        softmax_xent_fwd(&self.logits, &mut self.probs, &self.targets, n, c)
+    }
+
+    fn backward(&mut self, tasks: &mut [TaskGuard<'_>], idx: &[usize]) {
+        let (n, h, c) = (self.n, self.spec.d_hidden, self.spec.classes);
+        let layers = self.spec.layers;
+        let head = 1 + PER_BLOCK * layers;
+        let d = self.spec.d_model;
+        xent_grad_inplace(&mut self.probs, &self.targets, n, c);
+        {
+            let mut at = self.ws.take(h * n);
+            kernels::transpose_into(&mut at, &self.acts[layers - 1], n, h);
+            kernels::matmul_into(tasks[idx[head]].grad.data_mut(), &at, &self.probs, h, n, c);
+            self.ws.give(at);
+            let mut ht = self.ws.take(c * h);
+            kernels::transpose_into(&mut ht, tasks[idx[head]].w.data(), h, c);
+            kernels::matmul_into(&mut self.da, &self.probs, &ht, n, c, h);
+            self.ws.give(ht);
+        }
+        for i in (0..layers).rev() {
+            let k = self.kdim(i);
+            // du = da ⊙ v ⊙ silu'(u) ; dv = da ⊙ silu(u)
+            {
+                let (da, u_i, v_i) = (&self.da, &self.us[i], &self.vs[i]);
+                let (du, dv) = (&mut self.du, &mut self.dv);
+                for j in 0..n * h {
+                    let u = u_i[j];
+                    let sig = sigmoid(u);
+                    du[j] = da[j] * v_i[j] * (sig * (1.0 + u * (1.0 - sig)));
+                    dv[j] = da[j] * u * sig;
+                }
+            }
+            // dG = Nᵀ·du ; dU = Nᵀ·dv
+            {
+                let mut nt = self.ws.take(k * n);
+                kernels::transpose_into(&mut nt, &self.norms[i], n, k);
+                kernels::matmul_into(tasks[idx[gate_i(i)]].grad.data_mut(), &nt, &self.du, k, n, h);
+                kernels::matmul_into(tasks[idx[up_i(i)]].grad.data_mut(), &nt, &self.dv, k, n, h);
+                self.ws.give(nt);
+            }
+            // dN = du·Gᵀ + dv·Uᵀ
+            {
+                let mut wt = self.ws.take(h * k);
+                kernels::transpose_into(&mut wt, tasks[idx[gate_i(i)]].w.data(), k, h);
+                kernels::matmul_into(&mut self.dnorm[..n * k], &self.du, &wt, n, h, k);
+                kernels::transpose_into(&mut wt, tasks[idx[up_i(i)]].w.data(), k, h);
+                kernels::matmul_into(&mut self.dtmp[..n * k], &self.dv, &wt, n, h, k);
+                kernels::axpby_inplace(&mut self.dnorm[..n * k], 1.0, &self.dtmp[..n * k], 1.0);
+                self.ws.give(wt);
+            }
+            // through the RMSNorm; the gain grad lands in its task
+            {
+                let input = if i == 0 { &self.x } else { &self.acts[i - 1] };
+                let gt = &mut *tasks[idx[gain_i(i)]];
+                let ParamTask { w, grad, .. } = gt;
+                kernels::rmsnorm_grad_into(
+                    &mut self.dtmp[..n * k],
+                    grad.data_mut(),
+                    &self.dnorm[..n * k],
+                    input,
+                    w.data(),
+                    n,
+                    k,
+                    RMS_EPS,
+                );
+            }
+            if i > 0 {
+                // k == h here: the block input was the previous activation
+                self.da.copy_from_slice(&self.dtmp[..n * h]);
+            }
+        }
+        // embedding scatter: dtmp[..n*2d] holds dX after the i = 0 pass
+        let egrad = tasks[idx[E]].grad.data_mut();
+        egrad.fill(0.0);
+        for r in 0..self.n {
+            let src = &self.dtmp[r * 2 * d..(r + 1) * 2 * d];
+            let (t1, t2) = (self.t1[r], self.t2[r]);
+            for (a, &b) in egrad[t1 * d..(t1 + 1) * d].iter_mut().zip(&src[..d]) {
+                *a += b;
+            }
+            for (a, &b) in egrad[t2 * d..(t2 + 1) * d].iter_mut().zip(&src[d..]) {
+                *a += b;
+            }
+        }
+    }
+}

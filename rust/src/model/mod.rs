@@ -1,0 +1,200 @@
+//! The model layer: real architecture blocks behind the [`ModelArch`]
+//! trait.
+//!
+//! Until PR 5 the native backend baked an order-2 scaled MLP directly
+//! into `runtime/native.rs` for every registry tag. This module replaces
+//! that monolith with four architecture-faithful implementations, all
+//! running forward **and** backward on the kernel/workspace layer and
+//! allocation-free after warmup:
+//!
+//! | arch | tags | block structure |
+//! |---|---|---|
+//! | [`attention`] | `gpt2_*` | RMSNorm → QKV → causal row-softmax → out proj → residual |
+//! | [`gated_mlp`] | `llama_*` | RMSNorm → silu(x·G) ⊙ (x·U) gated blocks over order-2 context |
+//! | [`ssm`] | `ssm_*` | in-proj → sigmoid-decay linear scan → out proj → residual |
+//! | [`conv`] | `vision_*` | 3×3 conv stem → ReLU → FC → ReLU → classifier head |
+//!
+//! The split mirrors the paper's experimental axes: NorMuon/Muon-family
+//! results show row/neuron-norm behavior is architecture-sensitive —
+//! attention and MLP blocks respond differently to normalization — so
+//! the attention sublayer (gpt2 tags) and the gated-FFN sublayer (llama
+//! tags) get separate offline trajectories instead of one shared MLP.
+//!
+//! ## Contract
+//!
+//! A [`ModelArch`] owns its activation/gradient buffers and describes
+//! its parameters as a [`ParamDef`] layout; the training backend
+//! materializes those as [`ParamTask`]s inside a
+//! [`StepPlan`](crate::optim::StepPlan) and hands them back to
+//! [`ModelArch::forward`]/[`ModelArch::backward`] as plan-task guards
+//! plus an index map (layout order → plan scheduling order). The model
+//! layer never steps parameters — it only reads weights and fills
+//! gradient buffers; clipping and optimizer updates stay in the backend.
+//!
+//! Determinism: forward/backward are sequential host code over the
+//! bit-deterministic kernels — the only threading is *inside* kernel
+//! calls, which never changes output bits (see `docs/ARCHITECTURE.md`),
+//! so a step is bit-identical for any `perf.threads`/`perf.plan_threads`
+//! and reproducible under forced `RMNP_SIMD=scalar`
+//! (`tests/model_grad.rs` pins both, and checks every backward against a
+//! finite-difference oracle).
+
+pub mod attention;
+pub mod common;
+pub mod conv;
+pub mod gated_mlp;
+pub mod registry;
+pub mod ssm;
+
+use std::sync::MutexGuard;
+
+use crate::optim::plan::ParamTask;
+
+pub use registry::{build_arch, model_spec, ArchKind, ModelSpec};
+
+/// A locked plan task, the form in which the backend exposes parameters
+/// to the model layer (the whole-model lock of
+/// [`StepPlan::with_all_tasks`](crate::optim::StepPlan::with_all_tasks)).
+pub type TaskGuard<'a> = MutexGuard<'a, ParamTask>;
+
+/// RMSNorm variance floor (LLaMA-style `1e-6`), shared by the attention
+/// and gated-MLP blocks.
+pub const RMS_EPS: f32 = 1e-6;
+
+/// Batch input: either tokens (LM) or images+labels (vision).
+pub enum Batch<'a> {
+    /// Row-major `rows × cols` token ids.
+    Tokens(&'a [i32]),
+    /// Flattened image pixels plus one label per image.
+    Images {
+        /// `batch × hw × hw` pixels, row-major.
+        images: &'a [f32],
+        /// One class label per image.
+        labels: &'a [i32],
+    },
+}
+
+/// The batch geometry a model consumes — what the data feed needs to
+/// know to assemble inputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchShape {
+    /// LM token batches: `rows` sequences of `cols` tokens each.
+    Tokens {
+        /// Sequences per batch.
+        rows: usize,
+        /// Tokens per sequence (context + 1 target).
+        cols: usize,
+    },
+    /// Vision batches: `batch` square images plus labels.
+    Images {
+        /// Images per batch.
+        batch: usize,
+        /// Image side length (images are `hw × hw`).
+        hw: usize,
+        /// Total pixels per batch (`batch × hw × hw`).
+        pixels: usize,
+    },
+}
+
+/// How a parameter is initialized.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ParamInit {
+    /// Gaussian with the given standard deviation.
+    Randn(f32),
+    /// Every element set to the given constant (norm gains, scan decays).
+    Const(f32),
+}
+
+/// What role a parameter plays — this drives the optimizer assignment in
+/// the training backend (the paper's protocol: matrix params on the
+/// matrix optimizer; embeddings/head on AdamW unless the `*emb` ablation
+/// variant flips them; vectors always element-wise).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamClass {
+    /// A 2-D weight matrix — rides the configured matrix optimizer.
+    Matrix,
+    /// The token embedding table (AdamW by default; matrix optimizer
+    /// under the `*emb` registry variants, Tables 15/16).
+    Embed,
+    /// The output head (same assignment rule as [`ParamClass::Embed`]).
+    Head,
+    /// A 1-D vector (RMSNorm gains, scan decays) — always AdamW: row
+    /// normalization or NS5 over a single row is degenerate.
+    Vector,
+}
+
+/// One named parameter in an architecture's layout.
+#[derive(Clone, Debug)]
+pub struct ParamDef {
+    /// Stable parameter name — the checkpoint section name and the
+    /// plan-task name.
+    pub name: String,
+    /// Rows of the parameter matrix (1 for vectors).
+    pub rows: usize,
+    /// Columns of the parameter matrix.
+    pub cols: usize,
+    /// Initialization recipe.
+    pub init: ParamInit,
+    /// Role (drives the backend's optimizer assignment).
+    pub class: ParamClass,
+}
+
+impl ParamDef {
+    /// Shorthand constructor.
+    pub fn new(
+        name: impl Into<String>,
+        rows: usize,
+        cols: usize,
+        init: ParamInit,
+        class: ParamClass,
+    ) -> Self {
+        ParamDef { name: name.into(), rows, cols, init, class }
+    }
+}
+
+/// One architecture: parameter layout plus forward/backward on the
+/// kernel layer.
+///
+/// Calling convention shared by all methods: `tasks` is the full task
+/// list in **plan scheduling order** (from
+/// [`StepPlan::with_all_tasks`](crate::optim::StepPlan::with_all_tasks)),
+/// and `idx` maps **layout order** (the order [`ModelArch::params`]
+/// returns) to positions in `tasks` — `&tasks[idx[0]]` is always the
+/// first parameter the layout declared. A full step is
+/// `load_batch → forward → backward`; `eval` is `load_batch → forward`.
+/// All three are allocation-free once the internal buffers and the
+/// workspace are warm (held by `tests/alloc.rs`).
+pub trait ModelArch: Send {
+    /// Which architecture this is (registry kind; names the checkpoint
+    /// stamp and the bench envelopes).
+    fn arch(&self) -> ArchKind;
+
+    /// The resolved model spec (dims, batch geometry, family).
+    fn spec(&self) -> &ModelSpec;
+
+    /// The batch geometry this model consumes.
+    fn batch_shape(&self) -> BatchShape;
+
+    /// The named-parameter layout, in a stable order. The backend
+    /// materializes exactly these tasks (same names, same shapes).
+    fn params(&self) -> Vec<ParamDef>;
+
+    /// Stage one batch into the model's input buffers (embedding lookup
+    /// for LM archs, pixel copy for vision). Validates shape and ranges.
+    fn load_batch(
+        &mut self,
+        tasks: &[TaskGuard<'_>],
+        idx: &[usize],
+        batch: &Batch,
+    ) -> anyhow::Result<()>;
+
+    /// Forward pass over the staged batch; returns the mean loss
+    /// (cross-entropy, accumulated in f64) and leaves every activation
+    /// the backward needs in place.
+    fn forward(&mut self, tasks: &[TaskGuard<'_>], idx: &[usize]) -> f64;
+
+    /// Backward pass: fills **every** task's gradient buffer (each is
+    /// fully overwritten). Requires a preceding [`ModelArch::forward`]
+    /// on the same staged batch.
+    fn backward(&mut self, tasks: &mut [TaskGuard<'_>], idx: &[usize]);
+}

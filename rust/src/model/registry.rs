@@ -1,0 +1,189 @@
+//! The model-tag table: one place that maps registry tags
+//! (`gpt2_tiny`, `llama_s130emb`, …) to an architecture and its dims —
+//! the model-side twin of `optim::registry`. Unknown tags are an
+//! **error**, never a silent default model.
+
+use crate::data::VOCAB;
+use crate::model::{attention, conv, gated_mlp, ssm, ModelArch};
+
+/// Which architecture implementation a tag resolves to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArchKind {
+    /// Causal single-head attention blocks (`gpt2_*` tags).
+    Attention,
+    /// RMSNorm + silu-gated MLP blocks over order-2 context (`llama_*`).
+    GatedMlp,
+    /// Linear state-space scan with learned sigmoid decay (`ssm_*`).
+    Ssm,
+    /// 3×3 conv stem + FC classifier (`vision_*`).
+    Conv,
+}
+
+impl ArchKind {
+    /// Short arch label — used in the checkpoint stamp, the `summary.jsonl`
+    /// `arch` field, and the per-arch bench envelopes.
+    pub fn name(self) -> &'static str {
+        match self {
+            ArchKind::Attention => "attention",
+            ArchKind::GatedMlp => "gated_mlp",
+            ArchKind::Ssm => "ssm",
+            ArchKind::Conv => "conv",
+        }
+    }
+}
+
+/// One scaled model configuration, resolved from a registry tag.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// Registry tag this spec was resolved from.
+    pub tag: String,
+    /// Model family: `gpt2` | `llama` | `ssm` | `vision`.
+    pub family: &'static str,
+    /// Which architecture implements this tag.
+    pub arch: ArchKind,
+    /// Embedding width (token families; conv channels side for vision is
+    /// [`ModelSpec::channels`]).
+    pub d_model: usize,
+    /// Hidden width (gated-MLP width, SSM state width, vision FC width;
+    /// the attention arch works at `d_model` throughout).
+    pub d_hidden: usize,
+    /// Number of stacked blocks (attention/gated archs; the SSM and conv
+    /// archs are single-block and ignore it).
+    pub layers: usize,
+    /// Sequences (or images) per batch.
+    pub batch: usize,
+    /// Tokens per sequence, context + target (0 for vision).
+    pub seq: usize,
+    /// Image side length (0 for token families).
+    pub hw: usize,
+    /// Conv stem channels (0 for token families).
+    pub channels: usize,
+    /// Output classes: the vocabulary for LMs, 10 for vision.
+    pub classes: usize,
+    /// Whether embeddings/head ride the matrix optimizer (the `*emb`
+    /// registry variants; Tables 15/16 ablation).
+    pub matrix_embeds: bool,
+}
+
+impl ModelSpec {
+    /// Positions per batch the loss averages over: next-token targets
+    /// for the sequence archs, context-pair targets for order-2 gated
+    /// MLP, one label per image for vision.
+    pub fn positions(&self) -> usize {
+        match self.arch {
+            ArchKind::Attention | ArchKind::Ssm => self.batch * (self.seq - 1),
+            ArchKind::GatedMlp => self.batch * (self.seq - 2),
+            ArchKind::Conv => self.batch,
+        }
+    }
+}
+
+/// tag → (family, arch, d_model, d_hidden, layers)
+const MODELS: &[(&str, &str, ArchKind, usize, usize, usize)] = &[
+    ("gpt2_tiny", "gpt2", ArchKind::Attention, 32, 64, 2),
+    ("gpt2_small", "gpt2", ArchKind::Attention, 48, 96, 2),
+    ("gpt2_medium", "gpt2", ArchKind::Attention, 64, 128, 3),
+    ("gpt2_large", "gpt2", ArchKind::Attention, 80, 160, 3),
+    ("llama_s60", "llama", ArchKind::GatedMlp, 32, 64, 2),
+    ("llama_s130", "llama", ArchKind::GatedMlp, 48, 96, 2),
+    ("llama_s350", "llama", ArchKind::GatedMlp, 64, 128, 3),
+    ("llama_s1b", "llama", ArchKind::GatedMlp, 96, 192, 4),
+    ("ssm_base", "ssm", ArchKind::Ssm, 48, 96, 2),
+    ("vision_base", "vision", ArchKind::Conv, 0, 96, 2),
+];
+
+/// Resolve a registry tag to its model spec. The `*emb` llama variants
+/// share dims with their base scale but put embeddings/head on the
+/// matrix optimizer. Unknown tags are an error (no silent default).
+pub fn model_spec(tag: &str) -> anyhow::Result<ModelSpec> {
+    let (base, matrix_embeds) = match tag.strip_suffix("emb") {
+        Some(b) if b.starts_with("llama_") => (b, true),
+        _ => (tag, false),
+    };
+    let &(_, family, arch, d_model, d_hidden, layers) = MODELS
+        .iter()
+        .find(|m| m.0 == base)
+        .ok_or_else(|| {
+            let known: Vec<&str> = MODELS.iter().map(|m| m.0).collect();
+            anyhow::anyhow!(
+                "unknown native model `{tag}` (known: {} — llama tags also \
+                 accept an `emb` suffix)",
+                known.join("|")
+            )
+        })?;
+    let vision = arch == ArchKind::Conv;
+    Ok(ModelSpec {
+        tag: tag.to_string(),
+        family,
+        arch,
+        d_model,
+        d_hidden,
+        layers,
+        batch: if vision { 16 } else { 8 },
+        seq: if vision { 0 } else { 33 },
+        hw: if vision { 8 } else { 0 },
+        channels: if vision { 8 } else { 0 },
+        classes: if vision { 10 } else { VOCAB },
+        matrix_embeds,
+    })
+}
+
+/// Build the architecture a tag selects, ready for a training backend.
+pub fn build_arch(tag: &str) -> anyhow::Result<Box<dyn ModelArch>> {
+    let spec = model_spec(tag)?;
+    Ok(match spec.arch {
+        ArchKind::Attention => Box::new(attention::AttentionArch::new(spec)),
+        ArchKind::GatedMlp => Box::new(gated_mlp::GatedMlpArch::new(spec)),
+        ArchKind::Ssm => Box::new(ssm::SsmArch::new(spec)),
+        ArchKind::Conv => Box::new(conv::ConvArch::new(spec)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_resolve_to_their_arch() {
+        assert_eq!(model_spec("gpt2_tiny").unwrap().arch, ArchKind::Attention);
+        assert_eq!(model_spec("llama_s1b").unwrap().arch, ArchKind::GatedMlp);
+        assert_eq!(model_spec("ssm_base").unwrap().arch, ArchKind::Ssm);
+        assert_eq!(model_spec("vision_base").unwrap().arch, ArchKind::Conv);
+        assert!(model_spec("gpt9_huge").is_err());
+        assert!(model_spec("ssm_baseemb").is_err(), "emb suffix is llama-only");
+    }
+
+    #[test]
+    fn emb_variants_share_dims_and_flip_the_flag() {
+        let base = model_spec("llama_s130").unwrap();
+        let emb = model_spec("llama_s130emb").unwrap();
+        assert_eq!(base.d_model, emb.d_model);
+        assert_eq!(base.layers, emb.layers);
+        assert!(!base.matrix_embeds && emb.matrix_embeds);
+        assert_eq!(emb.tag, "llama_s130emb");
+    }
+
+    #[test]
+    fn positions_follow_the_arch() {
+        assert_eq!(model_spec("gpt2_tiny").unwrap().positions(), 8 * 32);
+        assert_eq!(model_spec("llama_s60").unwrap().positions(), 8 * 31);
+        assert_eq!(model_spec("ssm_base").unwrap().positions(), 8 * 32);
+        assert_eq!(model_spec("vision_base").unwrap().positions(), 16);
+    }
+
+    #[test]
+    fn every_tag_builds_its_arch() {
+        for (tag, ..) in MODELS {
+            let arch = build_arch(tag).unwrap();
+            assert_eq!(arch.spec().tag, *tag);
+            assert_eq!(arch.arch(), model_spec(tag).unwrap().arch);
+            let defs = arch.params();
+            assert!(!defs.is_empty());
+            // names are unique (they become checkpoint section names)
+            let mut names: Vec<&str> = defs.iter().map(|d| d.name.as_str()).collect();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), defs.len(), "{tag}: duplicate param name");
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! Linear state-space scan — the arch behind the `ssm_*` tags.
+//!
+//! Per sequence (T = seq−1 input positions):
+//!
+//! ```text
+//! X = E[tokens]                    (T × d)
+//! U = X·W_in                       (T × h)
+//! a = σ(decay)                     (h, learned per-channel, init σ≈0.9)
+//! S_t = a ⊙ S_{t−1} + U_t          (the linear scan; S_{−1} = 0)
+//! H = X + S·W_out                  (residual)
+//! logits = H·W_head
+//! ```
+//!
+//! The scan backward is exact BPTT through the recurrence: with
+//! `ĝ_t = dS_t + a ⊙ ĝ_{t+1}` running from the last position down,
+//! `dU = ĝ`, `d a = Σ_t ĝ_t ⊙ S_{t−1}`, and the decay gradient follows
+//! through the sigmoid. The decay is a [`ParamClass::Vector`] (always
+//! AdamW); the in/out projections are matrix parameters, so the row-norm
+//! experiments see a recurrence-shaped spectrum (`ssm` tags) alongside
+//! attention and MLP blocks.
+
+use crate::data::VOCAB;
+use crate::model::common::{
+    check_token, gather_rows, scatter_add_rows, softmax_xent_fwd, xent_grad_inplace,
+};
+use crate::model::{
+    ArchKind, Batch, BatchShape, ModelArch, ModelSpec, ParamClass, ParamDef, ParamInit, TaskGuard,
+};
+use crate::tensor::{kernels, Workspace};
+
+/// Layout positions.
+const E: usize = 0;
+const WIN: usize = 1;
+const DECAY: usize = 2;
+const WOUT: usize = 3;
+const HEAD: usize = 4;
+
+/// sigmoid(DECAY_INIT) ≈ 0.9: a long-but-stable per-channel memory.
+const DECAY_INIT: f32 = 2.2;
+
+/// Single-block linear SSM with learned per-channel sigmoid decay.
+pub struct SsmArch {
+    spec: ModelSpec,
+    /// Input positions per sequence (`seq − 1`).
+    t: usize,
+    /// Total positions per batch.
+    n: usize,
+    ctx: Vec<usize>,
+    targets: Vec<usize>,
+    /// Embedded inputs, `n × d`.
+    x: Vec<f32>,
+    /// In-projection, `n × h`.
+    u: Vec<f32>,
+    /// Scan states, `n × h`.
+    s: Vec<f32>,
+    /// Residual block output, `n × d`.
+    hres: Vec<f32>,
+    /// σ(decay), recomputed each forward, `h`.
+    adecay: Vec<f32>,
+    logits: Vec<f32>,
+    probs: Vec<f32>,
+    // backward scratch
+    dh: Vec<f32>,
+    dx: Vec<f32>,
+    ds: Vec<f32>,
+    du: Vec<f32>,
+    dtmp: Vec<f32>,
+    da: Vec<f32>,
+    carry: Vec<f32>,
+    ws: Workspace,
+}
+
+impl SsmArch {
+    /// Preallocate every activation/gradient buffer for `spec`.
+    pub fn new(spec: ModelSpec) -> Self {
+        // positions() is the single source of the per-arch windowing
+        let n = spec.positions();
+        let t = n / spec.batch;
+        let (d, h, c) = (spec.d_model, spec.d_hidden, spec.classes);
+        SsmArch {
+            t,
+            n,
+            ctx: vec![0; n],
+            targets: vec![0; n],
+            x: vec![0.0f32; n * d],
+            u: vec![0.0f32; n * h],
+            s: vec![0.0f32; n * h],
+            hres: vec![0.0f32; n * d],
+            adecay: vec![0.0f32; h],
+            logits: vec![0.0f32; n * c],
+            probs: vec![0.0f32; n * c],
+            dh: vec![0.0f32; n * d],
+            dx: vec![0.0f32; n * d],
+            ds: vec![0.0f32; n * h],
+            du: vec![0.0f32; n * h],
+            dtmp: vec![0.0f32; n * d],
+            da: vec![0.0f32; h],
+            carry: vec![0.0f32; h],
+            ws: Workspace::new(),
+            spec,
+        }
+    }
+}
+
+impl ModelArch for SsmArch {
+    fn arch(&self) -> ArchKind {
+        ArchKind::Ssm
+    }
+
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn batch_shape(&self) -> BatchShape {
+        BatchShape::Tokens { rows: self.spec.batch, cols: self.spec.seq }
+    }
+
+    fn params(&self) -> Vec<ParamDef> {
+        let (d, h) = (self.spec.d_model, self.spec.d_hidden);
+        vec![
+            ParamDef::new("embed", VOCAB, d, ParamInit::Randn(1.0), ParamClass::Embed),
+            ParamDef::new(
+                "ssm.in",
+                d,
+                h,
+                ParamInit::Randn(1.0 / (d as f32).sqrt()),
+                ParamClass::Matrix,
+            ),
+            ParamDef::new("ssm.decay", 1, h, ParamInit::Const(DECAY_INIT), ParamClass::Vector),
+            ParamDef::new(
+                "ssm.out",
+                h,
+                d,
+                ParamInit::Randn(0.5 / (h as f32).sqrt()),
+                ParamClass::Matrix,
+            ),
+            ParamDef::new(
+                "head",
+                d,
+                self.spec.classes,
+                ParamInit::Randn(1.0 / (d as f32).sqrt()),
+                ParamClass::Head,
+            ),
+        ]
+    }
+
+    fn load_batch(
+        &mut self,
+        tasks: &[TaskGuard<'_>],
+        idx: &[usize],
+        batch: &Batch,
+    ) -> anyhow::Result<()> {
+        let spec = &self.spec;
+        let Batch::Tokens(tokens) = batch else {
+            anyhow::bail!("ssm arch consumes tokens, got images");
+        };
+        anyhow::ensure!(
+            tokens.len() == spec.batch * spec.seq,
+            "token batch has {} ids, model wants {}×{}",
+            tokens.len(),
+            spec.batch,
+            spec.seq
+        );
+        let t = self.t;
+        let mut r = 0usize;
+        for b in 0..spec.batch {
+            let row = &tokens[b * spec.seq..(b + 1) * spec.seq];
+            for j in 0..t {
+                self.ctx[r] = check_token(row[j])?;
+                self.targets[r] = check_token(row[j + 1])?;
+                r += 1;
+            }
+        }
+        debug_assert_eq!(r, self.n);
+        gather_rows(&mut self.x, tasks[idx[E]].w.data(), &self.ctx, spec.d_model);
+        Ok(())
+    }
+
+    fn forward(&mut self, tasks: &[TaskGuard<'_>], idx: &[usize]) -> f64 {
+        let (d, h, t, n) = (self.spec.d_model, self.spec.d_hidden, self.t, self.n);
+        kernels::matmul_into(&mut self.u, &self.x, tasks[idx[WIN]].w.data(), n, d, h);
+        let decay = tasks[idx[DECAY]].w.data();
+        for (a, &l) in self.adecay.iter_mut().zip(decay) {
+            *a = 1.0 / (1.0 + (-l).exp());
+        }
+        // the scan, per sequence: S_t = a ⊙ S_{t−1} + U_t
+        for seq in 0..self.spec.batch {
+            let base = seq * t;
+            self.s[base * h..(base + 1) * h].copy_from_slice(&self.u[base * h..(base + 1) * h]);
+            for r in 1..t {
+                let (prev_rows, cur_rows) = self.s.split_at_mut((base + r) * h);
+                let prev = &prev_rows[(base + r - 1) * h..];
+                let cur = &mut cur_rows[..h];
+                let urow = &self.u[(base + r) * h..(base + r + 1) * h];
+                for j in 0..h {
+                    cur[j] = self.adecay[j] * prev[j] + urow[j];
+                }
+            }
+        }
+        // residual out-projection: H = X + S·W_out
+        kernels::matmul_into(&mut self.dtmp, &self.s, tasks[idx[WOUT]].w.data(), n, h, d);
+        kernels::axpby_into(&mut self.hres, 1.0, &self.x, 1.0, &self.dtmp);
+        let c = self.spec.classes;
+        kernels::matmul_into(&mut self.logits, &self.hres, tasks[idx[HEAD]].w.data(), n, d, c);
+        softmax_xent_fwd(&self.logits, &mut self.probs, &self.targets, n, c)
+    }
+
+    fn backward(&mut self, tasks: &mut [TaskGuard<'_>], idx: &[usize]) {
+        let (d, h, t, n, c) = (
+            self.spec.d_model,
+            self.spec.d_hidden,
+            self.t,
+            self.n,
+            self.spec.classes,
+        );
+        xent_grad_inplace(&mut self.probs, &self.targets, n, c);
+        // head grad + dH
+        {
+            let mut ht = self.ws.take(d * n);
+            kernels::transpose_into(&mut ht, &self.hres, n, d);
+            kernels::matmul_into(tasks[idx[HEAD]].grad.data_mut(), &ht, &self.probs, d, n, c);
+            self.ws.give(ht);
+            let mut wt = self.ws.take(c * d);
+            kernels::transpose_into(&mut wt, tasks[idx[HEAD]].w.data(), d, c);
+            kernels::matmul_into(&mut self.dh, &self.probs, &wt, n, c, d);
+            self.ws.give(wt);
+        }
+        // residual passthrough
+        self.dx.copy_from_slice(&self.dh);
+        // dW_out = Sᵀ·dH ; dS = dH·W_outᵀ
+        {
+            let mut st = self.ws.take(h * n);
+            kernels::transpose_into(&mut st, &self.s, n, h);
+            kernels::matmul_into(tasks[idx[WOUT]].grad.data_mut(), &st, &self.dh, h, n, d);
+            self.ws.give(st);
+            let mut wt = self.ws.take(d * h);
+            kernels::transpose_into(&mut wt, tasks[idx[WOUT]].w.data(), h, d);
+            kernels::matmul_into(&mut self.ds, &self.dh, &wt, n, d, h);
+            self.ws.give(wt);
+        }
+        // BPTT through the scan: ĝ_t = dS_t + a ⊙ ĝ_{t+1}
+        self.da.fill(0.0);
+        for seq in 0..self.spec.batch {
+            let base = seq * t;
+            self.carry.fill(0.0);
+            for r in (0..t).rev() {
+                let row = (base + r) * h;
+                for j in 0..h {
+                    let g = self.ds[row + j] + self.carry[j];
+                    self.du[row + j] = g;
+                    if r > 0 {
+                        self.da[j] += g * self.s[row - h + j];
+                    }
+                    self.carry[j] = self.adecay[j] * g;
+                }
+            }
+        }
+        // decay grad through the sigmoid
+        {
+            let dg = tasks[idx[DECAY]].grad.data_mut();
+            for j in 0..h {
+                let a = self.adecay[j];
+                dg[j] = self.da[j] * a * (1.0 - a);
+            }
+        }
+        // dW_in = Xᵀ·ĝ ; dX += ĝ·W_inᵀ
+        {
+            let mut xt = self.ws.take(d * n);
+            kernels::transpose_into(&mut xt, &self.x, n, d);
+            kernels::matmul_into(tasks[idx[WIN]].grad.data_mut(), &xt, &self.du, d, n, h);
+            self.ws.give(xt);
+            let mut wt = self.ws.take(h * d);
+            kernels::transpose_into(&mut wt, tasks[idx[WIN]].w.data(), d, h);
+            kernels::matmul_into(&mut self.dtmp, &self.du, &wt, n, h, d);
+            self.ws.give(wt);
+            kernels::axpby_inplace(&mut self.dx, 1.0, &self.dtmp, 1.0);
+        }
+        let egrad = tasks[idx[E]].grad.data_mut();
+        egrad.fill(0.0);
+        scatter_add_rows(egrad, &self.dx, &self.ctx, d);
+    }
+}

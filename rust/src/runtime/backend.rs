@@ -8,8 +8,9 @@
 //!
 //! * [`NativeBackend`](crate::runtime::native::NativeBackend) — always
 //!   available. Holds the parameters as host
-//!   [`Matrix`](crate::tensor::Matrix)es, computes the scaled-model
-//!   loss/gradients on the CPU kernel layer, and steps them through
+//!   [`Matrix`](crate::tensor::Matrix)es, runs the model layer's
+//!   architecture blocks ([`ModelArch`](crate::model::ModelArch)) on the
+//!   CPU kernel layer, and steps them through
 //!   [`StepPlan`](crate::optim::StepPlan) so multi-parameter sharding
 //!   drives a real training trajectory. This is the default
 //!   (`runtime.backend = "native"`).
@@ -33,40 +34,10 @@ pub struct StepMetrics {
     pub clipped: f32,
 }
 
-/// Batch input: either tokens (LM) or images+labels (vision).
-pub enum Batch<'a> {
-    /// Row-major `rows × cols` token ids.
-    Tokens(&'a [i32]),
-    /// Flattened image pixels plus one label per image.
-    Images {
-        /// `batch × hw × hw` pixels, row-major.
-        images: &'a [f32],
-        /// One class label per image.
-        labels: &'a [i32],
-    },
-}
-
-/// The batch geometry a backend consumes — what the data feed needs to
-/// know to assemble inputs.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum BatchShape {
-    /// LM token batches: `rows` sequences of `cols` tokens each.
-    Tokens {
-        /// Sequences per batch.
-        rows: usize,
-        /// Tokens per sequence (context + 1 target).
-        cols: usize,
-    },
-    /// Vision batches: `batch` square images plus labels.
-    Images {
-        /// Images per batch.
-        batch: usize,
-        /// Image side length (images are `hw × hw`).
-        hw: usize,
-        /// Total pixels per batch (`batch × hw × hw`).
-        pixels: usize,
-    },
-}
+// `Batch` and `BatchShape` describe model I/O geometry, so they live in
+// the model layer since PR 5; re-exported here because the backends (and
+// the coordinator's feeds) speak them too.
+pub use crate::model::{Batch, BatchShape};
 
 /// One named state buffer (a parameter or an optimizer moment), the unit
 /// of checkpoint I/O. Defined here — at the backend layer — so both the
@@ -99,6 +70,14 @@ pub struct TrainState {
 pub trait TrainBackend {
     /// Human-readable backend label for logs (`"native"` / `"pjrt"`).
     fn label(&self) -> &'static str;
+
+    /// The model-architecture label of this run (`"attention"`,
+    /// `"gated_mlp"`, `"ssm"`, `"conv"`; PJRT artifact runs report
+    /// `"artifact"` — the arch lives inside the lowered HLO). Threads
+    /// into `summary.jsonl` and the per-arch bench envelopes.
+    fn arch(&self) -> &'static str {
+        "artifact"
+    }
 
     /// The batch geometry this backend consumes.
     fn batch_shape(&self) -> BatchShape;

@@ -8,7 +8,9 @@ use crate::util::json::{parse, Json};
 /// Element type of a graph input/output.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer (token ids, labels, counters).
     I32,
 }
 
@@ -20,6 +22,7 @@ impl Dtype {
             other => anyhow::bail!("unsupported dtype `{other}`"),
         })
     }
+    /// Bytes per element (both supported dtypes are 4-byte).
     pub fn bytes(&self) -> usize {
         4
     }
@@ -28,15 +31,20 @@ impl Dtype {
 /// One named tensor slot of a graph.
 #[derive(Clone, Debug)]
 pub struct TensorSpec {
+    /// Slot name from the manifest.
     pub name: String,
+    /// Tensor dimensions (empty = scalar).
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: Dtype,
 }
 
 impl TensorSpec {
+    /// Total element count (scalars count as 1).
     pub fn elements(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
+    /// Total byte size of the tensor.
     pub fn byte_size(&self) -> usize {
         self.elements() * self.dtype.bytes()
     }
@@ -63,50 +71,75 @@ impl TensorSpec {
 /// One lowered graph.
 #[derive(Clone, Debug)]
 pub struct GraphSpec {
+    /// Manifest key of the graph.
     pub name: String,
+    /// HLO text file, relative to the artifact directory.
     pub file: String,
+    /// Input tensor slots, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor slots, in return order.
     pub outputs: Vec<TensorSpec>,
 }
 
 /// Per-(model, optimizer) artifact set.
 #[derive(Clone, Debug)]
 pub struct OptEntry {
+    /// Fused train-step graph name.
     pub train: String,
+    /// State-initialization graph name.
     pub init: String,
+    /// Held-out evaluation graph name.
     pub eval: String,
+    /// Dominance-probe graph name (matrix-momentum optimizers only).
     pub dominance: Option<String>,
+    /// State-buffer indices the dominance graph consumes.
     pub dom_indices: Vec<usize>,
+    /// Names of those momentum buffers.
     pub dom_names: Vec<String>,
+    /// Every state buffer name, parameters first.
     pub state_names: Vec<String>,
+    /// How many leading state buffers are parameters.
     pub n_params: usize,
 }
 
 /// Per-model metadata.
 #[derive(Clone, Debug)]
 pub struct ModelEntry {
+    /// Model family (`gpt2` | `llama` | `ssm` | `vision`).
     pub family: String,
+    /// Scale label within the family (`tiny`, `s130`, …).
     pub scale: String,
+    /// Total trainable parameters.
     pub param_count: usize,
+    /// Batch input tensors the train/eval graphs consume.
     pub batch_specs: Vec<TensorSpec>,
+    /// Artifact sets per optimizer name.
     pub optimizers: BTreeMap<String, OptEntry>,
 }
 
 /// Preconditioner-op metadata (Table 2 bench).
 #[derive(Clone, Debug)]
 pub struct PrecondOp {
+    /// NS5 orthogonalization graph name.
     pub ns5: String,
+    /// Row-normalization graph name.
     pub rownorm: String,
+    /// Analytic FLOP count of one NS5 call.
     pub ns5_flops: f64,
+    /// Analytic FLOP count of one rownorm call.
     pub rownorm_flops: f64,
+    /// Working-set bytes of the op pair.
     pub vmem_bytes: f64,
 }
 
 /// One Table 4 model row for the precond bench.
 #[derive(Clone, Debug)]
 pub struct PrecondModel {
+    /// Paper model name for the row.
     pub name: String,
+    /// Transformer layer count.
     pub layers: usize,
+    /// Model width.
     pub d_model: usize,
     /// (shape, multiplicity within the model)
     pub counts: Vec<((usize, usize), usize)>,
@@ -115,11 +148,17 @@ pub struct PrecondModel {
 /// The whole manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Artifact directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Shared vocabulary size.
     pub vocab: usize,
+    /// Every lowered graph by name.
     pub graphs: BTreeMap<String, GraphSpec>,
+    /// Per-model metadata by registry tag.
     pub models: BTreeMap<String, ModelEntry>,
+    /// Preconditioner benchmark ops by shape key.
     pub precond_ops: BTreeMap<String, PrecondOp>,
+    /// Table 4 model rows for the precond bench.
     pub precond_models: Vec<PrecondModel>,
 }
 
@@ -265,24 +304,28 @@ impl Manifest {
         Ok(man)
     }
 
+    /// Look up a graph by manifest name.
     pub fn graph(&self, name: &str) -> anyhow::Result<&GraphSpec> {
         self.graphs
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("manifest: unknown graph `{name}`"))
     }
 
+    /// Look up a model by registry tag.
     pub fn model(&self, tag: &str) -> anyhow::Result<&ModelEntry> {
         self.models
             .get(tag)
             .ok_or_else(|| anyhow::anyhow!("manifest: unknown model `{tag}`"))
     }
 
+    /// Look up a (model, optimizer) artifact set.
     pub fn opt_entry(&self, model: &str, opt: &str) -> anyhow::Result<&OptEntry> {
         self.model(model)?.optimizers.get(opt).ok_or_else(|| {
             anyhow::anyhow!("manifest: model `{model}` has no optimizer `{opt}`")
         })
     }
 
+    /// Absolute path of a graph's HLO text file.
     pub fn graph_path(&self, name: &str) -> anyhow::Result<PathBuf> {
         Ok(self.dir.join(&self.graph(name)?.file))
     }

@@ -19,10 +19,6 @@
 //! and the PJRT `TrainSession` (behind `pjrt`) implement the same trait,
 //! so `coordinator::train` runs whole pretrain/sweep workloads offline.
 
-// The crate-level `missing_docs` warning is enforced for tensor/ and
-// optim/; this module's full docs pass is still pending (ROADMAP.md).
-#![allow(missing_docs)]
-
 pub mod backend;
 pub mod manifest;
 pub mod native;
@@ -40,14 +36,20 @@ use std::rc::Rc;
 
 pub use backend::{Batch, BatchShape, NamedBuffer, StepMetrics, TrainBackend, TrainState};
 pub use manifest::{Dtype, GraphSpec, Manifest, TensorSpec};
-pub use native::{native_model, NativeBackend, NativeModelSpec};
+pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]
 pub use session::TrainSession;
+
+// the model layer owns specs/tags since PR 5; re-exported here because
+// the backend surface is where callers historically found them
+pub use crate::model::{model_spec, ModelSpec};
 
 /// PJRT client + compiled-executable cache over one artifact directory.
 #[cfg(feature = "pjrt")]
 pub struct Engine {
+    /// The PJRT CPU client every buffer/executable hangs off.
     pub client: xla::PjRtClient,
+    /// The artifact manifest the engine serves graphs from.
     pub manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
 }

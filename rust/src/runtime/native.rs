@@ -2,482 +2,124 @@
 //!
 //! [`NativeBackend`] executes whole training runs without artifacts,
 //! XLA, or the `pjrt` feature: parameters live as host
-//! [`Matrix`]es inside a [`StepPlan`], the scaled-model loss and
-//! gradients are computed on the CPU kernel layer, and every optimizer
-//! update goes through the plan's sharded fused stepping — the
-//! multi-parameter sharding from `optim/plan.rs` finally drives a real
-//! trajectory instead of synthetic benchmarks.
+//! [`Matrix`]es inside a [`StepPlan`], and the model math — forward and
+//! backward — lives in the [`model`](crate::model) layer behind a
+//! `Box<dyn ModelArch>`: real attention blocks for the `gpt2` tags,
+//! RMSNorm-gated MLP blocks for `llama`, a linear SSM scan for `ssm`,
+//! and a conv stem for `vision` (this file no longer defines any model
+//! math; it wires batches, clipping, stepping, and checkpoint state).
 //!
-//! ## The scaled model
+//! ## Responsibilities
 //!
-//! Each registry tag (`gpt2_tiny`, `llama_s130`, …) maps to a scaled
-//! MLP via [`native_model`]:
+//! * Resolve the registry tag through
+//!   [`model::build_arch`](crate::model::build_arch) and materialize the
+//!   arch's [`ParamDef`](crate::model::ParamDef) layout as [`StepPlan`]
+//!   tasks, assigning each
+//!   parameter its optimizer: [`ParamClass::Matrix`] rides the
+//!   configured matrix optimizer, embeddings/head ride AdamW (the
+//!   paper's default protocol — the `*emb` registry variants flip them),
+//!   and [`ParamClass::Vector`] (norm gains, scan decays) always rides
+//!   AdamW.
+//! * Drive `load_batch → forward → backward` under the whole-model lock,
+//!   apply the global [`CLIP_NORM`] gradient clip (f64 accumulation in
+//!   scheduling order), and shard the fused optimizer updates through
+//!   `StepPlan::step_all`.
+//! * Checkpointing: `export_state`/`import_state` move parameters *and*
+//!   optimizer state through named buffers bit-exactly, and stamp the
+//!   **model arch + tag** into the parameter section (`__model__:` …).
+//!   Importing a checkpoint written by a different tag or arch is a
+//!   clean error — a shape-compatible wrong-arch resume can no longer
+//!   silently import (`--resume` surfaces the message).
 //!
-//! * **Token families** (gpt2/llama/ssm) — an order-2 neural LM over the
-//!   shared 512-token vocabulary: each position embeds its two
-//!   predecessor tokens (`x = [E[t-1], E[t-2]]`, matching the corpus
-//!   generators' order-2 structure), runs them through `layers` ReLU
-//!   matrix layers, and projects to vocabulary logits; softmax
-//!   cross-entropy against the next token.
-//! * **Vision** — the same MLP over flattened `hw × hw` pixels with a
-//!   10-class head.
+//! ## Determinism
 //!
-//! Matrix parameters (`h0.in`, `h*.mlp`) are stepped by the configured
-//! matrix optimizer; `embed`/`head` ride on AdamW exactly as in the
-//! paper's default protocol (the `*emb` registry variants put them on
-//! the matrix optimizer — the Tables 15/16 ablation axis). Gradients are
-//! globally norm-clipped at [`CLIP_NORM`] before stepping, which is
-//! what the `clipped` metric reports.
-//!
-//! ## Determinism and checkpointing
-//!
-//! The forward/backward is plain sequential host code over the
+//! The forward/backward is sequential host code over the
 //! bit-deterministic kernels, and `StepPlan` guarantees identical bits
-//! for any `perf.plan_threads`; `export_state`/`import_state` move the
-//! parameters *and* optimizer state through named buffers bit-exactly,
-//! so save → restore → continue reproduces an uninterrupted run
-//! (`tests/native_train.rs` asserts this at the checkpoint-file level).
+//! for any `perf.plan_threads`; save → restore → continue reproduces an
+//! uninterrupted run (`tests/native_train.rs` asserts this at the
+//! checkpoint-file level, `tests/model_grad.rs` per arch).
 
-use std::sync::MutexGuard;
-
-use crate::data::VOCAB;
+use crate::model::{self, ModelArch, ModelSpec, ParamClass, ParamInit};
 use crate::optim::plan::{OptKind, ParamTask, StepPlan};
-use crate::optim::registry::{native_kind, MatrixOptimizer, NamedState};
+use crate::optim::registry::{native_kind, NamedState};
 use crate::runtime::backend::{
     Batch, BatchShape, NamedBuffer, StepMetrics, TrainBackend, TrainState,
 };
-use crate::tensor::{Matrix, Workspace};
+use crate::tensor::Matrix;
 use crate::util::Rng;
 
 /// Global gradient-norm clip threshold (paper protocol).
 pub const CLIP_NORM: f64 = 1.0;
 
-/// One scaled host model configuration.
-#[derive(Clone, Debug)]
-pub struct NativeModelSpec {
-    /// Registry tag this spec was resolved from.
-    pub tag: String,
-    /// Model family: `gpt2` | `llama` | `ssm` | `vision`.
-    pub family: &'static str,
-    /// Embedding width (token families).
-    pub d_model: usize,
-    /// Hidden width of the ReLU layers.
-    pub d_hidden: usize,
-    /// Number of hidden matrix layers (≥ 1).
-    pub layers: usize,
-    /// Sequences (or images) per batch.
-    pub batch: usize,
-    /// Tokens per sequence, context + target (0 for vision).
-    pub seq: usize,
-    /// Image side length (0 for token families).
-    pub hw: usize,
-    /// Output classes: the vocabulary for LMs, 10 for vision.
-    pub classes: usize,
-    /// Whether embeddings/head ride on the matrix optimizer (the `*emb`
-    /// registry variants; Tables 15/16 ablation).
-    pub matrix_embeds: bool,
-}
+/// Prefix of the arch/tag stamp buffer in the checkpoint parameter
+/// section (`__model__:<arch>:<tag>`, zero-length payload).
+const STAMP_PREFIX: &str = "__model__:";
 
-impl NativeModelSpec {
-    /// Network input width: two concatenated embeddings for LMs, the
-    /// flattened pixel count for vision.
-    pub fn in_dim(&self) -> usize {
-        if self.family == "vision" {
-            self.hw * self.hw
-        } else {
-            2 * self.d_model
-        }
-    }
-
-    /// Positions per batch the loss averages over.
-    pub fn positions(&self) -> usize {
-        if self.family == "vision" {
-            self.batch
-        } else {
-            self.batch * (self.seq - 2)
-        }
-    }
-}
-
-/// Resolve a registry tag to its scaled host model. Unknown tags are an
-/// error (no silent default model).
-pub fn native_model(tag: &str) -> anyhow::Result<NativeModelSpec> {
-    // the `*emb` llama variants share dims with their base scale but put
-    // embeddings/head on the matrix optimizer
-    let (base, matrix_embeds) = match tag.strip_suffix("emb") {
-        Some(b) if b.starts_with("llama_") => (b, true),
-        _ => (tag, false),
-    };
-    let (family, d_model, d_hidden, layers): (&'static str, usize, usize, usize) =
-        match base {
-            "gpt2_tiny" => ("gpt2", 32, 64, 2),
-            "gpt2_small" => ("gpt2", 48, 96, 2),
-            "gpt2_medium" => ("gpt2", 64, 128, 3),
-            "gpt2_large" => ("gpt2", 80, 160, 3),
-            "llama_s60" => ("llama", 32, 64, 2),
-            "llama_s130" => ("llama", 48, 96, 2),
-            "llama_s350" => ("llama", 64, 128, 3),
-            "llama_s1b" => ("llama", 96, 192, 4),
-            "ssm_base" => ("ssm", 48, 96, 2),
-            "vision_base" => ("vision", 0, 96, 2),
-            other => anyhow::bail!(
-                "unknown native model `{other}` (gpt2_tiny|gpt2_small|gpt2_medium|\
-                 gpt2_large|llama_s60|llama_s130|llama_s350|llama_s1b|\
-                 llama_s60emb|llama_s130emb|ssm_base|vision_base)"
-            ),
-        };
-    let vision = family == "vision";
-    Ok(NativeModelSpec {
-        tag: tag.to_string(),
-        family,
-        d_model,
-        d_hidden,
-        layers,
-        batch: if vision { 16 } else { 8 },
-        seq: if vision { 0 } else { 33 },
-        hw: if vision { 8 } else { 0 },
-        classes: if vision { 10 } else { VOCAB },
-        matrix_embeds,
-    })
-}
-
-type TaskGuard<'a> = MutexGuard<'a, ParamTask>;
-
-/// Preallocated activation/gradient buffers for the scaled model. All
-/// matmuls go through `*_into` and the workspace, so a warm step
-/// allocates nothing.
-struct Net {
-    spec: NativeModelSpec,
-    /// network input, `positions × in_dim`
-    x: Matrix,
-    /// post-ReLU activations per hidden layer, `positions × d_hidden`
-    act: Vec<Matrix>,
-    /// logits, `positions × classes`
-    logits: Matrix,
-    /// softmax probabilities, then dLogits (reused in place)
-    probs: Matrix,
-    /// backprop ping-pong buffers, `positions × d_hidden`
-    da: Matrix,
-    db: Matrix,
-    /// d(input) for the embedding backward, `positions × in_dim`
-    dx: Matrix,
-    /// per-position context token pair (LM families)
-    ctx: Vec<(usize, usize)>,
-    /// per-position target class
-    targets: Vec<usize>,
-    /// transpose scratch
-    ws: Workspace,
-}
-
-impl Net {
-    fn new(spec: NativeModelSpec) -> Self {
-        let n = spec.positions();
-        let (in_dim, h, c) = (spec.in_dim(), spec.d_hidden, spec.classes);
-        Net {
-            x: Matrix::zeros(n, in_dim),
-            act: (0..spec.layers).map(|_| Matrix::zeros(n, h)).collect(),
-            logits: Matrix::zeros(n, c),
-            probs: Matrix::zeros(n, c),
-            da: Matrix::zeros(n, h),
-            db: Matrix::zeros(n, h),
-            dx: Matrix::zeros(n, in_dim),
-            ctx: vec![(0, 0); n],
-            targets: vec![0; n],
-            ws: Workspace::new(),
-            spec,
-        }
-    }
-
-    /// Fill `x`, `ctx`, and `targets` from a batch (embedding lookup for
-    /// LM families, pixel copy for vision).
-    fn load_batch(
-        &mut self,
-        tasks: &[TaskGuard<'_>],
-        idx: &Indices,
-        batch: &Batch,
-    ) -> anyhow::Result<()> {
-        let spec = &self.spec;
-        let n = spec.positions();
-        match batch {
-            Batch::Tokens(tokens) => {
-                anyhow::ensure!(spec.family != "vision", "vision model fed tokens");
-                anyhow::ensure!(
-                    tokens.len() == spec.batch * spec.seq,
-                    "token batch has {} ids, model wants {}×{}",
-                    tokens.len(),
-                    spec.batch,
-                    spec.seq
-                );
-                let embed = &tasks[idx.embed.expect("LM has embed")].w;
-                let d = spec.d_model;
-                let mut r = 0usize;
-                for b in 0..spec.batch {
-                    let row = &tokens[b * spec.seq..(b + 1) * spec.seq];
-                    for j in 2..spec.seq {
-                        let (t1, t2, y) =
-                            (row[j - 1] as usize, row[j - 2] as usize, row[j] as usize);
-                        anyhow::ensure!(
-                            t1 < VOCAB && t2 < VOCAB && y < VOCAB,
-                            "token id out of vocab range"
-                        );
-                        let dst = &mut self.x.data_mut()[r * 2 * d..(r + 1) * 2 * d];
-                        dst[..d].copy_from_slice(embed.row(t1));
-                        dst[d..].copy_from_slice(embed.row(t2));
-                        self.ctx[r] = (t1, t2);
-                        self.targets[r] = y;
-                        r += 1;
-                    }
-                }
-                debug_assert_eq!(r, n);
-            }
-            Batch::Images { images, labels } => {
-                anyhow::ensure!(spec.family == "vision", "{} model fed images", spec.family);
-                let px = spec.hw * spec.hw;
-                anyhow::ensure!(
-                    images.len() == spec.batch * px && labels.len() == spec.batch,
-                    "image batch shape mismatch"
-                );
-                self.x.data_mut().copy_from_slice(images);
-                for (r, &l) in labels.iter().enumerate() {
-                    anyhow::ensure!(
-                        (l as usize) < spec.classes,
-                        "label {l} out of range"
-                    );
-                    self.targets[r] = l as usize;
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// Forward pass; returns the mean cross-entropy and leaves softmax
-    /// probabilities in `probs`.
-    fn forward(&mut self, tasks: &[TaskGuard<'_>], idx: &Indices) -> f64 {
-        // hidden stack: act[0] = relu(x·W0), act[i] = relu(act[i-1]·Wi)
-        for (i, &ti) in idx.layers.iter().enumerate() {
-            let w = &tasks[ti].w;
-            if i == 0 {
-                self.x.matmul_into(w, &mut self.act[0]);
-            } else {
-                let (prev, rest) = self.act.split_at_mut(i);
-                prev[i - 1].matmul_into(w, &mut rest[0]);
-            }
-            for v in self.act[i].data_mut() {
-                if *v < 0.0 {
-                    *v = 0.0;
-                }
-            }
-        }
-        self.act[self.spec.layers - 1].matmul_into(&tasks[idx.head].w, &mut self.logits);
-        // row-wise softmax + CE in one sweep; loss accumulates in f64
-        let c = self.spec.classes;
-        let n = self.spec.positions();
-        let mut loss = 0.0f64;
-        let zdata = self.logits.data();
-        let pdata = self.probs.data_mut();
-        for r in 0..n {
-            let row = &zdata[r * c..(r + 1) * c];
-            let out = &mut pdata[r * c..(r + 1) * c];
-            let mut max = f32::NEG_INFINITY;
-            for &v in row {
-                if v > max {
-                    max = v;
-                }
-            }
-            let mut sum = 0.0f64;
-            for (o, &v) in out.iter_mut().zip(row) {
-                let e = (v - max).exp();
-                *o = e;
-                sum += e as f64;
-            }
-            let inv = (1.0 / sum) as f32;
-            for o in out.iter_mut() {
-                *o *= inv;
-            }
-            let p = out[self.targets[r]].max(1e-30) as f64;
-            loss -= p.ln();
-        }
-        loss / n as f64
-    }
-
-    /// Backward pass: writes every task's gradient buffer. `probs` must
-    /// hold the forward's softmax output.
-    fn backward(&mut self, tasks: &mut [TaskGuard<'_>], idx: &Indices) {
-        let c = self.spec.classes;
-        let n = self.spec.positions();
-        let h = self.spec.d_hidden;
-        let last = self.spec.layers - 1;
-        // dZ = (softmax - onehot) / n, in place over probs
-        let invn = 1.0 / n as f32;
-        {
-            let pdata = self.probs.data_mut();
-            for r in 0..n {
-                let row = &mut pdata[r * c..(r + 1) * c];
-                row[self.targets[r]] -= 1.0;
-                for v in row.iter_mut() {
-                    *v *= invn;
-                }
-            }
-        }
-        // dW_head = act[last]ᵀ · dZ
-        {
-            let mut at = self.ws.take_matrix(h, n);
-            self.act[last].transpose_into(&mut at);
-            at.matmul_into(&self.probs, &mut tasks[idx.head].grad);
-            self.ws.give_matrix(at);
-        }
-        // da = dZ · W_headᵀ
-        {
-            let wh = &tasks[idx.head].w;
-            let mut wt = self.ws.take_matrix(wh.cols(), wh.rows());
-            wh.transpose_into(&mut wt);
-            self.probs.matmul_into(&wt, &mut self.da);
-            self.ws.give_matrix(wt);
-        }
-        // hidden layers, last → first
-        for i in (0..=last).rev() {
-            // ReLU mask: zero d where the activation was clamped
-            for (d, &a) in self.da.data_mut().iter_mut().zip(self.act[i].data()) {
-                if a <= 0.0 {
-                    *d = 0.0;
-                }
-            }
-            // dW_i = inputᵀ · da
-            let k = if i == 0 { self.spec.in_dim() } else { h };
-            {
-                let mut it = self.ws.take_matrix(k, n);
-                if i == 0 {
-                    self.x.transpose_into(&mut it);
-                } else {
-                    self.act[i - 1].transpose_into(&mut it);
-                }
-                it.matmul_into(&self.da, &mut tasks[idx.layers[i]].grad);
-                self.ws.give_matrix(it);
-            }
-            // d(input) for the next stage down
-            if i > 0 {
-                let w = &tasks[idx.layers[i]].w;
-                let mut wt = self.ws.take_matrix(w.cols(), w.rows());
-                w.transpose_into(&mut wt);
-                self.da.matmul_into(&wt, &mut self.db);
-                self.ws.give_matrix(wt);
-                std::mem::swap(&mut self.da, &mut self.db);
-            } else if let Some(ei) = idx.embed {
-                // dx = da · W0ᵀ, scattered back into the embedding rows
-                let w = &tasks[idx.layers[0]].w;
-                let mut wt = self.ws.take_matrix(w.cols(), w.rows());
-                w.transpose_into(&mut wt);
-                self.da.matmul_into(&wt, &mut self.dx);
-                self.ws.give_matrix(wt);
-                let d = self.spec.d_model;
-                let egrad = &mut tasks[ei].grad;
-                egrad.data_mut().fill(0.0);
-                let ge = egrad.data_mut();
-                let gx = self.dx.data();
-                for (r, &(t1, t2)) in self.ctx.iter().enumerate() {
-                    let src = &gx[r * 2 * d..(r + 1) * 2 * d];
-                    let dst1 = &mut ge[t1 * d..(t1 + 1) * d];
-                    for (g, &s) in dst1.iter_mut().zip(&src[..d]) {
-                        *g += s;
-                    }
-                    let dst2 = &mut ge[t2 * d..(t2 + 1) * d];
-                    for (g, &s) in dst2.iter_mut().zip(&src[d..]) {
-                        *g += s;
-                    }
-                }
-            }
-        }
-    }
-}
-
-/// Which plan task (in scheduling order) holds each named parameter.
-struct Indices {
-    embed: Option<usize>,
-    /// `h0.in` then `h1.mlp` … in network order
-    layers: Vec<usize>,
-    head: usize,
-}
-
-/// The always-available training backend: host matrices, kernel-layer
+/// The always-available training backend: host matrices, model-layer
 /// forward/backward, sharded fused stepping through [`StepPlan`].
 pub struct NativeBackend {
-    spec: NativeModelSpec,
+    arch: Box<dyn ModelArch>,
     plan: StepPlan,
-    net: Net,
-    idx: Indices,
+    /// Layout order → plan scheduling order.
+    idx: Vec<usize>,
     steps: usize,
 }
 
 impl NativeBackend {
-    /// Build a run: resolve the model tag, initialize parameters from
-    /// `seed`, assign per-parameter optimizers, and spin up the plan's
-    /// worker pool (`plan_threads`; 0 = kernel thread count).
+    /// Build a run: resolve the model tag to its architecture,
+    /// initialize parameters from `seed`, assign per-parameter
+    /// optimizers, and spin up the plan's worker pool (`plan_threads`;
+    /// 0 = kernel thread count).
     pub fn new(
         model: &str,
         optimizer: &str,
         seed: u64,
         plan_threads: usize,
     ) -> anyhow::Result<Self> {
-        let spec = native_model(model)?;
+        let arch = model::build_arch(model)?;
         let matrix_kind = native_kind(optimizer)?;
-        anyhow::ensure!(spec.layers >= 1, "model needs at least one layer");
-        // embeddings + LM head ride on AdamW in the default protocol;
-        // the `*emb` variants (and optimizer=adamw) put everything on one
-        let assign = |name: &str| -> OptKind {
-            if matrix_kind == OptKind::AdamW || spec.matrix_embeds {
-                return matrix_kind;
-            }
-            match name {
-                "embed" | "head" => OptKind::AdamW,
-                _ => matrix_kind,
-            }
-        };
-        let mut rng = Rng::new(seed ^ 0x0D0D_5EED);
-        let mut tasks = Vec::new();
-        let push = |name: &str, w: Matrix, tasks: &mut Vec<ParamTask>| {
-            tasks.push(ParamTask::new(name, w, assign(name)));
-        };
-        if spec.family != "vision" {
-            push("embed", Matrix::randn(VOCAB, spec.d_model, 1.0, &mut rng), &mut tasks);
-        }
-        for i in 0..spec.layers {
-            let (k, name) = if i == 0 {
-                (spec.in_dim(), "h0.in".to_string())
-            } else {
-                (spec.d_hidden, format!("h{i}.mlp"))
-            };
-            let std = (2.0 / k as f32).sqrt();
-            push(&name, Matrix::randn(k, spec.d_hidden, std, &mut rng), &mut tasks);
-        }
-        let head_std = 1.0 / (spec.d_hidden as f32).sqrt();
-        push(
-            "head",
-            Matrix::randn(spec.d_hidden, spec.classes, head_std, &mut rng),
-            &mut tasks,
-        );
-        let plan = StepPlan::new(tasks, plan_threads);
-        let find = |name: &str| -> anyhow::Result<usize> {
-            plan.task_index(name)
-                .ok_or_else(|| anyhow::anyhow!("plan lost task `{name}`"))
-        };
-        let idx = Indices {
-            embed: if spec.family == "vision" { None } else { Some(find("embed")?) },
-            layers: {
-                let mut v = vec![find("h0.in")?];
-                for i in 1..spec.layers {
-                    v.push(find(&format!("h{i}.mlp"))?);
+        let matrix_embeds = arch.spec().matrix_embeds;
+        let assign = |class: ParamClass| -> OptKind {
+            match class {
+                ParamClass::Matrix => matrix_kind,
+                // norm gains / scan decays: row-normalizing or NS5-ing a
+                // single row is degenerate, so vectors stay element-wise
+                ParamClass::Vector => OptKind::AdamW,
+                ParamClass::Embed | ParamClass::Head => {
+                    if matrix_embeds {
+                        matrix_kind
+                    } else {
+                        OptKind::AdamW
+                    }
                 }
-                v
-            },
-            head: find("head")?,
+            }
         };
-        let net = Net::new(spec.clone());
-        Ok(NativeBackend { spec, plan, net, idx, steps: 0 })
+        let defs = arch.params();
+        let mut rng = Rng::new(seed ^ 0x0D0D_5EED);
+        let mut tasks = Vec::with_capacity(defs.len());
+        for def in &defs {
+            let w = match def.init {
+                ParamInit::Randn(std) => Matrix::randn(def.rows, def.cols, std, &mut rng),
+                ParamInit::Const(v) => {
+                    Matrix::from_vec(def.rows, def.cols, vec![v; def.rows * def.cols])
+                }
+            };
+            tasks.push(ParamTask::new(&def.name, w, assign(def.class)));
+        }
+        let plan = StepPlan::new(tasks, plan_threads);
+        let idx = defs
+            .iter()
+            .map(|def| {
+                plan.task_index(&def.name)
+                    .ok_or_else(|| anyhow::anyhow!("plan lost task `{}`", def.name))
+            })
+            .collect::<anyhow::Result<Vec<usize>>>()?;
+        Ok(NativeBackend { arch, plan, idx, steps: 0 })
     }
 
     /// The resolved model spec.
-    pub fn spec(&self) -> &NativeModelSpec {
-        &self.spec
+    pub fn spec(&self) -> &ModelSpec {
+        self.arch.spec()
     }
 
     /// Number of parameter matrices in the plan.
@@ -489,6 +131,11 @@ impl NativeBackend {
     pub fn total_elems(&self) -> usize {
         self.plan.total_elems()
     }
+
+    /// The checkpoint stamp this run writes/expects.
+    fn stamp(&self) -> String {
+        format!("{STAMP_PREFIX}{}:{}", self.arch.arch().name(), self.spec().tag)
+    }
 }
 
 impl TrainBackend for NativeBackend {
@@ -496,27 +143,23 @@ impl TrainBackend for NativeBackend {
         "native"
     }
 
+    fn arch(&self) -> &'static str {
+        self.arch.arch().name()
+    }
+
     fn batch_shape(&self) -> BatchShape {
-        if self.spec.family == "vision" {
-            BatchShape::Images {
-                batch: self.spec.batch,
-                hw: self.spec.hw,
-                pixels: self.spec.batch * self.spec.hw * self.spec.hw,
-            }
-        } else {
-            BatchShape::Tokens { rows: self.spec.batch, cols: self.spec.seq }
-        }
+        self.arch.batch_shape()
     }
 
     fn step(&mut self, batch: &Batch, lr: f32) -> anyhow::Result<StepMetrics> {
-        let net = &mut self.net;
+        let arch = &mut self.arch;
         let idx = &self.idx;
         let plan = &self.plan;
         let (loss, grad_norm, clipped) =
             plan.with_all_tasks(|tasks| -> anyhow::Result<(f64, f64, f32)> {
-                net.load_batch(tasks, idx, batch)?;
-                let loss = net.forward(tasks, idx);
-                net.backward(tasks, idx);
+                arch.load_batch(tasks, idx, batch)?;
+                let loss = arch.forward(tasks, idx);
+                arch.backward(tasks, idx);
                 // global-norm clip, f64 accumulation in scheduling order
                 // (deterministic for any plan_threads)
                 let mut sq = 0.0f64;
@@ -547,11 +190,11 @@ impl TrainBackend for NativeBackend {
     }
 
     fn eval(&mut self, batch: &Batch) -> anyhow::Result<f32> {
-        let net = &mut self.net;
+        let arch = &mut self.arch;
         let idx = &self.idx;
         let loss = self.plan.with_all_tasks(|tasks| -> anyhow::Result<f64> {
-            net.load_batch(tasks, idx, batch)?;
-            Ok(net.forward(tasks, idx))
+            arch.load_batch(tasks, idx, batch)?;
+            Ok(arch.forward(tasks, idx))
         })?;
         Ok(loss as f32)
     }
@@ -570,7 +213,9 @@ impl TrainBackend for NativeBackend {
     }
 
     fn export_state(&mut self) -> anyhow::Result<TrainState> {
-        let mut params = Vec::new();
+        // the arch/tag stamp leads the parameter section so a resume can
+        // verify the checkpoint matches the model before touching weights
+        let mut params = vec![NamedBuffer { name: self.stamp(), data: Vec::new() }];
         let mut opt = Vec::new();
         self.plan.with_all_tasks(|tasks| {
             for t in tasks.iter() {
@@ -587,7 +232,25 @@ impl TrainBackend for NativeBackend {
     }
 
     fn import_state(&mut self, state: &TrainState) -> anyhow::Result<()> {
-        let mut used_params = 0usize;
+        // arch/tag stamp first: shape-compatible wrong-arch checkpoints
+        // must be a clean error, not a silent import
+        let want = self.stamp();
+        match state.params.iter().find(|b| b.name.starts_with(STAMP_PREFIX)) {
+            None => anyhow::bail!(
+                "checkpoint has no `{STAMP_PREFIX}` stamp (written by a \
+                 pre-model-layer build or a different backend); cannot verify \
+                 it matches model `{}` — refusing to import",
+                self.spec().tag
+            ),
+            Some(b) if b.name != want => anyhow::bail!(
+                "checkpoint was written by `{}` but this run is `{}` — \
+                 refusing to resume across model architectures/tags",
+                &b.name[STAMP_PREFIX.len()..],
+                &want[STAMP_PREFIX.len()..]
+            ),
+            Some(_) => {}
+        }
+        let mut used_params = 1usize; // the stamp
         let mut used_opt = 0usize;
         self.plan.with_all_tasks(|tasks| -> anyhow::Result<()> {
             for t in tasks.iter_mut() {
@@ -646,8 +309,9 @@ mod tests {
     use crate::config::DataSpec;
     use crate::data::corpus::token_source;
     use crate::data::images::ImageSource;
+    use crate::model::model_spec;
 
-    fn token_batch(spec: &NativeModelSpec, seed: u64) -> Vec<i32> {
+    fn token_batch(spec: &ModelSpec, seed: u64) -> Vec<i32> {
         let mut t = vec![0i32; spec.batch * spec.seq];
         token_source(DataSpec::Markov, seed, 0).fill(&mut t);
         t
@@ -655,28 +319,40 @@ mod tests {
 
     #[test]
     fn unknown_model_and_pjrt_only_optimizer_error() {
-        assert!(native_model("gpt9_huge").is_err());
+        assert!(model_spec("gpt9_huge").is_err());
+        assert!(NativeBackend::new("gpt9_huge", "rmnp", 1, 1).is_err());
         assert!(NativeBackend::new("gpt2_tiny", "shampoo", 1, 1).is_err());
         assert!(NativeBackend::new("gpt2_tiny", "sgd", 1, 1).is_err());
     }
 
     #[test]
-    fn emb_variant_moves_embeddings_to_matrix_optimizer() {
-        let base = NativeBackend::new("llama_s60", "rmnp", 1, 1).unwrap();
-        let emb = NativeBackend::new("llama_s60emb", "rmnp", 1, 1).unwrap();
+    fn optimizer_assignment_follows_param_class() {
+        let b = NativeBackend::new("gpt2_tiny", "rmnp", 1, 1).unwrap();
         let kind_of = |b: &NativeBackend, name: &str| {
             let i = b.plan.task_index(name).unwrap();
             b.plan.with_task(i, |t| t.kind())
         };
-        assert_eq!(kind_of(&base, "embed"), OptKind::AdamW);
-        assert_eq!(kind_of(&base, "h0.in"), OptKind::Rmnp);
+        assert_eq!(kind_of(&b, "embed"), OptKind::AdamW);
+        assert_eq!(kind_of(&b, "head"), OptKind::AdamW);
+        assert_eq!(kind_of(&b, "blk0.wq"), OptKind::Rmnp);
+        assert_eq!(kind_of(&b, "blk1.wo"), OptKind::Rmnp);
+        assert_eq!(kind_of(&b, "blk0.gain"), OptKind::AdamW, "vectors stay AdamW");
+        // the *emb variant flips embed/head but never the vectors
+        let emb = NativeBackend::new("llama_s60emb", "rmnp", 1, 1).unwrap();
         assert_eq!(kind_of(&emb, "embed"), OptKind::Rmnp);
         assert_eq!(kind_of(&emb, "head"), OptKind::Rmnp);
+        assert_eq!(kind_of(&emb, "h0.gate"), OptKind::Rmnp);
+        assert_eq!(kind_of(&emb, "h0.gain"), OptKind::AdamW);
+        let base = NativeBackend::new("llama_s60", "rmnp", 1, 1).unwrap();
+        assert_eq!(kind_of(&base, "embed"), OptKind::AdamW);
+        assert_eq!(kind_of(&base, "h1.up"), OptKind::Rmnp);
     }
 
     #[test]
     fn loss_decreases_on_markov_lm() {
+        // the attention arch (gpt2 tags) must actually learn
         let mut b = NativeBackend::new("gpt2_tiny", "rmnp", 7, 2).unwrap();
+        assert_eq!(b.arch(), "attention");
         let mut first = 0.0;
         let mut last = 0.0;
         for step in 0..40u64 {
@@ -694,8 +370,29 @@ mod tests {
     }
 
     #[test]
+    fn gated_and_ssm_archs_learn_too() {
+        for (tag, arch) in [("llama_s60", "gated_mlp"), ("ssm_base", "ssm")] {
+            let mut b = NativeBackend::new(tag, "rmnp", 9, 1).unwrap();
+            assert_eq!(b.arch(), arch);
+            let mut first = 0.0;
+            let mut last = 0.0;
+            for step in 0..40u64 {
+                let toks = token_batch(b.spec(), 300 + step);
+                let m = b.step(&Batch::Tokens(&toks), 4e-3).unwrap();
+                assert!(m.loss.is_finite(), "{tag} step {step}");
+                if step == 0 {
+                    first = m.loss;
+                }
+                last = m.loss;
+            }
+            assert!(last < first - 0.1, "{tag} no learning: {first} -> {last}");
+        }
+    }
+
+    #[test]
     fn vision_backend_trains_a_step() {
         let mut b = NativeBackend::new("vision_base", "muon", 3, 1).unwrap();
+        assert_eq!(b.arch(), "conv");
         let BatchShape::Images { batch, hw, pixels } = b.batch_shape() else {
             panic!("vision model must consume images");
         };
@@ -753,8 +450,9 @@ mod tests {
         let toks = token_batch(b.spec(), 31);
         b.step(&Batch::Tokens(&toks), 1e-2).unwrap();
         let doms = b.dominance().unwrap();
-        // gpt2_tiny: h0.in + h1.mlp are matrix params; embed/head are adamw
-        assert_eq!(doms.len(), 2);
+        // gpt2_tiny attention: 2 blocks × (wq, wk, wv, wo) matrix params;
+        // embed/head/gains are adamw and carry no matrix momentum
+        assert_eq!(doms.len(), 8);
         for (avg, min, max) in doms {
             assert!(min <= avg && avg <= max, "{min} {avg} {max}");
         }
@@ -768,7 +466,7 @@ mod tests {
     fn import_rejects_mismatched_checkpoints() {
         let mut a = NativeBackend::new("gpt2_tiny", "rmnp", 1, 1).unwrap();
         let mut saved = a.export_state().unwrap();
-        saved.params[0].data.pop();
+        saved.params[1].data.pop(); // params[0] is the stamp
         assert!(a.import_state(&saved).is_err(), "short buffer must fail");
         let mut b = NativeBackend::new("gpt2_small", "rmnp", 1, 1).unwrap();
         let other = b.export_state().unwrap();
@@ -782,5 +480,26 @@ mod tests {
             muon.import_state(&adamw_state).is_err(),
             "wrong optimizer must fail"
         );
+    }
+
+    #[test]
+    fn import_rejects_shape_compatible_wrong_arch() {
+        // llama_s60 and llama_s60emb share every shape and name; only the
+        // stamp tells them apart — this used to import silently
+        let mut base = NativeBackend::new("llama_s60", "adamw", 1, 1).unwrap();
+        let mut emb = NativeBackend::new("llama_s60emb", "adamw", 1, 1).unwrap();
+        let saved = base.export_state().unwrap();
+        let err = emb.import_state(&saved).unwrap_err().to_string();
+        assert!(
+            err.contains("llama_s60") && err.contains("llama_s60emb"),
+            "stamp mismatch must name both models: {err}"
+        );
+        // same-tag round-trip still works
+        base.import_state(&saved).unwrap();
+        // and a stampless state (pre-model-layer checkpoint) is rejected
+        let mut stampless = base.export_state().unwrap();
+        stampless.params.remove(0);
+        let err = base.import_state(&stampless).unwrap_err().to_string();
+        assert!(err.contains("stamp"), "{err}");
     }
 }

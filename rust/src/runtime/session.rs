@@ -26,7 +26,9 @@ pub use crate::runtime::backend::{Batch, StepMetrics};
 /// A live training run over one (model, optimizer) artifact set.
 pub struct TrainSession<'e> {
     engine: &'e Engine,
+    /// Registry tag of the model this session trains.
     pub model: String,
+    /// Optimizer name the artifact set was lowered for.
     pub optimizer: String,
     family: String,
     state: Vec<xla::PjRtBuffer>,
@@ -37,6 +39,7 @@ pub struct TrainSession<'e> {
     n_state: usize,
     n_params: usize,
     dom_indices: Vec<usize>,
+    /// Training steps taken so far.
     pub steps_taken: usize,
 }
 
@@ -185,9 +188,11 @@ impl<'e> TrainSession<'e> {
         &self.state[i]
     }
 
+    /// How many leading state buffers are parameters.
     pub fn n_params(&self) -> usize {
         self.n_params
     }
+    /// Total device state buffers (parameters + optimizer state).
     pub fn n_state(&self) -> usize {
         self.n_state
     }

@@ -746,6 +746,211 @@ fn row_normalize_rows_scalar(dst: &mut [f32], src: &[f32], cols: usize, eps: f32
     }
 }
 
+/// Row-wise softmax: `dst[i,:] = softmax(src[i,:])` (SIMD-dispatched).
+///
+/// `-inf` entries (the model layer's causal attention mask) exponentiate
+/// to exactly 0; every row must contain at least one finite entry. The
+/// exp/sum sweep is scalar in row order on every rung (only the max scan
+/// and the normalize pass vectorize), so results are deterministic per
+/// rung. Deliberately unthreaded: the model-layer callers hand over a few
+/// hundred short rows, far below any threading payoff.
+pub fn row_softmax_into(dst: &mut [f32], src: &[f32], rows: usize, cols: usize) {
+    assert_eq!(dst.len(), rows * cols, "row_softmax dst shape");
+    assert_eq!(src.len(), rows * cols, "row_softmax src shape");
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if cols >= SIMD_MIN_ELEMS {
+        match simd::active() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+            SimdPath::Avx2 => return unsafe { simd::avx2::row_softmax_rows(dst, src, cols) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: the Neon dispatch rung implies neon support
+            SimdPath::Neon => return unsafe { simd::neon::row_softmax_rows(dst, src, cols) },
+            _ => {}
+        }
+    }
+    row_softmax_rows_scalar(dst, src, cols);
+}
+
+fn row_softmax_rows_scalar(dst: &mut [f32], src: &[f32], cols: usize) {
+    if cols == 0 {
+        return;
+    }
+    let rows = dst.len() / cols;
+    for i in 0..rows {
+        let o = i * cols;
+        let srow = &src[o..o + cols];
+        let mut max = f32::NEG_INFINITY;
+        for &v in srow {
+            if v > max {
+                max = v;
+            }
+        }
+        let drow = &mut dst[o..o + cols];
+        let mut sum = 0.0f32;
+        for (d, &s) in drow.iter_mut().zip(srow) {
+            let e = (s - max).exp();
+            *d = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        for d in drow.iter_mut() {
+            *d *= inv;
+        }
+    }
+}
+
+/// Row-wise softmax backward: given forward probabilities `probs` and the
+/// upstream gradient `dprobs`, writes
+/// `dst[i,:] = probs ⊙ (dprobs − Σ_k probs_k·dprobs_k)` per row
+/// (SIMD-dispatched, unthreaded). Masked entries (`probs = 0`) get
+/// gradient exactly 0, so the causal mask needs no special backward
+/// handling.
+pub fn row_softmax_grad_into(
+    dst: &mut [f32],
+    probs: &[f32],
+    dprobs: &[f32],
+    rows: usize,
+    cols: usize,
+) {
+    assert_eq!(dst.len(), rows * cols, "row_softmax_grad dst shape");
+    assert_eq!(probs.len(), rows * cols, "row_softmax_grad probs shape");
+    assert_eq!(dprobs.len(), rows * cols, "row_softmax_grad dprobs shape");
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if cols >= SIMD_MIN_ELEMS {
+        match simd::active() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+            SimdPath::Avx2 => {
+                return unsafe { simd::avx2::row_softmax_grad_rows(dst, probs, dprobs, cols) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: the Neon dispatch rung implies neon support
+            SimdPath::Neon => {
+                return unsafe { simd::neon::row_softmax_grad_rows(dst, probs, dprobs, cols) }
+            }
+            _ => {}
+        }
+    }
+    if cols == 0 {
+        return;
+    }
+    for i in 0..rows {
+        let o = i * cols;
+        let p = &probs[o..o + cols];
+        let dp = &dprobs[o..o + cols];
+        let c = dot_scalar(p, dp);
+        let out = &mut dst[o..o + cols];
+        for j in 0..cols {
+            out[j] = p[j] * (dp[j] - c);
+        }
+    }
+}
+
+/// Fused RMSNorm: `dst[i,:] = gain ⊙ src[i,:] / sqrt(mean(src[i,:]²) + eps)`
+/// (SIMD-dispatched, unthreaded). The model layer's pre-attention and
+/// pre-gate normalization; `gain` has `cols` elements.
+pub fn rmsnorm_into(
+    dst: &mut [f32],
+    src: &[f32],
+    gain: &[f32],
+    rows: usize,
+    cols: usize,
+    eps: f32,
+) {
+    assert_eq!(dst.len(), rows * cols, "rmsnorm dst shape");
+    assert_eq!(src.len(), rows * cols, "rmsnorm src shape");
+    assert_eq!(gain.len(), cols, "rmsnorm gain shape");
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if cols >= SIMD_MIN_ELEMS {
+        match simd::active() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+            SimdPath::Avx2 => return unsafe { simd::avx2::rmsnorm_rows(dst, src, gain, cols, eps) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: the Neon dispatch rung implies neon support
+            SimdPath::Neon => return unsafe { simd::neon::rmsnorm_rows(dst, src, gain, cols, eps) },
+            _ => {}
+        }
+    }
+    if cols == 0 {
+        return;
+    }
+    for i in 0..rows {
+        let o = i * cols;
+        let srow = &src[o..o + cols];
+        let r = 1.0 / (dot_scalar(srow, srow) / cols as f32 + eps).sqrt();
+        let drow = &mut dst[o..o + cols];
+        for j in 0..cols {
+            drow[j] = gain[j] * srow[j] * r;
+        }
+    }
+}
+
+/// RMSNorm backward (SIMD-dispatched, unthreaded). With
+/// `r_i = 1/sqrt(mean(src[i,:]²) + eps)` and upstream gradient `dy`:
+///
+/// * `dx[i,:]  = r_i·(gain ⊙ dy) − src[i,:]·(r_i³/cols)·Σ_j gain_j·dy_ij·src_ij`
+/// * `dgain    = Σ_i dy[i,:] ⊙ src[i,:] · r_i` (fully overwritten; rows
+///   accumulate sequentially so the sum order never depends on threads)
+#[allow(clippy::too_many_arguments)]
+pub fn rmsnorm_grad_into(
+    dx: &mut [f32],
+    dgain: &mut [f32],
+    dy: &[f32],
+    src: &[f32],
+    gain: &[f32],
+    rows: usize,
+    cols: usize,
+    eps: f32,
+) {
+    assert_eq!(dx.len(), rows * cols, "rmsnorm_grad dx shape");
+    assert_eq!(dy.len(), rows * cols, "rmsnorm_grad dy shape");
+    assert_eq!(src.len(), rows * cols, "rmsnorm_grad src shape");
+    assert_eq!(gain.len(), cols, "rmsnorm_grad gain shape");
+    assert_eq!(dgain.len(), cols, "rmsnorm_grad dgain shape");
+    dgain.fill(0.0);
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if cols >= SIMD_MIN_ELEMS {
+        match simd::active() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+            SimdPath::Avx2 => {
+                return unsafe {
+                    simd::avx2::rmsnorm_grad_rows(dx, dgain, dy, src, gain, cols, eps)
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: the Neon dispatch rung implies neon support
+            SimdPath::Neon => {
+                return unsafe {
+                    simd::neon::rmsnorm_grad_rows(dx, dgain, dy, src, gain, cols, eps)
+                }
+            }
+            _ => {}
+        }
+    }
+    if cols == 0 {
+        return;
+    }
+    for i in 0..rows {
+        let o = i * cols;
+        let srow = &src[o..o + cols];
+        let dyrow = &dy[o..o + cols];
+        let r = 1.0 / (dot_scalar(srow, srow) / cols as f32 + eps).sqrt();
+        let mut c = 0.0f32;
+        for j in 0..cols {
+            c += gain[j] * dyrow[j] * srow[j];
+        }
+        let b = r * r * r * c / cols as f32;
+        let dxrow = &mut dx[o..o + cols];
+        for j in 0..cols {
+            dxrow[j] = r * gain[j] * dyrow[j] - b * srow[j];
+            dgain[j] += dyrow[j] * srow[j] * r;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1047,6 +1252,135 @@ mod tests {
             let y = randv(len, &mut rng);
             let seq: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
             assert!((dot(&x, &y) - seq).abs() < 1e-3 * (1.0 + seq.abs()));
+        }
+    }
+
+    #[test]
+    fn row_softmax_rows_sum_to_one_and_respect_mask() {
+        let mut rng = Rng::new(20);
+        for cols in [3usize, 16, 33, 64] {
+            let rows = 5;
+            let mut src = randv(rows * cols, &mut rng);
+            // causal-style mask on the last row: only entry 0 survives
+            for v in src[(rows - 1) * cols + 1..rows * cols].iter_mut() {
+                *v = f32::NEG_INFINITY;
+            }
+            let mut dst = vec![0.0f32; rows * cols];
+            row_softmax_into(&mut dst, &src, rows, cols);
+            for i in 0..rows {
+                let row = &dst[i * cols..(i + 1) * cols];
+                let s: f32 = row.iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+                assert!(row.iter().all(|&p| (0.0..=1.0).contains(&p)));
+            }
+            // masked entries are exactly zero, the unmasked one exactly 1
+            assert_eq!(dst[(rows - 1) * cols], 1.0);
+            for &p in &dst[(rows - 1) * cols + 1..rows * cols] {
+                assert_eq!(p, 0.0, "masked prob must be exactly 0");
+            }
+        }
+    }
+
+    #[test]
+    fn row_softmax_grad_matches_reference_and_kills_masked_entries() {
+        let mut rng = Rng::new(21);
+        for cols in [5usize, 16, 48] {
+            let rows = 4;
+            let mut src = randv(rows * cols, &mut rng);
+            for v in src[cols + cols / 2..2 * cols].iter_mut() {
+                *v = f32::NEG_INFINITY; // partial mask on row 1
+            }
+            let mut p = vec![0.0f32; rows * cols];
+            row_softmax_into(&mut p, &src, rows, cols);
+            let dp = randv(rows * cols, &mut rng);
+            let mut got = vec![0.0f32; rows * cols];
+            row_softmax_grad_into(&mut got, &p, &dp, rows, cols);
+            for i in 0..rows {
+                let c: f32 = (0..cols).map(|j| p[i * cols + j] * dp[i * cols + j]).sum();
+                for j in 0..cols {
+                    let want = p[i * cols + j] * (dp[i * cols + j] - c);
+                    assert!(
+                        (got[i * cols + j] - want).abs() < 1e-5,
+                        "({i},{j}): {} vs {want}",
+                        got[i * cols + j]
+                    );
+                }
+            }
+            // masked probabilities are 0, so their gradient is exactly 0
+            for j in cols / 2..cols {
+                assert_eq!(got[cols + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rmsnorm_rows_have_unit_rms_with_unit_gain() {
+        let mut rng = Rng::new(22);
+        for cols in [4usize, 16, 37, 96] {
+            let rows = 6;
+            let src = randv(rows * cols, &mut rng);
+            let gain = vec![1.0f32; cols];
+            let mut dst = vec![0.0f32; rows * cols];
+            rmsnorm_into(&mut dst, &src, &gain, rows, cols, 1e-6);
+            for i in 0..rows {
+                let rms: f32 = (dst[i * cols..(i + 1) * cols]
+                    .iter()
+                    .map(|x| x * x)
+                    .sum::<f32>()
+                    / cols as f32)
+                    .sqrt();
+                assert!((rms - 1.0).abs() < 1e-2, "row {i} rms {rms}");
+            }
+            // zero rows stay finite (eps floor) and map to zero
+            let zeros = vec![0.0f32; cols];
+            let mut out = vec![1.0f32; cols];
+            rmsnorm_into(&mut out, &zeros, &gain, 1, cols, 1e-6);
+            assert!(out.iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn rmsnorm_grad_matches_scalar_reference() {
+        // reference reimplementation (f64) of the documented formulas
+        let mut rng = Rng::new(23);
+        for cols in [5usize, 16, 48] {
+            let rows = 7;
+            let src = randv(rows * cols, &mut rng);
+            let dy = randv(rows * cols, &mut rng);
+            let mut gain = randv(cols, &mut rng);
+            for g in gain.iter_mut() {
+                *g = 1.0 + 0.3 * *g;
+            }
+            let mut dx = vec![0.0f32; rows * cols];
+            let mut dgain = vec![7.0f32; cols]; // must be overwritten, not accumulated onto
+            rmsnorm_grad_into(&mut dx, &mut dgain, &dy, &src, &gain, rows, cols, 1e-6);
+            let mut want_dg = vec![0.0f64; cols];
+            for i in 0..rows {
+                let o = i * cols;
+                let ss: f64 = src[o..o + cols].iter().map(|&x| (x as f64) * (x as f64)).sum();
+                let r = 1.0 / (ss / cols as f64 + 1e-6).sqrt();
+                let c: f64 = (0..cols)
+                    .map(|j| gain[j] as f64 * dy[o + j] as f64 * src[o + j] as f64)
+                    .sum();
+                let b = r * r * r * c / cols as f64;
+                for j in 0..cols {
+                    let want = r * gain[j] as f64 * dy[o + j] as f64 - b * src[o + j] as f64;
+                    assert!(
+                        (dx[o + j] as f64 - want).abs() < 1e-4,
+                        "dx ({i},{j}): {} vs {want}",
+                        dx[o + j]
+                    );
+                    want_dg[j] += dy[o + j] as f64 * src[o + j] as f64 * r;
+                }
+            }
+            for j in 0..cols {
+                assert!(
+                    (dgain[j] as f64 - want_dg[j]).abs() < 1e-4,
+                    "dgain {j}: {} vs {}",
+                    dgain[j],
+                    want_dg[j]
+                );
+            }
         }
     }
 

@@ -70,6 +70,21 @@ impl SimdLane for F32x8 {
         let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
         _mm_cvtss_f32(s)
     }
+
+    #[inline(always)]
+    unsafe fn max(self, other: Self) -> Self {
+        F32x8(_mm256_max_ps(self.0, other.0))
+    }
+
+    #[inline(always)]
+    unsafe fn hmax(self) -> f32 {
+        let lo = _mm256_castps256_ps128(self.0);
+        let hi = _mm256_extractf128_ps(self.0, 1);
+        let m = _mm_max_ps(lo, hi);
+        let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+        let m = _mm_max_ss(m, _mm_shuffle_ps(m, m, 1));
+        _mm_cvtss_f32(m)
+    }
 }
 
 /// 4×f32x8 dot product (32 elements per unrolled step).
@@ -100,6 +115,38 @@ pub unsafe fn scale_into(dst: &mut [f32], a: &[f32], b: f32) {
 #[target_feature(enable = "avx2,fma")]
 pub unsafe fn row_normalize_rows(dst: &mut [f32], src: &[f32], cols: usize, eps: f32) {
     lane::row_normalize_rows::<F32x8>(dst, src, cols, eps)
+}
+
+/// Row-wise softmax (vector max scan + normalize; scalar exp/sum).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn row_softmax_rows(dst: &mut [f32], src: &[f32], cols: usize) {
+    lane::row_softmax_rows::<F32x8>(dst, src, cols)
+}
+
+/// Row-wise softmax backward sweep.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn row_softmax_grad_rows(dst: &mut [f32], p: &[f32], dp: &[f32], cols: usize) {
+    lane::row_softmax_grad_rows::<F32x8>(dst, p, dp, cols)
+}
+
+/// Fused RMSNorm rows: `dst[i,:] = gain ⊙ src[i,:] · rms(src[i,:])⁻¹`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn rmsnorm_rows(dst: &mut [f32], src: &[f32], gain: &[f32], cols: usize, eps: f32) {
+    lane::rmsnorm_rows::<F32x8>(dst, src, gain, cols, eps)
+}
+
+/// RMSNorm backward sweep (`dx` per row, `dgain` accumulated).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn rmsnorm_grad_rows(
+    dx: &mut [f32],
+    dgain: &mut [f32],
+    dy: &[f32],
+    src: &[f32],
+    gain: &[f32],
+    cols: usize,
+    eps: f32,
+) {
+    lane::rmsnorm_grad_rows::<F32x8>(dx, dgain, dy, src, gain, cols, eps)
 }
 
 /// `dst (mc×n) {=, +=} alpha · a (mc×k) · B` over the packed panels; see

@@ -59,6 +59,10 @@ pub(crate) trait SimdLane: Copy {
     unsafe fn fma(self, a: Self, b: Self) -> Self;
     /// Horizontal sum of all lanes.
     unsafe fn hsum(self) -> f32;
+    /// Lanewise `max(self, other)`.
+    unsafe fn max(self, other: Self) -> Self;
+    /// Horizontal maximum of all lanes.
+    unsafe fn hmax(self) -> f32;
 }
 
 /// Dot product with four register accumulators (`4 * LANES` elements per
@@ -187,6 +191,196 @@ pub(crate) unsafe fn row_normalize_rows<V: SimdLane>(
         }
         while j < cols {
             *dp.add(j) = srow[j] * inv;
+            j += 1;
+        }
+    }
+}
+
+/// Row-wise softmax: `dst[i,:] = softmax(src[i,:])`. The max scan and the
+/// final normalize pass are vectorized; the exp/sum sweep stays scalar
+/// (there is no vector `exp`), accumulating the partition sum in f32 in
+/// row order — so the vector and scalar rungs run the identical exp/sum
+/// sequence. `-inf` entries (the causal attention mask) exponentiate to
+/// exactly 0; each row must contain at least one finite entry.
+#[inline(always)]
+pub(crate) unsafe fn row_softmax_rows<V: SimdLane>(dst: &mut [f32], src: &[f32], cols: usize) {
+    if cols == 0 {
+        return;
+    }
+    let l = V::LANES;
+    let rows = dst.len() / cols;
+    for i in 0..rows {
+        let o = i * cols;
+        let srow = &src[o..o + cols];
+        let sp = srow.as_ptr();
+        let mut j = 0usize;
+        let mut max = f32::NEG_INFINITY;
+        if cols >= l {
+            let mut vm = V::load(sp);
+            j = l;
+            while j + l <= cols {
+                vm = vm.max(V::load(sp.add(j)));
+                j += l;
+            }
+            max = vm.hmax();
+        }
+        while j < cols {
+            if srow[j] > max {
+                max = srow[j];
+            }
+            j += 1;
+        }
+        let drow = &mut dst[o..o + cols];
+        let mut sum = 0.0f32;
+        for (d, &s) in drow.iter_mut().zip(srow) {
+            let e = (s - max).exp();
+            *d = e;
+            sum += e;
+        }
+        let inv = 1.0 / sum;
+        let vi = V::splat(inv);
+        let dp = drow.as_mut_ptr();
+        let mut j = 0usize;
+        while j + l <= cols {
+            vi.mul(V::load(dp.add(j))).store(dp.add(j));
+            j += l;
+        }
+        while j < cols {
+            *dp.add(j) *= inv;
+            j += 1;
+        }
+    }
+}
+
+/// Row-wise softmax backward: given the forward probabilities `p` and an
+/// upstream gradient `dp`, `dst[i,:] = p ⊙ (dp − Σ_k p_k·dp_k)` per row.
+/// Masked entries (`p = 0`) get gradient exactly 0.
+#[inline(always)]
+pub(crate) unsafe fn row_softmax_grad_rows<V: SimdLane>(
+    dst: &mut [f32],
+    p: &[f32],
+    dp: &[f32],
+    cols: usize,
+) {
+    if cols == 0 {
+        return;
+    }
+    let l = V::LANES;
+    let rows = dst.len() / cols;
+    for i in 0..rows {
+        let o = i * cols;
+        let prow = &p[o..o + cols];
+        let dprow = &dp[o..o + cols];
+        let c = dot::<V>(prow, dprow);
+        let vc = V::splat(-c);
+        let pp = prow.as_ptr();
+        let dpp = dprow.as_ptr();
+        let out = dst.as_mut_ptr().add(o);
+        let mut j = 0usize;
+        while j + l <= cols {
+            let shifted = vc.add(V::load(dpp.add(j)));
+            V::load(pp.add(j)).mul(shifted).store(out.add(j));
+            j += l;
+        }
+        while j < cols {
+            *out.add(j) = prow[j] * (dprow[j] - c);
+            j += 1;
+        }
+    }
+}
+
+/// Fused RMSNorm: `dst[i,:] = gain ⊙ src[i,:] / sqrt(mean(src[i,:]²) + eps)`.
+#[inline(always)]
+pub(crate) unsafe fn rmsnorm_rows<V: SimdLane>(
+    dst: &mut [f32],
+    src: &[f32],
+    gain: &[f32],
+    cols: usize,
+    eps: f32,
+) {
+    if cols == 0 {
+        return;
+    }
+    let l = V::LANES;
+    let rows = dst.len() / cols;
+    let gp = gain.as_ptr();
+    for i in 0..rows {
+        let o = i * cols;
+        let srow = &src[o..o + cols];
+        let r = 1.0 / (dot::<V>(srow, srow) / cols as f32 + eps).sqrt();
+        let vr = V::splat(r);
+        let sp = srow.as_ptr();
+        let dp = dst.as_mut_ptr().add(o);
+        let mut j = 0usize;
+        while j + l <= cols {
+            let gx = V::load(gp.add(j)).mul(V::load(sp.add(j)));
+            vr.mul(gx).store(dp.add(j));
+            j += l;
+        }
+        while j < cols {
+            *dp.add(j) = gain[j] * srow[j] * r;
+            j += 1;
+        }
+    }
+}
+
+/// RMSNorm backward. With `r_i = 1/sqrt(mean(src[i,:]²) + eps)`:
+/// `dx[i,:] = r·(g⊙dy) − src·(r³/cols)·Σ_j g_j·dy_ij·src_ij` and
+/// `dgain += Σ_i dy[i,:] ⊙ src[i,:] · r_i` (the caller zeroes `dgain`;
+/// rows accumulate sequentially so the result is order-deterministic).
+#[inline(always)]
+pub(crate) unsafe fn rmsnorm_grad_rows<V: SimdLane>(
+    dx: &mut [f32],
+    dgain: &mut [f32],
+    dy: &[f32],
+    src: &[f32],
+    gain: &[f32],
+    cols: usize,
+    eps: f32,
+) {
+    if cols == 0 {
+        return;
+    }
+    let l = V::LANES;
+    let rows = dx.len() / cols;
+    let gp = gain.as_ptr();
+    let dgp = dgain.as_mut_ptr();
+    for i in 0..rows {
+        let o = i * cols;
+        let srow = &src[o..o + cols];
+        let dyrow = &dy[o..o + cols];
+        let r = 1.0 / (dot::<V>(srow, srow) / cols as f32 + eps).sqrt();
+        // c = Σ_j g_j · dy_j · src_j
+        let sp = srow.as_ptr();
+        let dyp = dyrow.as_ptr();
+        let mut acc = V::zero();
+        let mut j = 0usize;
+        while j + l <= cols {
+            let gy = V::load(gp.add(j)).mul(V::load(dyp.add(j)));
+            acc = acc.fma(gy, V::load(sp.add(j)));
+            j += l;
+        }
+        let mut c = acc.hsum();
+        while j < cols {
+            c += gain[j] * dyrow[j] * srow[j];
+            j += 1;
+        }
+        let b = r * r * r * c / cols as f32;
+        let vr = V::splat(r);
+        let vnb = V::splat(-b);
+        let dxp = dx.as_mut_ptr().add(o);
+        let mut j = 0usize;
+        while j + l <= cols {
+            let gy = V::load(gp.add(j)).mul(V::load(dyp.add(j)));
+            let t = vr.mul(gy);
+            t.fma(vnb, V::load(sp.add(j))).store(dxp.add(j));
+            let dg = V::load(dgp.add(j)).fma(V::load(dyp.add(j)).mul(V::load(sp.add(j))), vr);
+            dg.store(dgp.add(j));
+            j += l;
+        }
+        while j < cols {
+            *dxp.add(j) = r * gain[j] * dyrow[j] - b * srow[j];
+            *dgp.add(j) += dyrow[j] * srow[j] * r;
             j += 1;
         }
     }

@@ -72,6 +72,16 @@ impl SimdLane for F32x4 {
     unsafe fn hsum(self) -> f32 {
         vaddvq_f32(self.0)
     }
+
+    #[inline(always)]
+    unsafe fn max(self, other: Self) -> Self {
+        F32x4(vmaxq_f32(self.0, other.0))
+    }
+
+    #[inline(always)]
+    unsafe fn hmax(self) -> f32 {
+        vmaxvq_f32(self.0)
+    }
 }
 
 /// 4×f32x4 dot product (16 elements per unrolled step).
@@ -102,6 +112,38 @@ pub unsafe fn scale_into(dst: &mut [f32], a: &[f32], b: f32) {
 #[target_feature(enable = "neon")]
 pub unsafe fn row_normalize_rows(dst: &mut [f32], src: &[f32], cols: usize, eps: f32) {
     lane::row_normalize_rows::<F32x4>(dst, src, cols, eps)
+}
+
+/// Row-wise softmax (vector max scan + normalize; scalar exp/sum).
+#[target_feature(enable = "neon")]
+pub unsafe fn row_softmax_rows(dst: &mut [f32], src: &[f32], cols: usize) {
+    lane::row_softmax_rows::<F32x4>(dst, src, cols)
+}
+
+/// Row-wise softmax backward sweep.
+#[target_feature(enable = "neon")]
+pub unsafe fn row_softmax_grad_rows(dst: &mut [f32], p: &[f32], dp: &[f32], cols: usize) {
+    lane::row_softmax_grad_rows::<F32x4>(dst, p, dp, cols)
+}
+
+/// Fused RMSNorm rows: `dst[i,:] = gain ⊙ src[i,:] · rms(src[i,:])⁻¹`.
+#[target_feature(enable = "neon")]
+pub unsafe fn rmsnorm_rows(dst: &mut [f32], src: &[f32], gain: &[f32], cols: usize, eps: f32) {
+    lane::rmsnorm_rows::<F32x4>(dst, src, gain, cols, eps)
+}
+
+/// RMSNorm backward sweep (`dx` per row, `dgain` accumulated).
+#[target_feature(enable = "neon")]
+pub unsafe fn rmsnorm_grad_rows(
+    dx: &mut [f32],
+    dgain: &mut [f32],
+    dy: &[f32],
+    src: &[f32],
+    gain: &[f32],
+    cols: usize,
+    eps: f32,
+) {
+    lane::rmsnorm_grad_rows::<F32x4>(dx, dgain, dy, src, gain, cols, eps)
 }
 
 /// `dst (mc×n) {=, +=} alpha · a (mc×k) · B` over the packed panels; see

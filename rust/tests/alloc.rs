@@ -8,6 +8,10 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use rmnp::config::DataSpec;
+use rmnp::data::corpus::token_source;
+use rmnp::model::{attention::AttentionArch, model_spec, ssm::SsmArch, Batch, ModelArch, ParamInit};
+use rmnp::optim::plan::{OptKind, ParamTask, StepPlan};
 use rmnp::optim::{MuonState, RmnpState};
 use rmnp::tensor::Matrix;
 use rmnp::util::Rng;
@@ -82,4 +86,62 @@ fn optimizer_steps_are_allocation_free_after_warmup() {
     // d + x + gram + poly + prod: the fused bA + cA² polynomial dropped
     // the A² buffer that used to make this 6
     assert_eq!(st.workspace.fresh_allocs(), 5, "one alloc per NS5 buffer");
+
+    // --- model layer: warm fwd/bwd is allocation-free, including the
+    // new row-softmax/RMSNorm sweeps (attention) and the scan buffers
+    // (ssm). The arch preallocates activations at construction and draws
+    // transposes from its workspace, so after one warm pass nothing on
+    // the forward/backward path may touch the heap. ---
+    for tag in ["gpt2_tiny", "ssm_base"] {
+        let mut spec = model_spec(tag).unwrap();
+        spec.batch = 2;
+        let mut arch: Box<dyn ModelArch> = if tag == "gpt2_tiny" {
+            Box::new(AttentionArch::new(spec))
+        } else {
+            Box::new(SsmArch::new(spec))
+        };
+        let defs = arch.params();
+        let mut prng = Rng::new(3);
+        let tasks: Vec<ParamTask> = defs
+            .iter()
+            .map(|d| {
+                let w = match d.init {
+                    ParamInit::Randn(std) => Matrix::randn(d.rows, d.cols, std, &mut prng),
+                    ParamInit::Const(v) => {
+                        Matrix::from_vec(d.rows, d.cols, vec![v; d.rows * d.cols])
+                    }
+                };
+                ParamTask::new(&d.name, w, OptKind::Rmnp)
+            })
+            .collect();
+        let plan = StepPlan::new(tasks, 1);
+        let idx: Vec<usize> =
+            defs.iter().map(|d| plan.task_index(&d.name).unwrap()).collect();
+        let rows_cols = match arch.batch_shape() {
+            rmnp::model::BatchShape::Tokens { rows, cols } => rows * cols,
+            _ => unreachable!("both alloc-test archs are token archs"),
+        };
+        let mut toks = vec![0i32; rows_cols];
+        token_source(DataSpec::Markov, 9, 0).fill(&mut toks);
+        let batch = Batch::Tokens(&toks);
+        plan.with_all_tasks(|tasks| {
+            for _ in 0..2 {
+                // warmup: fills the arch workspace
+                arch.load_batch(tasks, &idx, &batch).unwrap();
+                arch.forward(tasks, &idx);
+                arch.backward(tasks, &idx);
+            }
+            let before = allocs();
+            for _ in 0..5 {
+                arch.load_batch(tasks, &idx, &batch).unwrap();
+                arch.forward(tasks, &idx);
+                arch.backward(tasks, &idx);
+            }
+            assert_eq!(
+                allocs(),
+                before,
+                "{tag}: warm model fwd/bwd must be allocation-free"
+            );
+        });
+    }
 }

@@ -286,6 +286,146 @@ fn simd_and_scalar_rungs_agree_within_1e4() {
     simd::set_mode(prev);
 }
 
+/// Reference (f64) implementations of the model-layer sweeps, used as
+/// the oracle for every rung.
+mod model_ref {
+    pub fn row_softmax(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * cols];
+        for i in 0..rows {
+            let row = &src[i * cols..(i + 1) * cols];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f64> = row.iter().map(|&v| ((v - max) as f64).exp()).collect();
+            let sum: f64 = exps.iter().sum();
+            for j in 0..cols {
+                out[i * cols + j] = (exps[j] / sum) as f32;
+            }
+        }
+        out
+    }
+
+    pub fn row_softmax_grad(p: &[f32], dp: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * cols];
+        for i in 0..rows {
+            let c: f64 = (0..cols)
+                .map(|j| p[i * cols + j] as f64 * dp[i * cols + j] as f64)
+                .sum();
+            for j in 0..cols {
+                out[i * cols + j] =
+                    (p[i * cols + j] as f64 * (dp[i * cols + j] as f64 - c)) as f32;
+            }
+        }
+        out
+    }
+
+    pub fn rmsnorm(src: &[f32], gain: &[f32], rows: usize, cols: usize, eps: f32) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * cols];
+        for i in 0..rows {
+            let ss: f64 = src[i * cols..(i + 1) * cols]
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum();
+            let r = 1.0 / (ss / cols as f64 + eps as f64).sqrt();
+            for j in 0..cols {
+                out[i * cols + j] = (gain[j] as f64 * src[i * cols + j] as f64 * r) as f32;
+            }
+        }
+        out
+    }
+}
+
+fn randvec(len: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut v = vec![0.0f32; len];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+/// The model-layer sweeps (row softmax ± mask, its backward, RMSNorm and
+/// its backward) across every available rung, against f64 references —
+/// the same parity structure the matmul/gram/rownorm ops get.
+#[test]
+fn row_softmax_and_rmsnorm_parity_across_rungs() {
+    let _guard = mode_lock();
+    let prev = simd::mode();
+    let mut modes = vec![SimdMode::Scalar];
+    if simd::detected() != simd::SimdPath::Scalar {
+        modes.push(simd::detected().to_mode());
+    }
+    let mut rng = Rng::new(31);
+    for (rows, cols) in [(9usize, 7usize), (16, 16), (32, 32), (11, 48), (8, 96)] {
+        let mut src = randvec(rows * cols, &mut rng);
+        // causal-style mask on one row
+        for v in src[cols + cols / 2..2 * cols].iter_mut() {
+            *v = f32::NEG_INFINITY;
+        }
+        let gain: Vec<f32> = randvec(cols, &mut rng).iter().map(|g| 1.0 + 0.2 * g).collect();
+        let positive = randvec(rows * cols, &mut rng);
+        let dp = randvec(rows * cols, &mut rng);
+        let dy = randvec(rows * cols, &mut rng);
+        let sm_ref = model_ref::row_softmax(&src, rows, cols);
+        let p = model_ref::row_softmax(&src, rows, cols);
+        let smg_ref = model_ref::row_softmax_grad(&p, &dp, rows, cols);
+        let rn_ref = model_ref::rmsnorm(&positive, &gain, rows, cols, 1e-6);
+        for &mode in &modes {
+            simd::set_mode(mode);
+            let mut sm = vec![0.0f32; rows * cols];
+            kernels::row_softmax_into(&mut sm, &src, rows, cols);
+            let mut smg = vec![0.0f32; rows * cols];
+            kernels::row_softmax_grad_into(&mut smg, &p, &dp, rows, cols);
+            let mut rn = vec![0.0f32; rows * cols];
+            kernels::rmsnorm_into(&mut rn, &positive, &gain, rows, cols, 1e-6);
+            let mut dx = vec![0.0f32; rows * cols];
+            let mut dgain = vec![0.0f32; cols];
+            kernels::rmsnorm_grad_into(
+                &mut dx, &mut dgain, &dy, &positive, &gain, rows, cols, 1e-6,
+            );
+            for i in 0..rows * cols {
+                assert!(
+                    (sm[i] - sm_ref[i]).abs() < 1e-4,
+                    "softmax {mode:?} ({rows},{cols}) at {i}"
+                );
+                assert!(
+                    (smg[i] - smg_ref[i]).abs() < 1e-4,
+                    "softmax grad {mode:?} ({rows},{cols}) at {i}"
+                );
+                assert!(
+                    (rn[i] - rn_ref[i]).abs() < 1e-4,
+                    "rmsnorm {mode:?} ({rows},{cols}) at {i}"
+                );
+            }
+            // rmsnorm backward: checked against the formula in f64
+            for i in 0..rows {
+                let ss: f64 = positive[i * cols..(i + 1) * cols]
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum();
+                let r = 1.0 / (ss / cols as f64 + 1e-6).sqrt();
+                let c: f64 = (0..cols)
+                    .map(|j| {
+                        gain[j] as f64
+                            * dy[i * cols + j] as f64
+                            * positive[i * cols + j] as f64
+                    })
+                    .sum();
+                let b = r * r * r * c / cols as f64;
+                for j in 0..cols {
+                    let want = r * gain[j] as f64 * dy[i * cols + j] as f64
+                        - b * positive[i * cols + j] as f64;
+                    assert!(
+                        (dx[i * cols + j] as f64 - want).abs() < 1e-4,
+                        "rmsnorm grad {mode:?} ({rows},{cols}) at ({i},{j})"
+                    );
+                }
+            }
+            // masked entries: probability and gradient exactly zero
+            for j in cols / 2..cols {
+                assert_eq!(sm[cols + j], 0.0, "{mode:?}: masked prob");
+                assert_eq!(smg[cols + j], 0.0, "{mode:?}: masked grad");
+            }
+        }
+    }
+    simd::set_mode(prev);
+}
+
 /// Mixed-optimizer parameter list for the StepPlan determinism check:
 /// overlapping costs force real scheduling differences between pools.
 fn plan_under_test(threads: usize) -> StepPlan {

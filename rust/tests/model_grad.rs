@@ -1,0 +1,236 @@
+//! Finite-difference oracles for every model-layer backward (attention,
+//! gated MLP, SSM scan, conv stem), plus arch-level bit-determinism:
+//! each arch's fwd/bwd/step must produce identical bits across
+//! `perf.plan_threads` and be reproducible under forced
+//! `RMNP_SIMD=scalar`.
+//!
+//! The FD check perturbs each parameter along random unit directions and
+//! compares `(L(w+hD) − L(w−hD)) / 2h` against `⟨∇L, D⟩` from the
+//! analytic backward. Directional probes amortize f32 forward noise over
+//! the whole parameter (elementwise FD at f32 precision would drown small
+//! entries); a wrong backward formula shows up as an O(1) relative error,
+//! far outside the tolerance. Tests flip or depend on the process-global
+//! SIMD mode, so each holds the shared mode lock.
+
+use std::sync::{Mutex, MutexGuard};
+
+use rmnp::config::DataSpec;
+use rmnp::data::corpus::token_source;
+use rmnp::data::images::ImageSource;
+use rmnp::model::{
+    attention::AttentionArch, conv::ConvArch, gated_mlp::GatedMlpArch, model_spec,
+    ssm::SsmArch, ArchKind, Batch, BatchShape, ModelArch, ModelSpec, ParamInit,
+};
+use rmnp::optim::plan::{OptKind, ParamTask, StepPlan};
+use rmnp::runtime::{NativeBackend, TrainBackend, TrainState};
+use rmnp::tensor::simd::{self, SimdMode};
+use rmnp::tensor::Matrix;
+use rmnp::util::Rng;
+
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn mode_lock() -> MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn build(spec: ModelSpec) -> Box<dyn ModelArch> {
+    match spec.arch {
+        ArchKind::Attention => Box::new(AttentionArch::new(spec)),
+        ArchKind::GatedMlp => Box::new(GatedMlpArch::new(spec)),
+        ArchKind::Ssm => Box::new(SsmArch::new(spec)),
+        ArchKind::Conv => Box::new(ConvArch::new(spec)),
+    }
+}
+
+/// Arch + plan + layout→plan index map over a small-batch variant of a
+/// registry tag (fewer positions keeps the FD sweep fast).
+fn harness(tag: &str, batch: usize, seed: u64) -> (Box<dyn ModelArch>, StepPlan, Vec<usize>) {
+    let mut spec = model_spec(tag).unwrap();
+    spec.batch = batch;
+    let arch = build(spec);
+    let defs = arch.params();
+    let mut rng = Rng::new(seed);
+    let tasks: Vec<ParamTask> = defs
+        .iter()
+        .map(|d| {
+            let w = match d.init {
+                ParamInit::Randn(std) => Matrix::randn(d.rows, d.cols, std, &mut rng),
+                ParamInit::Const(v) => Matrix::from_vec(d.rows, d.cols, vec![v; d.rows * d.cols]),
+            };
+            // the optimizer state is irrelevant here: only fwd/bwd run
+            ParamTask::new(&d.name, w, OptKind::AdamW)
+        })
+        .collect();
+    let plan = StepPlan::new(tasks, 1);
+    let idx: Vec<usize> = defs.iter().map(|d| plan.task_index(&d.name).unwrap()).collect();
+    (arch, plan, idx)
+}
+
+fn token_batch_for(arch: &dyn ModelArch, seed: u64) -> Vec<i32> {
+    let BatchShape::Tokens { rows, cols } = arch.batch_shape() else {
+        panic!("expected a token arch");
+    };
+    let mut t = vec![0i32; rows * cols];
+    token_source(DataSpec::Markov, seed, 0).fill(&mut t);
+    t
+}
+
+fn image_batch_for(arch: &dyn ModelArch, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let BatchShape::Images { batch, hw, pixels } = arch.batch_shape() else {
+        panic!("expected an image arch");
+    };
+    let mut src = ImageSource::new(10, hw, seed, 0);
+    let mut images = vec![0.0f32; pixels];
+    let mut labels = vec![0i32; batch];
+    src.fill(batch, &mut images, &mut labels);
+    (images, labels)
+}
+
+/// The oracle: every parameter's analytic gradient must match central
+/// finite differences along random unit directions.
+fn assert_grads_match_fd(tag: &str, batch: &Batch) {
+    let (mut arch, plan, idx) = harness(tag, 3.min(model_spec(tag).unwrap().batch), 17);
+    // analytic gradients from one fwd/bwd
+    let loss0 = plan.with_all_tasks(|tasks| {
+        arch.load_batch(tasks, &idx, batch).unwrap();
+        let loss = arch.forward(tasks, &idx);
+        arch.backward(tasks, &idx);
+        loss
+    });
+    assert!(loss0.is_finite() && loss0 > 0.0, "{tag}: bad loss {loss0}");
+    let h = 1e-3f32;
+    let names: Vec<String> = arch.params().iter().map(|d| d.name.clone()).collect();
+    for (p, name) in names.iter().enumerate() {
+        let ti = idx[p];
+        let (grad, w0) = plan.with_task(ti, |t| (t.grad.clone(), t.w.clone()));
+        for probe in 0..2u64 {
+            // random unit direction over the whole parameter
+            let mut dir = Matrix::zeros(w0.rows(), w0.cols());
+            Rng::new(1000 + 131 * p as u64 + probe).fill_normal(dir.data_mut(), 1.0);
+            let norm = dir
+                .data()
+                .iter()
+                .map(|&x| (x as f64) * (x as f64))
+                .sum::<f64>()
+                .sqrt() as f32;
+            for x in dir.data_mut() {
+                *x /= norm;
+            }
+            let want: f64 = grad
+                .data()
+                .iter()
+                .zip(dir.data())
+                .map(|(&g, &d)| g as f64 * d as f64)
+                .sum();
+            let mut losses = [0.0f64; 2];
+            for (li, sign) in [1.0f32, -1.0].into_iter().enumerate() {
+                plan.with_task(ti, |t| {
+                    for (w, (&o, &d)) in t
+                        .w
+                        .data_mut()
+                        .iter_mut()
+                        .zip(w0.data().iter().zip(dir.data()))
+                    {
+                        *w = o + sign * h * d;
+                    }
+                });
+                losses[li] = plan.with_all_tasks(|tasks| {
+                    arch.load_batch(tasks, &idx, batch).unwrap();
+                    arch.forward(tasks, &idx)
+                });
+            }
+            plan.with_task(ti, |t| t.w.copy_from(&w0));
+            let fd = (losses[0] - losses[1]) / (2.0 * h as f64);
+            let err = (fd - want).abs();
+            assert!(
+                err < 0.05 * want.abs() + 2e-3,
+                "{tag}/{name} probe {probe}: fd {fd} vs analytic {want} (err {err})"
+            );
+        }
+    }
+}
+
+#[test]
+fn attention_backward_matches_finite_differences() {
+    let _guard = mode_lock();
+    let (arch, ..) = harness("gpt2_tiny", 3, 1);
+    let toks = token_batch_for(arch.as_ref(), 5);
+    assert_grads_match_fd("gpt2_tiny", &Batch::Tokens(&toks));
+}
+
+#[test]
+fn gated_mlp_backward_matches_finite_differences() {
+    let _guard = mode_lock();
+    let (arch, ..) = harness("llama_s60", 3, 1);
+    let toks = token_batch_for(arch.as_ref(), 6);
+    assert_grads_match_fd("llama_s60", &Batch::Tokens(&toks));
+}
+
+#[test]
+fn ssm_backward_matches_finite_differences() {
+    let _guard = mode_lock();
+    let (arch, ..) = harness("ssm_base", 3, 1);
+    let toks = token_batch_for(arch.as_ref(), 7);
+    assert_grads_match_fd("ssm_base", &Batch::Tokens(&toks));
+}
+
+#[test]
+fn conv_backward_matches_finite_differences() {
+    let _guard = mode_lock();
+    let (arch, ..) = harness("vision_base", 3, 1);
+    let (images, labels) = image_batch_for(arch.as_ref(), 8);
+    assert_grads_match_fd("vision_base", &Batch::Images { images: &images, labels: &labels });
+}
+
+/// Run 3 full native steps (fwd/bwd/clip/step) on one arch and export.
+fn run_steps(tag: &str, data: DataSpec, plan_threads: usize) -> TrainState {
+    let mut b = NativeBackend::new(tag, "rmnp", 23, plan_threads).unwrap();
+    for step in 0..3u64 {
+        match b.batch_shape() {
+            BatchShape::Tokens { rows, cols } => {
+                let mut toks = vec![0i32; rows * cols];
+                token_source(data, 400 + step, 0).fill(&mut toks);
+                b.step(&Batch::Tokens(&toks), 4e-3).unwrap();
+            }
+            BatchShape::Images { batch, hw, pixels } => {
+                let mut src = ImageSource::new(10, hw, 400 + step, 0);
+                let mut images = vec![0.0f32; pixels];
+                let mut labels = vec![0i32; batch];
+                src.fill(batch, &mut images, &mut labels);
+                b.step(&Batch::Images { images: &images, labels: &labels }, 4e-3).unwrap();
+            }
+        }
+    }
+    b.export_state().unwrap()
+}
+
+const ARCH_CASES: &[(&str, DataSpec)] = &[
+    ("gpt2_tiny", DataSpec::Markov),
+    ("llama_s60", DataSpec::Zipf),
+    ("ssm_base", DataSpec::Ngram),
+    ("vision_base", DataSpec::Images),
+];
+
+#[test]
+fn every_arch_is_bit_deterministic_across_plan_threads() {
+    let _guard = mode_lock();
+    for &(tag, data) in ARCH_CASES {
+        let a = run_steps(tag, data, 1);
+        let b = run_steps(tag, data, 4);
+        assert_eq!(a, b, "{tag}: plan_threads changed the trained bits");
+    }
+}
+
+#[test]
+fn every_arch_is_bit_deterministic_under_forced_scalar() {
+    let _guard = mode_lock();
+    let prev = simd::mode();
+    simd::set_mode(SimdMode::Scalar);
+    assert_eq!(simd::active(), simd::SimdPath::Scalar);
+    for &(tag, data) in ARCH_CASES {
+        let a = run_steps(tag, data, 1);
+        let b = run_steps(tag, data, 4);
+        assert_eq!(a, b, "{tag}: scalar-rung run not reproducible");
+    }
+    simd::set_mode(prev);
+}

@@ -110,6 +110,54 @@ fn forced_neon_ns5_matches_naive() {
 }
 
 #[test]
+fn forced_neon_model_sweeps_match_reference() {
+    // the model-layer kernels (row softmax ± mask, RMSNorm) on the NEON
+    // rung against f64 references
+    with_forced_neon("row_softmax/rmsnorm parity", || {
+        let mut rng = Rng::new(5);
+        for (rows, cols) in [(6usize, 16usize), (9, 33), (8, 96)] {
+            let mut src = vec![0.0f32; rows * cols];
+            rng.fill_normal(&mut src, 1.0);
+            for x in src[cols / 2..cols].iter_mut() {
+                *x = f32::NEG_INFINITY; // mask part of row 0
+            }
+            let mut gain = vec![0.0f32; cols];
+            rng.fill_normal(&mut gain, 0.2);
+            for g in gain.iter_mut() {
+                *g += 1.0;
+            }
+            let mut sm = vec![0.0f32; rows * cols];
+            rmnp::tensor::kernels::row_softmax_into(&mut sm, &src, rows, cols);
+            let mut rn = vec![0.0f32; rows * cols];
+            let mut positive = vec![0.0f32; rows * cols];
+            rng.fill_normal(&mut positive, 1.0);
+            rmnp::tensor::kernels::rmsnorm_into(&mut rn, &positive, &gain, rows, cols, 1e-6);
+            for i in 0..rows {
+                // softmax rows sum to 1
+                let s: f64 = sm[i * cols..(i + 1) * cols].iter().map(|&x| x as f64).sum();
+                assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+                // rmsnorm matches the f64 formula
+                let ss: f64 = positive[i * cols..(i + 1) * cols]
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum();
+                let r = 1.0 / (ss / cols as f64 + 1e-6).sqrt();
+                for j in 0..cols {
+                    let want = gain[j] as f64 * positive[i * cols + j] as f64 * r;
+                    assert!(
+                        (rn[i * cols + j] as f64 - want).abs() < 1e-4,
+                        "rmsnorm ({rows},{cols}) at ({i},{j})"
+                    );
+                }
+            }
+            for &p in &sm[cols / 2..cols] {
+                assert_eq!(p, 0.0, "masked prob must be exactly 0");
+            }
+        }
+    });
+}
+
+#[test]
 fn forced_neon_thread_count_does_not_change_bits() {
     with_forced_neon("thread-count determinism", || {
         let mut rng = Rng::new(4);

@@ -117,18 +117,30 @@ EOF
 echo "== checking BENCH_host_train.json =="
 python3 - <<'EOF'
 import json
+from collections import OrderedDict
 
 with open("BENCH_host_train.json") as f:
     doc = json.load(f)
 cases = doc["cases"]
 assert cases, "host_train bench produced no cases"
+# group by model arch so the per-arch envelopes are visible in CI logs
+# (and so a missing arch is an error, not a silent hole in the table)
+by_arch = OrderedDict()
 for c in cases:
-    print(
-        f"  {c['model']:<12} {c['optimizer']:<6} "
-        f"{c['steps_per_s']:>8.1f} steps/s  loss {c['final_loss']:.3f}"
-    )
-    if not (0.0 < c["final_loss"] < 20.0):
-        raise SystemExit(f"implausible final loss in {c}")
+    by_arch.setdefault(c.get("arch", "?"), []).append(c)
+expected = {"attention", "gated_mlp", "ssm", "conv"}
+missing = expected - set(by_arch)
+if missing:
+    raise SystemExit(f"host_train envelope lost arch coverage: missing {sorted(missing)}")
+for arch, rows in by_arch.items():
+    print(f"  [{arch}]")
+    for c in rows:
+        print(
+            f"    {c['model']:<12} {c['optimizer']:<6} "
+            f"{c['steps_per_s']:>8.1f} steps/s  loss {c['final_loss']:.3f}"
+        )
+        if not (0.0 < c["final_loss"] < 20.0):
+            raise SystemExit(f"implausible final loss in {c}")
 print("host_train envelope OK")
 EOF
 
