@@ -1,0 +1,139 @@
+//! `cargo bench --bench faults` — the price of fault tolerance.
+//!
+//! Measures (a) the anomaly guard's per-step overhead — a full native
+//! train step through `step_gated` + `StepGuard::observe` vs the plain
+//! `step` path; it must be noise-level, since the guard only inspects
+//! two scalars — and (b) checkpoint durability costs: v3 save (CRC
+//! stamping), validated load, and the walkback scan over a corrupted
+//! newest checkpoint. Writes `BENCH_faults.json`; `scripts/bench_check.sh`
+//! gates on `guard_overhead_frac` and the recovery `ok` flags.
+//!
+//! Env knobs: `BENCH_REPEATS` (samples per measurement, default 3),
+//! `RMNP_THREADS`, `RMNP_SIMD`.
+
+use std::path::Path;
+
+use rmnp::bench::report::{self, envelope, int, num};
+use rmnp::bench::{bench_n, fmt_secs};
+use rmnp::config::DataSpec;
+use rmnp::coordinator::{checkpoint, GuardConfig, StepGuard, Verdict};
+use rmnp::data::corpus::token_source;
+use rmnp::runtime::{Batch, BatchShape, NativeBackend, StepMetrics, TrainBackend};
+
+fn main() -> anyhow::Result<()> {
+    // measure serialization + CRC cost, not disk-sync latency — fsync
+    // timing is a property of the CI filesystem, not of this code
+    std::env::set_var("RMNP_NO_FSYNC", "1");
+    let repeats: usize = std::env::var("BENCH_REPEATS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    println!(
+        "faults bench: repeats={repeats} threads={} simd={}",
+        rmnp::tensor::kernels::num_threads(),
+        rmnp::tensor::simd::label()
+    );
+
+    let mut backend = NativeBackend::new("gpt2_tiny", "rmnp", 42, 0)?;
+    let (rows, cols) = match backend.batch_shape() {
+        BatchShape::Tokens { rows, cols } => (rows, cols),
+        BatchShape::Images { .. } => anyhow::bail!("gpt2_tiny should consume tokens"),
+    };
+    let mut src = token_source(DataSpec::Markov, 7, 0);
+    let mut tokens = vec![0i32; rows * cols];
+    src.fill(&mut tokens);
+    backend.step(&Batch::Tokens(&tokens), 1e-3)?; // warm workspace + pool
+
+    println!("guard overhead (full gpt2_tiny/rmnp train step):");
+    let plain = bench_n("step_plain", 5, repeats, || {
+        backend.step(&Batch::Tokens(&tokens), 1e-3).expect("plain step");
+    });
+    println!("  {}", plain.report_line());
+    let mut guard = StepGuard::new(GuardConfig::default())?;
+    let mut step_no = 0usize;
+    let gated = bench_n("step_gated+observe", 5, repeats, || {
+        let decide = &mut |m: &StepMetrics| {
+            step_no += 1;
+            guard.observe(step_no, m) == Verdict::Apply
+        };
+        backend
+            .step_gated(&Batch::Tokens(&tokens), 1e-3, decide)
+            .expect("gated step");
+    });
+    println!("  {}", gated.report_line());
+    let overhead_frac = (gated.median() - plain.median()) / plain.median().max(1e-12);
+    println!("  -> guard overhead {:+.2}% per step", overhead_frac * 100.0);
+    assert_eq!(guard.skipped(), 0, "healthy bench steps must not be skipped");
+
+    println!("checkpoint durability (gpt2_tiny full state):");
+    let state = backend.export_state()?;
+    let dir = std::env::temp_dir().join(format!("rmnp-bench-faults-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+    let ckpt = dir.join("bench.ckpt");
+    let save = bench_n("ckpt_save_v3", 3, repeats, || {
+        checkpoint::save_state(&ckpt, &state).expect("save");
+    });
+    println!("  {}", save.report_line());
+    let ckpt_bytes = std::fs::metadata(&ckpt)?.len() as usize;
+    let load = bench_n("ckpt_load_validated", 3, repeats, || {
+        checkpoint::load_state(&ckpt).expect("load");
+    });
+    println!("  {}", load.report_line());
+    let back = checkpoint::load_state(&ckpt)?;
+    let roundtrip_ok = back.step == state.step
+        && back.params.len() == state.params.len()
+        && back
+            .params
+            .iter()
+            .zip(&state.params)
+            .all(|(a, b)| a.name == b.name && a.data == b.data);
+
+    // walkback: newest checkpoint corrupted, latest_valid must land on
+    // the older one — this is the recovery path a resume pays once
+    let walkdir = dir.join("walkback");
+    std::fs::create_dir_all(&walkdir)?;
+    let mut old = backend.export_state()?;
+    old.step = 3;
+    checkpoint::save_state(&walkdir.join("step-3.ckpt"), &old)?;
+    old.step = 6;
+    checkpoint::save_state(&walkdir.join("step-6.ckpt"), &old)?;
+    let newest = walkdir.join("step-6.ckpt");
+    let mut bytes = std::fs::read(&newest)?;
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&newest, &bytes)?;
+    let mut walkback_ok = true;
+    let walk = bench_n("walkback_recovery", 1, repeats, || {
+        let found = checkpoint::latest_valid(&walkdir).expect("walkback scan");
+        walkback_ok &= matches!(found, Some((3, _, _)));
+    });
+    println!("  {}", walk.report_line());
+    println!(
+        "  -> save {} / load {} / walkback {} over {ckpt_bytes} bytes",
+        fmt_secs(save.median()),
+        fmt_secs(load.median()),
+        fmt_secs(walk.median())
+    );
+
+    let doc = envelope(
+        "faults",
+        vec![
+            ("step_plain_s", num(plain.median())),
+            ("step_gated_s", num(gated.median())),
+            ("guard_overhead_frac", num(overhead_frac)),
+            ("ckpt_save_s", num(save.median())),
+            ("ckpt_load_s", num(load.median())),
+            ("walkback_s", num(walk.median())),
+            ("ckpt_bytes", int(ckpt_bytes)),
+            ("roundtrip_ok", int(roundtrip_ok as usize)),
+            ("walkback_ok", int(walkback_ok as usize)),
+        ],
+    );
+    report::write(Path::new("BENCH_faults.json"), &doc)?;
+    println!(
+        "wrote BENCH_faults.json (guard overhead {:+.2}%)",
+        overhead_frac * 100.0
+    );
+    Ok(())
+}

@@ -253,6 +253,23 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
             println!("  {:.1}M params/s", elems as f64 / r.median() / 1e6);
             Ok(())
         }
+        // crash/fault-injection suite: spawns this same binary as the
+        // victim child, so it needs no artifacts and runs in every build
+        Some("faults") => {
+            let bin = std::env::current_exe()?;
+            let fopts = exp::faults::FaultOpts {
+                out: opts.out.join("faults"),
+                steps: args.usize_or("steps", 12),
+                checkpoint_every: args.usize_or("checkpoint-every", 3),
+                kills: args.usize_or("kills", 2),
+                seed: opts.seed,
+            };
+            let rows = exp::faults::run_all(&bin, &fopts)?;
+            println!("{}", exp::faults::format(&rows));
+            let failed = rows.iter().filter(|s| !s.passed).count();
+            anyhow::ensure!(failed == 0, "{failed} fault scenario(s) failed");
+            Ok(())
+        }
         Some("all") => run_all(args, &opts),
         #[cfg(not(feature = "pjrt"))]
         Some("dominance") => anyhow::bail!(NO_PJRT),

@@ -3,7 +3,7 @@
 //! ```text
 //! rmnp train   [--config F] [--set k=v]... [--resume]   one training run
 //! rmnp exp     <precond|pretrain|sweep|dominance|extended|ablation-embed|
-//!               ssm|vision|cliprate|all> [opts]  paper experiments
+//!               ssm|vision|cliprate|faults|all> [opts]  paper experiments
 //! rmnp report  <cliprate|curves> --runs DIR      re-render from saved CSVs
 //! rmnp data    <sample|encode> [opts]            data-pipeline utilities
 //! rmnp info                                      manifest summary
@@ -39,6 +39,7 @@ USAGE:
   rmnp exp cliprate       [--runs DIR]
   rmnp exp stepplan       [--d 512] [--layers 6] [--optimizer rmnp|muon|adamw]
                           [--steps N] [--threads N] [--simd auto|avx2|neon|scalar]
+  rmnp exp faults         [--kills N] [--steps N] [--checkpoint-every N]
   rmnp exp all            [--steps N] (scaled-down full suite)
   rmnp report cliprate    [--runs DIR]
   rmnp data sample        [--corpus markov] [--n 64] [--seed 1]
@@ -49,8 +50,9 @@ Backends: training runs on the host-native backend by default (offline, no
           artifacts); --backend pjrt selects the PJRT artifact path in
           `--features pjrt` builds (rmnp train also reads
           --set runtime.backend=... and the config-file key).
-Resume:   --resume / --set train.resume=true restores the latest
-          step-N.ckpt in out.dir and continues bit-exactly.
+Resume:   --resume / --set train.resume=true restores the newest
+          step-N.ckpt in out.dir that passes CRC validation (torn files
+          are skipped) and continues bit-exactly.
 Common flags: --artifacts DIR (default artifacts), --out DIR (default runs),
               --seed N, --verbose
 Perf knobs:   --set perf.threads=N  --set perf.simd=auto|avx2|neon|scalar

@@ -138,6 +138,25 @@ pub struct RunConfig {
     /// Resume from the latest checkpoint in `out_dir` (`train.resume`).
     /// The restored trajectory is bit-identical to an uninterrupted run.
     pub resume: bool,
+    /// Keep only the newest N checkpoints in `out_dir`
+    /// (`train.keep_checkpoints`); 0 = keep everything.
+    pub keep_checkpoints: usize,
+    /// Anomaly step guard on/off (`train.guard`). When on, non-finite
+    /// loss/grad-norm steps skip the optimizer update and back off the
+    /// LR; see [`crate::coordinator::guard`].
+    pub guard: bool,
+    /// LR-scale multiplier per anomalous step (`train.guard_backoff`).
+    pub guard_backoff: f64,
+    /// LR-scale floor under backoff (`train.guard_min_scale`).
+    pub guard_min_scale: f64,
+    /// LR-scale multiplier per healthy step (`train.guard_recover`).
+    pub guard_recover: f64,
+    /// Abort after this many consecutive anomalous steps
+    /// (`train.guard_max_bad`).
+    pub guard_max_bad: usize,
+    /// Treat finite grad norms above this as anomalous
+    /// (`train.guard_max_grad_norm`); 0 = off.
+    pub guard_max_grad_norm: f64,
 }
 
 impl Default for RunConfig {
@@ -161,6 +180,13 @@ impl Default for RunConfig {
             plan_threads: 0,
             backend: BackendKind::Native,
             resume: false,
+            keep_checkpoints: 0,
+            guard: true,
+            guard_backoff: 0.5,
+            guard_min_scale: 1.0 / 64.0,
+            guard_recover: 2.0,
+            guard_max_bad: 8,
+            guard_max_grad_norm: 0.0,
         }
     }
 }
@@ -198,6 +224,17 @@ impl RunConfig {
         self.plan_threads =
             d.int_or("perf.plan_threads", self.plan_threads as i64).max(0) as usize;
         self.resume = d.bool_or("train.resume", self.resume);
+        self.keep_checkpoints = d
+            .int_or("train.keep_checkpoints", self.keep_checkpoints as i64)
+            .max(0) as usize;
+        self.guard = d.bool_or("train.guard", self.guard);
+        self.guard_backoff = d.float_or("train.guard_backoff", self.guard_backoff);
+        self.guard_min_scale = d.float_or("train.guard_min_scale", self.guard_min_scale);
+        self.guard_recover = d.float_or("train.guard_recover", self.guard_recover);
+        self.guard_max_bad =
+            d.int_or("train.guard_max_bad", self.guard_max_bad as i64).max(0) as usize;
+        self.guard_max_grad_norm =
+            d.float_or("train.guard_max_grad_norm", self.guard_max_grad_norm);
         if let Some(v) = d.get("runtime.backend") {
             self.backend = BackendKind::parse(
                 v.as_str()
@@ -339,6 +376,18 @@ corpus = "zipf"
         assert!(cfg.resume);
         cfg.apply_override("train.resume=false").unwrap();
         assert!(!cfg.resume);
+        assert_eq!(cfg.keep_checkpoints, 0, "retention off by default");
+        cfg.apply_override("train.keep_checkpoints=3").unwrap();
+        assert_eq!(cfg.keep_checkpoints, 3);
+        assert!(cfg.guard, "anomaly guard on by default");
+        cfg.apply_override("train.guard=false").unwrap();
+        assert!(!cfg.guard);
+        cfg.apply_override("train.guard_backoff=0.25").unwrap();
+        assert!((cfg.guard_backoff - 0.25).abs() < 1e-12);
+        cfg.apply_override("train.guard_max_bad=4").unwrap();
+        assert_eq!(cfg.guard_max_bad, 4);
+        cfg.apply_override("train.guard_max_grad_norm=50.0").unwrap();
+        assert!((cfg.guard_max_grad_norm - 50.0).abs() < 1e-12);
         assert_eq!(cfg.steps, 42);
         assert!((cfg.lr - 0.5).abs() < 1e-12);
         assert_eq!(cfg.model, "ssm_base");

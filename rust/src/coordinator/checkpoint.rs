@@ -1,38 +1,55 @@
-//! Checkpoint store: raw little-endian binary format with versioning.
+//! Checkpoint store: raw little-endian binary format with versioning,
+//! per-section CRC32 integrity, and crash-consistent writes.
 //!
-//! Layout of `<dir>/step-N.ckpt` (format **v2**):
+//! Layout of `<dir>/step-N.ckpt` (format **v3**):
 //!
 //! ```text
 //! magic "RMNPCKPT"            8 bytes
-//! version u32                 4   (= 2)
+//! version u32                 4   (= 3)
 //! step u64                    8   (training steps taken)
 //! n_params u32                4   (parameter section length)
 //! n_opt u32                   4   (optimizer-state section length)
-//! for each buffer (params first, then optimizer state):
+//! for each parameter buffer:
 //!   name_len u32, name bytes
 //!   elem_count u32
 //!   f32 data (little endian)
+//! params_crc u32              4   (CRC-32 of the parameter buffers)
+//! for each optimizer buffer:  (same encoding)
+//! opt_crc u32                 4   (CRC-32 of the optimizer buffers)
+//! footer_crc u32              4   (CRC-32 of every preceding byte)
 //! ```
 //!
-//! Format **v1** (no step, no section split — everything is one flat
-//! buffer list) is still readable: [`load_state`] maps a v1 file to a
-//! [`TrainState`] with `step = 0` and every buffer in the parameter
-//! section, and [`load`] returns the flat list for either version.
+//! Format **v2** (no CRCs) and **v1** (no step, no section split —
+//! everything is one flat buffer list) are still readable: [`load_state`]
+//! maps a v1 file to a [`TrainState`] with `step = 0` and every buffer in
+//! the parameter section, and [`load`] returns the flat list for any
+//! version.
 //!
 //! Integer counters (the device-side `t`, AdamW's step count) are stored
 //! through their f32 bits — the restore path reinterprets them, so
 //! round-trips are bit-exact.
 //!
-//! The reader **validates before trusting**: counts and lengths from the
-//! file are checked against the actual file size, so a truncated or
-//! corrupted checkpoint is a clean error instead of a huge allocation or
-//! a short read deep inside a buffer. The writer refuses (rather than
-//! silently truncates) anything whose count doesn't fit the u32 fields.
+//! **Crash consistency.** Saves write to a `.ckpt.tmp` sibling, fsync the
+//! file, rename it into place, then fsync the parent directory — so a
+//! kill at any instruction leaves either the old checkpoint set intact or
+//! the new file fully durable, never a torn `step-N.ckpt`. Tests and
+//! benches that don't need durability can set `RMNP_NO_FSYNC=1` to skip
+//! both syncs.
+//!
+//! **Validation before trust.** Counts and lengths from the file are
+//! checked against the actual file size before any allocation, every v3
+//! section must match its CRC, the whole file must match the footer CRC,
+//! and no version may carry trailing bytes (which also catches the one
+//! corruption CRCs can't: a bit-flip of the version field itself, which
+//! would otherwise downgrade a v3 file to an unchecksummed v2 parse).
+//! [`latest_valid`] builds on this to walk back to the newest checkpoint
+//! that fully validates instead of dying on a torn newest one.
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
 use crate::runtime::backend::TrainState;
+use crate::util::crc32::Crc32;
 
 // Defined at the backend layer (the trait's checkpoint currency);
 // re-exported here so `coordinator::checkpoint::NamedBuffer` keeps
@@ -40,12 +57,41 @@ use crate::runtime::backend::TrainState;
 pub use crate::runtime::backend::NamedBuffer;
 
 const MAGIC: &[u8; 8] = b"RMNPCKPT";
-const VERSION: u32 = 2;
+const VERSION: u32 = 3;
 
 fn u32_of(n: usize, what: &str) -> anyhow::Result<u32> {
     u32::try_from(n).map_err(|_| {
         anyhow::anyhow!("checkpoint {what} {n} does not fit the u32 format field")
     })
+}
+
+/// Should saves fsync the checkpoint file and its directory? On by
+/// default; `RMNP_NO_FSYNC=1` turns it off for tests/benches where
+/// durability is irrelevant and the sync dominates the save time.
+fn fsync_enabled() -> bool {
+    std::env::var_os("RMNP_NO_FSYNC").map_or(true, |v| v != "1")
+}
+
+/// A [`Write`] adapter that feeds everything written through two CRC-32
+/// digests: `footer` (never reset — covers the whole file) and `section`
+/// (reset at each section boundary by the v3 writer).
+struct CrcWriter<W> {
+    inner: W,
+    footer: Crc32,
+    section: Crc32,
+}
+
+impl<W: Write> Write for CrcWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.footer.update(&buf[..n]);
+        self.section.update(&buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
 }
 
 fn write_buffers(out: &mut impl Write, buffers: &[NamedBuffer]) -> anyhow::Result<()> {
@@ -73,20 +119,62 @@ fn tmp_writer(path: &Path) -> anyhow::Result<(std::io::BufWriter<std::fs::File>,
     Ok((std::io::BufWriter::new(std::fs::File::create(&tmp)?), tmp))
 }
 
-/// Flush and atomically rename a [`tmp_writer`] file into place.
+/// Flush, fsync, and atomically rename a [`tmp_writer`] file into place,
+/// then fsync the parent directory so the rename itself is durable. A
+/// rename alone can survive a crash the data didn't — the file contents
+/// must reach disk before the name does.
 fn commit(out: std::io::BufWriter<std::fs::File>, tmp: &Path, path: &Path) -> anyhow::Result<()> {
-    out.into_inner()
+    let file = out
+        .into_inner()
         .map_err(|e| anyhow::anyhow!("flushing checkpoint: {e}"))?;
+    if fsync_enabled() {
+        file.sync_all()
+            .map_err(|e| anyhow::anyhow!("fsync {}: {e}", tmp.display()))?;
+    }
+    drop(file);
     std::fs::rename(tmp, path)?;
+    #[cfg(unix)]
+    if fsync_enabled() {
+        if let Some(dir) = path.parent() {
+            std::fs::File::open(dir)
+                .and_then(|d| d.sync_all())
+                .map_err(|e| anyhow::anyhow!("fsync dir {}: {e}", dir.display()))?;
+        }
+    }
     Ok(())
 }
 
-/// Write a v2 checkpoint: step counter + parameter and optimizer-state
-/// sections. The write is atomic (temp file + rename).
+/// Write a v3 checkpoint: step counter, parameter and optimizer-state
+/// sections, per-section CRC-32s, and a whole-file footer CRC-32. The
+/// write is atomic and durable (temp file + fsync + rename + dir fsync).
 pub fn save_state(path: &Path, state: &TrainState) -> anyhow::Result<()> {
-    let (mut out, tmp) = tmp_writer(path)?;
+    let (out, tmp) = tmp_writer(path)?;
+    let mut out = CrcWriter { inner: out, footer: Crc32::new(), section: Crc32::new() };
     out.write_all(MAGIC)?;
     out.write_all(&VERSION.to_le_bytes())?;
+    out.write_all(&state.step.to_le_bytes())?;
+    out.write_all(&u32_of(state.params.len(), "parameter count")?.to_le_bytes())?;
+    out.write_all(&u32_of(state.opt.len(), "optimizer-buffer count")?.to_le_bytes())?;
+    out.section = Crc32::new();
+    write_buffers(&mut out, &state.params)?;
+    let params_crc = out.section.value();
+    out.write_all(&params_crc.to_le_bytes())?;
+    out.section = Crc32::new();
+    write_buffers(&mut out, &state.opt)?;
+    let opt_crc = out.section.value();
+    out.write_all(&opt_crc.to_le_bytes())?;
+    let footer_crc = out.footer.value();
+    out.write_all(&footer_crc.to_le_bytes())?;
+    commit(out.inner, &tmp, path)
+}
+
+/// Write a legacy v2 checkpoint (sections but no CRCs). Kept so the
+/// v2-read compatibility path stays honestly covered — tests use this to
+/// produce genuine v2 bytes; new code saves v3 via [`save_state`].
+pub fn save_state_v2(path: &Path, state: &TrainState) -> anyhow::Result<()> {
+    let (mut out, tmp) = tmp_writer(path)?;
+    out.write_all(MAGIC)?;
+    out.write_all(&2u32.to_le_bytes())?;
     out.write_all(&state.step.to_le_bytes())?;
     out.write_all(&u32_of(state.params.len(), "parameter count")?.to_le_bytes())?;
     out.write_all(&u32_of(state.opt.len(), "optimizer-buffer count")?.to_le_bytes())?;
@@ -108,11 +196,15 @@ pub fn save(path: &Path, buffers: &[NamedBuffer]) -> anyhow::Result<()> {
 }
 
 /// Bounded reader state: tracks how many bytes may legally remain so
-/// counts read from the file can be validated before allocation.
+/// counts read from the file can be validated before allocation, and
+/// mirrors the writer's two CRC digests so v3 sections verify as they
+/// stream past.
 struct BoundedReader<R> {
     inner: R,
     remaining: u64,
     path: PathBuf,
+    footer: Crc32,
+    section: Crc32,
 }
 
 impl<R: Read> BoundedReader<R> {
@@ -133,6 +225,8 @@ impl<R: Read> BoundedReader<R> {
         self.inner
             .read_exact(buf)
             .map_err(|e| anyhow::anyhow!("reading {what}: {e}"))?;
+        self.footer.update(buf);
+        self.section.update(buf);
         Ok(())
     }
 
@@ -157,6 +251,8 @@ impl<R: Read> BoundedReader<R> {
         self.inner
             .read_exact(&mut bytes)
             .map_err(|e| anyhow::anyhow!("reading {what}: {e}"))?;
+        self.footer.update(&bytes);
+        self.section.update(&bytes);
         Ok(bytes)
     }
 
@@ -183,6 +279,42 @@ impl<R: Read> BoundedReader<R> {
         }
         Ok(buffers)
     }
+
+    /// Reset the section digest at a section boundary.
+    fn begin_section(&mut self) {
+        self.section = Crc32::new();
+    }
+
+    /// Compare the streamed section digest against the stored CRC that
+    /// follows the section. Must be called before any further section
+    /// bytes are read (the stored CRC itself feeds only the footer's
+    /// view of the file, which matches the writer).
+    fn check_section_crc(&mut self, what: &str) -> anyhow::Result<()> {
+        let computed = self.section.value();
+        let stored = self.read_u32(what)?;
+        anyhow::ensure!(
+            stored == computed,
+            "corrupt checkpoint {}: {what} mismatch \
+             (stored {stored:#010x}, computed {computed:#010x})",
+            self.path.display()
+        );
+        Ok(())
+    }
+
+    /// Compare the whole-file digest against the stored footer CRC. The
+    /// computed value is captured before the stored bytes are read —
+    /// the footer covers every byte that precedes it.
+    fn check_footer_crc(&mut self) -> anyhow::Result<()> {
+        let computed = self.footer.value();
+        let stored = self.read_u32("footer CRC")?;
+        anyhow::ensure!(
+            stored == computed,
+            "corrupt checkpoint {}: footer CRC mismatch \
+             (stored {stored:#010x}, computed {computed:#010x})",
+            self.path.display()
+        );
+        Ok(())
+    }
 }
 
 fn open(path: &Path) -> anyhow::Result<(BoundedReader<std::io::BufReader<std::fs::File>>, u32)> {
@@ -192,37 +324,61 @@ fn open(path: &Path) -> anyhow::Result<(BoundedReader<std::io::BufReader<std::fs
         inner: std::io::BufReader::new(file),
         remaining: len,
         path: path.to_path_buf(),
+        footer: Crc32::new(),
+        section: Crc32::new(),
     };
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic, "magic")?;
     anyhow::ensure!(&magic == MAGIC, "not a checkpoint: {}", path.display());
     let version = r.read_u32("version")?;
     anyhow::ensure!(
-        version == 1 || version == VERSION,
-        "unsupported checkpoint v{version} (this build reads v1/v2)"
+        (1..=VERSION).contains(&version),
+        "unsupported checkpoint v{version} (this build reads v1/v2/v3)"
     );
     Ok((r, version))
 }
 
-/// Read a checkpoint into a [`TrainState`]. v2 files restore the step
-/// counter and the parameter/optimizer split; v1 files come back with
-/// `step = 0` and every buffer in `params`.
+/// Read a checkpoint into a [`TrainState`]. v2/v3 files restore the step
+/// counter and the parameter/optimizer split (v3 additionally verifies
+/// section + footer CRCs); v1 files come back with `step = 0` and every
+/// buffer in `params`. Any version rejects trailing bytes.
 pub fn load_state(path: &Path) -> anyhow::Result<TrainState> {
     let (mut r, version) = open(path)?;
-    if version == 1 {
+    let state = if version == 1 {
         let n = r.read_u32("buffer count")? as usize;
         let params = r.read_buffers(n)?;
-        return Ok(TrainState { step: 0, params, opt: Vec::new() });
-    }
-    let step = r.read_u64("step counter")?;
-    let n_params = r.read_u32("parameter count")? as usize;
-    let n_opt = r.read_u32("optimizer-buffer count")? as usize;
-    let params = r.read_buffers(n_params)?;
-    let opt = r.read_buffers(n_opt)?;
-    Ok(TrainState { step, params, opt })
+        TrainState { step: 0, params, opt: Vec::new() }
+    } else {
+        let step = r.read_u64("step counter")?;
+        let n_params = r.read_u32("parameter count")? as usize;
+        let n_opt = r.read_u32("optimizer-buffer count")? as usize;
+        r.begin_section();
+        let params = r.read_buffers(n_params)?;
+        if version >= 3 {
+            r.check_section_crc("parameter-section CRC")?;
+        }
+        r.begin_section();
+        let opt = r.read_buffers(n_opt)?;
+        if version >= 3 {
+            r.check_section_crc("optimizer-section CRC")?;
+            r.check_footer_crc()?;
+        }
+        TrainState { step, params, opt }
+    };
+    // A genuine file of any version ends exactly here. Trailing bytes
+    // mean corruption — most importantly a version field flipped 3 -> 2,
+    // which would otherwise let a v3 file parse as v2 with its three CRC
+    // words silently ignored.
+    anyhow::ensure!(
+        r.remaining == 0,
+        "corrupt checkpoint {}: {} trailing bytes after the final section",
+        r.path.display(),
+        r.remaining
+    );
+    Ok(state)
 }
 
-/// Read a checkpoint as one flat buffer list (v1 order; v2 parameters
+/// Read a checkpoint as one flat buffer list (v1 order; v2/v3 parameters
 /// followed by optimizer state).
 pub fn load(path: &Path) -> anyhow::Result<Vec<NamedBuffer>> {
     let state = load_state(path)?;
@@ -231,14 +387,21 @@ pub fn load(path: &Path) -> anyhow::Result<Vec<NamedBuffer>> {
     Ok(all)
 }
 
-/// Latest checkpoint in a directory (by step number in the filename).
-/// Unreadable or non-UTF-8 entries are skipped, not treated as "no
-/// checkpoints" — a resume must never silently restart from scratch
-/// because one stray file broke the scan.
-pub fn latest(dir: &Path) -> Option<(usize, PathBuf)> {
-    let mut best: Option<(usize, PathBuf)> = None;
-    for entry in std::fs::read_dir(dir).ok()? {
-        let Ok(entry) = entry else { continue };
+/// All `step-N.ckpt` files in `dir`, sorted newest-first. A missing
+/// directory is an empty list; any other scan error propagates — an
+/// unreadable checkpoint dir must not be mistaken for "no checkpoints"
+/// (that is how a resume silently restarts from scratch). Non-UTF-8 or
+/// non-matching names are skipped.
+fn candidates(dir: &Path) -> anyhow::Result<Vec<(usize, PathBuf)>> {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(entries) => entries,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => anyhow::bail!("scanning checkpoint dir {}: {e}", dir.display()),
+    };
+    let mut found = Vec::new();
+    for entry in entries {
+        let entry =
+            entry.map_err(|e| anyhow::anyhow!("scanning checkpoint dir {}: {e}", dir.display()))?;
         let path = entry.path();
         let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
             continue;
@@ -248,12 +411,71 @@ pub fn latest(dir: &Path) -> Option<(usize, PathBuf)> {
             .and_then(|s| s.strip_suffix(".ckpt"))
             .and_then(|s| s.parse::<usize>().ok())
         {
-            if best.as_ref().map_or(true, |(b, _)| step > *b) {
-                best = Some((step, path));
+            found.push((step, path));
+        }
+    }
+    found.sort_by(|a, b| b.0.cmp(&a.0));
+    Ok(found)
+}
+
+/// Latest checkpoint in a directory (by step number in the filename),
+/// without validating its contents. `Ok(None)` means the directory has
+/// no checkpoints (or doesn't exist); IO errors scanning it propagate.
+pub fn latest(dir: &Path) -> anyhow::Result<Option<(usize, PathBuf)>> {
+    Ok(candidates(dir)?.into_iter().next())
+}
+
+/// Newest checkpoint that fully validates: header parses, every CRC
+/// matches, and the payload step agrees with the filename. Corrupt or
+/// mismatched candidates are logged and skipped, walking back to the
+/// next-newest — a torn newest checkpoint costs `checkpoint_every` steps
+/// of progress, not the whole run. Returns the loaded state so resume
+/// doesn't read the file twice.
+pub fn latest_valid(dir: &Path) -> anyhow::Result<Option<(usize, PathBuf, TrainState)>> {
+    for (step, path) in candidates(dir)? {
+        match load_state(&path) {
+            Ok(state) if state.step == step as u64 => return Ok(Some((step, path, state))),
+            Ok(state) => crate::warnln!(
+                "skipping checkpoint {}: filename says step {step} but payload \
+                 says step {} — walking back",
+                path.display(),
+                state.step
+            ),
+            Err(e) => crate::warnln!("skipping corrupt checkpoint: {e} — walking back"),
+        }
+    }
+    Ok(None)
+}
+
+/// Keep-last-K retention: delete all but the newest `keep` checkpoints
+/// in `dir`, plus any stale `.ckpt.tmp` leftovers from crashed saves.
+/// `keep == 0` disables pruning entirely. Returns how many files were
+/// removed.
+pub fn prune(dir: &Path, keep: usize) -> anyhow::Result<usize> {
+    if keep == 0 {
+        return Ok(0);
+    }
+    let mut removed = 0;
+    for (_, path) in candidates(dir)?.into_iter().skip(keep) {
+        std::fs::remove_file(&path)
+            .map_err(|e| anyhow::anyhow!("pruning {}: {e}", path.display()))?;
+        removed += 1;
+    }
+    // stale tmp files are never in-flight here: prune runs right after a
+    // completed commit, and saves are single-threaded per run dir
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let path = entry.path();
+            let is_tmp = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.ends_with(".ckpt.tmp"));
+            if is_tmp && std::fs::remove_file(&path).is_ok() {
+                removed += 1;
             }
         }
     }
-    best
+    Ok(removed)
 }
 
 #[cfg(test)]
@@ -280,8 +502,8 @@ mod tests {
     }
 
     #[test]
-    fn v2_roundtrip_exact() {
-        let dir = tmp("rt2");
+    fn v3_roundtrip_exact() {
+        let dir = tmp("rt3");
         let _ = std::fs::remove_dir_all(&dir);
         let path = dir.join("step-42.ckpt");
         let state = sample_state();
@@ -295,6 +517,23 @@ mod tests {
         assert_eq!(flat.len(), 5);
         assert_eq!(flat[0].name, "w");
         assert_eq!(flat[2].name, "w.momentum");
+    }
+
+    #[test]
+    fn v2_files_still_load() {
+        let dir = tmp("v2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("step-42.ckpt");
+        let state = sample_state();
+        save_state_v2(&path, &state).unwrap();
+        // genuinely v2 on disk: 12 bytes shorter (no CRC words), version 2
+        let v2_bytes = std::fs::read(&path).unwrap();
+        assert_eq!(u32::from_le_bytes(v2_bytes[8..12].try_into().unwrap()), 2);
+        let v3 = dir.join("step-43.ckpt");
+        save_state(&v3, &state).unwrap();
+        assert_eq!(std::fs::read(&v3).unwrap().len(), v2_bytes.len() + 12);
+        // and it loads identically through the current reader
+        assert_eq!(load_state(&path).unwrap(), state);
     }
 
     #[test]
@@ -319,6 +558,68 @@ mod tests {
     }
 
     #[test]
+    fn section_crc_catches_payload_flips() {
+        let dir = tmp("crc");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("step-42.ckpt");
+        save_state(&path, &sample_state()).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // flip one bit in the first parameter's data (header is 28 bytes,
+        // then name_len(4) + "w"(1) + elem_count(4) puts data at 37)
+        let mut bad = good.clone();
+        bad[37] ^= 0x10;
+        let p = dir.join("flipped.ckpt");
+        std::fs::write(&p, &bad).unwrap();
+        let err = load_state(&p).unwrap_err().to_string();
+        assert!(err.contains("parameter-section CRC"), "{err}");
+
+        // flip a stored section-CRC byte: the footer CRC catches it
+        let mut bad = good.clone();
+        let opt_crc_at = good.len() - 8; // [opt_crc u32][footer_crc u32]
+        bad[opt_crc_at] ^= 0x01;
+        let p = dir.join("crcflip.ckpt");
+        std::fs::write(&p, &bad).unwrap();
+        let err = load_state(&p).unwrap_err().to_string();
+        assert!(
+            err.contains("optimizer-section CRC") || err.contains("footer CRC"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn version_flip_to_v2_is_rejected_not_misparsed() {
+        // the one corruption a CRC can't see: the version byte itself
+        // flips 3 -> 2 and the reader takes the unchecksummed v2 path.
+        // The bounded reader + trailing-bytes check must still refuse the
+        // file (the v2 parse trips over the embedded CRC words — here as
+        // a bogus buffer-name length; in the aligned worst case as 12
+        // trailing bytes).
+        let dir = tmp("verflip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("step-42.ckpt");
+        save_state(&path, &sample_state()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8] = 2; // version u32 LE at offset 8
+        let p = dir.join("downgraded.ckpt");
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_state(&p).is_err(), "downgraded v3 must not parse as v2");
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected_for_legacy_versions_too() {
+        let dir = tmp("trail");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("step-42.ckpt");
+        save_state_v2(&path, &sample_state()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.push(0);
+        let p = dir.join("padded.ckpt");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_state(&p).unwrap_err().to_string();
+        assert!(err.contains("trailing bytes"), "{err}");
+    }
+
+    #[test]
     fn latest_picks_max_step() {
         let dir = tmp("latest");
         let _ = std::fs::remove_dir_all(&dir);
@@ -326,9 +627,70 @@ mod tests {
         for s in [3usize, 10, 7] {
             save(&dir.join(format!("step-{s}.ckpt")), &[]).unwrap();
         }
-        let (step, path) = latest(&dir).unwrap();
+        let (step, path) = latest(&dir).unwrap().unwrap();
         assert_eq!(step, 10);
         assert!(path.ends_with("step-10.ckpt"));
+    }
+
+    #[test]
+    fn latest_reports_missing_dir_as_none_not_error() {
+        let dir = tmp("latest-none");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(latest(&dir).unwrap().is_none());
+        assert!(latest_valid(&dir).unwrap().is_none());
+    }
+
+    #[test]
+    fn latest_valid_walks_back_over_a_torn_newest() {
+        let dir = tmp("walkback");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut state = sample_state();
+        state.step = 5;
+        save_state(&dir.join("step-5.ckpt"), &state).unwrap();
+        state.step = 10;
+        save_state(&dir.join("step-10.ckpt"), &state).unwrap();
+        // tear the newest: truncate it mid-payload
+        let bytes = std::fs::read(dir.join("step-10.ckpt")).unwrap();
+        std::fs::write(dir.join("step-10.ckpt"), &bytes[..bytes.len() / 2]).unwrap();
+        let (step, path, loaded) = latest_valid(&dir).unwrap().unwrap();
+        assert_eq!(step, 5);
+        assert!(path.ends_with("step-5.ckpt"));
+        assert_eq!(loaded.step, 5);
+        // plain latest() still reports the (torn) newest by filename
+        assert_eq!(latest(&dir).unwrap().unwrap().0, 10);
+    }
+
+    #[test]
+    fn latest_valid_rejects_step_mismatched_payloads() {
+        let dir = tmp("stepmatch");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut state = sample_state();
+        state.step = 3;
+        save_state(&dir.join("step-3.ckpt"), &state).unwrap();
+        // a step-9 file whose payload says step 3 (e.g. a bad copy)
+        save_state(&dir.join("step-9.ckpt"), &state).unwrap();
+        let (step, _, _) = latest_valid(&dir).unwrap().unwrap();
+        assert_eq!(step, 3, "mismatched payload must be skipped");
+    }
+
+    #[test]
+    fn prune_keeps_the_newest_k() {
+        let dir = tmp("prune");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut state = sample_state();
+        for s in [2u64, 4, 6, 8, 10] {
+            state.step = s;
+            save_state(&dir.join(format!("step-{s}.ckpt")), &state).unwrap();
+        }
+        std::fs::write(dir.join("step-99.ckpt.tmp"), b"stale").unwrap();
+        // keep == 0 disables pruning
+        assert_eq!(prune(&dir, 0).unwrap(), 0);
+        assert_eq!(candidates(&dir).unwrap().len(), 5);
+        let removed = prune(&dir, 2).unwrap();
+        assert_eq!(removed, 4, "3 old checkpoints + 1 stale tmp");
+        let left: Vec<usize> = candidates(&dir).unwrap().into_iter().map(|c| c.0).collect();
+        assert_eq!(left, vec![10, 8]);
+        assert!(!dir.join("step-99.ckpt.tmp").exists());
     }
 
     #[test]
@@ -347,7 +709,7 @@ mod tests {
         // simulate the crash: a stale tmp alongside real checkpoints is
         // ignored by the scan
         std::fs::write(dir.join("step-12.ckpt.tmp"), b"partial").unwrap();
-        let (step, _) = latest(&dir).unwrap();
+        let (step, _) = latest(&dir).unwrap().unwrap();
         assert_eq!(step, 9, "a .tmp from a crashed save must not win");
     }
 
@@ -368,8 +730,8 @@ mod tests {
         save_state(&path, &sample_state()).unwrap();
         let full = std::fs::read(&path).unwrap();
         // cut the file at every prefix length that can break a section:
-        // mid-header, mid-name, mid-data
-        for cut in [4usize, 12, 20, 27, 30, full.len() - 3] {
+        // mid-header, mid-name, mid-data, mid-CRC-words
+        for cut in [4usize, 12, 20, 27, 30, full.len() - 3, full.len() - 11] {
             let short = dir.join("short.ckpt");
             std::fs::write(&short, &full[..cut]).unwrap();
             let err = load_state(&short);

@@ -1,0 +1,321 @@
+//! Anomaly-guarded stepping: the training loop's defense against loss
+//! spikes and numeric blow-ups.
+//!
+//! A single NaN loss poisons momentum silently — the optimizer update
+//! writes NaN into every moment buffer and the run is dead long before
+//! the metrics show it. [`StepGuard`] sits between the gradient
+//! computation and the optimizer update (via
+//! [`TrainBackend::step_gated`](crate::runtime::backend::TrainBackend::step_gated)):
+//!
+//! ```text
+//!            ┌────────────────────────────────────────────────┐
+//!            │                  HEALTHY                       │
+//!            │  scale ← min(scale × recover, 1.0) per step    │
+//!            └───────┬────────────────────────────▲───────────┘
+//!         anomalous  │                            │ finite
+//!         metrics    ▼                            │ metrics
+//!            ┌────────────────────────────────────┴───────────┐
+//!            │                  BACKOFF                       │
+//!            │  skip update (momentum untouched)              │
+//!            │  scale ← max(scale × backoff, min_scale)       │
+//!            └───────┬────────────────────────────────────────┘
+//!                    │ max_consecutive anomalous steps in a row
+//!                    ▼
+//!              ABORT (clean error, checkpoint set intact)
+//! ```
+//!
+//! An *anomalous* step has a non-finite loss or gradient norm, or — when
+//! `max_grad_norm` is set — a gradient norm above that threshold. The
+//! guard's verdict controls the backend: [`Verdict::Skip`] means the
+//! optimizer update (and therefore momentum) is never applied, so a bad
+//! batch costs one skipped step, not the run. Everything the guard does
+//! is surfaced: per-step `lr_scale`/`skipped` columns in metrics.csv and
+//! run totals in summary.jsonl.
+
+use crate::runtime::backend::StepMetrics;
+
+/// Tuning for the [`StepGuard`] state machine. The defaults halve the
+/// LR on each anomaly, floor at 1/64 of the base LR, double back to
+/// full LR over good steps, and abort after 8 consecutive anomalies.
+#[derive(Clone, Copy, Debug)]
+pub struct GuardConfig {
+    /// Master switch; `false` makes [`StepGuard::observe`] always apply.
+    pub enabled: bool,
+    /// LR-scale multiplier per anomalous step; must be in (0, 1).
+    pub backoff: f64,
+    /// Floor for the LR scale; must be in (0, 1].
+    pub min_scale: f64,
+    /// LR-scale multiplier per healthy step (capped at 1.0); must be ≥ 1.
+    pub recover: f64,
+    /// Abort after this many *consecutive* anomalous steps; must be ≥ 1.
+    pub max_consecutive: usize,
+    /// Treat a finite grad norm above this as anomalous too (loss-spike
+    /// guard); 0.0 disables the threshold.
+    pub max_grad_norm: f64,
+}
+
+impl Default for GuardConfig {
+    fn default() -> Self {
+        GuardConfig {
+            enabled: true,
+            backoff: 0.5,
+            min_scale: 1.0 / 64.0,
+            recover: 2.0,
+            max_consecutive: 8,
+            max_grad_norm: 0.0,
+        }
+    }
+}
+
+/// The guard's decision for one step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Healthy metrics: apply the optimizer update.
+    Apply,
+    /// Anomalous metrics: skip the update, leave momentum untouched.
+    Skip,
+}
+
+/// Per-run anomaly guard state. One instance lives for the whole
+/// training loop; it is *not* checkpointed — a resume starts healthy at
+/// full LR scale, which is the conservative choice (the anomaly source
+/// is usually a transient batch, and a persistent one re-triggers the
+/// backoff within a step).
+#[derive(Clone, Debug)]
+pub struct StepGuard {
+    cfg: GuardConfig,
+    scale: f64,
+    consecutive_bad: usize,
+    skipped: usize,
+    min_scale_seen: f64,
+}
+
+impl StepGuard {
+    /// Validate the config and build a guard in the healthy state.
+    pub fn new(cfg: GuardConfig) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            cfg.backoff > 0.0 && cfg.backoff < 1.0,
+            "guard backoff must be in (0, 1), got {}",
+            cfg.backoff
+        );
+        anyhow::ensure!(
+            cfg.min_scale > 0.0 && cfg.min_scale <= 1.0,
+            "guard min_scale must be in (0, 1], got {}",
+            cfg.min_scale
+        );
+        anyhow::ensure!(
+            cfg.recover >= 1.0,
+            "guard recover must be >= 1, got {}",
+            cfg.recover
+        );
+        anyhow::ensure!(
+            cfg.max_consecutive >= 1,
+            "guard max_consecutive must be >= 1"
+        );
+        Ok(StepGuard {
+            cfg,
+            scale: 1.0,
+            consecutive_bad: 0,
+            skipped: 0,
+            min_scale_seen: 1.0,
+        })
+    }
+
+    fn anomalous(&self, m: &StepMetrics) -> bool {
+        !m.loss.is_finite()
+            || !m.grad_norm.is_finite()
+            || (self.cfg.max_grad_norm > 0.0 && f64::from(m.grad_norm) > self.cfg.max_grad_norm)
+    }
+
+    /// Judge one step's metrics and update the state machine. Called by
+    /// the training loop from inside the backend's gate, *after* the
+    /// gradients exist but *before* the optimizer update.
+    pub fn observe(&mut self, step: usize, m: &StepMetrics) -> Verdict {
+        if !self.cfg.enabled {
+            return Verdict::Apply;
+        }
+        if self.anomalous(m) {
+            self.skipped += 1;
+            self.consecutive_bad += 1;
+            self.scale = (self.scale * self.cfg.backoff).max(self.cfg.min_scale);
+            self.min_scale_seen = self.min_scale_seen.min(self.scale);
+            crate::warnln!(
+                "step {step}: anomalous metrics (loss {}, grad_norm {}) — \
+                 skipping optimizer update, lr scale -> {:.6} \
+                 ({}/{} consecutive)",
+                m.loss,
+                m.grad_norm,
+                self.scale,
+                self.consecutive_bad,
+                self.cfg.max_consecutive
+            );
+            Verdict::Skip
+        } else {
+            self.consecutive_bad = 0;
+            self.scale = (self.scale * self.cfg.recover).min(1.0);
+            Verdict::Apply
+        }
+    }
+
+    /// Error out if the run has hit `max_consecutive` anomalous steps in
+    /// a row — the loop calls this after each step so the abort is a
+    /// clean error with the checkpoint set intact, never a panic.
+    pub fn check_abort(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.consecutive_bad < self.cfg.max_consecutive,
+            "aborting run: {} consecutive anomalous steps (non-finite or \
+             exploding loss/grad-norm) — LR backoff reached scale {:.6} \
+             without recovery; the newest valid checkpoint is intact",
+            self.consecutive_bad,
+            self.scale
+        );
+        Ok(())
+    }
+
+    /// The multiplier the loop applies to the scheduled LR this step.
+    pub fn lr_scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Total steps skipped so far.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
+    /// The lowest LR scale the backoff reached over the run.
+    pub fn min_scale_seen(&self) -> f64 {
+        self.min_scale_seen
+    }
+
+    /// Anomalous steps in the current consecutive streak.
+    pub fn consecutive_bad(&self) -> usize {
+        self.consecutive_bad
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn good() -> StepMetrics {
+        StepMetrics { loss: 2.5, grad_norm: 0.8, clipped: 0.0 }
+    }
+
+    fn nan() -> StepMetrics {
+        StepMetrics { loss: f32::NAN, grad_norm: f32::NAN, clipped: 0.0 }
+    }
+
+    #[test]
+    fn healthy_steps_stay_at_full_scale() {
+        let mut g = StepGuard::new(GuardConfig::default()).unwrap();
+        for step in 0..10 {
+            assert_eq!(g.observe(step, &good()), Verdict::Apply);
+        }
+        assert_eq!(g.lr_scale(), 1.0);
+        assert_eq!(g.skipped(), 0);
+        assert_eq!(g.min_scale_seen(), 1.0);
+        g.check_abort().unwrap();
+    }
+
+    #[test]
+    fn nan_skips_and_backs_off_then_recovers() {
+        let mut g = StepGuard::new(GuardConfig::default()).unwrap();
+        assert_eq!(g.observe(0, &nan()), Verdict::Skip);
+        assert_eq!(g.lr_scale(), 0.5);
+        assert_eq!(g.observe(1, &nan()), Verdict::Skip);
+        assert_eq!(g.lr_scale(), 0.25);
+        assert_eq!(g.skipped(), 2);
+        assert_eq!(g.consecutive_bad(), 2);
+        // one good step halves the distance back (recover = 2.0)
+        assert_eq!(g.observe(2, &good()), Verdict::Apply);
+        assert_eq!(g.lr_scale(), 0.5);
+        assert_eq!(g.consecutive_bad(), 0);
+        // full recovery caps at 1.0
+        assert_eq!(g.observe(3, &good()), Verdict::Apply);
+        assert_eq!(g.observe(4, &good()), Verdict::Apply);
+        assert_eq!(g.lr_scale(), 1.0);
+        assert_eq!(g.min_scale_seen(), 0.25);
+        assert_eq!(g.skipped(), 2, "recovery doesn't un-count skips");
+    }
+
+    #[test]
+    fn backoff_floors_at_min_scale() {
+        let mut g = StepGuard::new(GuardConfig {
+            max_consecutive: 100,
+            ..GuardConfig::default()
+        })
+        .unwrap();
+        for step in 0..20 {
+            g.observe(step, &nan());
+        }
+        assert_eq!(g.lr_scale(), 1.0 / 64.0);
+        assert_eq!(g.min_scale_seen(), 1.0 / 64.0);
+    }
+
+    #[test]
+    fn aborts_after_max_consecutive_only() {
+        let mut g = StepGuard::new(GuardConfig {
+            max_consecutive: 3,
+            ..GuardConfig::default()
+        })
+        .unwrap();
+        g.observe(0, &nan());
+        g.observe(1, &nan());
+        g.check_abort().unwrap(); // 2 < 3: still trying
+        // a good step resets the streak entirely
+        g.observe(2, &good());
+        g.observe(3, &nan());
+        g.observe(4, &nan());
+        g.check_abort().unwrap();
+        g.observe(5, &nan());
+        let err = g.check_abort().unwrap_err().to_string();
+        assert!(err.contains("anomalous"), "{err}");
+        assert!(err.contains("checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn infinite_loss_and_grad_spikes_are_anomalous() {
+        let mut g = StepGuard::new(GuardConfig {
+            max_grad_norm: 100.0,
+            ..GuardConfig::default()
+        })
+        .unwrap();
+        let inf = StepMetrics { loss: f32::INFINITY, grad_norm: 1.0, clipped: 0.0 };
+        assert_eq!(g.observe(0, &inf), Verdict::Skip);
+        let spike = StepMetrics { loss: 3.0, grad_norm: 5000.0, clipped: 1.0 };
+        assert_eq!(g.observe(1, &spike), Verdict::Skip);
+        let fine = StepMetrics { loss: 3.0, grad_norm: 99.0, clipped: 0.0 };
+        assert_eq!(g.observe(2, &fine), Verdict::Apply);
+    }
+
+    #[test]
+    fn disabled_guard_never_intervenes() {
+        let mut g = StepGuard::new(GuardConfig {
+            enabled: false,
+            ..GuardConfig::default()
+        })
+        .unwrap();
+        for step in 0..20 {
+            assert_eq!(g.observe(step, &nan()), Verdict::Apply);
+        }
+        assert_eq!(g.lr_scale(), 1.0);
+        assert_eq!(g.skipped(), 0);
+        g.check_abort().unwrap();
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        let bad = |f: fn(&mut GuardConfig)| {
+            let mut c = GuardConfig::default();
+            f(&mut c);
+            StepGuard::new(c).is_err()
+        };
+        assert!(bad(|c| c.backoff = 0.0));
+        assert!(bad(|c| c.backoff = 1.0));
+        assert!(bad(|c| c.min_scale = 0.0));
+        assert!(bad(|c| c.min_scale = 1.5));
+        assert!(bad(|c| c.recover = 0.5));
+        assert!(bad(|c| c.max_consecutive = 0));
+        assert!(StepGuard::new(GuardConfig::default()).is_ok());
+    }
+}

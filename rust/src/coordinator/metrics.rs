@@ -1,9 +1,16 @@
 //! Metric logging: per-step CSV series + JSONL run summaries.
 //!
 //! Every training run writes `metrics.csv` (step, lr, loss, grad_norm,
-//! clipped, eval_loss?) and optionally `dominance.csv` (per-matrix r
-//! statistics). The report harnesses read these back to print the paper's
-//! tables/series, so the writer/reader pair round-trips exactly.
+//! clipped, eval_loss?, lr_scale, skipped) and optionally `dominance.csv`
+//! (per-matrix r statistics). The report harnesses read these back to
+//! print the paper's tables/series, so the writer/reader pair round-trips
+//! exactly.
+//!
+//! Disk-touching operations (flush, JSONL append) go through the bounded
+//! retry policy in [`crate::util::retry`], so a transient `EAGAIN` or
+//! momentary full-disk blip doesn't kill a long run mid-epoch; and
+//! [`CsvWriter`] flushes on drop (with the same retry, loudly on
+//! failure) so buffered rows survive early returns.
 
 use std::fmt::Write as _;
 use std::fs::File;
@@ -60,10 +67,24 @@ impl CsvWriter {
         Ok(())
     }
 
-    /// Flush buffered rows to disk.
+    /// Flush buffered rows to disk (retried on transient IO errors).
     pub fn flush(&mut self) -> anyhow::Result<()> {
-        self.out.flush()?;
-        Ok(())
+        let out = &mut self.out;
+        crate::util::retry::io_retry("csv flush", || {
+            out.flush()?;
+            Ok(())
+        })
+    }
+}
+
+impl Drop for CsvWriter {
+    fn drop(&mut self) {
+        // best-effort: rows buffered when the loop errors out (e.g. a
+        // guard abort) must still reach disk, and a flush failure here
+        // should be loud, not the BufWriter's silent drop
+        if let Err(e) = self.flush() {
+            crate::warnln!("csv flush on drop failed: {e}");
+        }
     }
 }
 
@@ -117,12 +138,11 @@ impl CsvData {
     }
 }
 
-/// Append one JSON object per line to a run-summary file.
+/// Append one JSON object per line to a run-summary file. The open +
+/// write is retried on transient IO errors; the whole line is re-written
+/// per attempt, so readers that take the *last* line (summary consumers
+/// do) always see a complete record once any attempt lands.
 pub fn append_jsonl(path: &Path, fields: &[(&str, String)]) -> anyhow::Result<()> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
     let mut line = String::from("{");
     for (i, (k, v)) in fields.iter().enumerate() {
         if i > 0 {
@@ -130,9 +150,15 @@ pub fn append_jsonl(path: &Path, fields: &[(&str, String)]) -> anyhow::Result<()
         }
         write!(line, "{k:?}:{v}")?;
     }
-    line.push('}');
-    writeln!(f, "{line}")?;
-    Ok(())
+    line.push_str("}\n");
+    crate::util::retry::io_retry("jsonl append", || {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        f.write_all(line.as_bytes())?;
+        Ok(())
+    })
 }
 
 /// Quote a string for JSONL values.

@@ -8,11 +8,13 @@
 //! across worker threads through the same abstraction.
 
 pub mod checkpoint;
+pub mod guard;
 pub mod metrics;
 pub mod schedule;
 pub mod sweep;
 pub mod train;
 
+pub use guard::{GuardConfig, StepGuard, Verdict};
 pub use schedule::lr_at;
 pub use sweep::{run_grid, SweepCell, SweepJob};
 pub use train::{run, run_auto, RunResult};

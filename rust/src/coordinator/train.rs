@@ -10,24 +10,40 @@
 //! ## Resume
 //!
 //! With `cfg.resume = true` and a checkpoint in `cfg.out_dir`, the run
-//! restores the latest checkpoint through the backend's named-buffer
-//! state (parameters **and** optimizer state, bit-exactly), fast-forwards
-//! the train/eval data streams to the saved step, and continues — the
-//! continued trajectory is bit-identical to an uninterrupted run for any
-//! `perf.plan_threads` (asserted by `tests/native_train.rs`).
+//! restores the newest checkpoint that *validates* (header, CRCs, step
+//! stamp — [`checkpoint::latest_valid`] walks back over torn ones)
+//! through the backend's named-buffer state (parameters **and**
+//! optimizer state, bit-exactly), fast-forwards the train/eval data
+//! streams to the saved step, and continues — the continued trajectory
+//! is bit-identical to an uninterrupted run for any `perf.plan_threads`
+//! (asserted by `tests/native_train.rs` and `tests/fault_injection.rs`).
+//! If checkpoints exist but none validates, resume is a clean error,
+//! never a silent restart from scratch.
+//!
+//! ## Anomaly guard
+//!
+//! Each step runs through [`TrainBackend::step_gated`] with a
+//! [`StepGuard`] deciding between the gradient computation and the
+//! optimizer update: non-finite loss/grad-norm skips the update (momentum
+//! untouched), backs off the LR scale, and recovers over healthy steps;
+//! `cfg.guard_max_bad` consecutive anomalies abort the run cleanly with
+//! the checkpoint set intact. Per-step `lr_scale`/`skipped` land in
+//! metrics.csv; run totals land in summary.jsonl.
 
 use std::path::Path;
 
 use crate::config::{BackendKind, DataSpec, RunConfig};
 use crate::coordinator::checkpoint;
+use crate::coordinator::guard::{GuardConfig, StepGuard, Verdict};
 use crate::coordinator::metrics::{append_jsonl, json_str, CsvWriter};
 use crate::coordinator::schedule::lr_at;
 use crate::data::corpus::token_source;
 use crate::data::images::ImageSource;
 use crate::data::loader::BatchLoader;
+use crate::runtime::backend::StepMetrics;
 use crate::runtime::{Batch, BatchShape, NativeBackend, TrainBackend};
 use crate::util::Timer;
-use crate::{debugln, info};
+use crate::{debugln, info, warnln};
 
 /// Outcome of a full training run.
 #[derive(Clone, Debug)]
@@ -47,6 +63,8 @@ pub struct RunResult {
     /// mean train loss over the last 10% of steps (smoother than the last
     /// point for small-scale runs)
     pub tail_train_loss: f64,
+    /// Steps whose optimizer update the anomaly guard skipped.
+    pub skipped_steps: usize,
 }
 
 enum Feed {
@@ -146,24 +164,36 @@ pub fn run(backend: &mut dyn TrainBackend, cfg: &RunConfig) -> anyhow::Result<Ru
     cfg.apply_perf()?;
     std::fs::create_dir_all(&cfg.out_dir)?;
 
-    // resume: restore the newest checkpoint before touching the feeds
+    // resume: restore the newest *valid* checkpoint before touching the
+    // feeds — latest_valid verifies header/CRCs/step and walks back over
+    // torn candidates, logging what it skipped
     let mut start_step = 0usize;
     if cfg.resume {
-        if let Some((step, path)) = checkpoint::latest(&cfg.out_dir) {
-            let state = checkpoint::load_state(&path)?;
-            anyhow::ensure!(
-                state.step == step as u64,
-                "checkpoint {} claims step {} but is named step-{step}",
-                path.display(),
-                state.step
-            );
-            backend.import_state(&state)?;
-            start_step = step;
-            info!(
-                "resumed {} from {} (step {start_step})",
-                cfg.tag(),
-                path.display()
-            );
+        match checkpoint::latest_valid(&cfg.out_dir)? {
+            Some((step, path, state)) => {
+                backend.import_state(&state)?;
+                start_step = step;
+                info!(
+                    "resumed {} from {} (step {start_step})",
+                    cfg.tag(),
+                    path.display()
+                );
+            }
+            None => {
+                // checkpoints on disk but none validates: refusing is the
+                // only safe move — silently restarting from scratch would
+                // overwrite the evidence and lie about the trajectory
+                if let Some((step, path)) = checkpoint::latest(&cfg.out_dir)? {
+                    anyhow::bail!(
+                        "resume requested but no checkpoint in {} validates \
+                         (newest candidate is step-{step}: {}); refusing to \
+                         restart from scratch",
+                        cfg.out_dir.display(),
+                        path.display()
+                    );
+                }
+                // empty dir: a fresh run is what the caller asked for
+            }
         }
     }
     anyhow::ensure!(
@@ -183,19 +213,29 @@ pub fn run(backend: &mut dyn TrainBackend, cfg: &RunConfig) -> anyhow::Result<Ru
         }
     }
 
+    const METRIC_COLUMNS: [&str; 8] = [
+        "step", "lr", "loss", "grad_norm", "clipped", "eval_loss", "lr_scale", "skipped",
+    ];
     let metrics_path = cfg.out_dir.join("metrics.csv");
     let mut csv = if start_step > 0 && metrics_path.exists() {
-        // drop rows the interrupted run wrote past the restored step, so
-        // the continued file has no duplicate/out-of-order step entries
-        drop_rows_from(&metrics_path, start_step)?;
+        // drop rows the interrupted run wrote past the restored step (so
+        // the continued file has no duplicate/out-of-order step entries)
+        // and migrate pre-guard headers to the current arity
+        prepare_resumed_csv(&metrics_path, start_step, &METRIC_COLUMNS)?;
         CsvWriter::append(&metrics_path)?
     } else {
-        CsvWriter::create(
-            &metrics_path,
-            &["step", "lr", "loss", "grad_norm", "clipped", "eval_loss"],
-        )?
+        CsvWriter::create(&metrics_path, &METRIC_COLUMNS)?
     };
     let mut dom_csv: Option<CsvWriter> = None;
+
+    let mut guard = StepGuard::new(GuardConfig {
+        enabled: cfg.guard,
+        backoff: cfg.guard_backoff,
+        min_scale: cfg.guard_min_scale,
+        recover: cfg.guard_recover,
+        max_consecutive: cfg.guard_max_bad.max(1),
+        max_grad_norm: cfg.guard_max_grad_norm,
+    })?;
 
     let mut timer = Timer::new();
     let mut clip_sum = 0.0f64;
@@ -227,23 +267,52 @@ pub fn run(backend: &mut dyn TrainBackend, cfg: &RunConfig) -> anyhow::Result<Ru
     }
 
     for step in start_step..cfg.steps {
-        let lr = lr_at(cfg.schedule, cfg.lr, step, cfg.steps) as f32;
-        let metrics = match &train_feed {
-            Feed::Tokens(l) => {
-                let toks = timer.time("data", || l.next());
-                timer.time("step", || backend.step(&Batch::Tokens(&toks), lr))?
-            }
-            Feed::Images(l) => {
-                let (images, labels) = timer.time("data", || l.next());
-                timer.time("step", || {
-                    backend.step(&Batch::Images { images: &images, labels: &labels }, lr)
-                })?
+        crate::util::fault::begin_step(step as u64);
+        // capture the guard's scale BEFORE the step: a backed-off scale
+        // set by step N's anomaly applies from step N+1
+        let lr_scale = guard.lr_scale();
+        let lr = (lr_at(cfg.schedule, cfg.lr, step, cfg.steps) * lr_scale) as f32;
+        let mut verdict = Verdict::Apply;
+        let (metrics, applied) = {
+            let guard = &mut guard;
+            let verdict = &mut verdict;
+            let decide = &mut |m: &StepMetrics| {
+                *verdict = guard.observe(step, m);
+                *verdict == Verdict::Apply
+            };
+            match &train_feed {
+                Feed::Tokens(l) => {
+                    let toks = timer.time("data", || l.next());
+                    timer
+                        .time("step", || backend.step_gated(&Batch::Tokens(&toks), lr, decide))?
+                }
+                Feed::Images(l) => {
+                    let (images, labels) = timer.time("data", || l.next());
+                    timer.time("step", || {
+                        backend.step_gated(
+                            &Batch::Images { images: &images, labels: &labels },
+                            lr,
+                            decide,
+                        )
+                    })?
+                }
             }
         };
-        clip_sum += metrics.clipped as f64;
-        last_train = metrics.loss as f64;
-        if step >= tail_from {
-            tail_losses.push(metrics.loss as f64);
+        if verdict == Verdict::Skip && applied {
+            warnln!(
+                "backend `{}` cannot skip a fused step — anomaly at step \
+                 {step} was observed (LR backed off) but the update applied",
+                backend.label()
+            );
+        }
+        if applied {
+            clip_sum += metrics.clipped as f64;
+        }
+        if metrics.loss.is_finite() {
+            last_train = metrics.loss as f64;
+            if step >= tail_from {
+                tail_losses.push(metrics.loss as f64);
+            }
         }
 
         let mut eval_loss = f64::NAN;
@@ -259,7 +328,27 @@ pub fn run(backend: &mut dyn TrainBackend, cfg: &RunConfig) -> anyhow::Result<Ru
             metrics.grad_norm as f64,
             metrics.clipped as f64,
             eval_loss,
+            lr_scale,
+            if verdict == Verdict::Skip { 1.0 } else { 0.0 },
         ])?;
+
+        if let Err(abort) = guard.check_abort() {
+            // clean abort: flush what we have, record the outcome, leave
+            // the checkpoint set intact for a later resume
+            csv.flush()?;
+            append_jsonl(
+                &cfg.out_dir.join("summary.jsonl"),
+                &[
+                    ("model", json_str(&cfg.model)),
+                    ("optimizer", json_str(&cfg.optimizer)),
+                    ("aborted", "true".into()),
+                    ("abort_step", format!("{step}")),
+                    ("skipped_steps", format!("{}", guard.skipped())),
+                    ("reason", json_str(&abort.to_string())),
+                ],
+            )?;
+            return Err(abort);
+        }
 
         if cfg.dominance_every > 0 && (step + 1) % cfg.dominance_every == 0 {
             // best-effort diagnostics: a failed probe must never kill a
@@ -301,6 +390,13 @@ pub fn run(backend: &mut dyn TrainBackend, cfg: &RunConfig) -> anyhow::Result<Ru
 
         if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
             timer.time("ckpt", || save_checkpoint(&mut *backend, cfg, step + 1))?;
+            if cfg.keep_checkpoints > 0 {
+                // retention is best-effort: a failed prune must never kill
+                // a run whose checkpoint just landed safely
+                if let Err(e) = checkpoint::prune(&cfg.out_dir, cfg.keep_checkpoints) {
+                    warnln!("checkpoint prune failed: {e}");
+                }
+            }
         }
 
         if step % 25 == 0 || step + 1 == cfg.steps {
@@ -340,6 +436,7 @@ pub fn run(backend: &mut dyn TrainBackend, cfg: &RunConfig) -> anyhow::Result<Ru
         steps: steps_run,
         seconds,
         tail_train_loss: tail,
+        skipped_steps: guard.skipped(),
     };
     append_jsonl(
         &cfg.out_dir.join("summary.jsonl"),
@@ -351,6 +448,14 @@ pub fn run(backend: &mut dyn TrainBackend, cfg: &RunConfig) -> anyhow::Result<Ru
             ("data", json_str(cfg.data.name())),
             ("lr", format!("{}", cfg.lr)),
             ("steps", format!("{}", cfg.steps)),
+            // steps_run distinguishes a resumed continuation from a full
+            // rerun — the fault harness uses it to prove no silent
+            // restart-from-scratch happened (a scratch rerun of a
+            // deterministic stream ends byte-identical, so checkpoint
+            // bytes alone can't tell)
+            ("steps_run", format!("{steps_run}")),
+            ("skipped_steps", format!("{}", result.skipped_steps)),
+            ("guard_min_lr_scale", format!("{}", guard.min_scale_seen())),
             ("final_train_loss", format!("{:.6}", result.final_train_loss)),
             ("final_eval_loss", format!("{:.6}", result.final_eval_loss)),
             ("final_ppl", format!("{:.4}", result.final_ppl)),
@@ -379,6 +484,43 @@ fn drop_rows_from(path: &Path, start_step: usize) -> anyhow::Result<()> {
                     .is_some_and(|step| step < start_step as f64));
         if keep {
             kept.push_str(line);
+            kept.push('\n');
+        }
+    }
+    std::fs::write(path, kept)?;
+    Ok(())
+}
+
+/// Prepare an interrupted `metrics.csv` for in-place continuation:
+/// [`drop_rows_from`] semantics (keep only complete rows below
+/// `start_step`), plus header migration — a file written before the
+/// guard columns existed is rewritten to the current header with old
+/// rows padded by empty cells (or truncated, should columns ever be
+/// removed), so [`CsvWriter::append`] derives the right arity.
+fn prepare_resumed_csv(
+    path: &Path,
+    start_step: usize,
+    header: &[&str],
+) -> anyhow::Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let old_columns = text.lines().next().map_or(0, |h| h.split(',').count());
+    let mut kept = String::new();
+    kept.push_str(&header.join(","));
+    kept.push('\n');
+    for line in text.lines().skip(1) {
+        let complete = line.split(',').count() == old_columns;
+        let below = line
+            .split(',')
+            .next()
+            .and_then(|s| s.parse::<f64>().ok())
+            .is_some_and(|step| step < start_step as f64);
+        if complete && below {
+            let mut cells: Vec<&str> = line.split(',').collect();
+            cells.truncate(header.len());
+            kept.push_str(&cells.join(","));
+            for _ in cells.len()..header.len() {
+                kept.push(',');
+            }
             kept.push('\n');
         }
     }

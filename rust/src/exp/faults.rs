@@ -1,0 +1,433 @@
+//! Crash/fault-injection harness: every scenario ends in byte-exact
+//! resumed training or a clean error — never a panic and never a silent
+//! restart from scratch.
+//!
+//! The harness drives the real `rmnp train` binary as a child process
+//! (faults must hit a genuinely separate OS process, otherwise a SIGKILL
+//! would take the harness down too) and checks recovery against an
+//! uninterrupted reference run:
+//!
+//! | scenario            | fault                                  | pass condition |
+//! |---------------------|----------------------------------------|----------------|
+//! | `sigkill-N`         | SIGKILL mid-train (random delay)       | resume → final ckpt byte-equal reference, `steps_run < steps` |
+//! | `truncate-latest`   | newest ckpt truncated to random prefix | resume walks back → byte-equal reference |
+//! | `bitflip-latest`    | random bit flipped in newest ckpt      | resume walks back → byte-equal reference |
+//! | `nan-burst`         | 3 NaN-gradient steps (env hook)        | run completes, 3 skips, LR backs off to 1/8 then recovers |
+//! | `guard-abort`       | 8 NaN steps vs `guard_max_bad=4`       | clean nonzero exit mentioning the anomaly, no panic |
+//!
+//! The `steps_run` field in `summary.jsonl` is what rules out a silent
+//! restart-from-scratch: the data streams are deterministic, so a scratch
+//! rerun ends with byte-identical checkpoints and byte comparison alone
+//! cannot tell the two apart.
+//!
+//! Scenario functions are `pub` so `tests/fault_injection.rs` reuses them
+//! verbatim against the `CARGO_BIN_EXE_rmnp` binary; `rmnp exp faults`
+//! points them at `std::env::current_exe()`.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::util::json::{parse as json_parse, Json};
+use crate::util::Rng;
+
+/// Knobs for the fault suite (all scenarios share them).
+#[derive(Clone, Debug)]
+pub struct FaultOpts {
+    /// Directory scenario run dirs are created under (wiped per scenario).
+    pub out: PathBuf,
+    /// Steps per training run. Must be a multiple of `checkpoint_every`.
+    pub steps: usize,
+    /// Checkpoint cadence; the walkback scenarios need at least two.
+    pub checkpoint_every: usize,
+    /// How many independent SIGKILL rounds to run.
+    pub kills: usize,
+    /// Seed for both the child runs and the fault-site randomness.
+    pub seed: u64,
+}
+
+impl Default for FaultOpts {
+    fn default() -> Self {
+        FaultOpts {
+            out: PathBuf::from("runs/faults"),
+            steps: 12,
+            checkpoint_every: 3,
+            kills: 2,
+            seed: 1234,
+        }
+    }
+}
+
+/// Outcome of one fault scenario.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Short scenario tag (e.g. `sigkill-0`, `truncate-latest`).
+    pub name: String,
+    /// Whether every check held.
+    pub passed: bool,
+    /// Human-readable evidence (or the first failed check).
+    pub detail: String,
+    /// Wall-clock seconds of the recovery (resume) leg.
+    pub seconds: f64,
+}
+
+/// Which corruption [`corrupted_latest`] applies to the newest checkpoint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Corruption {
+    /// Cut the file to a random proper prefix (torn write).
+    Truncate,
+    /// XOR one random bit (storage rot / partial overwrite).
+    BitFlip,
+}
+
+fn fresh_dir(dir: &Path) -> anyhow::Result<()> {
+    if dir.exists() {
+        std::fs::remove_dir_all(dir)?;
+    }
+    std::fs::create_dir_all(dir)?;
+    Ok(())
+}
+
+/// Build the child `rmnp train` invocation all scenarios share. The env
+/// hook is explicitly *cleared* here; only the NaN scenarios re-add it.
+fn train_cmd(bin: &Path, opts: &FaultOpts, dir: &Path, resume: bool) -> Command {
+    let mut cmd = Command::new(bin);
+    cmd.arg("train")
+        .arg("--set")
+        .arg(format!("train.steps={}", opts.steps))
+        .arg("--set")
+        .arg(format!("train.checkpoint_every={}", opts.checkpoint_every))
+        .arg("--set")
+        .arg(format!("train.seed={}", opts.seed))
+        .arg("--set")
+        .arg("eval.every=0")
+        .arg("--set")
+        .arg(format!("out.dir={}", dir.display()))
+        .env_remove("RMNP_FAULT_NAN_STEPS");
+    if resume {
+        cmd.arg("--resume");
+    }
+    cmd
+}
+
+/// Run a child to completion, capturing output. Returns
+/// `(success, combined stdout+stderr, seconds)`.
+fn run_child(mut cmd: Command) -> anyhow::Result<(bool, String, f64)> {
+    let t0 = Instant::now();
+    let out = cmd.output()?;
+    let secs = t0.elapsed().as_secs_f64();
+    let mut text = String::from_utf8_lossy(&out.stdout).into_owned();
+    text.push_str(&String::from_utf8_lossy(&out.stderr));
+    Ok((out.status.success(), text, secs))
+}
+
+fn ckpt_files(dir: &Path) -> anyhow::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    match std::fs::read_dir(dir) {
+        Ok(entries) => {
+            for entry in entries {
+                let entry = entry?;
+                let name = entry.file_name();
+                let name = name.to_string_lossy().into_owned();
+                if name.starts_with("step-") && name.ends_with(".ckpt") {
+                    out.push(entry.path());
+                }
+            }
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+        Err(e) => return Err(e.into()),
+    }
+    Ok(out)
+}
+
+fn final_ckpt(opts: &FaultOpts, dir: &Path) -> PathBuf {
+    dir.join(format!("step-{}.ckpt", opts.steps))
+}
+
+/// Last line of the run's `summary.jsonl`, parsed.
+fn last_summary(dir: &Path) -> anyhow::Result<Json> {
+    let path = dir.join("summary.jsonl");
+    let text = std::fs::read_to_string(&path)?;
+    let last = text
+        .lines()
+        .last()
+        .ok_or_else(|| anyhow::anyhow!("empty {}", path.display()))?;
+    json_parse(last)
+}
+
+fn summary_num(dir: &Path, key: &str) -> anyhow::Result<f64> {
+    last_summary(dir)?
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("summary.jsonl has no numeric `{key}`"))
+}
+
+/// Run an uninterrupted reference job and return the bytes of its final
+/// checkpoint — the gold value every recovery scenario must reproduce.
+pub fn reference_bytes(bin: &Path, opts: &FaultOpts) -> anyhow::Result<Vec<u8>> {
+    let dir = opts.out.join("reference");
+    fresh_dir(&dir)?;
+    let (ok, text, _) = run_child(train_cmd(bin, opts, &dir, false))?;
+    anyhow::ensure!(ok, "reference run failed:\n{text}");
+    let bytes = std::fs::read(final_ckpt(opts, &dir))?;
+    Ok(bytes)
+}
+
+/// SIGKILL a child mid-train (after its first checkpoint lands, plus a
+/// seed-derived extra delay), then resume and demand a byte-exact finish.
+pub fn sigkill_mid_train(
+    bin: &Path,
+    opts: &FaultOpts,
+    reference: &[u8],
+    round: u64,
+) -> anyhow::Result<Scenario> {
+    let name = format!("sigkill-{round}");
+    let dir = opts.out.join(&name);
+    fresh_dir(&dir)?;
+
+    let mut cmd = train_cmd(bin, opts, &dir, false);
+    cmd.stdout(Stdio::null()).stderr(Stdio::null());
+    let mut child = cmd.spawn()?;
+    // wait for the first durable checkpoint, then kill at a seed-derived
+    // offset so successive rounds hit different phases of the loop
+    let extra_ms = Rng::new(opts.seed ^ round.wrapping_mul(0x9E37)).below(80);
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut finished_early = false;
+    loop {
+        if child.try_wait()?.is_some() {
+            finished_early = true;
+            break;
+        }
+        if !ckpt_files(&dir)?.is_empty() {
+            break;
+        }
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            anyhow::bail!("{name}: no checkpoint appeared within 120s");
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    if !finished_early {
+        std::thread::sleep(Duration::from_millis(extra_ms));
+        child.kill()?; // SIGKILL on unix: no atexit, no Drop, no flush
+    }
+    let _ = child.wait();
+
+    let (ok, text, secs) = run_child(train_cmd(bin, opts, &dir, true))?;
+    let mut s = Scenario { name, passed: true, detail: String::new(), seconds: secs };
+    check(&mut s, ok, || format!("resume after kill failed:\n{text}"));
+    check(&mut s, !text.contains("panicked"), || "resume output mentions a panic".into());
+    let resumed = std::fs::read(final_ckpt(opts, &dir))?;
+    check(&mut s, resumed == reference, || {
+        "final checkpoint differs from the uninterrupted reference".into()
+    });
+    // steps_run < steps proves the resume continued rather than silently
+    // restarting (scratch reruns are byte-identical — bytes can't tell)
+    let steps_run = summary_num(&dir, "steps_run")?;
+    check(&mut s, steps_run < opts.steps as f64, || {
+        format!("steps_run={steps_run} — looks like a restart from scratch")
+    });
+    if s.passed {
+        s.detail = if finished_early {
+            format!("child finished before the kill landed; resume was a no-op (steps_run={steps_run})")
+        } else {
+            format!("killed after first ckpt (+{extra_ms}ms); resumed {steps_run} steps, byte-exact")
+        };
+    }
+    Ok(s)
+}
+
+/// Complete a run, corrupt its *newest* checkpoint, resume: the loader
+/// must walk back to the previous valid one and still finish byte-exact.
+pub fn corrupted_latest(
+    bin: &Path,
+    opts: &FaultOpts,
+    reference: &[u8],
+    kind: Corruption,
+) -> anyhow::Result<Scenario> {
+    let name = match kind {
+        Corruption::Truncate => "truncate-latest".to_string(),
+        Corruption::BitFlip => "bitflip-latest".to_string(),
+    };
+    let dir = opts.out.join(&name);
+    fresh_dir(&dir)?;
+    let (ok, text, _) = run_child(train_cmd(bin, opts, &dir, false))?;
+    anyhow::ensure!(ok, "{name}: scratch run failed:\n{text}");
+
+    let victim = final_ckpt(opts, &dir);
+    let mut bytes = std::fs::read(&victim)?;
+    anyhow::ensure!(bytes == reference, "{name}: scratch run is not deterministic");
+    let mut rng = Rng::new(opts.seed ^ 0xFA17);
+    let detail_fault = match kind {
+        Corruption::Truncate => {
+            let keep = 1 + rng.below(bytes.len() as u64 - 1) as usize;
+            bytes.truncate(keep);
+            format!("truncated to {keep}/{} bytes", reference.len())
+        }
+        Corruption::BitFlip => {
+            let at = rng.below(bytes.len() as u64) as usize;
+            let bit = 1u8 << rng.below(8);
+            bytes[at] ^= bit;
+            format!("flipped bit {bit:#04x} at offset {at}")
+        }
+    };
+    std::fs::write(&victim, &bytes)?;
+
+    let (ok, text, secs) = run_child(train_cmd(bin, opts, &dir, true))?;
+    let mut s = Scenario { name, passed: true, detail: String::new(), seconds: secs };
+    check(&mut s, ok, || format!("resume over corrupted ckpt failed:\n{text}"));
+    check(&mut s, !text.contains("panicked"), || "resume output mentions a panic".into());
+    let resumed = std::fs::read(&victim)?;
+    check(&mut s, resumed == reference, || {
+        "rewritten final checkpoint differs from the reference".into()
+    });
+    // walkback lands on the second-newest ckpt, exactly one cadence back
+    let steps_run = summary_num(&dir, "steps_run")?;
+    check(&mut s, steps_run == opts.checkpoint_every as f64, || {
+        format!(
+            "steps_run={steps_run}, expected {} (walk back exactly one checkpoint)",
+            opts.checkpoint_every
+        )
+    });
+    if s.passed {
+        s.detail = format!("{detail_fault}; walked back {steps_run} steps, byte-exact");
+    }
+    Ok(s)
+}
+
+/// Inject a 3-step NaN-gradient burst via the `RMNP_FAULT_NAN_STEPS` env
+/// hook: the guard must skip exactly those updates, back the LR off to
+/// 1/8, recover to full scale, and the run must still end finite.
+pub fn nan_burst(bin: &Path, opts: &FaultOpts) -> anyhow::Result<Scenario> {
+    let name = "nan-burst".to_string();
+    let dir = opts.out.join(&name);
+    fresh_dir(&dir)?;
+    let steps = opts.steps.max(16);
+    let mut o = opts.clone();
+    o.steps = steps;
+    o.checkpoint_every = 0; // this scenario is about the guard, not ckpts
+    let mut cmd = train_cmd(bin, &o, &dir, false);
+    cmd.env("RMNP_FAULT_NAN_STEPS", "5,6,7");
+    let (ok, text, secs) = run_child(cmd)?;
+    let mut s = Scenario { name, passed: true, detail: String::new(), seconds: secs };
+    check(&mut s, ok, || format!("run with NaN burst failed:\n{text}"));
+    check(&mut s, !text.contains("panicked"), || "output mentions a panic".into());
+    let skipped = summary_num(&dir, "skipped_steps")?;
+    check(&mut s, skipped == 3.0, || format!("skipped_steps={skipped}, expected 3"));
+    let min_scale = summary_num(&dir, "guard_min_lr_scale")?;
+    check(&mut s, (min_scale - 0.125).abs() < 1e-12, || {
+        format!("guard_min_lr_scale={min_scale}, expected 0.125 after 3 halvings")
+    });
+    let final_loss = summary_num(&dir, "final_train_loss")?;
+    check(&mut s, final_loss.is_finite(), || "final_train_loss is not finite".into());
+    // per-step evidence: exactly steps 5..=7 skipped, scale back at 1.0
+    let csv = crate::coordinator::metrics::CsvData::read(&dir.join("metrics.csv"))?;
+    let skipped_col = csv.column("skipped")?;
+    let marked: Vec<usize> = skipped_col
+        .iter()
+        .enumerate()
+        .filter(|(_, v)| **v == 1.0)
+        .map(|(i, _)| i)
+        .collect();
+    check(&mut s, marked == vec![5, 6, 7], || {
+        format!("metrics.csv skip markers at {marked:?}, expected [5, 6, 7]")
+    });
+    let scale_col = csv.column("lr_scale")?;
+    check(&mut s, scale_col.last() == Some(&1.0), || {
+        format!("lr_scale did not recover to 1.0 (last = {:?})", scale_col.last())
+    });
+    if s.passed {
+        s.detail = format!(
+            "3 steps skipped, LR floor {min_scale}, recovered to 1.0, final loss {final_loss:.4}"
+        );
+    }
+    Ok(s)
+}
+
+/// Sustain anomalies past `guard_max_bad`: the run must abort *cleanly* —
+/// a nonzero exit explaining the anomaly, never a panic.
+pub fn guard_abort(bin: &Path, opts: &FaultOpts) -> anyhow::Result<Scenario> {
+    let name = "guard-abort".to_string();
+    let dir = opts.out.join(&name);
+    fresh_dir(&dir)?;
+    let mut o = opts.clone();
+    o.steps = opts.steps.max(16);
+    o.checkpoint_every = 0;
+    let mut cmd = train_cmd(bin, &o, &dir, false);
+    cmd.arg("--set")
+        .arg("train.guard_max_bad=4")
+        .env("RMNP_FAULT_NAN_STEPS", "2,3,4,5,6,7,8,9");
+    let (ok, text, secs) = run_child(cmd)?;
+    let mut s = Scenario { name, passed: true, detail: String::new(), seconds: secs };
+    check(&mut s, !ok, || "run should have aborted but exited 0".into());
+    check(&mut s, !text.contains("panicked"), || "abort path panicked".into());
+    check(&mut s, text.contains("anomal"), || {
+        format!("abort message does not explain the anomaly:\n{text}")
+    });
+    // the abort is recorded, with the skip count, in summary.jsonl
+    let summary = std::fs::read_to_string(dir.join("summary.jsonl"))?;
+    let last = summary.lines().last().unwrap_or("");
+    check(&mut s, last.contains("\"aborted\":true"), || {
+        format!("summary.jsonl does not record the abort: {last}")
+    });
+    if s.passed {
+        s.detail = "clean nonzero exit, abort recorded in summary.jsonl".into();
+    }
+    Ok(s)
+}
+
+fn check(s: &mut Scenario, ok: bool, detail: impl FnOnce() -> String) {
+    if s.passed && !ok {
+        s.passed = false;
+        s.detail = detail();
+    }
+}
+
+/// Run the whole suite against `bin`. Scenario *infrastructure* failures
+/// (spawn errors, missing files) surface as `Err`; check failures come
+/// back as `passed: false` rows so the caller can report them all.
+pub fn run_all(bin: &Path, opts: &FaultOpts) -> anyhow::Result<Vec<Scenario>> {
+    anyhow::ensure!(
+        opts.checkpoint_every > 0
+            && opts.steps % opts.checkpoint_every == 0
+            && opts.steps / opts.checkpoint_every >= 2,
+        "fault suite needs steps to be >= 2 full checkpoint cadences \
+         (got steps={}, checkpoint_every={})",
+        opts.steps,
+        opts.checkpoint_every
+    );
+    std::fs::create_dir_all(&opts.out)?;
+    let reference = reference_bytes(bin, opts)?;
+    let mut rows = Vec::new();
+    for round in 0..opts.kills.max(1) as u64 {
+        rows.push(sigkill_mid_train(bin, opts, &reference, round)?);
+    }
+    rows.push(corrupted_latest(bin, opts, &reference, Corruption::Truncate)?);
+    rows.push(corrupted_latest(bin, opts, &reference, Corruption::BitFlip)?);
+    rows.push(nan_burst(bin, opts)?);
+    rows.push(guard_abort(bin, opts)?);
+    Ok(rows)
+}
+
+/// Render the suite outcome as an aligned text table.
+pub fn format(rows: &[Scenario]) -> String {
+    let mut out = String::from("fault-injection suite\n");
+    let wide = rows.iter().map(|s| s.name.len()).max().unwrap_or(8);
+    for s in rows {
+        out.push_str(&format!(
+            "  {} {:wide$}  {:6.2}s  {}\n",
+            if s.passed { "PASS" } else { "FAIL" },
+            s.name,
+            s.seconds,
+            s.detail,
+        ));
+    }
+    let failed = rows.iter().filter(|s| !s.passed).count();
+    out.push_str(&format!(
+        "  {}/{} scenarios passed\n",
+        rows.len() - failed,
+        rows.len()
+    ));
+    out
+}

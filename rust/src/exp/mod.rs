@@ -10,6 +10,7 @@
 //! | [`pretrain::embed_ablation`] | Tables 15/16 |
 //! | [`pretrain::ssm`] / [`pretrain::vision`] | Figs 25/27, Tables 20/21 |
 //! | [`cliprate`] | Figs 29–32 (gradient clip-rate trajectories) |
+//! | [`faults`] | crash/fault-injection suite (not a paper table; guards the robustness claims) |
 //!
 //! The training-loop harnesses (`pretrain`, `sweeps`) run on any
 //! [`TrainBackend`](crate::runtime::TrainBackend) — offline on the
@@ -22,6 +23,7 @@
 pub mod cliprate;
 #[cfg(feature = "pjrt")]
 pub mod dominance_exp;
+pub mod faults;
 pub mod precond;
 pub mod pretrain;
 pub mod sweeps;

@@ -85,6 +85,29 @@ pub trait TrainBackend {
     /// One fused train step: forward, backward, clip, optimizer update.
     fn step(&mut self, batch: &Batch, lr: f32) -> anyhow::Result<StepMetrics>;
 
+    /// One train step with an apply/skip gate between the gradient
+    /// computation and the optimizer update. `decide` sees the step's
+    /// metrics (loss, grad norm) while the gradients exist but before
+    /// any state is mutated; returning `false` asks the backend to drop
+    /// the update so parameters *and momentum* stay untouched. The
+    /// returned bool reports whether the update was actually applied.
+    ///
+    /// The default implementation cannot un-apply a fused step, so it
+    /// always applies and reports `true` — the anomaly guard in
+    /// `coordinator::train` treats an unhonored skip as
+    /// observe-and-warn. Backends that can split gradient computation
+    /// from the update (the native backend does) override this.
+    fn step_gated(
+        &mut self,
+        batch: &Batch,
+        lr: f32,
+        decide: &mut dyn FnMut(&StepMetrics) -> bool,
+    ) -> anyhow::Result<(StepMetrics, bool)> {
+        let m = self.step(batch, lr)?;
+        let _ = decide(&m);
+        Ok((m, true))
+    }
+
     /// Held-out loss on one batch (parameters untouched).
     fn eval(&mut self, batch: &Batch) -> anyhow::Result<f32>;
 

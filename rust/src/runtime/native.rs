@@ -152,14 +152,32 @@ impl TrainBackend for NativeBackend {
     }
 
     fn step(&mut self, batch: &Batch, lr: f32) -> anyhow::Result<StepMetrics> {
+        self.step_gated(batch, lr, &mut |_| true).map(|(m, _)| m)
+    }
+
+    fn step_gated(
+        &mut self,
+        batch: &Batch,
+        lr: f32,
+        decide: &mut dyn FnMut(&StepMetrics) -> bool,
+    ) -> anyhow::Result<(StepMetrics, bool)> {
         let arch = &mut self.arch;
         let idx = &self.idx;
         let plan = &self.plan;
         let (loss, grad_norm, clipped) =
             plan.with_all_tasks(|tasks| -> anyhow::Result<(f64, f64, f32)> {
                 arch.load_batch(tasks, idx, batch)?;
-                let loss = arch.forward(tasks, idx);
+                let mut loss = arch.forward(tasks, idx);
                 arch.backward(tasks, idx);
+                if crate::util::fault::nan_grads_now() {
+                    // test-only hook (RMNP_FAULT_NAN_STEPS): poison the
+                    // freshly computed gradients exactly as a numeric
+                    // blow-up would, after the real backward pass
+                    loss = f64::NAN;
+                    for t in tasks.iter_mut() {
+                        t.grad.data_mut().fill(f32::NAN);
+                    }
+                }
                 // global-norm clip, f64 accumulation in scheduling order
                 // (deterministic for any plan_threads)
                 let mut sq = 0.0f64;
@@ -169,6 +187,8 @@ impl TrainBackend for NativeBackend {
                     }
                 }
                 let norm = sq.sqrt();
+                // a NaN norm fails this comparison, so poisoned grads
+                // reach the gate unclipped with grad_norm = NaN
                 let clipped = if norm > CLIP_NORM {
                     let s = (CLIP_NORM / norm) as f32;
                     for t in tasks.iter_mut() {
@@ -180,13 +200,17 @@ impl TrainBackend for NativeBackend {
                 };
                 Ok((loss, norm, clipped))
             })?;
-        self.plan.step_all(lr);
-        self.steps += 1;
-        Ok(StepMetrics {
+        let metrics = StepMetrics {
             loss: loss as f32,
             grad_norm: grad_norm as f32,
             clipped,
-        })
+        };
+        let apply = decide(&metrics);
+        if apply {
+            self.plan.step_all(lr);
+            self.steps += 1;
+        }
+        Ok((metrics, apply))
     }
 
     fn eval(&mut self, batch: &Batch) -> anyhow::Result<f32> {
@@ -442,6 +466,36 @@ mod tests {
             let fb = b.export_state().unwrap();
             assert_eq!(fa, fb, "{optimizer}: restored run diverged");
         }
+    }
+
+    #[test]
+    fn refused_gate_leaves_state_bit_identical() {
+        // step_gated with decide -> false must not touch parameters,
+        // momentum, or the step counter — the skipped-step contract the
+        // anomaly guard relies on
+        let mut b = NativeBackend::new("gpt2_tiny", "rmnp", 21, 2).unwrap();
+        let toks = token_batch(b.spec(), 77);
+        b.step(&Batch::Tokens(&toks), 3e-3).unwrap();
+        let before = b.export_state().unwrap();
+        let toks2 = token_batch(b.spec(), 78);
+        let (m, applied) = b
+            .step_gated(&Batch::Tokens(&toks2), 3e-3, &mut |_| false)
+            .unwrap();
+        assert!(!applied);
+        assert!(m.loss.is_finite(), "metrics still report the real loss");
+        assert_eq!(b.steps_taken(), 1, "skipped step must not count");
+        let after = b.export_state().unwrap();
+        assert_eq!(before, after, "refused gate mutated state");
+        // and an accepted gate behaves exactly like step()
+        let mut c = NativeBackend::new("gpt2_tiny", "rmnp", 21, 2).unwrap();
+        c.import_state(&before).unwrap();
+        let (gm, ok) = c
+            .step_gated(&Batch::Tokens(&toks2), 3e-3, &mut |_| true)
+            .unwrap();
+        assert!(ok);
+        b.step(&Batch::Tokens(&toks2), 3e-3).unwrap();
+        assert_eq!(b.export_state().unwrap(), c.export_state().unwrap());
+        assert_eq!(gm.loss, m.loss, "gate decision must not change the math");
     }
 
     #[test]

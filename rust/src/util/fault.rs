@@ -1,0 +1,77 @@
+//! Test-only fault injection, gated entirely behind environment
+//! variables.
+//!
+//! The fault-injection harness (`rmnp exp faults`,
+//! `tests/fault_injection.rs`) needs to provoke anomalies *inside* a
+//! real child `rmnp train` process — a NaN gradient burst at a chosen
+//! step — without any test-only API surface leaking into the library.
+//! The contract:
+//!
+//! * `RMNP_FAULT_NAN_STEPS="3,4,5"` — comma-separated absolute step
+//!   indices at which the native backend poisons the loss and gradients
+//!   with NaN *after* the real backward pass (so the guard sees exactly
+//!   what a numeric blow-up would produce).
+//! * Unset (the normal case): every query is a single relaxed atomic
+//!   load plus a `OnceLock` read — zero parsing, zero branches taken.
+//!
+//! The env var is read once per process and cached; the harness sets it
+//! on the child `Command`, never in-process, so there are no cross-test
+//! races on global state.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// The step the training loop is currently executing (set by
+/// [`begin_step`]). `u64::MAX` until the first step begins.
+static CURRENT_STEP: AtomicU64 = AtomicU64::new(u64::MAX);
+
+fn nan_steps() -> &'static [u64] {
+    static STEPS: OnceLock<Vec<u64>> = OnceLock::new();
+    STEPS.get_or_init(|| {
+        let Some(raw) = std::env::var_os("RMNP_FAULT_NAN_STEPS") else {
+            return Vec::new();
+        };
+        let raw = raw.to_string_lossy();
+        let mut steps: Vec<u64> = raw
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect();
+        steps.sort_unstable();
+        steps.dedup();
+        if !steps.is_empty() {
+            crate::warnln!("fault injection armed: NaN gradients at steps {steps:?}");
+        }
+        steps
+    })
+}
+
+/// Record that the training loop is entering `step`. Called once per
+/// loop iteration by `coordinator::train`.
+pub fn begin_step(step: u64) {
+    CURRENT_STEP.store(step, Ordering::Relaxed);
+}
+
+/// Should the backend poison this step's loss/gradients with NaN?
+/// Always `false` unless `RMNP_FAULT_NAN_STEPS` names the current step.
+pub fn nan_grads_now() -> bool {
+    let steps = nan_steps();
+    if steps.is_empty() {
+        return false;
+    }
+    steps.binary_search(&CURRENT_STEP.load(Ordering::Relaxed)).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_env_never_injects() {
+        // the test binary never sets RMNP_FAULT_NAN_STEPS, so injection
+        // must be off regardless of the step counter
+        for step in [0u64, 3, 1000] {
+            begin_step(step);
+            assert!(!nan_grads_now());
+        }
+    }
+}

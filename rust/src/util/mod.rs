@@ -6,8 +6,11 @@
 // optim/; this module's full docs pass is still pending (ROADMAP.md).
 #![allow(missing_docs)]
 
+pub mod crc32;
+pub mod fault;
 pub mod json;
 pub mod logging;
+pub mod retry;
 pub mod rng;
 pub mod timer;
 

@@ -1,0 +1,110 @@
+//! Bounded retry-with-backoff for transient IO.
+//!
+//! Long training runs die to one-off blips — `EAGAIN`, a momentarily
+//! full disk, an NFS hiccup — that would succeed if simply tried again a
+//! moment later. [`with_retry`] wraps such an operation in a small,
+//! bounded exponential-backoff loop; [`io_retry`] is the policy the
+//! metrics writers use (4 attempts, 10 ms base delay, so a failure burns
+//! at most ~70 ms before surfacing the real error).
+//!
+//! This is for *transient* errors only: the helper retries every failure
+//! indiscriminately, so callers must only wrap operations that are safe
+//! to re-run (idempotent writes, opens, flushes).
+
+use std::time::Duration;
+
+/// Run `op`, retrying up to `attempts` total tries with exponential
+/// backoff (`base`, `2*base`, `4*base`, …) between failures. Returns the
+/// first success, or the last error annotated with the attempt count.
+pub fn with_retry<T>(
+    what: &str,
+    attempts: usize,
+    base: Duration,
+    mut op: impl FnMut() -> anyhow::Result<T>,
+) -> anyhow::Result<T> {
+    let attempts = attempts.max(1);
+    let mut delay = base;
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 1..=attempts {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                if attempt < attempts {
+                    crate::warnln!(
+                        "{what} failed (attempt {attempt}/{attempts}), retrying \
+                         in {delay:?}: {e}"
+                    );
+                    std::thread::sleep(delay);
+                    delay = delay.saturating_mul(2);
+                }
+                last = Some(e);
+            }
+        }
+    }
+    Err(anyhow::anyhow!(
+        "{what} failed after {attempts} attempts: {}",
+        last.expect("at least one attempt ran")
+    ))
+}
+
+/// The metrics-IO retry policy: 4 attempts, 10 ms base backoff.
+pub fn io_retry<T>(what: &str, op: impl FnMut() -> anyhow::Result<T>) -> anyhow::Result<T> {
+    with_retry(what, 4, Duration::from_millis(10), op)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_success_returns_immediately() {
+        let mut calls = 0;
+        let v = with_retry("op", 4, Duration::from_millis(1), || {
+            calls += 1;
+            Ok(7)
+        })
+        .unwrap();
+        assert_eq!(v, 7);
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn transient_failure_recovers() {
+        let mut calls = 0;
+        let v = with_retry("op", 4, Duration::from_millis(1), || {
+            calls += 1;
+            anyhow::ensure!(calls >= 3, "blip {calls}");
+            Ok(calls)
+        })
+        .unwrap();
+        assert_eq!(v, 3);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn exhausted_retries_surface_the_last_error() {
+        let mut calls = 0;
+        let err = with_retry("metrics write", 3, Duration::from_millis(1), || {
+            calls += 1;
+            anyhow::bail!("disk full ({calls})");
+            #[allow(unreachable_code)]
+            Ok(())
+        })
+        .unwrap_err()
+        .to_string();
+        assert_eq!(calls, 3);
+        assert!(err.contains("metrics write"), "{err}");
+        assert!(err.contains("3 attempts"), "{err}");
+        assert!(err.contains("disk full (3)"), "{err}");
+    }
+
+    #[test]
+    fn zero_attempts_clamps_to_one() {
+        let mut calls = 0;
+        let _ = with_retry("op", 0, Duration::from_millis(1), || {
+            calls += 1;
+            Ok(())
+        });
+        assert_eq!(calls, 1);
+    }
+}

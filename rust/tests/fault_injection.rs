@@ -1,0 +1,169 @@
+//! Fault-injection suite (default features, no artifacts).
+//!
+//! Two layers of attack on the fault-tolerance contract:
+//!
+//! 1. **Corruption fuzz** (in-process): every single-byte flip and every
+//!    truncation of a v3 checkpoint must be *rejected* by `load_state` —
+//!    an error, never a panic, never a silently-wrong state.
+//! 2. **Process-level scenarios** (child `rmnp` binaries via
+//!    `CARGO_BIN_EXE_rmnp`, reusing the `exp::faults` harness): SIGKILL
+//!    mid-train, truncated/bit-flipped newest checkpoint, NaN-gradient
+//!    bursts, and sustained-anomaly aborts. Every scenario must end in
+//!    byte-exact resumed training or a clean error.
+//!
+//! Plus the format-compat leg: a v2 (pre-CRC) checkpoint still resumes a
+//! run end-to-end, bit-exactly.
+
+use std::path::{Path, PathBuf};
+
+use rmnp::config::{DataSpec, RunConfig, Schedule};
+use rmnp::coordinator::{checkpoint, train};
+use rmnp::exp::faults::{self, Corruption, FaultOpts};
+use rmnp::runtime::{NamedBuffer, TrainState};
+
+fn tmp_out(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "rmnp-fault-{}-{name}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn rmnp_bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_rmnp"))
+}
+
+fn suite_opts(name: &str) -> FaultOpts {
+    FaultOpts {
+        out: tmp_out(name),
+        steps: 8,
+        checkpoint_every: 4,
+        kills: 1,
+        seed: 77,
+    }
+}
+
+/// Every single-byte flip and every truncation of a v3 checkpoint is
+/// rejected — the CRC coverage has no blind spots, and nothing panics.
+#[test]
+fn corruption_fuzz_rejects_every_byte_flip_and_truncation() {
+    let buf = |name: &str, vals: &[f32]| NamedBuffer {
+        name: name.into(),
+        data: vals.to_vec(),
+    };
+    let state = TrainState {
+        step: 7,
+        params: vec![buf("w", &[0.5, -1.25, 3.0]), buf("b", &[0.0])],
+        opt: vec![buf("w.m", &[0.1, 0.2, 0.3]), buf("b.m", &[9.0])],
+    };
+    let dir = tmp_out("fuzz");
+    std::fs::create_dir_all(&dir).unwrap();
+    let clean = dir.join("step-7.ckpt");
+    checkpoint::save_state(&clean, &state).unwrap();
+    let original = std::fs::read(&clean).unwrap();
+    let victim = dir.join("victim.ckpt");
+
+    for at in 0..original.len() {
+        let mut bytes = original.clone();
+        bytes[at] ^= 0xFF;
+        std::fs::write(&victim, &bytes).unwrap();
+        assert!(
+            checkpoint::load_state(&victim).is_err(),
+            "flipped byte at offset {at} was not detected"
+        );
+    }
+    for keep in 0..original.len() {
+        std::fs::write(&victim, &original[..keep]).unwrap();
+        assert!(
+            checkpoint::load_state(&victim).is_err(),
+            "truncation to {keep}/{} bytes was not detected",
+            original.len()
+        );
+    }
+    // and the untouched file still loads exactly
+    let back = checkpoint::load_state(&clean).unwrap();
+    assert_eq!(back.step, 7);
+    assert_eq!(back.params.len(), 2);
+    assert_eq!(back.params[0].data, vec![0.5, -1.25, 3.0]);
+    assert_eq!(back.opt[1].data, vec![9.0]);
+}
+
+/// SIGKILL a real child `rmnp train` mid-run: the resume must finish
+/// byte-exactly against an uninterrupted reference, without a silent
+/// restart from scratch.
+#[test]
+fn sigkill_mid_train_resumes_byte_exact() {
+    let opts = suite_opts("sigkill");
+    let reference = faults::reference_bytes(rmnp_bin(), &opts).unwrap();
+    let s = faults::sigkill_mid_train(rmnp_bin(), &opts, &reference, 0).unwrap();
+    assert!(s.passed, "{}: {}", s.name, s.detail);
+}
+
+/// Corrupt the newest checkpoint of a finished run (torn write and bit
+/// rot): resume must walk back to the previous valid checkpoint and
+/// still reproduce the reference bytes.
+#[test]
+fn corrupted_latest_checkpoint_walks_back_byte_exact() {
+    let opts = suite_opts("corrupt");
+    let reference = faults::reference_bytes(rmnp_bin(), &opts).unwrap();
+    for kind in [Corruption::Truncate, Corruption::BitFlip] {
+        let s = faults::corrupted_latest(rmnp_bin(), &opts, &reference, kind).unwrap();
+        assert!(s.passed, "{}: {}", s.name, s.detail);
+    }
+}
+
+/// A NaN-gradient burst (injected via the env hook in a child process)
+/// is skipped by the guard, the LR backs off and recovers, and the run
+/// still completes with a finite loss.
+#[test]
+fn nan_burst_is_skipped_and_recovers() {
+    let opts = suite_opts("nan");
+    let s = faults::nan_burst(rmnp_bin(), &opts).unwrap();
+    assert!(s.passed, "{}: {}", s.name, s.detail);
+}
+
+/// Sustained anomalies beyond `train.guard_max_bad` abort cleanly: a
+/// nonzero exit that names the anomaly, recorded in summary.jsonl, and
+/// no panic anywhere.
+#[test]
+fn sustained_anomalies_abort_cleanly() {
+    let opts = suite_opts("abort");
+    let s = faults::guard_abort(rmnp_bin(), &opts).unwrap();
+    assert!(s.passed, "{}: {}", s.name, s.detail);
+}
+
+/// Format compat: a v2 (pre-CRC) checkpoint written by an older build
+/// still resumes a run end-to-end, and the continued trajectory matches
+/// an uninterrupted v3 run byte-for-byte.
+#[test]
+fn v2_checkpoint_resumes_end_to_end_bit_exact() {
+    let cfg = |steps: usize, name: &str| RunConfig {
+        model: "gpt2_tiny".into(),
+        optimizer: "rmnp".into(),
+        lr: 4e-3,
+        schedule: Schedule::CosineWarmup { warmup_frac: 0.1, min_ratio: 0.1 },
+        steps,
+        seed: 23,
+        data: DataSpec::Markov,
+        eval_every: 0,
+        checkpoint_every: 4,
+        out_dir: tmp_out(name),
+        ..RunConfig::default()
+    };
+    // uninterrupted 8-step reference
+    let full = cfg(8, "v2-full");
+    train::run_auto(&full).unwrap();
+    let full_end = std::fs::read(full.out_dir.join("step-8.ckpt")).unwrap();
+
+    // downgrade its step-4 checkpoint to the v2 format in a fresh dir,
+    // then resume from it
+    let state = checkpoint::load_state(&full.out_dir.join("step-4.ckpt")).unwrap();
+    let mut cont = cfg(8, "v2-cont");
+    cont.resume = true;
+    std::fs::create_dir_all(&cont.out_dir).unwrap();
+    checkpoint::save_state_v2(&cont.out_dir.join("step-4.ckpt"), &state).unwrap();
+    train::run_auto(&cont).unwrap();
+    let resumed_end = std::fs::read(cont.out_dir.join("step-8.ckpt")).unwrap();
+    assert_eq!(full_end, resumed_end, "resume from a v2 checkpoint diverged");
+}

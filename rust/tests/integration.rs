@@ -246,7 +246,8 @@ fn checkpoint_roundtrip_through_session() {
         let mut cfg = quick_cfg("gpt2_tiny", "rmnp", 6, "ckpt");
         cfg.checkpoint_every = 3;
         run_with(engine, &cfg).unwrap();
-        let (step, path) = checkpoint::latest(&cfg.out_dir).expect("checkpoint written");
+        let (step, path) =
+            checkpoint::latest(&cfg.out_dir).unwrap().expect("checkpoint written");
         assert_eq!(step, 6);
         let buffers = checkpoint::load(&path).unwrap();
         let entry = engine.manifest.opt_entry("gpt2_tiny", "rmnp").unwrap();

@@ -91,7 +91,7 @@ fn checkpoint_resume_is_bit_exact_across_optimizers_and_threads() {
                 cont.out_dir.join("step-5.ckpt"),
             )
             .unwrap();
-            let (step, _) = checkpoint::latest(&cont.out_dir).unwrap();
+            let (step, _) = checkpoint::latest(&cont.out_dir).unwrap().unwrap();
             assert_eq!(step, HALF);
             train::run_auto(&cont).unwrap();
             let resumed_end = std::fs::read(cont.out_dir.join("step-10.ckpt")).unwrap();

@@ -15,7 +15,10 @@
 #     RMNP_SIMD=scalar forces the portable rung),
 #   * the median seed-vs-kernel improvement falls below half of the most
 #     recent bench_history/ snapshot (skipped with a notice on the first
-#     run, when no prior-PR snapshot exists yet).
+#     run, when no prior-PR snapshot exists yet),
+#   * the anomaly guard's per-step overhead exceeds 15% (it only inspects
+#     two scalars, so anything above noise level is a regression), or the
+#     checkpoint walkback/roundtrip recovery flags come back false.
 # On success it appends dated BENCH_precond / BENCH_train_step snapshots
 # to bench_history/ so the next PR has a trajectory baseline.
 set -euo pipefail
@@ -38,6 +41,9 @@ BENCH_REPEATS="${BENCH_REPEATS:-2}" cargo bench --bench optim_step
 
 echo "== cargo bench --bench host_train (native backend end-to-end) =="
 BENCH_REPEATS="${BENCH_REPEATS:-2}" cargo bench --bench host_train
+
+echo "== cargo bench --bench faults (guard overhead + checkpoint recovery) =="
+BENCH_REPEATS="${BENCH_REPEATS:-2}" cargo bench --bench faults
 
 echo "== checking BENCH_precond.json =="
 # newest prior-PR snapshot, if any (first run has none — that's fine)
@@ -144,6 +150,37 @@ for arch, rows in by_arch.items():
 print("host_train envelope OK")
 EOF
 
+echo "== checking BENCH_faults.json =="
+python3 - <<'EOF'
+import json
+
+with open("BENCH_faults.json") as f:
+    doc = json.load(f)
+
+bad = []
+# the guard reads two scalars per step — its cost must be noise against a
+# full forward/backward; 15% is a generous noise allowance for shared runners
+frac = doc["guard_overhead_frac"]
+if frac > 0.15:
+    bad.append(f"guard overhead {frac*100:.1f}% per step exceeds the 15% noise bar")
+if not doc["roundtrip_ok"]:
+    bad.append("checkpoint save/validated-load roundtrip lost data")
+if not doc["walkback_ok"]:
+    bad.append("walkback over a corrupted newest checkpoint did not recover")
+
+print(f"  guard overhead   {frac*100:+.2f}% per step")
+print(f"  ckpt save        {doc['ckpt_save_s']*1e3:.2f} ms ({doc['ckpt_bytes']} bytes)")
+print(f"  ckpt load+verify {doc['ckpt_load_s']*1e3:.2f} ms")
+print(f"  walkback scan    {doc['walkback_s']*1e3:.2f} ms")
+
+if bad:
+    print("FAIL:")
+    for b in bad:
+        print("  " + b)
+    raise SystemExit(1)
+print("faults envelope OK")
+EOF
+
 # record this run for the next PR's trajectory gate (only after the gates
 # above passed — failing runs must not become baselines)
 mkdir -p "$ROOT/bench_history"
@@ -152,4 +189,5 @@ STAMP="$(date -u +%Y%m%d%H%M%S)_${SHA}"
 cp BENCH_precond.json "$ROOT/bench_history/${STAMP}_precond.json"
 cp BENCH_train_step.json "$ROOT/bench_history/${STAMP}_train_step.json"
 cp BENCH_host_train.json "$ROOT/bench_history/${STAMP}_host_train.json"
-echo "recorded bench_history/${STAMP}_{precond,train_step,host_train}.json"
+cp BENCH_faults.json "$ROOT/bench_history/${STAMP}_faults.json"
+echo "recorded bench_history/${STAMP}_{precond,train_step,host_train,faults}.json"
