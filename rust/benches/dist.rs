@@ -1,0 +1,180 @@
+//! `cargo bench --bench dist` — the price of distributed coordination.
+//!
+//! Runs the same 2-shard training job two ways and compares per-step
+//! cost: (a) a real 1-worker distributed run — coordinator thread,
+//! worker thread, localhost TCP, CRC-framed gradients both directions —
+//! and (b) a plain local loop computing the identical math in-process
+//! (per-shard `grad_batch`, `reduce_shards`, `apply_flat_grads`). Both
+//! timings include their setup (backend build; for the dist run also
+//! registration), so `overhead_frac` is the honest end-to-end cost of
+//! going distributed at worker count 1. The bench also verifies the two
+//! paths land on bit-identical weights (`bitexact_vs_local`), which
+//! `scripts/bench_check.sh` gates on alongside the overhead.
+//!
+//! Env knobs: `BENCH_REPEATS` (samples per measurement, default 3),
+//! `RMNP_THREADS`, `RMNP_SIMD`.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use rmnp::bench::report::{self, envelope, int, num};
+use rmnp::bench::{bench_n, fmt_secs};
+use rmnp::config::{DataSpec, RunConfig};
+use rmnp::coordinator::{checkpoint, guard, lr_at};
+use rmnp::data::corpus::token_source;
+use rmnp::dist::worker::{self, WorkerOpts};
+use rmnp::dist::{coordinator as dist_coordinator, reduce_shards, CLIP_NORM, SHARD_SPLIT_BASE};
+use rmnp::runtime::{Batch, BatchShape, NativeBackend, TrainBackend, TrainState};
+
+const STEPS: usize = 12;
+const SHARDS: usize = 2;
+
+fn bench_cfg(out: PathBuf) -> RunConfig {
+    RunConfig {
+        model: "gpt2_tiny".into(),
+        optimizer: "rmnp".into(),
+        steps: STEPS,
+        seed: 42,
+        data: DataSpec::Markov,
+        eval_every: 0,
+        checkpoint_every: STEPS, // one final checkpoint; needed for the bit check
+        out_dir: out,
+        dist_workers: 1,
+        dist_shards: SHARDS,
+        dist_bind: "127.0.0.1:0".into(),
+        ..RunConfig::default()
+    }
+}
+
+/// One full 1-worker distributed run: coordinator + worker threads over
+/// localhost TCP. Returns the final checkpoint path.
+fn dist_run(out: &Path) -> PathBuf {
+    let _ = std::fs::remove_dir_all(out);
+    let cfg = bench_cfg(out.to_path_buf());
+    let dir = cfg.out_dir.clone();
+    let coord = std::thread::spawn(move || dist_coordinator::run(&cfg));
+    let addr = loop {
+        if let Ok(text) = std::fs::read_to_string(dir.join("coordinator.addr")) {
+            let text = text.trim();
+            if !text.is_empty() {
+                break text.to_string();
+            }
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    };
+    let opts = WorkerOpts {
+        connect: addr,
+        worker_id: "bench0".into(),
+        plan_threads: 0,
+        heartbeat_ms: 50,
+        worker_timeout_ms: 30_000,
+        connect_attempts: 8,
+    };
+    let work = std::thread::spawn(move || worker::run(&opts));
+    coord.join().unwrap().expect("dist run failed");
+    work.join().unwrap().expect("worker failed");
+    out.join(format!("step-{STEPS}.ckpt"))
+}
+
+/// The same job as a plain local loop: identical shard streams, the same
+/// deterministic reduction and LR schedule, no sockets. Returns the
+/// final state.
+fn local_run(cfg: &RunConfig) -> TrainState {
+    let mut backend =
+        NativeBackend::new(&cfg.model, &cfg.optimizer, cfg.seed, 0).expect("backend");
+    let BatchShape::Tokens { rows, cols } = backend.batch_shape() else {
+        panic!("gpt2_tiny should consume tokens");
+    };
+    let mut feeds: Vec<_> = (0..SHARDS)
+        .map(|k| token_source(cfg.data, cfg.seed, SHARD_SPLIT_BASE + k as u64))
+        .collect();
+    let mut tokens = vec![0i32; rows * cols];
+    for step in 0..cfg.steps {
+        let mut shards = Vec::with_capacity(SHARDS);
+        for feed in &mut feeds {
+            feed.fill(&mut tokens);
+            shards.push(backend.grad_batch(&Batch::Tokens(&tokens)).expect("grad"));
+        }
+        let (_, avg) = reduce_shards(&shards, CLIP_NORM).expect("reduce");
+        // mirror the coordinator's LR computation exactly (scale 1.0)
+        let lr = (lr_at(cfg.schedule, cfg.lr, step, cfg.steps) * 1.0) as f32;
+        backend.apply_flat_grads(&avg, lr).expect("apply");
+    }
+    backend.export_state().expect("export")
+}
+
+fn main() -> anyhow::Result<()> {
+    std::env::set_var("RMNP_NO_FSYNC", "1");
+    let repeats: usize = std::env::var("BENCH_REPEATS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    println!(
+        "dist bench: repeats={repeats} steps={STEPS} shards={SHARDS} threads={} simd={}",
+        rmnp::tensor::kernels::num_threads(),
+        rmnp::tensor::simd::label()
+    );
+
+    let dir = std::env::temp_dir().join(format!("rmnp-bench-dist-{}", std::process::id()));
+    let cfg = bench_cfg(dir.clone());
+
+    // warm-up + bit-exactness: one run of each path, compared elementwise
+    let ckpt = dist_run(&dir);
+    let mut dist_state = checkpoint::load_state(&ckpt)?;
+    let _ = guard::extract_guard(&mut dist_state); // drop the guard stamp
+    let local_state = local_run(&cfg);
+    let elems: usize = local_state.params.iter().map(|b| b.data.len()).sum();
+    let same = |a: &[rmnp::runtime::NamedBuffer], b: &[rmnp::runtime::NamedBuffer]| {
+        a.len() == b.len()
+            && a.iter()
+                .zip(b)
+                .all(|(x, y)| x.name == y.name && x.data == y.data)
+    };
+    let bitexact = same(&dist_state.params, &local_state.params)
+        && same(&dist_state.opt, &local_state.opt);
+    println!(
+        "  bit-exact vs local loop: {} ({elems} parameter elements)",
+        if bitexact { "yes" } else { "NO" }
+    );
+
+    println!("full-run timings ({STEPS} steps, {SHARDS} shards):");
+    let local = bench_n("local_loop", 1, repeats, || {
+        local_run(&cfg);
+    });
+    println!("  {}", local.report_line());
+    let dist = bench_n("dist_1worker", 1, repeats, || {
+        dist_run(&dir);
+    });
+    println!("  {}", dist.report_line());
+
+    let local_step = local.median() / STEPS as f64;
+    let dist_step = dist.median() / STEPS as f64;
+    let overhead_frac = (dist_step - local_step) / local_step.max(1e-12);
+    println!(
+        "  -> local {}/step, dist {}/step, coordination overhead {:+.1}%",
+        fmt_secs(local_step),
+        fmt_secs(dist_step),
+        overhead_frac * 100.0
+    );
+
+    let doc = envelope(
+        "dist",
+        vec![
+            ("steps", int(STEPS)),
+            ("shards", int(SHARDS)),
+            ("elems", int(elems)),
+            ("local_step_s", num(local_step)),
+            ("dist_step_s", num(dist_step)),
+            ("overhead_frac", num(overhead_frac)),
+            ("bitexact_vs_local", int(bitexact as usize)),
+        ],
+    );
+    report::write(Path::new("BENCH_dist.json"), &doc)?;
+    println!(
+        "wrote BENCH_dist.json (overhead {:+.1}%, bitexact={})",
+        overhead_frac * 100.0,
+        bitexact as usize
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

@@ -264,7 +264,8 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
                 kills: args.usize_or("kills", 2),
                 seed: opts.seed,
             };
-            let rows = exp::faults::run_all(&bin, &fopts)?;
+            let rows =
+                exp::faults::run_filtered(&bin, &fopts, args.str_or("scenarios", ""))?;
             println!("{}", exp::faults::format(&rows));
             let failed = rows.iter().filter(|s| !s.passed).count();
             anyhow::ensure!(failed == 0, "{failed} fault scenario(s) failed");
@@ -275,6 +276,77 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
         Some("dominance") => anyhow::bail!(NO_PJRT),
         other => anyhow::bail!("unknown exp `{other:?}` (see `rmnp help`)"),
     }
+}
+
+/// `rmnp coordinator` — the coordinator side of a distributed run: bind,
+/// wait for `dist.workers` registrations, drive the barrier-synchronized
+/// step loop, own the checkpoints.
+pub fn coordinator(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => RunConfig::from_file(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    for kv in args.flag_all("set") {
+        cfg.apply_override(kv)?;
+    }
+    if let Some(w) = args.flag("workers") {
+        cfg.apply_override(&format!("dist.workers={w}"))?;
+    }
+    if let Some(b) = args.flag("bind") {
+        cfg.dist_bind = b.to_string();
+    }
+    if args.has("resume") {
+        cfg.resume = true;
+    }
+    let result = crate::dist::coordinator::run(&cfg)?;
+    println!(
+        "done: {} steps over {} workers ({} shards), {} death(s), \
+         final train loss {:.4}, {:.1}s",
+        result.steps_run,
+        result.workers,
+        result.shards,
+        result.deaths,
+        result.final_train_loss,
+        result.seconds
+    );
+    Ok(())
+}
+
+/// `rmnp worker` — one distributed worker: dial the coordinator given by
+/// `--connect` (or `dist.connect`), compute shard gradients, apply the
+/// broadcast updates. The run definition (model, optimizer, seed, resume
+/// state) comes from the coordinator, not from local flags.
+pub fn worker(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => RunConfig::from_file(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    for kv in args.flag_all("set") {
+        cfg.apply_override(kv)?;
+    }
+    cfg.apply_perf()?;
+    let connect = args
+        .flag("connect")
+        .map(str::to_string)
+        .unwrap_or_else(|| cfg.dist_connect.clone());
+    let worker_id = args
+        .flag("id")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("worker-{}", std::process::id()));
+    let opts = crate::dist::worker::WorkerOpts {
+        connect,
+        worker_id,
+        plan_threads: cfg.plan_threads,
+        heartbeat_ms: cfg.dist_heartbeat_ms,
+        worker_timeout_ms: cfg.dist_worker_timeout_ms,
+        connect_attempts: 8,
+    };
+    let result = crate::dist::worker::run(&opts)?;
+    println!(
+        "worker done: rank {}, {} step(s) applied, {} shard gradient(s)",
+        result.rank, result.steps_applied, result.shards_done
+    );
+    Ok(())
 }
 
 /// `rmnp exp all` — a scaled-down pass over every experiment.

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! rmnp train   [--config F] [--set k=v]... [--resume]   one training run
+//! rmnp coordinator [--workers N] [--bind ADDR] [--resume]  distributed run
+//! rmnp worker  --connect ADDR [--id NAME]        one data-parallel worker
 //! rmnp exp     <precond|pretrain|sweep|dominance|extended|ablation-embed|
 //!               ssm|vision|cliprate|faults|all> [opts]  paper experiments
 //! rmnp report  <cliprate|curves> --runs DIR      re-render from saved CSVs
@@ -28,6 +30,10 @@ rmnp — RMNP optimizer reproduction (rust + JAX + Pallas, AOT via PJRT)
 
 USAGE:
   rmnp train   [--config FILE] [--set section.key=value]... [--resume]
+  rmnp coordinator [--config FILE] [--set k=v]... [--resume]
+                          [--workers N] [--bind HOST:PORT]
+                          (bound address lands in <out.dir>/coordinator.addr)
+  rmnp worker  --connect HOST:PORT [--id NAME] [--set k=v]...
   rmnp exp precond        [--max-d N] [--repeats N]
   rmnp exp pretrain       --family gpt2|llama|ssm|vision [--dataset markov|zipf|ngram|images]
                           [--scales a,b,...] [--steps N] [--workers N]
@@ -40,6 +46,7 @@ USAGE:
   rmnp exp stepplan       [--d 512] [--layers 6] [--optimizer rmnp|muon|adamw]
                           [--steps N] [--threads N] [--simd auto|avx2|neon|scalar]
   rmnp exp faults         [--kills N] [--steps N] [--checkpoint-every N]
+                          [--scenarios SUBSTR] (filter: e.g. --scenarios dist)
   rmnp exp all            [--steps N] (scaled-down full suite)
   rmnp report cliprate    [--runs DIR]
   rmnp data sample        [--corpus markov] [--n 64] [--seed 1]
@@ -76,6 +83,8 @@ pub fn run() -> anyhow::Result<()> {
     );
     match args.subcommand(0) {
         Some("train") => commands::train(&args),
+        Some("coordinator") => commands::coordinator(&args),
+        Some("worker") => commands::worker(&args),
         Some("exp") => commands::exp(&args),
         Some("report") => commands::report(&args),
         Some("data") => commands::data(&args),

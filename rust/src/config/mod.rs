@@ -157,6 +157,35 @@ pub struct RunConfig {
     /// Treat finite grad norms above this as anomalous
     /// (`train.guard_max_grad_norm`); 0 = off.
     pub guard_max_grad_norm: f64,
+    /// Worker count a distributed coordinator waits for (`dist.workers`);
+    /// 1 is the degenerate single-worker case.
+    pub dist_workers: usize,
+    /// Data shards per global step (`dist.shards`); 0 = one per worker.
+    /// The shard count — not the worker count — fixes the global batch,
+    /// so runs with equal shards are bit-comparable across worker counts.
+    pub dist_shards: usize,
+    /// Coordinator listen address (`dist.bind`); port 0 lets the OS pick
+    /// — the bound address lands in `<out_dir>/coordinator.addr`.
+    pub dist_bind: String,
+    /// Coordinator address a worker dials (`dist.connect`); the `rmnp
+    /// worker --connect` flag takes precedence.
+    pub dist_connect: String,
+    /// Worker heartbeat period in ms (`dist.heartbeat_ms`).
+    pub dist_heartbeat_ms: u64,
+    /// Coordinator declares a worker dead after this many ms of silence
+    /// (`dist.deadline_ms`); must comfortably exceed the heartbeat period.
+    pub dist_deadline_ms: u64,
+    /// Coordinator re-issues a step's assignments after this many ms
+    /// without completing the gather (`dist.step_timeout_ms`) — recovers
+    /// CRC-dropped frames.
+    pub dist_step_timeout_ms: u64,
+    /// Worker exits after this many ms without a frame from the
+    /// coordinator (`dist.worker_timeout_ms`); a *crashed* coordinator is
+    /// detected instantly via EOF, this is the hung/partitioned backstop.
+    pub dist_worker_timeout_ms: u64,
+    /// Coordinator aborts if the full worker set hasn't registered within
+    /// this many ms (`dist.join_timeout_ms`).
+    pub dist_join_timeout_ms: u64,
 }
 
 impl Default for RunConfig {
@@ -187,6 +216,15 @@ impl Default for RunConfig {
             guard_recover: 2.0,
             guard_max_bad: 8,
             guard_max_grad_norm: 0.0,
+            dist_workers: 1,
+            dist_shards: 0,
+            dist_bind: "127.0.0.1:0".into(),
+            dist_connect: String::new(),
+            dist_heartbeat_ms: 250,
+            dist_deadline_ms: 3000,
+            dist_step_timeout_ms: 60_000,
+            dist_worker_timeout_ms: 30_000,
+            dist_join_timeout_ms: 60_000,
         }
     }
 }
@@ -235,6 +273,24 @@ impl RunConfig {
             d.int_or("train.guard_max_bad", self.guard_max_bad as i64).max(0) as usize;
         self.guard_max_grad_norm =
             d.float_or("train.guard_max_grad_norm", self.guard_max_grad_norm);
+        self.dist_workers =
+            d.int_or("dist.workers", self.dist_workers as i64).max(0) as usize;
+        self.dist_shards = d.int_or("dist.shards", self.dist_shards as i64).max(0) as usize;
+        self.dist_bind = d.str_or("dist.bind", &self.dist_bind).to_string();
+        self.dist_connect = d.str_or("dist.connect", &self.dist_connect).to_string();
+        self.dist_heartbeat_ms =
+            d.int_or("dist.heartbeat_ms", self.dist_heartbeat_ms as i64).max(0) as u64;
+        self.dist_deadline_ms =
+            d.int_or("dist.deadline_ms", self.dist_deadline_ms as i64).max(0) as u64;
+        self.dist_step_timeout_ms = d
+            .int_or("dist.step_timeout_ms", self.dist_step_timeout_ms as i64)
+            .max(0) as u64;
+        self.dist_worker_timeout_ms = d
+            .int_or("dist.worker_timeout_ms", self.dist_worker_timeout_ms as i64)
+            .max(0) as u64;
+        self.dist_join_timeout_ms = d
+            .int_or("dist.join_timeout_ms", self.dist_join_timeout_ms as i64)
+            .max(0) as u64;
         if let Some(v) = d.get("runtime.backend") {
             self.backend = BackendKind::parse(
                 v.as_str()
@@ -388,6 +444,28 @@ corpus = "zipf"
         assert_eq!(cfg.guard_max_bad, 4);
         cfg.apply_override("train.guard_max_grad_norm=50.0").unwrap();
         assert!((cfg.guard_max_grad_norm - 50.0).abs() < 1e-12);
+        assert_eq!(cfg.dist_workers, 1, "single-worker is the degenerate default");
+        assert_eq!(cfg.dist_shards, 0, "0 shards = one per worker");
+        cfg.apply_override("dist.workers=4").unwrap();
+        assert_eq!(cfg.dist_workers, 4);
+        cfg.apply_override("dist.shards=8").unwrap();
+        assert_eq!(cfg.dist_shards, 8);
+        cfg.apply_override("dist.bind=0.0.0.0:7070").unwrap();
+        assert_eq!(cfg.dist_bind, "0.0.0.0:7070");
+        cfg.apply_override("dist.connect=127.0.0.1:7070").unwrap();
+        assert_eq!(cfg.dist_connect, "127.0.0.1:7070");
+        cfg.apply_override("dist.heartbeat_ms=100").unwrap();
+        assert_eq!(cfg.dist_heartbeat_ms, 100);
+        cfg.apply_override("dist.deadline_ms=1500").unwrap();
+        assert_eq!(cfg.dist_deadline_ms, 1500);
+        cfg.apply_override("dist.step_timeout_ms=9000").unwrap();
+        assert_eq!(cfg.dist_step_timeout_ms, 9000);
+        cfg.apply_override("dist.worker_timeout_ms=2500").unwrap();
+        assert_eq!(cfg.dist_worker_timeout_ms, 2500);
+        cfg.apply_override("dist.join_timeout_ms=30000").unwrap();
+        assert_eq!(cfg.dist_join_timeout_ms, 30000);
+        cfg.apply_override("dist.workers=-2").unwrap();
+        assert_eq!(cfg.dist_workers, 0, "negative clamps instead of wrapping");
         assert_eq!(cfg.steps, 42);
         assert!((cfg.lr - 0.5).abs() < 1e-12);
         assert_eq!(cfg.model, "ssm_base");

@@ -32,7 +32,7 @@
 //! is surfaced: per-step `lr_scale`/`skipped` columns in metrics.csv and
 //! run totals in summary.jsonl.
 
-use crate::runtime::backend::StepMetrics;
+use crate::runtime::backend::{NamedBuffer, StepMetrics, TrainState};
 
 /// Tuning for the [`StepGuard`] state machine. The defaults halve the
 /// LR on each anomaly, floor at 1/64 of the base LR, double back to
@@ -77,10 +77,12 @@ pub enum Verdict {
 }
 
 /// Per-run anomaly guard state. One instance lives for the whole
-/// training loop; it is *not* checkpointed — a resume starts healthy at
-/// full LR scale, which is the conservative choice (the anomaly source
-/// is usually a transient batch, and a persistent one re-triggers the
-/// backoff within a step).
+/// training loop, and its live state (LR scale + consecutive-bad streak)
+/// is stamped into every checkpoint as the synthetic [`GUARD_BUFFER`]
+/// optimizer buffer: a `--resume` mid-backoff continues at the backed-off
+/// LR and keeps counting the streak toward the abort threshold, instead
+/// of silently restoring full LR right where the run was blowing up.
+/// Checkpoints without the stamp (older builds) resume healthy.
 #[derive(Clone, Debug)]
 pub struct StepGuard {
     cfg: GuardConfig,
@@ -191,6 +193,73 @@ impl StepGuard {
     pub fn consecutive_bad(&self) -> usize {
         self.consecutive_bad
     }
+
+    /// The persistable backoff state: `(lr_scale, consecutive_bad)`.
+    pub fn snapshot(&self) -> (f64, usize) {
+        (self.scale, self.consecutive_bad)
+    }
+
+    /// Restore a [`StepGuard::snapshot`] taken by the run that wrote the
+    /// checkpoint. The scale is clamped to `[min_scale, 1.0]` under the
+    /// *current* config (the resume may tighten or loosen the floor), and
+    /// non-finite values — only reachable through a hand-edited
+    /// checkpoint — are ignored, leaving the guard healthy.
+    pub fn restore(&mut self, scale: f64, consecutive_bad: usize) {
+        if !scale.is_finite() {
+            return;
+        }
+        self.scale = scale.clamp(self.cfg.min_scale, 1.0);
+        self.consecutive_bad = consecutive_bad;
+        self.min_scale_seen = self.min_scale_seen.min(self.scale);
+    }
+}
+
+/// Name of the synthetic optimizer buffer that carries guard state in a
+/// checkpoint. The double-underscore namespace can never collide with a
+/// real `{task}.{key}` optimizer buffer, so the stamp is v3-compatible:
+/// old readers ignore it, old checkpoints simply lack it.
+pub const GUARD_BUFFER: &str = "__guard__";
+
+/// Append the guard's [`StepGuard::snapshot`] to a checkpoint state as
+/// the [`GUARD_BUFFER`] optimizer buffer.
+///
+/// Layout: 3 f32 slots. The f64 LR scale travels bit-exactly as its high
+/// and low 32-bit halves (checkpoint f32 I/O is bit-preserving, and
+/// integer-through-f32-bits is the format's idiom for counters), and the
+/// streak count rides the third slot's bits. A rounded-to-f32 scale
+/// would break bit-exact resume for non-power-of-two backoff factors.
+pub fn stamp_guard(state: &mut TrainState, guard: &StepGuard) {
+    let (scale, bad) = guard.snapshot();
+    let bits = scale.to_bits();
+    state.opt.push(NamedBuffer {
+        name: GUARD_BUFFER.to_string(),
+        data: vec![
+            f32::from_bits((bits >> 32) as u32),
+            f32::from_bits(bits as u32),
+            f32::from_bits(bad as u32),
+        ],
+    });
+}
+
+/// Remove the [`GUARD_BUFFER`] stamp from a loaded checkpoint state and
+/// decode it to `(lr_scale, consecutive_bad)`.
+///
+/// Must run *before* the state reaches a backend's `import_state` — the
+/// backends insist on consuming every optimizer buffer, and this one is
+/// the coordinator's, not theirs. Returns `None` (leaving the state
+/// untouched) when the stamp is absent or malformed, so pre-stamp
+/// checkpoints keep loading and resume with a healthy guard.
+pub fn extract_guard(state: &mut TrainState) -> Option<(f64, usize)> {
+    let pos = state.opt.iter().position(|b| b.name == GUARD_BUFFER)?;
+    let buf = state.opt.remove(pos);
+    if buf.data.len() != 3 {
+        return None;
+    }
+    let hi = buf.data[0].to_bits() as u64;
+    let lo = buf.data[1].to_bits() as u64;
+    let scale = f64::from_bits((hi << 32) | lo);
+    let bad = buf.data[2].to_bits() as usize;
+    Some((scale, bad))
 }
 
 #[cfg(test)]
@@ -301,6 +370,81 @@ mod tests {
         assert_eq!(g.lr_scale(), 1.0);
         assert_eq!(g.skipped(), 0);
         g.check_abort().unwrap();
+    }
+
+    #[test]
+    fn stamp_and_extract_roundtrip_bit_exactly() {
+        let mut g = StepGuard::new(GuardConfig { backoff: 0.3, ..GuardConfig::default() })
+            .unwrap();
+        g.observe(0, &nan());
+        g.observe(1, &nan());
+        let (scale, bad) = g.snapshot();
+        assert_eq!(bad, 2);
+        assert!(scale < 0.1, "0.3^2 = {scale}");
+        let mut state = TrainState { step: 7, params: vec![], opt: vec![] };
+        stamp_guard(&mut state, &g);
+        assert_eq!(state.opt.len(), 1);
+        assert_eq!(state.opt[0].name, GUARD_BUFFER);
+        let (rs, rb) = extract_guard(&mut state).unwrap();
+        // 0.3 is not a power of two: only a bit-exact f64 round-trip
+        // reproduces the backed-off scale exactly
+        assert_eq!(rs.to_bits(), scale.to_bits());
+        assert_eq!(rb, bad);
+        assert!(state.opt.is_empty(), "extract must remove the stamp");
+        assert_eq!(extract_guard(&mut state), None, "second extract finds nothing");
+    }
+
+    #[test]
+    fn restore_continues_the_backoff_and_streak() {
+        let mut a = StepGuard::new(GuardConfig { max_consecutive: 4, ..GuardConfig::default() })
+            .unwrap();
+        a.observe(0, &nan());
+        a.observe(1, &nan());
+        let (scale, bad) = a.snapshot();
+        // "resume": a fresh guard picks up where the old one stopped
+        let mut b = StepGuard::new(GuardConfig { max_consecutive: 4, ..GuardConfig::default() })
+            .unwrap();
+        b.restore(scale, bad);
+        assert_eq!(b.lr_scale(), 0.25);
+        assert_eq!(b.consecutive_bad(), 2);
+        assert_eq!(b.min_scale_seen(), 0.25);
+        b.observe(2, &nan());
+        b.observe(3, &nan());
+        let err = b.check_abort().unwrap_err().to_string();
+        assert!(err.contains("4 consecutive"), "streak must span the resume: {err}");
+    }
+
+    #[test]
+    fn restore_clamps_to_the_current_floor_and_ignores_garbage() {
+        let mut g = StepGuard::new(GuardConfig { min_scale: 0.25, ..GuardConfig::default() })
+            .unwrap();
+        g.restore(1e-9, 3);
+        assert_eq!(g.lr_scale(), 0.25, "clamped up to the new floor");
+        assert_eq!(g.consecutive_bad(), 3);
+        g.restore(7.0, 0);
+        assert_eq!(g.lr_scale(), 1.0, "clamped down to 1.0");
+        let before = g.snapshot();
+        g.restore(f64::NAN, 9);
+        assert_eq!(g.snapshot(), before, "non-finite scale is ignored");
+    }
+
+    #[test]
+    fn extract_tolerates_malformed_stamps() {
+        let mut state = TrainState {
+            step: 0,
+            params: vec![],
+            opt: vec![NamedBuffer { name: GUARD_BUFFER.into(), data: vec![1.0] }],
+        };
+        assert_eq!(extract_guard(&mut state), None);
+        assert!(state.opt.is_empty(), "malformed stamp is still consumed");
+        // and a state with only real buffers is untouched
+        let mut state = TrainState {
+            step: 0,
+            params: vec![],
+            opt: vec![NamedBuffer { name: "embed.momentum".into(), data: vec![0.0] }],
+        };
+        assert_eq!(extract_guard(&mut state), None);
+        assert_eq!(state.opt.len(), 1);
     }
 
     #[test]

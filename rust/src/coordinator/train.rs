@@ -17,8 +17,11 @@
 //! streams to the saved step, and continues — the continued trajectory
 //! is bit-identical to an uninterrupted run for any `perf.plan_threads`
 //! (asserted by `tests/native_train.rs` and `tests/fault_injection.rs`).
-//! If checkpoints exist but none validates, resume is a clean error,
-//! never a silent restart from scratch.
+//! The anomaly guard's backoff state rides along in the checkpoint
+//! ([`guard::stamp_guard`]), so resuming mid-backoff continues at the
+//! backed-off LR with the abort streak intact. If checkpoints exist but
+//! none validates, resume is a clean error, never a silent restart from
+//! scratch.
 //!
 //! ## Anomaly guard
 //!
@@ -34,7 +37,7 @@ use std::path::Path;
 
 use crate::config::{BackendKind, DataSpec, RunConfig};
 use crate::coordinator::checkpoint;
-use crate::coordinator::guard::{GuardConfig, StepGuard, Verdict};
+use crate::coordinator::guard::{self, GuardConfig, StepGuard, Verdict};
 use crate::coordinator::metrics::{append_jsonl, json_str, CsvWriter};
 use crate::coordinator::schedule::lr_at;
 use crate::data::corpus::token_source;
@@ -168,9 +171,14 @@ pub fn run(backend: &mut dyn TrainBackend, cfg: &RunConfig) -> anyhow::Result<Ru
     // feeds — latest_valid verifies header/CRCs/step and walks back over
     // torn candidates, logging what it skipped
     let mut start_step = 0usize;
+    let mut resume_guard: Option<(f64, usize)> = None;
     if cfg.resume {
         match checkpoint::latest_valid(&cfg.out_dir)? {
-            Some((step, path, state)) => {
+            Some((step, path, mut state)) => {
+                // the guard stamp is the coordinator's synthetic opt
+                // buffer — strip it before the backend import, which
+                // insists on consuming every buffer itself
+                resume_guard = guard::extract_guard(&mut state);
                 backend.import_state(&state)?;
                 start_step = step;
                 info!(
@@ -236,6 +244,19 @@ pub fn run(backend: &mut dyn TrainBackend, cfg: &RunConfig) -> anyhow::Result<Ru
         max_consecutive: cfg.guard_max_bad.max(1),
         max_grad_norm: cfg.guard_max_grad_norm,
     })?;
+    if let Some((scale, bad)) = resume_guard {
+        // resume mid-backoff at the backed-off LR with the streak intact
+        // — restoring full LR right where the run was blowing up is how
+        // a NaN burst used to survive a --resume
+        guard.restore(scale, bad);
+        if guard.lr_scale() < 1.0 || guard.consecutive_bad() > 0 {
+            info!(
+                "guard state restored: lr scale {:.6}, {} consecutive anomalous",
+                guard.lr_scale(),
+                guard.consecutive_bad()
+            );
+        }
+    }
 
     let mut timer = Timer::new();
     let mut clip_sum = 0.0f64;
@@ -389,7 +410,7 @@ pub fn run(backend: &mut dyn TrainBackend, cfg: &RunConfig) -> anyhow::Result<Ru
         }
 
         if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
-            timer.time("ckpt", || save_checkpoint(&mut *backend, cfg, step + 1))?;
+            timer.time("ckpt", || save_checkpoint(&mut *backend, cfg, step + 1, &guard))?;
             if cfg.keep_checkpoints > 0 {
                 // retention is best-effort: a failed prune must never kill
                 // a run whose checkpoint just landed safely
@@ -470,7 +491,7 @@ pub fn run(backend: &mut dyn TrainBackend, cfg: &RunConfig) -> anyhow::Result<Ru
 /// rows whose leading `step` column is below `start_step` — an
 /// interrupted run may have flushed rows past the checkpoint a resume
 /// restores from, and its final row may have died mid-flush.
-fn drop_rows_from(path: &Path, start_step: usize) -> anyhow::Result<()> {
+pub(crate) fn drop_rows_from(path: &Path, start_step: usize) -> anyhow::Result<()> {
     let text = std::fs::read_to_string(path)?;
     let columns = text.lines().next().map_or(0, |h| h.split(',').count());
     let mut kept = String::new();
@@ -497,7 +518,7 @@ fn drop_rows_from(path: &Path, start_step: usize) -> anyhow::Result<()> {
 /// guard columns existed is rewritten to the current header with old
 /// rows padded by empty cells (or truncated, should columns ever be
 /// removed), so [`CsvWriter::append`] derives the right arity.
-fn prepare_resumed_csv(
+pub(crate) fn prepare_resumed_csv(
     path: &Path,
     start_step: usize,
     header: &[&str],
@@ -532,11 +553,14 @@ fn save_checkpoint(
     backend: &mut dyn TrainBackend,
     cfg: &RunConfig,
     step: usize,
+    guard: &StepGuard,
 ) -> anyhow::Result<()> {
     let mut state = backend.export_state()?;
     // a backend reports steps across restores; the file is named by the
     // absolute step
     state.step = step as u64;
+    // ride the guard's backoff state along so a resume continues it
+    guard::stamp_guard(&mut state, guard);
     checkpoint::save_state(&cfg.out_dir.join(format!("step-{step}.ckpt")), &state)
 }
 

@@ -1,0 +1,773 @@
+//! The distributed coordinator: roster, heartbeats, barriers, checkpoints.
+//!
+//! One coordinator process owns the run. It listens on `dist.bind`
+//! (publishing the bound address to `<out_dir>/coordinator.addr`), waits
+//! for `dist.workers` registrations, and then drives the step loop:
+//! assign shards over the live ranks ([`crate::dist::assign_shards`]),
+//! gather per-shard gradients at the barrier, reduce them
+//! deterministically ([`crate::dist::reduce_shards`]), run the anomaly
+//! guard centrally, and broadcast one `Apply` frame. Checkpoints are
+//! requested from the lowest live rank after the `Apply` (TCP ordering
+//! guarantees the worker has applied the step) and written through the
+//! validated checkpoint machinery, with the guard's backoff state
+//! stamped in — so a killed coordinator restarted with `--resume` picks
+//! up from `latest_valid()` and ships the state to a fresh worker fleet.
+//!
+//! Threading: the main thread is the only writer of frames. An accept
+//! thread hands each connection a dedicated reader thread; readers stamp
+//! liveness on every frame and funnel everything except heartbeats into
+//! one event queue the main thread drains between deadline checks.
+//!
+//! Failure handling is step-scoped. A worker death *before* the gather
+//! completes discards all of the step's partial gradients, recomputes
+//! the assignment over the survivors, and re-issues `StepBegin` (workers
+//! serve repeats from their shard-batch cache). The `Apply` broadcast is
+//! the commit point: after it, the step is never replayed — a peer that
+//! dies during the broadcast is simply marked dead. Metrics and
+//! summaries land in the same `metrics.csv` / `summary.jsonl` shapes the
+//! single-process loop writes, with `backend = "dist"`.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::{DataSpec, RunConfig};
+use crate::coordinator::checkpoint;
+use crate::coordinator::guard::{self, GuardConfig, StepGuard, Verdict};
+use crate::coordinator::metrics::{append_jsonl, json_str, CsvWriter};
+use crate::coordinator::schedule::lr_at;
+use crate::coordinator::train::prepare_resumed_csv;
+use crate::dist::wire::{self, Msg, RecvError};
+use crate::dist::{assign_shards, reduce_shards, CLIP_NORM};
+use crate::runtime::TrainState;
+use crate::{info, warnln};
+
+/// Outcome of a distributed run (the coordinator's view).
+#[derive(Clone, Debug)]
+pub struct DistResult {
+    /// Steps executed by this invocation (excludes restored steps).
+    pub steps_run: usize,
+    /// Workers declared dead mid-run (abort, disconnect, or deadline).
+    pub deaths: usize,
+    /// Steps whose optimizer update the anomaly guard skipped.
+    pub skipped_steps: usize,
+    /// Training loss of the last step with a finite loss.
+    pub final_train_loss: f64,
+    /// Wall-clock seconds of this invocation.
+    pub seconds: f64,
+    /// Workers the run started with.
+    pub workers: usize,
+    /// Data shards per global step.
+    pub shards: usize,
+}
+
+enum Event {
+    /// A decoded frame from connection `conn` (heartbeats excluded).
+    Frame(u64, Msg),
+    /// Connection `conn`'s reader exited (EOF, reset, or error).
+    Closed(u64),
+}
+
+#[derive(Default)]
+struct HubState {
+    events: VecDeque<Event>,
+    last_seen: HashMap<u64, Instant>,
+    done: bool,
+}
+
+/// The readers' funnel into the main thread: one queue, one condvar.
+struct Hub {
+    state: Mutex<HubState>,
+    cv: Condvar,
+}
+
+fn lock_hub(hub: &Hub) -> MutexGuard<'_, HubState> {
+    hub.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Pop the next event, waiting up to `wait` for one to arrive. `None`
+/// means the wait elapsed — the caller's chance to check deadlines.
+fn next_event(hub: &Hub, wait: Duration) -> Option<Event> {
+    let mut st = lock_hub(hub);
+    if let Some(e) = st.events.pop_front() {
+        return Some(e);
+    }
+    let (mut st, _) = hub.cv.wait_timeout(st, wait).unwrap_or_else(|e| e.into_inner());
+    st.events.pop_front()
+}
+
+fn reader_loop(hub: Arc<Hub>, conn: u64, mut stream: TcpStream) {
+    loop {
+        match wire::read_msg(&mut stream) {
+            Ok(msg) => {
+                let mut st = lock_hub(&hub);
+                if st.done {
+                    return;
+                }
+                // ANY intact frame proves liveness; pure heartbeats stop
+                // here so the event queue carries only actionable traffic
+                st.last_seen.insert(conn, Instant::now());
+                if matches!(msg, Msg::Heartbeat { .. }) {
+                    continue;
+                }
+                st.events.push_back(Event::Frame(conn, msg));
+                drop(st);
+                hub.cv.notify_one();
+            }
+            Err(RecvError::Corrupt { want, got }) => {
+                // dropped whole before deserialization; the stream stays
+                // framed and step-level recovery (resend) fills the gap
+                warnln!(
+                    "conn {conn}: dropping corrupt frame (crc {got:#010x}, wanted {want:#010x})"
+                );
+            }
+            Err(_) => {
+                let mut st = lock_hub(&hub);
+                st.events.push_back(Event::Closed(conn));
+                drop(st);
+                hub.cv.notify_one();
+                return;
+            }
+        }
+    }
+}
+
+/// The listening socket plus its accept/reader threads. The main thread
+/// is the sole frame *writer*; the `conns` map holds the write halves.
+struct Net {
+    hub: Arc<Hub>,
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Net {
+    fn listen(bind: &str) -> anyhow::Result<Net> {
+        let listener = TcpListener::bind(bind)
+            .map_err(|e| anyhow::anyhow!("binding coordinator to {bind}: {e}"))?;
+        let addr = listener.local_addr()?;
+        let hub = Arc::new(Hub { state: Mutex::new(HubState::default()), cv: Condvar::new() });
+        let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+        let accept = {
+            let hub = Arc::clone(&hub);
+            let conns = Arc::clone(&conns);
+            std::thread::spawn(move || {
+                let mut next_id = 0u64;
+                for stream in listener.incoming() {
+                    if lock_hub(&hub).done {
+                        return;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    let _ = stream.set_nodelay(true);
+                    let conn = next_id;
+                    next_id += 1;
+                    match stream.try_clone() {
+                        Ok(write_half) => {
+                            conns
+                                .lock()
+                                .unwrap_or_else(|e| e.into_inner())
+                                .insert(conn, write_half);
+                            let hub = Arc::clone(&hub);
+                            std::thread::spawn(move || reader_loop(hub, conn, stream));
+                        }
+                        Err(e) => warnln!("conn {conn}: clone failed, dropping: {e}"),
+                    }
+                }
+            })
+        };
+        Ok(Net { hub, conns, addr, accept: Some(accept) })
+    }
+
+    fn send(&self, conn: u64, msg: &Msg) -> anyhow::Result<()> {
+        let mut conns = self.conns.lock().unwrap_or_else(|e| e.into_inner());
+        let stream = conns
+            .get_mut(&conn)
+            .ok_or_else(|| anyhow::anyhow!("connection {conn} is gone"))?;
+        wire::write_msg(stream, msg)
+    }
+
+    fn drop_conn(&self, conn: u64) {
+        let removed = self.conns.lock().unwrap_or_else(|e| e.into_inner()).remove(&conn);
+        if let Some(s) = removed {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    fn last_seen(&self, conn: u64) -> Option<Instant> {
+        lock_hub(&self.hub).last_seen.get(&conn).copied()
+    }
+
+    fn shutdown(&mut self) {
+        lock_hub(&self.hub).done = true;
+        for (_, s) in self.conns.lock().unwrap_or_else(|e| e.into_inner()).drain() {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        // a throwaway self-connection unblocks `accept` so the thread
+        // observes `done` and exits instead of leaking
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Net {
+    fn drop(&mut self) {
+        if self.accept.is_some() {
+            self.shutdown();
+        }
+    }
+}
+
+/// A registered worker. Rank = index into the coordinator's peer vec;
+/// ranks are never reused, dead peers just stop being assigned shards.
+struct Peer {
+    conn: u64,
+    id: String,
+    alive: bool,
+}
+
+/// Run the coordinator side of a distributed job to completion.
+///
+/// Blocks until the run finishes, the guard aborts it, or every worker
+/// is dead. Always broadcasts a `Shutdown` (with the completion or error
+/// reason) before tearing the sockets down, so workers exit cleanly.
+pub fn run(cfg: &RunConfig) -> anyhow::Result<DistResult> {
+    let t_start = Instant::now();
+    anyhow::ensure!(
+        cfg.data != DataSpec::Images,
+        "distributed training shards token corpora only (got images)"
+    );
+    anyhow::ensure!(cfg.dist_workers >= 1, "dist.workers must be at least 1");
+    std::fs::create_dir_all(&cfg.out_dir)?;
+
+    // resume: same contract as the single-process loop — newest *valid*
+    // checkpoint or a clean refusal, never a silent restart from scratch
+    let mut start_step = 0usize;
+    let mut resume_guard: Option<(f64, usize)> = None;
+    let mut resume_state: Option<TrainState> = None;
+    if cfg.resume {
+        match checkpoint::latest_valid(&cfg.out_dir)? {
+            Some((step, path, mut state)) => {
+                resume_guard = guard::extract_guard(&mut state);
+                start_step = step;
+                info!("coordinator resuming from {} (step {step})", path.display());
+                resume_state = Some(state);
+            }
+            None => {
+                if let Some((step, path)) = checkpoint::latest(&cfg.out_dir)? {
+                    anyhow::bail!(
+                        "resume requested but no checkpoint in {} validates \
+                         (newest candidate is step-{step}: {}); refusing to \
+                         restart from scratch",
+                        cfg.out_dir.display(),
+                        path.display()
+                    );
+                }
+            }
+        }
+    }
+    anyhow::ensure!(
+        start_step <= cfg.steps,
+        "checkpoint is at step {start_step} but the run only has {} steps",
+        cfg.steps
+    );
+
+    let nshards = if cfg.dist_shards == 0 { cfg.dist_workers } else { cfg.dist_shards } as u32;
+    let net = Net::listen(&cfg.dist_bind)?;
+    // publish the bound address via write + rename so a polling worker
+    // launcher never reads a torn file
+    let tmp = cfg.out_dir.join("coordinator.addr.tmp");
+    std::fs::write(&tmp, format!("{}\n", net.addr))?;
+    std::fs::rename(&tmp, cfg.out_dir.join("coordinator.addr"))?;
+    info!(
+        "coordinator listening on {} ({} workers, {nshards} shards, steps {start_step}..{})",
+        net.addr, cfg.dist_workers, cfg.steps
+    );
+
+    let peers = gather_workers(cfg, &net, start_step, nshards, &resume_state)?;
+    let mut co =
+        Coord { cfg, net, peers, deaths: 0, last_abort: None, nshards };
+    let run = co.train(start_step, resume_guard, t_start);
+    match &run {
+        Ok(_) => co.broadcast(&Msg::Shutdown { reason: "run complete".into() }),
+        Err(e) => co.broadcast(&Msg::Shutdown { reason: e.to_string() }),
+    }
+    co.net.shutdown();
+    run
+}
+
+/// Wait for `dist.workers` live registrations, acking each with the full
+/// run definition (and the resume state, if any). Duplicate worker ids
+/// are refused; a worker that dies before the roster completes frees its
+/// slot for a later arrival.
+fn gather_workers(
+    cfg: &RunConfig,
+    net: &Net,
+    start_step: usize,
+    nshards: u32,
+    resume_state: &Option<TrainState>,
+) -> anyhow::Result<Vec<Peer>> {
+    let deadline = Instant::now() + Duration::from_millis(cfg.dist_join_timeout_ms.max(1000));
+    let mut peers: Vec<Peer> = Vec::new();
+    while peers.iter().filter(|p| p.alive).count() < cfg.dist_workers {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "only {}/{} workers registered within {} ms",
+            peers.iter().filter(|p| p.alive).count(),
+            cfg.dist_workers,
+            cfg.dist_join_timeout_ms
+        );
+        let Some(ev) = next_event(&net.hub, Duration::from_millis(50)) else { continue };
+        match ev {
+            Event::Frame(conn, Msg::Register { worker_id }) => {
+                if peers.iter().any(|p| p.alive && p.id == worker_id) {
+                    warnln!("refusing duplicate registration of `{worker_id}`");
+                    let _ = net.send(
+                        conn,
+                        &Msg::RegisterNack {
+                            reason: format!("worker id `{worker_id}` is already registered"),
+                        },
+                    );
+                    continue;
+                }
+                let rank = peers.len() as u32;
+                let ack = Msg::RegisterAck {
+                    rank,
+                    nshards,
+                    start_step: start_step as u64,
+                    steps: cfg.steps as u64,
+                    seed: cfg.seed,
+                    model: cfg.model.clone(),
+                    optimizer: cfg.optimizer.clone(),
+                    data: cfg.data.name().to_string(),
+                    state: resume_state.clone(),
+                };
+                if let Err(e) = net.send(conn, &ack) {
+                    warnln!("registration ack to `{worker_id}` failed, dropping: {e}");
+                    net.drop_conn(conn);
+                    continue;
+                }
+                info!("worker `{worker_id}` registered as rank {rank}");
+                peers.push(Peer { conn, id: worker_id, alive: true });
+            }
+            Event::Frame(conn, Msg::WorkerAbort { reason, .. }) => {
+                if let Some(p) = peers.iter_mut().find(|p| p.conn == conn && p.alive) {
+                    warnln!("worker `{}` aborted during registration: {reason}", p.id);
+                    p.alive = false;
+                }
+                net.drop_conn(conn);
+            }
+            Event::Frame(conn, other) => {
+                warnln!("conn {conn}: ignoring {} before the roster is complete", other.name());
+            }
+            Event::Closed(conn) => {
+                if let Some(p) = peers.iter_mut().find(|p| p.conn == conn && p.alive) {
+                    warnln!("worker `{}` disconnected before the run started", p.id);
+                    p.alive = false;
+                }
+                net.drop_conn(conn);
+            }
+        }
+    }
+    Ok(peers)
+}
+
+struct Coord<'a> {
+    cfg: &'a RunConfig,
+    net: Net,
+    peers: Vec<Peer>,
+    deaths: usize,
+    last_abort: Option<String>,
+    nshards: u32,
+}
+
+impl Coord<'_> {
+    fn live_ranks(&self) -> Vec<u32> {
+        self.peers
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.alive)
+            .map(|(r, _)| r as u32)
+            .collect()
+    }
+
+    fn rank_of(&self, conn: u64) -> Option<u32> {
+        self.peers.iter().position(|p| p.conn == conn).map(|r| r as u32)
+    }
+
+    fn mark_dead(&mut self, rank: u32, why: &str) {
+        let p = &mut self.peers[rank as usize];
+        if !p.alive {
+            return;
+        }
+        p.alive = false;
+        self.deaths += 1;
+        warnln!("worker `{}` (rank {rank}) is dead: {why}", p.id);
+        self.net.drop_conn(p.conn);
+    }
+
+    /// Best-effort send to every live rank; a failed send marks the peer
+    /// dead (its shards redistribute at the next gather).
+    fn broadcast(&mut self, msg: &Msg) {
+        for r in self.live_ranks() {
+            if let Err(e) = self.net.send(self.peers[r as usize].conn, msg) {
+                self.mark_dead(r, &format!("send failed: {e}"));
+            }
+        }
+    }
+
+    /// Declare dead every live peer silent past `dist.deadline_ms`.
+    fn check_deadlines(&mut self) {
+        let deadline = Duration::from_millis(self.cfg.dist_deadline_ms.max(100));
+        for r in self.live_ranks() {
+            let conn = self.peers[r as usize].conn;
+            if self.net.last_seen(conn).is_some_and(|t| t.elapsed() > deadline) {
+                self.mark_dead(r, "missed heartbeat deadline");
+            }
+        }
+    }
+
+    fn abort_suffix(&self) -> String {
+        match &self.last_abort {
+            Some(r) => format!(" (last worker abort: {r})"),
+            None => String::new(),
+        }
+    }
+
+    /// Handle an event any phase can receive: late registrations, worker
+    /// aborts, closed connections, strays. Returns `true` if the event
+    /// killed a live peer — the caller's gather must restart.
+    fn handle_background(&mut self, ev: Event) -> bool {
+        match ev {
+            Event::Frame(conn, Msg::Register { worker_id }) => {
+                warnln!("refusing `{worker_id}`: training already in progress");
+                let _ = self.net.send(
+                    conn,
+                    &Msg::RegisterNack {
+                        reason: "training already in progress — workers must join \
+                                 before the first step"
+                            .into(),
+                    },
+                );
+                false
+            }
+            Event::Frame(conn, Msg::WorkerAbort { reason, .. }) => match self.rank_of(conn) {
+                Some(r) if self.peers[r as usize].alive => {
+                    self.last_abort = Some(reason.clone());
+                    self.mark_dead(r, &format!("aborted: {reason}"));
+                    true
+                }
+                _ => false,
+            },
+            Event::Frame(conn, other) => {
+                warnln!("conn {conn}: ignoring stray {}", other.name());
+                false
+            }
+            Event::Closed(conn) => match self.rank_of(conn) {
+                Some(r) if self.peers[r as usize].alive => {
+                    self.mark_dead(r, "connection closed");
+                    true
+                }
+                _ => {
+                    self.net.drop_conn(conn);
+                    false
+                }
+            },
+        }
+    }
+
+    /// Run step `step`'s barrier: assign, gather, restart on death or
+    /// timeout. Returns the per-shard gradients in shard-index order.
+    fn gather_step(&mut self, step: usize) -> anyhow::Result<Vec<(f32, Vec<f32>)>> {
+        let step64 = step as u64;
+        let step_timeout = Duration::from_millis(self.cfg.dist_step_timeout_ms.max(1000));
+        let mut resends = 0usize;
+        'attempt: loop {
+            let live = self.live_ranks();
+            anyhow::ensure!(
+                !live.is_empty(),
+                "all workers dead at step {step}{}",
+                self.abort_suffix()
+            );
+            let assignment = assign_shards(self.nshards, &live);
+            for (rank, shards) in &assignment {
+                // idle ranks get an empty StepBegin so every replica sees
+                // the same step sequence and the Apply protocol check holds
+                let msg = Msg::StepBegin { step: step64, shards: shards.clone() };
+                if let Err(e) = self.net.send(self.peers[*rank as usize].conn, &msg) {
+                    self.mark_dead(*rank, &format!("send failed: {e}"));
+                    continue 'attempt;
+                }
+            }
+            let mut got: Vec<Option<(f32, Vec<f32>)>> = vec![None; self.nshards as usize];
+            let mut remaining = self.nshards as usize;
+            let started = Instant::now();
+            loop {
+                if let Some(ev) = next_event(&self.net.hub, Duration::from_millis(50)) {
+                    match ev {
+                        Event::Frame(_, Msg::ShardGrads { step: s, shard, loss, grads }) => {
+                            // duplicates (a resend raced the original) and
+                            // earlier-attempt leftovers are bit-identical
+                            // by the determinism contract — first one wins
+                            if s == step64
+                                && (shard as usize) < got.len()
+                                && got[shard as usize].is_none()
+                            {
+                                got[shard as usize] = Some((loss, grads));
+                                remaining -= 1;
+                            } else if s != step64 {
+                                warnln!(
+                                    "dropping shard gradient for step {s} during step {step64}"
+                                );
+                            }
+                        }
+                        ev => {
+                            if self.handle_background(ev) {
+                                continue 'attempt;
+                            }
+                        }
+                    }
+                }
+                if remaining == 0 {
+                    return Ok(got.into_iter().map(|g| g.expect("gather counted down")).collect());
+                }
+                let deaths = self.deaths;
+                self.check_deadlines();
+                if self.deaths != deaths {
+                    continue 'attempt;
+                }
+                if started.elapsed() > step_timeout {
+                    resends += 1;
+                    anyhow::ensure!(
+                        resends <= 10,
+                        "step {step} stalled: gather incomplete after {resends} \
+                         timeouts{}",
+                        self.abort_suffix()
+                    );
+                    warnln!(
+                        "step {step}: gather incomplete after {step_timeout:?}, \
+                         re-issuing assignments (workers replay from cache)"
+                    );
+                    continue 'attempt;
+                }
+            }
+        }
+    }
+
+    /// Fetch a full state export from the lowest live rank. Sent after
+    /// the step's `Apply` on the same stream, so the worker has applied
+    /// the update by the time it serves this. Falls over to the next
+    /// live rank if the target dies mid-export.
+    fn request_checkpoint(&mut self, label_step: usize) -> anyhow::Result<TrainState> {
+        let timeout = Duration::from_millis(self.cfg.dist_step_timeout_ms.max(1000));
+        'target: loop {
+            let live = self.live_ranks();
+            anyhow::ensure!(
+                !live.is_empty(),
+                "all workers dead before checkpoint step-{label_step}{}",
+                self.abort_suffix()
+            );
+            let target = live[0];
+            let conn = self.peers[target as usize].conn;
+            if let Err(e) = self.net.send(conn, &Msg::CheckpointRequest { step: label_step as u64 })
+            {
+                self.mark_dead(target, &format!("send failed: {e}"));
+                continue 'target;
+            }
+            let started = Instant::now();
+            loop {
+                if let Some(ev) = next_event(&self.net.hub, Duration::from_millis(50)) {
+                    match ev {
+                        Event::Frame(c, Msg::CheckpointState { state }) if c == conn => {
+                            return Ok(state)
+                        }
+                        Event::Frame(_, Msg::ShardGrads { .. }) => {
+                            // stale duplicate from the step just committed
+                        }
+                        ev => {
+                            if self.handle_background(ev) && !self.peers[target as usize].alive {
+                                continue 'target;
+                            }
+                        }
+                    }
+                }
+                let deaths = self.deaths;
+                self.check_deadlines();
+                if self.deaths != deaths && !self.peers[target as usize].alive {
+                    continue 'target;
+                }
+                anyhow::ensure!(
+                    started.elapsed() <= timeout,
+                    "checkpoint step-{label_step} stalled: rank {target} never \
+                     answered the export request"
+                );
+            }
+        }
+    }
+
+    fn train(
+        &mut self,
+        start_step: usize,
+        resume_guard: Option<(f64, usize)>,
+        t_start: Instant,
+    ) -> anyhow::Result<DistResult> {
+        let cfg = self.cfg;
+        const METRIC_COLUMNS: [&str; 8] = [
+            "step", "lr", "loss", "grad_norm", "clipped", "eval_loss", "lr_scale", "skipped",
+        ];
+        let metrics_path = cfg.out_dir.join("metrics.csv");
+        let mut csv = if start_step > 0 && metrics_path.exists() {
+            prepare_resumed_csv(&metrics_path, start_step, &METRIC_COLUMNS)?;
+            CsvWriter::append(&metrics_path)?
+        } else {
+            CsvWriter::create(&metrics_path, &METRIC_COLUMNS)?
+        };
+
+        let mut guard = StepGuard::new(GuardConfig {
+            enabled: cfg.guard,
+            backoff: cfg.guard_backoff,
+            min_scale: cfg.guard_min_scale,
+            recover: cfg.guard_recover,
+            max_consecutive: cfg.guard_max_bad.max(1),
+            max_grad_norm: cfg.guard_max_grad_norm,
+        })?;
+        if let Some((scale, bad)) = resume_guard {
+            guard.restore(scale, bad);
+            if guard.lr_scale() < 1.0 || guard.consecutive_bad() > 0 {
+                info!(
+                    "guard state restored: lr scale {:.6}, {} consecutive anomalous",
+                    guard.lr_scale(),
+                    guard.consecutive_bad()
+                );
+            }
+        }
+
+        let mut last_train = f64::NAN;
+        let mut clip_sum = 0.0f64;
+        for step in start_step..cfg.steps {
+            let shards = self.gather_step(step)?;
+            let (metrics, avg) = reduce_shards(&shards, CLIP_NORM)?;
+            // the scale set by step N's anomaly applies from step N+1 —
+            // same capture-before-observe order as the single-process loop
+            let lr_scale = guard.lr_scale();
+            let lr = (lr_at(cfg.schedule, cfg.lr, step, cfg.steps) * lr_scale) as f32;
+            let verdict = guard.observe(step, &metrics);
+            let apply = verdict == Verdict::Apply;
+            // commit point: once this broadcast starts, the step is never
+            // replayed (a replay would double-apply momentum on survivors)
+            self.broadcast(&Msg::Apply {
+                step: step as u64,
+                lr,
+                apply,
+                grads: if apply { avg } else { Vec::new() },
+            });
+            anyhow::ensure!(
+                !self.live_ranks().is_empty(),
+                "all workers dead at step {step}{}",
+                self.abort_suffix()
+            );
+            if apply {
+                clip_sum += metrics.clipped as f64;
+            }
+            if metrics.loss.is_finite() {
+                last_train = metrics.loss as f64;
+            }
+            csv.row(&[
+                step as f64,
+                lr as f64,
+                metrics.loss as f64,
+                metrics.grad_norm as f64,
+                metrics.clipped as f64,
+                f64::NAN, // the coordinator holds no model; no eval column
+                lr_scale,
+                if apply { 0.0 } else { 1.0 },
+            ])?;
+
+            if let Err(abort) = guard.check_abort() {
+                csv.flush()?;
+                append_jsonl(
+                    &cfg.out_dir.join("summary.jsonl"),
+                    &[
+                        ("model", json_str(&cfg.model)),
+                        ("optimizer", json_str(&cfg.optimizer)),
+                        ("backend", json_str("dist")),
+                        ("aborted", "true".into()),
+                        ("abort_step", format!("{step}")),
+                        ("skipped_steps", format!("{}", guard.skipped())),
+                        ("reason", json_str(&abort.to_string())),
+                    ],
+                )?;
+                return Err(abort);
+            }
+
+            if cfg.checkpoint_every > 0 && (step + 1) % cfg.checkpoint_every == 0 {
+                let mut state = self.request_checkpoint(step + 1)?;
+                state.step = (step + 1) as u64;
+                guard::stamp_guard(&mut state, &guard);
+                checkpoint::save_state(
+                    &cfg.out_dir.join(format!("step-{}.ckpt", step + 1)),
+                    &state,
+                )?;
+                if cfg.keep_checkpoints > 0 {
+                    if let Err(e) = checkpoint::prune(&cfg.out_dir, cfg.keep_checkpoints) {
+                        warnln!("checkpoint prune failed: {e}");
+                    }
+                }
+            }
+
+            if step % 25 == 0 || step + 1 == cfg.steps {
+                csv.flush()?;
+            }
+            if step % 50 == 0 || step + 1 == cfg.steps {
+                info!(
+                    "[dist/{}/{}] {} step {step}/{} loss {:.4} gnorm {:.3} lr {:.2e} \
+                     ({} live)",
+                    cfg.model,
+                    cfg.optimizer,
+                    cfg.data.name(),
+                    cfg.steps,
+                    metrics.loss,
+                    metrics.grad_norm,
+                    lr,
+                    self.live_ranks().len()
+                );
+            }
+        }
+        csv.flush()?;
+
+        let steps_run = cfg.steps - start_step;
+        let result = DistResult {
+            steps_run,
+            deaths: self.deaths,
+            skipped_steps: guard.skipped(),
+            final_train_loss: last_train,
+            seconds: t_start.elapsed().as_secs_f64(),
+            workers: cfg.dist_workers,
+            shards: self.nshards as usize,
+        };
+        append_jsonl(
+            &cfg.out_dir.join("summary.jsonl"),
+            &[
+                ("model", json_str(&cfg.model)),
+                ("optimizer", json_str(&cfg.optimizer)),
+                ("backend", json_str("dist")),
+                ("data", json_str(cfg.data.name())),
+                ("workers", format!("{}", result.workers)),
+                ("shards", format!("{}", result.shards)),
+                ("lr", format!("{}", cfg.lr)),
+                ("steps", format!("{}", cfg.steps)),
+                ("steps_run", format!("{steps_run}")),
+                ("deaths", format!("{}", result.deaths)),
+                ("skipped_steps", format!("{}", result.skipped_steps)),
+                ("guard_min_lr_scale", format!("{}", guard.min_scale_seen())),
+                ("clip_rate", format!("{:.4}", clip_sum / steps_run.max(1) as f64)),
+                ("final_train_loss", format!("{:.6}", result.final_train_loss)),
+                ("seconds", format!("{:.2}", result.seconds)),
+            ],
+        )?;
+        Ok(result)
+    }
+}

@@ -1,0 +1,195 @@
+//! Distributed data-parallel training over a fault-tolerant TCP coordinator.
+//!
+//! A run is one [`coordinator`] process plus `dist.workers` [`worker`]
+//! processes (or threads — the tests drive both in-process) connected over
+//! the [`wire`] protocol: length-prefixed binary frames on `std::net` TCP,
+//! every frame CRC-32 guarded, no external RPC stack.
+//!
+//! # Determinism contract
+//!
+//! The global batch of step `s` is a fixed set of `dist.shards` shards;
+//! shard `k` always draws from `token_source(data, seed, SHARD_SPLIT_BASE
+//! + k)` regardless of which worker computes it. The coordinator reduces
+//! per-*shard* gradients in shard-index order with f64 accumulation
+//! ([`reduce_shards`]), clips the average, runs the anomaly guard, and
+//! broadcasts one `Apply` frame that every worker executes identically.
+//! Because nothing in the math depends on the shard→worker mapping, the
+//! final weights are bit-exact for any worker count at equal global batch
+//! — including after mid-run deaths and redistributions. The 1-worker run
+//! is the degenerate case of the same code path, which is what the fault
+//! scenarios compare killed runs against.
+//!
+//! # Failure model
+//!
+//! Workers heartbeat every `dist.heartbeat_ms`; a worker silent past
+//! `dist.deadline_ms` (or whose socket closes, or who sends
+//! `WorkerAbort`) is declared dead. Death *before* the step's barrier
+//! completes discards the partial gather, reassigns the dead worker's
+//! shards over the survivors, and re-issues `StepBegin` — workers serve
+//! the repeat from their shard-batch cache, so no data is skipped and no
+//! momentum is touched. The broadcast of `Apply` is the commit point:
+//! once any worker may have applied a step, that step is never replayed
+//! (replaying it would double-apply momentum on survivors). Checkpoints
+//! are written by the coordinator through the validated v3 machinery, so
+//! a killed-and-restarted coordinator resumes from `latest_valid()` and
+//! freshly-registered workers import the shipped state.
+
+pub mod coordinator;
+pub mod wire;
+pub mod worker;
+
+use crate::runtime::StepMetrics;
+
+/// Token-source split offset for shard streams. Splits 0 and 1 are the
+/// single-process train/eval streams; shard `k` reads split `2 + k`, so
+/// distributed shards never alias the sequential streams.
+pub const SHARD_SPLIT_BASE: u64 = 2;
+
+/// Global-norm clip threshold applied to the shard-averaged gradient —
+/// the same constant the single-process backend uses per batch.
+pub const CLIP_NORM: f64 = 1.0;
+
+/// Deterministic shard assignment: shard `k` goes to `live[k % live.len()]`.
+///
+/// `live` must be the sorted list of live ranks; the result pairs each
+/// live rank with its (possibly empty) shard list in `live` order. Only
+/// the *set* of live ranks affects who computes what — never arrival
+/// order — so any two coordinators with the same view assign identically.
+pub fn assign_shards(nshards: u32, live: &[u32]) -> Vec<(u32, Vec<u32>)> {
+    debug_assert!(live.windows(2).all(|w| w[0] < w[1]), "live ranks must be sorted + unique");
+    let mut out: Vec<(u32, Vec<u32>)> = live.iter().map(|&r| (r, Vec::new())).collect();
+    if out.is_empty() {
+        return out;
+    }
+    for shard in 0..nshards {
+        let slot = (shard as usize) % out.len();
+        out[slot].1.push(shard);
+    }
+    out
+}
+
+/// Deterministic all-reduce over per-shard gradients.
+///
+/// `shards` must hold one `(loss, flat_grad)` entry per shard, **in
+/// shard-index order** — the caller guarantees the order, this function
+/// guarantees that equal inputs give bit-equal outputs. Each gradient
+/// element is summed in f64 across shards, divided by the shard count,
+/// and rounded once to f32; the mean loss and the global norm of the
+/// averaged gradient are likewise f64 until the final rounding. The
+/// average is clipped to `clip_norm` exactly like the single-process
+/// step. Returns the step metrics plus the clipped averaged gradient.
+pub fn reduce_shards(
+    shards: &[(f32, Vec<f32>)],
+    clip_norm: f64,
+) -> anyhow::Result<(StepMetrics, Vec<f32>)> {
+    anyhow::ensure!(!shards.is_empty(), "reduce over zero shards");
+    let n = shards[0].1.len();
+    for (i, (_, g)) in shards.iter().enumerate() {
+        anyhow::ensure!(
+            g.len() == n,
+            "shard {i} gradient has {} elements, shard 0 has {n}",
+            g.len()
+        );
+    }
+    let inv = 1.0f64 / shards.len() as f64;
+    let mut acc = vec![0f64; n];
+    for (_, g) in shards {
+        for (a, &x) in acc.iter_mut().zip(g.iter()) {
+            *a += x as f64;
+        }
+    }
+    let mut avg: Vec<f32> = acc.iter().map(|a| (a * inv) as f32).collect();
+    let loss = shards.iter().map(|(l, _)| *l as f64).sum::<f64>() * inv;
+    let norm = avg.iter().map(|&g| g as f64 * g as f64).sum::<f64>().sqrt();
+    let clipped = norm > clip_norm;
+    if clipped {
+        let s = (clip_norm / norm) as f32;
+        for g in &mut avg {
+            *g *= s;
+        }
+    }
+    let metrics = StepMetrics {
+        loss: loss as f32,
+        grad_norm: norm as f32,
+        clipped: if clipped { 1.0 } else { 0.0 },
+    };
+    Ok((metrics, avg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_is_a_pure_function_of_the_live_set() {
+        let a = assign_shards(5, &[0, 1, 2]);
+        assert_eq!(
+            a,
+            vec![(0, vec![0, 3]), (1, vec![1, 4]), (2, vec![2])],
+            "round-robin over sorted live ranks"
+        );
+        // dropping rank 1 redistributes its shards without consulting
+        // any history — same answer no matter when the death happened
+        let b = assign_shards(5, &[0, 2]);
+        assert_eq!(b, vec![(0, vec![0, 2, 4]), (2, vec![1, 3])]);
+        // more workers than shards: the surplus worker idles but still
+        // receives a (empty) StepBegin so it stays barrier-synchronized
+        let c = assign_shards(2, &[0, 1, 2]);
+        assert_eq!(c, vec![(0, vec![0]), (1, vec![1]), (2, vec![])]);
+        assert!(assign_shards(4, &[]).is_empty());
+    }
+
+    #[test]
+    fn reduce_matches_a_naive_f64_oracle() {
+        let shards = vec![
+            (2.0f32, vec![0.5f32, -1.0, 3.0]),
+            (4.0f32, vec![1.5f32, 2.0, -3.0]),
+        ];
+        let (m, avg) = reduce_shards(&shards, 1e9).unwrap();
+        assert_eq!(avg, vec![1.0, 0.5, 0.0]);
+        assert_eq!(m.loss, 3.0);
+        let want_norm = ((1.0f64 + 0.25).sqrt()) as f32;
+        assert_eq!(m.grad_norm, want_norm);
+        assert_eq!(m.clipped, 0.0);
+    }
+
+    #[test]
+    fn reduce_clips_like_the_single_process_step() {
+        let shards = vec![(1.0f32, vec![3.0f32, 4.0])];
+        let (m, avg) = reduce_shards(&shards, 1.0).unwrap();
+        assert_eq!(m.clipped, 1.0);
+        assert_eq!(m.grad_norm, 5.0);
+        let s = (1.0f64 / 5.0) as f32;
+        assert_eq!(avg, vec![3.0 * s, 4.0 * s]);
+    }
+
+    #[test]
+    fn reduce_is_bitwise_stable_for_equal_shard_order() {
+        // The determinism contract: the reduction depends only on the
+        // (shard-ordered) inputs, so two coordinators — or one coordinator
+        // before and after a redistribution — agree bit for bit.
+        let mk = |seed: u64| {
+            let mut r = crate::util::rng::Rng::new(seed);
+            (0..4)
+                .map(|_| {
+                    (r.next_f32(), (0..257).map(|_| r.next_f32() * 2.0 - 1.0).collect::<Vec<_>>())
+                })
+                .collect::<Vec<_>>()
+        };
+        let (m1, g1) = reduce_shards(&mk(9), CLIP_NORM).unwrap();
+        let (m2, g2) = reduce_shards(&mk(9), CLIP_NORM).unwrap();
+        assert_eq!(m1.loss.to_bits(), m2.loss.to_bits());
+        assert_eq!(m1.grad_norm.to_bits(), m2.grad_norm.to_bits());
+        let b1: Vec<u32> = g1.iter().map(|x| x.to_bits()).collect();
+        let b2: Vec<u32> = g2.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(b1, b2);
+    }
+
+    #[test]
+    fn reduce_rejects_mismatched_lengths_and_empty_input() {
+        assert!(reduce_shards(&[], 1.0).is_err());
+        let bad = vec![(0.0f32, vec![1.0f32]), (0.0f32, vec![1.0f32, 2.0])];
+        let err = reduce_shards(&bad, 1.0).unwrap_err().to_string();
+        assert!(err.contains("shard 1"), "{err}");
+    }
+}

@@ -1,0 +1,670 @@
+//! Length-prefixed, CRC-guarded binary wire protocol for distributed runs.
+//!
+//! Every frame on the coordinator/worker TCP link looks like:
+//!
+//! ```text
+//! | len: u32 LE | crc: u32 LE | payload: len bytes |
+//! ```
+//!
+//! where `crc` is the CRC-32 (from [`crate::util::crc32`], zlib-compatible)
+//! of the payload alone. The receiver reads the 8-byte header, bounds-checks
+//! `len` against [`MAX_FRAME`], reads the payload, and verifies the CRC
+//! *before* deserializing anything: a corrupted frame is reported as
+//! [`RecvError::Corrupt`] and dropped whole — because the length prefix was
+//! already consumed, the stream stays framed and the next frame parses
+//! cleanly. Recovery from a dropped frame is step-level (the coordinator
+//! re-requests the step), never byte-level.
+//!
+//! The payload is a [`Msg`], encoded as a one-byte tag followed by its
+//! fields in declaration order. Scalars are little-endian; strings are
+//! `u32` length + UTF-8 bytes; `Vec<f32>` is `u32` count + LE IEEE-754
+//! words, so f32 payloads (gradients, checkpoint buffers) round-trip
+//! bit-exactly. No external serialization crate is involved — the crate
+//! must keep building offline with vendored deps only.
+
+use std::io::{Read, Write};
+
+use crate::runtime::{NamedBuffer, TrainState};
+use crate::util::crc32::crc32;
+
+/// Hard cap on a frame's payload length (256 MiB). A header whose length
+/// field exceeds this is treated as a protocol error rather than an
+/// allocation request — it can only come from a desynced or hostile peer.
+pub const MAX_FRAME: u32 = 1 << 28;
+
+/// Why a [`read_msg`] call failed.
+#[derive(Debug)]
+pub enum RecvError {
+    /// The payload failed its CRC-32 check. The frame was dropped before
+    /// any deserialization; the stream remains framed and the next
+    /// [`read_msg`] call picks up at the next frame boundary.
+    Corrupt {
+        /// CRC the frame header promised.
+        want: u32,
+        /// CRC the payload actually hashed to.
+        got: u32,
+    },
+    /// The peer closed the connection (EOF mid-header or mid-payload).
+    Closed,
+    /// The socket's read timeout elapsed before a complete frame arrived.
+    TimedOut,
+    /// Any other I/O or decode failure.
+    Other(anyhow::Error),
+}
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecvError::Corrupt { want, got } => {
+                write!(f, "frame CRC mismatch (header {want:#010x}, payload {got:#010x})")
+            }
+            RecvError::Closed => write!(f, "connection closed by peer"),
+            RecvError::TimedOut => write!(f, "read timed out"),
+            RecvError::Other(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+/// Every message that crosses the coordinator/worker link.
+///
+/// The RPC set mirrors a conventional coordinator surface — register,
+/// heartbeat, shard assignment, barrier (gather + apply), checkpoint
+/// state — flattened onto a symmetric frame stream. Tags are stable wire
+/// contract: new messages append, existing tags never change meaning.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Worker → coordinator: request to join the run under a unique id.
+    Register {
+        /// Caller-chosen worker identity; duplicates are refused.
+        worker_id: String,
+    },
+    /// Coordinator → worker: registration accepted; everything the worker
+    /// needs to build its backend and join the step loop.
+    RegisterAck {
+        /// The worker's rank (index into the coordinator's peer table).
+        rank: u32,
+        /// Total number of data shards in the global batch.
+        nshards: u32,
+        /// First step the run will execute (0, or the resume point).
+        start_step: u64,
+        /// Total steps the run will execute.
+        steps: u64,
+        /// Run seed; shard streams derive from it deterministically.
+        seed: u64,
+        /// Model tag (e.g. `gpt2_tiny`) the worker must instantiate.
+        model: String,
+        /// Optimizer registry name.
+        optimizer: String,
+        /// Data spec name understood by [`crate::config::DataSpec::parse`].
+        data: String,
+        /// On resume: the checkpoint state every worker imports so all
+        /// ranks start bit-identical. `None` on a fresh run.
+        state: Option<TrainState>,
+    },
+    /// Coordinator → worker: registration refused (duplicate id, run
+    /// already in progress, ...). The worker should exit cleanly.
+    RegisterNack {
+        /// Human-readable refusal reason.
+        reason: String,
+    },
+    /// Worker → coordinator: one-way liveness beacon, sent on a side
+    /// thread every `dist.heartbeat_ms`. Never acknowledged, so the
+    /// worker's main read loop stays strictly request/response.
+    Heartbeat {
+        /// The sender's rank.
+        rank: u32,
+    },
+    /// Coordinator → worker: compute gradients for these shards of this
+    /// step. Re-sent verbatim after a peer death or a gather timeout;
+    /// workers serve repeats from their shard-batch cache, so the resend
+    /// is idempotent.
+    StepBegin {
+        /// Global step index.
+        step: u64,
+        /// Shard indices assigned to this worker for this step.
+        shards: Vec<u32>,
+    },
+    /// Worker → coordinator: loss + flat gradient for one shard.
+    ShardGrads {
+        /// Global step index this gradient belongs to.
+        step: u64,
+        /// Which shard was computed.
+        shard: u32,
+        /// Mean loss over the shard's batch.
+        loss: f32,
+        /// Flattened gradient in the backend's scheduling order.
+        grads: Vec<f32>,
+    },
+    /// Coordinator → worker: the barrier result. Broadcasting this frame
+    /// is the step's commit point — after it, the step is never replayed.
+    Apply {
+        /// Global step index being committed.
+        step: u64,
+        /// Effective learning rate (schedule × guard scale).
+        lr: f32,
+        /// `false` when the anomaly guard skipped the step; `grads` is
+        /// empty and momentum must not be touched.
+        apply: bool,
+        /// Clipped, shard-averaged flat gradient (empty on a skip).
+        grads: Vec<f32>,
+    },
+    /// Coordinator → worker: export your state so the coordinator can
+    /// write a validated checkpoint. Sent after the step's `Apply` on the
+    /// same stream, so TCP ordering guarantees the worker has applied it.
+    CheckpointRequest {
+        /// Step count the checkpoint will be labeled with.
+        step: u64,
+    },
+    /// Worker → coordinator: the exported state for a
+    /// [`Msg::CheckpointRequest`].
+    CheckpointState {
+        /// Full parameter + optimizer state of the worker's backend.
+        state: TrainState,
+    },
+    /// Worker → coordinator: the worker is aborting (guard trip, protocol
+    /// violation, local I/O failure) and wants the coordinator to know
+    /// why instead of just vanishing into a heartbeat timeout.
+    WorkerAbort {
+        /// The sender's rank.
+        rank: u32,
+        /// Human-readable abort reason, logged by the coordinator.
+        reason: String,
+    },
+    /// Coordinator → worker: the run is over (complete or aborted);
+    /// workers exit their loop cleanly.
+    Shutdown {
+        /// Why the run ended.
+        reason: String,
+    },
+}
+
+impl Msg {
+    /// Short stable name for logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Register { .. } => "Register",
+            Msg::RegisterAck { .. } => "RegisterAck",
+            Msg::RegisterNack { .. } => "RegisterNack",
+            Msg::Heartbeat { .. } => "Heartbeat",
+            Msg::StepBegin { .. } => "StepBegin",
+            Msg::ShardGrads { .. } => "ShardGrads",
+            Msg::Apply { .. } => "Apply",
+            Msg::CheckpointRequest { .. } => "CheckpointRequest",
+            Msg::CheckpointState { .. } => "CheckpointState",
+            Msg::WorkerAbort { .. } => "WorkerAbort",
+            Msg::Shutdown { .. } => "Shutdown",
+        }
+    }
+
+    /// Serialize to a payload (no frame header).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc(Vec::with_capacity(64));
+        match self {
+            Msg::Register { worker_id } => {
+                e.u8(1);
+                e.str(worker_id);
+            }
+            Msg::RegisterAck {
+                rank,
+                nshards,
+                start_step,
+                steps,
+                seed,
+                model,
+                optimizer,
+                data,
+                state,
+            } => {
+                e.u8(2);
+                e.u32(*rank);
+                e.u32(*nshards);
+                e.u64(*start_step);
+                e.u64(*steps);
+                e.u64(*seed);
+                e.str(model);
+                e.str(optimizer);
+                e.str(data);
+                match state {
+                    None => e.u8(0),
+                    Some(st) => {
+                        e.u8(1);
+                        e.state(st);
+                    }
+                }
+            }
+            Msg::RegisterNack { reason } => {
+                e.u8(3);
+                e.str(reason);
+            }
+            Msg::Heartbeat { rank } => {
+                e.u8(4);
+                e.u32(*rank);
+            }
+            Msg::StepBegin { step, shards } => {
+                e.u8(5);
+                e.u64(*step);
+                e.u32(shards.len() as u32);
+                for &s in shards {
+                    e.u32(s);
+                }
+            }
+            Msg::ShardGrads { step, shard, loss, grads } => {
+                e.u8(6);
+                e.u64(*step);
+                e.u32(*shard);
+                e.f32(*loss);
+                e.f32s(grads);
+            }
+            Msg::Apply { step, lr, apply, grads } => {
+                e.u8(7);
+                e.u64(*step);
+                e.f32(*lr);
+                e.u8(u8::from(*apply));
+                e.f32s(grads);
+            }
+            Msg::CheckpointRequest { step } => {
+                e.u8(8);
+                e.u64(*step);
+            }
+            Msg::CheckpointState { state } => {
+                e.u8(9);
+                e.state(state);
+            }
+            Msg::WorkerAbort { rank, reason } => {
+                e.u8(10);
+                e.u32(*rank);
+                e.str(reason);
+            }
+            Msg::Shutdown { reason } => {
+                e.u8(11);
+                e.str(reason);
+            }
+        }
+        e.0
+    }
+
+    /// Deserialize a payload produced by [`Msg::encode`]. Fails on unknown
+    /// tags, truncated fields, or trailing bytes — a CRC-valid frame that
+    /// still fails here indicates a protocol-version mismatch, not line
+    /// noise.
+    pub fn decode(payload: &[u8]) -> anyhow::Result<Msg> {
+        let mut d = Dec { buf: payload, pos: 0 };
+        let tag = d.u8()?;
+        let msg = match tag {
+            1 => Msg::Register { worker_id: d.str()? },
+            2 => {
+                let rank = d.u32()?;
+                let nshards = d.u32()?;
+                let start_step = d.u64()?;
+                let steps = d.u64()?;
+                let seed = d.u64()?;
+                let model = d.str()?;
+                let optimizer = d.str()?;
+                let data = d.str()?;
+                let state = match d.u8()? {
+                    0 => None,
+                    1 => Some(d.state()?),
+                    other => anyhow::bail!("bad Option tag {other} in RegisterAck"),
+                };
+                Msg::RegisterAck {
+                    rank,
+                    nshards,
+                    start_step,
+                    steps,
+                    seed,
+                    model,
+                    optimizer,
+                    data,
+                    state,
+                }
+            }
+            3 => Msg::RegisterNack { reason: d.str()? },
+            4 => Msg::Heartbeat { rank: d.u32()? },
+            5 => {
+                let step = d.u64()?;
+                let n = d.u32()? as usize;
+                let mut shards = Vec::with_capacity(n.min(1 << 16));
+                for _ in 0..n {
+                    shards.push(d.u32()?);
+                }
+                Msg::StepBegin { step, shards }
+            }
+            6 => Msg::ShardGrads {
+                step: d.u64()?,
+                shard: d.u32()?,
+                loss: d.f32()?,
+                grads: d.f32s()?,
+            },
+            7 => Msg::Apply {
+                step: d.u64()?,
+                lr: d.f32()?,
+                apply: d.u8()? != 0,
+                grads: d.f32s()?,
+            },
+            8 => Msg::CheckpointRequest { step: d.u64()? },
+            9 => Msg::CheckpointState { state: d.state()? },
+            10 => Msg::WorkerAbort { rank: d.u32()?, reason: d.str()? },
+            11 => Msg::Shutdown { reason: d.str()? },
+            other => anyhow::bail!("unknown message tag {other}"),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Write one framed message and flush it.
+pub fn write_msg(w: &mut impl Write, msg: &Msg) -> anyhow::Result<()> {
+    let payload = msg.encode();
+    anyhow::ensure!(
+        payload.len() <= MAX_FRAME as usize,
+        "{} payload of {} bytes exceeds the {} byte frame cap",
+        msg.name(),
+        payload.len(),
+        MAX_FRAME
+    );
+    let mut frame = Vec::with_capacity(payload.len() + 8);
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    w.write_all(&frame)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one framed message, verifying length bounds and the CRC before
+/// deserialization. See [`RecvError`] for the failure taxonomy.
+pub fn read_msg(r: &mut impl Read) -> Result<Msg, RecvError> {
+    let mut head = [0u8; 8];
+    read_exact_or(r, &mut head)?;
+    let len = u32::from_le_bytes(head[0..4].try_into().expect("4-byte slice"));
+    let want = u32::from_le_bytes(head[4..8].try_into().expect("4-byte slice"));
+    if len > MAX_FRAME {
+        return Err(RecvError::Other(anyhow::anyhow!(
+            "frame length {len} exceeds the {MAX_FRAME} byte cap — peer desynced?"
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    read_exact_or(r, &mut payload)?;
+    let got = crc32(&payload);
+    if got != want {
+        return Err(RecvError::Corrupt { want, got });
+    }
+    Msg::decode(&payload).map_err(RecvError::Other)
+}
+
+fn read_exact_or(r: &mut impl Read, buf: &mut [u8]) -> Result<(), RecvError> {
+    r.read_exact(buf).map_err(|e| match e.kind() {
+        std::io::ErrorKind::UnexpectedEof => RecvError::Closed,
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => RecvError::TimedOut,
+        _ => RecvError::Other(e.into()),
+    })
+}
+
+/// Little-endian field writer; all multi-byte scalars go through here so
+/// the wire layout is defined in exactly one place.
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+    fn f32s(&mut self, xs: &[f32]) {
+        self.u32(xs.len() as u32);
+        self.0.reserve(xs.len() * 4);
+        for &x in xs {
+            self.0.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    fn state(&mut self, st: &TrainState) {
+        self.u64(st.step);
+        self.buffers(&st.params);
+        self.buffers(&st.opt);
+    }
+    fn buffers(&mut self, bufs: &[NamedBuffer]) {
+        self.u32(bufs.len() as u32);
+        for b in bufs {
+            self.str(&b.name);
+            self.f32s(&b.data);
+        }
+    }
+}
+
+/// Bounds-checked little-endian field reader over a payload slice.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Dec<'_> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&[u8]> {
+        anyhow::ensure!(
+            n <= self.buf.len() - self.pos,
+            "truncated payload: wanted {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+    fn str(&mut self) -> anyhow::Result<String> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        Ok(std::str::from_utf8(bytes)
+            .map_err(|e| anyhow::anyhow!("invalid UTF-8 in string field: {e}"))?
+            .to_string())
+    }
+    fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        // bounds-check the count against the remaining bytes *before*
+        // allocating, so a corrupt count can't request a huge Vec
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+            .collect())
+    }
+    fn state(&mut self) -> anyhow::Result<TrainState> {
+        let step = self.u64()?;
+        let params = self.buffers()?;
+        let opt = self.buffers()?;
+        Ok(TrainState { step, params, opt })
+    }
+    fn buffers(&mut self) -> anyhow::Result<Vec<NamedBuffer>> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(n <= 1 << 20, "implausible buffer count {n}");
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = self.str()?;
+            let data = self.f32s()?;
+            out.push(NamedBuffer { name, data });
+        }
+        Ok(out)
+    }
+    fn finish(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "{} trailing bytes after message payload",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> TrainState {
+        TrainState {
+            step: 42,
+            params: vec![
+                NamedBuffer { name: "embed".into(), data: vec![1.0, -2.5, f32::MIN_POSITIVE] },
+                NamedBuffer { name: "head".into(), data: vec![] },
+            ],
+            opt: vec![NamedBuffer {
+                name: "embed.momentum".into(),
+                data: vec![0.5, f32::from_bits(7)],
+            }],
+        }
+    }
+
+    fn all_variants() -> Vec<Msg> {
+        vec![
+            Msg::Register { worker_id: "w-1".into() },
+            Msg::RegisterAck {
+                rank: 3,
+                nshards: 8,
+                start_step: 12,
+                steps: 100,
+                seed: 0xDEAD_BEEF,
+                model: "gpt2_tiny".into(),
+                optimizer: "rmnp".into(),
+                data: "synthetic".into(),
+                state: Some(sample_state()),
+            },
+            Msg::RegisterAck {
+                rank: 0,
+                nshards: 1,
+                start_step: 0,
+                steps: 10,
+                seed: 1,
+                model: "m".into(),
+                optimizer: "o".into(),
+                data: "d".into(),
+                state: None,
+            },
+            Msg::RegisterNack { reason: "training already in progress".into() },
+            Msg::Heartbeat { rank: 7 },
+            Msg::StepBegin { step: 5, shards: vec![0, 2, 4] },
+            Msg::ShardGrads { step: 5, shard: 2, loss: 3.25, grads: vec![0.0, -1.0, f32::NAN] },
+            Msg::Apply { step: 5, lr: 1e-3, apply: true, grads: vec![0.125; 9] },
+            Msg::Apply { step: 6, lr: 5e-4, apply: false, grads: vec![] },
+            Msg::CheckpointRequest { step: 6 },
+            Msg::CheckpointState { state: sample_state() },
+            Msg::WorkerAbort { rank: 1, reason: "guard abort".into() },
+            Msg::Shutdown { reason: "run complete".into() },
+        ]
+    }
+
+    /// NaN != NaN, so compare through bits for the gradient-bearing arms.
+    fn bits(m: &Msg) -> Vec<u8> {
+        m.encode()
+    }
+
+    #[test]
+    fn every_variant_roundtrips_through_a_frame() {
+        for msg in all_variants() {
+            let mut buf = Vec::new();
+            write_msg(&mut buf, &msg).unwrap();
+            let mut cursor = &buf[..];
+            let back = read_msg(&mut cursor).unwrap();
+            assert_eq!(bits(&back), bits(&msg), "roundtrip mismatch for {}", msg.name());
+            assert!(cursor.is_empty(), "frame for {} left trailing bytes", msg.name());
+        }
+    }
+
+    #[test]
+    fn golden_heartbeat_frame_bytes() {
+        // Locks the layout: len=5 LE, crc32(payload) LE, then payload =
+        // tag 4 + rank 7 LE. The expected bytes (CRC 0xAE756964) were
+        // computed with an independent zlib implementation, so this test
+        // pins the wire format itself, not just self-consistency.
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Heartbeat { rank: 7 }).unwrap();
+        assert_eq!(buf, [5, 0, 0, 0, 0x64, 0x69, 0x75, 0xAE, 4, 7, 0, 0, 0]);
+    }
+
+    #[test]
+    fn corrupt_frame_is_dropped_and_the_next_frame_parses() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Heartbeat { rank: 1 }).unwrap();
+        let first_len = buf.len();
+        write_msg(&mut buf, &Msg::Shutdown { reason: "after the bad frame".into() }).unwrap();
+        buf[first_len - 1] ^= 0x40; // flip a payload bit of frame 1
+
+        let mut cursor = &buf[..];
+        match read_msg(&mut cursor) {
+            Err(RecvError::Corrupt { want, got }) => assert_ne!(want, got),
+            other => panic!("wanted Corrupt, got {other:?}"),
+        }
+        // the stream stayed framed: the very next read yields frame 2
+        match read_msg(&mut cursor).unwrap() {
+            Msg::Shutdown { reason } => assert_eq!(reason, "after the bad frame"),
+            other => panic!("wanted Shutdown, got {}", other.name()),
+        }
+    }
+
+    #[test]
+    fn truncated_stream_reports_closed() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::CheckpointRequest { step: 9 }).unwrap();
+        for cut in [0, 3, 8, buf.len() - 1] {
+            let mut cursor = &buf[..cut];
+            match read_msg(&mut cursor) {
+                Err(RecvError::Closed) => {}
+                other => panic!("cut at {cut}: wanted Closed, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_field_is_refused_without_allocating() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        let mut cursor = &buf[..];
+        match read_msg(&mut cursor) {
+            Err(RecvError::Other(e)) => assert!(e.to_string().contains("frame length")),
+            other => panic!("wanted Other, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_tag_and_trailing_bytes_are_decode_errors() {
+        assert!(Msg::decode(&[200]).is_err());
+        let mut payload = Msg::Heartbeat { rank: 0 }.encode();
+        payload.push(0);
+        assert!(Msg::decode(&payload).is_err());
+    }
+
+    #[test]
+    fn truncated_f32_count_cannot_trigger_a_huge_allocation() {
+        // ShardGrads claiming u32::MAX floats in a 30-byte payload must
+        // fail the bounds check, not attempt a 16 GiB Vec.
+        let mut e = Vec::new();
+        e.push(6u8);
+        e.extend_from_slice(&1u64.to_le_bytes());
+        e.extend_from_slice(&0u32.to_le_bytes());
+        e.extend_from_slice(&1.0f32.to_le_bytes());
+        e.extend_from_slice(&u32::MAX.to_le_bytes()); // grad count
+        assert!(Msg::decode(&e).is_err());
+    }
+}

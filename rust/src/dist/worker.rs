@@ -1,0 +1,316 @@
+//! The distributed worker: dial the coordinator, register, compute shard
+//! gradients, apply broadcast updates.
+//!
+//! A worker owns a full [`NativeBackend`] replica. Everything that
+//! defines the run — model tag, optimizer, seed, step range, and (on
+//! resume) the checkpoint state — arrives in the `RegisterAck`, so every
+//! rank is bit-identical by construction before the first step. The main
+//! loop is strictly request/response on one read stream; heartbeats go
+//! out on a side thread through a cloned write half so they never
+//! interleave with a response the loop is waiting on.
+//!
+//! Failure behavior: any local error (guard-style protocol violation,
+//! backend failure, send failure) is reported to the coordinator as a
+//! best-effort `WorkerAbort{reason}` before the process exits nonzero —
+//! a dying worker explains itself instead of silently becoming a missed
+//! heartbeat. A closed or silent coordinator socket is a *clean* error
+//! exit: the worker names the coordinator as the cause and does not
+//! panic, so supervisors can restart the pair.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::config::DataSpec;
+use crate::data::corpus::{token_source, TokenSource};
+use crate::dist::wire::{self, Msg, RecvError};
+use crate::dist::SHARD_SPLIT_BASE;
+use crate::runtime::{Batch, BatchShape, NativeBackend, TrainBackend};
+use crate::util::retry::with_retry;
+use crate::{info, warnln};
+
+/// Everything a worker needs to dial in; the run definition itself comes
+/// back in the `RegisterAck`.
+#[derive(Clone, Debug)]
+pub struct WorkerOpts {
+    /// Coordinator address (`host:port`).
+    pub connect: String,
+    /// Unique worker identity; duplicates are refused by the coordinator.
+    pub worker_id: String,
+    /// `StepPlan` worker threads for the local backend (0 = kernel count).
+    pub plan_threads: usize,
+    /// Heartbeat period in ms.
+    pub heartbeat_ms: u64,
+    /// Exit after this many ms without a coordinator frame.
+    pub worker_timeout_ms: u64,
+    /// Bounded-backoff connect attempts before giving up.
+    pub connect_attempts: usize,
+}
+
+/// What a worker did before the run ended.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerResult {
+    /// The rank the coordinator assigned.
+    pub rank: u32,
+    /// Optimizer updates applied (skipped steps excluded).
+    pub steps_applied: usize,
+    /// Shard gradients computed and shipped.
+    pub shards_done: usize,
+}
+
+/// One shard's deterministic token stream plus a one-batch cache.
+///
+/// `consumed` counts how many steps' batches this stream has produced;
+/// a freshly adopted shard (after a redistribution or a resume) fast
+/// forwards from 0, so the batch it yields for step `s` is identical to
+/// what the shard's previous owner — or a never-interrupted run — would
+/// have drawn. The cache makes a re-issued `StepBegin` for the same step
+/// idempotent: the stream does not advance twice.
+struct ShardFeed {
+    src: Box<dyn TokenSource>,
+    consumed: u64,
+    cached_step: Option<u64>,
+    buf: Vec<i32>,
+}
+
+impl ShardFeed {
+    fn new(data: DataSpec, seed: u64, shard: u32, count: usize) -> ShardFeed {
+        ShardFeed {
+            src: token_source(data, seed, SHARD_SPLIT_BASE + u64::from(shard)),
+            consumed: 0,
+            cached_step: None,
+            buf: vec![0; count],
+        }
+    }
+
+    fn batch(&mut self, step: u64) -> anyhow::Result<&[i32]> {
+        if self.cached_step != Some(step) {
+            anyhow::ensure!(
+                step >= self.consumed,
+                "shard stream cannot rewind: step {step} but {} batches consumed",
+                self.consumed
+            );
+            while self.consumed <= step {
+                self.src.fill(&mut self.buf);
+                self.consumed += 1;
+            }
+            self.cached_step = Some(step);
+        }
+        Ok(&self.buf)
+    }
+}
+
+/// Dial the coordinator, register, and serve the step loop until a
+/// `Shutdown` (clean) or an error (reported via `WorkerAbort` when the
+/// socket still works).
+pub fn run(opts: &WorkerOpts) -> anyhow::Result<WorkerResult> {
+    anyhow::ensure!(!opts.connect.is_empty(), "worker needs a coordinator address");
+    let stream = with_retry(
+        &format!("connect to coordinator at {}", opts.connect),
+        opts.connect_attempts.max(1),
+        Duration::from_millis(50),
+        || TcpStream::connect(&opts.connect).map_err(anyhow::Error::from),
+    )?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(Duration::from_millis(opts.worker_timeout_ms.max(100))))?;
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let mut reader = stream;
+
+    send(&writer, &Msg::Register { worker_id: opts.worker_id.clone() })?;
+    let ack = loop {
+        match wire::read_msg(&mut reader) {
+            Ok(Msg::RegisterAck {
+                rank,
+                nshards,
+                start_step,
+                steps,
+                seed,
+                model,
+                optimizer,
+                data,
+                state,
+            }) => break (rank, nshards, start_step, steps, seed, model, optimizer, data, state),
+            Ok(Msg::RegisterNack { reason }) => {
+                anyhow::bail!("coordinator refused registration: {reason}")
+            }
+            Ok(other) => anyhow::bail!("wanted RegisterAck, got {}", other.name()),
+            Err(RecvError::Corrupt { .. }) => {
+                // the ack itself got mangled; the raced registration is
+                // unrecoverable at this layer — bail and let the caller
+                // (or supervisor) re-run the worker
+                anyhow::bail!("registration ack failed its CRC — restart the worker")
+            }
+            Err(e) => anyhow::bail!("waiting for registration ack: {e}"),
+        }
+    };
+    let (rank, nshards, start_step, steps, seed, model, optimizer, data, state) = ack;
+    let data = DataSpec::parse(&data)?;
+    anyhow::ensure!(
+        data != DataSpec::Images,
+        "distributed training shards token corpora only (got images)"
+    );
+    info!(
+        "worker `{}` registered: rank {rank}, {nshards} shards, steps \
+         {start_step}..{steps}, model {model}, optimizer {optimizer}",
+        opts.worker_id
+    );
+
+    let mut backend = NativeBackend::new(&model, &optimizer, seed, opts.plan_threads)?;
+    if let Some(st) = &state {
+        backend.import_state(st)?;
+    }
+    let BatchShape::Tokens { rows, cols } = backend.batch_shape() else {
+        anyhow::bail!("model `{model}` does not consume tokens");
+    };
+    let count = rows * cols;
+
+    // one-way heartbeats on a side thread; the stop flag (not the socket)
+    // ends it so a clean shutdown never races a half-written frame
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let writer = Arc::clone(&writer);
+        let stop = Arc::clone(&stop);
+        let period = Duration::from_millis(opts.heartbeat_ms.max(10));
+        std::thread::spawn(move || {
+            let mut last = Instant::now();
+            while !stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(10));
+                if last.elapsed() >= period {
+                    let mut s = writer.lock().unwrap_or_else(|e| e.into_inner());
+                    if wire::write_msg(&mut *s, &Msg::Heartbeat { rank }).is_err() {
+                        return; // socket is gone; the main loop will notice
+                    }
+                    drop(s);
+                    last = Instant::now();
+                }
+            }
+        })
+    };
+
+    let result = step_loop(&mut reader, &writer, &mut backend, rank, data, seed, count);
+    if let Err(e) = &result {
+        // a dying worker explains itself — the coordinator logs the reason
+        // instead of waiting out a heartbeat deadline
+        let _ = send(&writer, &Msg::WorkerAbort { rank, reason: e.to_string() });
+    }
+    stop.store(true, Ordering::Relaxed);
+    let _ = hb.join();
+    result
+}
+
+fn step_loop(
+    reader: &mut TcpStream,
+    writer: &Mutex<TcpStream>,
+    backend: &mut NativeBackend,
+    rank: u32,
+    data: DataSpec,
+    seed: u64,
+    count: usize,
+) -> anyhow::Result<WorkerResult> {
+    let mut feeds: HashMap<u32, ShardFeed> = HashMap::new();
+    let mut pending: Option<u64> = None;
+    let mut last_applied: Option<u64> = None;
+    let mut steps_applied = 0usize;
+    let mut shards_done = 0usize;
+    loop {
+        let msg = match wire::read_msg(reader) {
+            Ok(m) => m,
+            Err(RecvError::Corrupt { want, got }) => {
+                // drop the frame, never deserialize it; the coordinator's
+                // step timeout re-issues whatever this was
+                warnln!(
+                    "rank {rank}: dropping corrupt frame (crc {got:#010x}, wanted {want:#010x})"
+                );
+                continue;
+            }
+            Err(RecvError::Closed) => anyhow::bail!(
+                "coordinator closed the connection — it crashed or was killed; \
+                 restart it with --resume and re-launch workers"
+            ),
+            Err(RecvError::TimedOut) => anyhow::bail!(
+                "coordinator silent past the worker timeout — exiting cleanly; \
+                 restart the coordinator with --resume and re-launch workers"
+            ),
+            Err(RecvError::Other(e)) => anyhow::bail!("reading from coordinator: {e}"),
+        };
+        match msg {
+            Msg::StepBegin { step, shards } => {
+                if let Some(p) = pending {
+                    anyhow::ensure!(
+                        p == step,
+                        "protocol violation: step {step} began while step {p} \
+                         still awaits its Apply"
+                    );
+                    // same step re-issued (a peer died mid-gather or a frame
+                    // was dropped): recompute from the shard caches — the
+                    // streams do not advance, so this is idempotent
+                }
+                crate::util::fault::begin_step(step);
+                for &shard in &shards {
+                    let feed = feeds
+                        .entry(shard)
+                        .or_insert_with(|| ShardFeed::new(data, seed, shard, count));
+                    let (loss, grads) = {
+                        let toks = feed.batch(step)?;
+                        backend.grad_batch(&Batch::Tokens(toks))?
+                    };
+                    send(writer, &Msg::ShardGrads { step, shard, loss, grads })?;
+                    shards_done += 1;
+                }
+                pending = Some(step);
+            }
+            Msg::Apply { step, lr, apply, grads } => {
+                match pending {
+                    Some(p) => anyhow::ensure!(
+                        p == step,
+                        "protocol violation: Apply for step {step} while step {p} is pending"
+                    ),
+                    // no pending step: this rank had no shards and its
+                    // (empty) StepBegin was lost — applying is still
+                    // correct and keeps the replica in sync
+                    None => {}
+                }
+                if let Some(a) = last_applied {
+                    // a missed Apply (e.g. CRC-dropped) would silently fork
+                    // this replica from the fleet; a gap is fatal, and the
+                    // abort report lets the coordinator redistribute
+                    anyhow::ensure!(
+                        step == a + 1,
+                        "protocol violation: Apply for step {step} after step {a} — \
+                         a broadcast was lost, replica would diverge"
+                    );
+                }
+                if apply {
+                    backend.apply_flat_grads(&grads, lr)?;
+                    steps_applied += 1;
+                }
+                // on a guard skip (apply = false) momentum stays untouched
+                // on every rank, mirroring the single-process step_gated
+                pending = None;
+                last_applied = Some(step);
+            }
+            Msg::CheckpointRequest { step } => {
+                let mut st = backend.export_state()?;
+                st.step = step;
+                send(writer, &Msg::CheckpointState { state: st })?;
+            }
+            Msg::Shutdown { reason } => {
+                info!("rank {rank}: coordinator ended the run: {reason}");
+                return Ok(WorkerResult { rank, steps_applied, shards_done });
+            }
+            other => warnln!("rank {rank}: ignoring unexpected {}", other.name()),
+        }
+    }
+}
+
+/// Serialize a frame onto the shared write half. No retry here on
+/// purpose: `write_all` may have committed part of a frame before
+/// failing, and re-sending would corrupt the framing — recovery from a
+/// failed send is connection-level (abort; the coordinator
+/// redistributes), not frame-level.
+fn send(writer: &Mutex<TcpStream>, msg: &Msg) -> anyhow::Result<()> {
+    let mut s = writer.lock().unwrap_or_else(|e| e.into_inner());
+    wire::write_msg(&mut *s, msg)
+}

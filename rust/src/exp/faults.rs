@@ -14,6 +14,9 @@
 //! | `bitflip-latest`    | random bit flipped in newest ckpt      | resume walks back → byte-equal reference |
 //! | `nan-burst`         | 3 NaN-gradient steps (env hook)        | run completes, 3 skips, LR backs off to 1/8 then recovers |
 //! | `guard-abort`       | 8 NaN steps vs `guard_max_bad=4`       | clean nonzero exit mentioning the anomaly, no panic |
+//! | `resume-mid-backoff`| NaN burst split across a checkpoint    | guard scale+streak ride the ckpt: resumed burst aborts at the *combined* streak; healthy resume recovers 0.25 → 0.5 → 1.0 |
+//! | `dist-worker-kill`  | SIGKILL 1 of 2 workers mid-step        | coordinator redistributes, exits 0, final ckpt byte-equal the 1-worker dist reference, `deaths = 1` |
+//! | `dist-coordinator-kill` | SIGKILL the coordinator mid-run    | workers exit cleanly naming the coordinator; restarted `--resume` coordinator finishes byte-exact with `steps_run < steps` |
 //!
 //! The `steps_run` field in `summary.jsonl` is what rules out a silent
 //! restart-from-scratch: the data streams are deterministic, so a scratch
@@ -25,7 +28,7 @@
 //! points them at `std::env::current_exe()`.
 
 use std::path::{Path, PathBuf};
-use std::process::{Command, Stdio};
+use std::process::{Child, Command, ExitStatus, Stdio};
 use std::time::{Duration, Instant};
 
 use crate::util::json::{parse as json_parse, Json};
@@ -377,6 +380,373 @@ pub fn guard_abort(bin: &Path, opts: &FaultOpts) -> anyhow::Result<Scenario> {
     Ok(s)
 }
 
+/// Split a NaN burst across a checkpoint boundary. The guard's LR scale
+/// and consecutive-bad streak must ride the checkpoint: leg A ends
+/// mid-backoff (scale 0.25, streak 2); leg B resumes straight into two
+/// more NaN steps and must abort at the *combined* streak of 4 — which
+/// can only happen if the checkpoint carried the streak; leg C resumes
+/// healthy and the restored 0.25 scale must recover by doublings,
+/// visible per step in `metrics.csv`.
+pub fn resume_mid_backoff(bin: &Path, opts: &FaultOpts) -> anyhow::Result<Scenario> {
+    let name = "resume-mid-backoff".to_string();
+    let dir = opts.out.join(&name);
+    fresh_dir(&dir)?;
+    // the step arithmetic below needs room for 3 post-resume steps
+    let ce = opts.checkpoint_every.max(3);
+    let t0 = Instant::now();
+
+    // leg A: two NaN steps right before the final checkpoint, so the
+    // ckpt at step 2ce is stamped with scale 0.25 and streak 2
+    let mut a = opts.clone();
+    a.steps = 2 * ce;
+    a.checkpoint_every = ce;
+    let mut cmd = train_cmd(bin, &a, &dir, false);
+    cmd.arg("--set").arg("train.guard_max_bad=4");
+    cmd.env("RMNP_FAULT_NAN_STEPS", format!("{},{}", 2 * ce - 2, 2 * ce - 1));
+    let (ok, text, _) = run_child(cmd)?;
+    let mut s = Scenario { name, passed: true, detail: String::new(), seconds: 0.0 };
+    check(&mut s, ok, || format!("leg A (burst before checkpoint) failed:\n{text}"));
+
+    // leg B: resume into two more NaN steps — restored streak 2 plus a
+    // fresh 2 hits guard_max_bad=4 on the second resumed step
+    let mut b = opts.clone();
+    b.steps = 3 * ce;
+    b.checkpoint_every = ce;
+    let mut cmd = train_cmd(bin, &b, &dir, true);
+    cmd.arg("--set").arg("train.guard_max_bad=4");
+    cmd.env("RMNP_FAULT_NAN_STEPS", format!("{},{}", 2 * ce, 2 * ce + 1));
+    let (ok, text, _) = run_child(cmd)?;
+    check(&mut s, !ok, || {
+        "leg B should abort on the combined streak but exited 0 \
+         (streak was not restored from the checkpoint)"
+            .into()
+    });
+    check(&mut s, !text.contains("panicked"), || "leg B abort path panicked".into());
+    check(&mut s, text.contains("anomal"), || {
+        format!("leg B abort does not explain the anomaly:\n{text}")
+    });
+    let abort_step = summary_num(&dir, "abort_step").unwrap_or(-1.0);
+    check(&mut s, abort_step == (2 * ce + 1) as f64, || {
+        format!("leg B aborted at step {abort_step}, expected {}", 2 * ce + 1)
+    });
+
+    // leg C: resume healthy — lr_scale must read 0.25, 0.5, 1.0 over the
+    // three resumed steps
+    let mut c = opts.clone();
+    c.steps = 3 * ce;
+    c.checkpoint_every = ce;
+    let mut cmd = train_cmd(bin, &c, &dir, true);
+    cmd.arg("--set").arg("train.guard_max_bad=4");
+    let (ok, text, _) = run_child(cmd)?;
+    check(&mut s, ok, || format!("leg C (healthy resume) failed:\n{text}"));
+    let csv = crate::coordinator::metrics::CsvData::read(&dir.join("metrics.csv"))?;
+    let step_col = csv.column("step")?;
+    let scale_col = csv.column("lr_scale")?;
+    let scale_at = |step: usize| -> Option<f64> {
+        step_col.iter().position(|&v| v == step as f64).map(|i| scale_col[i])
+    };
+    for (step, want) in [(2 * ce, 0.25), (2 * ce + 1, 0.5), (2 * ce + 2, 1.0)] {
+        check(&mut s, scale_at(step) == Some(want), || {
+            format!("lr_scale at step {step} is {:?}, expected {want}", scale_at(step))
+        });
+    }
+    let steps_run = summary_num(&dir, "steps_run").unwrap_or(-1.0);
+    check(&mut s, steps_run == ce as f64, || {
+        format!("leg C steps_run={steps_run}, expected {ce} (resume from step {})", 2 * ce)
+    });
+    s.seconds = t0.elapsed().as_secs_f64();
+    if s.passed {
+        s.detail = format!(
+            "restored streak aborted at step {}; healthy resume recovered 0.25 → 0.5 → 1.0",
+            2 * ce + 1
+        );
+    }
+    Ok(s)
+}
+
+/// Shared coordinator invocation for the distributed scenarios: always
+/// 2 data shards (so worker count never changes the math and runs stay
+/// bit-comparable), an OS-assigned port, and a tight death deadline so
+/// redistribution happens within the scenario's budget.
+fn coordinator_cmd(
+    bin: &Path,
+    opts: &FaultOpts,
+    dir: &Path,
+    workers: usize,
+    resume: bool,
+) -> Command {
+    let mut cmd = Command::new(bin);
+    cmd.arg("coordinator")
+        .arg("--set")
+        .arg(format!("train.steps={}", opts.steps))
+        .arg("--set")
+        .arg(format!("train.checkpoint_every={}", opts.checkpoint_every))
+        .arg("--set")
+        .arg(format!("train.seed={}", opts.seed))
+        .arg("--set")
+        .arg(format!("out.dir={}", dir.display()))
+        .arg("--set")
+        .arg(format!("dist.workers={workers}"))
+        .arg("--set")
+        .arg("dist.shards=2")
+        .arg("--set")
+        .arg("dist.bind=127.0.0.1:0")
+        .arg("--set")
+        .arg("dist.deadline_ms=1500")
+        .env_remove("RMNP_FAULT_NAN_STEPS");
+    if resume {
+        cmd.arg("--resume");
+    }
+    cmd
+}
+
+fn worker_cmd(bin: &Path, addr: &str, id: &str) -> Command {
+    let mut cmd = Command::new(bin);
+    cmd.arg("worker")
+        .arg("--connect")
+        .arg(addr)
+        .arg("--id")
+        .arg(id)
+        .env_remove("RMNP_FAULT_NAN_STEPS");
+    cmd
+}
+
+/// Poll for the coordinator's published `coordinator.addr` (the bind uses
+/// port 0, so only the coordinator knows the real port). Bails if the
+/// coordinator exits first.
+fn wait_addr(dir: &Path, coord: &mut Child) -> anyhow::Result<String> {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        if let Ok(text) = std::fs::read_to_string(dir.join("coordinator.addr")) {
+            let text = text.trim();
+            if !text.is_empty() {
+                return Ok(text.to_string());
+            }
+        }
+        if let Some(status) = coord.try_wait()? {
+            anyhow::bail!("coordinator exited ({status}) before publishing its address");
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "coordinator did not publish its address within 60s"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Wait for a child with a hard timeout; a child that overstays is
+/// SIGKILLed and reported as an infrastructure error.
+fn wait_exit(child: &mut Child, secs: u64, what: &str) -> anyhow::Result<ExitStatus> {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        if let Some(status) = child.try_wait()? {
+            return Ok(status);
+        }
+        if Instant::now() > deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            anyhow::bail!("{what} did not exit within {secs}s");
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Run an uninterrupted 1-worker distributed job and return its final
+/// checkpoint bytes — the gold value for the dist recovery scenarios.
+/// (2 shards on 1 worker, matching [`coordinator_cmd`], so the reduction
+/// is bit-identical to any worker count at the same shard count.)
+pub fn dist_reference_bytes(bin: &Path, opts: &FaultOpts) -> anyhow::Result<Vec<u8>> {
+    let dir = opts.out.join("dist-reference");
+    fresh_dir(&dir)?;
+    let mut cmd = coordinator_cmd(bin, opts, &dir, 1, false);
+    cmd.stdout(Stdio::null()).stderr(Stdio::null());
+    let mut coord = cmd.spawn()?;
+    let addr = wait_addr(&dir, &mut coord)?;
+    let mut cmd = worker_cmd(bin, &addr, "ref0");
+    cmd.stdout(Stdio::null()).stderr(Stdio::null());
+    let mut worker = cmd.spawn()?;
+    let cs = wait_exit(&mut coord, 180, "dist-reference coordinator")?;
+    let ws = wait_exit(&mut worker, 30, "dist-reference worker")?;
+    anyhow::ensure!(cs.success(), "dist-reference coordinator exited {cs}");
+    anyhow::ensure!(ws.success(), "dist-reference worker exited {ws}");
+    let bytes = std::fs::read(final_ckpt(opts, &dir))?;
+    Ok(bytes)
+}
+
+/// SIGKILL one of two workers after the first durable checkpoint: the
+/// coordinator must notice via the missed heartbeat deadline, hand the
+/// dead rank's shard to the survivor, restart the interrupted step, and
+/// still finish byte-exact against the 1-worker dist reference.
+pub fn dist_worker_kill(
+    bin: &Path,
+    opts: &FaultOpts,
+    reference: &[u8],
+) -> anyhow::Result<Scenario> {
+    let name = "dist-worker-kill".to_string();
+    let dir = opts.out.join(&name);
+    fresh_dir(&dir)?;
+    let t0 = Instant::now();
+    let mut cmd = coordinator_cmd(bin, opts, &dir, 2, false);
+    cmd.stdout(Stdio::null()).stderr(Stdio::null());
+    let mut coord = cmd.spawn()?;
+    let addr = wait_addr(&dir, &mut coord)?;
+    let spawn_worker = |id: &str| -> anyhow::Result<Child> {
+        let mut cmd = worker_cmd(bin, &addr, id);
+        cmd.stdout(Stdio::null()).stderr(Stdio::null());
+        Ok(cmd.spawn()?)
+    };
+    let mut w0 = spawn_worker("w0")?;
+    let mut w1 = spawn_worker("w1")?;
+
+    // kill the second worker right after the first durable checkpoint,
+    // i.e. mid-run with committed progress behind it
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        if !ckpt_files(&dir)?.is_empty() {
+            break;
+        }
+        if let Some(status) = coord.try_wait()? {
+            let _ = w0.kill();
+            let _ = w1.kill();
+            let _ = w0.wait();
+            let _ = w1.wait();
+            anyhow::bail!("{name}: coordinator exited ({status}) before the first checkpoint");
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "{name}: no checkpoint appeared within 120s"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut s = Scenario { name, passed: true, detail: String::new(), seconds: 0.0 };
+    let landed = w1.try_wait()?.is_none();
+    check(&mut s, landed, || "victim worker exited before the kill could land".into());
+    if landed {
+        w1.kill()?; // SIGKILL: no abort report — the deadline must catch it
+    }
+    let _ = w1.wait();
+
+    let cs = wait_exit(&mut coord, 180, "coordinator (after worker kill)")?;
+    check(&mut s, cs.success(), || format!("coordinator exited {cs} after the worker kill"));
+    let ws = wait_exit(&mut w0, 30, "surviving worker")?;
+    check(&mut s, ws.success(), || format!("surviving worker exited {ws}"));
+    s.seconds = t0.elapsed().as_secs_f64();
+    let final_bytes = std::fs::read(final_ckpt(opts, &dir)).unwrap_or_default();
+    check(&mut s, final_bytes == reference, || {
+        "final checkpoint differs from the 1-worker dist reference".into()
+    });
+    let deaths = summary_num(&dir, "deaths").unwrap_or(-1.0);
+    check(&mut s, deaths == 1.0, || format!("summary deaths={deaths}, expected 1"));
+    let steps_run = summary_num(&dir, "steps_run").unwrap_or(-1.0);
+    check(&mut s, steps_run == opts.steps as f64, || {
+        format!("steps_run={steps_run}, expected {} (no resume happened)", opts.steps)
+    });
+    if s.passed {
+        s.detail =
+            "kill absorbed: shard redistributed, 1 death, byte-exact vs 1-worker reference".into();
+    }
+    Ok(s)
+}
+
+/// SIGKILL the coordinator mid-run: both workers must exit *cleanly*
+/// (nonzero, naming the coordinator, never a panic), and a restarted
+/// `--resume` coordinator plus a fresh worker fleet must finish the run
+/// byte-exact from the newest validated checkpoint.
+pub fn dist_coordinator_kill(
+    bin: &Path,
+    opts: &FaultOpts,
+    reference: &[u8],
+) -> anyhow::Result<Scenario> {
+    let name = "dist-coordinator-kill".to_string();
+    let dir = opts.out.join(&name);
+    fresh_dir(&dir)?;
+    let t0 = Instant::now();
+    let mut cmd = coordinator_cmd(bin, opts, &dir, 2, false);
+    cmd.stdout(Stdio::null()).stderr(Stdio::null());
+    let mut coord = cmd.spawn()?;
+    let addr = wait_addr(&dir, &mut coord)?;
+    // workers keep their pipes: the checks below read their complaints
+    let spawn_piped = |id: &str| -> anyhow::Result<Child> {
+        let mut cmd = worker_cmd(bin, &addr, id);
+        cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+        Ok(cmd.spawn()?)
+    };
+    let w0 = spawn_piped("w0")?;
+    let w1 = spawn_piped("w1")?;
+
+    // SIGKILL the coordinator right after the first durable checkpoint
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        if !ckpt_files(&dir)?.is_empty() {
+            break;
+        }
+        if let Some(status) = coord.try_wait()? {
+            anyhow::bail!("{name}: coordinator exited ({status}) before the first checkpoint");
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "{name}: no checkpoint appeared within 120s"
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    coord.kill()?;
+    let _ = coord.wait();
+
+    let mut s = Scenario { name, passed: true, detail: String::new(), seconds: 0.0 };
+    for (label, mut w) in [("w0", w0), ("w1", w1)] {
+        let status = wait_exit(&mut w, 60, &format!("worker {label} after coordinator kill"))?;
+        let out = w.wait_with_output()?;
+        let mut text = String::from_utf8_lossy(&out.stdout).into_owned();
+        text.push_str(&String::from_utf8_lossy(&out.stderr));
+        check(&mut s, !status.success(), || {
+            format!("worker {label} exited 0 despite the dead coordinator")
+        });
+        check(&mut s, !text.contains("panicked"), || format!("worker {label} panicked:\n{text}"));
+        check(&mut s, text.to_lowercase().contains("coordinator"), || {
+            format!("worker {label} error does not name the coordinator:\n{text}")
+        });
+    }
+
+    // restart: the stale published address must not mislead the fresh
+    // fleet, and --resume must pick up the newest validated checkpoint
+    std::fs::remove_file(dir.join("coordinator.addr"))?;
+    let mut cmd = coordinator_cmd(bin, opts, &dir, 2, true);
+    cmd.stdout(Stdio::null()).stderr(Stdio::null());
+    let mut coord = cmd.spawn()?;
+    let addr = wait_addr(&dir, &mut coord)?;
+    let spawn_quiet = |id: &str| -> anyhow::Result<Child> {
+        let mut cmd = worker_cmd(bin, &addr, id);
+        cmd.stdout(Stdio::null()).stderr(Stdio::null());
+        Ok(cmd.spawn()?)
+    };
+    let mut r0 = spawn_quiet("w0-resumed")?;
+    let mut r1 = spawn_quiet("w1-resumed")?;
+    let cs = wait_exit(&mut coord, 180, "restarted coordinator")?;
+    check(&mut s, cs.success(), || format!("restarted coordinator exited {cs}"));
+    let s0 = wait_exit(&mut r0, 30, "resumed worker w0")?;
+    let s1 = wait_exit(&mut r1, 30, "resumed worker w1")?;
+    check(&mut s, s0.success() && s1.success(), || {
+        format!("resumed workers exited {s0} / {s1}")
+    });
+    s.seconds = t0.elapsed().as_secs_f64();
+    let final_bytes = std::fs::read(final_ckpt(opts, &dir)).unwrap_or_default();
+    check(&mut s, final_bytes == reference, || {
+        "resumed final checkpoint differs from the 1-worker dist reference".into()
+    });
+    // steps_run < steps proves the restart resumed rather than silently
+    // rerunning from scratch (bytes alone cannot tell the two apart)
+    let steps_run = summary_num(&dir, "steps_run").unwrap_or(-1.0);
+    check(&mut s, steps_run > 0.0 && steps_run < opts.steps as f64, || {
+        format!("steps_run={steps_run} — looks like a restart from scratch")
+    });
+    if s.passed {
+        s.detail = format!(
+            "workers exited cleanly naming the coordinator; resumed {steps_run:.0} steps, byte-exact"
+        );
+    }
+    Ok(s)
+}
+
 fn check(s: &mut Scenario, ok: bool, detail: impl FnOnce() -> String) {
     if s.passed && !ok {
         s.passed = false;
@@ -388,6 +758,13 @@ fn check(s: &mut Scenario, ok: bool, detail: impl FnOnce() -> String) {
 /// (spawn errors, missing files) surface as `Err`; check failures come
 /// back as `passed: false` rows so the caller can report them all.
 pub fn run_all(bin: &Path, opts: &FaultOpts) -> anyhow::Result<Vec<Scenario>> {
+    run_filtered(bin, opts, "")
+}
+
+/// Run every scenario whose name contains `filter` (`""` = all). The
+/// reference runs are only paid for when a selected scenario needs them
+/// — `--scenarios dist` skips the single-process reference entirely.
+pub fn run_filtered(bin: &Path, opts: &FaultOpts, filter: &str) -> anyhow::Result<Vec<Scenario>> {
     anyhow::ensure!(
         opts.checkpoint_every > 0
             && opts.steps % opts.checkpoint_every == 0
@@ -398,15 +775,44 @@ pub fn run_all(bin: &Path, opts: &FaultOpts) -> anyhow::Result<Vec<Scenario>> {
         opts.checkpoint_every
     );
     std::fs::create_dir_all(&opts.out)?;
-    let reference = reference_bytes(bin, opts)?;
+    let want = |name: &str| name.contains(filter);
     let mut rows = Vec::new();
-    for round in 0..opts.kills.max(1) as u64 {
-        rows.push(sigkill_mid_train(bin, opts, &reference, round)?);
+    if (0..opts.kills.max(1) as u64).any(|round| want(&format!("sigkill-{round}")))
+        || want("truncate-latest")
+        || want("bitflip-latest")
+    {
+        let reference = reference_bytes(bin, opts)?;
+        for round in 0..opts.kills.max(1) as u64 {
+            if want(&format!("sigkill-{round}")) {
+                rows.push(sigkill_mid_train(bin, opts, &reference, round)?);
+            }
+        }
+        if want("truncate-latest") {
+            rows.push(corrupted_latest(bin, opts, &reference, Corruption::Truncate)?);
+        }
+        if want("bitflip-latest") {
+            rows.push(corrupted_latest(bin, opts, &reference, Corruption::BitFlip)?);
+        }
     }
-    rows.push(corrupted_latest(bin, opts, &reference, Corruption::Truncate)?);
-    rows.push(corrupted_latest(bin, opts, &reference, Corruption::BitFlip)?);
-    rows.push(nan_burst(bin, opts)?);
-    rows.push(guard_abort(bin, opts)?);
+    if want("nan-burst") {
+        rows.push(nan_burst(bin, opts)?);
+    }
+    if want("guard-abort") {
+        rows.push(guard_abort(bin, opts)?);
+    }
+    if want("resume-mid-backoff") {
+        rows.push(resume_mid_backoff(bin, opts)?);
+    }
+    if want("dist-worker-kill") || want("dist-coordinator-kill") {
+        let reference = dist_reference_bytes(bin, opts)?;
+        if want("dist-worker-kill") {
+            rows.push(dist_worker_kill(bin, opts, &reference)?);
+        }
+        if want("dist-coordinator-kill") {
+            rows.push(dist_coordinator_kill(bin, opts, &reference)?);
+        }
+    }
+    anyhow::ensure!(!rows.is_empty(), "no fault scenario matches filter `{filter}`");
     Ok(rows)
 }
 

@@ -29,6 +29,7 @@
 //! | [`model`] | architecture blocks (attention/gated-MLP/SSM/conv) behind `ModelArch` |
 //! | [`runtime`] | training backends: native (model layer + StepPlan) and PJRT |
 //! | [`coordinator`] | training loop, schedules, metrics, checkpoints, sweeps |
+//! | [`dist`] | data-parallel training over a fault-tolerant TCP coordinator |
 //! | [`analysis`] | dominance ratios, smoothing, paper-style reports |
 //! | [`exp`] | one harness per paper table/figure |
 //! | [`bench`] | micro-benchmark harness + JSON perf reports |
@@ -53,6 +54,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod exp;
 pub mod model;
 pub mod optim;

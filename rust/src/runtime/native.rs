@@ -136,6 +136,69 @@ impl NativeBackend {
     fn stamp(&self) -> String {
         format!("{STAMP_PREFIX}{}:{}", self.arch.arch().name(), self.spec().tag)
     }
+
+    /// Forward/backward only: compute the batch loss and the *raw*
+    /// (unclipped) gradient, flattened in the plan's scheduling order.
+    ///
+    /// This is the distributed worker's half-step — clipping and the
+    /// anomaly gate happen centrally on the shard-averaged gradient, so
+    /// they must not run here. Parameters, momentum, and the step counter
+    /// are untouched. The flattening order matches
+    /// [`NativeBackend::apply_flat_grads`] and is deterministic for a
+    /// given model tag (the plan schedules by cost, not by thread
+    /// timing).
+    pub fn grad_batch(&mut self, batch: &Batch) -> anyhow::Result<(f32, Vec<f32>)> {
+        let arch = &mut self.arch;
+        let idx = &self.idx;
+        let plan = &self.plan;
+        let total = plan.total_elems();
+        let (loss, flat) = plan.with_all_tasks(|tasks| -> anyhow::Result<(f64, Vec<f32>)> {
+            arch.load_batch(tasks, idx, batch)?;
+            let mut loss = arch.forward(tasks, idx);
+            arch.backward(tasks, idx);
+            if crate::util::fault::nan_grads_now() {
+                // same test-only poison hook as `step_gated`, so the
+                // distributed guard path is exercisable end to end
+                loss = f64::NAN;
+                for t in tasks.iter_mut() {
+                    t.grad.data_mut().fill(f32::NAN);
+                }
+            }
+            let mut flat = Vec::with_capacity(total);
+            for t in tasks.iter() {
+                flat.extend_from_slice(t.grad.data());
+            }
+            Ok((loss, flat))
+        })?;
+        Ok((loss as f32, flat))
+    }
+
+    /// Load an externally reduced flat gradient (scheduling order, same
+    /// layout [`NativeBackend::grad_batch`] produces) into the plan's
+    /// gradient buffers and take one optimizer step at `lr`.
+    ///
+    /// The gradient is applied exactly as given — no clipping, no gating;
+    /// the coordinator already did both. Advances the step counter like a
+    /// normal applied step.
+    pub fn apply_flat_grads(&mut self, flat: &[f32], lr: f32) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            flat.len() == self.total_elems(),
+            "flat gradient has {} elements, model has {}",
+            flat.len(),
+            self.total_elems()
+        );
+        self.plan.with_all_tasks(|tasks| {
+            let mut off = 0usize;
+            for t in tasks.iter_mut() {
+                let n = t.grad.data().len();
+                t.grad.data_mut().copy_from_slice(&flat[off..off + n]);
+                off += n;
+            }
+        });
+        self.plan.step_all(lr);
+        self.steps += 1;
+        Ok(())
+    }
 }
 
 impl TrainBackend for NativeBackend {
@@ -496,6 +559,51 @@ mod tests {
         b.step(&Batch::Tokens(&toks2), 3e-3).unwrap();
         assert_eq!(b.export_state().unwrap(), c.export_state().unwrap());
         assert_eq!(gm.loss, m.loss, "gate decision must not change the math");
+    }
+
+    #[test]
+    fn grad_batch_plus_apply_matches_step_bit_exactly() {
+        // the distributed split of a step — raw grads out, centrally
+        // clipped average back in — must reproduce the fused single
+        // process step() bit for bit when the "average" is one shard
+        for optimizer in ["rmnp", "muon", "adamw"] {
+            let mut a = NativeBackend::new("gpt2_tiny", optimizer, 17, 2).unwrap();
+            let mut b = NativeBackend::new("gpt2_tiny", optimizer, 17, 1).unwrap();
+            for s in 0..3u64 {
+                let toks = token_batch(a.spec(), 400 + s);
+                let ma = a.step(&Batch::Tokens(&toks), 3e-3).unwrap();
+                let (loss, grads) = b.grad_batch(&Batch::Tokens(&toks)).unwrap();
+                let (mb, avg) =
+                    crate::dist::reduce_shards(&[(loss, grads)], CLIP_NORM).unwrap();
+                b.apply_flat_grads(&avg, 3e-3).unwrap();
+                assert_eq!(ma.loss.to_bits(), mb.loss.to_bits(), "{optimizer} step {s}");
+                assert_eq!(ma.grad_norm.to_bits(), mb.grad_norm.to_bits());
+                assert_eq!(ma.clipped, mb.clipped);
+            }
+            assert_eq!(a.steps_taken(), b.steps_taken());
+            assert_eq!(
+                a.export_state().unwrap(),
+                b.export_state().unwrap(),
+                "{optimizer}: split step diverged from fused step"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_batch_is_pure_and_apply_checks_length() {
+        let mut b = NativeBackend::new("gpt2_tiny", "rmnp", 23, 1).unwrap();
+        let toks = token_batch(b.spec(), 55);
+        let before = b.export_state().unwrap();
+        let (l1, g1) = b.grad_batch(&Batch::Tokens(&toks)).unwrap();
+        let (l2, g2) = b.grad_batch(&Batch::Tokens(&toks)).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits(), "grad_batch must be deterministic");
+        assert_eq!(g1, g2);
+        assert_eq!(g1.len(), b.total_elems());
+        assert_eq!(before, b.export_state().unwrap(), "grad_batch mutated state");
+        assert_eq!(b.steps_taken(), 0);
+        let err = b.apply_flat_grads(&g1[1..], 1e-3).unwrap_err().to_string();
+        assert!(err.contains("elements"), "{err}");
+        assert_eq!(b.steps_taken(), 0, "failed apply must not count a step");
     }
 
     #[test]

@@ -10,12 +10,21 @@
 //! This is for *transient* errors only: the helper retries every failure
 //! indiscriminately, so callers must only wrap operations that are safe
 //! to re-run (idempotent writes, opens, flushes).
+//!
+//! Each sleep is decorrelated with "equal jitter": the nominal
+//! exponential delay `d` becomes a uniform draw from `[d/2, d]`. Without
+//! it, N workers knocked off a dead coordinator at the same instant
+//! retry in lockstep and hammer the restarted coordinator in synchronized
+//! waves; the jitter spreads each wave over half its period while keeping
+//! the worst-case total wait bounded by the un-jittered schedule.
 
+use std::cell::Cell;
 use std::time::Duration;
 
 /// Run `op`, retrying up to `attempts` total tries with exponential
-/// backoff (`base`, `2*base`, `4*base`, …) between failures. Returns the
-/// first success, or the last error annotated with the attempt count.
+/// backoff (`base`, `2*base`, `4*base`, …, each equal-jittered into
+/// `[d/2, d]`) between failures. Returns the first success, or the last
+/// error annotated with the attempt count.
 pub fn with_retry<T>(
     what: &str,
     attempts: usize,
@@ -30,11 +39,12 @@ pub fn with_retry<T>(
             Ok(v) => return Ok(v),
             Err(e) => {
                 if attempt < attempts {
+                    let sleep = jittered(delay, jitter_unit());
                     crate::warnln!(
                         "{what} failed (attempt {attempt}/{attempts}), retrying \
-                         in {delay:?}: {e}"
+                         in {sleep:?}: {e}"
                     );
-                    std::thread::sleep(delay);
+                    std::thread::sleep(sleep);
                     delay = delay.saturating_mul(2);
                 }
                 last = Some(e);
@@ -45,6 +55,40 @@ pub fn with_retry<T>(
         "{what} failed after {attempts} attempts: {}",
         last.expect("at least one attempt ran")
     ))
+}
+
+/// Equal-jitter a nominal backoff delay: `d/2 + r·d/2` for `r ∈ [0, 1)`,
+/// i.e. uniform over `[d/2, d)`. Pure so the bounds are unit-testable;
+/// [`with_retry`] feeds it [`jitter_unit`] draws.
+pub(crate) fn jittered(delay: Duration, r: f64) -> Duration {
+    let half = delay / 2;
+    half + Duration::from_secs_f64(half.as_secs_f64() * r.clamp(0.0, 1.0))
+}
+
+/// A uniform draw from `[0, 1)` off a thread-local xorshift64* stream,
+/// lazily seeded from the clock and the PID — two workers forked in the
+/// same instant must still decorrelate, which is the entire point.
+fn jitter_unit() -> f64 {
+    thread_local! {
+        static STATE: Cell<u64> = const { Cell::new(0) };
+    }
+    STATE.with(|s| {
+        let mut x = s.get();
+        if x == 0 {
+            let nanos = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos() as u64)
+                .unwrap_or(0x9E37_79B9_7F4A_7C15);
+            // `| 1` keeps the seed nonzero (xorshift's absorbing state)
+            x = (nanos ^ ((std::process::id() as u64) << 32)) | 1;
+        }
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        s.set(x);
+        let out = x.wrapping_mul(0x2545_F491_4F6C_DD1D);
+        (out >> 11) as f64 / (1u64 << 53) as f64
+    })
 }
 
 /// The metrics-IO retry policy: 4 attempts, 10 ms base backoff.
@@ -96,6 +140,36 @@ mod tests {
         assert!(err.contains("metrics write"), "{err}");
         assert!(err.contains("3 attempts"), "{err}");
         assert!(err.contains("disk full (3)"), "{err}");
+    }
+
+    #[test]
+    fn jitter_stays_within_the_equal_jitter_bounds() {
+        let d = Duration::from_millis(100);
+        assert_eq!(jittered(d, 0.0), d / 2, "r = 0 is the half-delay floor");
+        assert!(jittered(d, 1.0) <= d, "r = 1 never exceeds the nominal delay");
+        // out-of-range draws clamp instead of widening the window
+        assert_eq!(jittered(d, -3.0), d / 2);
+        assert!(jittered(d, 7.0) <= d);
+        for i in 0..1000 {
+            let r = i as f64 / 1000.0;
+            let j = jittered(d, r);
+            assert!(j >= d / 2 && j <= d, "r={r}: {j:?} outside [d/2, d]");
+        }
+        // degenerate delay stays degenerate
+        assert_eq!(jittered(Duration::ZERO, 0.7), Duration::ZERO);
+    }
+
+    #[test]
+    fn jitter_unit_is_in_range_and_not_constant() {
+        let draws: Vec<f64> = (0..64).map(|_| jitter_unit()).collect();
+        for &r in &draws {
+            assert!((0.0..1.0).contains(&r), "{r}");
+        }
+        let first = draws[0];
+        assert!(
+            draws.iter().any(|&r| r != first),
+            "64 identical draws — the stream is not advancing"
+        );
     }
 
     #[test]

@@ -8,8 +8,11 @@
 //! 2. **Process-level scenarios** (child `rmnp` binaries via
 //!    `CARGO_BIN_EXE_rmnp`, reusing the `exp::faults` harness): SIGKILL
 //!    mid-train, truncated/bit-flipped newest checkpoint, NaN-gradient
-//!    bursts, and sustained-anomaly aborts. Every scenario must end in
-//!    byte-exact resumed training or a clean error.
+//!    bursts, sustained-anomaly aborts, guard state riding checkpoints
+//!    across a resume, and the distributed pair (worker SIGKILL →
+//!    redistribution, coordinator SIGKILL → clean worker exits + resumed
+//!    restart). Every scenario must end in byte-exact resumed training
+//!    or a clean error.
 //!
 //! Plus the format-compat leg: a v2 (pre-CRC) checkpoint still resumes a
 //! run end-to-end, bit-exactly.
@@ -130,6 +133,40 @@ fn nan_burst_is_skipped_and_recovers() {
 fn sustained_anomalies_abort_cleanly() {
     let opts = suite_opts("abort");
     let s = faults::guard_abort(rmnp_bin(), &opts).unwrap();
+    assert!(s.passed, "{}: {}", s.name, s.detail);
+}
+
+/// A NaN burst split across a checkpoint boundary: the guard's LR scale
+/// and abort streak must be persisted in the checkpoint and restored on
+/// resume — a resumed burst aborts at the combined streak, and a healthy
+/// resume recovers the scale by doublings.
+#[test]
+fn guard_state_rides_checkpoints_across_resume() {
+    let opts = suite_opts("backoff");
+    let s = faults::resume_mid_backoff(rmnp_bin(), &opts).unwrap();
+    assert!(s.passed, "{}: {}", s.name, s.detail);
+}
+
+/// SIGKILL one of two distributed workers mid-run: the coordinator must
+/// redistribute the dead rank's shard and finish byte-exact against an
+/// uninterrupted 1-worker distributed reference.
+#[test]
+fn dist_worker_kill_redistributes_byte_exact() {
+    let opts = suite_opts("dist-wk");
+    let reference = faults::dist_reference_bytes(rmnp_bin(), &opts).unwrap();
+    let s = faults::dist_worker_kill(rmnp_bin(), &opts, &reference).unwrap();
+    assert!(s.passed, "{}: {}", s.name, s.detail);
+}
+
+/// SIGKILL the distributed coordinator mid-run: workers exit cleanly
+/// naming the coordinator, and a restarted `--resume` coordinator with a
+/// fresh worker fleet finishes byte-exact from the newest validated
+/// checkpoint.
+#[test]
+fn dist_coordinator_kill_workers_exit_cleanly_and_resume_works() {
+    let opts = suite_opts("dist-ck");
+    let reference = faults::dist_reference_bytes(rmnp_bin(), &opts).unwrap();
+    let s = faults::dist_coordinator_kill(rmnp_bin(), &opts, &reference).unwrap();
     assert!(s.passed, "{}: {}", s.name, s.detail);
 }
 

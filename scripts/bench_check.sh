@@ -18,7 +18,11 @@
 #     run, when no prior-PR snapshot exists yet),
 #   * the anomaly guard's per-step overhead exceeds 15% (it only inspects
 #     two scalars, so anything above noise level is a regression), or the
-#     checkpoint walkback/roundtrip recovery flags come back false.
+#     checkpoint walkback/roundtrip recovery flags come back false,
+#   * the distributed coordinator's per-step overhead at worker count 1
+#     (localhost TCP, CRC framing both ways) exceeds 4x the plain local
+#     loop, or the dist run's final weights stop being bit-exact against
+#     the local loop.
 # On success it appends dated BENCH_precond / BENCH_train_step snapshots
 # to bench_history/ so the next PR has a trajectory baseline.
 set -euo pipefail
@@ -44,6 +48,9 @@ BENCH_REPEATS="${BENCH_REPEATS:-2}" cargo bench --bench host_train
 
 echo "== cargo bench --bench faults (guard overhead + checkpoint recovery) =="
 BENCH_REPEATS="${BENCH_REPEATS:-2}" cargo bench --bench faults
+
+echo "== cargo bench --bench dist (coordination overhead vs local loop) =="
+BENCH_REPEATS="${BENCH_REPEATS:-2}" cargo bench --bench dist
 
 echo "== checking BENCH_precond.json =="
 # newest prior-PR snapshot, if any (first run has none — that's fine)
@@ -181,6 +188,37 @@ if bad:
 print("faults envelope OK")
 EOF
 
+echo "== checking BENCH_dist.json =="
+python3 - <<'EOF'
+import json
+
+with open("BENCH_dist.json") as f:
+    doc = json.load(f)
+
+bad = []
+# worker count 1 pays registration + two localhost round-trips of the
+# full flat gradient per step; 4x the in-process loop is the generous
+# bar for shared runners — real regressions (e.g. an accidental extra
+# copy or a lost-frame retry loop on the happy path) blow far past it
+frac = doc["overhead_frac"]
+if frac > 4.0:
+    bad.append(f"dist coordination overhead {frac:.2f}x exceeds the 4x bar")
+if not doc["bitexact_vs_local"]:
+    bad.append("1-worker dist run is no longer bit-exact vs the local loop")
+
+print(f"  local loop  {doc['local_step_s']*1e3:.2f} ms/step")
+print(f"  dist (1w)   {doc['dist_step_s']*1e3:.2f} ms/step")
+print(f"  overhead    {frac*100:+.1f}%  ({doc['steps']} steps, {doc['shards']} shards, {doc['elems']} elems)")
+print(f"  bit-exact   {'yes' if doc['bitexact_vs_local'] else 'NO'}")
+
+if bad:
+    print("FAIL:")
+    for b in bad:
+        print("  " + b)
+    raise SystemExit(1)
+print("dist envelope OK")
+EOF
+
 # record this run for the next PR's trajectory gate (only after the gates
 # above passed — failing runs must not become baselines)
 mkdir -p "$ROOT/bench_history"
@@ -190,4 +228,5 @@ cp BENCH_precond.json "$ROOT/bench_history/${STAMP}_precond.json"
 cp BENCH_train_step.json "$ROOT/bench_history/${STAMP}_train_step.json"
 cp BENCH_host_train.json "$ROOT/bench_history/${STAMP}_host_train.json"
 cp BENCH_faults.json "$ROOT/bench_history/${STAMP}_faults.json"
-echo "recorded bench_history/${STAMP}_{precond,train_step,host_train,faults}.json"
+cp BENCH_dist.json "$ROOT/bench_history/${STAMP}_dist.json"
+echo "recorded bench_history/${STAMP}_{precond,train_step,host_train,faults,dist}.json"
