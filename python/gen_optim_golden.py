@@ -1,0 +1,298 @@
+#!/usr/bin/env python3
+"""Golden-vector generator for rust/tests/optim_conformance.rs.
+
+Replays every native registry optimizer's update math in plain Python
+(f64, stdlib only — no numpy needed) on f32-snapped seeded inputs, and
+writes the transcript to rust/tests/golden/optim_golden.json. The Rust
+conformance suite steps the fused f32 implementations on the same
+inputs and must land within 1e-5 relative error of these values.
+
+The constants and eps placements mirror rust/src/optim/ exactly:
+  - MATRIX_BETA / NORA_BETA2 / NORMUON_BETA2 = 0.95, WEIGHT_DECAY = 0.1
+  - ROW_EPS = 1e-7 row-norm floor, max(norm, eps) semantics
+    (python/compile/kernels/ref.py::rownorm_ref)
+  - NS5: x / (frobenius + 1e-7), transpose when rows > cols,
+    coefficients (3.4445, -4.7750, 2.0315)
+    (ref.py::newton_schulz_ref / NS_COEFFS)
+  - rms LR scale max(1, sqrt(m/n))
+
+Regenerate with:  python3 python/gen_optim_golden.py
+"""
+
+import json
+import math
+import os
+import random
+import struct
+
+BETA = 0.95
+BETA2 = 0.95  # NORA_BETA2 == NORMUON_BETA2 == 0.95
+WD = 0.1
+ROW_EPS = 1e-7
+NS_EPS = 1e-7
+NS_A, NS_B, NS_C = 3.4445, -4.7750, 2.0315
+MUON_NS_STEPS = 5
+TURBO_NS_STEPS = 3
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+
+LR = 0.05
+STEPS = 4
+SHAPES = [(4, 6), (6, 4)]
+
+
+def f32(x):
+    """Round x to the nearest binary32 (so inputs are exactly
+    representable on the Rust side)."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+# ---- tiny f64 matrix helpers (nested lists) --------------------------------
+
+
+def zeros(m, n):
+    return [[0.0] * n for _ in range(m)]
+
+
+def axpby(a, A, b, B):
+    """a*A + b*B, elementwise."""
+    return [[a * x + b * y for x, y in zip(ra, rb)] for ra, rb in zip(A, B)]
+
+
+def transpose(A):
+    return [list(col) for col in zip(*A)]
+
+
+def matmul(A, B):
+    bt = transpose(B)
+    return [[sum(x * y for x, y in zip(ra, cb)) for cb in bt] for ra in A]
+
+
+def frobenius(A):
+    return math.sqrt(sum(x * x for r in A for x in r))
+
+
+def row_sumsq(row):
+    return sum(x * x for x in row)
+
+
+def rownorm(A, eps):
+    """v / max(||v||, eps) per row — ref.py::rownorm_ref semantics."""
+    out = []
+    for row in A:
+        inv = 1.0 / max(math.sqrt(row_sumsq(row)), eps)
+        out.append([x * inv for x in row])
+    return out
+
+
+def newton_schulz(G, steps):
+    """Quintic NS (muon.rs::newton_schulz5_into semantics): transpose so
+    the Gram side is min(m,n), normalize by frobenius + eps, iterate
+    x <- a*x + (b*A + c*A^2) @ x with A = x x^T."""
+    m, n = len(G), len(G[0])
+    t = m > n
+    x = transpose(G) if t else [row[:] for row in G]
+    inv = 1.0 / (frobenius(x) + NS_EPS)
+    x = [[v * inv for v in row] for row in x]
+    for _ in range(steps):
+        gram = matmul(x, transpose(x))
+        poly = axpby(NS_B, gram, NS_C, matmul(gram, gram))
+        x = axpby(NS_A, x, 1.0, matmul(poly, x))
+    return transpose(x) if t else x
+
+
+def rms_scale(m, n):
+    return max(1.0, math.sqrt(m / n))
+
+
+# ---- optimizer steps (mirror rust/src/optim/<name>.rs) ---------------------
+
+
+def step_rmnp(st, W, G, lr, m, n):
+    st["momentum"] = axpby(BETA, st["momentum"], 1.0 - BETA, G)
+    scale = lr * rms_scale(m, n)
+    wfac = 1.0 - scale * WD
+    for i in range(m):
+        v = st["momentum"][i]
+        inv = 1.0 / max(math.sqrt(row_sumsq(v)), ROW_EPS)
+        W[i] = [wfac * w - scale * inv * vv for w, vv in zip(W[i], v)]
+
+
+def step_muon(st, W, G, lr, m, n):
+    st["momentum"] = axpby(BETA, st["momentum"], 1.0 - BETA, G)
+    d = newton_schulz(st["momentum"], MUON_NS_STEPS)
+    scale = lr * rms_scale(m, n)
+    for i in range(m):
+        W[i] = [w - scale * (dv + WD * w) for w, dv in zip(W[i], d[i])]
+
+
+def step_adamw(st, W, G, lr, m, n):
+    st["t"] += 1
+    bc1 = 1.0 - ADAM_B1 ** st["t"]
+    bc2 = 1.0 - ADAM_B2 ** st["t"]
+    for i in range(m):
+        for j in range(n):
+            g = G[i][j]
+            mi = ADAM_B1 * st["m"][i][j] + (1.0 - ADAM_B1) * g
+            vi = ADAM_B2 * st["v"][i][j] + (1.0 - ADAM_B2) * g * g
+            st["m"][i][j] = mi
+            st["v"][i][j] = vi
+            mhat = mi / bc1
+            vhat = vi / bc2
+            W[i][j] -= lr * (mhat / (math.sqrt(vhat) + ADAM_EPS) + WD * W[i][j])
+
+
+def step_nora(st, W, G, lr, m, n):
+    st["t"] += 1
+    bias = 1.0 - BETA2 ** st["t"]
+    st["momentum"] = axpby(BETA, st["momentum"], 1.0 - BETA, G)
+    scale = lr * rms_scale(m, n)
+    wfac = 1.0 - scale * WD
+    for i in range(m):
+        v = st["momentum"][i]
+        st["v"][i] = BETA2 * st["v"][i] + (1.0 - BETA2) * row_sumsq(v)
+        denom = max(math.sqrt(st["v"][i] / bias), ROW_EPS)
+        W[i] = [wfac * w - (scale / denom) * vv for w, vv in zip(W[i], v)]
+
+
+def step_normuon(st, W, G, lr, m, n):
+    st["momentum"] = axpby(BETA, st["momentum"], 1.0 - BETA, G)
+    d = newton_schulz(st["momentum"], MUON_NS_STEPS)
+    st["t"] += 1
+    bias = 1.0 - BETA2 ** st["t"]
+    sum_o = 0.0
+    sum_c = 0.0
+    cs = []
+    for i in range(m):
+        sq = row_sumsq(d[i])
+        st["v"][i] = BETA2 * st["v"][i] + (1.0 - BETA2) * sq / n
+        c = 1.0 / (math.sqrt(st["v"][i] / bias) + ROW_EPS)
+        cs.append(c)
+        sum_o += sq
+        sum_c += c * c * sq
+    gamma = math.sqrt(sum_o / sum_c) if sum_c > 0.0 else 1.0
+    scale = lr * rms_scale(m, n)
+    wfac = 1.0 - scale * WD
+    for i in range(m):
+        W[i] = [
+            wfac * w - scale * gamma * cs[i] * dv for w, dv in zip(W[i], d[i])
+        ]
+
+
+def step_turbo_muon(st, W, G, lr, m, n):
+    st["momentum"] = axpby(BETA, st["momentum"], 1.0 - BETA, G)
+    p = rownorm(st["momentum"], ROW_EPS)
+    d = newton_schulz(p, TURBO_NS_STEPS)
+    scale = lr * rms_scale(m, n)
+    for i in range(m):
+        W[i] = [w - scale * (dv + WD * w) for w, dv in zip(W[i], d[i])]
+
+
+def step_muown(st, W, G, lr, m, n):
+    st["momentum"] = axpby(BETA, st["momentum"], 1.0 - BETA, G)
+    d = newton_schulz(st["momentum"], MUON_NS_STEPS)
+    scale = lr * rms_scale(m, n)
+    wfac = 1.0 - scale * WD
+    for i in range(m):
+        inv = 1.0 / max(math.sqrt(row_sumsq(d[i])), ROW_EPS)
+        W[i] = [wfac * w - scale * inv * dv for w, dv in zip(W[i], d[i])]
+
+
+# name -> (step fn, fresh state fn, exported state buffers fn)
+OPTIMIZERS = {
+    "rmnp": (
+        step_rmnp,
+        lambda m, n: {"momentum": zeros(m, n)},
+        lambda st: {"momentum": flat(st["momentum"])},
+    ),
+    "muon": (
+        step_muon,
+        lambda m, n: {"momentum": zeros(m, n)},
+        lambda st: {"momentum": flat(st["momentum"])},
+    ),
+    "adamw": (
+        step_adamw,
+        lambda m, n: {"m": zeros(m, n), "v": zeros(m, n), "t": 0},
+        lambda st: {"m": flat(st["m"]), "v": flat(st["v"]), "t": st["t"]},
+    ),
+    "nora": (
+        step_nora,
+        lambda m, n: {"momentum": zeros(m, n), "v": [0.0] * m, "t": 0},
+        lambda st: {
+            "momentum": flat(st["momentum"]),
+            "v": list(st["v"]),
+            "t": st["t"],
+        },
+    ),
+    "normuon": (
+        step_normuon,
+        lambda m, n: {"momentum": zeros(m, n), "v": [0.0] * m, "t": 0},
+        lambda st: {
+            "momentum": flat(st["momentum"]),
+            "v": list(st["v"]),
+            "t": st["t"],
+        },
+    ),
+    "turbo_muon": (
+        step_turbo_muon,
+        lambda m, n: {"momentum": zeros(m, n)},
+        lambda st: {"momentum": flat(st["momentum"])},
+    ),
+    "muown": (
+        step_muown,
+        lambda m, n: {"momentum": zeros(m, n)},
+        lambda st: {"momentum": flat(st["momentum"])},
+    ),
+}
+
+
+def flat(A):
+    return [x for row in A for x in row]
+
+
+def main():
+    cases = []
+    for ci, (name, (step, init, export)) in enumerate(sorted(OPTIMIZERS.items())):
+        for si, (m, n) in enumerate(SHAPES):
+            rnd = random.Random(1000 + 10 * ci + si)
+            w0 = [[f32(rnd.uniform(-0.5, 0.5)) for _ in range(n)] for _ in range(m)]
+            grads = [
+                [[f32(rnd.uniform(-1.0, 1.0)) for _ in range(n)] for _ in range(m)]
+                for _ in range(STEPS)
+            ]
+            w = [row[:] for row in w0]
+            st = init(m, n)
+            for g in grads:
+                step(st, w, g, LR, m, n)
+            cases.append(
+                {
+                    "optimizer": name,
+                    "rows": m,
+                    "cols": n,
+                    "w0": flat(w0),
+                    "grads": [flat(g) for g in grads],
+                    "w_final": flat(w),
+                    "state": export(st),
+                }
+            )
+    doc = {
+        "_generator": "python/gen_optim_golden.py",
+        "lr": LR,
+        "steps": STEPS,
+        "cases": cases,
+    }
+    out = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "rust",
+        "tests",
+        "golden",
+        "optim_golden.json",
+    )
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as fh:
+        json.dump(doc, fh)
+        fh.write("\n")
+    print(f"wrote {out}: {len(cases)} cases ({STEPS} steps each)")
+
+
+if __name__ == "__main__":
+    main()

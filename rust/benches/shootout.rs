@@ -1,0 +1,38 @@
+//! `cargo bench --bench shootout` — the optimizer-zoo race
+//! ([`rmnp::exp::shootout`]) as a bench binary, so `scripts/bench_check.sh`
+//! can gate on its output: rmnp's isolated per-step preconditioning cost
+//! must not exceed muon's at d ≥ 512, and every registry optimizer must
+//! appear (as a case or an explicit skip) in `BENCH_shootout.json`.
+//!
+//! Env knobs: `BENCH_SHOOTOUT_STEPS` (matched budget, default 20),
+//! `BENCH_REPEATS` (step-cost samples, default 3), `RMNP_THREADS`,
+//! `RMNP_SIMD`.
+
+use rmnp::exp::shootout::{self, ShootoutOpts};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let opts = ShootoutOpts {
+        steps: env_usize("BENCH_SHOOTOUT_STEPS", 20),
+        repeats: env_usize("BENCH_REPEATS", 3),
+        ..ShootoutOpts::default()
+    };
+    println!(
+        "shootout bench: models={:?} steps={} threads={} simd={}",
+        opts.models,
+        opts.steps,
+        rmnp::tensor::kernels::num_threads(),
+        rmnp::tensor::simd::label()
+    );
+    let (shots, skips, costs) = shootout::run(&opts)?;
+    println!("{}", shootout::format_table(&opts, &shots, &skips, &costs));
+    shootout::write_report(&opts, &shots, &skips, &costs)?;
+    println!("wrote {}", opts.json.display());
+    Ok(())
+}

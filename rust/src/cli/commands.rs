@@ -253,6 +253,33 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
             println!("  {:.1}M params/s", elems as f64 / r.median() / 1e6);
             Ok(())
         }
+        // optimizer-zoo race: every registry optimizer, matched budget,
+        // native backend — no artifacts, runs in every build
+        Some("shootout") => {
+            use crate::tensor::simd;
+
+            if let Some(s) = args.flag("simd") {
+                simd::set_mode(simd::SimdMode::parse(s)?);
+            }
+            let mut sopts = exp::shootout::ShootoutOpts {
+                steps: args.usize_or("steps", 20),
+                seed: opts.seed,
+                repeats: args.usize_or("repeats", 2),
+                d: args.usize_or("d", 512),
+                json: args.str_or("json", "BENCH_shootout.json").into(),
+                ..exp::shootout::ShootoutOpts::default()
+            };
+            let models = args.list("models");
+            if !models.is_empty() {
+                sopts.models = models;
+            }
+            sopts.optimizers = args.list("optimizers");
+            let (shots, skips, costs) = exp::shootout::run(&sopts)?;
+            println!("{}", exp::shootout::format_table(&sopts, &shots, &skips, &costs));
+            exp::shootout::write_report(&sopts, &shots, &skips, &costs)?;
+            println!("wrote {}", sopts.json.display());
+            Ok(())
+        }
         // crash/fault-injection suite: spawns this same binary as the
         // victim child, so it needs no artifacts and runs in every build
         Some("faults") => {

@@ -5,7 +5,8 @@
 //! rmnp coordinator [--workers N] [--bind ADDR] [--resume]  distributed run
 //! rmnp worker  --connect ADDR [--id NAME]        one data-parallel worker
 //! rmnp exp     <precond|pretrain|sweep|dominance|extended|ablation-embed|
-//!               ssm|vision|cliprate|faults|all> [opts]  paper experiments
+//!               ssm|vision|cliprate|stepplan|shootout|faults|all>
+//!                                        [opts]         paper experiments
 //! rmnp report  <cliprate|curves> --runs DIR      re-render from saved CSVs
 //! rmnp data    <sample|encode> [opts]            data-pipeline utilities
 //! rmnp info                                      manifest summary
@@ -45,6 +46,9 @@ USAGE:
   rmnp exp cliprate       [--runs DIR]
   rmnp exp stepplan       [--d 512] [--layers 6] [--optimizer rmnp|muon|adamw]
                           [--steps N] [--threads N] [--simd auto|avx2|neon|scalar]
+  rmnp exp shootout       [--models TAG,TAG] [--optimizers a,b] [--steps 20]
+                          [--d 512] [--repeats N] [--json FILE] [--simd MODE]
+                          (every registry optimizer head-to-head, native backend)
   rmnp exp faults         [--kills N] [--steps N] [--checkpoint-every N]
                           [--scenarios SUBSTR] (filter: e.g. --scenarios dist)
   rmnp exp all            [--steps N] (scaled-down full suite)

@@ -11,6 +11,7 @@
 //! | [`pretrain::ssm`] / [`pretrain::vision`] | Figs 25/27, Tables 20/21 |
 //! | [`cliprate`] | Figs 29–32 (gradient clip-rate trajectories) |
 //! | [`faults`] | crash/fault-injection suite (not a paper table; guards the robustness claims) |
+//! | [`shootout`] | Table-1-style optimizer-zoo race (wall-clock vs loss per registry entry) |
 //!
 //! The training-loop harnesses (`pretrain`, `sweeps`) run on any
 //! [`TrainBackend`](crate::runtime::TrainBackend) — offline on the
@@ -26,6 +27,7 @@ pub mod dominance_exp;
 pub mod faults;
 pub mod precond;
 pub mod pretrain;
+pub mod shootout;
 pub mod sweeps;
 
 use std::path::PathBuf;

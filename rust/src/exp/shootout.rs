@@ -1,0 +1,435 @@
+//! `rmnp exp shootout` — the optimizer zoo raced head to head.
+//!
+//! The in-repo version of the paper's Table-1 comparison: every
+//! [registry](crate::optim::registry) optimizer runs the *same* model,
+//! corpus, seed, and step budget on the native backend, and the harness
+//! records wall-clock and final loss per (arch, optimizer) cell plus an
+//! isolated per-step optimizer cost at d ≥ 512 — the O(mn) row-norm
+//! family vs the O(mn·min(m,n)) Newton–Schulz family, measured instead
+//! of asserted. PJRT-only entries (shampoo/soap) are recorded as
+//! skipped, never silently dropped.
+//!
+//! Output: `BENCH_shootout.json` (envelope format, rendered by
+//! `scripts/bench_table.py` and gated by `scripts/bench_check.sh`: rmnp
+//! per-step cost must not exceed muon's at d ≥ 512) and a console
+//! table. Runs offline in every build — no artifacts, no `pjrt`
+//! feature.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::bench::bench_n;
+use crate::bench::report::{self, envelope, int, num, obj, text};
+use crate::config::DataSpec;
+use crate::data::corpus::token_source;
+use crate::data::images::ImageSource;
+use crate::optim::plan::OptState;
+use crate::optim::registry::{spec, MatrixOptimizer, OptSpec, REGISTRY};
+use crate::runtime::{Batch, BatchShape, NativeBackend, TrainBackend};
+use crate::tensor::Matrix;
+use crate::util::{Json, Rng};
+
+/// Shootout knobs (all have CLI flags on `rmnp exp shootout`).
+#[derive(Clone, Debug)]
+pub struct ShootoutOpts {
+    /// Model tags to race on (default: one attention + one gated-MLP
+    /// arch, the two families the paper's main table covers).
+    pub models: Vec<String>,
+    /// Optimizer names (empty = every registry entry).
+    pub optimizers: Vec<String>,
+    /// Matched step budget per run.
+    pub steps: usize,
+    /// Base RNG seed shared by every run.
+    pub seed: u64,
+    /// Samples for the isolated per-step cost measurement.
+    pub repeats: usize,
+    /// Hidden width for the per-step cost shape (`2d × d`; the
+    /// bench_check gate requires d ≥ 512).
+    pub d: usize,
+    /// Where the JSON report lands.
+    pub json: PathBuf,
+}
+
+impl Default for ShootoutOpts {
+    fn default() -> Self {
+        ShootoutOpts {
+            models: vec!["gpt2_tiny".to_string(), "llama_s60".to_string()],
+            optimizers: vec![],
+            steps: 20,
+            seed: 1234,
+            repeats: 2,
+            d: 512,
+            json: PathBuf::from("BENCH_shootout.json"),
+        }
+    }
+}
+
+/// One (model, optimizer) cell of the table.
+#[derive(Clone, Debug)]
+pub struct Shot {
+    /// Model tag.
+    pub model: String,
+    /// Architecture name the tag resolved to.
+    pub arch: &'static str,
+    /// Optimizer name.
+    pub optimizer: &'static str,
+    /// The registry default LR the run used.
+    pub lr: f64,
+    /// Parameter matrices in the plan.
+    pub params: usize,
+    /// Trainable elements.
+    pub elems: usize,
+    /// Total wall-clock for the budget.
+    pub seconds: f64,
+    /// `seconds / steps`.
+    pub step_s: f64,
+    /// Training loss at the last step.
+    pub final_loss: f32,
+}
+
+/// A registry entry the native shootout cannot run.
+#[derive(Clone, Debug)]
+pub struct Skip {
+    /// Optimizer name.
+    pub optimizer: &'static str,
+    /// Why it was skipped (surfaced in the table and the JSON).
+    pub reason: String,
+}
+
+/// Isolated fused-step cost for one optimizer at the gate shape.
+#[derive(Clone, Debug)]
+pub struct StepCost {
+    /// Optimizer name.
+    pub optimizer: &'static str,
+    /// Parameter rows (2d).
+    pub rows: usize,
+    /// Parameter cols (d).
+    pub cols: usize,
+    /// Median seconds per fused step, workspace warm.
+    pub step_median_s: f64,
+}
+
+fn data_for(model: &str) -> DataSpec {
+    if model.starts_with("llama") {
+        DataSpec::Zipf
+    } else if model.starts_with("ssm") {
+        DataSpec::Ngram
+    } else if model.starts_with("vision") {
+        DataSpec::Images
+    } else {
+        DataSpec::Markov
+    }
+}
+
+/// Drive one batch per step from the arch's natural corpus (same shape
+/// the training CLI uses), deterministic in `seed`.
+enum Feed {
+    Tokens { src: Box<dyn crate::data::TokenSource>, tokens: Vec<i32> },
+    Images { src: ImageSource, images: Vec<f32>, labels: Vec<i32> },
+}
+
+impl Feed {
+    fn new(backend: &NativeBackend, data: DataSpec, seed: u64) -> Self {
+        match backend.batch_shape() {
+            BatchShape::Tokens { rows, cols } => Feed::Tokens {
+                src: token_source(data, seed, 0),
+                tokens: vec![0i32; rows * cols],
+            },
+            BatchShape::Images { batch, hw, pixels } => Feed::Images {
+                src: ImageSource::new(10, hw, seed, 0),
+                images: vec![0.0f32; pixels],
+                labels: vec![0i32; batch],
+            },
+        }
+    }
+
+    fn step(&mut self, backend: &mut NativeBackend, lr: f32) -> anyhow::Result<f32> {
+        match self {
+            Feed::Tokens { src, tokens } => {
+                src.fill(tokens);
+                Ok(backend.step(&Batch::Tokens(tokens.as_slice()), lr)?.loss)
+            }
+            Feed::Images { src, images, labels } => {
+                let n = labels.len();
+                src.fill(n, images, labels);
+                let batch =
+                    Batch::Images { images: images.as_slice(), labels: labels.as_slice() };
+                Ok(backend.step(&batch, lr)?.loss)
+            }
+        }
+    }
+}
+
+/// Resolve the optimizer roster: explicit names (validated against the
+/// registry, unknown names are errors) or the whole registry.
+fn roster(names: &[String]) -> anyhow::Result<Vec<&'static OptSpec>> {
+    if names.is_empty() {
+        return Ok(REGISTRY.iter().collect());
+    }
+    names.iter().map(|n| spec(n)).collect()
+}
+
+/// Run the full shootout: every roster optimizer on every model at a
+/// matched step budget (same seed, same data stream, registry default
+/// LR), plus the isolated per-step cost sweep at the `2d × d` gate
+/// shape. Returns `(cells, skipped, step_costs)`.
+pub fn run(opts: &ShootoutOpts) -> anyhow::Result<(Vec<Shot>, Vec<Skip>, Vec<StepCost>)> {
+    anyhow::ensure!(opts.steps > 0, "shootout needs at least one step");
+    anyhow::ensure!(opts.d > 0, "shootout needs d >= 1");
+    let roster = roster(&opts.optimizers)?;
+    let skips: Vec<Skip> = roster
+        .iter()
+        .filter(|s| s.native.is_none())
+        .map(|s| Skip {
+            optimizer: s.name,
+            reason: "no native fused implementation (PJRT-artifact-only)".to_string(),
+        })
+        .collect();
+
+    let mut shots = Vec::new();
+    for model in &opts.models {
+        let data = data_for(model);
+        for sp in roster.iter().filter(|s| s.native.is_some()) {
+            let mut backend = NativeBackend::new(model, sp.name, opts.seed, 0)?;
+            let arch = backend.arch();
+            let mut feed = Feed::new(&backend, data, opts.seed);
+            let lr = sp.default_lr as f32;
+            let mut last = 0.0f32;
+            let t0 = Instant::now();
+            for _ in 0..opts.steps {
+                last = feed.step(&mut backend, lr)?;
+            }
+            let seconds = t0.elapsed().as_secs_f64();
+            anyhow::ensure!(
+                last.is_finite(),
+                "{model}/{} diverged at its registry default LR {lr}",
+                sp.name
+            );
+            println!(
+                "  [{model}/{arch}] {:<10} {} steps in {seconds:.3}s ({:.1}/s), loss {last:.3}",
+                sp.name,
+                opts.steps,
+                opts.steps as f64 / seconds.max(1e-12)
+            );
+            shots.push(Shot {
+                model: model.clone(),
+                arch,
+                optimizer: sp.name,
+                lr: sp.default_lr,
+                params: backend.n_params(),
+                elems: backend.total_elems(),
+                seconds,
+                step_s: seconds / opts.steps as f64,
+                final_loss: last,
+            });
+        }
+    }
+
+    let costs = step_costs(&roster, opts)?;
+    Ok((shots, skips, costs))
+}
+
+/// Time one fused optimizer step per roster optimizer on a `2d × d`
+/// parameter, workspace warm — the apples-to-apples preconditioning
+/// cost the bench_check gate compares (rmnp ≤ muon at d ≥ 512).
+fn step_costs(roster: &[&'static OptSpec], opts: &ShootoutOpts) -> anyhow::Result<Vec<StepCost>> {
+    let (rows, cols) = (2 * opts.d, opts.d);
+    let mut rng = Rng::new(opts.seed ^ 0x5353);
+    let grad = Matrix::randn(rows, cols, 0.02, &mut rng);
+    let mut costs = Vec::new();
+    for sp in roster.iter().filter(|s| s.native.is_some()) {
+        let kind = sp.native.expect("filtered to native entries");
+        let mut w = Matrix::randn(rows, cols, 0.02, &mut rng);
+        let mut state = OptState::new(kind, rows, cols);
+        let lr = sp.default_lr as f32;
+        state.step(&mut w, &grad, lr); // warm the workspace
+        let r = bench_n(&format!("shootout_{}_step", sp.name), 1, opts.repeats, || {
+            state.step(&mut w, &grad, lr);
+        });
+        costs.push(StepCost { optimizer: sp.name, rows, cols, step_median_s: r.median() });
+    }
+    Ok(costs)
+}
+
+/// Write the `BENCH_shootout.json` envelope (one JSON line: `cases`,
+/// `skipped`, `step_cost` sections plus the standard bench fields).
+pub fn write_report(
+    opts: &ShootoutOpts,
+    shots: &[Shot],
+    skips: &[Skip],
+    costs: &[StepCost],
+) -> anyhow::Result<()> {
+    let cases: Vec<Json> = shots
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("model", text(&c.model)),
+                ("arch", text(c.arch)),
+                ("optimizer", text(c.optimizer)),
+                ("lr", num(c.lr)),
+                ("params", int(c.params)),
+                ("elems", int(c.elems)),
+                ("seconds", num(c.seconds)),
+                ("step_median_s", num(c.step_s)),
+                ("steps_per_s", num(1.0 / c.step_s.max(1e-12))),
+                ("final_loss", num(c.final_loss as f64)),
+            ])
+        })
+        .collect();
+    let skipped: Vec<Json> = skips
+        .iter()
+        .map(|s| obj(vec![("optimizer", text(s.optimizer)), ("reason", text(&s.reason))]))
+        .collect();
+    let step_cost: Vec<Json> = costs
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("optimizer", text(c.optimizer)),
+                ("rows", int(c.rows)),
+                ("cols", int(c.cols)),
+                ("step_median_s", num(c.step_median_s)),
+                ("steps_per_s", num(1.0 / c.step_median_s.max(1e-12))),
+            ])
+        })
+        .collect();
+    let doc = envelope(
+        "shootout",
+        vec![
+            ("steps", int(opts.steps)),
+            ("seed", int(opts.seed as usize)),
+            ("cases", Json::Arr(cases)),
+            ("skipped", Json::Arr(skipped)),
+            ("step_cost", Json::Arr(step_cost)),
+        ],
+    );
+    report::write(&opts.json, &doc)
+}
+
+/// Render the console table: one block per model (wall-clock vs final
+/// loss at the matched budget), then the skipped entries and the
+/// isolated per-step costs.
+pub fn format_table(
+    opts: &ShootoutOpts,
+    shots: &[Shot],
+    skips: &[Skip],
+    costs: &[StepCost],
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "optimizer shootout — matched budget of {} steps, registry default LRs\n",
+        opts.steps
+    ));
+    for model in &opts.models {
+        let rows: Vec<&Shot> = shots.iter().filter(|s| &s.model == model).collect();
+        if rows.is_empty() {
+            continue;
+        }
+        out.push_str(&format!(
+            "\n[{model} / {}] ({} params, {} elems)\n",
+            rows[0].arch, rows[0].params, rows[0].elems
+        ));
+        out.push_str(&format!(
+            "{:<12} {:>9} {:>9} {:>10} {:>11}\n",
+            "optimizer", "lr", "wall(s)", "steps/s", "final loss"
+        ));
+        for s in rows {
+            out.push_str(&format!(
+                "{:<12} {:>9.1e} {:>9.3} {:>10.1} {:>11.4}\n",
+                s.optimizer,
+                s.lr,
+                s.seconds,
+                1.0 / s.step_s.max(1e-12),
+                s.final_loss
+            ));
+        }
+    }
+    if !skips.is_empty() {
+        out.push_str("\nskipped:\n");
+        for s in skips {
+            out.push_str(&format!("  {:<12} {}\n", s.optimizer, s.reason));
+        }
+    }
+    if !costs.is_empty() {
+        out.push_str(&format!(
+            "\nisolated fused-step cost at {}x{} (warm workspace):\n",
+            costs[0].rows, costs[0].cols
+        ));
+        for c in costs {
+            out.push_str(&format!(
+                "  {:<12} {:>10.3}ms/step\n",
+                c.optimizer,
+                c.step_median_s * 1e3
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roster_defaults_to_whole_registry_and_rejects_unknowns() {
+        assert_eq!(roster(&[]).unwrap().len(), REGISTRY.len());
+        let named = roster(&["nora".to_string(), "muon".to_string()]).unwrap();
+        assert_eq!(named.len(), 2);
+        assert!(roster(&["sgd".to_string()]).is_err());
+    }
+
+    #[test]
+    fn shootout_runs_every_registry_optimizer_on_a_tiny_model() {
+        let opts = ShootoutOpts {
+            models: vec!["gpt2_tiny".to_string()],
+            steps: 2,
+            repeats: 1,
+            d: 8, // keep the step-cost sweep cheap in the unit test
+            ..ShootoutOpts::default()
+        };
+        let (shots, skips, costs) = run(&opts).unwrap();
+        let native: Vec<&str> =
+            REGISTRY.iter().filter(|s| s.native.is_some()).map(|s| s.name).collect();
+        assert_eq!(shots.len(), native.len(), "one cell per native optimizer");
+        for name in &native {
+            assert!(shots.iter().any(|s| &s.optimizer == name), "missing {name}");
+            assert!(costs.iter().any(|c| &c.optimizer == name), "no cost for {name}");
+        }
+        // PJRT-only entries are reported, not dropped
+        let pjrt_only = REGISTRY.len() - native.len();
+        assert_eq!(skips.len(), pjrt_only);
+        assert!(skips.iter().any(|s| s.optimizer == "shampoo"));
+        for s in &shots {
+            assert!(s.final_loss.is_finite() && s.seconds > 0.0);
+        }
+        let table = format_table(&opts, &shots, &skips, &costs);
+        assert!(table.contains("gpt2_tiny") && table.contains("shampoo"));
+    }
+
+    #[test]
+    fn report_round_trips_to_json_line() {
+        let opts = ShootoutOpts {
+            json: std::env::temp_dir().join("rmnp_test_shootout.json"),
+            ..ShootoutOpts::default()
+        };
+        let shots = vec![Shot {
+            model: "gpt2_tiny".into(),
+            arch: "attention",
+            optimizer: "rmnp",
+            lr: 4e-3,
+            params: 4,
+            elems: 100,
+            seconds: 0.5,
+            step_s: 0.025,
+            final_loss: 2.5,
+        }];
+        let skips = vec![Skip { optimizer: "soap", reason: "x".into() }];
+        let costs =
+            vec![StepCost { optimizer: "rmnp", rows: 1024, cols: 512, step_median_s: 1e-3 }];
+        write_report(&opts, &shots, &skips, &costs).unwrap();
+        let raw = std::fs::read_to_string(&opts.json).unwrap();
+        for needle in ["\"bench\":\"shootout\"", "\"cases\"", "\"skipped\"", "\"step_cost\""] {
+            assert!(raw.contains(needle), "missing {needle} in {raw}");
+        }
+        std::fs::remove_file(&opts.json).ok();
+    }
+}

@@ -9,9 +9,16 @@ use crate::exp::ExpOpts;
 /// [registry](crate::optim::registry), mirroring the paper's tables at
 /// our scale: Muon/Shampoo sweep a higher range than RMNP/SOAP exactly
 /// as in Tables 9–13. Unknown optimizers are an error, not a default
-/// grid.
+/// grid — and so is a registry entry whose grid is empty (a sweep over
+/// zero points would silently produce an empty table).
 pub fn grid_for(optimizer: &str) -> anyhow::Result<Vec<f64>> {
-    Ok(crate::optim::registry::spec(optimizer)?.lr_grid.to_vec())
+    let spec = crate::optim::registry::spec(optimizer)?;
+    anyhow::ensure!(
+        !spec.lr_grid.is_empty(),
+        "optimizer `{optimizer}` has an empty LR grid in the registry; \
+         give its OptSpec real sweep points"
+    );
+    Ok(spec.lr_grid.to_vec())
 }
 
 /// Run one sweep table: all grid points for each optimizer on `model`.
@@ -80,6 +87,30 @@ mod tests {
             > rmnp.iter().cloned().fold(f64::MAX, f64::min));
         assert!(muon.len() >= 3 && rmnp.len() >= 3);
         assert!(grid_for("sgd").is_err(), "unknown optimizers are errors");
+    }
+
+    #[test]
+    fn every_registry_entry_has_a_complete_grid() {
+        // grid completeness: every entry (native or PJRT-only) must carry
+        // a real default LR and a non-empty sweep grid containing it
+        for s in crate::optim::registry::REGISTRY {
+            let grid = grid_for(s.name)
+                .unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            assert!(!grid.is_empty(), "{} grid empty", s.name);
+            assert!(s.default_lr > 0.0, "{} default_lr", s.name);
+            assert!(
+                grid.iter().any(|&lr| lr == s.default_lr),
+                "{}: default_lr {} not in its own grid {:?}",
+                s.name,
+                s.default_lr,
+                grid
+            );
+            assert!(
+                grid.iter().all(|&lr| lr > 0.0 && lr < 1.0),
+                "{}: implausible grid {grid:?}",
+                s.name
+            );
+        }
     }
 
     #[test]

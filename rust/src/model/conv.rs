@@ -80,10 +80,12 @@ impl ModelArch for ConvArch {
     }
 
     fn batch_shape(&self) -> BatchShape {
+        // `ImageSource` emits `(batch, 3, hw, hw)` RGB planes; the stem is
+        // single-channel, so `load_batch` collapses the three planes to one.
         BatchShape::Images {
             batch: self.spec.batch,
             hw: self.spec.hw,
-            pixels: self.spec.batch * self.spec.hw * self.spec.hw,
+            pixels: self.spec.batch * 3 * self.spec.hw * self.spec.hw,
         }
     }
 
@@ -127,14 +129,20 @@ impl ModelArch for ConvArch {
         };
         let px = spec.hw * spec.hw;
         anyhow::ensure!(
-            images.len() == spec.batch * px && labels.len() == spec.batch,
-            "image batch shape mismatch ({} pixels / {} labels, model wants {}×{px} / {})",
+            images.len() == spec.batch * 3 * px && labels.len() == spec.batch,
+            "image batch shape mismatch ({} pixels / {} labels, model wants {}×3×{px} / {})",
             images.len(),
             labels.len(),
             spec.batch,
             spec.batch
         );
-        self.x.copy_from_slice(images);
+        // collapse the RGB planes to the stem's single input channel
+        for (b, dst) in self.x.chunks_exact_mut(px).enumerate() {
+            let src = &images[b * 3 * px..(b + 1) * 3 * px];
+            for (i, d) in dst.iter_mut().enumerate() {
+                *d = (src[i] + src[px + i] + src[2 * px + i]) * (1.0 / 3.0);
+            }
+        }
         for (r, &l) in labels.iter().enumerate() {
             anyhow::ensure!((l as usize) < spec.classes, "label {l} out of range");
             self.targets[r] = l as usize;

@@ -21,7 +21,17 @@
 //! work-stealing in cost order) instead of threading inside each matmul —
 //! see `benches/step_plan.rs` and the `rmnp exp stepplan` CLI surface.
 //!
-//! The three states are unified behind the
+//! Beyond the paper's pair, the zoo carries the related-work family
+//! (`rmnp exp shootout` races them head to head): [`nora::NoraState`]
+//! (row normalization by a smoothed second-moment row norm),
+//! [`normuon::NorMuonState`] (Muon + neuron-wise second-moment
+//! normalization of the NS5 output), [`turbo_muon::TurboMuonState`]
+//! (row-norm pre-conditioning so NS needs fewer iterations), and
+//! [`muown::MuownState`] (Muon + exact row-norm control). All four
+//! compose the same fused primitives — `axpby_inplace`, `row_sumsq`,
+//! [`newton_schulz5_into`] — and stay allocation-free after warmup.
+//!
+//! The states are unified behind the
 //! [`registry::MatrixOptimizer`] trait (fused `step`, the `rms_scale`
 //! hook, named state export/import for checkpointing), and
 //! [`registry::REGISTRY`] is the single name table — default LRs, sweep
@@ -32,15 +42,23 @@
 pub mod adamw;
 pub mod lemmas;
 pub mod muon;
+pub mod muown;
+pub mod nora;
+pub mod normuon;
 pub mod plan;
 pub mod registry;
 pub mod rmnp;
+pub mod turbo_muon;
 
 pub use adamw::AdamWState;
 pub use muon::{newton_schulz5, newton_schulz5_into, newton_schulz5_naive, MuonState};
+pub use muown::MuownState;
+pub use nora::NoraState;
+pub use normuon::NorMuonState;
 pub use plan::{OptKind, OptState, ParamTask, StepPlan};
 pub use registry::{native_kind, spec, MatrixOptimizer, NamedState, OptSpec, REGISTRY};
 pub use rmnp::RmnpState;
+pub use turbo_muon::TurboMuonState;
 
 /// Muon/RMNP momentum coefficient (paper Appendix B).
 pub const MATRIX_BETA: f32 = 0.95;
@@ -53,6 +71,9 @@ pub const ROW_EPS: f32 = 1e-7;
 /// Frobenius-norm eps in NS5, added to the norm before the divide exactly
 /// as `ref.py::newton_schulz_ref` does.
 pub const NS_EPS: f32 = 1e-7;
+/// NS iterations per step for Muon/NorMuon/Muown (the paper uses 5);
+/// Turbo-Muon pre-normalizes and uses [`turbo_muon::TURBO_NS_STEPS`].
+pub const MUON_NS_STEPS: usize = 5;
 
 /// The RMS learning-rate shape correction max(1, sqrt(m/n)) (Eq. 17/18).
 pub fn rms_scale(rows: usize, cols: usize) -> f32 {

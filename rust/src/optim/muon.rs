@@ -11,7 +11,7 @@
 //! intermediate is materialized and one full memory pass per iteration is
 //! saved.
 
-use crate::optim::{rms_scale, MATRIX_BETA, NS_EPS, WEIGHT_DECAY};
+use crate::optim::{rms_scale, MATRIX_BETA, MUON_NS_STEPS, NS_EPS, WEIGHT_DECAY};
 use crate::tensor::{frobenius, Matrix, Workspace};
 
 /// Muon's quintic NS coefficients (Jordan et al., 2024) — must match
@@ -128,7 +128,7 @@ impl MuonState {
             momentum: Matrix::zeros(rows, cols),
             beta: MATRIX_BETA,
             weight_decay: WEIGHT_DECAY,
-            ns_steps: 5,
+            ns_steps: MUON_NS_STEPS,
             workspace: Workspace::new(),
         }
     }

@@ -1,0 +1,158 @@
+//! Muown: Muon with row-norm control — NS5 orthogonalization followed
+//! by an exact row-wise ℓ2 normalization of the update.
+//!
+//! Muon bounds the update's *spectral* norm but lets individual row
+//! norms drift with the momentum's row structure; Muown re-normalizes
+//! each row of the NS5 output before applying it, so every neuron's
+//! weight row moves by exactly `η·max(1,√(m/n))` per step (RMNP's
+//! Lemma A.1 geometry) while keeping the orthogonal *direction* NS5
+//! produces. The row-norm control is fused into the apply sweep — the
+//! per-row inverse norm folds into the `axpby` coefficient, so no
+//! normalized intermediate is materialized and the step is
+//! allocation-free after warmup (`tests/alloc.rs`).
+
+use crate::optim::muon::newton_schulz5_into;
+use crate::optim::{rms_scale, MATRIX_BETA, MUON_NS_STEPS, ROW_EPS, WEIGHT_DECAY};
+use crate::tensor::kernels::{self, row_sumsq};
+use crate::tensor::{Matrix, Workspace};
+
+/// Momentum state for one matrix parameter.
+///
+/// ```
+/// use rmnp::optim::MuownState;
+/// use rmnp::tensor::Matrix;
+/// let mut st = MuownState::new(2, 4);
+/// st.weight_decay = 0.0;
+/// let mut w = Matrix::zeros(2, 4);
+/// let g = Matrix::from_vec(2, 4, vec![1.0, -2.0, 3.0, 0.5, -1.0, 2.0, 0.25, 4.0]);
+/// st.step(&mut w, &g, 0.1);
+/// // row-norm control: every updated row moved by exactly lr
+/// for n in w.row_norms() {
+///     assert!((n - 0.1).abs() < 1e-4, "row norm {n}");
+/// }
+/// ```
+#[derive(Clone, Debug)]
+pub struct MuownState {
+    /// The momentum EMA `V` (same shape as the parameter).
+    pub momentum: Matrix,
+    /// Momentum EMA coefficient β (paper Appendix B).
+    pub beta: f32,
+    /// Decoupled weight-decay coefficient λ.
+    pub weight_decay: f32,
+    /// Newton–Schulz iterations per step (Muon's default 5).
+    pub ns_steps: usize,
+    /// Scratch buffers reused across NS iterations and across steps.
+    pub workspace: Workspace,
+}
+
+impl MuownState {
+    /// Zero-momentum state for a `rows × cols` parameter with the
+    /// paper's default β, λ, and NS depth.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        MuownState {
+            momentum: Matrix::zeros(rows, cols),
+            beta: MATRIX_BETA,
+            weight_decay: WEIGHT_DECAY,
+            ns_steps: MUON_NS_STEPS,
+            workspace: Workspace::new(),
+        }
+    }
+
+    /// One step: V ← βV + (1−β)G;  O = NS5(V);
+    /// W_i ← W_i − η·max(1,√(m/n))·(O_i/max(‖O_i‖, eps) + λW_i).
+    ///
+    /// The NS5 output stays in its workspace buffer; the row
+    /// normalization happens inside the apply sweep's `axpby`
+    /// coefficient.
+    pub fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        let (rows, cols) = (w.rows(), w.cols());
+        self.momentum.axpby_inplace(self.beta, grad, 1.0 - self.beta);
+        let mut d = self.workspace.take_matrix(rows, cols);
+        newton_schulz5_into(&self.momentum, self.ns_steps, &mut self.workspace, &mut d);
+        let scale = lr * rms_scale(rows, cols);
+        let wfac = 1.0 - scale * self.weight_decay;
+        let ddata = d.data();
+        let wdata = w.data_mut();
+        for i in 0..rows {
+            let o = i * cols;
+            let drow = &ddata[o..o + cols];
+            let inv = 1.0 / row_sumsq(drow).sqrt().max(ROW_EPS);
+            kernels::axpby_inplace(&mut wdata[o..o + cols], wfac, drow, -(scale * inv));
+        }
+        self.workspace.give_matrix(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::muon::newton_schulz5_naive;
+    use crate::tensor::{frobenius, one2_norm};
+    use crate::util::Rng;
+
+    #[test]
+    fn every_update_row_has_norm_lr_scale() {
+        let mut rng = Rng::new(51);
+        let g = Matrix::randn(4, 16, 3.0, &mut rng);
+        let mut st = MuownState::new(4, 16);
+        st.weight_decay = 0.0;
+        let mut w = Matrix::zeros(4, 16);
+        st.step(&mut w, &g, 0.5);
+        for n in w.row_norms() {
+            assert!((n - 0.5).abs() < 1e-4, "row norm {n}");
+        }
+        // total 1,2-norm = m·lr, the same Lemma A.1 geometry as rmnp
+        assert!((one2_norm(&w) - 4.0 * 0.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn matches_unfused_reference() {
+        let mut rng = Rng::new(52);
+        for (m, n) in [(6, 10), (24, 6)] {
+            let mut w_f = Matrix::randn(m, n, 0.5, &mut rng);
+            let mut w_r = w_f.clone();
+            let mut st = MuownState::new(m, n);
+            let mut mom = Matrix::zeros(m, n);
+            for _ in 0..3 {
+                let g = Matrix::randn(m, n, 1.0, &mut rng);
+                st.step(&mut w_f, &g, 0.02);
+                mom = mom.axpby(MATRIX_BETA, &g, 1.0 - MATRIX_BETA);
+                let d = newton_schulz5_naive(&mom, MUON_NS_STEPS).row_normalize_naive(ROW_EPS);
+                let scale = 0.02 * rms_scale(m, n);
+                for (wv, dv) in w_r.data_mut().iter_mut().zip(d.data()) {
+                    *wv -= scale * (dv + WEIGHT_DECAY * *wv);
+                }
+            }
+            for (x, y) in w_f.data().iter().zip(w_r.data()) {
+                assert!((x - y).abs() < 1e-4, "({m},{n}): {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn descends_quadratic() {
+        let mut rng = Rng::new(53);
+        let a = Matrix::randn(8, 8, 1.0, &mut rng);
+        let mut w = Matrix::zeros(8, 8);
+        let mut st = MuownState::new(8, 8);
+        st.weight_decay = 0.0;
+        let f0 = frobenius(&w.axpby(1.0, &a, -1.0));
+        for _ in 0..250 {
+            let grad = w.axpby(1.0, &a, -1.0);
+            st.step(&mut w, &grad, 0.05);
+        }
+        let f1 = frobenius(&w.axpby(1.0, &a, -1.0));
+        assert!(f1 < 0.3 * f0, "f0={f0} f1={f1}");
+    }
+
+    #[test]
+    fn zero_grad_stays_finite() {
+        let mut st = MuownState::new(3, 4);
+        let mut w = Matrix::zeros(3, 4);
+        let g = Matrix::zeros(3, 4);
+        for _ in 0..3 {
+            st.step(&mut w, &g, 0.1);
+        }
+        assert!(w.data().iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,190 @@
+//! Nora: normalized orthogonal row alignment — momentum + row-wise
+//! normalization by a *smoothed* (second-moment EMA) row norm.
+//!
+//! Where RMNP divides each momentum row by its instantaneous ℓ2 norm,
+//! Nora tracks a per-row second moment of that norm
+//! (`v_i ← β₂·v_i + (1−β₂)·‖V_i‖²`, bias-corrected) and divides by
+//! `√v̂_i` instead, so the normalizer reflects each row's *recent*
+//! momentum magnitude instead of whipsawing with the instantaneous
+//! value. The cost stays O(mn) — one fused per-row sweep
+//! on the SIMD [`kernels`] primitives (`axpby_inplace` EMA, `row_sumsq`
+//! reduction, `axpby_inplace` update), with the m-element `v` vector and
+//! the step counter as the only extra state. No heap allocation happens
+//! per call (`tests/alloc.rs` holds the line).
+
+use crate::optim::{rms_scale, MATRIX_BETA, ROW_EPS, WEIGHT_DECAY};
+use crate::tensor::kernels::{self, row_sumsq};
+use crate::tensor::Matrix;
+
+/// Second-moment EMA coefficient for the smoothed row norms.
+pub const NORA_BETA2: f32 = 0.95;
+
+/// Momentum + smoothed-row-norm state for one matrix parameter.
+///
+/// ```
+/// use rmnp::optim::NoraState;
+/// use rmnp::tensor::Matrix;
+/// let mut st = NoraState::new(2, 4);
+/// st.weight_decay = 0.0;
+/// let mut w = Matrix::zeros(2, 4);
+/// let g = Matrix::from_vec(2, 4, vec![1.0; 8]);
+/// st.step(&mut w, &g, 0.1);
+/// // on the first step the bias-corrected smoothed norm equals the
+/// // instantaneous norm, so every row moves exactly lr
+/// for n in w.row_norms() {
+///     assert!((n - 0.1).abs() < 1e-4, "row norm {n}");
+/// }
+/// ```
+#[derive(Clone, Debug)]
+pub struct NoraState {
+    /// The momentum EMA `V` (same shape as the parameter).
+    pub momentum: Matrix,
+    /// Per-row second moment of the momentum row norm (length = rows).
+    pub v: Vec<f32>,
+    /// Steps taken (drives the β₂ bias correction).
+    pub t: u32,
+    /// Momentum EMA coefficient β (paper Appendix B).
+    pub beta: f32,
+    /// Row-norm second-moment EMA coefficient β₂.
+    pub beta2: f32,
+    /// Decoupled weight-decay coefficient λ.
+    pub weight_decay: f32,
+}
+
+impl NoraState {
+    /// Zero state for a `rows × cols` parameter with the default
+    /// coefficients.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        NoraState {
+            momentum: Matrix::zeros(rows, cols),
+            v: vec![0.0; rows],
+            t: 0,
+            beta: MATRIX_BETA,
+            beta2: NORA_BETA2,
+            weight_decay: WEIGHT_DECAY,
+        }
+    }
+
+    /// One step: V ← βV + (1−β)G;  v_i ← β₂v_i + (1−β₂)‖V_i‖²;
+    /// W_i ← W_i − η·max(1,√(m/n))·(V_i/max(√v̂_i, eps) + λW_i).
+    ///
+    /// Fused per-row: momentum update (in place), row-norm reduction,
+    /// second-moment EMA, and parameter update all run over each row
+    /// while it is cache-resident.
+    pub fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        let (rows, cols) = (w.rows(), w.cols());
+        assert_eq!(
+            (rows, cols),
+            (self.momentum.rows(), self.momentum.cols()),
+            "nora momentum shape"
+        );
+        assert_eq!((rows, cols), (grad.rows(), grad.cols()), "nora grad shape");
+        self.t += 1;
+        // 1 − β₂^t in f64 so long runs don't lose the correction to f32
+        let bias = (1.0 - (self.beta2 as f64).powi(self.t as i32)) as f32;
+        let scale = lr * rms_scale(rows, cols);
+        let wd = self.weight_decay;
+        let beta = self.beta;
+        let om = 1.0 - beta;
+        let b2 = self.beta2;
+        let ob2 = 1.0 - b2;
+        let vdata = self.momentum.data_mut();
+        let wdata = w.data_mut();
+        let gdata = grad.data();
+        let wfac = 1.0 - scale * wd;
+        for i in 0..rows {
+            let o = i * cols;
+            let vrow = &mut vdata[o..o + cols];
+            kernels::axpby_inplace(vrow, beta, &gdata[o..o + cols], om);
+            let sq = row_sumsq(vrow);
+            self.v[i] = b2 * self.v[i] + ob2 * sq;
+            let denom = (self.v[i] / bias).sqrt().max(ROW_EPS);
+            kernels::axpby_inplace(&mut wdata[o..o + cols], wfac, vrow, -(scale / denom));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::frobenius;
+    use crate::util::Rng;
+
+    #[test]
+    fn first_step_matches_rmnp_direction() {
+        // at t=1 the bias-corrected smoothed norm *is* the instantaneous
+        // norm, so nora's first step equals rmnp's
+        let mut rng = Rng::new(21);
+        let g = Matrix::randn(6, 10, 1.0, &mut rng);
+        let mut st = NoraState::new(6, 10);
+        st.weight_decay = 0.0;
+        let mut w_n = Matrix::zeros(6, 10);
+        st.step(&mut w_n, &g, 0.1);
+        let mut rm = crate::optim::RmnpState::new(6, 10);
+        rm.weight_decay = 0.0;
+        let mut w_r = Matrix::zeros(6, 10);
+        rm.step(&mut w_r, &g, 0.1);
+        for (x, y) in w_n.data().iter().zip(w_r.data()) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn smoothed_norm_damps_a_gradient_spike() {
+        // after warm steps with unit-scale grads, a 100x spike moves a
+        // nora row less than an rmnp row (the denominator lags the spike)
+        let mut rng = Rng::new(22);
+        let mut st = NoraState::new(4, 16);
+        let mut rm = crate::optim::RmnpState::new(4, 16);
+        st.weight_decay = 0.0;
+        rm.weight_decay = 0.0;
+        let mut w_n = Matrix::zeros(4, 16);
+        let mut w_r = Matrix::zeros(4, 16);
+        for _ in 0..20 {
+            let g = Matrix::randn(4, 16, 1.0, &mut rng);
+            st.step(&mut w_n, &g, 0.01);
+            rm.step(&mut w_r, &g, 0.01);
+        }
+        let before_n = w_n.clone();
+        let before_r = w_r.clone();
+        let spike = Matrix::randn(4, 16, 100.0, &mut rng);
+        st.step(&mut w_n, &spike, 0.01);
+        rm.step(&mut w_r, &spike, 0.01);
+        let moved_n = frobenius(&w_n.axpby(1.0, &before_n, -1.0));
+        let moved_r = frobenius(&w_r.axpby(1.0, &before_r, -1.0));
+        assert!(
+            moved_n > moved_r,
+            "nora should overshoot rmnp on a spike (denominator lags): {moved_n} vs {moved_r}"
+        );
+        assert!(w_n.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn descends_quadratic() {
+        let mut rng = Rng::new(23);
+        let a = Matrix::randn(8, 8, 1.0, &mut rng);
+        let mut w = Matrix::zeros(8, 8);
+        let mut st = NoraState::new(8, 8);
+        st.weight_decay = 0.0;
+        let f0 = frobenius(&w.axpby(1.0, &a, -1.0));
+        for _ in 0..250 {
+            let grad = w.axpby(1.0, &a, -1.0);
+            st.step(&mut w, &grad, 0.05);
+        }
+        let f1 = frobenius(&w.axpby(1.0, &a, -1.0));
+        assert!(f1 < 0.3 * f0, "f0={f0} f1={f1}");
+    }
+
+    #[test]
+    fn zero_grad_zero_state_stays_finite() {
+        let mut st = NoraState::new(3, 4);
+        let mut w = Matrix::zeros(3, 4);
+        let g = Matrix::zeros(3, 4);
+        for _ in 0..3 {
+            st.step(&mut w, &g, 0.1);
+        }
+        assert!(w.data().iter().all(|x| x.is_finite()));
+        assert!(w.data().iter().all(|&x| x == 0.0));
+        assert_eq!(st.t, 3);
+    }
+}

@@ -1,0 +1,231 @@
+//! NorMuon: Muon + neuron-wise (per-row) second-moment normalization of
+//! the orthogonalized update.
+//!
+//! Muon's NS5 output has nearly uniform singular values but *not*
+//! uniform row norms; NorMuon tracks a per-row second moment of the
+//! orthogonalized direction (`v_i ← β₂·v_i + (1−β₂)·mean(O_i²)`,
+//! bias-corrected) and scales each row by `1/√(v̂_i + eps)`, then
+//! rescales the whole update by `γ = ‖O‖_F / ‖C·O‖_F` so the overall
+//! update RMS is unchanged — only the row *balance* moves. The step is
+//! fused: momentum EMA in place, NS5 on the persistent
+//! [`Workspace`](crate::tensor::Workspace), then two per-row sweeps
+//! (reduce + apply) with no intermediate matrix beyond the NS5 output
+//! buffer, allocation-free after warmup (`tests/alloc.rs`).
+
+use crate::optim::muon::newton_schulz5_into;
+use crate::optim::{rms_scale, MATRIX_BETA, MUON_NS_STEPS, ROW_EPS, WEIGHT_DECAY};
+use crate::tensor::kernels::{self, row_sumsq};
+use crate::tensor::{Matrix, Workspace};
+
+/// Second-moment EMA coefficient for the per-row update moments.
+pub const NORMUON_BETA2: f32 = 0.95;
+
+/// Momentum + NS5 + per-row second-moment state for one matrix parameter.
+///
+/// ```
+/// use rmnp::optim::NorMuonState;
+/// use rmnp::tensor::Matrix;
+/// let mut st = NorMuonState::new(4, 8);
+/// let mut w = Matrix::zeros(4, 8);
+/// let g = Matrix::from_vec(4, 8, (0..32).map(|i| (i as f32).sin()).collect());
+/// st.step(&mut w, &g, 0.1);
+/// assert!(w.data().iter().all(|x| x.is_finite()));
+/// assert_eq!(st.t, 1);
+/// ```
+#[derive(Clone, Debug)]
+pub struct NorMuonState {
+    /// The momentum EMA `V` (same shape as the parameter).
+    pub momentum: Matrix,
+    /// Per-row second moment of the orthogonalized update (length = rows).
+    pub v: Vec<f32>,
+    /// Steps taken (drives the β₂ bias correction).
+    pub t: u32,
+    /// Momentum EMA coefficient β (paper Appendix B).
+    pub beta: f32,
+    /// Row second-moment EMA coefficient β₂.
+    pub beta2: f32,
+    /// Decoupled weight-decay coefficient λ.
+    pub weight_decay: f32,
+    /// Newton–Schulz iterations per step (Muon's default 5).
+    pub ns_steps: usize,
+    /// Scratch buffers reused across NS iterations and across steps.
+    pub workspace: Workspace,
+}
+
+impl NorMuonState {
+    /// Zero state for a `rows × cols` parameter with the default
+    /// coefficients and NS depth.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        NorMuonState {
+            momentum: Matrix::zeros(rows, cols),
+            v: vec![0.0; rows],
+            t: 0,
+            beta: MATRIX_BETA,
+            beta2: NORMUON_BETA2,
+            weight_decay: WEIGHT_DECAY,
+            ns_steps: MUON_NS_STEPS,
+            workspace: Workspace::new(),
+        }
+    }
+
+    /// One step: V ← βV + (1−β)G;  O = NS5(V);
+    /// v_i ← β₂v_i + (1−β₂)·mean(O_i²);  c_i = 1/√(v̂_i + eps);
+    /// γ = ‖O‖_F/‖C·O‖_F;  W_i ← W_i − η·s·(γ·c_i·O_i + λW_i).
+    ///
+    /// Sweep 1 reduces each O row once (second-moment EMA + the two
+    /// Frobenius accumulators for γ); sweep 2 applies, recomputing the
+    /// cheap scalar `c_i` from `v` instead of buffering it.
+    pub fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        let (rows, cols) = (w.rows(), w.cols());
+        assert_eq!(
+            (rows, cols),
+            (self.momentum.rows(), self.momentum.cols()),
+            "normuon momentum shape"
+        );
+        assert_eq!(
+            (rows, cols),
+            (grad.rows(), grad.cols()),
+            "normuon grad shape"
+        );
+        self.momentum.axpby_inplace(self.beta, grad, 1.0 - self.beta);
+        let mut d = self.workspace.take_matrix(rows, cols);
+        newton_schulz5_into(&self.momentum, self.ns_steps, &mut self.workspace, &mut d);
+        self.t += 1;
+        let bias = (1.0 - (self.beta2 as f64).powi(self.t as i32)) as f32;
+        let b2 = self.beta2;
+        let ob2 = 1.0 - b2;
+        let inv_n = 1.0 / cols as f32;
+        // sweep 1: per-row second moments + the two Frobenius sums for γ
+        // (f64 accumulation, same discipline as tensor::frobenius)
+        let mut sum_o = 0.0f64;
+        let mut sum_c = 0.0f64;
+        let ddata = d.data();
+        for i in 0..rows {
+            let sq = row_sumsq(&ddata[i * cols..(i + 1) * cols]);
+            self.v[i] = b2 * self.v[i] + ob2 * sq * inv_n;
+            let c = 1.0 / ((self.v[i] / bias).sqrt() + ROW_EPS);
+            sum_o += sq as f64;
+            sum_c += (c * c * sq) as f64;
+        }
+        let gamma = if sum_c > 0.0 {
+            (sum_o / sum_c).sqrt() as f32
+        } else {
+            1.0
+        };
+        // sweep 2: W_i ← (1 − η·s·λ)·W_i − η·s·γ·c_i·O_i
+        let scale = lr * rms_scale(rows, cols);
+        let wfac = 1.0 - scale * self.weight_decay;
+        let wdata = w.data_mut();
+        for i in 0..rows {
+            let o = i * cols;
+            let c = 1.0 / ((self.v[i] / bias).sqrt() + ROW_EPS);
+            kernels::axpby_inplace(
+                &mut wdata[o..o + cols],
+                wfac,
+                &ddata[o..o + cols],
+                -(scale * gamma * c),
+            );
+        }
+        self.workspace.give_matrix(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::muon::newton_schulz5_naive;
+    use crate::tensor::frobenius;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_unfused_reference() {
+        let mut rng = Rng::new(31);
+        for (m, n) in [(6, 10), (24, 6), (6, 24)] {
+            let mut w_f = Matrix::randn(m, n, 0.5, &mut rng);
+            let mut w_r = w_f.clone();
+            let mut st = NorMuonState::new(m, n);
+            // reference evolved with the unfused naive ops
+            let mut mom = Matrix::zeros(m, n);
+            let mut v = vec![0.0f32; m];
+            for t in 1..=3i32 {
+                let g = Matrix::randn(m, n, 1.0, &mut rng);
+                st.step(&mut w_f, &g, 0.02);
+                mom = mom.axpby(MATRIX_BETA, &g, 1.0 - MATRIX_BETA);
+                let d = newton_schulz5_naive(&mom, MUON_NS_STEPS);
+                let bias = (1.0 - (NORMUON_BETA2 as f64).powi(t)) as f32;
+                let mut sum_o = 0.0f64;
+                let mut sum_c = 0.0f64;
+                let mut cs = vec![0.0f32; m];
+                for i in 0..m {
+                    let sq: f32 = d.row(i).iter().map(|x| x * x).sum();
+                    v[i] = NORMUON_BETA2 * v[i] + (1.0 - NORMUON_BETA2) * sq / n as f32;
+                    cs[i] = 1.0 / ((v[i] / bias).sqrt() + ROW_EPS);
+                    sum_o += sq as f64;
+                    sum_c += (cs[i] * cs[i] * sq) as f64;
+                }
+                let gamma = (sum_o / sum_c).sqrt() as f32;
+                let scale = 0.02 * rms_scale(m, n);
+                for i in 0..m {
+                    for j in 0..n {
+                        let wv = w_r.get(i, j);
+                        w_r.set(
+                            i,
+                            j,
+                            wv - scale * (gamma * cs[i] * d.get(i, j) + WEIGHT_DECAY * wv),
+                        );
+                    }
+                }
+            }
+            for (x, y) in w_f.data().iter().zip(w_r.data()) {
+                assert!((x - y).abs() < 1e-4, "({m},{n}): {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn gamma_preserves_update_frobenius_norm() {
+        // with wd=0, the normuon update's F-norm equals the raw NS5
+        // output's F-norm times lr·s — γ cancels the row rescaling
+        let mut rng = Rng::new(32);
+        let g = Matrix::randn(8, 16, 1.0, &mut rng);
+        let mut st = NorMuonState::new(8, 16);
+        st.weight_decay = 0.0;
+        let mut w = Matrix::zeros(8, 16);
+        st.step(&mut w, &g, 0.1);
+        let mom = g.axpby(1.0 - MATRIX_BETA, &Matrix::zeros(8, 16), 0.0);
+        let d = newton_schulz5_naive(&mom, MUON_NS_STEPS);
+        let want = 0.1 * rms_scale(8, 16) as f64 * frobenius(&d);
+        let got = frobenius(&w);
+        assert!(
+            (got - want).abs() < 1e-3 * want.max(1.0),
+            "{got} vs {want}"
+        );
+    }
+
+    #[test]
+    fn descends_quadratic() {
+        let mut rng = Rng::new(33);
+        let a = Matrix::randn(8, 8, 1.0, &mut rng);
+        let mut w = Matrix::zeros(8, 8);
+        let mut st = NorMuonState::new(8, 8);
+        st.weight_decay = 0.0;
+        let f0 = frobenius(&w.axpby(1.0, &a, -1.0));
+        for _ in 0..250 {
+            let grad = w.axpby(1.0, &a, -1.0);
+            st.step(&mut w, &grad, 0.05);
+        }
+        let f1 = frobenius(&w.axpby(1.0, &a, -1.0));
+        assert!(f1 < 0.3 * f0, "f0={f0} f1={f1}");
+    }
+
+    #[test]
+    fn zero_grad_stays_finite() {
+        let mut st = NorMuonState::new(3, 4);
+        let mut w = Matrix::zeros(3, 4);
+        let g = Matrix::zeros(3, 4);
+        for _ in 0..3 {
+            st.step(&mut w, &g, 0.1);
+        }
+        assert!(w.data().iter().all(|x| x.is_finite()));
+    }
+}

@@ -30,7 +30,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::optim::registry::MatrixOptimizer;
-use crate::optim::{AdamWState, MuonState, RmnpState};
+use crate::optim::{
+    AdamWState, MuonState, MuownState, NorMuonState, NoraState, RmnpState, TurboMuonState,
+};
 use crate::tensor::{kernels, Matrix};
 use crate::util::Rng;
 
@@ -43,6 +45,14 @@ pub enum OptKind {
     Muon,
     /// AdamW: per-element moments with decoupled weight decay.
     AdamW,
+    /// Nora: row normalization by a smoothed (second-moment EMA) row norm.
+    Nora,
+    /// NorMuon: Muon + neuron-wise second-moment normalization.
+    NorMuon,
+    /// Turbo-Muon: row-norm pre-conditioning, fewer NS iterations.
+    TurboMuon,
+    /// Muown: Muon + exact row-norm control on the NS output.
+    Muown,
 }
 
 impl OptKind {
@@ -59,6 +69,10 @@ impl OptKind {
             OptKind::Rmnp => "rmnp",
             OptKind::Muon => "muon",
             OptKind::AdamW => "adamw",
+            OptKind::Nora => "nora",
+            OptKind::NorMuon => "normuon",
+            OptKind::TurboMuon => "turbo_muon",
+            OptKind::Muown => "muown",
         }
     }
 }
@@ -74,6 +88,15 @@ pub enum OptState {
     Muon(MuonState),
     /// AdamW moment state.
     AdamW(AdamWState),
+    /// Nora momentum + per-row smoothed-norm state.
+    Nora(NoraState),
+    /// NorMuon momentum + per-row second-moment state (owns its NS5
+    /// workspace).
+    NorMuon(NorMuonState),
+    /// Turbo-Muon momentum state (owns its NS workspace).
+    TurboMuon(TurboMuonState),
+    /// Muown momentum state (owns its NS5 workspace).
+    Muown(MuownState),
 }
 
 impl OptState {
@@ -83,17 +106,25 @@ impl OptState {
             OptKind::Rmnp => OptState::Rmnp(RmnpState::new(rows, cols)),
             OptKind::Muon => OptState::Muon(MuonState::new(rows, cols)),
             OptKind::AdamW => OptState::AdamW(AdamWState::new(rows * cols)),
+            OptKind::Nora => OptState::Nora(NoraState::new(rows, cols)),
+            OptKind::NorMuon => OptState::NorMuon(NorMuonState::new(rows, cols)),
+            OptKind::TurboMuon => OptState::TurboMuon(TurboMuonState::new(rows, cols)),
+            OptKind::Muown => OptState::Muown(MuownState::new(rows, cols)),
         }
     }
 
-    /// The matrix momentum, when this state has one (RMNP/Muon); `None`
-    /// for element-wise AdamW. Used by the native backend's dominance
-    /// probe (paper Section 3.2).
+    /// The matrix momentum, when this state has one (every matrix
+    /// method); `None` for element-wise AdamW. Used by the native
+    /// backend's dominance probe (paper Section 3.2).
     pub fn momentum(&self) -> Option<&Matrix> {
         match self {
             OptState::Rmnp(st) => Some(&st.momentum),
             OptState::Muon(st) => Some(&st.momentum),
             OptState::AdamW(_) => None,
+            OptState::Nora(st) => Some(&st.momentum),
+            OptState::NorMuon(st) => Some(&st.momentum),
+            OptState::TurboMuon(st) => Some(&st.momentum),
+            OptState::Muown(st) => Some(&st.momentum),
         }
     }
 
@@ -103,6 +134,10 @@ impl OptState {
             OptState::Rmnp(st) => st,
             OptState::Muon(st) => st,
             OptState::AdamW(st) => st,
+            OptState::Nora(st) => st,
+            OptState::NorMuon(st) => st,
+            OptState::TurboMuon(st) => st,
+            OptState::Muown(st) => st,
         }
     }
 
@@ -112,6 +147,10 @@ impl OptState {
             OptState::Rmnp(st) => st,
             OptState::Muon(st) => st,
             OptState::AdamW(st) => st,
+            OptState::Nora(st) => st,
+            OptState::NorMuon(st) => st,
+            OptState::TurboMuon(st) => st,
+            OptState::Muown(st) => st,
         }
     }
 }
@@ -169,12 +208,19 @@ impl ParamTask {
         MatrixOptimizer::kind(&self.state)
     }
 
-    /// Scheduling cost: `m×n` elements, scaled by the NS5 Gram depth
-    /// `min(m,n)` for Muon (its step is a chain of min-side matmuls).
+    /// Scheduling cost: `m×n` elements, scaled by the NS Gram depth
+    /// `min(m,n)` for the Newton–Schulz family (their steps are chains
+    /// of min-side matmuls); the row-norm family (RMNP/Nora) and AdamW
+    /// stay O(mn).
     pub fn cost(&self) -> usize {
         let (m, n) = (self.w.rows(), self.w.cols());
         match self.state {
-            OptState::Muon(_) => m * n * m.min(n).max(1),
+            OptState::Muon(_) | OptState::NorMuon(_) | OptState::Muown(_) => {
+                m * n * m.min(n).max(1)
+            }
+            // 3 of muon's 5 NS iterations — keep the Gram depth but scale
+            // it down so the scheduler starts turbo tasks after muon ones
+            OptState::TurboMuon(_) => ((m * n * m.min(n).max(1)) * 3 / 5).max(m * n),
             _ => m * n,
         }
     }
@@ -508,7 +554,15 @@ mod tests {
     fn pooled_matches_sequential_exactly() {
         // the core determinism contract at the unit level (the integration
         // test in tests/kernels_parity.rs covers larger shapes and rounds)
-        for kind in [OptKind::Rmnp, OptKind::Muon, OptKind::AdamW] {
+        for kind in [
+            OptKind::Rmnp,
+            OptKind::Muon,
+            OptKind::AdamW,
+            OptKind::Nora,
+            OptKind::NorMuon,
+            OptKind::TurboMuon,
+            OptKind::Muown,
+        ] {
             let mut seq = StepPlan::new(small_tasks(kind, 2), 1);
             let mut par = StepPlan::new(small_tasks(kind, 2), 3);
             assert_eq!(seq.threads(), 0);
@@ -561,7 +615,15 @@ mod tests {
 
     #[test]
     fn optkind_parse_roundtrip() {
-        for kind in [OptKind::Rmnp, OptKind::Muon, OptKind::AdamW] {
+        for kind in [
+            OptKind::Rmnp,
+            OptKind::Muon,
+            OptKind::AdamW,
+            OptKind::Nora,
+            OptKind::NorMuon,
+            OptKind::TurboMuon,
+            OptKind::Muown,
+        ] {
             assert_eq!(OptKind::parse(kind.name()).unwrap(), kind);
         }
         assert!(OptKind::parse("sgd").is_err());
@@ -572,8 +634,15 @@ mod tests {
         let mut rng = Rng::new(6);
         let w = Matrix::randn(8, 16, 0.1, &mut rng);
         let muon = ParamTask::new("m", w.clone(), OptKind::Muon);
+        let normuon = ParamTask::new("nm", w.clone(), OptKind::NorMuon);
+        let turbo = ParamTask::new("t", w.clone(), OptKind::TurboMuon);
+        let nora = ParamTask::new("n", w.clone(), OptKind::Nora);
         let rmnp = ParamTask::new("r", w, OptKind::Rmnp);
         assert!(muon.cost() > rmnp.cost());
+        assert_eq!(normuon.cost(), muon.cost());
+        // turbo sits between the full NS family and the O(mn) row-norm one
+        assert!(turbo.cost() < muon.cost() && turbo.cost() > rmnp.cost());
+        assert_eq!(nora.cost(), rmnp.cost());
         assert_eq!(muon.kind(), OptKind::Muon);
     }
 }

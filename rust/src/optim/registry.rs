@@ -20,7 +20,10 @@
 //!   them with a precise message rather than an "unknown optimizer".
 
 use crate::optim::plan::OptKind;
-use crate::optim::{rms_scale, AdamWState, MuonState, RmnpState};
+use crate::optim::{
+    rms_scale, AdamWState, MuonState, MuownState, NorMuonState, NoraState, RmnpState,
+    TurboMuonState,
+};
 use crate::tensor::Matrix;
 
 /// One named state buffer of an optimizer (or a parameter), the unit of
@@ -177,6 +180,123 @@ impl MatrixOptimizer for AdamWState {
     }
 }
 
+impl MatrixOptimizer for NoraState {
+    fn kind(&self) -> OptKind {
+        OptKind::Nora
+    }
+    fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        NoraState::step(self, w, grad, lr);
+    }
+    fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
+        rms_scale(rows, cols)
+    }
+    fn state_names(&self) -> Vec<&'static str> {
+        vec!["momentum", "v", "t"]
+    }
+    fn export_state(&self) -> Vec<NamedState> {
+        vec![
+            ("momentum".to_string(), self.momentum.data().to_vec()),
+            ("v".to_string(), self.v.clone()),
+            ("t".to_string(), vec![f32::from_bits(self.t)]),
+        ]
+    }
+    fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
+        expect_exactly(state, &["momentum", "v", "t"])?;
+        let mom = find(state, "momentum", self.momentum.data().len())?.to_vec();
+        let v = find(state, "v", self.v.len())?.to_vec();
+        let t = find(state, "t", 1)?[0].to_bits();
+        self.momentum.data_mut().copy_from_slice(&mom);
+        self.v = v;
+        self.t = t;
+        Ok(())
+    }
+}
+
+impl MatrixOptimizer for NorMuonState {
+    fn kind(&self) -> OptKind {
+        OptKind::NorMuon
+    }
+    fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        NorMuonState::step(self, w, grad, lr);
+    }
+    fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
+        rms_scale(rows, cols)
+    }
+    fn state_names(&self) -> Vec<&'static str> {
+        vec!["momentum", "v", "t"]
+    }
+    fn export_state(&self) -> Vec<NamedState> {
+        // the NS5 workspace is scratch, not state: it never affects bits
+        vec![
+            ("momentum".to_string(), self.momentum.data().to_vec()),
+            ("v".to_string(), self.v.clone()),
+            ("t".to_string(), vec![f32::from_bits(self.t)]),
+        ]
+    }
+    fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
+        expect_exactly(state, &["momentum", "v", "t"])?;
+        let mom = find(state, "momentum", self.momentum.data().len())?.to_vec();
+        let v = find(state, "v", self.v.len())?.to_vec();
+        let t = find(state, "t", 1)?[0].to_bits();
+        self.momentum.data_mut().copy_from_slice(&mom);
+        self.v = v;
+        self.t = t;
+        Ok(())
+    }
+}
+
+impl MatrixOptimizer for TurboMuonState {
+    fn kind(&self) -> OptKind {
+        OptKind::TurboMuon
+    }
+    fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        TurboMuonState::step(self, w, grad, lr);
+    }
+    fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
+        rms_scale(rows, cols)
+    }
+    fn state_names(&self) -> Vec<&'static str> {
+        vec!["momentum"]
+    }
+    fn export_state(&self) -> Vec<NamedState> {
+        // the NS workspace is scratch, not state: it never affects bits
+        vec![("momentum".to_string(), self.momentum.data().to_vec())]
+    }
+    fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
+        expect_exactly(state, &["momentum"])?;
+        let len = self.momentum.data().len();
+        let data = find(state, "momentum", len)?;
+        self.momentum.data_mut().copy_from_slice(data);
+        Ok(())
+    }
+}
+
+impl MatrixOptimizer for MuownState {
+    fn kind(&self) -> OptKind {
+        OptKind::Muown
+    }
+    fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        MuownState::step(self, w, grad, lr);
+    }
+    fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
+        rms_scale(rows, cols)
+    }
+    fn state_names(&self) -> Vec<&'static str> {
+        vec!["momentum"]
+    }
+    fn export_state(&self) -> Vec<NamedState> {
+        // the NS5 workspace is scratch, not state: it never affects bits
+        vec![("momentum".to_string(), self.momentum.data().to_vec())]
+    }
+    fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
+        expect_exactly(state, &["momentum"])?;
+        let len = self.momentum.data().len();
+        let data = find(state, "momentum", len)?;
+        self.momentum.data_mut().copy_from_slice(data);
+        Ok(())
+    }
+}
+
 /// One registry entry: the single source of truth for an optimizer name.
 #[derive(Clone, Copy, Debug)]
 pub struct OptSpec {
@@ -213,6 +333,35 @@ pub const REGISTRY: &[OptSpec] = &[
         native: Some(OptKind::AdamW),
         default_lr: 3e-3,
         lr_grid: &[1e-3, 3e-3, 6e-3],
+    },
+    OptSpec {
+        name: "nora",
+        native: Some(OptKind::Nora),
+        // the smoothed row norm tolerates the same range as rmnp's
+        // instantaneous one (row-norm family, Tables 9-13 scale)
+        default_lr: 4e-3,
+        lr_grid: &[1e-3, 2e-3, 4e-3, 8e-3],
+    },
+    OptSpec {
+        name: "normuon",
+        native: Some(OptKind::NorMuon),
+        // γ keeps the update RMS at muon's, so muon's range carries over
+        default_lr: 1e-2,
+        lr_grid: &[5e-3, 1e-2, 2e-2, 3e-2],
+    },
+    OptSpec {
+        name: "turbo_muon",
+        native: Some(OptKind::TurboMuon),
+        default_lr: 1e-2,
+        lr_grid: &[5e-3, 1e-2, 2e-2, 3e-2],
+    },
+    OptSpec {
+        name: "muown",
+        native: Some(OptKind::Muown),
+        // row-norm control gives rmnp's per-row step geometry on muon's
+        // direction; sweep the range between the two families
+        default_lr: 8e-3,
+        lr_grid: &[2e-3, 4e-3, 8e-3, 1.6e-2],
     },
     OptSpec {
         name: "shampoo",
@@ -271,6 +420,11 @@ mod tests {
         assert_eq!(spec("shampoo").unwrap().default_lr, 1e-2);
         assert_eq!(spec("soap").unwrap().default_lr, 3e-3);
         assert_eq!(spec("muon").unwrap().lr_grid.len(), 4);
+        // zoo entries carry real values, not placeholders
+        assert_eq!(spec("nora").unwrap().default_lr, 4e-3);
+        assert_eq!(spec("normuon").unwrap().default_lr, 1e-2);
+        assert_eq!(spec("turbo_muon").unwrap().default_lr, 1e-2);
+        assert_eq!(spec("muown").unwrap().default_lr, 8e-3);
         // every native name parses to its kind and back
         for s in REGISTRY {
             if let Some(kind) = s.native {
@@ -281,9 +435,27 @@ mod tests {
     }
 
     #[test]
+    fn every_native_entry_exports_its_declared_names() {
+        for s in REGISTRY {
+            let Some(kind) = s.native else { continue };
+            let st = OptState::new(kind, 4, 6);
+            let names: Vec<String> = st.export_state().into_iter().map(|(n, _)| n).collect();
+            let want: Vec<String> = st.state_names().iter().map(|n| n.to_string()).collect();
+            assert_eq!(names, want, "{} export order", s.name);
+        }
+        // the two with extra per-row state carry it by name
+        for name in ["nora", "normuon"] {
+            let st = OptState::new(spec(name).unwrap().native.unwrap(), 4, 6);
+            assert_eq!(st.state_names(), vec!["momentum", "v", "t"], "{name}");
+            let v = st.export_state();
+            assert_eq!(v[1].1.len(), 4, "{name} v is per-row");
+        }
+    }
+
+    #[test]
     fn export_import_roundtrip_is_bit_exact() {
         let mut rng = Rng::new(17);
-        for kind in [OptKind::Rmnp, OptKind::Muon, OptKind::AdamW] {
+        for kind in REGISTRY.iter().filter_map(|s| s.native) {
             // evolve a state, export it, import into a fresh state, and
             // step both — the continued bits must be identical
             let mut w_a = Matrix::randn(6, 10, 0.5, &mut rng);

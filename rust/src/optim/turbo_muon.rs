@@ -1,0 +1,175 @@
+//! Turbo-Muon: row-normalization as an almost-orthogonal
+//! *pre-conditioner* so Newton–Schulz converges in fewer iterations.
+//!
+//! NS5's convergence rate is set by how far the input's singular values
+//! sit from 1; the O(mn) row normalization already pushes them most of
+//! the way there (the paper's central observation), so feeding NS5 the
+//! *row-normalized* momentum instead of the raw momentum lets a reduced
+//! iteration count ([`TURBO_NS_STEPS`], configurable per state) reach
+//! Muon-quality orthogonality. Cost per step drops from 5 to 3 Gram
+//! matmul chains plus one O(mn) row sweep. Everything runs on the
+//! persistent [`Workspace`](crate::tensor::Workspace) —
+//! allocation-free after warmup (`tests/alloc.rs`).
+
+use crate::optim::muon::newton_schulz5_into;
+use crate::optim::{rms_scale, MATRIX_BETA, ROW_EPS, WEIGHT_DECAY};
+use crate::tensor::{Matrix, Workspace};
+
+/// Default NS iteration count after row-norm pre-conditioning (vs
+/// Muon's 5 on the raw momentum).
+pub const TURBO_NS_STEPS: usize = 3;
+
+/// Momentum state for one matrix parameter.
+///
+/// ```
+/// use rmnp::optim::TurboMuonState;
+/// use rmnp::tensor::Matrix;
+/// let mut st = TurboMuonState::new(4, 8);
+/// assert_eq!(st.ns_steps, 3); // fewer NS iterations than muon's 5
+/// let mut w = Matrix::zeros(4, 8);
+/// let g = Matrix::from_vec(4, 8, (0..32).map(|i| (i as f32).cos()).collect());
+/// st.step(&mut w, &g, 0.1);
+/// assert!(w.data().iter().all(|x| x.is_finite()));
+/// ```
+#[derive(Clone, Debug)]
+pub struct TurboMuonState {
+    /// The momentum EMA `V` (same shape as the parameter).
+    pub momentum: Matrix,
+    /// Momentum EMA coefficient β (paper Appendix B).
+    pub beta: f32,
+    /// Decoupled weight-decay coefficient λ.
+    pub weight_decay: f32,
+    /// Newton–Schulz iterations per step after pre-normalization
+    /// (default [`TURBO_NS_STEPS`]).
+    pub ns_steps: usize,
+    /// Scratch buffers reused across NS iterations and across steps.
+    pub workspace: Workspace,
+}
+
+impl TurboMuonState {
+    /// Zero-momentum state for a `rows × cols` parameter with the
+    /// default β, λ, and reduced NS depth.
+    pub fn new(rows: usize, cols: usize) -> Self {
+        TurboMuonState {
+            momentum: Matrix::zeros(rows, cols),
+            beta: MATRIX_BETA,
+            weight_decay: WEIGHT_DECAY,
+            ns_steps: TURBO_NS_STEPS,
+            workspace: Workspace::new(),
+        }
+    }
+
+    /// One step: V ← βV + (1−β)G;  P = RN(V);  O = NS(P, ns_steps);
+    /// W ← W − η·max(1,√(m/n))·(O + λW).
+    ///
+    /// The pre-normalization buffer `P` and the NS output are both drawn
+    /// from the persistent workspace; after the first call no heap
+    /// allocation happens.
+    pub fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
+        let (rows, cols) = (w.rows(), w.cols());
+        self.momentum.axpby_inplace(self.beta, grad, 1.0 - self.beta);
+        let mut p = self.workspace.take_matrix(rows, cols);
+        self.momentum.row_normalize_into(&mut p, ROW_EPS);
+        let mut d = self.workspace.take_matrix(rows, cols);
+        newton_schulz5_into(&p, self.ns_steps, &mut self.workspace, &mut d);
+        let scale = lr * rms_scale(rows, cols);
+        let wd = self.weight_decay;
+        for (wv, dv) in w.data_mut().iter_mut().zip(d.data()) {
+            *wv -= scale * (dv + wd * *wv);
+        }
+        self.workspace.give_matrix(d);
+        self.workspace.give_matrix(p);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::muon::{newton_schulz5, newton_schulz5_naive};
+    use crate::tensor::frobenius;
+    use crate::util::Rng;
+
+    /// max |XXᵀ − I| entry over the min-side Gram.
+    fn ortho_err(x: &Matrix) -> f32 {
+        let g = if x.rows() <= x.cols() {
+            x.gram()
+        } else {
+            x.transpose().gram()
+        };
+        let mut worst = 0.0f32;
+        for i in 0..g.rows() {
+            for j in 0..g.cols() {
+                let want = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((g.get(i, j) - want).abs());
+            }
+        }
+        worst
+    }
+
+    #[test]
+    fn prenormalized_ns3_orthogonalizes_as_well_as_raw_ns5() {
+        // the tentpole claim: RN(V) then 3 NS iterations reaches the
+        // orthogonality raw V needs 5 iterations for
+        let mut rng = Rng::new(41);
+        for (m, n) in [(8, 32), (16, 16), (32, 8)] {
+            let v = Matrix::randn(m, n, 1.0, &mut rng);
+            let raw5 = ortho_err(&newton_schulz5(&v, 5));
+            let pre3 = ortho_err(&newton_schulz5(&v.row_normalize(ROW_EPS), 3));
+            assert!(
+                pre3 < raw5 + 0.1,
+                "({m},{n}): pre-norm NS3 err {pre3} vs raw NS5 err {raw5}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_unfused_reference() {
+        let mut rng = Rng::new(42);
+        for (m, n) in [(6, 10), (24, 6)] {
+            let mut w_f = Matrix::randn(m, n, 0.5, &mut rng);
+            let mut w_r = w_f.clone();
+            let mut st = TurboMuonState::new(m, n);
+            let mut mom = Matrix::zeros(m, n);
+            for _ in 0..3 {
+                let g = Matrix::randn(m, n, 1.0, &mut rng);
+                st.step(&mut w_f, &g, 0.02);
+                mom = mom.axpby(MATRIX_BETA, &g, 1.0 - MATRIX_BETA);
+                let d = newton_schulz5_naive(&mom.row_normalize_naive(ROW_EPS), TURBO_NS_STEPS);
+                let scale = 0.02 * rms_scale(m, n);
+                for (wv, dv) in w_r.data_mut().iter_mut().zip(d.data()) {
+                    *wv -= scale * (dv + WEIGHT_DECAY * *wv);
+                }
+            }
+            for (x, y) in w_f.data().iter().zip(w_r.data()) {
+                assert!((x - y).abs() < 1e-4, "({m},{n}): {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn descends_quadratic() {
+        let mut rng = Rng::new(43);
+        let a = Matrix::randn(8, 8, 1.0, &mut rng);
+        let mut w = Matrix::zeros(8, 8);
+        let mut st = TurboMuonState::new(8, 8);
+        st.weight_decay = 0.0;
+        let f0 = frobenius(&w.axpby(1.0, &a, -1.0));
+        for _ in 0..250 {
+            let grad = w.axpby(1.0, &a, -1.0);
+            st.step(&mut w, &grad, 0.05);
+        }
+        let f1 = frobenius(&w.axpby(1.0, &a, -1.0));
+        assert!(f1 < 0.3 * f0, "f0={f0} f1={f1}");
+    }
+
+    #[test]
+    fn zero_grad_stays_finite() {
+        let mut st = TurboMuonState::new(3, 4);
+        let mut w = Matrix::zeros(3, 4);
+        let g = Matrix::zeros(3, 4);
+        for _ in 0..3 {
+            st.step(&mut w, &g, 0.1);
+        }
+        assert!(w.data().iter().all(|x| x.is_finite()));
+    }
+}

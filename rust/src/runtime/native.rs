@@ -26,10 +26,13 @@
 //!   `StepPlan::step_all`.
 //! * Checkpointing: `export_state`/`import_state` move parameters *and*
 //!   optimizer state through named buffers bit-exactly, and stamp the
-//!   **model arch + tag** into the parameter section (`__model__:` …).
-//!   Importing a checkpoint written by a different tag or arch is a
-//!   clean error — a shape-compatible wrong-arch resume can no longer
-//!   silently import (`--resume` surfaces the message).
+//!   **model arch + tag** (`__model__:` …) and the **optimizer name**
+//!   (`__optim__:` …) into the parameter section. Importing a checkpoint
+//!   written by a different tag, arch, or optimizer is a clean error —
+//!   a shape-compatible wrong-arch resume, or a same-buffer-name
+//!   wrong-optimizer resume (rmnp/muon/turbo_muon/muown all export just
+//!   `momentum`), can no longer silently import (`--resume` surfaces
+//!   the message).
 //!
 //! ## Determinism
 //!
@@ -55,6 +58,14 @@ pub const CLIP_NORM: f64 = 1.0;
 /// section (`__model__:<arch>:<tag>`, zero-length payload).
 const STAMP_PREFIX: &str = "__model__:";
 
+/// Prefix of the optimizer stamp buffer (`__optim__:<name>`, zero-length
+/// payload). Several zoo optimizers share identical state buffer names
+/// (rmnp/muon/turbo_muon/muown all carry exactly `momentum`), so without
+/// this stamp a checkpoint could silently resume under a *different*
+/// optimizer with reinterpreted state. Checkpoints written before the
+/// stamp existed import without it (back-compat).
+const OPT_STAMP_PREFIX: &str = "__optim__:";
+
 /// The always-available training backend: host matrices, model-layer
 /// forward/backward, sharded fused stepping through [`StepPlan`].
 pub struct NativeBackend {
@@ -62,6 +73,8 @@ pub struct NativeBackend {
     plan: StepPlan,
     /// Layout order → plan scheduling order.
     idx: Vec<usize>,
+    /// The configured matrix-optimizer name (checkpoint stamp).
+    matrix_opt: String,
     steps: usize,
 }
 
@@ -114,7 +127,13 @@ impl NativeBackend {
                     .ok_or_else(|| anyhow::anyhow!("plan lost task `{}`", def.name))
             })
             .collect::<anyhow::Result<Vec<usize>>>()?;
-        Ok(NativeBackend { arch, plan, idx, steps: 0 })
+        Ok(NativeBackend {
+            arch,
+            plan,
+            idx,
+            matrix_opt: optimizer.to_string(),
+            steps: 0,
+        })
     }
 
     /// The resolved model spec.
@@ -135,6 +154,11 @@ impl NativeBackend {
     /// The checkpoint stamp this run writes/expects.
     fn stamp(&self) -> String {
         format!("{STAMP_PREFIX}{}:{}", self.arch.arch().name(), self.spec().tag)
+    }
+
+    /// The optimizer stamp this run writes/expects.
+    fn optim_stamp(&self) -> String {
+        format!("{OPT_STAMP_PREFIX}{}", self.matrix_opt)
     }
 
     /// Forward/backward only: compute the batch loss and the *raw*
@@ -301,8 +325,13 @@ impl TrainBackend for NativeBackend {
 
     fn export_state(&mut self) -> anyhow::Result<TrainState> {
         // the arch/tag stamp leads the parameter section so a resume can
-        // verify the checkpoint matches the model before touching weights
-        let mut params = vec![NamedBuffer { name: self.stamp(), data: Vec::new() }];
+        // verify the checkpoint matches the model before touching weights;
+        // the optimizer stamp follows so same-named state buffers cannot
+        // silently cross optimizers
+        let mut params = vec![
+            NamedBuffer { name: self.stamp(), data: Vec::new() },
+            NamedBuffer { name: self.optim_stamp(), data: Vec::new() },
+        ];
         let mut opt = Vec::new();
         self.plan.with_all_tasks(|tasks| {
             for t in tasks.iter() {
@@ -337,7 +366,28 @@ impl TrainBackend for NativeBackend {
             ),
             Some(_) => {}
         }
-        let mut used_params = 1usize; // the stamp
+        // optimizer stamp second: identical buffer names (e.g. rmnp and
+        // muon both export only `momentum`) must not let a checkpoint
+        // resume under a different optimizer. Absent stamp = pre-zoo
+        // checkpoint, accepted for back-compat.
+        let want_opt = self.optim_stamp();
+        let mut used_params = 1usize; // the model stamp
+        match state
+            .params
+            .iter()
+            .find(|b| b.name.starts_with(OPT_STAMP_PREFIX))
+        {
+            Some(b) if b.name != want_opt => anyhow::bail!(
+                "checkpoint was written by optimizer `{}` but this run uses \
+                 `{}` — refusing to reinterpret optimizer state across \
+                 optimizers (restart, or resume with --set train.optimizer={})",
+                &b.name[OPT_STAMP_PREFIX.len()..],
+                &want_opt[OPT_STAMP_PREFIX.len()..],
+                &b.name[OPT_STAMP_PREFIX.len()..]
+            ),
+            Some(_) => used_params += 1,
+            None => {}
+        }
         let mut used_opt = 0usize;
         self.plan.with_all_tasks(|tasks| -> anyhow::Result<()> {
             for t in tasks.iter_mut() {
@@ -628,7 +678,7 @@ mod tests {
     fn import_rejects_mismatched_checkpoints() {
         let mut a = NativeBackend::new("gpt2_tiny", "rmnp", 1, 1).unwrap();
         let mut saved = a.export_state().unwrap();
-        saved.params[1].data.pop(); // params[0] is the stamp
+        saved.params[2].data.pop(); // params[0]/[1] are the model/optim stamps
         assert!(a.import_state(&saved).is_err(), "short buffer must fail");
         let mut b = NativeBackend::new("gpt2_small", "rmnp", 1, 1).unwrap();
         let other = b.export_state().unwrap();
@@ -642,6 +692,37 @@ mod tests {
             muon.import_state(&adamw_state).is_err(),
             "wrong optimizer must fail"
         );
+    }
+
+    #[test]
+    fn import_rejects_same_buffer_name_cross_optimizer() {
+        // rmnp and muon both export exactly `momentum` per matrix param —
+        // before the __optim__ stamp this imported silently
+        let rmnp_state = NativeBackend::new("gpt2_tiny", "rmnp", 1, 1)
+            .unwrap()
+            .export_state()
+            .unwrap();
+        let mut muon = NativeBackend::new("gpt2_tiny", "muon", 1, 1).unwrap();
+        let err = muon.import_state(&rmnp_state).unwrap_err().to_string();
+        assert!(
+            err.contains("rmnp") && err.contains("muon"),
+            "optim stamp mismatch must name both optimizers: {err}"
+        );
+        // nora → muon: the two the ISSUE names (nora has extra v/t state)
+        let nora_state = NativeBackend::new("gpt2_tiny", "nora", 1, 1)
+            .unwrap()
+            .export_state()
+            .unwrap();
+        let err = muon.import_state(&nora_state).unwrap_err().to_string();
+        assert!(err.contains("nora"), "{err}");
+        // same-optimizer round-trip still works
+        let mut rmnp = NativeBackend::new("gpt2_tiny", "rmnp", 2, 1).unwrap();
+        rmnp.import_state(&rmnp_state).unwrap();
+        // a checkpoint without the optimizer stamp (pre-zoo build) is
+        // accepted — back-compat with v2/v3 checkpoints on disk
+        let mut old = rmnp.export_state().unwrap();
+        old.params.retain(|b| !b.name.starts_with(OPT_STAMP_PREFIX));
+        rmnp.import_state(&old).unwrap();
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Counting-allocator proof of the allocation-free optimizer hot path:
-//! after warmup, `RmnpState::step` and (with a warm workspace)
-//! `MuonState::step` perform zero heap allocations per call.
+//! after warmup, `RmnpState::step`, (with a warm workspace)
+//! `MuonState::step`, and every other native registry optimizer perform
+//! zero heap allocations per call.
 //!
 //! This file intentionally contains a single test: the counting allocator
 //! is process-global, so concurrent tests would pollute the counter.
@@ -11,7 +12,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use rmnp::config::DataSpec;
 use rmnp::data::corpus::token_source;
 use rmnp::model::{attention::AttentionArch, model_spec, ssm::SsmArch, Batch, ModelArch, ParamInit};
-use rmnp::optim::plan::{OptKind, ParamTask, StepPlan};
+use rmnp::optim::plan::{OptKind, OptState, ParamTask, StepPlan};
+use rmnp::optim::registry::{MatrixOptimizer, REGISTRY};
 use rmnp::optim::{MuonState, RmnpState};
 use rmnp::tensor::Matrix;
 use rmnp::util::Rng;
@@ -86,6 +88,28 @@ fn optimizer_steps_are_allocation_free_after_warmup() {
     // d + x + gram + poly + prod: the fused bA + cA² polynomial dropped
     // the A² buffer that used to make this 6
     assert_eq!(st.workspace.fresh_allocs(), 5, "one alloc per NS5 buffer");
+
+    // --- optimizer zoo: the same contract for every native registry
+    // entry, through the `OptState` dispatch the StepPlan uses. The
+    // row-normalized family (rmnp, nora) is fused and never allocates;
+    // the NS family (muon, normuon, turbo_muon, muown) draws its
+    // intermediates from the state's workspace, filled by the first
+    // (warmup) step. ---
+    for (name, kind) in REGISTRY.iter().filter_map(|s| s.native.map(|k| (s.name, k))) {
+        let g = Matrix::randn(40, 56, 1.0, &mut rng);
+        let mut w = Matrix::randn(40, 56, 0.1, &mut rng);
+        let mut st = OptState::new(kind, 40, 56);
+        st.step(&mut w, &g, 1e-3); // warmup: fills any workspace pool
+        let before = allocs();
+        for _ in 0..5 {
+            st.step(&mut w, &g, 1e-3);
+        }
+        assert_eq!(
+            allocs(),
+            before,
+            "warm {name} step must be allocation-free per call"
+        );
+    }
 
     // --- model layer: warm fwd/bwd is allocation-free, including the
     // new row-softmax/RMSNorm sweeps (attention) and the scan buffers

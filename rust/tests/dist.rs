@@ -126,6 +126,32 @@ fn final_checkpoint_is_bit_exact_for_any_worker_count() {
     assert_eq!(finals[0], finals[2], "1-worker and 3-worker runs diverged");
 }
 
+/// The same worker-count determinism contract for the optimizer zoo's
+/// stateful entries: nora and normuon carry per-row second-moment
+/// buffers and a step counter on top of the momentum, so their state
+/// must shard, reduce, and checkpoint bit-exactly too.
+#[test]
+fn zoo_optimizers_are_bit_exact_across_worker_counts() {
+    for optimizer in ["nora", "normuon"] {
+        let mut finals = Vec::new();
+        for workers in [1usize, 2] {
+            let out = tmp_out(&format!("zoo-{optimizer}-{workers}"));
+            let mut cfg = dist_cfg(out.clone(), 6, workers);
+            cfg.optimizer = optimizer.into();
+            let (run, results) = run_dist(cfg, workers);
+            assert_eq!(run.steps_run, 6);
+            assert_eq!(run.deaths, 0, "{optimizer}/{workers}: run saw deaths");
+            let shards_done: usize = results.iter().map(|r| r.shards_done).sum();
+            assert_eq!(shards_done, 2 * 6);
+            finals.push(std::fs::read(out.join("step-6.ckpt")).unwrap());
+        }
+        assert_eq!(
+            finals[0], finals[1],
+            "{optimizer}: 1-worker and 2-worker runs diverged"
+        );
+    }
+}
+
 /// Coordinator restart: finish a 6-step run, then resume the same
 /// directory to 12 steps with a fresh worker fleet. The result must be
 /// byte-identical to an uninterrupted 12-step run, and `steps_run` on

@@ -12,7 +12,7 @@
 
 use std::sync::{Mutex, MutexGuard};
 
-use rmnp::optim::plan::{tasks_from_shapes, OptKind, OptState, StepPlan};
+use rmnp::optim::plan::{tasks_from_shapes, OptKind, StepPlan};
 use rmnp::optim::{
     newton_schulz5_into, newton_schulz5_naive, rms_scale, MuonState, RmnpState,
     MATRIX_BETA, ROW_EPS, WEIGHT_DECAY,
@@ -438,6 +438,11 @@ fn plan_under_test(threads: usize) -> StepPlan {
     );
     tasks.extend(tasks_from_shapes(&[((20, 36), 2)], OptKind::Muon, 0.3, &mut rng));
     tasks.extend(tasks_from_shapes(&[((32, 32), 1)], OptKind::AdamW, 0.3, &mut rng));
+    // the optimizer zoo shards through the same plan
+    tasks.extend(tasks_from_shapes(&[((24, 40), 1)], OptKind::Nora, 0.3, &mut rng));
+    tasks.extend(tasks_from_shapes(&[((40, 24), 1)], OptKind::NorMuon, 0.3, &mut rng));
+    tasks.extend(tasks_from_shapes(&[((28, 28), 1)], OptKind::TurboMuon, 0.3, &mut rng));
+    tasks.extend(tasks_from_shapes(&[((18, 44), 1)], OptKind::Muown, 0.3, &mut rng));
     StepPlan::new(tasks, threads)
 }
 
@@ -476,16 +481,8 @@ fn step_plan_bits_identical_across_plan_threads() {
     // momentum state must agree too, not just the weights
     for plan in &plans[1..] {
         for i in 0..plan.len() {
-            let want = plans[0].with_task(i, |t| match &t.state {
-                OptState::Rmnp(s) => Some(s.momentum.clone()),
-                OptState::Muon(s) => Some(s.momentum.clone()),
-                OptState::AdamW(_) => None,
-            });
-            let got = plan.with_task(i, |t| match &t.state {
-                OptState::Rmnp(s) => Some(s.momentum.clone()),
-                OptState::Muon(s) => Some(s.momentum.clone()),
-                OptState::AdamW(_) => None,
-            });
+            let want = plans[0].with_task(i, |t| t.state.momentum().cloned());
+            let got = plan.with_task(i, |t| t.state.momentum().cloned());
             assert_eq!(got, want, "momentum diverged on task {i}");
         }
     }

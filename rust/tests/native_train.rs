@@ -61,13 +61,15 @@ fn native_pretrain_learns_and_writes_metrics() {
 }
 
 /// The acceptance-criteria centerpiece: save/restore/continue is
-/// bit-exact vs an uninterrupted run for rmnp, muon, and adamw, across
-/// plan_threads ∈ {1, 4}. Compares the final checkpoints byte-for-byte.
+/// bit-exact vs an uninterrupted run for rmnp, muon, adamw, and the
+/// zoo's row-second-moment entries (nora, normuon — the ones with extra
+/// per-row state buffers and step counters), across plan_threads ∈
+/// {1, 4}. Compares the final checkpoints byte-for-byte.
 #[test]
 fn checkpoint_resume_is_bit_exact_across_optimizers_and_threads() {
     const STEPS: usize = 10;
     const HALF: usize = 5;
-    for optimizer in ["rmnp", "muon", "adamw"] {
+    for optimizer in ["rmnp", "muon", "adamw", "nora", "normuon"] {
         // reference checkpoint bytes, computed once per optimizer with
         // plan_threads = 1
         let mut reference: Option<Vec<u8>> = None;
@@ -265,6 +267,27 @@ fn every_arch_saves_and_resumes_bit_exact_end_to_end() {
             std::fs::read_to_string(full.out_dir.join("summary.jsonl")).unwrap();
         assert!(summary.contains(&format!("\"arch\":\"{arch}\"")), "{summary}");
     }
+}
+
+#[test]
+fn resume_with_mismatched_optimizer_is_a_clean_error() {
+    // save under nora, resume with muon: both are matrix optimizers on
+    // the same parameter set, and nora's `momentum` buffer would satisfy
+    // muon's import by name — the __optim__ stamp must reject it instead
+    // of silently reinterpreting state
+    let mut a = cfg("nora", 4, 1, "optim-mismatch-save");
+    a.eval_every = 0;
+    a.checkpoint_every = 4;
+    train::run_auto(&a).unwrap();
+    let mut b = a.clone();
+    b.optimizer = "muon".into();
+    b.steps = 8;
+    b.resume = true;
+    let err = train::run_auto(&b).unwrap_err().to_string();
+    assert!(
+        err.contains("nora") && err.contains("muon"),
+        "mismatched-optimizer resume must name both optimizers: {err}"
+    );
 }
 
 #[test]

@@ -22,7 +22,13 @@
 #   * the distributed coordinator's per-step overhead at worker count 1
 #     (localhost TCP, CRC framing both ways) exceeds 4x the plain local
 #     loop, or the dist run's final weights stop being bit-exact against
-#     the local loop.
+#     the local loop,
+#   * the optimizer-zoo shootout loses registry coverage (every registry
+#     entry must appear in BENCH_shootout.json as a case or an explicit
+#     skip), any run diverges at its registry default LR, or rmnp's
+#     isolated per-step preconditioning cost exceeds muon's at the
+#     d >= 512 gate shape (the paper's O(mn) vs O(mn·min(m,n)) claim,
+#     measured instead of asserted).
 # On success it appends dated BENCH_precond / BENCH_train_step snapshots
 # to bench_history/ so the next PR has a trajectory baseline.
 set -euo pipefail
@@ -51,6 +57,10 @@ BENCH_REPEATS="${BENCH_REPEATS:-2}" cargo bench --bench faults
 
 echo "== cargo bench --bench dist (coordination overhead vs local loop) =="
 BENCH_REPEATS="${BENCH_REPEATS:-2}" cargo bench --bench dist
+
+echo "== cargo bench --bench shootout (optimizer zoo, matched budgets) =="
+BENCH_SHOOTOUT_STEPS="${BENCH_SHOOTOUT_STEPS:-20}" BENCH_REPEATS="${BENCH_REPEATS:-2}" \
+    cargo bench --bench shootout
 
 echo "== checking BENCH_precond.json =="
 # newest prior-PR snapshot, if any (first run has none — that's fine)
@@ -219,6 +229,71 @@ if bad:
 print("dist envelope OK")
 EOF
 
+echo "== checking BENCH_shootout.json =="
+python3 - <<'EOF'
+import json
+
+with open("BENCH_shootout.json") as f:
+    doc = json.load(f)
+
+bad = []
+cases = doc["cases"]
+skipped = doc.get("skipped", [])
+costs = doc["step_cost"]
+assert cases, "shootout produced no cases"
+
+# registry coverage: every optimizer must show up as a case or an
+# explicit skip — a silently vanished entry is a gate failure
+expected = {
+    "rmnp", "muon", "adamw", "nora", "normuon",
+    "turbo_muon", "muown", "shampoo", "soap",
+}
+seen = {c["optimizer"] for c in cases} | {s["optimizer"] for s in skipped}
+missing = expected - seen
+if missing:
+    bad.append(f"registry coverage lost: missing {sorted(missing)}")
+
+by_model = {}
+for c in cases:
+    by_model.setdefault(c["model"], []).append(c)
+for model, rows in by_model.items():
+    print(f"  [{model} / {rows[0]['arch']}]")
+    for c in rows:
+        print(
+            f"    {c['optimizer']:<10} {c['steps_per_s']:>8.1f} steps/s"
+            f"  loss {c['final_loss']:.3f}"
+        )
+        if not (0.0 < c["final_loss"] < 20.0):
+            bad.append(f"implausible final loss in {c}")
+for s in skipped:
+    print(f"  skipped {s['optimizer']:<10} {s['reason']}")
+
+# the paper's cost claim, measured: rmnp's fused O(mn) step must not
+# cost more than muon's O(mn·min(m,n)) NS5 step at the d >= 512 shape
+cost = {c["optimizer"]: c for c in costs}
+for c in costs:
+    print(
+        f"  step cost {c['optimizer']:<10} {c['rows']}x{c['cols']}"
+        f"  {c['step_median_s']*1e3:.3f} ms"
+    )
+if "rmnp" in cost and "muon" in cost:
+    r, m = cost["rmnp"], cost["muon"]
+    if r["cols"] >= 512 and r["step_median_s"] > m["step_median_s"]:
+        bad.append(
+            f"rmnp per-step cost {r['step_median_s']*1e3:.3f} ms exceeds "
+            f"muon's {m['step_median_s']*1e3:.3f} ms at {r['rows']}x{r['cols']}"
+        )
+else:
+    bad.append("step_cost section lost rmnp or muon")
+
+if bad:
+    print("FAIL:")
+    for b in bad:
+        print("  " + b)
+    raise SystemExit(1)
+print("shootout envelope OK")
+EOF
+
 # record this run for the next PR's trajectory gate (only after the gates
 # above passed — failing runs must not become baselines)
 mkdir -p "$ROOT/bench_history"
@@ -229,4 +304,5 @@ cp BENCH_train_step.json "$ROOT/bench_history/${STAMP}_train_step.json"
 cp BENCH_host_train.json "$ROOT/bench_history/${STAMP}_host_train.json"
 cp BENCH_faults.json "$ROOT/bench_history/${STAMP}_faults.json"
 cp BENCH_dist.json "$ROOT/bench_history/${STAMP}_dist.json"
-echo "recorded bench_history/${STAMP}_{precond,train_step,host_train,faults,dist}.json"
+cp BENCH_shootout.json "$ROOT/bench_history/${STAMP}_shootout.json"
+echo "recorded bench_history/${STAMP}_{precond,train_step,host_train,faults,dist,shootout}.json"
