@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""Golden vectors for the bf16 round-to-nearest-even codec.
+
+Emits rust/tests/golden/bf16_golden.json: pairs of (f32 bit pattern,
+expected bf16 bit pattern), computed with an *independent* rounding
+formulation (explicit round/sticky bits over struct-packed IEEE-754
+words) rather than the add-trick the Rust code uses — so the test pins
+the rounding semantics, not self-consistency. Includes exact halfway
+ties in both directions, subnormals, overflow-to-inf, infinities, and
+NaN quieting.
+
+Regenerate with:  python3 python/gen_bf16_golden.py
+"""
+
+import json
+import os
+import struct
+
+
+def f32_bits(x):
+    return struct.unpack("<I", struct.pack("<f", x))[0]
+
+
+def bits_f32(b):
+    return struct.unpack("<f", struct.pack("<I", b))[0]
+
+
+def bf16_rne(bits):
+    """Round the f32 bit pattern to bf16 with round-to-nearest-even."""
+    exp = (bits >> 23) & 0xFF
+    man = bits & 0x7FFFFF
+    if exp == 0xFF and man != 0:  # NaN: quiet it, keep the payload's top bits
+        return ((bits >> 16) | 0x0040) & 0xFFFF
+    kept = bits >> 16
+    round_bit = (bits >> 15) & 1
+    sticky = bits & 0x7FFF
+    if round_bit and (sticky != 0 or (kept & 1)):
+        kept += 1  # may carry into the exponent: overflow rounds to inf
+    return kept & 0xFFFF
+
+
+def main():
+    values = [
+        0.0, -0.0, 1.0, -1.0, 2.0, 1.5, -0.5, 0.25, -0.0078125,
+        0.1, -0.1, 3.14159265, 2.7182818, 1e-8, 123456.789, 65504.0,
+        1e-40, -1e-40,              # subnormals survive (bf16 shares the exponent range)
+        3.389e38, 3.4e38,           # near/over bf16 max: RNE rounds the latter to inf
+        float("inf"), float("-inf"),
+    ]
+    bit_patterns = [f32_bits(v) for v in values]
+    # exact halfway ties (round bit set, sticky clear): RNE goes to even,
+    # so 0x3F80 stays and 0x3F81 bumps; both signs; exponent-carry tie
+    for kept in (0x3F80, 0x3F81, 0x4000, 0x4001, 0xBF80, 0xBF81,
+                 0x7F00, 0x7F7F, 0x0080, 0x0001, 0x8081, 0x3FFF):
+        bit_patterns.append((kept << 16) | 0x8000)
+    # ties broken by sticky bits (must round up regardless of evenness)
+    bit_patterns.append((0x3F80 << 16) | 0x8001)
+    bit_patterns.append((0xBF80 << 16) | 0xFFFF)
+    # NaNs: payload preserved in the kept bits, quiet bit forced on
+    bit_patterns.append(0x7FC00000)  # canonical quiet NaN
+    bit_patterns.append(0x7F800001)  # signaling NaN -> quieted, not inf
+    bit_patterns.append(0xFFC01234)  # negative NaN with payload
+
+    cases = [
+        {"f32_bits": b, "bf16_bits": bf16_rne(b)} for b in bit_patterns
+    ]
+    out = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "..", "rust", "tests", "golden", "bf16_golden.json",
+    )
+    with open(out, "w") as f:
+        json.dump({"cases": cases}, f, indent=1)
+        f.write("\n")
+    print(f"wrote {len(cases)} cases to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+#!/usr/bin/env python3
+"""Independent oracle for the dist wire frames pinned in dist/wire.rs.
+
+Builds each golden frame from the documented layout alone — struct-packed
+little-endian fields, zlib CRC-32 over the payload — and prints the byte
+arrays the Rust tests assert against. If this script and the Rust encoder
+ever disagree, the wire format drifted.
+
+Run with:  python3 python/gen_wire_golden.py
+"""
+
+import binascii
+import struct
+
+
+def frame(payload):
+    return struct.pack("<II", len(payload), binascii.crc32(payload)) + payload
+
+
+def show(name, buf):
+    print(f"{name} ({len(buf)} bytes):")
+    print("  [" + ", ".join(f"0x{b:02X}" for b in buf) + "]")
+
+
+def main():
+    # Heartbeat { rank: 7 } — tag 4 (pinned since PR 7)
+    show("Heartbeat{rank:7}", frame(struct.pack("<BI", 4, 7)))
+
+    # ShardGradChunk { step: 7, shard: 1, seq: 2, total: 3, codec: bf16(1),
+    #   elems: 2, loss: 1.5, data: bf16(1.5), bf16(-0.5) } — tag 12
+    data = struct.pack("<HH", 0x3FC0, 0xBF00)  # bf16 bits of 1.5, -0.5
+    payload = struct.pack("<BQIIIBIf", 12, 7, 1, 2, 3, 1, 2, 1.5)
+    payload += struct.pack("<I", len(data)) + data
+    show("ShardGradChunk", frame(payload))
+
+    # ApplyChunk { step: 7, seq: 0, total: 2, codec: none(0), elems: 1,
+    #   data: f32(1.0) } — tag 13
+    data = struct.pack("<f", 1.0)
+    payload = struct.pack("<BQIIBI", 13, 7, 0, 2, 0, 1)
+    payload += struct.pack("<I", len(data)) + data
+    show("ApplyChunk", frame(payload))
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,13 @@
 //! paths land on bit-identical weights (`bitexact_vs_local`), which
 //! `scripts/bench_check.sh` gates on alongside the overhead.
 //!
+//! On top of that it measures the streaming wire economics: total wire
+//! bytes per step (gradient chunks up + apply chunks down + control
+//! frames, via the `wire::bytes_written` counter) under both
+//! `dist.compress` modes — `wire_ratio_bf16` is gated ≤ 0.55 — and the
+//! per-step wall clock at 2 workers, where compute halves per replica
+//! and chunk N ships while N+1 is still being computed.
+//!
 //! Env knobs: `BENCH_REPEATS` (samples per measurement, default 3),
 //! `RMNP_THREADS`, `RMNP_SIMD`.
 
@@ -23,13 +30,16 @@ use rmnp::config::{DataSpec, RunConfig};
 use rmnp::coordinator::{checkpoint, guard, lr_at};
 use rmnp::data::corpus::token_source;
 use rmnp::dist::worker::{self, WorkerOpts};
-use rmnp::dist::{coordinator as dist_coordinator, reduce_shards, CLIP_NORM, SHARD_SPLIT_BASE};
+use rmnp::dist::{
+    coordinator as dist_coordinator, read_addr_file, reduce_shards, wire, CLIP_NORM,
+    SHARD_SPLIT_BASE,
+};
 use rmnp::runtime::{Batch, BatchShape, NativeBackend, TrainBackend, TrainState};
 
 const STEPS: usize = 12;
 const SHARDS: usize = 2;
 
-fn bench_cfg(out: PathBuf) -> RunConfig {
+fn bench_cfg(out: PathBuf, workers: usize, compress: &str) -> RunConfig {
     RunConfig {
         model: "gpt2_tiny".into(),
         optimizer: "rmnp".into(),
@@ -39,41 +49,54 @@ fn bench_cfg(out: PathBuf) -> RunConfig {
         eval_every: 0,
         checkpoint_every: STEPS, // one final checkpoint; needed for the bit check
         out_dir: out,
-        dist_workers: 1,
+        dist_workers: workers,
         dist_shards: SHARDS,
         dist_bind: "127.0.0.1:0".into(),
+        dist_compress: compress.into(),
         ..RunConfig::default()
     }
 }
 
-/// One full 1-worker distributed run: coordinator + worker threads over
+/// One full distributed run: coordinator + `workers` worker threads over
 /// localhost TCP. Returns the final checkpoint path.
-fn dist_run(out: &Path) -> PathBuf {
+fn dist_run(out: &Path, workers: usize, compress: &str) -> PathBuf {
     let _ = std::fs::remove_dir_all(out);
-    let cfg = bench_cfg(out.to_path_buf());
+    let cfg = bench_cfg(out.to_path_buf(), workers, compress);
     let dir = cfg.out_dir.clone();
     let coord = std::thread::spawn(move || dist_coordinator::run(&cfg));
-    let addr = loop {
-        if let Ok(text) = std::fs::read_to_string(dir.join("coordinator.addr")) {
-            let text = text.trim();
-            if !text.is_empty() {
-                break text.to_string();
-            }
+    let (addr, nonce) = loop {
+        if let Ok(parsed) = read_addr_file(&dir.join("coordinator.addr")) {
+            break parsed;
         }
         std::thread::sleep(Duration::from_millis(1));
     };
-    let opts = WorkerOpts {
-        connect: addr,
-        worker_id: "bench0".into(),
-        plan_threads: 0,
-        heartbeat_ms: 50,
-        worker_timeout_ms: 30_000,
-        connect_attempts: 8,
-    };
-    let work = std::thread::spawn(move || worker::run(&opts));
+    let fleet: Vec<_> = (0..workers)
+        .map(|i| {
+            let opts = WorkerOpts {
+                connect: addr.clone(),
+                worker_id: format!("bench{i}"),
+                plan_threads: 0,
+                heartbeat_ms: 50,
+                worker_timeout_ms: 30_000,
+                connect_attempts: 8,
+                expect_nonce: nonce,
+            };
+            std::thread::spawn(move || worker::run(&opts))
+        })
+        .collect();
     coord.join().unwrap().expect("dist run failed");
-    work.join().unwrap().expect("worker failed");
+    for w in fleet {
+        w.join().unwrap().expect("worker failed");
+    }
     out.join(format!("step-{STEPS}.ckpt"))
+}
+
+/// Total wire bytes (all sockets, both directions — this process hosts
+/// every peer) for one full run in `compress` mode, per step.
+fn wire_bytes_per_step(out: &Path, compress: &str) -> f64 {
+    let before = wire::bytes_written();
+    dist_run(out, 1, compress);
+    (wire::bytes_written() - before) as f64 / STEPS as f64
 }
 
 /// The same job as a plain local loop: identical shard streams, the same
@@ -116,10 +139,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     let dir = std::env::temp_dir().join(format!("rmnp-bench-dist-{}", std::process::id()));
-    let cfg = bench_cfg(dir.clone());
+    let cfg = bench_cfg(dir.clone(), 1, "none");
 
     // warm-up + bit-exactness: one run of each path, compared elementwise
-    let ckpt = dist_run(&dir);
+    let ckpt = dist_run(&dir, 1, "none");
     let mut dist_state = checkpoint::load_state(&ckpt)?;
     let _ = guard::extract_guard(&mut dist_state); // drop the guard stamp
     let local_state = local_run(&cfg);
@@ -137,24 +160,41 @@ fn main() -> anyhow::Result<()> {
         if bitexact { "yes" } else { "NO" }
     );
 
+    // wire economics: bytes/step under each codec, same 1-worker job
+    let wire_f32 = wire_bytes_per_step(&dir, "none");
+    let wire_bf16 = wire_bytes_per_step(&dir, "bf16");
+    let wire_ratio = wire_bf16 / wire_f32.max(1e-12);
+    println!(
+        "wire bytes/step: f32 {:.0}, bf16 {:.0} (ratio {:.3})",
+        wire_f32, wire_bf16, wire_ratio
+    );
+
     println!("full-run timings ({STEPS} steps, {SHARDS} shards):");
     let local = bench_n("local_loop", 1, repeats, || {
         local_run(&cfg);
     });
     println!("  {}", local.report_line());
     let dist = bench_n("dist_1worker", 1, repeats, || {
-        dist_run(&dir);
+        dist_run(&dir, 1, "none");
     });
     println!("  {}", dist.report_line());
+    let dir2 = std::env::temp_dir().join(format!("rmnp-bench-dist2-{}", std::process::id()));
+    let dist2 = bench_n("dist_2worker", 1, repeats, || {
+        dist_run(&dir2, 2, "none");
+    });
+    println!("  {}", dist2.report_line());
 
     let local_step = local.median() / STEPS as f64;
     let dist_step = dist.median() / STEPS as f64;
+    let dist_step_2w = dist2.median() / STEPS as f64;
     let overhead_frac = (dist_step - local_step) / local_step.max(1e-12);
     println!(
-        "  -> local {}/step, dist {}/step, coordination overhead {:+.1}%",
+        "  -> local {}/step, dist {}/step (1w, overhead {:+.1}%), {}/step (2w, {:.2}x vs 1w)",
         fmt_secs(local_step),
         fmt_secs(dist_step),
-        overhead_frac * 100.0
+        overhead_frac * 100.0,
+        fmt_secs(dist_step_2w),
+        dist_step / dist_step_2w.max(1e-12)
     );
 
     let doc = envelope(
@@ -165,16 +205,22 @@ fn main() -> anyhow::Result<()> {
             ("elems", int(elems)),
             ("local_step_s", num(local_step)),
             ("dist_step_s", num(dist_step)),
+            ("dist_step_2w_s", num(dist_step_2w)),
             ("overhead_frac", num(overhead_frac)),
+            ("wire_bytes_per_step_f32", num(wire_f32)),
+            ("wire_bytes_per_step_bf16", num(wire_bf16)),
+            ("wire_ratio_bf16", num(wire_ratio)),
             ("bitexact_vs_local", int(bitexact as usize)),
         ],
     );
     report::write(Path::new("BENCH_dist.json"), &doc)?;
     println!(
-        "wrote BENCH_dist.json (overhead {:+.1}%, bitexact={})",
+        "wrote BENCH_dist.json (overhead {:+.1}%, wire ratio {:.3}, bitexact={})",
         overhead_frac * 100.0,
+        wire_ratio,
         bitexact as usize
     );
     let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir2);
     Ok(())
 }

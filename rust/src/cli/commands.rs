@@ -290,6 +290,7 @@ pub fn exp(args: &Args) -> anyhow::Result<()> {
                 checkpoint_every: args.usize_or("checkpoint-every", 3),
                 kills: args.usize_or("kills", 2),
                 seed: opts.seed,
+                compress: args.str_or("compress", "none").to_string(),
             };
             let rows =
                 exp::faults::run_filtered(&bin, &fopts, args.str_or("scenarios", ""))?;
@@ -340,7 +341,8 @@ pub fn coordinator(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `rmnp worker` — one distributed worker: dial the coordinator given by
-/// `--connect` (or `dist.connect`), compute shard gradients, apply the
+/// `--connect`, `--addr-file` (the coordinator's published addr + run
+/// nonce), or `dist.connect`; compute shard gradients, apply the
 /// broadcast updates. The run definition (model, optimizer, seed, resume
 /// state) comes from the coordinator, not from local flags.
 pub fn worker(args: &Args) -> anyhow::Result<()> {
@@ -352,10 +354,14 @@ pub fn worker(args: &Args) -> anyhow::Result<()> {
         cfg.apply_override(kv)?;
     }
     cfg.apply_perf()?;
-    let connect = args
-        .flag("connect")
-        .map(str::to_string)
-        .unwrap_or_else(|| cfg.dist_connect.clone());
+    // --addr-file also yields the run nonce, so a worker launched off a
+    // stale file fails the registration echo check instead of joining a
+    // different run; an explicit --connect takes precedence
+    let (connect, expect_nonce) = match (args.flag("connect"), args.flag("addr-file")) {
+        (Some(c), _) => (c.to_string(), None),
+        (None, Some(f)) => crate::dist::read_addr_file(Path::new(f))?,
+        (None, None) => (cfg.dist_connect.clone(), None),
+    };
     let worker_id = args
         .flag("id")
         .map(str::to_string)
@@ -367,6 +373,7 @@ pub fn worker(args: &Args) -> anyhow::Result<()> {
         heartbeat_ms: cfg.dist_heartbeat_ms,
         worker_timeout_ms: cfg.dist_worker_timeout_ms,
         connect_attempts: 8,
+        expect_nonce,
     };
     let result = crate::dist::worker::run(&opts)?;
     println!(

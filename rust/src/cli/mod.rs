@@ -3,7 +3,7 @@
 //! ```text
 //! rmnp train   [--config F] [--set k=v]... [--resume]   one training run
 //! rmnp coordinator [--workers N] [--bind ADDR] [--resume]  distributed run
-//! rmnp worker  --connect ADDR [--id NAME]        one data-parallel worker
+//! rmnp worker  --connect ADDR | --addr-file F [--id NAME]  one data-parallel worker
 //! rmnp exp     <precond|pretrain|sweep|dominance|extended|ablation-embed|
 //!               ssm|vision|cliprate|stepplan|shootout|faults|all>
 //!                                        [opts]         paper experiments
@@ -34,7 +34,8 @@ USAGE:
   rmnp coordinator [--config FILE] [--set k=v]... [--resume]
                           [--workers N] [--bind HOST:PORT]
                           (bound address lands in <out.dir>/coordinator.addr)
-  rmnp worker  --connect HOST:PORT [--id NAME] [--set k=v]...
+  rmnp worker  --connect HOST:PORT | --addr-file FILE [--id NAME] [--set k=v]...
+                          (--addr-file reads the coordinator's addr + run nonce)
   rmnp exp precond        [--max-d N] [--repeats N]
   rmnp exp pretrain       --family gpt2|llama|ssm|vision [--dataset markov|zipf|ngram|images]
                           [--scales a,b,...] [--steps N] [--workers N]
@@ -51,6 +52,7 @@ USAGE:
                           (every registry optimizer head-to-head, native backend)
   rmnp exp faults         [--kills N] [--steps N] [--checkpoint-every N]
                           [--scenarios SUBSTR] (filter: e.g. --scenarios dist)
+                          [--compress none|bf16] (dist scenarios' wire codec)
   rmnp exp all            [--steps N] (scaled-down full suite)
   rmnp report cliprate    [--runs DIR]
   rmnp data sample        [--corpus markov] [--n 64] [--seed 1]

@@ -186,6 +186,12 @@ pub struct RunConfig {
     /// Coordinator aborts if the full worker set hasn't registered within
     /// this many ms (`dist.join_timeout_ms`).
     pub dist_join_timeout_ms: u64,
+    /// Gradient wire codec (`dist.compress`): `"none"` ships f32 bits
+    /// verbatim, `"bf16"` halves the gradient bytes per step with
+    /// round-to-nearest-even truncation. Either mode is bit-exact across
+    /// worker counts; the two modes are distinct trajectories. See
+    /// [`crate::dist::compress`].
+    pub dist_compress: String,
 }
 
 impl Default for RunConfig {
@@ -225,6 +231,7 @@ impl Default for RunConfig {
             dist_step_timeout_ms: 60_000,
             dist_worker_timeout_ms: 30_000,
             dist_join_timeout_ms: 60_000,
+            dist_compress: "none".into(),
         }
     }
 }
@@ -291,6 +298,13 @@ impl RunConfig {
         self.dist_join_timeout_ms = d
             .int_or("dist.join_timeout_ms", self.dist_join_timeout_ms as i64)
             .max(0) as u64;
+        if let Some(v) = d.get("dist.compress") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("dist.compress must be a string"))?;
+            crate::dist::compress::Compression::parse(s)?; // reject bad values early
+            self.dist_compress = s.to_string();
+        }
         if let Some(v) = d.get("runtime.backend") {
             self.backend = BackendKind::parse(
                 v.as_str()
@@ -464,6 +478,13 @@ corpus = "zipf"
         assert_eq!(cfg.dist_worker_timeout_ms, 2500);
         cfg.apply_override("dist.join_timeout_ms=30000").unwrap();
         assert_eq!(cfg.dist_join_timeout_ms, 30000);
+        assert_eq!(cfg.dist_compress, "none", "uncompressed wire is the default");
+        cfg.apply_override("dist.compress=bf16").unwrap();
+        assert_eq!(cfg.dist_compress, "bf16");
+        assert!(cfg.apply_override("dist.compress=fp8").is_err());
+        assert_eq!(cfg.dist_compress, "bf16", "bad codec value must not stick");
+        cfg.apply_override("dist.compress=none").unwrap();
+        assert_eq!(cfg.dist_compress, "none");
         cfg.apply_override("dist.workers=-2").unwrap();
         assert_eq!(cfg.dist_workers, 0, "negative clamps instead of wrapping");
         assert_eq!(cfg.steps, 42);

@@ -1,0 +1,258 @@
+//! Gradient wire compression for the distributed path (`dist.compress`).
+//!
+//! Two modes, selected by the coordinator's config and announced to
+//! workers in `RegisterAck` so both ends of every socket agree without
+//! per-frame negotiation:
+//!
+//! * `none` — raw little-endian f32, byte-exact with what the backend
+//!   produced (4 bytes/element);
+//! * `bf16` — round-to-nearest-even truncation to bfloat16 (2
+//!   bytes/element, the ≥2× payload cut), via the SIMD-layer
+//!   [`crate::tensor::simd::bf16_pack`] ladder.
+//!
+//! **Determinism.** The codec is pure elementwise bit arithmetic — no
+//! reductions — so encoded bytes are identical on every SIMD rung and
+//! every worker count. Under `bf16` the *values* differ from the `none`
+//! mode by one rounding step per element, but within a mode nothing is
+//! host- or topology-dependent: the coordinator decodes each worker's
+//! chunk to the same f32s those workers would re-send on a resend, and
+//! the f64 reduction downstream consumes them in shard-index order. The
+//! bit-exact-across-worker-counts contract therefore holds *per mode*
+//! (the two modes produce different — both deterministic — runs).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::simd;
+
+/// Wire compression mode (`dist.compress` config key).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Compression {
+    /// Raw little-endian f32 (4 bytes/element) — the default.
+    None,
+    /// Round-to-nearest-even bfloat16 (2 bytes/element).
+    Bf16,
+}
+
+impl Compression {
+    /// Parse a `dist.compress` config value.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "none" => Compression::None,
+            "bf16" => Compression::Bf16,
+            other => bail!("unknown dist.compress `{other}` (expected none|bf16)"),
+        })
+    }
+
+    /// The config-file spelling of this mode.
+    pub fn name(self) -> &'static str {
+        match self {
+            Compression::None => "none",
+            Compression::Bf16 => "bf16",
+        }
+    }
+
+    /// The stable one-byte codec id carried in every chunk frame.
+    pub fn id(self) -> u8 {
+        match self {
+            Compression::None => 0,
+            Compression::Bf16 => 1,
+        }
+    }
+
+    /// Inverse of [`Compression::id`]; unknown ids are a protocol error.
+    pub fn from_id(id: u8) -> Result<Self> {
+        Ok(match id {
+            0 => Compression::None,
+            1 => Compression::Bf16,
+            other => bail!("unknown gradient codec id {other}"),
+        })
+    }
+
+    /// Encoded size of one f32 element in this mode.
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            Compression::None => 4,
+            Compression::Bf16 => 2,
+        }
+    }
+}
+
+/// Reusable encoder/decoder for one gradient stream. Owns a staging
+/// buffer for the bf16 half-words so the warm path never allocates
+/// (chunk sizes repeat every step: one chunk per parameter).
+pub struct GradCodec {
+    mode: Compression,
+    /// bf16 staging: packed halves on encode, aligned halves on decode.
+    packed: Vec<u16>,
+}
+
+impl GradCodec {
+    /// A codec for `mode` with empty (lazily grown) staging buffers.
+    pub fn new(mode: Compression) -> Self {
+        GradCodec { mode, packed: Vec::new() }
+    }
+
+    /// The mode this codec was built for.
+    pub fn mode(&self) -> Compression {
+        self.mode
+    }
+
+    /// Pre-grow the staging buffer for chunks up to `elems` elements, so
+    /// even the first encode/decode of a run stays allocation-free.
+    pub fn reserve(&mut self, elems: usize) {
+        if self.mode == Compression::Bf16 && self.packed.len() < elems {
+            self.packed.resize(elems, 0);
+        }
+    }
+
+    /// Encode `src` into `out` (cleared first, capacity reused).
+    pub fn encode_into(&mut self, src: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        match self.mode {
+            Compression::None => {
+                out.reserve(src.len() * 4);
+                for &v in src {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Compression::Bf16 => {
+                self.reserve(src.len());
+                let halves = &mut self.packed[..src.len()];
+                simd::bf16_pack(src, halves);
+                out.reserve(src.len() * 2);
+                for &h in halves.iter() {
+                    out.extend_from_slice(&h.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Decode exactly `elems` elements from `data`, appending the f32s
+    /// to `out` (existing contents untouched — callers assemble a flat
+    /// gradient chunk by chunk). Warm calls do not allocate once `out`
+    /// has capacity and [`GradCodec::reserve`] has run.
+    pub fn decode_append(&mut self, data: &[u8], elems: usize, out: &mut Vec<f32>) -> Result<()> {
+        let want = elems * self.mode.bytes_per_elem();
+        if data.len() != want {
+            bail!(
+                "gradient chunk payload is {} bytes, expected {want} ({elems} x {} elems)",
+                data.len(),
+                self.mode.name()
+            );
+        }
+        let start = out.len();
+        out.resize(start + elems, 0.0);
+        match self.mode {
+            Compression::None => {
+                for (d, c) in out[start..].iter_mut().zip(data.chunks_exact(4)) {
+                    *d = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }
+            Compression::Bf16 => {
+                // stage through the u16 buffer: `data` has no alignment
+                // guarantee, and the SIMD unpack wants a typed slice
+                self.reserve(elems);
+                let halves = &mut self.packed[..elems];
+                for (h, c) in halves.iter_mut().zip(data.chunks_exact(2)) {
+                    *h = u16::from_le_bytes([c[0], c[1]]);
+                }
+                simd::bf16_unpack(halves, &mut out[start..]);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn mode_names_ids_and_sizes() {
+        for mode in [Compression::None, Compression::Bf16] {
+            assert_eq!(Compression::parse(mode.name()).unwrap(), mode);
+            assert_eq!(Compression::from_id(mode.id()).unwrap(), mode);
+        }
+        assert!(Compression::parse("zstd").is_err());
+        assert!(Compression::from_id(9).is_err());
+        assert_eq!(Compression::None.bytes_per_elem(), 4);
+        assert_eq!(Compression::Bf16.bytes_per_elem(), 2);
+    }
+
+    #[test]
+    fn none_mode_round_trips_bit_exact() {
+        let mut rng = Rng::new(3);
+        let mut src = vec![0.0f32; 129];
+        rng.fill_normal(&mut src, 5.0);
+        src[0] = -0.0;
+        src[7] = f32::MIN_POSITIVE / 2.0; // subnormal
+        let mut codec = GradCodec::new(Compression::None);
+        let mut wire = Vec::new();
+        codec.encode_into(&src, &mut wire);
+        assert_eq!(wire.len(), src.len() * 4);
+        let mut back = vec![1.0f32; 3]; // decode must append, not clobber
+        codec.decode_append(&wire, src.len(), &mut back).unwrap();
+        assert_eq!(back.len(), 3 + src.len());
+        for (a, b) in back[3..].iter().zip(&src) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_mode_round_trips_representable_values() {
+        // values whose mantissa fits in 7 bits survive exactly
+        let src = [0.0f32, 1.0, -1.5, 0.15625, -100.0, 3.0e38];
+        let mut codec = GradCodec::new(Compression::Bf16);
+        let mut wire = Vec::new();
+        codec.encode_into(&src, &mut wire);
+        assert_eq!(wire.len(), src.len() * 2, ">=2x payload cut");
+        let mut back = Vec::new();
+        codec.decode_append(&wire, src.len(), &mut back).unwrap();
+        for (a, b) in back.iter().zip(&src) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_mode_rounds_to_nearest_even() {
+        let mut codec = GradCodec::new(Compression::Bf16);
+        let mut wire = Vec::new();
+        // exact tie: 1.0 + 2^-8 → even neighbor 1.0
+        codec.encode_into(&[f32::from_bits(0x3F80_8000)], &mut wire);
+        assert_eq!(wire, [0x80, 0x3F]);
+        // tie + sticky: must round up
+        codec.encode_into(&[f32::from_bits(0x3F80_8001)], &mut wire);
+        assert_eq!(wire, [0x81, 0x3F]);
+    }
+
+    #[test]
+    fn decode_rejects_wrong_payload_size() {
+        let mut codec = GradCodec::new(Compression::Bf16);
+        let mut out = Vec::new();
+        assert!(codec.decode_append(&[0u8; 5], 2, &mut out).is_err());
+        assert!(out.is_empty(), "failed decode must not emit elements");
+        let mut codec = GradCodec::new(Compression::None);
+        assert!(codec.decode_append(&[0u8; 6], 2, &mut out).is_err());
+    }
+
+    #[test]
+    fn warm_encode_reuses_buffers() {
+        let mut rng = Rng::new(9);
+        let mut src = vec![0.0f32; 64];
+        rng.fill_normal(&mut src, 1.0);
+        for mode in [Compression::None, Compression::Bf16] {
+            let mut codec = GradCodec::new(mode);
+            let mut wire = Vec::new();
+            codec.encode_into(&src, &mut wire); // warmup sizes everything
+            let cap = wire.capacity();
+            for _ in 0..4 {
+                codec.encode_into(&src, &mut wire);
+                assert_eq!(wire.capacity(), cap, "{}: encode grew the buffer", mode.name());
+                let mut back = Vec::with_capacity(src.len());
+                codec.decode_append(&wire, src.len(), &mut back).unwrap();
+                assert_eq!(back.len(), src.len());
+            }
+        }
+    }
+}

@@ -1,12 +1,17 @@
 //! The distributed coordinator: roster, heartbeats, barriers, checkpoints.
 //!
 //! One coordinator process owns the run. It listens on `dist.bind`
-//! (publishing the bound address to `<out_dir>/coordinator.addr`), waits
+//! (publishing the bound address — plus a fresh run nonce workers verify
+//! against their `RegisterAck`, so a stale addr file can never route a
+//! replica into the wrong run — to `<out_dir>/coordinator.addr`), waits
 //! for `dist.workers` registrations, and then drives the step loop:
 //! assign shards over the live ranks ([`crate::dist::assign_shards`]),
-//! gather per-shard gradients at the barrier, reduce them
-//! deterministically ([`crate::dist::reduce_shards`]), run the anomaly
-//! guard centrally, and broadcast one `Apply` frame. Checkpoints are
+//! fold each arriving `ShardGradChunk` incrementally at the barrier
+//! ([`crate::dist::ChunkReducer`] — bit-identical to the buffered
+//! [`crate::dist::reduce_shards`], at a fraction of the memory, and
+//! overlapped with the workers' backward passes), run the anomaly guard
+//! centrally, and broadcast the update as one `Apply` header plus an
+//! `ApplyChunk` stream (encoded once, written per peer). Checkpoints are
 //! requested from the lowest live rank after the `Apply` (TCP ordering
 //! guarantees the worker has applied the step) and written through the
 //! validated checkpoint machinery, with the guard's backoff state
@@ -39,9 +44,10 @@ use crate::coordinator::guard::{self, GuardConfig, StepGuard, Verdict};
 use crate::coordinator::metrics::{append_jsonl, json_str, CsvWriter};
 use crate::coordinator::schedule::lr_at;
 use crate::coordinator::train::prepare_resumed_csv;
+use crate::dist::compress::{Compression, GradCodec};
 use crate::dist::wire::{self, Msg, RecvError};
-use crate::dist::{assign_shards, reduce_shards, CLIP_NORM};
-use crate::runtime::TrainState;
+use crate::dist::{assign_shards, ChunkReducer, CLIP_NORM};
+use crate::runtime::{StepMetrics, TrainState};
 use crate::{info, warnln};
 
 /// Outcome of a distributed run (the coordinator's view).
@@ -275,21 +281,44 @@ pub fn run(cfg: &RunConfig) -> anyhow::Result<DistResult> {
         cfg.steps
     );
 
+    let mode = Compression::parse(&cfg.dist_compress)?;
     let nshards = if cfg.dist_shards == 0 { cfg.dist_workers } else { cfg.dist_shards } as u32;
+    // a leftover addr file from a dead run must never be readable while
+    // the new listener comes up — a launcher polling it would dial a
+    // socket nobody owns (or, worse, a different run on a reused port)
+    let addr_path = cfg.out_dir.join("coordinator.addr");
+    if addr_path.exists() {
+        std::fs::remove_file(&addr_path)
+            .map_err(|e| anyhow::anyhow!("unlinking stale {}: {e}", addr_path.display()))?;
+    }
     let net = Net::listen(&cfg.dist_bind)?;
-    // publish the bound address via write + rename so a polling worker
+    let nonce = run_nonce(net.addr.port());
+    // publish the bound address (and the run nonce workers must see
+    // echoed in their RegisterAck) via write + rename so a polling worker
     // launcher never reads a torn file
     let tmp = cfg.out_dir.join("coordinator.addr.tmp");
-    std::fs::write(&tmp, format!("{}\n", net.addr))?;
-    std::fs::rename(&tmp, cfg.out_dir.join("coordinator.addr"))?;
+    std::fs::write(&tmp, format!("{}\n{nonce:#018x}\n", net.addr))?;
+    std::fs::rename(&tmp, &addr_path)?;
     info!(
-        "coordinator listening on {} ({} workers, {nshards} shards, steps {start_step}..{})",
-        net.addr, cfg.dist_workers, cfg.steps
+        "coordinator listening on {} ({} workers, {nshards} shards, steps {start_step}..{}, \
+         compress {}, nonce {nonce:#018x})",
+        net.addr,
+        cfg.dist_workers,
+        cfg.steps,
+        mode.name()
     );
 
-    let peers = gather_workers(cfg, &net, start_step, nshards, &resume_state)?;
-    let mut co =
-        Coord { cfg, net, peers, deaths: 0, last_abort: None, nshards };
+    let peers = gather_workers(cfg, &net, start_step, nshards, &resume_state, nonce, mode)?;
+    let mut co = Coord {
+        cfg,
+        net,
+        peers,
+        deaths: 0,
+        last_abort: None,
+        nshards,
+        mode,
+        layout: Vec::new(),
+    };
     let run = co.train(start_step, resume_guard, t_start);
     match &run {
         Ok(_) => co.broadcast(&Msg::Shutdown { reason: "run complete".into() }),
@@ -299,16 +328,36 @@ pub fn run(cfg: &RunConfig) -> anyhow::Result<DistResult> {
     run
 }
 
+/// A fresh run nonce: wall-clock nanos, pid, and the bound port scrambled
+/// through a splitmix64 round, so even coordinators started within the
+/// same tick differ. Stamped into the addr file and echoed in every
+/// `RegisterAck` — a worker launched off a stale addr file fails the echo
+/// check instead of silently joining the wrong run.
+fn run_nonce(port: u16) -> u64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let mut z = nanos ^ (u64::from(std::process::id()) << 32) ^ u64::from(port);
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// Wait for `dist.workers` live registrations, acking each with the full
 /// run definition (and the resume state, if any). Duplicate worker ids
 /// are refused; a worker that dies before the roster completes frees its
 /// slot for a later arrival.
+#[allow(clippy::too_many_arguments)]
 fn gather_workers(
     cfg: &RunConfig,
     net: &Net,
     start_step: usize,
     nshards: u32,
     resume_state: &Option<TrainState>,
+    nonce: u64,
+    mode: Compression,
 ) -> anyhow::Result<Vec<Peer>> {
     let deadline = Instant::now() + Duration::from_millis(cfg.dist_join_timeout_ms.max(1000));
     let mut peers: Vec<Peer> = Vec::new();
@@ -336,6 +385,7 @@ fn gather_workers(
                 let rank = peers.len() as u32;
                 let ack = Msg::RegisterAck {
                     rank,
+                    nonce,
                     nshards,
                     start_step: start_step as u64,
                     steps: cfg.steps as u64,
@@ -343,6 +393,7 @@ fn gather_workers(
                     model: cfg.model.clone(),
                     optimizer: cfg.optimizer.clone(),
                     data: cfg.data.name().to_string(),
+                    compress: mode.name().to_string(),
                     state: resume_state.clone(),
                 };
                 if let Err(e) = net.send(conn, &ack) {
@@ -382,6 +433,11 @@ struct Coord<'a> {
     deaths: usize,
     last_abort: Option<String>,
     nshards: u32,
+    /// Wire codec of the run (every uplink and downlink chunk uses it).
+    mode: Compression,
+    /// Per-parameter element counts, learned from the first gather; the
+    /// Apply downlink chunks the averaged gradient along this layout.
+    layout: Vec<u32>,
 }
 
 impl Coord<'_> {
@@ -479,9 +535,13 @@ impl Coord<'_> {
         }
     }
 
-    /// Run step `step`'s barrier: assign, gather, restart on death or
-    /// timeout. Returns the per-shard gradients in shard-index order.
-    fn gather_step(&mut self, step: usize) -> anyhow::Result<Vec<(f32, Vec<f32>)>> {
+    /// Run step `step`'s barrier: assign, fold arriving gradient chunks
+    /// incrementally, restart on death or timeout. Each `ShardGradChunk`
+    /// folds the moment its cross-shard barrier completes, so the
+    /// reduction overlaps the workers' remaining backward work instead of
+    /// waiting for `workers × flat_len` floats to buffer up. Returns the
+    /// reduced metrics and the clipped averaged gradient.
+    fn gather_step(&mut self, step: usize) -> anyhow::Result<(StepMetrics, Vec<f32>)> {
         let step64 = step as u64;
         let step_timeout = Duration::from_millis(self.cfg.dist_step_timeout_ms.max(1000));
         let mut resends = 0usize;
@@ -502,25 +562,24 @@ impl Coord<'_> {
                     continue 'attempt;
                 }
             }
-            let mut got: Vec<Option<(f32, Vec<f32>)>> = vec![None; self.nshards as usize];
-            let mut remaining = self.nshards as usize;
+            // a fresh reducer per attempt: chunks from an earlier attempt
+            // of the same step are bit-identical by the determinism
+            // contract, so letting them land in the new reducer first is
+            // harmless (first one wins per (shard, seq))
+            let mut red = ChunkReducer::new(self.nshards as usize, self.mode, CLIP_NORM)?;
             let started = Instant::now();
             loop {
                 if let Some(ev) = next_event(&self.net.hub, Duration::from_millis(50)) {
                     match ev {
-                        Event::Frame(_, Msg::ShardGrads { step: s, shard, loss, grads }) => {
-                            // duplicates (a resend raced the original) and
-                            // earlier-attempt leftovers are bit-identical
-                            // by the determinism contract — first one wins
-                            if s == step64
-                                && (shard as usize) < got.len()
-                                && got[shard as usize].is_none()
-                            {
-                                got[shard as usize] = Some((loss, grads));
-                                remaining -= 1;
-                            } else if s != step64 {
+                        Event::Frame(
+                            _,
+                            Msg::ShardGradChunk { step: s, shard, seq, total, codec, elems, loss, data },
+                        ) => {
+                            if s == step64 {
+                                red.accept(shard, seq, total, codec, elems, loss, &data)?;
+                            } else {
                                 warnln!(
-                                    "dropping shard gradient for step {s} during step {step64}"
+                                    "dropping shard gradient chunk for step {s} during step {step64}"
                                 );
                             }
                         }
@@ -531,8 +590,9 @@ impl Coord<'_> {
                         }
                     }
                 }
-                if remaining == 0 {
-                    return Ok(got.into_iter().map(|g| g.expect("gather counted down")).collect());
+                if red.complete() {
+                    self.layout = red.layout().to_vec();
+                    return red.finish();
                 }
                 let deaths = self.deaths;
                 self.check_deadlines();
@@ -553,6 +613,43 @@ impl Coord<'_> {
                     );
                     continue 'attempt;
                 }
+            }
+        }
+    }
+
+    /// Stream the reduced gradient to every live rank as `ApplyChunk`s,
+    /// re-chunked along the uplink's parameter layout. Each chunk is
+    /// encoded once and written per peer; a failed write marks that peer
+    /// dead, the same policy as [`broadcast`](Coord::broadcast). Under
+    /// bf16 every rank decodes the identical once-rounded bytes, so the
+    /// replicas stay bit-identical.
+    fn broadcast_apply_chunks(&mut self, step: u64, avg: &[f32]) {
+        let layout = self.layout.clone();
+        debug_assert_eq!(layout.iter().map(|&e| e as usize).sum::<usize>(), avg.len());
+        let total = layout.len() as u32;
+        let mut codec = GradCodec::new(self.mode);
+        let mut buf: Vec<u8> = Vec::new();
+        let mut off = 0usize;
+        for (seq, &elems) in layout.iter().enumerate() {
+            let n = elems as usize;
+            let mut data = std::mem::take(&mut buf);
+            codec.encode_into(&avg[off..off + n], &mut data);
+            off += n;
+            let msg = Msg::ApplyChunk {
+                step,
+                seq: seq as u32,
+                total,
+                codec: self.mode.id(),
+                elems,
+                data,
+            };
+            for r in self.live_ranks() {
+                if let Err(e) = self.net.send(self.peers[r as usize].conn, &msg) {
+                    self.mark_dead(r, &format!("send failed: {e}"));
+                }
+            }
+            if let Msg::ApplyChunk { data, .. } = msg {
+                buf = data; // keep the warm buffer for the next chunk
             }
         }
     }
@@ -584,7 +681,7 @@ impl Coord<'_> {
                         Event::Frame(c, Msg::CheckpointState { state }) if c == conn => {
                             return Ok(state)
                         }
-                        Event::Frame(_, Msg::ShardGrads { .. }) => {
+                        Event::Frame(_, Msg::ShardGrads { .. } | Msg::ShardGradChunk { .. }) => {
                             // stale duplicate from the step just committed
                         }
                         ev => {
@@ -648,8 +745,7 @@ impl Coord<'_> {
         let mut last_train = f64::NAN;
         let mut clip_sum = 0.0f64;
         for step in start_step..cfg.steps {
-            let shards = self.gather_step(step)?;
-            let (metrics, avg) = reduce_shards(&shards, CLIP_NORM)?;
+            let (metrics, avg) = self.gather_step(step)?;
             // the scale set by step N's anomaly applies from step N+1 —
             // same capture-before-observe order as the single-process loop
             let lr_scale = guard.lr_scale();
@@ -657,13 +753,13 @@ impl Coord<'_> {
             let verdict = guard.observe(step, &metrics);
             let apply = verdict == Verdict::Apply;
             // commit point: once this broadcast starts, the step is never
-            // replayed (a replay would double-apply momentum on survivors)
-            self.broadcast(&Msg::Apply {
-                step: step as u64,
-                lr,
-                apply,
-                grads: if apply { avg } else { Vec::new() },
-            });
+            // replayed (a replay would double-apply momentum on survivors).
+            // The header's grads are always empty — the gradient follows
+            // as an ApplyChunk stream, and a guard skip sends no chunks
+            self.broadcast(&Msg::Apply { step: step as u64, lr, apply, grads: Vec::new() });
+            if apply {
+                self.broadcast_apply_chunks(step as u64, &avg);
+            }
             anyhow::ensure!(
                 !self.live_ranks().is_empty(),
                 "all workers dead at step {step}{}",

@@ -9,35 +9,51 @@
 //!
 //! The global batch of step `s` is a fixed set of `dist.shards` shards;
 //! shard `k` always draws from `token_source(data, seed, SHARD_SPLIT_BASE
-//! + k)` regardless of which worker computes it. The coordinator reduces
-//! per-*shard* gradients in shard-index order with f64 accumulation
-//! ([`reduce_shards`]), clips the average, runs the anomaly guard, and
-//! broadcasts one `Apply` frame that every worker executes identically.
-//! Because nothing in the math depends on the shard→worker mapping, the
-//! final weights are bit-exact for any worker count at equal global batch
-//! — including after mid-run deaths and redistributions. The 1-worker run
-//! is the degenerate case of the same code path, which is what the fault
-//! scenarios compare killed runs against.
+//! + k)` regardless of which worker computes it. Gradients cross the wire
+//! as one chunk per parameter (`ShardGradChunk`, optionally
+//! bf16-compressed — see [`compress`]), and the coordinator folds each
+//! chunk incrementally with f64 accumulation **in shard-index order**
+//! ([`ChunkReducer`], the streamed form of [`reduce_shards`] — same
+//! reduction tree, bit-identical result), clips the average, runs the
+//! anomaly guard, and broadcasts the same reduced gradient to every
+//! worker as an `Apply` header plus `ApplyChunk` stream. Because nothing
+//! in the math depends on the shard→worker mapping or on chunk *arrival*
+//! order, the final weights are bit-exact for any worker count at equal
+//! global batch — including after mid-run deaths and redistributions,
+//! and in both compression modes (each mode is its own deterministic
+//! trajectory; `bf16` rounds each element once on each wire crossing,
+//! identically everywhere). The 1-worker run is the degenerate case of
+//! the same code path, which is what the fault scenarios compare killed
+//! runs against.
 //!
 //! # Failure model
 //!
 //! Workers heartbeat every `dist.heartbeat_ms`; a worker silent past
 //! `dist.deadline_ms` (or whose socket closes, or who sends
 //! `WorkerAbort`) is declared dead. Death *before* the step's barrier
-//! completes discards the partial gather, reassigns the dead worker's
-//! shards over the survivors, and re-issues `StepBegin` — workers serve
-//! the repeat from their shard-batch cache, so no data is skipped and no
-//! momentum is touched. The broadcast of `Apply` is the commit point:
-//! once any worker may have applied a step, that step is never replayed
+//! completes — including mid-chunk-stream — discards the partial gather,
+//! reassigns the dead worker's shards over the survivors, and re-issues
+//! `StepBegin`; workers serve the repeat from their shard-batch cache
+//! and replay the full chunk sequence bit-identically, so per-chunk
+//! sequence numbers make the resend idempotent (stale duplicates lose
+//! first-one-wins). The broadcast of `Apply` is the commit point: once
+//! any worker may have applied a step, that step is never replayed
 //! (replaying it would double-apply momentum on survivors). Checkpoints
 //! are written by the coordinator through the validated v3 machinery, so
 //! a killed-and-restarted coordinator resumes from `latest_valid()` and
-//! freshly-registered workers import the shipped state.
+//! freshly-registered workers import the shipped state. A fresh run
+//! unlinks any leftover addr file before binding and stamps a random
+//! nonce into both the addr file and `RegisterAck`, so a replica
+//! pointed at a stale address can never join the wrong run.
 
+pub mod compress;
 pub mod coordinator;
 pub mod wire;
 pub mod worker;
 
+use std::path::Path;
+
+use crate::dist::compress::{Compression, GradCodec};
 use crate::runtime::StepMetrics;
 
 /// Token-source split offset for shard streams. Splits 0 and 1 are the
@@ -116,6 +132,219 @@ pub fn reduce_shards(
     Ok((metrics, avg))
 }
 
+/// One staged-but-not-yet-folded uplink chunk: element count plus the
+/// still-encoded wire payload (decoded only at fold time, in shard order).
+struct StagedChunk {
+    elems: u32,
+    data: Vec<u8>,
+}
+
+/// Incremental, order-insensitive form of [`reduce_shards`] for the
+/// streamed gradient path.
+///
+/// The coordinator feeds every `ShardGradChunk` it receives into
+/// [`accept`](ChunkReducer::accept) as it arrives; the reducer stages the
+/// still-encoded payloads per `(shard, seq)` and folds sequence `k` the
+/// moment **all** shards have delivered it — decoding and accumulating in
+/// shard-index order with f64 arithmetic, exactly the reduction tree of
+/// [`reduce_shards`]. Chunk *arrival* order therefore never affects the
+/// result, and peak memory is one staged chunk set plus the flat output
+/// instead of `workers × flat_len` floats. Duplicate `(shard, seq)`
+/// deliveries (resends after a re-issued step — bit-identical by the
+/// shard-batch-cache contract) lose first-one-wins.
+pub struct ChunkReducer {
+    nshards: usize,
+    mode: Compression,
+    clip_norm: f64,
+    codec: GradCodec,
+    /// Chunks per parameter, learned from the first accepted chunk.
+    total: Option<usize>,
+    /// `staged[shard][seq]` holds a chunk awaiting its barrier.
+    staged: Vec<Vec<Option<StagedChunk>>>,
+    /// Per-shard loss, recorded from the first chunk each shard delivers.
+    loss: Vec<Option<f32>>,
+    /// Next sequence number to fold (all below are already in `out`).
+    next_fold: usize,
+    /// Element count of each folded sequence — the parameter layout the
+    /// coordinator reuses to chunk the Apply downlink.
+    layout: Vec<u32>,
+    /// f64 accumulator scratch, sized to the widest chunk seen.
+    acc: Vec<f64>,
+    /// Decode scratch for one shard's chunk.
+    scratch: Vec<f32>,
+    /// The averaged (not yet clipped) flat gradient, grown chunk by chunk.
+    out: Vec<f32>,
+}
+
+impl ChunkReducer {
+    /// A reducer for one gather attempt: `nshards` shard streams, all
+    /// encoded with `mode`, clipped to `clip_norm` at the end.
+    pub fn new(nshards: usize, mode: Compression, clip_norm: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(nshards > 0, "reduce over zero shards");
+        Ok(ChunkReducer {
+            nshards,
+            mode,
+            clip_norm,
+            codec: GradCodec::new(mode),
+            total: None,
+            staged: (0..nshards).map(|_| Vec::new()).collect(),
+            loss: vec![None; nshards],
+            next_fold: 0,
+            layout: Vec::new(),
+            acc: Vec::new(),
+            scratch: Vec::new(),
+            out: Vec::new(),
+        })
+    }
+
+    /// Accept one uplink chunk (the fields of a `ShardGradChunk` frame).
+    ///
+    /// Geometry is validated against what earlier chunks established:
+    /// every chunk must agree on `total` and the codec, `shard`/`seq`
+    /// must be in range, and `data` must be exactly `elems` encoded
+    /// elements. Duplicates of an already-staged or already-folded
+    /// `(shard, seq)` are silently dropped.
+    pub fn accept(
+        &mut self,
+        shard: u32,
+        seq: u32,
+        total: u32,
+        codec: u8,
+        elems: u32,
+        loss: f32,
+        data: &[u8],
+    ) -> anyhow::Result<()> {
+        let got = Compression::from_id(codec)?;
+        anyhow::ensure!(
+            got == self.mode,
+            "chunk codec {} does not match the run's {}",
+            got.name(),
+            self.mode.name()
+        );
+        anyhow::ensure!(
+            (shard as usize) < self.nshards,
+            "chunk for shard {shard} but the step has {} shards",
+            self.nshards
+        );
+        anyhow::ensure!(total > 0, "chunk stream claims zero total chunks");
+        match self.total {
+            None => {
+                let t = total as usize;
+                self.total = Some(t);
+                for s in &mut self.staged {
+                    s.resize_with(t, || None);
+                }
+            }
+            Some(t) => anyhow::ensure!(
+                t == total as usize,
+                "chunk claims {total} total chunks, stream established {t}"
+            ),
+        }
+        anyhow::ensure!(seq < total, "chunk seq {seq} out of range 0..{total}");
+        anyhow::ensure!(
+            data.len() == elems as usize * self.mode.bytes_per_elem(),
+            "chunk payload is {} bytes for {elems} {} elements",
+            data.len(),
+            self.mode.name()
+        );
+        let slot = &mut self.staged[shard as usize][seq as usize];
+        if seq as usize >= self.next_fold && slot.is_none() {
+            *slot = Some(StagedChunk { elems, data: data.to_vec() });
+            self.loss[shard as usize].get_or_insert(loss);
+            self.fold_ready()?;
+        }
+        Ok(())
+    }
+
+    /// Fold every sequence number whose barrier is complete, in order.
+    fn fold_ready(&mut self) -> anyhow::Result<()> {
+        let total = self.total.unwrap_or(0);
+        while self.next_fold < total
+            && self.staged.iter().all(|s| s[self.next_fold].is_some())
+        {
+            let seq = self.next_fold;
+            let elems = self.staged[0][seq].as_ref().map(|c| c.elems).unwrap_or(0);
+            self.acc.clear();
+            self.acc.resize(elems as usize, 0.0);
+            for shard in 0..self.nshards {
+                let chunk = self.staged[shard][seq].take().expect("barrier checked");
+                anyhow::ensure!(
+                    chunk.elems == elems,
+                    "seq {seq}: shard {shard} sent {} elements, shard 0 sent {elems}",
+                    chunk.elems
+                );
+                self.scratch.clear();
+                self.codec.decode_append(&chunk.data, elems as usize, &mut self.scratch)?;
+                for (a, &x) in self.acc.iter_mut().zip(self.scratch.iter()) {
+                    *a += x as f64;
+                }
+            }
+            let inv = 1.0f64 / self.nshards as f64;
+            self.out.extend(self.acc.iter().map(|a| (a * inv) as f32));
+            self.layout.push(elems);
+            self.next_fold += 1;
+        }
+        Ok(())
+    }
+
+    /// True once every shard has delivered every chunk (and all are folded).
+    pub fn complete(&self) -> bool {
+        matches!(self.total, Some(t) if self.next_fold == t)
+    }
+
+    /// Element count per folded sequence, in order — the parameter layout
+    /// of the flat gradient [`finish`](ChunkReducer::finish) returns.
+    pub fn layout(&self) -> &[u32] {
+        &self.layout
+    }
+
+    /// Finalize: mean loss, norm, clip — bit-identical to running
+    /// [`reduce_shards`] over the fully-decoded per-shard gradients.
+    pub fn finish(mut self) -> anyhow::Result<(StepMetrics, Vec<f32>)> {
+        anyhow::ensure!(self.complete(), "finish before every chunk arrived");
+        let inv = 1.0f64 / self.nshards as f64;
+        let loss = self
+            .loss
+            .iter()
+            .map(|l| l.expect("complete implies a chunk per shard") as f64)
+            .sum::<f64>()
+            * inv;
+        let norm = self.out.iter().map(|&g| g as f64 * g as f64).sum::<f64>().sqrt();
+        let clipped = norm > self.clip_norm;
+        if clipped {
+            let s = (self.clip_norm / norm) as f32;
+            for g in &mut self.out {
+                *g *= s;
+            }
+        }
+        let metrics = StepMetrics {
+            loss: loss as f32,
+            grad_norm: norm as f32,
+            clipped: if clipped { 1.0 } else { 0.0 },
+        };
+        Ok((metrics, self.out))
+    }
+}
+
+/// Parse a coordinator addr file: line one is the socket address; line
+/// two — written by runs with stale-run protection — is the run nonce in
+/// hex. Older single-line files parse with `nonce = None`.
+pub fn read_addr_file(path: &Path) -> anyhow::Result<(String, Option<u64>)> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read addr file {}: {e}", path.display()))?;
+    let mut lines = text.lines();
+    let addr = lines.next().unwrap_or("").trim().to_string();
+    anyhow::ensure!(!addr.is_empty(), "addr file {} is empty", path.display());
+    let nonce = match lines.next().map(str::trim) {
+        Some(s) if !s.is_empty() => Some(
+            u64::from_str_radix(s.trim_start_matches("0x"), 16)
+                .map_err(|e| anyhow::anyhow!("bad nonce in {}: {e}", path.display()))?,
+        ),
+        _ => None,
+    };
+    Ok((addr, nonce))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,5 +420,188 @@ mod tests {
         let bad = vec![(0.0f32, vec![1.0f32]), (0.0f32, vec![1.0f32, 2.0])];
         let err = reduce_shards(&bad, 1.0).unwrap_err().to_string();
         assert!(err.contains("shard 1"), "{err}");
+    }
+
+    /// Random per-shard gradients plus their chunked wire encodings:
+    /// `(shards, chunks)` where `chunks[shard][seq] = (elems, bytes)`.
+    #[allow(clippy::type_complexity)]
+    fn chunked_fixture(
+        seed: u64,
+        nshards: usize,
+        sizes: &[usize],
+        mode: Compression,
+    ) -> (Vec<(f32, Vec<f32>)>, Vec<Vec<(u32, Vec<u8>)>>) {
+        let mut r = crate::util::rng::Rng::new(seed);
+        let n: usize = sizes.iter().sum();
+        let shards: Vec<(f32, Vec<f32>)> = (0..nshards)
+            .map(|_| {
+                (r.next_f32(), (0..n).map(|_| r.next_f32() * 2.0 - 1.0).collect())
+            })
+            .collect();
+        let mut codec = GradCodec::new(mode);
+        let chunks = shards
+            .iter()
+            .map(|(_, g)| {
+                let mut off = 0;
+                sizes
+                    .iter()
+                    .map(|&sz| {
+                        let mut buf = Vec::new();
+                        codec.encode_into(&g[off..off + sz], &mut buf);
+                        off += sz;
+                        (sz as u32, buf)
+                    })
+                    .collect()
+            })
+            .collect();
+        (shards, chunks)
+    }
+
+    /// Decode a chunk stream back to per-shard flat gradients — what the
+    /// worker-side math sees after the wire crossing.
+    fn decoded(
+        shards: &[(f32, Vec<f32>)],
+        chunks: &[Vec<(u32, Vec<u8>)>],
+        mode: Compression,
+    ) -> Vec<(f32, Vec<f32>)> {
+        let mut codec = GradCodec::new(mode);
+        shards
+            .iter()
+            .zip(chunks)
+            .map(|((loss, _), cs)| {
+                let mut flat = Vec::new();
+                for (elems, data) in cs {
+                    codec.decode_append(data, *elems as usize, &mut flat).unwrap();
+                }
+                (*loss, flat)
+            })
+            .collect()
+    }
+
+    fn assert_bit_equal(
+        (ma, ga): &(StepMetrics, Vec<f32>),
+        (mb, gb): &(StepMetrics, Vec<f32>),
+    ) {
+        assert_eq!(ma.loss.to_bits(), mb.loss.to_bits());
+        assert_eq!(ma.grad_norm.to_bits(), mb.grad_norm.to_bits());
+        assert_eq!(ma.clipped, mb.clipped);
+        let ba: Vec<u32> = ga.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = gb.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ba, bb);
+    }
+
+    #[test]
+    fn chunk_reducer_matches_reduce_shards_bitwise() {
+        // uneven chunk sizes, shards delivered wildly out of order across
+        // each other — the streamed reduction must still reproduce the
+        // buffered one bit for bit because folding is in shard order.
+        let sizes = [7usize, 64, 1, 130];
+        for &mode in &[Compression::None, Compression::Bf16] {
+            let (shards, chunks) = chunked_fixture(11, 3, &sizes, mode);
+            let mut red = ChunkReducer::new(3, mode, CLIP_NORM).unwrap();
+            // shard 2 streams everything first, then shard 0, then shard 1
+            for shard in [2u32, 0, 1] {
+                for (seq, (elems, data)) in chunks[shard as usize].iter().enumerate() {
+                    let loss = shards[shard as usize].0;
+                    red.accept(
+                        shard,
+                        seq as u32,
+                        sizes.len() as u32,
+                        mode.id(),
+                        *elems,
+                        loss,
+                        data,
+                    )
+                    .unwrap();
+                }
+            }
+            assert!(red.complete());
+            let got = red.finish().unwrap();
+            // the oracle reduces what the chunks decode to — for `none`
+            // that is the raw gradients, for `bf16` the once-rounded ones
+            let want = reduce_shards(&decoded(&shards, &chunks, mode), CLIP_NORM).unwrap();
+            assert_bit_equal(&got, &want);
+        }
+    }
+
+    #[test]
+    fn chunk_reducer_ignores_duplicate_chunks() {
+        let sizes = [5usize, 9];
+        let mode = Compression::Bf16;
+        let (shards, chunks) = chunked_fixture(23, 2, &sizes, mode);
+        let feed = |dup: bool| {
+            let mut red = ChunkReducer::new(2, mode, CLIP_NORM).unwrap();
+            for shard in 0..2u32 {
+                for (seq, (elems, data)) in chunks[shard as usize].iter().enumerate() {
+                    let loss = shards[shard as usize].0;
+                    let times = if dup { 2 } else { 1 };
+                    for _ in 0..times {
+                        red.accept(shard, seq as u32, 2, mode.id(), *elems, loss, data)
+                            .unwrap();
+                    }
+                }
+            }
+            // a straggler duplicate of an already-folded chunk is dropped too
+            if dup {
+                let (elems, data) = &chunks[0][0];
+                red.accept(0, 0, 2, mode.id(), *elems, shards[0].0, data).unwrap();
+            }
+            red.finish().unwrap()
+        };
+        assert_bit_equal(&feed(false), &feed(true));
+    }
+
+    #[test]
+    fn chunk_reducer_rejects_bad_geometry() {
+        let mode = Compression::None;
+        let mut red = ChunkReducer::new(2, mode, 1.0).unwrap();
+        let four = [0u8; 4];
+        // wrong codec for the run
+        let err = red
+            .accept(0, 0, 2, Compression::Bf16.id(), 1, 0.0, &four)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not match"), "{err}");
+        // unknown codec id
+        assert!(red.accept(0, 0, 2, 9, 1, 0.0, &four).is_err());
+        // shard / seq out of range, zero-total stream
+        assert!(red.accept(5, 0, 2, mode.id(), 1, 0.0, &four).is_err());
+        red.accept(0, 0, 2, mode.id(), 1, 0.0, &four).unwrap();
+        assert!(red.accept(0, 2, 2, mode.id(), 1, 0.0, &four).is_err());
+        assert!(red.accept(1, 0, 0, mode.id(), 1, 0.0, &four).is_err());
+        // total disagreeing with what the stream established
+        let err = red.accept(1, 0, 3, mode.id(), 1, 0.0, &four).unwrap_err().to_string();
+        assert!(err.contains("established 2"), "{err}");
+        // payload length not matching the element count
+        assert!(red.accept(1, 0, 2, mode.id(), 2, 0.0, &four).is_err());
+        // cross-shard element-count mismatch surfaces at the fold barrier
+        let err =
+            red.accept(1, 0, 2, mode.id(), 2, 0.0, &[0u8; 8]).unwrap_err().to_string();
+        assert!(err.contains("shard 1 sent 2"), "{err}");
+        // finishing before the barrier is an error, not a partial result
+        let red2 = ChunkReducer::new(1, mode, 1.0).unwrap();
+        assert!(red2.finish().is_err());
+    }
+
+    #[test]
+    fn addr_file_parses_with_and_without_nonce() {
+        let dir = std::env::temp_dir()
+            .join(format!("rmnp-addr-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("coordinator.addr");
+        // modern two-line format: addr + hex nonce
+        std::fs::write(&p, "127.0.0.1:4512\n0x00ab54a98ceb1f0a\n").unwrap();
+        let (addr, nonce) = read_addr_file(&p).unwrap();
+        assert_eq!(addr, "127.0.0.1:4512");
+        assert_eq!(nonce, Some(0x00ab_54a9_8ceb_1f0a));
+        // legacy single-line format still parses, just without a nonce
+        std::fs::write(&p, "127.0.0.1:4512").unwrap();
+        assert_eq!(read_addr_file(&p).unwrap(), ("127.0.0.1:4512".into(), None));
+        // garbage nonce and empty file are loud errors
+        std::fs::write(&p, "127.0.0.1:4512\nnot-hex\n").unwrap();
+        assert!(read_addr_file(&p).is_err());
+        std::fs::write(&p, "\n").unwrap();
+        assert!(read_addr_file(&p).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -22,7 +22,9 @@
 //! bit-exactly. No external serialization crate is involved — the crate
 //! must keep building offline with vendored deps only.
 
+use std::cell::RefCell;
 use std::io::{Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::runtime::{NamedBuffer, TrainState};
 use crate::util::crc32::crc32;
@@ -85,6 +87,11 @@ pub enum Msg {
     RegisterAck {
         /// The worker's rank (index into the coordinator's peer table).
         rank: u32,
+        /// Random per-run nonce, also published in the second line of the
+        /// coordinator's addr file. A worker launched from an addr file
+        /// refuses an ack whose nonce disagrees — so a replica can never
+        /// join a *different* run that happens to reuse a stale address.
+        nonce: u64,
         /// Total number of data shards in the global batch.
         nshards: u32,
         /// First step the run will execute (0, or the resume point).
@@ -99,6 +106,10 @@ pub enum Msg {
         optimizer: String,
         /// Data spec name understood by [`crate::config::DataSpec::parse`].
         data: String,
+        /// Wire compression mode for gradient chunks, a
+        /// [`crate::dist::compress::Compression`] name. Announced once at
+        /// registration so both ends agree without per-frame negotiation.
+        compress: String,
         /// On resume: the checkpoint state every worker imports so all
         /// ranks start bit-identical. `None` on a fresh run.
         state: Option<TrainState>,
@@ -178,6 +189,52 @@ pub enum Msg {
         /// Why the run ended.
         reason: String,
     },
+    /// Worker → coordinator: one parameter's gradient for one shard of
+    /// one step, sent as soon as backward produces it — the streamed
+    /// replacement for [`Msg::ShardGrads`]. Chunks arrive in `seq` order
+    /// on each connection (TCP) and the coordinator reduces them
+    /// incrementally; on a resend after a death or timeout the worker
+    /// replays the full chunk sequence from its shard-batch cache, and
+    /// the sequence numbers make the replay idempotent.
+    ShardGradChunk {
+        /// Global step index this gradient belongs to.
+        step: u64,
+        /// Which shard was computed.
+        shard: u32,
+        /// Chunk index within the stream, `0..total` (one per parameter,
+        /// in the backend's scheduling order).
+        seq: u32,
+        /// Total chunks in this shard's stream.
+        total: u32,
+        /// Codec id ([`crate::dist::compress::Compression::id`]) the
+        /// payload is encoded with; must match the run's announced mode.
+        codec: u8,
+        /// Number of f32 elements encoded in `data`.
+        elems: u32,
+        /// Mean loss over the shard's batch (same value on every chunk).
+        loss: f32,
+        /// Codec-encoded gradient elements.
+        data: Vec<u8>,
+    },
+    /// Coordinator → worker: one parameter's slice of the reduced
+    /// gradient — the streamed replacement for the [`Msg::Apply`]
+    /// payload. The commit-point `Apply` header frame still leads the
+    /// stream (carrying `step`/`lr`/`apply` with an empty `grads`);
+    /// `total` chunks follow on the same ordered stream.
+    ApplyChunk {
+        /// Global step index being committed.
+        step: u64,
+        /// Chunk index within the stream, `0..total`.
+        seq: u32,
+        /// Total chunks in this step's apply stream.
+        total: u32,
+        /// Codec id the payload is encoded with.
+        codec: u8,
+        /// Number of f32 elements encoded in `data`.
+        elems: u32,
+        /// Codec-encoded reduced-gradient elements.
+        data: Vec<u8>,
+    },
 }
 
 impl Msg {
@@ -195,12 +252,23 @@ impl Msg {
             Msg::CheckpointState { .. } => "CheckpointState",
             Msg::WorkerAbort { .. } => "WorkerAbort",
             Msg::Shutdown { .. } => "Shutdown",
+            Msg::ShardGradChunk { .. } => "ShardGradChunk",
+            Msg::ApplyChunk { .. } => "ApplyChunk",
         }
     }
 
-    /// Serialize to a payload (no frame header).
+    /// Serialize to a fresh payload buffer (no frame header). The send
+    /// path uses [`Msg::encode_into`] to reuse a scratch buffer; this
+    /// wrapper exists for tests and one-shot callers.
     pub fn encode(&self) -> Vec<u8> {
-        let mut e = Enc(Vec::with_capacity(64));
+        let mut out = Vec::with_capacity(64);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Serialize to a payload (no frame header), appending to `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let mut e = Enc(out);
         match self {
             Msg::Register { worker_id } => {
                 e.u8(1);
@@ -208,6 +276,7 @@ impl Msg {
             }
             Msg::RegisterAck {
                 rank,
+                nonce,
                 nshards,
                 start_step,
                 steps,
@@ -215,10 +284,12 @@ impl Msg {
                 model,
                 optimizer,
                 data,
+                compress,
                 state,
             } => {
                 e.u8(2);
                 e.u32(*rank);
+                e.u64(*nonce);
                 e.u32(*nshards);
                 e.u64(*start_step);
                 e.u64(*steps);
@@ -226,6 +297,7 @@ impl Msg {
                 e.str(model);
                 e.str(optimizer);
                 e.str(data);
+                e.str(compress);
                 match state {
                     None => e.u8(0),
                     Some(st) => {
@@ -281,8 +353,27 @@ impl Msg {
                 e.u8(11);
                 e.str(reason);
             }
+            Msg::ShardGradChunk { step, shard, seq, total, codec, elems, loss, data } => {
+                e.u8(12);
+                e.u64(*step);
+                e.u32(*shard);
+                e.u32(*seq);
+                e.u32(*total);
+                e.u8(*codec);
+                e.u32(*elems);
+                e.f32(*loss);
+                e.bytes(data);
+            }
+            Msg::ApplyChunk { step, seq, total, codec, elems, data } => {
+                e.u8(13);
+                e.u64(*step);
+                e.u32(*seq);
+                e.u32(*total);
+                e.u8(*codec);
+                e.u32(*elems);
+                e.bytes(data);
+            }
         }
-        e.0
     }
 
     /// Deserialize a payload produced by [`Msg::encode`]. Fails on unknown
@@ -296,6 +387,7 @@ impl Msg {
             1 => Msg::Register { worker_id: d.str()? },
             2 => {
                 let rank = d.u32()?;
+                let nonce = d.u64()?;
                 let nshards = d.u32()?;
                 let start_step = d.u64()?;
                 let steps = d.u64()?;
@@ -303,6 +395,7 @@ impl Msg {
                 let model = d.str()?;
                 let optimizer = d.str()?;
                 let data = d.str()?;
+                let compress = d.str()?;
                 let state = match d.u8()? {
                     0 => None,
                     1 => Some(d.state()?),
@@ -310,6 +403,7 @@ impl Msg {
                 };
                 Msg::RegisterAck {
                     rank,
+                    nonce,
                     nshards,
                     start_step,
                     steps,
@@ -317,6 +411,7 @@ impl Msg {
                     model,
                     optimizer,
                     data,
+                    compress,
                     state,
                 }
             }
@@ -347,6 +442,24 @@ impl Msg {
             9 => Msg::CheckpointState { state: d.state()? },
             10 => Msg::WorkerAbort { rank: d.u32()?, reason: d.str()? },
             11 => Msg::Shutdown { reason: d.str()? },
+            12 => Msg::ShardGradChunk {
+                step: d.u64()?,
+                shard: d.u32()?,
+                seq: d.u32()?,
+                total: d.u32()?,
+                codec: d.u8()?,
+                elems: d.u32()?,
+                loss: d.f32()?,
+                data: d.bytes()?,
+            },
+            13 => Msg::ApplyChunk {
+                step: d.u64()?,
+                seq: d.u32()?,
+                total: d.u32()?,
+                codec: d.u8()?,
+                elems: d.u32()?,
+                data: d.bytes()?,
+            },
             other => anyhow::bail!("unknown message tag {other}"),
         };
         d.finish()?;
@@ -354,23 +467,45 @@ impl Msg {
     }
 }
 
+static WIRE_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Total framed bytes (headers included) written by this process since
+/// start, across every connection and both protocol roles — an
+/// in-process coordinator+worker run counts both directions. Benches
+/// read before/after deltas of this to report wire bytes per step.
+pub fn bytes_written() -> u64 {
+    WIRE_BYTES.load(Ordering::Relaxed)
+}
+
 /// Write one framed message and flush it.
+///
+/// The frame is staged in a per-thread scratch buffer (header
+/// placeholder, payload, then the length/CRC backfilled) so the warm
+/// send path performs zero heap allocations once the buffer has grown to
+/// the connection's largest frame.
 pub fn write_msg(w: &mut impl Write, msg: &Msg) -> anyhow::Result<()> {
-    let payload = msg.encode();
-    anyhow::ensure!(
-        payload.len() <= MAX_FRAME as usize,
-        "{} payload of {} bytes exceeds the {} byte frame cap",
-        msg.name(),
-        payload.len(),
-        MAX_FRAME
-    );
-    let mut frame = Vec::with_capacity(payload.len() + 8);
-    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    frame.extend_from_slice(&crc32(&payload).to_le_bytes());
-    frame.extend_from_slice(&payload);
-    w.write_all(&frame)?;
-    w.flush()?;
-    Ok(())
+    thread_local! {
+        static FRAME: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+    }
+    FRAME.with(|cell| -> anyhow::Result<()> {
+        let mut frame = cell.borrow_mut();
+        frame.clear();
+        frame.extend_from_slice(&[0u8; 8]);
+        msg.encode_into(&mut frame);
+        let plen = frame.len() - 8;
+        anyhow::ensure!(
+            plen <= MAX_FRAME as usize,
+            "{} payload of {plen} bytes exceeds the {MAX_FRAME} byte frame cap",
+            msg.name(),
+        );
+        let crc = crc32(&frame[8..]);
+        frame[0..4].copy_from_slice(&(plen as u32).to_le_bytes());
+        frame[4..8].copy_from_slice(&crc.to_le_bytes());
+        w.write_all(&frame)?;
+        w.flush()?;
+        WIRE_BYTES.fetch_add(frame.len() as u64, Ordering::Relaxed);
+        Ok(())
+    })
 }
 
 /// Read one framed message, verifying length bounds and the CRC before
@@ -404,9 +539,9 @@ fn read_exact_or(r: &mut impl Read, buf: &mut [u8]) -> Result<(), RecvError> {
 
 /// Little-endian field writer; all multi-byte scalars go through here so
 /// the wire layout is defined in exactly one place.
-struct Enc(Vec<u8>);
+struct Enc<'a>(&'a mut Vec<u8>);
 
-impl Enc {
+impl Enc<'_> {
     fn u8(&mut self, v: u8) {
         self.0.push(v);
     }
@@ -422,6 +557,10 @@ impl Enc {
     fn str(&mut self, s: &str) {
         self.u32(s.len() as u32);
         self.0.extend_from_slice(s.as_bytes());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.0.extend_from_slice(b);
     }
     fn f32s(&mut self, xs: &[f32]) {
         self.u32(xs.len() as u32);
@@ -480,6 +619,11 @@ impl Dec<'_> {
         Ok(std::str::from_utf8(bytes)
             .map_err(|e| anyhow::anyhow!("invalid UTF-8 in string field: {e}"))?
             .to_string())
+    }
+    fn bytes(&mut self) -> anyhow::Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        // bounds-checked before allocation, like `f32s`
+        Ok(self.take(n)?.to_vec())
     }
     fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
         let n = self.u32()? as usize;
@@ -541,6 +685,7 @@ mod tests {
             Msg::Register { worker_id: "w-1".into() },
             Msg::RegisterAck {
                 rank: 3,
+                nonce: 0x1234_5678_9ABC_DEF0,
                 nshards: 8,
                 start_step: 12,
                 steps: 100,
@@ -548,10 +693,12 @@ mod tests {
                 model: "gpt2_tiny".into(),
                 optimizer: "rmnp".into(),
                 data: "synthetic".into(),
+                compress: "bf16".into(),
                 state: Some(sample_state()),
             },
             Msg::RegisterAck {
                 rank: 0,
+                nonce: 0,
                 nshards: 1,
                 start_step: 0,
                 steps: 10,
@@ -559,6 +706,7 @@ mod tests {
                 model: "m".into(),
                 optimizer: "o".into(),
                 data: "d".into(),
+                compress: "none".into(),
                 state: None,
             },
             Msg::RegisterNack { reason: "training already in progress".into() },
@@ -571,6 +719,34 @@ mod tests {
             Msg::CheckpointState { state: sample_state() },
             Msg::WorkerAbort { rank: 1, reason: "guard abort".into() },
             Msg::Shutdown { reason: "run complete".into() },
+            Msg::ShardGradChunk {
+                step: 7,
+                shard: 1,
+                seq: 2,
+                total: 3,
+                codec: 1,
+                elems: 2,
+                loss: 1.5,
+                data: vec![0xC0, 0x3F, 0x00, 0xBF],
+            },
+            Msg::ShardGradChunk {
+                step: 0,
+                shard: 0,
+                seq: 0,
+                total: 1,
+                codec: 0,
+                elems: 0,
+                loss: f32::NAN,
+                data: vec![],
+            },
+            Msg::ApplyChunk {
+                step: 7,
+                seq: 0,
+                total: 2,
+                codec: 0,
+                elems: 1,
+                data: 1.0f32.to_le_bytes().to_vec(),
+            },
         ]
     }
 
@@ -600,6 +776,142 @@ mod tests {
         let mut buf = Vec::new();
         write_msg(&mut buf, &Msg::Heartbeat { rank: 7 }).unwrap();
         assert_eq!(buf, [5, 0, 0, 0, 0x64, 0x69, 0x75, 0xAE, 4, 7, 0, 0, 0]);
+    }
+
+    #[test]
+    fn golden_chunk_frame_bytes() {
+        // Locks the chunk layouts against python/gen_wire_golden.py
+        // (struct-packed fields + an independent zlib CRC-32) — pins the
+        // wire format itself, not just self-consistency. The data bytes
+        // are bf16(1.5), bf16(-0.5) for the uplink and f32 1.0 for the
+        // downlink.
+        let mut buf = Vec::new();
+        write_msg(
+            &mut buf,
+            &Msg::ShardGradChunk {
+                step: 7,
+                shard: 1,
+                seq: 2,
+                total: 3,
+                codec: 1,
+                elems: 2,
+                loss: 1.5,
+                data: vec![0xC0, 0x3F, 0x00, 0xBF],
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            buf,
+            [
+                0x26, 0x00, 0x00, 0x00, 0xE5, 0x8B, 0xBA, 0xC7, 0x0C, 0x07, 0x00, 0x00, 0x00,
+                0x00, 0x00, 0x00, 0x00, 0x01, 0x00, 0x00, 0x00, 0x02, 0x00, 0x00, 0x00, 0x03,
+                0x00, 0x00, 0x00, 0x01, 0x02, 0x00, 0x00, 0x00, 0x00, 0x00, 0xC0, 0x3F, 0x04,
+                0x00, 0x00, 0x00, 0xC0, 0x3F, 0x00, 0xBF
+            ]
+        );
+
+        let mut buf = Vec::new();
+        write_msg(
+            &mut buf,
+            &Msg::ApplyChunk {
+                step: 7,
+                seq: 0,
+                total: 2,
+                codec: 0,
+                elems: 1,
+                data: 1.0f32.to_le_bytes().to_vec(),
+            },
+        )
+        .unwrap();
+        assert_eq!(
+            buf,
+            [
+                0x1E, 0x00, 0x00, 0x00, 0x05, 0x21, 0xC1, 0x41, 0x0D, 0x07, 0x00, 0x00, 0x00,
+                0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x02, 0x00, 0x00, 0x00, 0x00,
+                0x01, 0x00, 0x00, 0x00, 0x04, 0x00, 0x00, 0x00, 0x00, 0x00, 0x80, 0x3F
+            ]
+        );
+    }
+
+    #[test]
+    fn wire_byte_counter_advances_by_whole_frames() {
+        let before = bytes_written();
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Heartbeat { rank: 0 }).unwrap();
+        write_msg(&mut buf, &Msg::CheckpointRequest { step: 1 }).unwrap();
+        // other tests run concurrently, so the counter may advance by
+        // more than our own frames — but never by less
+        assert!(bytes_written() >= before + buf.len() as u64);
+    }
+
+    #[test]
+    fn corrupt_chunk_mid_stream_drops_only_that_chunk() {
+        // a chunk stream with a corrupted middle frame: the reader
+        // reports Corrupt for it and the following chunks still parse —
+        // recovery is the coordinator's step-level resend, not byte-level
+        let chunk = |seq: u32| Msg::ShardGradChunk {
+            step: 3,
+            shard: 0,
+            seq,
+            total: 3,
+            codec: 0,
+            elems: 1,
+            data: 2.0f32.to_le_bytes().to_vec(),
+            loss: 0.25,
+        };
+        let mut buf = Vec::new();
+        let mut ends = Vec::new();
+        for seq in 0..3 {
+            write_msg(&mut buf, &chunk(seq)).unwrap();
+            ends.push(buf.len());
+        }
+        buf[ends[1] - 2] ^= 0x01; // flip a data byte inside chunk 1
+
+        let mut cursor = &buf[..];
+        assert!(matches!(read_msg(&mut cursor), Ok(Msg::ShardGradChunk { seq: 0, .. })));
+        assert!(matches!(read_msg(&mut cursor), Err(RecvError::Corrupt { .. })));
+        match read_msg(&mut cursor).unwrap() {
+            Msg::ShardGradChunk { seq, data, .. } => {
+                assert_eq!(seq, 2);
+                assert_eq!(data, 2.0f32.to_le_bytes());
+            }
+            other => panic!("wanted chunk 2, got {}", other.name()),
+        }
+    }
+
+    #[test]
+    fn truncated_chunk_stream_reports_closed_at_every_cut() {
+        // a peer dying mid-chunk-stream must surface as Closed on the
+        // partial frame, after the intact prefix parsed normally
+        let mut buf = Vec::new();
+        for seq in 0..2 {
+            write_msg(
+                &mut buf,
+                &Msg::ShardGradChunk {
+                    step: 1,
+                    shard: 0,
+                    seq,
+                    total: 2,
+                    codec: 1,
+                    elems: 2,
+                    loss: 1.0,
+                    data: vec![0x80, 0x3F, 0x00, 0xC0],
+                },
+            )
+            .unwrap();
+        }
+        let first = buf.len() / 2;
+        for cut in [first + 1, first + 8, buf.len() - 1] {
+            let mut cursor = &buf[..cut];
+            assert!(
+                matches!(read_msg(&mut cursor), Ok(Msg::ShardGradChunk { seq: 0, .. })),
+                "cut {cut}: intact first chunk must parse"
+            );
+            match read_msg(&mut cursor) {
+                Err(RecvError::Closed) => {}
+                other => panic!("cut {cut}: wanted Closed, got {other:?}"),
+            }
+        }
     }
 
     #[test]

@@ -9,6 +9,14 @@
 //! out on a side thread through a cloned write half so they never
 //! interleave with a response the loop is waiting on.
 //!
+//! Gradients stream: each parameter leaves as a `ShardGradChunk` the
+//! moment backward produces it (optionally bf16-compressed, per the
+//! `compress` mode announced in the `RegisterAck`), and the broadcast
+//! update arrives back as an `Apply` header plus an `ApplyChunk` stream
+//! reassembled into one pre-sized flat buffer. All streaming buffers are
+//! sized from the parameter layout at startup, so the warm step path
+//! does not allocate.
+//!
 //! Failure behavior: any local error (guard-style protocol violation,
 //! backend failure, send failure) is reported to the coordinator as a
 //! best-effort `WorkerAbort{reason}` before the process exits nonzero —
@@ -25,6 +33,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::DataSpec;
 use crate::data::corpus::{token_source, TokenSource};
+use crate::dist::compress::{Compression, GradCodec};
 use crate::dist::wire::{self, Msg, RecvError};
 use crate::dist::SHARD_SPLIT_BASE;
 use crate::runtime::{Batch, BatchShape, NativeBackend, TrainBackend};
@@ -47,6 +56,11 @@ pub struct WorkerOpts {
     pub worker_timeout_ms: u64,
     /// Bounded-backoff connect attempts before giving up.
     pub connect_attempts: usize,
+    /// Run nonce read from the coordinator's addr file, when launched
+    /// through one. The `RegisterAck` must echo it — a mismatch means the
+    /// addr file is a stale leftover pointing at a different (re)run, and
+    /// joining would silently train against the wrong trajectory.
+    pub expect_nonce: Option<u64>,
 }
 
 /// What a worker did before the run ended.
@@ -123,6 +137,7 @@ pub fn run(opts: &WorkerOpts) -> anyhow::Result<WorkerResult> {
         match wire::read_msg(&mut reader) {
             Ok(Msg::RegisterAck {
                 rank,
+                nonce,
                 nshards,
                 start_step,
                 steps,
@@ -130,8 +145,12 @@ pub fn run(opts: &WorkerOpts) -> anyhow::Result<WorkerResult> {
                 model,
                 optimizer,
                 data,
+                compress,
                 state,
-            }) => break (rank, nshards, start_step, steps, seed, model, optimizer, data, state),
+            }) => break (
+                rank, nonce, nshards, start_step, steps, seed, model, optimizer, data,
+                compress, state,
+            ),
             Ok(Msg::RegisterNack { reason }) => {
                 anyhow::bail!("coordinator refused registration: {reason}")
             }
@@ -145,7 +164,17 @@ pub fn run(opts: &WorkerOpts) -> anyhow::Result<WorkerResult> {
             Err(e) => anyhow::bail!("waiting for registration ack: {e}"),
         }
     };
-    let (rank, nshards, start_step, steps, seed, model, optimizer, data, state) = ack;
+    let (rank, nonce, nshards, start_step, steps, seed, model, optimizer, data, compress, state) =
+        ack;
+    if let Some(want) = opts.expect_nonce {
+        anyhow::ensure!(
+            nonce == want,
+            "coordinator answered with run nonce {nonce:#018x} but the addr file \
+             promised {want:#018x} — the file is a stale leftover from another run; \
+             re-read it (or delete it and restart the coordinator)"
+        );
+    }
+    let mode = Compression::parse(&compress)?;
     let data = DataSpec::parse(&data)?;
     anyhow::ensure!(
         data != DataSpec::Images,
@@ -153,8 +182,10 @@ pub fn run(opts: &WorkerOpts) -> anyhow::Result<WorkerResult> {
     );
     info!(
         "worker `{}` registered: rank {rank}, {nshards} shards, steps \
-         {start_step}..{steps}, model {model}, optimizer {optimizer}",
-        opts.worker_id
+         {start_step}..{steps}, model {model}, optimizer {optimizer}, \
+         compress {}",
+        opts.worker_id,
+        mode.name()
     );
 
     let mut backend = NativeBackend::new(&model, &optimizer, seed, opts.plan_threads)?;
@@ -189,7 +220,7 @@ pub fn run(opts: &WorkerOpts) -> anyhow::Result<WorkerResult> {
         })
     };
 
-    let result = step_loop(&mut reader, &writer, &mut backend, rank, data, seed, count);
+    let result = step_loop(&mut reader, &writer, &mut backend, rank, data, seed, count, mode);
     if let Err(e) = &result {
         // a dying worker explains itself — the coordinator logs the reason
         // instead of waiting out a heartbeat deadline
@@ -200,6 +231,7 @@ pub fn run(opts: &WorkerOpts) -> anyhow::Result<WorkerResult> {
     result
 }
 
+#[allow(clippy::too_many_arguments)]
 fn step_loop(
     reader: &mut TcpStream,
     writer: &Mutex<TcpStream>,
@@ -208,12 +240,24 @@ fn step_loop(
     data: DataSpec,
     seed: u64,
     count: usize,
+    mode: Compression,
 ) -> anyhow::Result<WorkerResult> {
     let mut feeds: HashMap<u32, ShardFeed> = HashMap::new();
     let mut pending: Option<u64> = None;
     let mut last_applied: Option<u64> = None;
     let mut steps_applied = 0usize;
     let mut shards_done = 0usize;
+    // pre-size every streaming buffer from the parameter layout so the
+    // warm step path never allocates: one encode buffer the size of the
+    // widest chunk, codec staging to match, and the reassembled downlink
+    let layout = backend.chunk_elems();
+    let total_chunks = layout.len() as u32;
+    let max_elems = layout.iter().copied().max().unwrap_or(0);
+    let flat_len: usize = layout.iter().sum();
+    let mut codec = GradCodec::new(mode);
+    codec.reserve(max_elems);
+    let mut chunk_buf: Vec<u8> = Vec::with_capacity(max_elems * mode.bytes_per_elem());
+    let mut flat: Vec<f32> = Vec::with_capacity(flat_len);
     loop {
         let msg = match wire::read_msg(reader) {
             Ok(m) => m,
@@ -252,11 +296,33 @@ fn step_loop(
                     let feed = feeds
                         .entry(shard)
                         .or_insert_with(|| ShardFeed::new(data, seed, shard, count));
-                    let (loss, grads) = {
-                        let toks = feed.batch(step)?;
-                        backend.grad_batch(&Batch::Tokens(toks))?
-                    };
-                    send(writer, &Msg::ShardGrads { step, shard, loss, grads })?;
+                    // streamed uplink: each parameter's gradient ships as a
+                    // ShardGradChunk the moment backward hands it over, so
+                    // the coordinator folds chunk N while this rank (and
+                    // its peers) still produce N+1
+                    let toks = feed.batch(step)?;
+                    backend.grad_batch_streamed(
+                        &Batch::Tokens(toks),
+                        &mut |i, loss, g| {
+                            let mut data = std::mem::take(&mut chunk_buf);
+                            codec.encode_into(g, &mut data);
+                            let msg = Msg::ShardGradChunk {
+                                step,
+                                shard,
+                                seq: i as u32,
+                                total: total_chunks,
+                                codec: mode.id(),
+                                elems: g.len() as u32,
+                                loss,
+                                data,
+                            };
+                            let sent = send(writer, &msg);
+                            if let Msg::ShardGradChunk { data, .. } = msg {
+                                chunk_buf = data; // keep the warm buffer
+                            }
+                            sent
+                        },
+                    )?;
                     shards_done += 1;
                 }
                 pending = Some(step);
@@ -283,11 +349,24 @@ fn step_loop(
                     );
                 }
                 if apply {
-                    backend.apply_flat_grads(&grads, lr)?;
+                    if grads.is_empty() {
+                        // streamed downlink: the header is followed by one
+                        // ApplyChunk per parameter on this same ordered
+                        // stream; reassemble into the reused flat buffer.
+                        // Past this point the step is committed, so any
+                        // loss here (corrupt or missing chunk) is fatal —
+                        // a partial apply cannot be retried or abandoned
+                        flat.clear();
+                        recv_apply_chunks(reader, &mut codec, mode, step, &mut flat)?;
+                        backend.apply_flat_grads(&flat, lr)?;
+                    } else {
+                        backend.apply_flat_grads(&grads, lr)?;
+                    }
                     steps_applied += 1;
                 }
-                // on a guard skip (apply = false) momentum stays untouched
-                // on every rank, mirroring the single-process step_gated
+                // on a guard skip (apply = false) the coordinator sends no
+                // chunks and momentum stays untouched on every rank,
+                // mirroring the single-process step_gated
                 pending = None;
                 last_applied = Some(step);
             }
@@ -303,6 +382,64 @@ fn step_loop(
             other => warnln!("rank {rank}: ignoring unexpected {}", other.name()),
         }
     }
+}
+
+/// Read the `ApplyChunk` stream that follows an `Apply` header and decode
+/// it into `flat`. The coordinator's per-connection writes are ordered,
+/// so the chunks arrive back to back in sequence; the real chunk count
+/// comes from the first chunk's `total`. Every failure mode is fatal by
+/// design: the Apply broadcast is the commit point, so a chunk this rank
+/// cannot decode means a replica that can never catch up.
+fn recv_apply_chunks(
+    reader: &mut TcpStream,
+    codec: &mut GradCodec,
+    mode: Compression,
+    step: u64,
+    flat: &mut Vec<f32>,
+) -> anyhow::Result<()> {
+    let mut next = 0u32;
+    let mut total = 1u32; // learned from the first chunk
+    while next < total {
+        let chunk = match wire::read_msg(reader) {
+            Ok(m) => m,
+            Err(RecvError::Corrupt { want, got }) => anyhow::bail!(
+                "ApplyChunk {next} of step {step} failed its CRC \
+                 (got {got:#010x}, wanted {want:#010x}) — the update is \
+                 committed on peers, this replica cannot continue"
+            ),
+            Err(e) => anyhow::bail!("reading ApplyChunk {next} of step {step}: {e}"),
+        };
+        match chunk {
+            Msg::ApplyChunk { step: s, seq, total: t, codec: c, elems, data } => {
+                anyhow::ensure!(
+                    s == step && seq == next,
+                    "protocol violation: ApplyChunk step {s} seq {seq}, \
+                     wanted step {step} seq {next}"
+                );
+                anyhow::ensure!(
+                    Compression::from_id(c)? == mode,
+                    "ApplyChunk codec id {c} does not match the run's {}",
+                    mode.name()
+                );
+                if next == 0 {
+                    anyhow::ensure!(t > 0, "Apply stream claims zero chunks");
+                    total = t;
+                } else {
+                    anyhow::ensure!(
+                        t == total,
+                        "ApplyChunk claims {t} total chunks, stream established {total}"
+                    );
+                }
+                codec.decode_append(&data, elems as usize, flat)?;
+                next += 1;
+            }
+            other => anyhow::bail!(
+                "protocol violation: {} interleaved an Apply chunk stream",
+                other.name()
+            ),
+        }
+    }
+    Ok(())
 }
 
 /// Serialize a frame onto the shared write half. No retry here on

@@ -47,6 +47,10 @@ pub struct FaultOpts {
     pub kills: usize,
     /// Seed for both the child runs and the fault-site randomness.
     pub seed: u64,
+    /// Gradient wire codec for the distributed scenarios
+    /// (`dist.compress`): every dist run — reference and victims — uses
+    /// it, so the byte-exactness checks hold per mode.
+    pub compress: String,
 }
 
 impl Default for FaultOpts {
@@ -57,6 +61,7 @@ impl Default for FaultOpts {
             checkpoint_every: 3,
             kills: 2,
             seed: 1234,
+            compress: "none".into(),
         }
     }
 }
@@ -493,6 +498,8 @@ fn coordinator_cmd(
         .arg("dist.bind=127.0.0.1:0")
         .arg("--set")
         .arg("dist.deadline_ms=1500")
+        .arg("--set")
+        .arg(format!("dist.compress={}", opts.compress))
         .env_remove("RMNP_FAULT_NAN_STEPS");
     if resume {
         cmd.arg("--resume");
@@ -500,11 +507,13 @@ fn coordinator_cmd(
     cmd
 }
 
-fn worker_cmd(bin: &Path, addr: &str, id: &str) -> Command {
+/// Workers join through `--addr-file`, so every dist scenario also
+/// exercises the published-address parse *and* the run-nonce echo check.
+fn worker_cmd(bin: &Path, dir: &Path, id: &str) -> Command {
     let mut cmd = Command::new(bin);
     cmd.arg("worker")
-        .arg("--connect")
-        .arg(addr)
+        .arg("--addr-file")
+        .arg(dir.join("coordinator.addr"))
         .arg("--id")
         .arg(id)
         .env_remove("RMNP_FAULT_NAN_STEPS");
@@ -512,16 +521,14 @@ fn worker_cmd(bin: &Path, addr: &str, id: &str) -> Command {
 }
 
 /// Poll for the coordinator's published `coordinator.addr` (the bind uses
-/// port 0, so only the coordinator knows the real port). Bails if the
-/// coordinator exits first.
+/// port 0, so only the coordinator knows the real port). Returns the
+/// address (the file's first line; the second carries the run nonce).
+/// Bails if the coordinator exits first.
 fn wait_addr(dir: &Path, coord: &mut Child) -> anyhow::Result<String> {
     let deadline = Instant::now() + Duration::from_secs(60);
     loop {
-        if let Ok(text) = std::fs::read_to_string(dir.join("coordinator.addr")) {
-            let text = text.trim();
-            if !text.is_empty() {
-                return Ok(text.to_string());
-            }
+        if let Ok((addr, _nonce)) = crate::dist::read_addr_file(&dir.join("coordinator.addr")) {
+            return Ok(addr);
         }
         if let Some(status) = coord.try_wait()? {
             anyhow::bail!("coordinator exited ({status}) before publishing its address");
@@ -561,8 +568,8 @@ pub fn dist_reference_bytes(bin: &Path, opts: &FaultOpts) -> anyhow::Result<Vec<
     let mut cmd = coordinator_cmd(bin, opts, &dir, 1, false);
     cmd.stdout(Stdio::null()).stderr(Stdio::null());
     let mut coord = cmd.spawn()?;
-    let addr = wait_addr(&dir, &mut coord)?;
-    let mut cmd = worker_cmd(bin, &addr, "ref0");
+    wait_addr(&dir, &mut coord)?;
+    let mut cmd = worker_cmd(bin, &dir, "ref0");
     cmd.stdout(Stdio::null()).stderr(Stdio::null());
     let mut worker = cmd.spawn()?;
     let cs = wait_exit(&mut coord, 180, "dist-reference coordinator")?;
@@ -589,9 +596,9 @@ pub fn dist_worker_kill(
     let mut cmd = coordinator_cmd(bin, opts, &dir, 2, false);
     cmd.stdout(Stdio::null()).stderr(Stdio::null());
     let mut coord = cmd.spawn()?;
-    let addr = wait_addr(&dir, &mut coord)?;
+    wait_addr(&dir, &mut coord)?;
     let spawn_worker = |id: &str| -> anyhow::Result<Child> {
-        let mut cmd = worker_cmd(bin, &addr, id);
+        let mut cmd = worker_cmd(bin, &dir, id);
         cmd.stdout(Stdio::null()).stderr(Stdio::null());
         Ok(cmd.spawn()?)
     };
@@ -664,10 +671,10 @@ pub fn dist_coordinator_kill(
     let mut cmd = coordinator_cmd(bin, opts, &dir, 2, false);
     cmd.stdout(Stdio::null()).stderr(Stdio::null());
     let mut coord = cmd.spawn()?;
-    let addr = wait_addr(&dir, &mut coord)?;
+    wait_addr(&dir, &mut coord)?;
     // workers keep their pipes: the checks below read their complaints
     let spawn_piped = |id: &str| -> anyhow::Result<Child> {
-        let mut cmd = worker_cmd(bin, &addr, id);
+        let mut cmd = worker_cmd(bin, &dir, id);
         cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
         Ok(cmd.spawn()?)
     };
@@ -713,9 +720,9 @@ pub fn dist_coordinator_kill(
     let mut cmd = coordinator_cmd(bin, opts, &dir, 2, true);
     cmd.stdout(Stdio::null()).stderr(Stdio::null());
     let mut coord = cmd.spawn()?;
-    let addr = wait_addr(&dir, &mut coord)?;
+    wait_addr(&dir, &mut coord)?;
     let spawn_quiet = |id: &str| -> anyhow::Result<Child> {
-        let mut cmd = worker_cmd(bin, &addr, id);
+        let mut cmd = worker_cmd(bin, &dir, id);
         cmd.stdout(Stdio::null()).stderr(Stdio::null());
         Ok(cmd.spawn()?)
     };

@@ -23,6 +23,14 @@
 //! and continued produces exactly the bits of an uninterrupted run, for
 //! any `perf.plan_threads` (held by `tests/native_train.rs`).
 
+/// Per-chunk gradient consumer for the streamed distributed half-step
+/// (`NativeBackend::grad_batch_streamed`): receives
+/// `(chunk_index, shard_loss, grad_slice)` for each parameter in the
+/// plan's scheduling order. Defined at the backend layer so the worker's
+/// wire-framing sink and the backend's emission loop agree on one
+/// signature.
+pub type GradSink<'a> = dyn FnMut(usize, f32, &[f32]) -> anyhow::Result<()> + 'a;
+
 /// Scalar metrics from one training step.
 #[derive(Clone, Copy, Debug)]
 pub struct StepMetrics {

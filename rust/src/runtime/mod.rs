@@ -34,7 +34,9 @@ use std::path::Path;
 #[cfg(feature = "pjrt")]
 use std::rc::Rc;
 
-pub use backend::{Batch, BatchShape, NamedBuffer, StepMetrics, TrainBackend, TrainState};
+pub use backend::{
+    Batch, BatchShape, GradSink, NamedBuffer, StepMetrics, TrainBackend, TrainState,
+};
 pub use manifest::{Dtype, GraphSpec, Manifest, TensorSpec};
 pub use native::NativeBackend;
 #[cfg(feature = "pjrt")]

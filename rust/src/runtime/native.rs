@@ -46,7 +46,7 @@ use crate::model::{self, ModelArch, ModelSpec, ParamClass, ParamInit};
 use crate::optim::plan::{OptKind, ParamTask, StepPlan};
 use crate::optim::registry::{native_kind, NamedState};
 use crate::runtime::backend::{
-    Batch, BatchShape, NamedBuffer, StepMetrics, TrainBackend, TrainState,
+    Batch, BatchShape, GradSink, NamedBuffer, StepMetrics, TrainBackend, TrainState,
 };
 use crate::tensor::Matrix;
 use crate::util::Rng;
@@ -195,6 +195,65 @@ impl NativeBackend {
             Ok((loss, flat))
         })?;
         Ok((loss as f32, flat))
+    }
+
+    /// Streamed variant of [`NativeBackend::grad_batch`]: instead of
+    /// flattening into one `total_elems()` Vec, hand each parameter's
+    /// gradient slice to `sink` in the plan's scheduling order, as
+    /// `(chunk_index, shard_loss, grad_slice)`. The distributed worker
+    /// frames and ships chunk `i` from inside the sink, so the uplink for
+    /// one parameter is on the wire (and being reduced remotely) while
+    /// later chunks serialize and while the *next* shard's
+    /// forward/backward runs — and no worker-side flat buffer ever
+    /// exists. Gradients are produced by one backward sweep, so the sink
+    /// runs after backward completes for this batch; the overlap is
+    /// between the chunk sends, the coordinator's incremental reduce,
+    /// and the following shard's compute.
+    ///
+    /// Same purity contract as `grad_batch`: parameters, momentum, and
+    /// the step counter are untouched, and repeated calls on the same
+    /// batch emit bit-identical chunks (what resend-after-death relies
+    /// on). A sink error aborts the emission and surfaces here.
+    pub fn grad_batch_streamed(
+        &mut self,
+        batch: &Batch,
+        sink: &mut GradSink<'_>,
+    ) -> anyhow::Result<f32> {
+        let arch = &mut self.arch;
+        let idx = &self.idx;
+        let plan = &self.plan;
+        let loss = plan.with_all_tasks(|tasks| -> anyhow::Result<f64> {
+            arch.load_batch(tasks, idx, batch)?;
+            let mut loss = arch.forward(tasks, idx);
+            arch.backward(tasks, idx);
+            if crate::util::fault::nan_grads_now() {
+                // same test-only poison hook as `grad_batch`
+                loss = f64::NAN;
+                for t in tasks.iter_mut() {
+                    t.grad.data_mut().fill(f32::NAN);
+                }
+            }
+            for (i, t) in tasks.iter().enumerate() {
+                sink(i, loss as f32, t.grad.data())?;
+            }
+            Ok(loss)
+        })?;
+        Ok(loss as f32)
+    }
+
+    /// Per-parameter element counts in the plan's scheduling order — the
+    /// chunk layout [`NativeBackend::grad_batch_streamed`] emits and
+    /// [`NativeBackend::apply_flat_grads`] consumes. Workers pre-size
+    /// their chunk send/receive buffers from this so the warm step loop
+    /// never allocates for framing.
+    pub fn chunk_elems(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.plan.len());
+        self.plan.with_all_tasks(|tasks| {
+            for t in tasks.iter() {
+                out.push(t.w.data().len());
+            }
+        });
+        out
     }
 
     /// Load an externally reduced flat gradient (scheduling order, same
@@ -654,6 +713,45 @@ mod tests {
         let err = b.apply_flat_grads(&g1[1..], 1e-3).unwrap_err().to_string();
         assert!(err.contains("elements"), "{err}");
         assert_eq!(b.steps_taken(), 0, "failed apply must not count a step");
+    }
+
+    #[test]
+    fn grad_batch_streamed_matches_flat_layout() {
+        // the chunked emission must cover exactly the bytes grad_batch
+        // flattens, in the same order, with the same loss on every chunk
+        let mut b = NativeBackend::new("gpt2_tiny", "rmnp", 29, 1).unwrap();
+        let toks = token_batch(b.spec(), 66);
+        let (loss, flat) = b.grad_batch(&Batch::Tokens(&toks)).unwrap();
+        let elems = b.chunk_elems();
+        assert_eq!(elems.len(), b.n_params());
+        assert_eq!(elems.iter().sum::<usize>(), b.total_elems());
+        let before = b.export_state().unwrap();
+        let mut streamed = Vec::new();
+        let mut chunks = Vec::new();
+        let sloss = b
+            .grad_batch_streamed(&Batch::Tokens(&toks), &mut |i, l, g| {
+                assert_eq!(l.to_bits(), loss.to_bits(), "chunk {i} loss");
+                chunks.push((i, g.len()));
+                streamed.extend_from_slice(g);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(sloss.to_bits(), loss.to_bits());
+        assert_eq!(streamed, flat, "streamed chunks diverge from the flat layout");
+        for (k, (i, n)) in chunks.iter().enumerate() {
+            assert_eq!(*i, k, "chunks must arrive in scheduling order");
+            assert_eq!(*n, elems[k], "chunk {k} length vs chunk_elems");
+        }
+        assert_eq!(before, b.export_state().unwrap(), "streamed grads mutated state");
+        // a sink error aborts the emission and surfaces to the caller
+        let err = b
+            .grad_batch_streamed(&Batch::Tokens(&toks), &mut |i, _, _| {
+                anyhow::ensure!(i < 2, "sink refused chunk {i}");
+                Ok(())
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("refused chunk 2"), "{err}");
     }
 
     #[test]

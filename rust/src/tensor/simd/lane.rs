@@ -164,6 +164,55 @@ pub(crate) unsafe fn scale_into<V: SimdLane>(dst: &mut [f32], a: &[f32], b: f32)
     }
 }
 
+/// Pack f32 values into bf16 bit patterns (round-to-nearest-even, via
+/// [`super::bf16_from_f32`]), unrolled by the backend's lane width.
+///
+/// The conversion is integer bit arithmetic, which the f32-only
+/// [`SimdLane`] surface cannot express — so unlike the float kernels the
+/// body carries no explicit vector ops. It still instantiates per
+/// backend: the fixed `LANES`-wide inner loop inlines into the backend's
+/// `#[target_feature]` wrapper, where LLVM is free to vectorize the
+/// shift/add/compare sequence with that ISA's integer registers. Every
+/// backend computes the identical per-element bits, so the packed bytes
+/// never depend on the rung.
+#[inline(always)]
+pub(crate) unsafe fn bf16_pack<V: SimdLane>(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let n = src.len();
+    let l = V::LANES;
+    let mut i = 0usize;
+    while i + l <= n {
+        for j in 0..l {
+            *dst.get_unchecked_mut(i + j) = super::bf16_from_f32(*src.get_unchecked(i + j));
+        }
+        i += l;
+    }
+    while i < n {
+        *dst.get_unchecked_mut(i) = super::bf16_from_f32(*src.get_unchecked(i));
+        i += 1;
+    }
+}
+
+/// Unpack bf16 bit patterns to f32 (exact widening shift), unrolled by
+/// the backend's lane width; same instantiation story as [`bf16_pack`].
+#[inline(always)]
+pub(crate) unsafe fn bf16_unpack<V: SimdLane>(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let n = src.len();
+    let l = V::LANES;
+    let mut i = 0usize;
+    while i + l <= n {
+        for j in 0..l {
+            *dst.get_unchecked_mut(i + j) = super::bf16_to_f32(*src.get_unchecked(i + j));
+        }
+        i += l;
+    }
+    while i < n {
+        *dst.get_unchecked_mut(i) = super::bf16_to_f32(*src.get_unchecked(i));
+        i += 1;
+    }
+}
+
 /// Fused row normalization: `dst[i,:] = src[i,:] / max(‖src[i,:]‖₂, eps)`.
 #[inline(always)]
 pub(crate) unsafe fn row_normalize_rows<V: SimdLane>(

@@ -241,6 +241,71 @@ pub fn label() -> &'static str {
     }
 }
 
+/// Convert one f32 to bf16 bits with round-to-nearest-even.
+///
+/// The rounding is the classic add-trick on the raw bit pattern:
+/// `bits + 0x7FFF + (bit 16)` carries into the kept half exactly when
+/// RNE rounds up (the extra LSB-of-kept term breaks exact ties toward
+/// even). NaNs take a separate path — the carry would otherwise walk a
+/// small payload up into the exponent and turn NaN into infinity — and
+/// are quieted with their top payload bits preserved. Overflow rounds
+/// to the correctly-signed infinity, matching IEEE-754 narrowing.
+#[inline(always)]
+pub fn bf16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) | 0x0040) as u16;
+    }
+    (bits.wrapping_add(0x7FFF + ((bits >> 16) & 1)) >> 16) as u16
+}
+
+/// Widen bf16 bits back to f32 — exact (bf16 is a prefix of f32).
+#[inline(always)]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+fn bf16_pack_scalar(src: &[f32], dst: &mut [u16]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = bf16_from_f32(s);
+    }
+}
+
+fn bf16_unpack_scalar(src: &[u16], dst: &mut [f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = bf16_to_f32(s);
+    }
+}
+
+/// Pack `src` into bf16 bit patterns with round-to-nearest-even,
+/// dispatched down the same ladder as the float kernels. Every rung
+/// performs the identical per-element bit arithmetic, so — unlike the
+/// float kernels, where lane width changes reduction trees — the packed
+/// bytes are bit-identical across rungs; the rung only changes speed.
+pub fn bf16_pack(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len(), "bf16_pack length mismatch");
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => unsafe { avx2::bf16_pack(src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => unsafe { neon::bf16_pack(src, dst) },
+        _ => bf16_pack_scalar(src, dst),
+    }
+}
+
+/// Unpack bf16 bit patterns to f32 (exact widening), dispatched like
+/// [`bf16_pack`]. Bit-identical across rungs.
+pub fn bf16_unpack(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "bf16_unpack length mismatch");
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx2 => unsafe { avx2::bf16_unpack(src, dst) },
+        #[cfg(target_arch = "aarch64")]
+        SimdPath::Neon => unsafe { neon::bf16_unpack(src, dst) },
+        _ => bf16_unpack_scalar(src, dst),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,6 +337,61 @@ mod tests {
         assert!(!(avx2_available() && neon_available()));
         if !avx2_available() && !neon_available() {
             assert_eq!(detected(), SimdPath::Scalar);
+        }
+    }
+
+    #[test]
+    fn bf16_known_values_and_round_trip() {
+        // hand-pinned conversions (the full python-oracle sweep lives in
+        // tests/bf16_codec.rs; these are the spot checks)
+        assert_eq!(bf16_from_f32(0.0), 0x0000);
+        assert_eq!(bf16_from_f32(-0.0), 0x8000);
+        assert_eq!(bf16_from_f32(1.0), 0x3F80);
+        assert_eq!(bf16_from_f32(1.5), 0x3FC0);
+        assert_eq!(bf16_from_f32(-0.5), 0xBF00);
+        assert_eq!(bf16_from_f32(f32::INFINITY), 0x7F80);
+        assert_eq!(bf16_from_f32(f32::NEG_INFINITY), 0xFF80);
+        // overflow rounds to infinity, never wraps
+        assert_eq!(bf16_from_f32(f32::MAX), 0x7F80);
+        // exact ties go to even: 1.0 + 2^-8 sits halfway between
+        // 0x3F80 and 0x3F81 and must land on the even 0x3F80
+        assert_eq!(bf16_from_f32(f32::from_bits(0x3F80_8000)), 0x3F80);
+        assert_eq!(bf16_from_f32(f32::from_bits(0x3F81_8000)), 0x3F82);
+        // NaN stays NaN (quieted), payload top bits preserved
+        assert_eq!(bf16_from_f32(f32::from_bits(0x7F80_0001)), 0x7FC0);
+        assert!(bf16_to_f32(bf16_from_f32(f32::NAN)).is_nan());
+        // every bf16-representable value round-trips exactly
+        for b in [0x0000u16, 0x3F80, 0xC2C8, 0x0001, 0x8080, 0x7F7F] {
+            assert_eq!(bf16_from_f32(bf16_to_f32(b)), b, "bits {b:#06x}");
+        }
+    }
+
+    #[test]
+    fn bf16_pack_dispatch_matches_scalar() {
+        // the active rung (whatever it is) must produce the same bytes
+        // as the scalar core — conversion is pure bit arithmetic
+        let mut rng = crate::util::Rng::new(11);
+        for len in [0usize, 1, 3, 8, 9, 31, 257] {
+            let mut src = vec![0.0f32; len];
+            rng.fill_normal(&mut src, 10.0);
+            if len > 2 {
+                src[1] = f32::NAN;
+                src[2] = f32::INFINITY;
+            }
+            let mut fast = vec![0u16; len];
+            let mut slow = vec![0u16; len];
+            bf16_pack(&src, &mut fast);
+            bf16_pack_scalar(&src, &mut slow);
+            assert_eq!(fast, slow, "len {len}");
+            let mut back_fast = vec![0.0f32; len];
+            let mut back_slow = vec![0.0f32; len];
+            bf16_unpack(&fast, &mut back_fast);
+            bf16_unpack_scalar(&slow, &mut back_slow);
+            assert_eq!(
+                back_fast.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                back_slow.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "len {len}"
+            );
         }
     }
 
@@ -320,6 +440,27 @@ mod tests {
             (66, 20, 40),
             (7, 40, 96),
         ];
+
+        #[test]
+        fn bf16_pack_wrapper_matches_scalar_core() {
+            if !native_available() {
+                return;
+            }
+            let mut rng = Rng::new(21);
+            for len in [1usize, 4, 7, 8, 9, 100, 255] {
+                let src = randv(len, &mut rng);
+                let mut got = vec![0u16; len];
+                unsafe { native::bf16_pack(&src, &mut got) };
+                let want: Vec<u16> =
+                    src.iter().map(|&x| super::super::bf16_from_f32(x)).collect();
+                assert_eq!(got, want, "pack len {len}");
+                let mut back = vec![0.0f32; len];
+                unsafe { native::bf16_unpack(&got, &mut back) };
+                for (b, &w) in back.iter().zip(&got) {
+                    assert_eq!(b.to_bits(), (w as u32) << 16);
+                }
+            }
+        }
 
         #[test]
         fn dot_matches_sequential() {

@@ -194,3 +194,15 @@ pub unsafe fn gram_rows(
 ) {
     lane::gram_rows::<F32x4>(dst_chunk, a, i0, i1, m, k)
 }
+
+/// Pack f32 into bf16 bits (RNE); see [`lane::bf16_pack`].
+#[target_feature(enable = "neon")]
+pub unsafe fn bf16_pack(src: &[f32], dst: &mut [u16]) {
+    lane::bf16_pack::<F32x4>(src, dst)
+}
+
+/// Unpack bf16 bits to f32 (exact); see [`lane::bf16_unpack`].
+#[target_feature(enable = "neon")]
+pub unsafe fn bf16_unpack(src: &[u16], dst: &mut [f32]) {
+    lane::bf16_unpack::<F32x4>(src, dst)
+}

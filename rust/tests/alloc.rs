@@ -168,4 +168,58 @@ fn optimizer_steps_are_allocation_free_after_warmup() {
             );
         });
     }
+
+    // --- dist streaming path: after one warmup frame, chunk encode →
+    // frame write → chunk decode is allocation-free in both codec modes.
+    // The worker pre-sizes its chunk buffer from the parameter layout
+    // and `write_msg` stages frames in a thread-local scratch, so warm
+    // steps never touch the heap for wire traffic. ---
+    {
+        use rmnp::dist::compress::{Compression, GradCodec};
+        use rmnp::dist::wire::{self, Msg};
+        let mut grad = vec![0.0f32; 4096];
+        rng.fill_normal(&mut grad, 1.0);
+        for mode in [Compression::None, Compression::Bf16] {
+            let mut codec = GradCodec::new(mode);
+            codec.reserve(grad.len());
+            let mut data: Vec<u8> = Vec::with_capacity(grad.len() * 4);
+            let mut sink: Vec<u8> = Vec::with_capacity(grad.len() * 4 + 64);
+            let mut flat: Vec<f32> = Vec::with_capacity(grad.len());
+            let mut stream = |codec: &mut GradCodec,
+                              data: &mut Vec<u8>,
+                              sink: &mut Vec<u8>,
+                              flat: &mut Vec<f32>| {
+                sink.clear();
+                flat.clear();
+                let mut payload = std::mem::take(data);
+                codec.encode_into(&grad, &mut payload);
+                let msg = Msg::ShardGradChunk {
+                    step: 1,
+                    shard: 0,
+                    seq: 0,
+                    total: 1,
+                    codec: mode.id(),
+                    elems: grad.len() as u32,
+                    loss: 0.5,
+                    data: payload,
+                };
+                wire::write_msg(sink, &msg).unwrap();
+                if let Msg::ShardGradChunk { data: payload, .. } = msg {
+                    *data = payload;
+                }
+                codec.decode_append(data, grad.len(), flat).unwrap();
+            };
+            stream(&mut codec, &mut data, &mut sink, &mut flat); // warmup
+            let before = allocs();
+            for _ in 0..5 {
+                stream(&mut codec, &mut data, &mut sink, &mut flat);
+            }
+            assert_eq!(
+                allocs(),
+                before,
+                "{}: warm chunk encode/frame/decode must be allocation-free",
+                mode.name()
+            );
+        }
+    }
 }

@@ -18,6 +18,7 @@ use std::time::{Duration, Instant};
 
 use rmnp::config::{DataSpec, RunConfig};
 use rmnp::dist::coordinator::{self, DistResult};
+use rmnp::dist::read_addr_file;
 use rmnp::dist::wire::{self, Msg};
 use rmnp::dist::worker::{self, WorkerOpts, WorkerResult};
 
@@ -48,14 +49,12 @@ fn dist_cfg(out: PathBuf, steps: usize, workers: usize) -> RunConfig {
 }
 
 /// Poll for the coordinator's published address (it binds port 0).
-fn wait_addr(dir: &Path) -> String {
+/// Returns the address plus the run nonce from the file's second line.
+fn wait_addr(dir: &Path) -> (String, Option<u64>) {
     let deadline = Instant::now() + Duration::from_secs(30);
     loop {
-        if let Ok(text) = std::fs::read_to_string(dir.join("coordinator.addr")) {
-            let text = text.trim();
-            if !text.is_empty() {
-                return text.to_string();
-            }
+        if let Ok(parsed) = read_addr_file(&dir.join("coordinator.addr")) {
+            return parsed;
         }
         assert!(Instant::now() < deadline, "coordinator never published its address");
         std::thread::sleep(Duration::from_millis(5));
@@ -70,17 +69,21 @@ fn worker_opts(addr: &str, id: &str) -> WorkerOpts {
         heartbeat_ms: 50,
         worker_timeout_ms: 30_000,
         connect_attempts: 8,
+        expect_nonce: None,
     }
 }
 
 /// Run one coordinator plus `nworkers` worker replicas to completion.
+/// Workers carry the published run nonce, so every in-process run also
+/// exercises the nonce echo check.
 fn run_dist(cfg: RunConfig, nworkers: usize) -> (DistResult, Vec<WorkerResult>) {
     let dir = cfg.out_dir.clone();
     let coord = std::thread::spawn(move || coordinator::run(&cfg));
-    let addr = wait_addr(&dir);
+    let (addr, nonce) = wait_addr(&dir);
     let workers: Vec<_> = (0..nworkers)
         .map(|i| {
-            let opts = worker_opts(&addr, &format!("w{i}"));
+            let mut opts = worker_opts(&addr, &format!("w{i}"));
+            opts.expect_nonce = nonce;
             std::thread::spawn(move || worker::run(&opts))
         })
         .collect();
@@ -124,6 +127,112 @@ fn final_checkpoint_is_bit_exact_for_any_worker_count() {
     }
     assert_eq!(finals[0], finals[1], "1-worker and 2-worker runs diverged");
     assert_eq!(finals[0], finals[2], "1-worker and 3-worker runs diverged");
+}
+
+/// The determinism contract holds under bf16 wire compression too: the
+/// codec rounds once on the uplink and once on the shared downlink
+/// average, so every worker count decodes the identical byte stream and
+/// the final checkpoints stay bit-exact across 1, 2, and 3 workers.
+#[test]
+fn bf16_compression_is_bit_exact_for_any_worker_count() {
+    let mut finals = Vec::new();
+    for workers in [1usize, 2, 3] {
+        let out = tmp_out(&format!("bf16-count-{workers}"));
+        let mut cfg = dist_cfg(out.clone(), 6, workers);
+        cfg.dist_compress = "bf16".into();
+        let (run, results) = run_dist(cfg, workers);
+        assert_eq!(run.steps_run, 6);
+        assert_eq!(run.deaths, 0, "bf16 {workers}-worker run saw deaths");
+        let shards_done: usize = results.iter().map(|r| r.shards_done).sum();
+        assert_eq!(shards_done, 2 * 6, "every shard computed exactly once per step");
+        finals.push(std::fs::read(out.join("step-6.ckpt")).unwrap());
+    }
+    assert_eq!(finals[0], finals[1], "bf16: 1-worker and 2-worker runs diverged");
+    assert_eq!(finals[0], finals[2], "bf16: 1-worker and 3-worker runs diverged");
+}
+
+/// A worker holding a stale run nonce (left over from a previous
+/// coordinator incarnation's addr file) is turned away at registration
+/// time — before it computes a single shard — with an error naming the
+/// nonce mismatch.
+#[test]
+fn stale_run_nonce_is_rejected_before_compute() {
+    let out = tmp_out("stale-nonce");
+    let mut cfg = dist_cfg(out.clone(), 2, 1);
+    cfg.dist_join_timeout_ms = 2_000;
+    let dir = cfg.out_dir.clone();
+    let coord = std::thread::spawn(move || coordinator::run(&cfg));
+    let (addr, nonce) = wait_addr(&dir);
+    let nonce = nonce.expect("coordinator should publish a run nonce");
+
+    let mut stale = worker_opts(&addr, "stale");
+    stale.expect_nonce = Some(nonce ^ 0x5A5A_5A5A);
+    let err = worker::run(&stale).expect_err("a stale run nonce must be rejected");
+    let text = err.to_string();
+    assert!(text.contains("nonce"), "error does not name the nonce: {text}");
+
+    // the mismatched worker burned the only roster slot and hung up, so
+    // the coordinator fails its run instead of training a ghost fleet —
+    // either way it must terminate
+    let _ = coord.join().expect("coordinator thread panicked");
+}
+
+/// A worker whose chunk stream dies mid-frame (truncated gradient chunk,
+/// then a vanished socket) is marked dead; its shards redistribute and
+/// the run still finishes byte-identical to a clean 1-worker run.
+#[test]
+fn truncated_chunk_stream_recovers_byte_exact() {
+    let ref_out = tmp_out("trunc-ref");
+    let (ref_run, _) = run_dist(dist_cfg(ref_out.clone(), 6, 1), 1);
+    assert_eq!(ref_run.steps_run, 6);
+    let reference = std::fs::read(ref_out.join("step-6.ckpt")).unwrap();
+
+    let out = tmp_out("trunc");
+    let cfg = dist_cfg(out.clone(), 6, 2);
+    let dir = cfg.out_dir.clone();
+    let coord = std::thread::spawn(move || coordinator::run(&cfg));
+    let (addr, nonce) = wait_addr(&dir);
+
+    // a fake worker registers first, waits for its shard assignment, then
+    // ships only the front half of a gradient-chunk frame and vanishes
+    let (mut sock, reply) = raw_register(&addr, "liar");
+    assert!(matches!(reply, Msg::RegisterAck { .. }), "got {}", reply.name());
+    let mut real = worker_opts(&addr, "honest");
+    real.expect_nonce = nonce;
+    let work = std::thread::spawn(move || worker::run(&real));
+
+    loop {
+        match wire::read_msg(&mut sock) {
+            Ok(Msg::StepBegin { .. }) => break,
+            Ok(_) => continue,
+            Err(e) => panic!("fake worker lost the coordinator early: {e:?}"),
+        }
+    }
+    let mut frame = Vec::new();
+    wire::write_msg(
+        &mut frame,
+        &Msg::ShardGradChunk {
+            step: 0,
+            shard: 0,
+            seq: 0,
+            total: 4,
+            codec: 0,
+            elems: 8,
+            loss: 1.0,
+            data: vec![0u8; 32],
+        },
+    )
+    .unwrap();
+    use std::io::Write;
+    sock.write_all(&frame[..frame.len() / 2]).unwrap();
+    drop(sock);
+
+    let run = coord.join().unwrap().expect("coordinator failed after truncated stream");
+    assert_eq!(run.steps_run, 6);
+    assert!(run.deaths >= 1, "the truncating worker was never declared dead");
+    work.join().unwrap().expect("surviving worker failed");
+    let bytes = std::fs::read(out.join("step-6.ckpt")).unwrap();
+    assert_eq!(bytes, reference, "recovery after a truncated chunk stream diverged");
 }
 
 /// The same worker-count determinism contract for the optimizer zoo's
@@ -183,7 +292,7 @@ fn late_join_is_rejected_cleanly() {
     let cfg = dist_cfg(out.clone(), 40, 1);
     let dir = cfg.out_dir.clone();
     let coord = std::thread::spawn(move || coordinator::run(&cfg));
-    let addr = wait_addr(&dir);
+    let (addr, _) = wait_addr(&dir);
     let opts = worker_opts(&addr, "w0");
     let work = std::thread::spawn(move || worker::run(&opts));
 
@@ -218,7 +327,7 @@ fn duplicate_worker_id_is_refused() {
     cfg.dist_join_timeout_ms = 1_500;
     let dir = cfg.out_dir.clone();
     let coord = std::thread::spawn(move || coordinator::run(&cfg));
-    let addr = wait_addr(&dir);
+    let (addr, _) = wait_addr(&dir);
 
     let (_first, reply) = raw_register(&addr, "dup");
     assert!(
@@ -249,7 +358,7 @@ fn worker_abort_reason_surfaces_in_coordinator_error() {
     let cfg = dist_cfg(out.clone(), 6, 1);
     let dir = cfg.out_dir.clone();
     let coord = std::thread::spawn(move || coordinator::run(&cfg));
-    let addr = wait_addr(&dir);
+    let (addr, _) = wait_addr(&dir);
 
     let (mut sock, reply) = raw_register(&addr, "doomed");
     assert!(matches!(reply, Msg::RegisterAck { .. }), "got {}", reply.name());

@@ -44,6 +44,7 @@ fn suite_opts(name: &str) -> FaultOpts {
         checkpoint_every: 4,
         kills: 1,
         seed: 77,
+        compress: "none".into(),
     }
 }
 

@@ -2,12 +2,12 @@
 """Render the README's benchmark tables from BENCH_*.json.
 
 Usage:
-    scripts/bench_table.py [PRECOND_JSON] [HOST_TRAIN_JSON] [SHOOTOUT_JSON]
+    scripts/bench_table.py [PRECOND_JSON] [HOST_TRAIN_JSON] [SHOOTOUT_JSON] [DIST_JSON]
 
 With no arguments, prefers rust/BENCH_precond.json,
-rust/BENCH_host_train.json, and rust/BENCH_shootout.json (fresh local
-`cargo bench` runs) and falls back to the newest bench_history/
-snapshots. Prints GitHub-flavored markdown to stdout; paste it into
+rust/BENCH_host_train.json, rust/BENCH_shootout.json, and
+rust/BENCH_dist.json (fresh local `cargo bench` runs) and falls back to
+the newest bench_history/ snapshots. Prints GitHub-flavored markdown to stdout; paste it into
 README.md's "Benchmarks & perf tracking" section after re-running the
 benches:
 
@@ -121,12 +121,50 @@ def shootout_table(path):
         print()
 
 
+def dist_table(path):
+    """The distributed streaming economics from BENCH_dist.json: per-step
+    latency vs worker count and wire bytes per codec mode."""
+    if path is None:
+        print("_No dist envelope found (run `cargo bench --bench dist` to "
+              "record the streaming/wire table)._")
+        return
+    with open(path) as f:
+        doc = json.load(f)
+    if "dist_step_s" not in doc:
+        return
+    print(f"<!-- dist rows from {os.path.basename(path)} -->")
+    print("**Distributed streaming** "
+          f"({doc.get('steps', '?')} steps, {doc.get('shards', '?')} shards, "
+          f"{doc.get('elems', '?')} parameter elements, localhost TCP):")
+    print()
+    print("| setup | ms/step | vs local |")
+    print("|---|---|---|")
+    local = doc["local_step_s"]
+    rows = [("local loop (in-process)", local),
+            ("dist, 1 worker", doc["dist_step_s"])]
+    if "dist_step_2w_s" in doc:
+        rows.append(("dist, 2 workers", doc["dist_step_2w_s"]))
+    for label, s in rows:
+        print(f"| {label} | {s*1e3:.2f} | {s/local:.2f}x |")
+    print()
+    if "wire_ratio_bf16" in doc:
+        print("| wire codec | bytes/step | vs f32 |")
+        print("|---|---|---|")
+        f32 = doc["wire_bytes_per_step_f32"]
+        bf16 = doc["wire_bytes_per_step_bf16"]
+        print(f"| none (f32) | {f32:.0f} | 1.00x |")
+        print(f"| bf16 | {bf16:.0f} | {doc['wire_ratio_bf16']:.2f}x |")
+        print()
+
+
 def main():
     path = sys.argv[1] if len(sys.argv) > 1 else find_default("precond")
     host_path = sys.argv[2] if len(sys.argv) > 2 else find_default(
         "host_train", required=False)
     shootout_path = sys.argv[3] if len(sys.argv) > 3 else find_default(
         "shootout", required=False)
+    dist_path = sys.argv[4] if len(sys.argv) > 4 else find_default(
+        "dist", required=False)
     with open(path) as f:
         doc = json.load(f)
 
@@ -182,6 +220,7 @@ def main():
 
     host_train_table(host_path)
     shootout_table(shootout_path)
+    dist_table(dist_path)
 
 
 if __name__ == "__main__":
