@@ -2,19 +2,26 @@
 //! corpora and the prefetching loader. The data path must comfortably
 //! out-produce the training consumer (tokens/s here vs ~1e5 tokens/s
 //! consumed by the largest CPU model), or the L3 pipeline would become
-//! the bottleneck the paper's coordinator exists to avoid.
+//! the bottleneck the paper's coordinator exists to avoid. Writes
+//! `BENCH_data_pipeline.json` so `scripts/bench_check.sh` can gate the
+//! envelope and snapshot it to `bench_history/`.
 
+use std::path::Path;
+
+use rmnp::bench::report::{self, envelope, num, obj, text};
 use rmnp::bench::{bench, BenchOpts};
 use rmnp::config::DataSpec;
 use rmnp::data::corpus::token_source;
 use rmnp::data::images::ImageSource;
 use rmnp::data::loader::token_batches;
 use rmnp::data::tokenizer::BpeTokenizer;
+use rmnp::util::Json;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let opts = BenchOpts { sample_target: 0.1, samples: 8, budget: 6.0, warmup: 1 };
     const N: usize = 16 * 129;
 
+    let mut corpora: Vec<Json> = Vec::new();
     println!("corpus generation ({N} tokens/call):");
     for spec in [DataSpec::Markov, DataSpec::Zipf, DataSpec::Ngram] {
         let mut src = token_source(spec, 1, 0);
@@ -23,6 +30,11 @@ fn main() {
         let tps = N as f64 / r.median();
         println!("  {}  ({:.1}M tokens/s)", r.report_line(), tps / 1e6);
         assert!(tps > 1e5, "{} too slow: {tps} tokens/s", spec.name());
+        corpora.push(obj(vec![
+            ("corpus", text(spec.name())),
+            ("median_s", num(r.median())),
+            ("tokens_per_s", num(tps)),
+        ]));
     }
 
     println!("\nprefetching loader (depth 4):");
@@ -32,6 +44,11 @@ fn main() {
         assert_eq!(b.tokens.len(), N);
     });
     println!("  {}", r.report_line());
+    let loader_tps = N as f64 / r.median();
+    let loader_json = obj(vec![
+        ("median_s", num(r.median())),
+        ("tokens_per_s", num(loader_tps)),
+    ]);
 
     println!("\nimage synthesis (32x32x3 x 32):");
     let mut img = ImageSource::new(10, 32, 3, 0);
@@ -39,13 +56,34 @@ fn main() {
     let mut labels = vec![0i32; 32];
     let r = bench("images", opts, || img.fill(32, &mut images, &mut labels));
     println!("  {}", r.report_line());
+    let images_json = obj(vec![
+        ("median_s", num(r.median())),
+        ("images_per_s", num(32.0 / r.median())),
+    ]);
 
     println!("\nBPE tokenizer:");
-    let text = "the quick brown fox jumps over the lazy dog ".repeat(64);
-    let tok = BpeTokenizer::train(&text, 320);
+    let txt = "the quick brown fox jumps over the lazy dog ".repeat(64);
+    let tok = BpeTokenizer::train(&txt, 320);
     let r = bench("bpe.encode", opts, || {
-        let _ = tok.encode(&text);
+        let _ = tok.encode(&txt);
     });
-    let bps = text.len() as f64 / r.median();
+    let bps = txt.len() as f64 / r.median();
     println!("  {}  ({:.2} MB/s)", r.report_line(), bps / 1e6);
+    let bpe_json = obj(vec![
+        ("median_s", num(r.median())),
+        ("bytes_per_s", num(bps)),
+    ]);
+
+    let doc = envelope(
+        "data_pipeline",
+        vec![
+            ("corpora", Json::Arr(corpora)),
+            ("loader", loader_json),
+            ("images", images_json),
+            ("bpe", bpe_json),
+        ],
+    );
+    report::write(Path::new("BENCH_data_pipeline.json"), &doc)?;
+    println!("\nwrote BENCH_data_pipeline.json");
+    Ok(())
 }

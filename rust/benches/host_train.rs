@@ -17,12 +17,14 @@ use rmnp::config::DataSpec;
 use rmnp::data::corpus::token_source;
 use rmnp::data::images::ImageSource;
 use rmnp::runtime::{Batch, BatchShape, NativeBackend, TrainBackend};
+use rmnp::tensor::Precision;
 use rmnp::util::Json;
 
 struct Case {
     model: &'static str,
     arch: &'static str,
     optimizer: &'static str,
+    precision: Precision,
     params: usize,
     elems: usize,
     step_median: f64,
@@ -73,10 +75,11 @@ fn run_case(
     model: &'static str,
     data: DataSpec,
     optimizer: &'static str,
+    precision: Precision,
     steps_per_iter: usize,
     repeats: usize,
 ) -> anyhow::Result<Case> {
-    let mut backend = NativeBackend::new(model, optimizer, 42, 0)?;
+    let mut backend = NativeBackend::new_with_precision(model, optimizer, 42, 0, precision)?;
     let arch = backend.arch();
     let mut feed = Feed::new(&backend, data);
     let params = backend.n_params();
@@ -85,7 +88,7 @@ fn run_case(
     // warm the workspace and the plan pool before timing
     feed.step(&mut backend, 1e-3);
     let r = bench_n(
-        &format!("{model}_{optimizer}_step"),
+        &format!("{model}_{optimizer}_{}_step", precision.name()),
         steps_per_iter,
         repeats,
         || {
@@ -102,6 +105,7 @@ fn run_case(
         model,
         arch,
         optimizer,
+        precision,
         params,
         elems,
         step_median: r.median(),
@@ -123,16 +127,46 @@ fn main() -> anyhow::Result<()> {
     let mut cases = Vec::new();
     println!("gpt2_tiny (attention) full native train step:");
     for optimizer in ["rmnp", "muon", "adamw"] {
-        cases.push(run_case("gpt2_tiny", DataSpec::Markov, optimizer, 5, repeats)?);
+        cases.push(run_case(
+            "gpt2_tiny",
+            DataSpec::Markov,
+            optimizer,
+            Precision::F32,
+            5,
+            repeats,
+        )?);
     }
+    println!("gpt2_tiny (attention) full native train step (rmnp, bf16 storage):");
+    cases.push(run_case(
+        "gpt2_tiny",
+        DataSpec::Markov,
+        "rmnp",
+        Precision::Bf16,
+        5,
+        repeats,
+    )?);
     println!("gpt2_medium (attention, 3 blocks) full native train step (rmnp):");
-    cases.push(run_case("gpt2_medium", DataSpec::Markov, "rmnp", 3, repeats)?);
+    cases.push(run_case(
+        "gpt2_medium",
+        DataSpec::Markov,
+        "rmnp",
+        Precision::F32,
+        3,
+        repeats,
+    )?);
     println!("llama_s60 (gated_mlp) full native train step (rmnp):");
-    cases.push(run_case("llama_s60", DataSpec::Zipf, "rmnp", 5, repeats)?);
+    cases.push(run_case("llama_s60", DataSpec::Zipf, "rmnp", Precision::F32, 5, repeats)?);
     println!("ssm_base (ssm scan) full native train step (rmnp):");
-    cases.push(run_case("ssm_base", DataSpec::Ngram, "rmnp", 5, repeats)?);
+    cases.push(run_case("ssm_base", DataSpec::Ngram, "rmnp", Precision::F32, 5, repeats)?);
     println!("vision_base (conv stem) full native train step (rmnp):");
-    cases.push(run_case("vision_base", DataSpec::Images, "rmnp", 5, repeats)?);
+    cases.push(run_case(
+        "vision_base",
+        DataSpec::Images,
+        "rmnp",
+        Precision::F32,
+        5,
+        repeats,
+    )?);
 
     let entries: Vec<Json> = cases
         .iter()
@@ -141,6 +175,7 @@ fn main() -> anyhow::Result<()> {
                 ("model", text(c.model)),
                 ("arch", text(c.arch)),
                 ("optimizer", text(c.optimizer)),
+                ("precision", text(c.precision.name())),
                 ("params", int(c.params)),
                 ("elems", int(c.elems)),
                 ("step_median_s", num(c.step_median)),

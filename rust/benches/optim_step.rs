@@ -12,7 +12,7 @@ use rmnp::bench::{bench_n, fmt_secs};
 use rmnp::optim::{
     newton_schulz5_naive, rms_scale, AdamWState, MuonState, RmnpState, MATRIX_BETA,
 };
-use rmnp::tensor::Matrix;
+use rmnp::tensor::{Bf16Matrix, Matrix, Precision};
 use rmnp::util::{Json, Rng};
 
 struct Case {
@@ -21,6 +21,22 @@ struct Case {
     cols: usize,
     fused: f64,
     seed: f64,
+}
+
+/// One f32-vs-bf16 storage comparison of the fused RMNP step.
+///
+/// `*_state_bytes_per_elem` is the *modeled* per-element traffic to the
+/// persistent state (parameter + momentum, read and written once each):
+/// 4 f32 accesses in f32 mode, the same 4 as bf16 in bf16 mode. The
+/// gradient read (4 B/elem) is identical in both modes and excluded —
+/// the ratio isolates what the storage format changes.
+struct PrecCase {
+    rows: usize,
+    cols: usize,
+    f32_median: f64,
+    bf16_median: f64,
+    f32_state_bytes_per_elem: usize,
+    bf16_state_bytes_per_elem: usize,
 }
 
 fn main() -> anyhow::Result<()> {
@@ -87,6 +103,47 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
+    // f32 vs bf16 storage on the memory-bound rownorm/axpby path. The
+    // big shape is the gate shape (d >= 1024, where the working set
+    // outruns cache and bandwidth dominates); BENCH_MAX_D caps it for
+    // quick local runs — bench_check.sh skips the speed gate when the
+    // big shape did not run.
+    let max_d: usize = std::env::var("BENCH_MAX_D")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(usize::MAX);
+    let mut prec_cases: Vec<PrecCase> = Vec::new();
+    println!("\nfused RMNP step, f32 vs bf16 storage:");
+    for (m, n) in [(256usize, 256usize), (1024, 1024)] {
+        if m.max(n) > max_d {
+            println!("  skipping {m}x{n} (BENCH_MAX_D={max_d})");
+            continue;
+        }
+        let g = Matrix::randn(m, n, 0.02, &mut rng);
+        let w0 = Matrix::randn(m, n, 0.02, &mut rng);
+        let mut w = w0.clone();
+        let mut st = RmnpState::new(m, n);
+        let f32_r = bench_n(&format!("rmnp_f32_{m}x{n}"), 20, repeats, || {
+            st.step(&mut w, &g, 1e-3);
+        });
+        let mut wb = Bf16Matrix::from_matrix(&w0);
+        let mut stb = RmnpState::new_with(m, n, Precision::Bf16);
+        let bf16_r = bench_n(&format!("rmnp_bf16_{m}x{n}"), 20, repeats, || {
+            stb.step_bf16(&mut wb, &g, 1e-3);
+        });
+        println!("  {}", f32_r.report_line());
+        println!("  {}", bf16_r.report_line());
+        println!("  -> {:.2}x", f32_r.median() / bf16_r.median());
+        prec_cases.push(PrecCase {
+            rows: m,
+            cols: n,
+            f32_median: f32_r.median(),
+            bf16_median: bf16_r.median(),
+            f32_state_bytes_per_elem: 4 * 4,
+            bf16_state_bytes_per_elem: 4 * 2,
+        });
+    }
+
     println!("\nAdamW flat-buffer step:");
     let len = 768 * 768;
     let mut st = AdamWState::new(len);
@@ -124,10 +181,30 @@ fn main() -> anyhow::Result<()> {
             ])
         })
         .collect();
+    let prec_entries: Vec<Json> = prec_cases
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("rows", report::int(c.rows)),
+                ("cols", report::int(c.cols)),
+                ("f32_median_s", num(c.f32_median)),
+                ("bf16_median_s", num(c.bf16_median)),
+                ("speedup", num(c.f32_median / c.bf16_median.max(1e-12))),
+                ("f32_state_bytes_per_elem", report::int(c.f32_state_bytes_per_elem)),
+                ("bf16_state_bytes_per_elem", report::int(c.bf16_state_bytes_per_elem)),
+                (
+                    "bytes_ratio",
+                    num(c.bf16_state_bytes_per_elem as f64
+                        / c.f32_state_bytes_per_elem as f64),
+                ),
+            ])
+        })
+        .collect();
     let doc = envelope(
         "train_step_native",
         vec![
             ("steps", Json::Arr(entries)),
+            ("precision", Json::Arr(prec_entries)),
             ("adamw", bench_json(&adamw)),
         ],
     );

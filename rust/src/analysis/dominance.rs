@@ -16,12 +16,15 @@ use crate::util::moving_average;
 /// One aggregated dominance series over training.
 #[derive(Clone, Debug)]
 pub struct DominanceSeries {
+    /// Logged step index per row.
     pub steps: Vec<f64>,
-    /// global r̄_avg / r̄_min / r̄_max per logged step
+    /// Global r̄_avg per logged step.
     pub r_avg: Vec<f64>,
+    /// Global r̄_min per logged step.
     pub r_min: Vec<f64>,
+    /// Global r̄_max per logged step.
     pub r_max: Vec<f64>,
-    /// number of matrix parameters aggregated
+    /// Number of matrix parameters aggregated.
     pub n_params: usize,
 }
 

@@ -1,10 +1,6 @@
 //! Analysis passes over run outputs: dominance-ratio aggregation
 //! (paper Section 3.2 / Appendix B) and paper-style report formatting.
 
-// The crate-level `missing_docs` warning is enforced for tensor/ and
-// optim/; this module's full docs pass is still pending (ROADMAP.md).
-#![allow(missing_docs)]
-
 pub mod dominance;
 pub mod report;
 

@@ -7,10 +7,6 @@
 //! call on CPU) automatically degrade to fewer iterations instead of
 //! blowing the time budget.
 
-// The crate-level `missing_docs` warning is enforced for tensor/ and
-// optim/; this module's full docs pass is still pending (ROADMAP.md).
-#![allow(missing_docs)]
-
 pub mod report;
 
 use std::time::Instant;
@@ -20,21 +16,28 @@ use crate::util::{mean, percentile};
 /// One benchmark's summary statistics, all in seconds per iteration.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark label (also the JSON report key).
     pub name: String,
+    /// Iterations averaged into each sample.
     pub iters_per_sample: usize,
+    /// Per-sample seconds-per-iteration measurements.
     pub samples: Vec<f64>,
 }
 
 impl BenchResult {
+    /// Mean seconds per iteration over all samples.
     pub fn mean(&self) -> f64 {
         mean(&self.samples)
     }
+    /// Median seconds per iteration (the headline statistic).
     pub fn median(&self) -> f64 {
         percentile(&self.samples, 50.0)
     }
+    /// 10th-percentile sample (fast tail).
     pub fn p10(&self) -> f64 {
         percentile(&self.samples, 10.0)
     }
+    /// 90th-percentile sample (slow tail).
     pub fn p90(&self) -> f64 {
         percentile(&self.samples, 90.0)
     }

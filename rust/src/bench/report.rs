@@ -23,13 +23,15 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(map)
 }
 
-/// Shorthand constructors.
+/// Shorthand [`Json::Num`] constructor.
 pub fn num(x: f64) -> Json {
     Json::Num(x)
 }
+/// Shorthand [`Json::Num`] constructor for counts.
 pub fn int(x: usize) -> Json {
     Json::Num(x as f64)
 }
+/// Shorthand [`Json::Str`] constructor.
 pub fn text(s: &str) -> Json {
     Json::Str(s.to_string())
 }

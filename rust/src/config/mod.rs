@@ -132,6 +132,18 @@ pub struct RunConfig {
     /// `StepPlan` worker count (`perf.plan_threads`); 0 = the kernel
     /// thread count.
     pub plan_threads: usize,
+    /// Parameter/optimizer-state storage precision (`perf.precision`):
+    /// "f32" (default) or "bf16" (half the parameter + momentum bytes;
+    /// every accumulation stays f32 — see `docs/ARCHITECTURE.md`
+    /// §Precision modes). Parsed via
+    /// [`crate::tensor::Precision::parse`].
+    pub precision: String,
+    /// Minimum row count before matmul pre-packs its A panels
+    /// (`perf.pack_a_min_rows`); 0 = default (the `RMNP_PACK_A_MIN_ROWS`
+    /// env var, else 64). Packed and unpacked paths are bit-identical —
+    /// this is a pure tuning knob. Applied via
+    /// [`crate::tensor::kernels::set_pack_a_min_rows`].
+    pub pack_a_min_rows: usize,
     /// Which backend executes the run (`runtime.backend`): the host-native
     /// path (default, offline) or the PJRT artifact path.
     pub backend: BackendKind,
@@ -213,6 +225,8 @@ impl Default for RunConfig {
             threads: 0,
             simd: "auto".into(),
             plan_threads: 0,
+            precision: "f32".into(),
+            pack_a_min_rows: 0,
             backend: BackendKind::Native,
             resume: false,
             keep_checkpoints: 0,
@@ -268,6 +282,17 @@ impl RunConfig {
         self.threads = d.int_or("perf.threads", self.threads as i64).max(0) as usize;
         self.plan_threads =
             d.int_or("perf.plan_threads", self.plan_threads as i64).max(0) as usize;
+        self.pack_a_min_rows = d
+            .int_or("perf.pack_a_min_rows", self.pack_a_min_rows as i64)
+            .max(0) as usize;
+        if let Some(v) = d.get("perf.precision") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("perf.precision must be a string"))?;
+            crate::tensor::Precision::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown precision `{s}` (f32|bf16)"))?;
+            self.precision = s.to_string();
+        }
         self.resume = d.bool_or("train.resume", self.resume);
         self.keep_checkpoints = d
             .int_or("train.keep_checkpoints", self.keep_checkpoints as i64)
@@ -375,12 +400,23 @@ impl RunConfig {
             crate::tensor::kernels::set_num_threads(self.threads);
         }
         crate::tensor::simd::set_mode(crate::tensor::simd::SimdMode::parse(&self.simd)?);
+        crate::tensor::kernels::set_pack_a_min_rows(self.pack_a_min_rows);
         crate::info!(
-            "kernels: active simd={} threads={}",
+            "kernels: active simd={} threads={} precision={} pack_a_min_rows={}",
             crate::tensor::simd::label(),
-            crate::tensor::kernels::num_threads()
+            crate::tensor::kernels::num_threads(),
+            self.precision,
+            crate::tensor::kernels::pack_a_min_rows()
         );
         Ok(())
+    }
+
+    /// The parsed [`perf.precision`](RunConfig::precision) storage mode.
+    /// `apply_document` already validated the string, so this only fails
+    /// on a hand-mutated config.
+    pub fn precision_mode(&self) -> anyhow::Result<crate::tensor::Precision> {
+        crate::tensor::Precision::parse(&self.precision)
+            .ok_or_else(|| anyhow::anyhow!("unknown precision `{}` (f32|bf16)", self.precision))
     }
 }
 
@@ -433,8 +469,30 @@ corpus = "zipf"
         assert_eq!(cfg.simd, "scalar");
         cfg.apply_override("perf.simd=neon").unwrap();
         assert_eq!(cfg.simd, "neon", "the neon rung is a legal override");
+        cfg.apply_override("perf.simd=avx512").unwrap();
+        assert_eq!(cfg.simd, "avx512", "the avx512 rung is a legal override");
         assert!(cfg.apply_override("perf.simd=sse9").is_err());
-        assert_eq!(cfg.simd, "neon", "bad simd value must not stick");
+        assert_eq!(cfg.simd, "avx512", "bad simd value must not stick");
+        assert_eq!(cfg.precision, "f32", "full precision is the default");
+        assert_eq!(
+            cfg.precision_mode().unwrap(),
+            crate::tensor::Precision::F32
+        );
+        cfg.apply_override("perf.precision=bf16").unwrap();
+        assert_eq!(cfg.precision, "bf16");
+        assert_eq!(
+            cfg.precision_mode().unwrap(),
+            crate::tensor::Precision::Bf16
+        );
+        assert!(cfg.apply_override("perf.precision=fp8").is_err());
+        assert_eq!(cfg.precision, "bf16", "bad precision value must not stick");
+        cfg.apply_override("perf.precision=f32").unwrap();
+        assert_eq!(cfg.precision, "f32");
+        assert_eq!(cfg.pack_a_min_rows, 0, "0 = built-in/env pack threshold");
+        cfg.apply_override("perf.pack_a_min_rows=128").unwrap();
+        assert_eq!(cfg.pack_a_min_rows, 128);
+        cfg.apply_override("perf.pack_a_min_rows=-5").unwrap();
+        assert_eq!(cfg.pack_a_min_rows, 0, "negative clamps instead of wrapping");
         assert_eq!(cfg.backend, BackendKind::Native, "native is the default");
         cfg.apply_override("runtime.backend=pjrt").unwrap();
         assert_eq!(cfg.backend, BackendKind::Pjrt);

@@ -133,11 +133,12 @@ pub fn run_auto(cfg: &RunConfig) -> anyhow::Result<RunResult> {
     cfg.apply_perf()?;
     match cfg.backend {
         BackendKind::Native => {
-            let mut backend = NativeBackend::new(
+            let mut backend = NativeBackend::new_with_precision(
                 &cfg.model,
                 &cfg.optimizer,
                 cfg.seed,
                 cfg.plan_threads,
+                cfg.precision_mode()?,
             )?;
             run(&mut backend, cfg)
         }

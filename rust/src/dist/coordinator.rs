@@ -394,6 +394,7 @@ fn gather_workers(
                     optimizer: cfg.optimizer.clone(),
                     data: cfg.data.name().to_string(),
                     compress: mode.name().to_string(),
+                    precision: cfg.precision.clone(),
                     state: resume_state.clone(),
                 };
                 if let Err(e) = net.send(conn, &ack) {

@@ -110,6 +110,12 @@ pub enum Msg {
         /// [`crate::dist::compress::Compression`] name. Announced once at
         /// registration so both ends agree without per-frame negotiation.
         compress: String,
+        /// Parameter/momentum storage precision every rank must use, a
+        /// [`crate::tensor::Precision`] name (`f32`/`bf16`). Announced so
+        /// replicas stay bit-identical to the coordinator's backend, and
+        /// so bf16-stored params compose with `compress = "bf16"` without
+        /// a second rounding on the wire.
+        precision: String,
         /// On resume: the checkpoint state every worker imports so all
         /// ranks start bit-identical. `None` on a fresh run.
         state: Option<TrainState>,
@@ -285,6 +291,7 @@ impl Msg {
                 optimizer,
                 data,
                 compress,
+                precision,
                 state,
             } => {
                 e.u8(2);
@@ -298,6 +305,7 @@ impl Msg {
                 e.str(optimizer);
                 e.str(data);
                 e.str(compress);
+                e.str(precision);
                 match state {
                     None => e.u8(0),
                     Some(st) => {
@@ -396,6 +404,7 @@ impl Msg {
                 let optimizer = d.str()?;
                 let data = d.str()?;
                 let compress = d.str()?;
+                let precision = d.str()?;
                 let state = match d.u8()? {
                     0 => None,
                     1 => Some(d.state()?),
@@ -412,6 +421,7 @@ impl Msg {
                     optimizer,
                     data,
                     compress,
+                    precision,
                     state,
                 }
             }
@@ -694,6 +704,7 @@ mod tests {
                 optimizer: "rmnp".into(),
                 data: "synthetic".into(),
                 compress: "bf16".into(),
+                precision: "bf16".into(),
                 state: Some(sample_state()),
             },
             Msg::RegisterAck {
@@ -707,6 +718,7 @@ mod tests {
                 optimizer: "o".into(),
                 data: "d".into(),
                 compress: "none".into(),
+                precision: "f32".into(),
                 state: None,
             },
             Msg::RegisterNack { reason: "training already in progress".into() },

@@ -146,10 +146,11 @@ pub fn run(opts: &WorkerOpts) -> anyhow::Result<WorkerResult> {
                 optimizer,
                 data,
                 compress,
+                precision,
                 state,
             }) => break (
                 rank, nonce, nshards, start_step, steps, seed, model, optimizer, data,
-                compress, state,
+                compress, precision, state,
             ),
             Ok(Msg::RegisterNack { reason }) => {
                 anyhow::bail!("coordinator refused registration: {reason}")
@@ -164,8 +165,20 @@ pub fn run(opts: &WorkerOpts) -> anyhow::Result<WorkerResult> {
             Err(e) => anyhow::bail!("waiting for registration ack: {e}"),
         }
     };
-    let (rank, nonce, nshards, start_step, steps, seed, model, optimizer, data, compress, state) =
-        ack;
+    let (
+        rank,
+        nonce,
+        nshards,
+        start_step,
+        steps,
+        seed,
+        model,
+        optimizer,
+        data,
+        compress,
+        precision,
+        state,
+    ) = ack;
     if let Some(want) = opts.expect_nonce {
         anyhow::ensure!(
             nonce == want,
@@ -175,6 +188,9 @@ pub fn run(opts: &WorkerOpts) -> anyhow::Result<WorkerResult> {
         );
     }
     let mode = Compression::parse(&compress)?;
+    let prec = crate::tensor::Precision::parse(&precision).ok_or_else(|| {
+        anyhow::anyhow!("coordinator announced unknown precision `{precision}` (f32|bf16)")
+    })?;
     let data = DataSpec::parse(&data)?;
     anyhow::ensure!(
         data != DataSpec::Images,
@@ -183,12 +199,14 @@ pub fn run(opts: &WorkerOpts) -> anyhow::Result<WorkerResult> {
     info!(
         "worker `{}` registered: rank {rank}, {nshards} shards, steps \
          {start_step}..{steps}, model {model}, optimizer {optimizer}, \
-         compress {}",
+         compress {}, precision {}",
         opts.worker_id,
-        mode.name()
+        mode.name(),
+        prec.name()
     );
 
-    let mut backend = NativeBackend::new(&model, &optimizer, seed, opts.plan_threads)?;
+    let mut backend =
+        NativeBackend::new_with_precision(&model, &optimizer, seed, opts.plan_threads, prec)?;
     if let Some(st) = &state {
         backend.import_state(st)?;
     }

@@ -1,10 +1,18 @@
 //! AdamW reference (decoupled weight decay, bias-corrected).
 
+use crate::tensor::Precision;
+
 /// Per-tensor AdamW state over flat f32 buffers (works for any shape).
 #[derive(Clone, Debug)]
 pub struct AdamWState {
-    /// First-moment EMA.
+    /// First-moment EMA. Empty in bf16 storage mode, where
+    /// [`AdamWState::m_bits`] holds it instead.
     pub m: Vec<f32>,
+    /// bf16-stored first moment for the `perf.precision = bf16` mode
+    /// (`None` in f32 mode). The second moment `v` stays f32 in both
+    /// modes: its values live near zero where bf16's absolute resolution
+    /// is poor, and `√v` sits in the update denominator.
+    pub m_bits: Option<Vec<u16>>,
     /// Second-moment EMA.
     pub v: Vec<f32>,
     /// Step counter (drives the bias corrections).
@@ -25,6 +33,7 @@ impl AdamWState {
     pub fn new(len: usize) -> Self {
         AdamWState {
             m: vec![0.0; len],
+            m_bits: None,
             v: vec![0.0; len],
             t: 0,
             beta1: 0.9,
@@ -32,6 +41,17 @@ impl AdamWState {
             eps: 1e-8,
             weight_decay: 0.1,
         }
+    }
+
+    /// Zeroed state in the given storage precision: bf16 mode keeps the
+    /// first moment as bf16 bits and leaves the f32 vector empty.
+    pub fn new_with(len: usize, precision: Precision) -> Self {
+        let mut st = Self::new(len);
+        if precision == Precision::Bf16 {
+            st.m = Vec::new();
+            st.m_bits = Some(vec![0u16; len]);
+        }
+        st
     }
 
     /// One fused AdamW step over `w` given `grad`. Loop invariants (the
@@ -57,6 +77,42 @@ impl AdamWState {
             let mhat = mi / bc1;
             let vhat = vi / bc2;
             w[i] -= lr * (mhat / (vhat.sqrt() + eps) + wd * w[i]);
+        }
+    }
+
+    /// The bf16 storage twin of [`AdamWState::step`]: weights and first
+    /// moment live as bf16 bits, the second moment stays f32. The whole
+    /// per-element body runs in f32 — the *unrounded* first moment feeds
+    /// the bias-corrected update, and each stored value rounds once
+    /// (RNE) at the end — so the only precision loss versus the f32
+    /// path is the storage rounding itself. Panics if the state was not
+    /// constructed with [`Precision::Bf16`].
+    pub fn step_bf16(&mut self, w: &mut [u16], grad: &[f32], lr: f32) {
+        use crate::tensor::simd::{bf16_from_f32, bf16_to_f32};
+        let mb = self
+            .m_bits
+            .as_mut()
+            .expect("adamw state was not constructed in bf16 mode");
+        assert_eq!(w.len(), grad.len());
+        assert_eq!(w.len(), mb.len());
+        assert_eq!(w.len(), self.v.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        let (b1, ob1) = (self.beta1, 1.0 - self.beta1);
+        let (b2, ob2) = (self.beta2, 1.0 - self.beta2);
+        let (eps, wd) = (self.eps, self.weight_decay);
+        let v = &mut self.v[..w.len()];
+        for i in 0..w.len() {
+            let g = grad[i];
+            let mi = b1 * bf16_to_f32(mb[i]) + ob1 * g;
+            let vi = b2 * v[i] + ob2 * g * g;
+            mb[i] = bf16_from_f32(mi);
+            v[i] = vi;
+            let mhat = mi / bc1;
+            let vhat = vi / bc2;
+            let wv = bf16_to_f32(w[i]);
+            w[i] = bf16_from_f32(wv - lr * (mhat / (vhat.sqrt() + eps) + wd * wv));
         }
     }
 }
@@ -89,6 +145,28 @@ mod tests {
             assert!(a.abs() < b.abs(), "{a} vs {b}");
             assert_eq!(a.signum(), b.signum());
         }
+    }
+
+    #[test]
+    fn bf16_step_tracks_f32_step() {
+        use crate::tensor::simd::{bf16_from_f32, bf16_to_f32};
+        let n = 37;
+        let mut st_f = AdamWState::new(n);
+        let mut st_b = AdamWState::new_with(n, Precision::Bf16);
+        let mut wf: Vec<f32> = (0..n)
+            .map(|i| bf16_to_f32(bf16_from_f32((i as f32 * 0.37).sin())))
+            .collect();
+        let mut wb: Vec<u16> = wf.iter().map(|&v| bf16_from_f32(v)).collect();
+        for s in 0..5 {
+            let grad: Vec<f32> = (0..n).map(|i| ((i + s * 7) as f32 * 0.11).cos()).collect();
+            st_f.step(&mut wf, &grad, 0.01);
+            st_b.step_bf16(&mut wb, &grad, 0.01);
+        }
+        for (b, f) in wb.iter().zip(&wf) {
+            let wide = bf16_to_f32(*b);
+            assert!((wide - f).abs() < 0.02, "{wide} vs {f}");
+        }
+        assert_eq!(st_b.t, st_f.t);
     }
 
     #[test]

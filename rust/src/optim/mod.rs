@@ -31,6 +31,12 @@
 //! compose the same fused primitives — `axpby_inplace`, `row_sumsq`,
 //! [`newton_schulz5_into`] — and stay allocation-free after warmup.
 //!
+//! Every state also carries a **bf16 storage twin** (`step_bf16`):
+//! with `perf.precision = bf16` the parameter and the large state
+//! buffers (momentum / AdamW's first moment) live as bf16 bits while
+//! all accumulation stays f32 (or f64 where the f32 path already uses
+//! it) — see `docs/ARCHITECTURE.md` §Precision modes.
+//!
 //! The states are unified behind the
 //! [`registry::MatrixOptimizer`] trait (fused `step`, the `rms_scale`
 //! hook, named state export/import for checkpointing), and
@@ -55,7 +61,9 @@ pub use muon::{newton_schulz5, newton_schulz5_into, newton_schulz5_naive, MuonSt
 pub use muown::MuownState;
 pub use nora::NoraState;
 pub use normuon::NorMuonState;
-pub use plan::{OptKind, OptState, ParamTask, StepPlan};
+pub use plan::{
+    tasks_from_shapes, tasks_from_shapes_prec, OptKind, OptState, ParamTask, StepPlan,
+};
 pub use registry::{native_kind, spec, MatrixOptimizer, NamedState, OptSpec, REGISTRY};
 pub use rmnp::RmnpState;
 pub use turbo_muon::TurboMuonState;

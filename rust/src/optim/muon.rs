@@ -12,7 +12,7 @@
 //! saved.
 
 use crate::optim::{rms_scale, MATRIX_BETA, MUON_NS_STEPS, NS_EPS, WEIGHT_DECAY};
-use crate::tensor::{frobenius, Matrix, Workspace};
+use crate::tensor::{frobenius, Bf16Matrix, Matrix, Precision, Workspace};
 
 /// Muon's quintic NS coefficients (Jordan et al., 2024) — must match
 /// `python/compile/kernels/ref.py::NS_COEFFS`.
@@ -108,8 +108,13 @@ pub fn newton_schulz5_naive(g: &Matrix, steps: usize) -> Matrix {
 /// Momentum state for one matrix parameter.
 #[derive(Clone, Debug)]
 pub struct MuonState {
-    /// The momentum EMA `V` (same shape as the parameter).
+    /// The momentum EMA `V` (same shape as the parameter). Empty (0×0)
+    /// in bf16 storage mode, where [`MuonState::momentum_bits`] holds
+    /// the state instead.
     pub momentum: Matrix,
+    /// bf16-stored momentum for the `perf.precision = bf16` mode
+    /// (`None` in f32 mode).
+    pub momentum_bits: Option<Bf16Matrix>,
     /// EMA coefficient β (paper Appendix B).
     pub beta: f32,
     /// Decoupled weight-decay coefficient λ.
@@ -126,11 +131,23 @@ impl MuonState {
     pub fn new(rows: usize, cols: usize) -> Self {
         MuonState {
             momentum: Matrix::zeros(rows, cols),
+            momentum_bits: None,
             beta: MATRIX_BETA,
             weight_decay: WEIGHT_DECAY,
             ns_steps: MUON_NS_STEPS,
             workspace: Workspace::new(),
         }
+    }
+
+    /// Zero-momentum state in the given storage precision: bf16 mode
+    /// keeps the momentum as bf16 bits and leaves the f32 matrix empty.
+    pub fn new_with(rows: usize, cols: usize, precision: Precision) -> Self {
+        let mut st = Self::new(rows, cols);
+        if precision == Precision::Bf16 {
+            st.momentum = Matrix::zeros(0, 0);
+            st.momentum_bits = Some(Bf16Matrix::zeros(rows, cols));
+        }
+        st
     }
 
     /// One step: V ← βV + (1−β)G;  W ← W − η·max(1,√(m/n))·(NS5(V) + λW).
@@ -148,6 +165,42 @@ impl MuonState {
             *wv -= scale * (dv + wd * *wv);
         }
         self.workspace.give_matrix(d);
+    }
+
+    /// The bf16 storage twin of [`MuonState::step`]: weights and
+    /// momentum live as bf16 bits; the momentum EMA sweeps the bits in
+    /// place, then the bits widen (exactly) into a workspace scratch
+    /// matrix so NS5 runs unchanged in f32, and the update applies in
+    /// one fused bf16 sweep. The f32 scratch is workspace-recycled, so
+    /// the step stays allocation-free after warmup. Panics if the state
+    /// was not constructed with [`Precision::Bf16`].
+    pub fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32) {
+        let (rows, cols) = (w.rows(), w.cols());
+        let bits = self
+            .momentum_bits
+            .as_mut()
+            .expect("muon state was not constructed in bf16 mode");
+        assert_eq!((rows, cols), (bits.rows(), bits.cols()), "muon momentum shape");
+        assert_eq!((rows, cols), (grad.rows(), grad.cols()), "muon grad shape");
+        crate::tensor::kernels::bf16_axpby_inplace(
+            bits.bits_mut(),
+            self.beta,
+            grad.data(),
+            1.0 - self.beta,
+        );
+        let mut mwide = self.workspace.take_matrix(rows, cols);
+        bits.widen_into(&mut mwide);
+        let mut d = self.workspace.take_matrix(rows, cols);
+        newton_schulz5_into(&mwide, self.ns_steps, &mut self.workspace, &mut d);
+        let scale = lr * rms_scale(rows, cols);
+        crate::tensor::kernels::bf16_axpby_inplace(
+            w.bits_mut(),
+            1.0 - scale * self.weight_decay,
+            d.data(),
+            -scale,
+        );
+        self.workspace.give_matrix(d);
+        self.workspace.give_matrix(mwide);
     }
 }
 

@@ -14,7 +14,7 @@
 use crate::optim::muon::newton_schulz5_into;
 use crate::optim::{rms_scale, MATRIX_BETA, MUON_NS_STEPS, ROW_EPS, WEIGHT_DECAY};
 use crate::tensor::kernels::{self, row_sumsq};
-use crate::tensor::{Matrix, Workspace};
+use crate::tensor::{Bf16Matrix, Matrix, Precision, Workspace};
 
 /// Momentum state for one matrix parameter.
 ///
@@ -33,8 +33,13 @@ use crate::tensor::{Matrix, Workspace};
 /// ```
 #[derive(Clone, Debug)]
 pub struct MuownState {
-    /// The momentum EMA `V` (same shape as the parameter).
+    /// The momentum EMA `V` (same shape as the parameter). Empty (0×0)
+    /// in bf16 storage mode, where [`MuownState::momentum_bits`] holds
+    /// the state instead.
     pub momentum: Matrix,
+    /// bf16-stored momentum for the `perf.precision = bf16` mode
+    /// (`None` in f32 mode).
+    pub momentum_bits: Option<Bf16Matrix>,
     /// Momentum EMA coefficient β (paper Appendix B).
     pub beta: f32,
     /// Decoupled weight-decay coefficient λ.
@@ -51,11 +56,23 @@ impl MuownState {
     pub fn new(rows: usize, cols: usize) -> Self {
         MuownState {
             momentum: Matrix::zeros(rows, cols),
+            momentum_bits: None,
             beta: MATRIX_BETA,
             weight_decay: WEIGHT_DECAY,
             ns_steps: MUON_NS_STEPS,
             workspace: Workspace::new(),
         }
+    }
+
+    /// Zero-momentum state in the given storage precision: bf16 mode
+    /// keeps the momentum as bf16 bits and leaves the f32 matrix empty.
+    pub fn new_with(rows: usize, cols: usize, precision: Precision) -> Self {
+        let mut st = Self::new(rows, cols);
+        if precision == Precision::Bf16 {
+            st.momentum = Matrix::zeros(0, 0);
+            st.momentum_bits = Some(Bf16Matrix::zeros(rows, cols));
+        }
+        st
     }
 
     /// One step: V ← βV + (1−β)G;  O = NS5(V);
@@ -80,6 +97,37 @@ impl MuownState {
             kernels::axpby_inplace(&mut wdata[o..o + cols], wfac, drow, -(scale * inv));
         }
         self.workspace.give_matrix(d);
+    }
+
+    /// The bf16 storage twin of [`MuownState::step`]: the momentum EMA
+    /// sweeps the bits in place, the bits widen into a workspace
+    /// scratch, and NS5 plus the per-row norm control run unchanged in
+    /// f32 before the fused per-row bf16 apply sweeps. Panics if the
+    /// state was not constructed with [`Precision::Bf16`].
+    pub fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32) {
+        let (rows, cols) = (w.rows(), w.cols());
+        let bits = self
+            .momentum_bits
+            .as_mut()
+            .expect("muown state was not constructed in bf16 mode");
+        assert_eq!((rows, cols), (bits.rows(), bits.cols()), "muown momentum shape");
+        assert_eq!((rows, cols), (grad.rows(), grad.cols()), "muown grad shape");
+        kernels::bf16_axpby_inplace(bits.bits_mut(), self.beta, grad.data(), 1.0 - self.beta);
+        let mut mwide = self.workspace.take_matrix(rows, cols);
+        bits.widen_into(&mut mwide);
+        let mut d = self.workspace.take_matrix(rows, cols);
+        newton_schulz5_into(&mwide, self.ns_steps, &mut self.workspace, &mut d);
+        let scale = lr * rms_scale(rows, cols);
+        let wfac = 1.0 - scale * self.weight_decay;
+        let ddata = d.data();
+        for i in 0..rows {
+            let o = i * cols;
+            let drow = &ddata[o..o + cols];
+            let inv = 1.0 / row_sumsq(drow).sqrt().max(ROW_EPS);
+            kernels::bf16_axpby_inplace(w.row_mut(i), wfac, drow, -(scale * inv));
+        }
+        self.workspace.give_matrix(d);
+        self.workspace.give_matrix(mwide);
     }
 }
 

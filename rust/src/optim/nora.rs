@@ -14,7 +14,7 @@
 
 use crate::optim::{rms_scale, MATRIX_BETA, ROW_EPS, WEIGHT_DECAY};
 use crate::tensor::kernels::{self, row_sumsq};
-use crate::tensor::Matrix;
+use crate::tensor::{Bf16Matrix, Matrix, Precision};
 
 /// Second-moment EMA coefficient for the smoothed row norms.
 pub const NORA_BETA2: f32 = 0.95;
@@ -37,9 +37,16 @@ pub const NORA_BETA2: f32 = 0.95;
 /// ```
 #[derive(Clone, Debug)]
 pub struct NoraState {
-    /// The momentum EMA `V` (same shape as the parameter).
+    /// The momentum EMA `V` (same shape as the parameter). Empty (0×0)
+    /// in bf16 storage mode, where [`NoraState::momentum_bits`] holds
+    /// the state instead.
     pub momentum: Matrix,
+    /// bf16-stored momentum for the `perf.precision = bf16` mode
+    /// (`None` in f32 mode).
+    pub momentum_bits: Option<Bf16Matrix>,
     /// Per-row second moment of the momentum row norm (length = rows).
+    /// Stays f32 in both modes — m elements of smoothed normalizer state
+    /// are not worth bf16's resolution loss in a denominator.
     pub v: Vec<f32>,
     /// Steps taken (drives the β₂ bias correction).
     pub t: u32,
@@ -57,12 +64,24 @@ impl NoraState {
     pub fn new(rows: usize, cols: usize) -> Self {
         NoraState {
             momentum: Matrix::zeros(rows, cols),
+            momentum_bits: None,
             v: vec![0.0; rows],
             t: 0,
             beta: MATRIX_BETA,
             beta2: NORA_BETA2,
             weight_decay: WEIGHT_DECAY,
         }
+    }
+
+    /// Zero state in the given storage precision: bf16 mode keeps the
+    /// momentum as bf16 bits and leaves the f32 matrix empty.
+    pub fn new_with(rows: usize, cols: usize, precision: Precision) -> Self {
+        let mut st = Self::new(rows, cols);
+        if precision == Precision::Bf16 {
+            st.momentum = Matrix::zeros(0, 0);
+            st.momentum_bits = Some(Bf16Matrix::zeros(rows, cols));
+        }
+        st
     }
 
     /// One step: V ← βV + (1−β)G;  v_i ← β₂v_i + (1−β₂)‖V_i‖²;
@@ -100,6 +119,37 @@ impl NoraState {
             self.v[i] = b2 * self.v[i] + ob2 * sq;
             let denom = (self.v[i] / bias).sqrt().max(ROW_EPS);
             kernels::axpby_inplace(&mut wdata[o..o + cols], wfac, vrow, -(scale / denom));
+        }
+    }
+
+    /// The bf16 storage twin of [`NoraState::step`]: weights and
+    /// momentum live as bf16 bits, the per-row second moment `v` and its
+    /// f64 bias correction stay exactly as in the f32 path. Panics if
+    /// the state was not constructed with [`Precision::Bf16`].
+    pub fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32) {
+        let (rows, cols) = (w.rows(), w.cols());
+        let bits = self
+            .momentum_bits
+            .as_mut()
+            .expect("nora state was not constructed in bf16 mode");
+        assert_eq!((rows, cols), (bits.rows(), bits.cols()), "nora momentum shape");
+        assert_eq!((rows, cols), (grad.rows(), grad.cols()), "nora grad shape");
+        self.t += 1;
+        let bias = (1.0 - (self.beta2 as f64).powi(self.t as i32)) as f32;
+        let scale = lr * rms_scale(rows, cols);
+        let wfac = 1.0 - scale * self.weight_decay;
+        let beta = self.beta;
+        let om = 1.0 - beta;
+        let b2 = self.beta2;
+        let ob2 = 1.0 - b2;
+        let gdata = grad.data();
+        for i in 0..rows {
+            let o = i * cols;
+            kernels::bf16_axpby_inplace(bits.row_mut(i), beta, &gdata[o..o + cols], om);
+            let sq = kernels::bf16_row_sumsq(bits.row(i));
+            self.v[i] = b2 * self.v[i] + ob2 * sq;
+            let denom = (self.v[i] / bias).sqrt().max(ROW_EPS);
+            kernels::bf16_axpby_from_bf16(w.row_mut(i), wfac, bits.row(i), -(scale / denom));
         }
     }
 }

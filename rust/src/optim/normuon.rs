@@ -15,7 +15,7 @@
 use crate::optim::muon::newton_schulz5_into;
 use crate::optim::{rms_scale, MATRIX_BETA, MUON_NS_STEPS, ROW_EPS, WEIGHT_DECAY};
 use crate::tensor::kernels::{self, row_sumsq};
-use crate::tensor::{Matrix, Workspace};
+use crate::tensor::{Bf16Matrix, Matrix, Precision, Workspace};
 
 /// Second-moment EMA coefficient for the per-row update moments.
 pub const NORMUON_BETA2: f32 = 0.95;
@@ -34,9 +34,16 @@ pub const NORMUON_BETA2: f32 = 0.95;
 /// ```
 #[derive(Clone, Debug)]
 pub struct NorMuonState {
-    /// The momentum EMA `V` (same shape as the parameter).
+    /// The momentum EMA `V` (same shape as the parameter). Empty (0×0)
+    /// in bf16 storage mode, where [`NorMuonState::momentum_bits`] holds
+    /// the state instead.
     pub momentum: Matrix,
+    /// bf16-stored momentum for the `perf.precision = bf16` mode
+    /// (`None` in f32 mode).
+    pub momentum_bits: Option<Bf16Matrix>,
     /// Per-row second moment of the orthogonalized update (length = rows).
+    /// Stays f32 in both modes — m elements of normalizer state are not
+    /// worth bf16's resolution loss in a denominator.
     pub v: Vec<f32>,
     /// Steps taken (drives the β₂ bias correction).
     pub t: u32,
@@ -58,6 +65,7 @@ impl NorMuonState {
     pub fn new(rows: usize, cols: usize) -> Self {
         NorMuonState {
             momentum: Matrix::zeros(rows, cols),
+            momentum_bits: None,
             v: vec![0.0; rows],
             t: 0,
             beta: MATRIX_BETA,
@@ -66,6 +74,17 @@ impl NorMuonState {
             ns_steps: MUON_NS_STEPS,
             workspace: Workspace::new(),
         }
+    }
+
+    /// Zero state in the given storage precision: bf16 mode keeps the
+    /// momentum as bf16 bits and leaves the f32 matrix empty.
+    pub fn new_with(rows: usize, cols: usize, precision: Precision) -> Self {
+        let mut st = Self::new(rows, cols);
+        if precision == Precision::Bf16 {
+            st.momentum = Matrix::zeros(0, 0);
+            st.momentum_bits = Some(Bf16Matrix::zeros(rows, cols));
+        }
+        st
     }
 
     /// One step: V ← βV + (1−β)G;  O = NS5(V);
@@ -127,6 +146,69 @@ impl NorMuonState {
             );
         }
         self.workspace.give_matrix(d);
+    }
+
+    /// The bf16 storage twin of [`NorMuonState::step`]: the momentum EMA
+    /// sweeps the bits in place, the bits widen into a workspace scratch,
+    /// and NS5, both reduction sweeps, the f64 γ accumulators, and the
+    /// f32 per-row second moment `v` run exactly as in the f32 path;
+    /// only the parameter apply rounds to bf16. Panics if the state was
+    /// not constructed with [`Precision::Bf16`].
+    pub fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32) {
+        let (rows, cols) = (w.rows(), w.cols());
+        let bits = self
+            .momentum_bits
+            .as_mut()
+            .expect("normuon state was not constructed in bf16 mode");
+        assert_eq!(
+            (rows, cols),
+            (bits.rows(), bits.cols()),
+            "normuon momentum shape"
+        );
+        assert_eq!(
+            (rows, cols),
+            (grad.rows(), grad.cols()),
+            "normuon grad shape"
+        );
+        kernels::bf16_axpby_inplace(bits.bits_mut(), self.beta, grad.data(), 1.0 - self.beta);
+        let mut mwide = self.workspace.take_matrix(rows, cols);
+        bits.widen_into(&mut mwide);
+        let mut d = self.workspace.take_matrix(rows, cols);
+        newton_schulz5_into(&mwide, self.ns_steps, &mut self.workspace, &mut d);
+        self.t += 1;
+        let bias = (1.0 - (self.beta2 as f64).powi(self.t as i32)) as f32;
+        let b2 = self.beta2;
+        let ob2 = 1.0 - b2;
+        let inv_n = 1.0 / cols as f32;
+        let mut sum_o = 0.0f64;
+        let mut sum_c = 0.0f64;
+        let ddata = d.data();
+        for i in 0..rows {
+            let sq = row_sumsq(&ddata[i * cols..(i + 1) * cols]);
+            self.v[i] = b2 * self.v[i] + ob2 * sq * inv_n;
+            let c = 1.0 / ((self.v[i] / bias).sqrt() + ROW_EPS);
+            sum_o += sq as f64;
+            sum_c += (c * c * sq) as f64;
+        }
+        let gamma = if sum_c > 0.0 {
+            (sum_o / sum_c).sqrt() as f32
+        } else {
+            1.0
+        };
+        let scale = lr * rms_scale(rows, cols);
+        let wfac = 1.0 - scale * self.weight_decay;
+        for i in 0..rows {
+            let o = i * cols;
+            let c = 1.0 / ((self.v[i] / bias).sqrt() + ROW_EPS);
+            kernels::bf16_axpby_inplace(
+                w.row_mut(i),
+                wfac,
+                &ddata[o..o + cols],
+                -(scale * gamma * c),
+            );
+        }
+        self.workspace.give_matrix(d);
+        self.workspace.give_matrix(mwide);
     }
 }
 

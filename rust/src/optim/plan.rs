@@ -33,7 +33,7 @@ use crate::optim::registry::MatrixOptimizer;
 use crate::optim::{
     AdamWState, MuonState, MuownState, NorMuonState, NoraState, RmnpState, TurboMuonState,
 };
-use crate::tensor::{kernels, Matrix};
+use crate::tensor::{kernels, Bf16Matrix, Matrix, Precision};
 use crate::util::Rng;
 
 /// Which fused optimizer updates one parameter.
@@ -100,31 +100,48 @@ pub enum OptState {
 }
 
 impl OptState {
-    /// Freshly initialized state of `kind` for a `rows × cols` parameter.
+    /// Freshly initialized f32-mode state of `kind` for a `rows × cols`
+    /// parameter.
     pub fn new(kind: OptKind, rows: usize, cols: usize) -> Self {
+        Self::new_with(kind, rows, cols, Precision::F32)
+    }
+
+    /// Freshly initialized state of `kind` in the given storage
+    /// precision: bf16 mode stores the large state buffers (momentum /
+    /// AdamW's first moment) as bf16 bits.
+    pub fn new_with(kind: OptKind, rows: usize, cols: usize, precision: Precision) -> Self {
         match kind {
-            OptKind::Rmnp => OptState::Rmnp(RmnpState::new(rows, cols)),
-            OptKind::Muon => OptState::Muon(MuonState::new(rows, cols)),
-            OptKind::AdamW => OptState::AdamW(AdamWState::new(rows * cols)),
-            OptKind::Nora => OptState::Nora(NoraState::new(rows, cols)),
-            OptKind::NorMuon => OptState::NorMuon(NorMuonState::new(rows, cols)),
-            OptKind::TurboMuon => OptState::TurboMuon(TurboMuonState::new(rows, cols)),
-            OptKind::Muown => OptState::Muown(MuownState::new(rows, cols)),
+            OptKind::Rmnp => OptState::Rmnp(RmnpState::new_with(rows, cols, precision)),
+            OptKind::Muon => OptState::Muon(MuonState::new_with(rows, cols, precision)),
+            OptKind::AdamW => OptState::AdamW(AdamWState::new_with(rows * cols, precision)),
+            OptKind::Nora => OptState::Nora(NoraState::new_with(rows, cols, precision)),
+            OptKind::NorMuon => OptState::NorMuon(NorMuonState::new_with(rows, cols, precision)),
+            OptKind::TurboMuon => {
+                OptState::TurboMuon(TurboMuonState::new_with(rows, cols, precision))
+            }
+            OptKind::Muown => OptState::Muown(MuownState::new_with(rows, cols, precision)),
         }
     }
 
     /// The matrix momentum, when this state has one (every matrix
     /// method); `None` for element-wise AdamW. Used by the native
-    /// backend's dominance probe (paper Section 3.2).
-    pub fn momentum(&self) -> Option<&Matrix> {
+    /// backend's dominance probe (paper Section 3.2). Returns an owned
+    /// matrix: bf16-stored momentum widens, f32 momentum clones.
+    pub fn momentum(&self) -> Option<Matrix> {
+        fn mom(momentum: &Matrix, bits: &Option<Bf16Matrix>) -> Matrix {
+            match bits {
+                Some(b) => b.to_matrix(),
+                None => momentum.clone(),
+            }
+        }
         match self {
-            OptState::Rmnp(st) => Some(&st.momentum),
-            OptState::Muon(st) => Some(&st.momentum),
+            OptState::Rmnp(st) => Some(mom(&st.momentum, &st.momentum_bits)),
+            OptState::Muon(st) => Some(mom(&st.momentum, &st.momentum_bits)),
             OptState::AdamW(_) => None,
-            OptState::Nora(st) => Some(&st.momentum),
-            OptState::NorMuon(st) => Some(&st.momentum),
-            OptState::TurboMuon(st) => Some(&st.momentum),
-            OptState::Muown(st) => Some(&st.momentum),
+            OptState::Nora(st) => Some(mom(&st.momentum, &st.momentum_bits)),
+            OptState::NorMuon(st) => Some(mom(&st.momentum, &st.momentum_bits)),
+            OptState::TurboMuon(st) => Some(mom(&st.momentum, &st.momentum_bits)),
+            OptState::Muown(st) => Some(mom(&st.momentum, &st.momentum_bits)),
         }
     }
 
@@ -162,6 +179,9 @@ impl MatrixOptimizer for OptState {
     fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
         self.as_opt_mut().step(w, grad, lr);
     }
+    fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32) {
+        self.as_opt_mut().step_bf16(w, grad, lr);
+    }
     fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
         self.as_opt().rms_scale(rows, cols)
     }
@@ -186,8 +206,14 @@ impl MatrixOptimizer for OptState {
 pub struct ParamTask {
     /// Stable task name (the deterministic scheduling tie-break).
     pub name: String,
-    /// The parameter matrix.
+    /// The parameter matrix. In bf16 mode this is the *exact f32
+    /// widening* of [`ParamTask::bits`], refreshed after every step, so
+    /// forward passes read it without a per-use conversion.
     pub w: Matrix,
+    /// bf16-stored parameter bits for the `perf.precision = bf16` mode
+    /// (`None` in f32 mode). When present, `bits` is the authoritative
+    /// storage and `w` mirrors it.
+    pub bits: Option<Bf16Matrix>,
     /// The gradient buffer callers fill before each round.
     pub grad: Matrix,
     /// The per-parameter optimizer state.
@@ -195,12 +221,26 @@ pub struct ParamTask {
 }
 
 impl ParamTask {
-    /// A task over `w` with freshly initialized `kind` optimizer state
-    /// and a zeroed gradient buffer.
+    /// A task over `w` with freshly initialized f32-mode `kind` optimizer
+    /// state and a zeroed gradient buffer.
     pub fn new(name: &str, w: Matrix, kind: OptKind) -> Self {
+        Self::new_with(name, w, kind, Precision::F32)
+    }
+
+    /// A task in the given storage precision. bf16 mode rounds the
+    /// initial weights to bf16 once (so the stored bits and the f32
+    /// mirror agree from step zero) and allocates bf16 optimizer state.
+    pub fn new_with(name: &str, w: Matrix, kind: OptKind, precision: Precision) -> Self {
         let (r, c) = (w.rows(), w.cols());
-        let state = OptState::new(kind, r, c);
-        ParamTask { name: name.to_string(), grad: Matrix::zeros(r, c), w, state }
+        let state = OptState::new_with(kind, r, c, precision);
+        let (w, bits) = match precision {
+            Precision::F32 => (w, None),
+            Precision::Bf16 => {
+                let b = Bf16Matrix::from_matrix(&w);
+                (b.to_matrix(), Some(b))
+            }
+        };
+        ParamTask { name: name.to_string(), grad: Matrix::zeros(r, c), w, bits, state }
     }
 
     /// Which optimizer steps this task.
@@ -226,25 +266,45 @@ impl ParamTask {
     }
 
     /// One fused optimizer step on this parameter (through the
-    /// [`MatrixOptimizer`] trait).
+    /// [`MatrixOptimizer`] trait). In bf16 mode the step updates the
+    /// stored bits and then refreshes the f32 mirror in place (no
+    /// allocation).
     pub fn step(&mut self, lr: f32) {
-        self.state.step(&mut self.w, &self.grad, lr);
+        match &mut self.bits {
+            Some(bits) => {
+                self.state.step_bf16(bits, &self.grad, lr);
+                bits.widen_into(&mut self.w);
+            }
+            None => self.state.step(&mut self.w, &self.grad, lr),
+        }
     }
 }
 
 /// Build one [`ParamTask`] per `(shape, multiplicity)` entry (the format
-/// of `exp::precond::shape_counts`), Gaussian-initialized.
+/// of `exp::precond::shape_counts`), Gaussian-initialized, in f32 mode.
 pub fn tasks_from_shapes(
     shapes: &[((usize, usize), usize)],
     kind: OptKind,
     std: f32,
     rng: &mut Rng,
 ) -> Vec<ParamTask> {
+    tasks_from_shapes_prec(shapes, kind, std, rng, Precision::F32)
+}
+
+/// [`tasks_from_shapes`] in an explicit storage precision. The RNG draws
+/// are identical across modes — bf16 tasks round the same f32 init.
+pub fn tasks_from_shapes_prec(
+    shapes: &[((usize, usize), usize)],
+    kind: OptKind,
+    std: f32,
+    rng: &mut Rng,
+    precision: Precision,
+) -> Vec<ParamTask> {
     let mut tasks = Vec::new();
     for &((m, n), count) in shapes {
         for c in 0..count {
             let w = Matrix::randn(m, n, std, rng);
-            tasks.push(ParamTask::new(&format!("{m}x{n}.{c}"), w, kind));
+            tasks.push(ParamTask::new_with(&format!("{m}x{n}.{c}"), w, kind, precision));
         }
     }
     tasks
@@ -577,6 +637,50 @@ mod tests {
                 let a = seq.with_task(i, |t| t.w.clone());
                 let b = par.with_task(i, |t| t.w.clone());
                 assert_eq!(a, b, "{:?} task {i} diverged", kind);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_matches_sequential_exactly_bf16() {
+        // the per-mode determinism contract: bf16 tasks step to
+        // identical *bits* for any plan_threads value, and the f32
+        // mirror stays the exact widening of the stored bits
+        for kind in [OptKind::Rmnp, OptKind::Muon, OptKind::AdamW] {
+            let mk = || {
+                let mut rng = Rng::new(2);
+                tasks_from_shapes_prec(
+                    &[((6, 10), 2), ((12, 4), 1), ((3, 3), 1)],
+                    kind,
+                    0.5,
+                    &mut rng,
+                    Precision::Bf16,
+                )
+            };
+            let mut seq = StepPlan::new(mk(), 1);
+            let mut par = StepPlan::new(mk(), 3);
+            for round in 0..3 {
+                fill_grads(&seq, 100 + round);
+                fill_grads(&par, 100 + round);
+                seq.step_all(0.02);
+                par.step_all(0.02);
+            }
+            for i in 0..seq.len() {
+                let (a_bits, a_w) = seq.with_task(i, |t| {
+                    (t.bits.as_ref().unwrap().bits().to_vec(), t.w.clone())
+                });
+                let (b_bits, b_w) = par.with_task(i, |t| {
+                    (t.bits.as_ref().unwrap().bits().to_vec(), t.w.clone())
+                });
+                assert_eq!(a_bits, b_bits, "{:?} task {i} diverged", kind);
+                assert_eq!(a_w, b_w, "{:?} task {i} mirror diverged", kind);
+                for (wv, &b) in a_w.data().iter().zip(&a_bits) {
+                    assert_eq!(
+                        wv.to_bits(),
+                        crate::tensor::simd::bf16_to_f32(b).to_bits(),
+                        "mirror is not the exact widening"
+                    );
+                }
             }
         }
     }

@@ -24,7 +24,7 @@ use crate::optim::{
     rms_scale, AdamWState, MuonState, MuownState, NorMuonState, NoraState, RmnpState,
     TurboMuonState,
 };
-use crate::tensor::Matrix;
+use crate::tensor::{Bf16Matrix, Matrix};
 
 /// One named state buffer of an optimizer (or a parameter), the unit of
 /// checkpoint export/import.
@@ -42,6 +42,12 @@ pub trait MatrixOptimizer {
 
     /// One fused optimizer step on `w` given `grad` at learning rate `lr`.
     fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32);
+
+    /// The bf16 storage twin of [`step`](MatrixOptimizer::step): `w` and
+    /// the optimizer's large state buffers live as bf16 bits while every
+    /// accumulation runs in f32 (or wider). Panics unless the state was
+    /// constructed with [`Precision::Bf16`](crate::tensor::Precision).
+    fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32);
 
     /// The learning-rate shape correction this optimizer applies for a
     /// `rows × cols` parameter (Eq. 17/18 for the matrix methods; 1.0
@@ -95,12 +101,42 @@ fn expect_exactly(state: &[NamedState], names: &[&str]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Export a momentum buffer regardless of storage mode. bf16-stored
+/// momentum exports its *exact* f32 widening; packing that widening back
+/// on import is the identity (bf16→f32→bf16 round-trips every bf16
+/// value), so the checkpoint contract stays bit-exact in both modes.
+fn momentum_f32(momentum: &Matrix, bits: &Option<Bf16Matrix>) -> Vec<f32> {
+    match bits {
+        Some(b) => b.to_matrix().data().to_vec(),
+        None => momentum.data().to_vec(),
+    }
+}
+
+/// Element count of the momentum buffer in whichever mode it is stored.
+fn momentum_len(momentum: &Matrix, bits: &Option<Bf16Matrix>) -> usize {
+    match bits {
+        Some(b) => b.rows() * b.cols(),
+        None => momentum.data().len(),
+    }
+}
+
+/// Restore a momentum buffer into whichever storage mode the state uses.
+fn restore_momentum(momentum: &mut Matrix, bits: &mut Option<Bf16Matrix>, data: &[f32]) {
+    match bits {
+        Some(b) => crate::tensor::simd::bf16_pack(data, b.bits_mut()),
+        None => momentum.data_mut().copy_from_slice(data),
+    }
+}
+
 impl MatrixOptimizer for RmnpState {
     fn kind(&self) -> OptKind {
         OptKind::Rmnp
     }
     fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
         RmnpState::step(self, w, grad, lr);
+    }
+    fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32) {
+        RmnpState::step_bf16(self, w, grad, lr);
     }
     fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
         rms_scale(rows, cols)
@@ -109,13 +145,16 @@ impl MatrixOptimizer for RmnpState {
         vec!["momentum"]
     }
     fn export_state(&self) -> Vec<NamedState> {
-        vec![("momentum".to_string(), self.momentum.data().to_vec())]
+        vec![(
+            "momentum".to_string(),
+            momentum_f32(&self.momentum, &self.momentum_bits),
+        )]
     }
     fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
         expect_exactly(state, &["momentum"])?;
-        let len = self.momentum.data().len();
+        let len = momentum_len(&self.momentum, &self.momentum_bits);
         let data = find(state, "momentum", len)?;
-        self.momentum.data_mut().copy_from_slice(data);
+        restore_momentum(&mut self.momentum, &mut self.momentum_bits, data);
         Ok(())
     }
 }
@@ -127,6 +166,9 @@ impl MatrixOptimizer for MuonState {
     fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
         MuonState::step(self, w, grad, lr);
     }
+    fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32) {
+        MuonState::step_bf16(self, w, grad, lr);
+    }
     fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
         rms_scale(rows, cols)
     }
@@ -135,13 +177,16 @@ impl MatrixOptimizer for MuonState {
     }
     fn export_state(&self) -> Vec<NamedState> {
         // the NS5 workspace is scratch, not state: it never affects bits
-        vec![("momentum".to_string(), self.momentum.data().to_vec())]
+        vec![(
+            "momentum".to_string(),
+            momentum_f32(&self.momentum, &self.momentum_bits),
+        )]
     }
     fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
         expect_exactly(state, &["momentum"])?;
-        let len = self.momentum.data().len();
+        let len = momentum_len(&self.momentum, &self.momentum_bits);
         let data = find(state, "momentum", len)?;
-        self.momentum.data_mut().copy_from_slice(data);
+        restore_momentum(&mut self.momentum, &mut self.momentum_bits, data);
         Ok(())
     }
 }
@@ -153,6 +198,9 @@ impl MatrixOptimizer for AdamWState {
     fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
         AdamWState::step(self, w.data_mut(), grad.data(), lr);
     }
+    fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32) {
+        AdamWState::step_bf16(self, w.bits_mut(), grad.data(), lr);
+    }
     fn rms_scale(&self, _rows: usize, _cols: usize) -> f32 {
         1.0
     }
@@ -160,8 +208,13 @@ impl MatrixOptimizer for AdamWState {
         vec!["m", "v", "t"]
     }
     fn export_state(&self) -> Vec<NamedState> {
+        // bf16-stored m exports its exact widening (see `momentum_f32`)
+        let m = match &self.m_bits {
+            Some(mb) => mb.iter().map(|&b| crate::tensor::simd::bf16_to_f32(b)).collect(),
+            None => self.m.clone(),
+        };
         vec![
-            ("m".to_string(), self.m.clone()),
+            ("m".to_string(), m),
             ("v".to_string(), self.v.clone()),
             // the step counter travels through its raw bits, like the
             // checkpoint store's device-side "t" — round-trips are exact
@@ -170,10 +223,14 @@ impl MatrixOptimizer for AdamWState {
     }
     fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
         expect_exactly(state, &["m", "v", "t"])?;
-        let m = find(state, "m", self.m.len())?.to_vec();
+        let m_len = self.m_bits.as_ref().map_or(self.m.len(), Vec::len);
+        let m = find(state, "m", m_len)?.to_vec();
         let v = find(state, "v", self.v.len())?.to_vec();
         let t = find(state, "t", 1)?[0].to_bits();
-        self.m = m;
+        match &mut self.m_bits {
+            Some(mb) => crate::tensor::simd::bf16_pack(&m, mb),
+            None => self.m = m,
+        }
         self.v = v;
         self.t = t;
         Ok(())
@@ -187,6 +244,9 @@ impl MatrixOptimizer for NoraState {
     fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
         NoraState::step(self, w, grad, lr);
     }
+    fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32) {
+        NoraState::step_bf16(self, w, grad, lr);
+    }
     fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
         rms_scale(rows, cols)
     }
@@ -195,17 +255,21 @@ impl MatrixOptimizer for NoraState {
     }
     fn export_state(&self) -> Vec<NamedState> {
         vec![
-            ("momentum".to_string(), self.momentum.data().to_vec()),
+            (
+                "momentum".to_string(),
+                momentum_f32(&self.momentum, &self.momentum_bits),
+            ),
             ("v".to_string(), self.v.clone()),
             ("t".to_string(), vec![f32::from_bits(self.t)]),
         ]
     }
     fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
         expect_exactly(state, &["momentum", "v", "t"])?;
-        let mom = find(state, "momentum", self.momentum.data().len())?.to_vec();
+        let len = momentum_len(&self.momentum, &self.momentum_bits);
+        let mom = find(state, "momentum", len)?.to_vec();
         let v = find(state, "v", self.v.len())?.to_vec();
         let t = find(state, "t", 1)?[0].to_bits();
-        self.momentum.data_mut().copy_from_slice(&mom);
+        restore_momentum(&mut self.momentum, &mut self.momentum_bits, &mom);
         self.v = v;
         self.t = t;
         Ok(())
@@ -219,6 +283,9 @@ impl MatrixOptimizer for NorMuonState {
     fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
         NorMuonState::step(self, w, grad, lr);
     }
+    fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32) {
+        NorMuonState::step_bf16(self, w, grad, lr);
+    }
     fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
         rms_scale(rows, cols)
     }
@@ -228,17 +295,21 @@ impl MatrixOptimizer for NorMuonState {
     fn export_state(&self) -> Vec<NamedState> {
         // the NS5 workspace is scratch, not state: it never affects bits
         vec![
-            ("momentum".to_string(), self.momentum.data().to_vec()),
+            (
+                "momentum".to_string(),
+                momentum_f32(&self.momentum, &self.momentum_bits),
+            ),
             ("v".to_string(), self.v.clone()),
             ("t".to_string(), vec![f32::from_bits(self.t)]),
         ]
     }
     fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
         expect_exactly(state, &["momentum", "v", "t"])?;
-        let mom = find(state, "momentum", self.momentum.data().len())?.to_vec();
+        let len = momentum_len(&self.momentum, &self.momentum_bits);
+        let mom = find(state, "momentum", len)?.to_vec();
         let v = find(state, "v", self.v.len())?.to_vec();
         let t = find(state, "t", 1)?[0].to_bits();
-        self.momentum.data_mut().copy_from_slice(&mom);
+        restore_momentum(&mut self.momentum, &mut self.momentum_bits, &mom);
         self.v = v;
         self.t = t;
         Ok(())
@@ -252,6 +323,9 @@ impl MatrixOptimizer for TurboMuonState {
     fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
         TurboMuonState::step(self, w, grad, lr);
     }
+    fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32) {
+        TurboMuonState::step_bf16(self, w, grad, lr);
+    }
     fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
         rms_scale(rows, cols)
     }
@@ -260,13 +334,16 @@ impl MatrixOptimizer for TurboMuonState {
     }
     fn export_state(&self) -> Vec<NamedState> {
         // the NS workspace is scratch, not state: it never affects bits
-        vec![("momentum".to_string(), self.momentum.data().to_vec())]
+        vec![(
+            "momentum".to_string(),
+            momentum_f32(&self.momentum, &self.momentum_bits),
+        )]
     }
     fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
         expect_exactly(state, &["momentum"])?;
-        let len = self.momentum.data().len();
+        let len = momentum_len(&self.momentum, &self.momentum_bits);
         let data = find(state, "momentum", len)?;
-        self.momentum.data_mut().copy_from_slice(data);
+        restore_momentum(&mut self.momentum, &mut self.momentum_bits, data);
         Ok(())
     }
 }
@@ -278,6 +355,9 @@ impl MatrixOptimizer for MuownState {
     fn step(&mut self, w: &mut Matrix, grad: &Matrix, lr: f32) {
         MuownState::step(self, w, grad, lr);
     }
+    fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32) {
+        MuownState::step_bf16(self, w, grad, lr);
+    }
     fn rms_scale(&self, rows: usize, cols: usize) -> f32 {
         rms_scale(rows, cols)
     }
@@ -286,13 +366,16 @@ impl MatrixOptimizer for MuownState {
     }
     fn export_state(&self) -> Vec<NamedState> {
         // the NS5 workspace is scratch, not state: it never affects bits
-        vec![("momentum".to_string(), self.momentum.data().to_vec())]
+        vec![(
+            "momentum".to_string(),
+            momentum_f32(&self.momentum, &self.momentum_bits),
+        )]
     }
     fn import_state(&mut self, state: &[NamedState]) -> anyhow::Result<()> {
         expect_exactly(state, &["momentum"])?;
-        let len = self.momentum.data().len();
+        let len = momentum_len(&self.momentum, &self.momentum_bits);
         let data = find(state, "momentum", len)?;
-        self.momentum.data_mut().copy_from_slice(data);
+        restore_momentum(&mut self.momentum, &mut self.momentum_bits, data);
         Ok(())
     }
 }
@@ -475,6 +558,36 @@ mod tests {
             st_a.step(&mut w_a, &g, 0.02);
             st_b.step(&mut w_b, &g, 0.02);
             assert_eq!(w_a.data(), w_b.data(), "{kind:?} diverged after import");
+            assert_eq!(st_a.export_state(), st_b.export_state(), "{kind:?} state");
+        }
+    }
+
+    #[test]
+    fn bf16_export_import_roundtrip_is_bit_exact() {
+        use crate::tensor::{Bf16Matrix, Precision};
+        let mut rng = Rng::new(18);
+        for kind in REGISTRY.iter().filter_map(|s| s.native) {
+            // same contract as the f32 twin above, with bf16 storage:
+            // export the evolved state, import into a fresh bf16 state,
+            // and step both — continued *bits* must be identical
+            let seed = Matrix::randn(6, 10, 0.5, &mut rng);
+            let mut w_a = Bf16Matrix::from_matrix(&seed);
+            let mut st_a = OptState::new_with(kind, 6, 10, Precision::Bf16);
+            for s in 0..3u64 {
+                let mut g = Matrix::zeros(6, 10);
+                Rng::new(200 + s).fill_normal(g.data_mut(), 1.0);
+                st_a.step_bf16(&mut w_a, &g, 0.02);
+            }
+            let exported = st_a.export_state();
+            let mut st_b = OptState::new_with(kind, 6, 10, Precision::Bf16);
+            st_b.import_state(&exported).unwrap();
+            let mut w_b = Bf16Matrix::from_matrix(&w_a.to_matrix());
+            assert_eq!(w_a.bits(), w_b.bits(), "{kind:?} widening not exact");
+            let mut g = Matrix::zeros(6, 10);
+            Rng::new(998).fill_normal(g.data_mut(), 1.0);
+            st_a.step_bf16(&mut w_a, &g, 0.02);
+            st_b.step_bf16(&mut w_b, &g, 0.02);
+            assert_eq!(w_a.bits(), w_b.bits(), "{kind:?} diverged after import");
             assert_eq!(st_a.export_state(), st_b.export_state(), "{kind:?} state");
         }
     }

@@ -13,7 +13,7 @@
 
 use crate::optim::muon::newton_schulz5_into;
 use crate::optim::{rms_scale, MATRIX_BETA, ROW_EPS, WEIGHT_DECAY};
-use crate::tensor::{Matrix, Workspace};
+use crate::tensor::{Bf16Matrix, Matrix, Precision, Workspace};
 
 /// Default NS iteration count after row-norm pre-conditioning (vs
 /// Muon's 5 on the raw momentum).
@@ -33,8 +33,13 @@ pub const TURBO_NS_STEPS: usize = 3;
 /// ```
 #[derive(Clone, Debug)]
 pub struct TurboMuonState {
-    /// The momentum EMA `V` (same shape as the parameter).
+    /// The momentum EMA `V` (same shape as the parameter). Empty (0×0)
+    /// in bf16 storage mode, where
+    /// [`TurboMuonState::momentum_bits`] holds the state instead.
     pub momentum: Matrix,
+    /// bf16-stored momentum for the `perf.precision = bf16` mode
+    /// (`None` in f32 mode).
+    pub momentum_bits: Option<Bf16Matrix>,
     /// Momentum EMA coefficient β (paper Appendix B).
     pub beta: f32,
     /// Decoupled weight-decay coefficient λ.
@@ -52,11 +57,23 @@ impl TurboMuonState {
     pub fn new(rows: usize, cols: usize) -> Self {
         TurboMuonState {
             momentum: Matrix::zeros(rows, cols),
+            momentum_bits: None,
             beta: MATRIX_BETA,
             weight_decay: WEIGHT_DECAY,
             ns_steps: TURBO_NS_STEPS,
             workspace: Workspace::new(),
         }
+    }
+
+    /// Zero-momentum state in the given storage precision: bf16 mode
+    /// keeps the momentum as bf16 bits and leaves the f32 matrix empty.
+    pub fn new_with(rows: usize, cols: usize, precision: Precision) -> Self {
+        let mut st = Self::new(rows, cols);
+        if precision == Precision::Bf16 {
+            st.momentum = Matrix::zeros(0, 0);
+            st.momentum_bits = Some(Bf16Matrix::zeros(rows, cols));
+        }
+        st
     }
 
     /// One step: V ← βV + (1−β)G;  P = RN(V);  O = NS(P, ns_steps);
@@ -79,6 +96,43 @@ impl TurboMuonState {
         }
         self.workspace.give_matrix(d);
         self.workspace.give_matrix(p);
+    }
+
+    /// The bf16 storage twin of [`TurboMuonState::step`]: the momentum
+    /// EMA sweeps the bits in place, the bits widen into a workspace
+    /// scratch, and the pre-normalization + reduced-depth NS run
+    /// unchanged in f32 before one fused bf16 apply sweep. Panics if the
+    /// state was not constructed with [`Precision::Bf16`].
+    pub fn step_bf16(&mut self, w: &mut Bf16Matrix, grad: &Matrix, lr: f32) {
+        let (rows, cols) = (w.rows(), w.cols());
+        let bits = self
+            .momentum_bits
+            .as_mut()
+            .expect("turbo_muon state was not constructed in bf16 mode");
+        assert_eq!((rows, cols), (bits.rows(), bits.cols()), "turbo momentum shape");
+        assert_eq!((rows, cols), (grad.rows(), grad.cols()), "turbo grad shape");
+        crate::tensor::kernels::bf16_axpby_inplace(
+            bits.bits_mut(),
+            self.beta,
+            grad.data(),
+            1.0 - self.beta,
+        );
+        let mut mwide = self.workspace.take_matrix(rows, cols);
+        bits.widen_into(&mut mwide);
+        let mut p = self.workspace.take_matrix(rows, cols);
+        mwide.row_normalize_into(&mut p, ROW_EPS);
+        let mut d = self.workspace.take_matrix(rows, cols);
+        newton_schulz5_into(&p, self.ns_steps, &mut self.workspace, &mut d);
+        let scale = lr * rms_scale(rows, cols);
+        crate::tensor::kernels::bf16_axpby_inplace(
+            w.bits_mut(),
+            1.0 - scale * self.weight_decay,
+            d.data(),
+            -scale,
+        );
+        self.workspace.give_matrix(d);
+        self.workspace.give_matrix(p);
+        self.workspace.give_matrix(mwide);
     }
 }
 

@@ -26,9 +26,11 @@
 //!   `StepPlan::step_all`.
 //! * Checkpointing: `export_state`/`import_state` move parameters *and*
 //!   optimizer state through named buffers bit-exactly, and stamp the
-//!   **model arch + tag** (`__model__:` …) and the **optimizer name**
-//!   (`__optim__:` …) into the parameter section. Importing a checkpoint
-//!   written by a different tag, arch, or optimizer is a clean error —
+//!   **model arch + tag** (`__model__:` …), the **optimizer name**
+//!   (`__optim__:` …), and the **storage precision** (`__precision__:` …)
+//!   into the parameter section. Importing a checkpoint
+//!   written by a different tag, arch, optimizer, or precision is a
+//!   clean error —
 //!   a shape-compatible wrong-arch resume, or a same-buffer-name
 //!   wrong-optimizer resume (rmnp/muon/turbo_muon/muown all export just
 //!   `momentum`), can no longer silently import (`--resume` surfaces
@@ -48,7 +50,7 @@ use crate::optim::registry::{native_kind, NamedState};
 use crate::runtime::backend::{
     Batch, BatchShape, GradSink, NamedBuffer, StepMetrics, TrainBackend, TrainState,
 };
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Precision};
 use crate::util::Rng;
 
 /// Global gradient-norm clip threshold (paper protocol).
@@ -66,6 +68,14 @@ const STAMP_PREFIX: &str = "__model__:";
 /// stamp existed import without it (back-compat).
 const OPT_STAMP_PREFIX: &str = "__optim__:";
 
+/// Prefix of the storage-precision stamp buffer
+/// (`__precision__:<f32|bf16>`, zero-length payload). A bf16 run's
+/// parameter buffers are exact f32 widenings of the stored bits, so a
+/// f32 run could silently import them (and vice versa, rounding weights
+/// on the way in); the stamp makes cross-precision resume a clean error.
+/// Checkpoints written before the stamp existed import as f32 only.
+const PRECISION_STAMP_PREFIX: &str = "__precision__:";
+
 /// The always-available training backend: host matrices, model-layer
 /// forward/backward, sharded fused stepping through [`StepPlan`].
 pub struct NativeBackend {
@@ -75,19 +85,36 @@ pub struct NativeBackend {
     idx: Vec<usize>,
     /// The configured matrix-optimizer name (checkpoint stamp).
     matrix_opt: String,
+    /// The parameter/state storage precision (checkpoint stamp).
+    precision: Precision,
     steps: usize,
 }
 
 impl NativeBackend {
-    /// Build a run: resolve the model tag to its architecture,
-    /// initialize parameters from `seed`, assign per-parameter
-    /// optimizers, and spin up the plan's worker pool (`plan_threads`;
-    /// 0 = kernel thread count).
+    /// Build an f32-storage run: resolve the model tag to its
+    /// architecture, initialize parameters from `seed`, assign
+    /// per-parameter optimizers, and spin up the plan's worker pool
+    /// (`plan_threads`; 0 = kernel thread count).
     pub fn new(
         model: &str,
         optimizer: &str,
         seed: u64,
         plan_threads: usize,
+    ) -> anyhow::Result<Self> {
+        Self::new_with_precision(model, optimizer, seed, plan_threads, Precision::F32)
+    }
+
+    /// [`NativeBackend::new`] with an explicit storage precision
+    /// (`perf.precision`). In bf16 mode parameters and the large
+    /// optimizer state buffers are stored as bf16 bits; forward/backward
+    /// activations and every accumulation stay f32. The init RNG draws
+    /// are identical across modes — bf16 rounds the same f32 init.
+    pub fn new_with_precision(
+        model: &str,
+        optimizer: &str,
+        seed: u64,
+        plan_threads: usize,
+        precision: Precision,
     ) -> anyhow::Result<Self> {
         let arch = model::build_arch(model)?;
         let matrix_kind = native_kind(optimizer)?;
@@ -117,7 +144,7 @@ impl NativeBackend {
                     Matrix::from_vec(def.rows, def.cols, vec![v; def.rows * def.cols])
                 }
             };
-            tasks.push(ParamTask::new(&def.name, w, assign(def.class)));
+            tasks.push(ParamTask::new_with(&def.name, w, assign(def.class), precision));
         }
         let plan = StepPlan::new(tasks, plan_threads);
         let idx = defs
@@ -132,6 +159,7 @@ impl NativeBackend {
             plan,
             idx,
             matrix_opt: optimizer.to_string(),
+            precision,
             steps: 0,
         })
     }
@@ -159,6 +187,11 @@ impl NativeBackend {
     /// The optimizer stamp this run writes/expects.
     fn optim_stamp(&self) -> String {
         format!("{OPT_STAMP_PREFIX}{}", self.matrix_opt)
+    }
+
+    /// The storage-precision stamp this run writes/expects.
+    fn precision_stamp(&self) -> String {
+        format!("{PRECISION_STAMP_PREFIX}{}", self.precision.name())
     }
 
     /// Forward/backward only: compute the batch loss and the *raw*
@@ -374,7 +407,7 @@ impl TrainBackend for NativeBackend {
         for i in 0..self.plan.len() {
             self.plan.with_task(i, |t| {
                 if let Some(m) = t.state.momentum() {
-                    let (a, mi, ma) = crate::optim::lemmas::dominance_ratios(m);
+                    let (a, mi, ma) = crate::optim::lemmas::dominance_ratios(&m);
                     out.push((a as f32, mi as f32, ma as f32));
                 }
             });
@@ -390,6 +423,7 @@ impl TrainBackend for NativeBackend {
         let mut params = vec![
             NamedBuffer { name: self.stamp(), data: Vec::new() },
             NamedBuffer { name: self.optim_stamp(), data: Vec::new() },
+            NamedBuffer { name: self.precision_stamp(), data: Vec::new() },
         ];
         let mut opt = Vec::new();
         self.plan.with_all_tasks(|tasks| {
@@ -447,9 +481,36 @@ impl TrainBackend for NativeBackend {
             Some(_) => used_params += 1,
             None => {}
         }
+        // precision stamp third: a bf16 run's parameter buffers are exact
+        // widenings, so either direction of a cross-precision import would
+        // "work" numerically while silently changing storage semantics.
+        // Absent stamp = pre-bf16 checkpoint, accepted as f32 only.
+        let want_prec = self.precision_stamp();
+        match state
+            .params
+            .iter()
+            .find(|b| b.name.starts_with(PRECISION_STAMP_PREFIX))
+        {
+            Some(b) if b.name != want_prec => anyhow::bail!(
+                "checkpoint stores parameters in `{}` precision but this run \
+                 uses `{}` — f32↔bf16 resume is not supported (restart, or \
+                 resume with --set perf.precision={})",
+                &b.name[PRECISION_STAMP_PREFIX.len()..],
+                &want_prec[PRECISION_STAMP_PREFIX.len()..],
+                &b.name[PRECISION_STAMP_PREFIX.len()..]
+            ),
+            Some(_) => used_params += 1,
+            None => anyhow::ensure!(
+                self.precision == Precision::F32,
+                "checkpoint has no `{PRECISION_STAMP_PREFIX}` stamp (written \
+                 by an f32-only build) but this run uses bf16 storage — \
+                 refusing to round imported weights"
+            ),
+        }
         let mut used_opt = 0usize;
         self.plan.with_all_tasks(|tasks| -> anyhow::Result<()> {
             for t in tasks.iter_mut() {
+                let t: &mut ParamTask = &mut *t;
                 let p = state
                     .params
                     .iter()
@@ -465,6 +526,14 @@ impl TrainBackend for NativeBackend {
                     t.w.data().len()
                 );
                 t.w.data_mut().copy_from_slice(&p.data);
+                if let Some(bits) = &mut t.bits {
+                    // same-mode resume (the stamp guarantees it): the
+                    // checkpointed buffers are exact widenings, so
+                    // pack → widen is the identity and the restored bits
+                    // and mirror are byte-exact
+                    bits.pack_from(&t.w);
+                    bits.widen_into(&mut t.w);
+                }
                 used_params += 1;
                 let prefix = format!("{}.", t.name);
                 let mine: Vec<NamedState> = state
@@ -641,6 +710,74 @@ mod tests {
     }
 
     #[test]
+    fn bf16_mode_trains_and_resumes_byte_exact() {
+        // bf16 storage: the run learns, save → restore → continue is
+        // byte-exact, and the exported parameters are exact widenings
+        let mut a =
+            NativeBackend::new_with_precision("gpt2_tiny", "rmnp", 11, 2, Precision::Bf16)
+                .unwrap();
+        let mut first = 0.0;
+        let mut last = 0.0;
+        for s in 0..40u64 {
+            let toks = token_batch(a.spec(), 500 + s);
+            let m = a.step(&Batch::Tokens(&toks), 4e-3).unwrap();
+            assert!(m.loss.is_finite(), "step {s}");
+            if s == 0 {
+                first = m.loss;
+            }
+            last = m.loss;
+        }
+        assert!(last < first - 0.1, "bf16 run no learning: {first} -> {last}");
+        let saved = a.export_state().unwrap();
+        for p in saved.params.iter().filter(|p| !p.name.starts_with("__")) {
+            for &v in &p.data {
+                let packed = crate::tensor::simd::bf16_from_f32(v);
+                assert_eq!(
+                    crate::tensor::simd::bf16_to_f32(packed).to_bits(),
+                    v.to_bits(),
+                    "`{}` exported a non-bf16-representable value",
+                    p.name
+                );
+            }
+        }
+        let mut b =
+            NativeBackend::new_with_precision("gpt2_tiny", "rmnp", 999, 4, Precision::Bf16)
+                .unwrap();
+        b.import_state(&saved).unwrap();
+        assert_eq!(b.export_state().unwrap(), saved, "bf16 restore not byte-exact");
+        for s in 40..43u64 {
+            let toks = token_batch(a.spec(), 500 + s);
+            a.step(&Batch::Tokens(&toks), 4e-3).unwrap();
+            b.step(&Batch::Tokens(&toks), 4e-3).unwrap();
+        }
+        assert_eq!(
+            a.export_state().unwrap(),
+            b.export_state().unwrap(),
+            "restored bf16 run diverged"
+        );
+    }
+
+    #[test]
+    fn import_rejects_cross_precision_checkpoints() {
+        let mut f32_run = NativeBackend::new("gpt2_tiny", "rmnp", 1, 1).unwrap();
+        let mut bf16_run =
+            NativeBackend::new_with_precision("gpt2_tiny", "rmnp", 1, 1, Precision::Bf16)
+                .unwrap();
+        let f32_ckpt = f32_run.export_state().unwrap();
+        let bf16_ckpt = bf16_run.export_state().unwrap();
+        let err = f32_run.import_state(&bf16_ckpt).unwrap_err().to_string();
+        assert!(err.contains("bf16") && err.contains("f32"), "{err}");
+        let err = bf16_run.import_state(&f32_ckpt).unwrap_err().to_string();
+        assert!(err.contains("f32") && err.contains("bf16"), "{err}");
+        // a pre-bf16 checkpoint (no precision stamp) imports as f32 only
+        let mut old = f32_ckpt.clone();
+        old.params.retain(|b| !b.name.starts_with(PRECISION_STAMP_PREFIX));
+        f32_run.import_state(&old).unwrap();
+        let err = bf16_run.import_state(&old).unwrap_err().to_string();
+        assert!(err.contains("f32-only build"), "{err}");
+    }
+
+    #[test]
     fn refused_gate_leaves_state_bit_identical() {
         // step_gated with decide -> false must not touch parameters,
         // momentum, or the step counter — the skipped-step contract the
@@ -776,7 +913,7 @@ mod tests {
     fn import_rejects_mismatched_checkpoints() {
         let mut a = NativeBackend::new("gpt2_tiny", "rmnp", 1, 1).unwrap();
         let mut saved = a.export_state().unwrap();
-        saved.params[2].data.pop(); // params[0]/[1] are the model/optim stamps
+        saved.params[3].data.pop(); // params[0..3] are the model/optim/precision stamps
         assert!(a.import_state(&saved).is_err(), "short buffer must fail");
         let mut b = NativeBackend::new("gpt2_small", "rmnp", 1, 1).unwrap();
         let other = b.export_state().unwrap();

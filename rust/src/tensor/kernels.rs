@@ -7,16 +7,19 @@
 //!
 //! * **Dispatch** — each public kernel resolves the
 //!   [`super::simd`] ladder (config override → `RMNP_SIMD` env → runtime
-//!   feature detection, cached once) and takes the AVX2/FMA f32x8 path
-//!   (x86-64), the NEON f32x4 path (aarch64), or the portable scalar
-//!   tiles below. Both vector backends instantiate the same generic
-//!   microkernel bodies (`tensor/simd/lane.rs`), so they share one loop
-//!   structure and one set of invariants. All rungs agree within normal
-//!   f32 rounding (1e-4 in the parity tests); within one rung results are
-//!   bit-deterministic regardless of thread count.
+//!   feature detection, cached once) and takes the AVX-512F f32x16 or
+//!   AVX2/FMA f32x8 path (x86-64), the NEON f32x4 path (aarch64), or the
+//!   portable scalar tiles below. All vector backends instantiate the
+//!   same generic microkernel bodies (`tensor/simd/lane.rs`), so they
+//!   share one loop structure and one set of invariants. All rungs agree
+//!   within normal f32 rounding (1e-4 in the parity tests); within one
+//!   rung results are bit-deterministic regardless of thread count. The
+//!   bf16 storage kernels (`bf16_*` below) are stricter: their f32
+//!   arithmetic carries no fused contraction and a pinned reduction
+//!   order, so their results are bit-identical across *all* rungs.
 //! * **Matmul** — the vector path repacks B into the [`super::PackedB`]
 //!   strip-major panel layout and, for row counts past the
-//!   `PACK_A_MIN_ROWS` threshold, additionally repacks A into
+//!   [`pack_a_min_rows`] threshold, additionally repacks A into
 //!   [`super::PackedA`] 4-row panels (both packed once per matmul in the
 //!   calling thread into thread-local buffers, reused across calls), then
 //!   runs a 4-row × 16-column register-tile microkernel whose
@@ -70,13 +73,44 @@ const PAR_MIN_ELEMS: usize = 1 << 19;
 /// this the cross-crate call outweighs the vector win).
 #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
 const SIMD_MIN_ELEMS: usize = 16;
-/// Minimum output rows before the vector matmul additionally packs A
-/// into [`PackedA`] panels. Packing costs one O(m·k) pass; the win is
-/// replacing `⌈n/16⌉` strided traversals of A with sequential panel
-/// reads, so it needs enough rows (and more than one column strip — see
-/// the `n > PackedB::NR` guard at the call sites) to pay for itself.
-#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
-const PACK_A_MIN_ROWS: usize = 64;
+/// Default minimum output rows before the vector matmul additionally
+/// packs A into [`PackedA`] panels. Packing costs one O(m·k) pass; the
+/// win is replacing `⌈n/16⌉` strided traversals of A with sequential
+/// panel reads, so it needs enough rows (and more than one column strip
+/// — see the `n > PackedB::NR` guard at the call sites) to pay for
+/// itself. Tunable via [`set_pack_a_min_rows`] (the
+/// `perf.pack_a_min_rows` config key) or the `RMNP_PACK_A_MIN_ROWS`
+/// env var; the packed and unpacked paths are bit-identical, so the
+/// threshold only moves speed, never results.
+const PACK_A_MIN_ROWS_DEFAULT: usize = 64;
+
+static PACK_A_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the packed-A row threshold (0 restores default/env resolution).
+/// Wired to the `perf.pack_a_min_rows` config key. Safe to tune freely:
+/// packing A is an exact copy with unchanged arithmetic order, so any
+/// threshold produces bit-identical results (asserted by the
+/// `pack_a_threshold_is_bit_invariant` test below).
+pub fn set_pack_a_min_rows(n: usize) {
+    PACK_A_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Effective packed-A row threshold: explicit override, else
+/// `RMNP_PACK_A_MIN_ROWS`, else [`PACK_A_MIN_ROWS_DEFAULT`].
+pub fn pack_a_min_rows() -> usize {
+    let n = PACK_A_OVERRIDE.load(Ordering::Relaxed);
+    if n != 0 {
+        return n;
+    }
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("RMNP_PACK_A_MIN_ROWS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(PACK_A_MIN_ROWS_DEFAULT)
+    })
+}
 
 // the scalar tile height must match the packed-A panel height, or the
 // aligned row partition would split panels across workers
@@ -161,6 +195,9 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
             #[cfg(target_arch = "x86_64")]
             // SAFETY: active() returns Avx2 only when avx2+fma are detected
             SimdPath::Avx2 => return unsafe { simd::avx2::dot(x, y) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: active() returns Avx512 only when avx512f is detected
+            SimdPath::Avx512 => return unsafe { simd::avx512::dot(x, y) },
             #[cfg(target_arch = "aarch64")]
             // SAFETY: active() returns Neon only when neon is detected
             SimdPath::Neon => return unsafe { simd::neon::dot(x, y) },
@@ -352,7 +389,7 @@ thread_local! {
         RefCell::new((PackedB::new(), PackedA::new()));
 }
 
-/// Vector-rung matmul: repack B (and, past [`PACK_A_MIN_ROWS`], A), then
+/// Vector-rung matmul: repack B (and, past [`pack_a_min_rows`], A), then
 /// run the packed microkernel over panel-aligned row-block threads.
 #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
 fn matmul_simd(
@@ -368,7 +405,7 @@ fn matmul_simd(
         let mut packs = cell.borrow_mut();
         let (pb, pa) = &mut *packs;
         pb.pack(b, k, n);
-        let use_pa = m >= PACK_A_MIN_ROWS && n > PackedB::NR;
+        let use_pa = m >= pack_a_min_rows() && n > PackedB::NR;
         if use_pa {
             pa.pack(a, m, k);
         }
@@ -390,6 +427,10 @@ fn matmul_simd(
                 match path {
                     #[cfg(target_arch = "x86_64")]
                     SimdPath::Avx2 => simd::avx2::matmul_packed_rows(
+                        chunk, a_rows, pa_rows, packed_b, k, n, 1.0, false,
+                    ),
+                    #[cfg(target_arch = "x86_64")]
+                    SimdPath::Avx512 => simd::avx512::matmul_packed_rows(
                         chunk, a_rows, pa_rows, packed_b, k, n, 1.0, false,
                     ),
                     #[cfg(target_arch = "aarch64")]
@@ -443,7 +484,7 @@ fn ns_poly_simd(path: SimdPath, dst: &mut [f32], a: &[f32], m: usize, b: f32, c:
         let mut packs = cell.borrow_mut();
         let (pb, pa) = &mut *packs;
         pb.pack(a, m, m);
-        let use_pa = m >= PACK_A_MIN_ROWS && m > PackedB::NR;
+        let use_pa = m >= pack_a_min_rows() && m > PackedB::NR;
         if use_pa {
             pa.pack(a, m, m);
         }
@@ -464,6 +505,10 @@ fn ns_poly_simd(path: SimdPath, dst: &mut [f32], a: &[f32], m: usize, b: f32, c:
                 match path {
                     #[cfg(target_arch = "x86_64")]
                     SimdPath::Avx2 => simd::avx2::ns_poly_rows(
+                        chunk, a_rows, pa_rows, packed_b, m, b, c,
+                    ),
+                    #[cfg(target_arch = "x86_64")]
+                    SimdPath::Avx512 => simd::avx512::ns_poly_rows(
                         chunk, a_rows, pa_rows, packed_b, m, b, c,
                     ),
                     #[cfg(target_arch = "aarch64")]
@@ -554,6 +599,11 @@ fn gram_rows(dst_chunk: &mut [f32], a: &[f32], i0: usize, i1: usize, m: usize, k
         #[cfg(target_arch = "x86_64")]
         // SAFETY: the Avx2 dispatch rung implies avx2+fma support
         SimdPath::Avx2 => return unsafe { simd::avx2::gram_rows(dst_chunk, a, i0, i1, m, k) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the Avx512 dispatch rung implies avx512f support
+        SimdPath::Avx512 => {
+            return unsafe { simd::avx512::gram_rows(dst_chunk, a, i0, i1, m, k) }
+        }
         #[cfg(target_arch = "aarch64")]
         // SAFETY: the Neon dispatch rung implies neon support
         SimdPath::Neon => return unsafe { simd::neon::gram_rows(dst_chunk, a, i0, i1, m, k) },
@@ -661,6 +711,9 @@ pub fn axpby_into(dst: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
             #[cfg(target_arch = "x86_64")]
             // SAFETY: the Avx2 dispatch rung implies avx2+fma support
             SimdPath::Avx2 => return unsafe { simd::avx2::axpby(dst, a, x, b, y) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx512 dispatch rung implies avx512f support
+            SimdPath::Avx512 => return unsafe { simd::avx512::axpby(dst, a, x, b, y) },
             #[cfg(target_arch = "aarch64")]
             // SAFETY: the Neon dispatch rung implies neon support
             SimdPath::Neon => return unsafe { simd::neon::axpby(dst, a, x, b, y) },
@@ -681,6 +734,9 @@ pub fn axpby_inplace(x: &mut [f32], a: f32, y: &[f32], b: f32) {
             #[cfg(target_arch = "x86_64")]
             // SAFETY: the Avx2 dispatch rung implies avx2+fma support
             SimdPath::Avx2 => return unsafe { simd::avx2::axpby_inplace(x, a, y, b) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx512 dispatch rung implies avx512f support
+            SimdPath::Avx512 => return unsafe { simd::avx512::axpby_inplace(x, a, y, b) },
             #[cfg(target_arch = "aarch64")]
             // SAFETY: the Neon dispatch rung implies neon support
             SimdPath::Neon => return unsafe { simd::neon::axpby_inplace(x, a, y, b) },
@@ -690,6 +746,116 @@ pub fn axpby_inplace(x: &mut [f32], a: f32, y: &[f32], b: f32) {
     for i in 0..x.len() {
         x[i] = a * x[i] + b * y[i];
     }
+}
+
+/// Fused bf16 EMA sweep: `x[i] = rne(a·widen(x[i]) + b·y[i])`, reading
+/// and writing bf16 bits with all accumulation in f32 — the momentum
+/// update of the bf16 storage mode (and the weight update against an
+/// f32 direction). One load-widen, two rounded multiplies, one rounded
+/// add, and one RNE round-store per element; no f32 copy of `x` is ever
+/// materialized.
+///
+/// Unlike the f32 kernels, the result is **bit-identical on every SIMD
+/// rung**: the arithmetic is elementwise with no fused contraction and
+/// no reduction, so the rung only changes speed.
+pub fn bf16_axpby_inplace(x: &mut [u16], a: f32, y: &[f32], b: f32) {
+    assert_eq!(x.len(), y.len(), "bf16_axpby_inplace shape");
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if x.len() >= SIMD_MIN_ELEMS {
+        match simd::active() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+            SimdPath::Avx2 => return unsafe { simd::avx2::bf16_axpby_inplace(x, a, y, b) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx512 dispatch rung implies avx512f support
+            SimdPath::Avx512 => return unsafe { simd::avx512::bf16_axpby_inplace(x, a, y, b) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: the Neon dispatch rung implies neon support
+            SimdPath::Neon => return unsafe { simd::neon::bf16_axpby_inplace(x, a, y, b) },
+            _ => {}
+        }
+    }
+    for (xi, &yi) in x.iter_mut().zip(y) {
+        let xv = crate::tensor::simd::bf16_to_f32(*xi);
+        *xi = crate::tensor::simd::bf16_from_f32(a * xv + b * yi);
+    }
+}
+
+/// Fused bf16/bf16 sweep: `x[i] = rne(a·widen(x[i]) + b·widen(y[i]))` —
+/// the weight update of the bf16 storage mode, where both the weights
+/// and the momentum live as bf16 bits. Bit-identical on every rung,
+/// like [`bf16_axpby_inplace`].
+pub fn bf16_axpby_from_bf16(x: &mut [u16], a: f32, y: &[u16], b: f32) {
+    assert_eq!(x.len(), y.len(), "bf16_axpby_from_bf16 shape");
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if x.len() >= SIMD_MIN_ELEMS {
+        match simd::active() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+            SimdPath::Avx2 => return unsafe { simd::avx2::bf16_axpby_from_bf16(x, a, y, b) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx512 dispatch rung implies avx512f support
+            SimdPath::Avx512 => {
+                return unsafe { simd::avx512::bf16_axpby_from_bf16(x, a, y, b) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: the Neon dispatch rung implies neon support
+            SimdPath::Neon => return unsafe { simd::neon::bf16_axpby_from_bf16(x, a, y, b) },
+            _ => {}
+        }
+    }
+    for (xi, &yi) in x.iter_mut().zip(y) {
+        let xv = crate::tensor::simd::bf16_to_f32(*xi);
+        let yv = crate::tensor::simd::bf16_to_f32(yi);
+        *xi = crate::tensor::simd::bf16_from_f32(a * xv + b * yv);
+    }
+}
+
+/// Sum of squares of a bf16 row, widened and accumulated in f32 across
+/// a fixed bank of 8 independent accumulators — the row-norm reduction
+/// of the bf16 RMNP step. The reduction order is pinned independent of
+/// lane width (stride-8 banks, pairwise fold), so — again unlike the
+/// f32 [`row_sumsq`] — the result is bit-identical on every rung.
+pub fn bf16_row_sumsq(x: &[u16]) -> f32 {
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    if x.len() >= SIMD_MIN_ELEMS {
+        match simd::active() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx2 dispatch rung implies avx2+fma support
+            SimdPath::Avx2 => return unsafe { simd::avx2::bf16_row_sumsq(x) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx512 dispatch rung implies avx512f support
+            SimdPath::Avx512 => return unsafe { simd::avx512::bf16_row_sumsq(x) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: the Neon dispatch rung implies neon support
+            SimdPath::Neon => return unsafe { simd::neon::bf16_row_sumsq(x) },
+            _ => {}
+        }
+    }
+    bf16_row_sumsq_scalar(x)
+}
+
+/// The portable core of [`bf16_row_sumsq`] — the identical stride-8
+/// bank structure the generic body pins, so scalar and vector rungs
+/// agree bit for bit.
+fn bf16_row_sumsq_scalar(x: &[u16]) -> f32 {
+    let n = x.len();
+    let mut acc = [0.0f32; 8];
+    let mut i = 0usize;
+    while i + 8 <= n {
+        for (j, a) in acc.iter_mut().enumerate() {
+            let v = crate::tensor::simd::bf16_to_f32(x[i + j]);
+            *a += v * v;
+        }
+        i += 8;
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    while i < n {
+        let v = crate::tensor::simd::bf16_to_f32(x[i]);
+        s += v * v;
+        i += 1;
+    }
+    s
 }
 
 /// `dst[i,:] = src[i,:] / max(‖src[i,:]‖₂, eps)` — the RMNP preconditioner
@@ -718,6 +884,11 @@ fn row_normalize_rows(dst: &mut [f32], src: &[f32], cols: usize, eps: f32) {
             // SAFETY: the Avx2 dispatch rung implies avx2+fma support
             SimdPath::Avx2 => {
                 return unsafe { simd::avx2::row_normalize_rows(dst, src, cols, eps) }
+            }
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx512 dispatch rung implies avx512f support
+            SimdPath::Avx512 => {
+                return unsafe { simd::avx512::row_normalize_rows(dst, src, cols, eps) }
             }
             #[cfg(target_arch = "aarch64")]
             // SAFETY: the Neon dispatch rung implies neon support
@@ -763,6 +934,11 @@ pub fn row_softmax_into(dst: &mut [f32], src: &[f32], rows: usize, cols: usize) 
             #[cfg(target_arch = "x86_64")]
             // SAFETY: the Avx2 dispatch rung implies avx2+fma support
             SimdPath::Avx2 => return unsafe { simd::avx2::row_softmax_rows(dst, src, cols) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx512 dispatch rung implies avx512f support
+            SimdPath::Avx512 => {
+                return unsafe { simd::avx512::row_softmax_rows(dst, src, cols) }
+            }
             #[cfg(target_arch = "aarch64")]
             // SAFETY: the Neon dispatch rung implies neon support
             SimdPath::Neon => return unsafe { simd::neon::row_softmax_rows(dst, src, cols) },
@@ -824,6 +1000,11 @@ pub fn row_softmax_grad_into(
             SimdPath::Avx2 => {
                 return unsafe { simd::avx2::row_softmax_grad_rows(dst, probs, dprobs, cols) }
             }
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx512 dispatch rung implies avx512f support
+            SimdPath::Avx512 => {
+                return unsafe { simd::avx512::row_softmax_grad_rows(dst, probs, dprobs, cols) }
+            }
             #[cfg(target_arch = "aarch64")]
             // SAFETY: the Neon dispatch rung implies neon support
             SimdPath::Neon => {
@@ -867,6 +1048,11 @@ pub fn rmsnorm_into(
             #[cfg(target_arch = "x86_64")]
             // SAFETY: the Avx2 dispatch rung implies avx2+fma support
             SimdPath::Avx2 => return unsafe { simd::avx2::rmsnorm_rows(dst, src, gain, cols, eps) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx512 dispatch rung implies avx512f support
+            SimdPath::Avx512 => {
+                return unsafe { simd::avx512::rmsnorm_rows(dst, src, gain, cols, eps) }
+            }
             #[cfg(target_arch = "aarch64")]
             // SAFETY: the Neon dispatch rung implies neon support
             SimdPath::Neon => return unsafe { simd::neon::rmsnorm_rows(dst, src, gain, cols, eps) },
@@ -918,6 +1104,13 @@ pub fn rmsnorm_grad_into(
             SimdPath::Avx2 => {
                 return unsafe {
                     simd::avx2::rmsnorm_grad_rows(dx, dgain, dy, src, gain, cols, eps)
+                }
+            }
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the Avx512 dispatch rung implies avx512f support
+            SimdPath::Avx512 => {
+                return unsafe {
+                    simd::avx512::rmsnorm_grad_rows(dx, dgain, dy, src, gain, cols, eps)
                 }
             }
             #[cfg(target_arch = "aarch64")]
@@ -1381,6 +1574,88 @@ mod tests {
                     want_dg[j]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn pack_a_threshold_is_bit_invariant() {
+        // packing A is an exact copy with unchanged arithmetic order, so
+        // forcing the packed path on (threshold 1) and off (usize::MAX)
+        // must produce bitwise-equal results for matmul and the fused NS
+        // polynomial — the contract that makes `perf.pack_a_min_rows` a
+        // pure speed knob
+        let mut rng = Rng::new(31);
+        let (m, k, n) = (80usize, 20usize, 33usize);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let s = randv(96 * 96, &mut rng);
+        set_pack_a_min_rows(1);
+        assert_eq!(pack_a_min_rows(), 1);
+        let mut mm_packed = vec![0.0f32; m * n];
+        matmul_into(&mut mm_packed, &a, &b, m, k, n);
+        let mut ns_packed = vec![0.0f32; 96 * 96];
+        ns_poly_into(&mut ns_packed, &s, 96, -4.775, 2.0315);
+        set_pack_a_min_rows(usize::MAX);
+        let mut mm_plain = vec![0.0f32; m * n];
+        matmul_into(&mut mm_plain, &a, &b, m, k, n);
+        let mut ns_plain = vec![0.0f32; 96 * 96];
+        ns_poly_into(&mut ns_plain, &s, 96, -4.775, 2.0315);
+        set_pack_a_min_rows(0);
+        assert!(pack_a_min_rows() >= 1, "0 restores default/env resolution");
+        assert_eq!(mm_packed, mm_plain, "matmul bits moved with the threshold");
+        assert_eq!(ns_packed, ns_plain, "ns_poly bits moved with the threshold");
+    }
+
+    #[test]
+    fn bf16_axpby_matches_rounding_reference() {
+        // x = rne(a·widen(x) + b·y), verified element by element against
+        // the conversion helpers; lengths straddle SIMD_MIN_ELEMS so both
+        // the scalar core and the dispatched rung are exercised, and the
+        // bit-identical-across-rungs contract makes assert_eq valid
+        use crate::tensor::simd::{bf16_from_f32, bf16_to_f32};
+        let mut rng = Rng::new(32);
+        for len in [3usize, 15, 16, 33, 100] {
+            let xf = randv(len, &mut rng);
+            let y = randv(len, &mut rng);
+            let x0: Vec<u16> = xf.iter().map(|&v| bf16_from_f32(v)).collect();
+            let mut x = x0.clone();
+            bf16_axpby_inplace(&mut x, 0.95, &y, 0.05);
+            for i in 0..len {
+                let want = bf16_from_f32(0.95 * bf16_to_f32(x0[i]) + 0.05 * y[i]);
+                assert_eq!(x[i], want, "len {len} at {i}");
+            }
+            let yb: Vec<u16> = y.iter().map(|&v| bf16_from_f32(v)).collect();
+            let mut x = x0.clone();
+            bf16_axpby_from_bf16(&mut x, 0.9, &yb, -0.2);
+            for i in 0..len {
+                let want =
+                    bf16_from_f32(0.9 * bf16_to_f32(x0[i]) - 0.2 * bf16_to_f32(yb[i]));
+                assert_eq!(x[i], want, "len {len} at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_row_sumsq_is_rung_invariant_and_correct() {
+        // the dispatched reduction must reproduce the pinned 8-bank
+        // scalar core bit for bit on whatever rung is active, and track
+        // an f64 reference within bf16 rounding distance
+        use crate::tensor::simd::bf16_from_f32;
+        let mut rng = Rng::new(33);
+        for len in [0usize, 5, 8, 16, 31, 64, 257] {
+            let xf = randv(len, &mut rng);
+            let x: Vec<u16> = xf.iter().map(|&v| bf16_from_f32(v)).collect();
+            let got = bf16_row_sumsq(&x);
+            let pinned = bf16_row_sumsq_scalar(&x);
+            assert_eq!(got.to_bits(), pinned.to_bits(), "len {len}");
+            let want: f64 = x
+                .iter()
+                .map(|&b| {
+                    let v = crate::tensor::simd::bf16_to_f32(b) as f64;
+                    v * v
+                })
+                .sum();
+            assert!((got as f64 - want).abs() < 1e-3 * (1.0 + want), "len {len}");
         }
     }
 

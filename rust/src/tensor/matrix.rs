@@ -262,6 +262,124 @@ impl Matrix {
     }
 }
 
+/// Storage precision for parameter and momentum matrices.
+///
+/// This is a *storage* contract only: every optimizer keeps its
+/// accumulation discipline (f32 kernels, f64 scalar reductions where the
+/// f32 mode already used them) in both modes — see the "Precision modes"
+/// section of `docs/ARCHITECTURE.md`. Selected by the `perf.precision`
+/// config key; threaded to [`crate::optim::OptState::new_with`] and the
+/// native runtime at construction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f32 storage — the default, bit-compatible with every
+    /// checkpoint and golden file that predates the bf16 mode.
+    F32,
+    /// bf16 (bfloat16) storage with f32 accumulation: parameters and
+    /// momentum hold 2 bytes per element; every arithmetic step widens
+    /// to f32, accumulates, and rounds once (RNE) on store.
+    Bf16,
+}
+
+impl Precision {
+    /// Parse a config/CLI value (`"f32"` or `"bf16"`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "bf16" => Some(Precision::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name (`"f32"` / `"bf16"`), the form the
+    /// checkpoint precision stamp and config round-trip through.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+}
+
+/// Dense row-major matrix of bf16 bits (`u16` storage, f32 semantics).
+///
+/// The bf16 storage mode's owner type: parameters and momentum live as
+/// raw bfloat16 bit patterns, and the fused kernels in
+/// [`super::kernels`] (`bf16_axpby_inplace`, `bf16_row_sumsq`, …) read
+/// and write these buffers directly — widening each element to f32 in
+/// registers — so no f32 copy of the matrix is materialized on the hot
+/// path. Conversions round to nearest-even via [`super::simd::bf16_pack`]
+/// and widen exactly via [`super::simd::bf16_unpack`]; a round trip
+/// `pack(unpack(bits))` is the identity, which is what makes same-mode
+/// checkpoint resume byte-exact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bf16Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<u16>,
+}
+
+impl Bf16Matrix {
+    /// Zero-filled matrix (bf16 zero is the all-zero bit pattern).
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Bf16Matrix { rows, cols, data: vec![0u16; rows * cols] }
+    }
+
+    /// Round an f32 matrix to bf16 storage (RNE per element).
+    pub fn from_matrix(src: &Matrix) -> Self {
+        let mut out = Bf16Matrix::zeros(src.rows(), src.cols());
+        crate::tensor::simd::bf16_pack(src.data(), &mut out.data);
+        out
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    /// The row-major bf16 bit buffer.
+    pub fn bits(&self) -> &[u16] {
+        &self.data
+    }
+    /// The row-major bf16 bit buffer, mutably.
+    pub fn bits_mut(&mut self) -> &mut [u16] {
+        &mut self.data
+    }
+
+    /// Borrow row `i`'s bits as a slice.
+    pub fn row(&self, i: usize) -> &[u16] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+    /// Borrow row `i`'s bits mutably.
+    pub fn row_mut(&mut self, i: usize) -> &mut [u16] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Widen into a preallocated same-shape f32 matrix (exact — every
+    /// bf16 value is representable in f32).
+    pub fn widen_into(&self, dst: &mut Matrix) {
+        assert_eq!((dst.rows(), dst.cols()), (self.rows, self.cols), "widen dst shape");
+        crate::tensor::simd::bf16_unpack(&self.data, dst.data_mut());
+    }
+
+    /// Widen into a new f32 matrix.
+    pub fn to_matrix(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        self.widen_into(&mut out);
+        out
+    }
+
+    /// Round an f32 matrix's contents into this one (shapes must match).
+    pub fn pack_from(&mut self, src: &Matrix) {
+        assert_eq!((self.rows, self.cols), (src.rows(), src.cols()), "pack_from shape");
+        crate::tensor::simd::bf16_pack(src.data(), &mut self.data);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -418,6 +536,46 @@ mod tests {
         let b = Matrix::from_vec(1, 3, vec![10.0, 10.0, 10.0]);
         let c = a.axpby(2.0, &b, 0.5);
         assert_eq!(c.data(), &[7.0, 9.0, 11.0]);
+    }
+
+    #[test]
+    fn precision_parse_round_trips() {
+        for p in [Precision::F32, Precision::Bf16] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("f16"), None);
+        assert_eq!(Precision::parse("BF16"), None, "names are lowercase");
+    }
+
+    #[test]
+    fn bf16_matrix_round_trip_is_identity_on_bf16_values() {
+        // pack → widen → pack must be the identity: widening is exact, so
+        // re-rounding an already-bf16 value changes nothing. This is the
+        // property behind byte-exact same-mode checkpoint resume.
+        let mut rng = Rng::new(40);
+        let a = Matrix::randn(9, 21, 1.5, &mut rng);
+        let b = Bf16Matrix::from_matrix(&a);
+        let widened = b.to_matrix();
+        let repacked = Bf16Matrix::from_matrix(&widened);
+        assert_eq!(b, repacked);
+        // and the rounding error of the single pack is within bf16 eps
+        for (x, y) in a.data().iter().zip(widened.data()) {
+            assert!((x - y).abs() <= 0.00393 * x.abs() + 1e-30, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn bf16_matrix_rows_and_pack_from() {
+        let mut rng = Rng::new(41);
+        let a = Matrix::randn(4, 7, 1.0, &mut rng);
+        let mut b = Bf16Matrix::zeros(4, 7);
+        b.pack_from(&a);
+        assert_eq!(b, Bf16Matrix::from_matrix(&a));
+        for i in 0..4 {
+            assert_eq!(b.row(i), &b.bits()[i * 7..(i + 1) * 7]);
+        }
+        b.row_mut(2).fill(0);
+        assert!(b.to_matrix().row(2).iter().all(|&v| v == 0.0));
     }
 
     #[test]

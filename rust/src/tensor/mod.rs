@@ -4,8 +4,9 @@
 //!
 //! * [`simd`] — the instruction-level layer: one set of generic
 //!   microkernel bodies (dot, packed matmul, Gram, axpby, fused row
-//!   normalize, NS5 polynomial) instantiated per backend — AVX2/FMA
-//!   f32x8 on x86-64, NEON f32x4 on aarch64 — behind a runtime dispatch
+//!   normalize, NS5 polynomial) instantiated per backend — AVX-512F
+//!   f32x16 and AVX2/FMA f32x8 on x86-64, NEON f32x4 on aarch64 —
+//!   behind a runtime dispatch
 //!   ladder resolved at startup (`perf.simd` config key → `RMNP_SIMD`
 //!   env var → feature detection). Scalar tiles are the portable
 //!   fallback rung.
@@ -20,6 +21,10 @@
 //! * [`Matrix`] — the ergonomic owner type. Hot ops delegate to
 //!   [`kernels`] and expose `_into(dst)` variants that do not allocate;
 //!   the seed's scalar paths survive as `*_naive` parity baselines.
+//!   [`Bf16Matrix`] is its bf16-storage sibling for the
+//!   `perf.precision = bf16` mode: raw bfloat16 bits that the fused
+//!   `bf16_*` kernels read and write directly, with all accumulation in
+//!   f32 ([`Precision`] selects the mode per run).
 //! * [`Workspace`] — a best-fit scratch-buffer pool so multi-buffer
 //!   pipelines (Newton–Schulz iterations, fused optimizer steps) run
 //!   allocation-free after warmup. [`PackedB`] (16-column strips) and
@@ -40,6 +45,6 @@ mod norms;
 pub mod simd;
 mod workspace;
 
-pub use matrix::Matrix;
+pub use matrix::{Bf16Matrix, Matrix, Precision};
 pub use norms::{dual_pairing, frobenius, inf2_norm, one2_norm};
 pub use workspace::{PackedA, PackedB, Workspace};

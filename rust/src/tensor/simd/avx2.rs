@@ -209,3 +209,23 @@ pub unsafe fn bf16_pack(src: &[f32], dst: &mut [u16]) {
 pub unsafe fn bf16_unpack(src: &[u16], dst: &mut [f32]) {
     lane::bf16_unpack::<F32x8>(src, dst)
 }
+
+/// bf16 EMA sweep `x = rne(a·widen(x) + b·y)`; see
+/// [`lane::bf16_axpby_inplace`].
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn bf16_axpby_inplace(x: &mut [u16], a: f32, y: &[f32], b: f32) {
+    lane::bf16_axpby_inplace::<F32x8>(x, a, y, b)
+}
+
+/// bf16/bf16 sweep `x = rne(a·widen(x) + b·widen(y))`; see
+/// [`lane::bf16_axpby_from_bf16`].
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn bf16_axpby_from_bf16(x: &mut [u16], a: f32, y: &[u16], b: f32) {
+    lane::bf16_axpby_from_bf16::<F32x8>(x, a, y, b)
+}
+
+/// Widened sum of squares of a bf16 row; see [`lane::bf16_row_sumsq`].
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn bf16_row_sumsq(x: &[u16]) -> f32 {
+    lane::bf16_row_sumsq::<F32x8>(x)
+}

@@ -1,139 +1,140 @@
-//! The aarch64 NEON backend: [`SimdLane`] implemented on 4-lane
-//! `float32x4_t` registers, plus thin `#[target_feature(enable = "neon")]`
-//! wrappers around the generic bodies in [`super::lane`] — the rung that
-//! lets ARM hosts leave the scalar tiles.
+//! The x86-64 AVX-512F backend: [`SimdLane`] implemented on 16-lane
+//! `__m512` registers, plus thin `#[target_feature(enable = "avx512f")]`
+//! wrappers around the generic bodies in [`super::lane`] — the widest
+//! rung of the dispatch ladder.
 //!
-//! The generic layer fixes the loop structure, so this backend covers one
-//! 16-wide packed-B strip with **four** f32x4 registers per tile row
-//! (where AVX2 uses two f32x8), the dot/Gram reductions run four
-//! accumulators of 4 lanes (16 elements per unrolled step), and `vfmaq`
-//! provides the fused multiply-add. aarch64 guarantees NEON in its
-//! baseline, so [`super::neon_available`] is effectively always true
-//! there — the feature check is kept for symmetry with the AVX2 rung and
-//! for any future aarch64 profile without it.
+//! The generic layer fixes the loop structure, so this backend covers
+//! one 16-wide packed-B strip with a **single** f32x16 register per tile
+//! row (where AVX2 uses two f32x8 and NEON four f32x4), the dot/Gram
+//! reductions run four accumulators of 16 lanes (64 elements per
+//! unrolled step), and `_mm512_fmadd_ps` provides the fused
+//! multiply-add. Horizontal folds use the `_mm512_reduce_*` intrinsics,
+//! which are part of the AVX-512F foundation subset — nothing here
+//! needs DQ/BW/VL extensions, so [`super::avx512_available`] checks
+//! `avx512f` alone.
 //!
-//! Every function is `unsafe` because it must only run when NEON is
+//! Every function is `unsafe` because it must only run when AVX-512F is
 //! present, which the dispatch sites in [`crate::tensor::kernels`]
 //! guarantee via [`super::active`].
 
-use core::arch::aarch64::*;
+use core::arch::x86_64::*;
 
 use super::lane::{self, SimdLane};
 
-/// Packed-B strip width: 16 columns = four f32x4 accumulators per row.
+/// Packed-B strip width: 16 columns = one f32x16 accumulator per row.
 pub const NR: usize = lane::NR;
 
-/// Accumulator registers per strip row (`NR / 4`).
-const NV: usize = NR / 4;
+/// Accumulator registers per strip row (`NR / 16`).
+const NV: usize = NR / 16;
 
-/// One NEON register of 4 f32 lanes.
+/// One AVX-512 register of 16 f32 lanes.
 #[derive(Clone, Copy)]
-pub(crate) struct F32x4(float32x4_t);
+pub(crate) struct F32x16(__m512);
 
-impl SimdLane for F32x4 {
-    const LANES: usize = 4;
+impl SimdLane for F32x16 {
+    const LANES: usize = 16;
 
     #[inline(always)]
     unsafe fn zero() -> Self {
-        F32x4(vdupq_n_f32(0.0))
+        F32x16(_mm512_setzero_ps())
     }
 
     #[inline(always)]
     unsafe fn splat(x: f32) -> Self {
-        F32x4(vdupq_n_f32(x))
+        F32x16(_mm512_set1_ps(x))
     }
 
     #[inline(always)]
     unsafe fn load(p: *const f32) -> Self {
-        F32x4(vld1q_f32(p))
+        F32x16(_mm512_loadu_ps(p))
     }
 
     #[inline(always)]
     unsafe fn store(self, p: *mut f32) {
-        vst1q_f32(p, self.0)
+        _mm512_storeu_ps(p, self.0)
     }
 
     #[inline(always)]
     unsafe fn add(self, other: Self) -> Self {
-        F32x4(vaddq_f32(self.0, other.0))
+        F32x16(_mm512_add_ps(self.0, other.0))
     }
 
     #[inline(always)]
     unsafe fn mul(self, other: Self) -> Self {
-        F32x4(vmulq_f32(self.0, other.0))
+        F32x16(_mm512_mul_ps(self.0, other.0))
     }
 
     #[inline(always)]
     unsafe fn fma(self, a: Self, b: Self) -> Self {
-        F32x4(vfmaq_f32(self.0, a.0, b.0))
+        F32x16(_mm512_fmadd_ps(a.0, b.0, self.0))
     }
 
     #[inline(always)]
     unsafe fn hsum(self) -> f32 {
-        vaddvq_f32(self.0)
+        _mm512_reduce_add_ps(self.0)
     }
 
     #[inline(always)]
     unsafe fn max(self, other: Self) -> Self {
-        F32x4(vmaxq_f32(self.0, other.0))
+        F32x16(_mm512_max_ps(self.0, other.0))
     }
 
     #[inline(always)]
     unsafe fn hmax(self) -> f32 {
-        vmaxvq_f32(self.0)
+        _mm512_reduce_max_ps(self.0)
     }
 }
 
-/// 4×f32x4 dot product (16 elements per unrolled step).
-#[target_feature(enable = "neon")]
+/// 4×f32x16 dot product (64 elements per unrolled step).
+#[target_feature(enable = "avx512f")]
 pub unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
-    lane::dot::<F32x4>(x, y)
+    lane::dot::<F32x16>(x, y)
 }
 
 /// `dst = a·x + b·y` elementwise.
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn axpby(dst: &mut [f32], a: f32, x: &[f32], b: f32, y: &[f32]) {
-    lane::axpby::<F32x4>(dst, a, x, b, y)
+    lane::axpby::<F32x16>(dst, a, x, b, y)
 }
 
 /// `x = a·x + b·y` elementwise, in place.
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn axpby_inplace(x: &mut [f32], a: f32, y: &[f32], b: f32) {
-    lane::axpby_inplace::<F32x4>(x, a, y, b)
+    lane::axpby_inplace::<F32x16>(x, a, y, b)
 }
 
 /// `dst = b · a` elementwise (the init pass of the fused NS5 poly).
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn scale_into(dst: &mut [f32], a: &[f32], b: f32) {
-    lane::scale_into::<F32x4>(dst, a, b)
+    lane::scale_into::<F32x16>(dst, a, b)
 }
 
 /// Fused row normalization: `dst[i,:] = src[i,:] / max(‖src[i,:]‖₂, eps)`.
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn row_normalize_rows(dst: &mut [f32], src: &[f32], cols: usize, eps: f32) {
-    lane::row_normalize_rows::<F32x4>(dst, src, cols, eps)
+    lane::row_normalize_rows::<F32x16>(dst, src, cols, eps)
 }
 
 /// Row-wise softmax (vector max scan + normalize; scalar exp/sum).
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn row_softmax_rows(dst: &mut [f32], src: &[f32], cols: usize) {
-    lane::row_softmax_rows::<F32x4>(dst, src, cols)
+    lane::row_softmax_rows::<F32x16>(dst, src, cols)
 }
 
 /// Row-wise softmax backward sweep.
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn row_softmax_grad_rows(dst: &mut [f32], p: &[f32], dp: &[f32], cols: usize) {
-    lane::row_softmax_grad_rows::<F32x4>(dst, p, dp, cols)
+    lane::row_softmax_grad_rows::<F32x16>(dst, p, dp, cols)
 }
 
 /// Fused RMSNorm rows: `dst[i,:] = gain ⊙ src[i,:] · rms(src[i,:])⁻¹`.
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn rmsnorm_rows(dst: &mut [f32], src: &[f32], gain: &[f32], cols: usize, eps: f32) {
-    lane::rmsnorm_rows::<F32x4>(dst, src, gain, cols, eps)
+    lane::rmsnorm_rows::<F32x16>(dst, src, gain, cols, eps)
 }
 
 /// RMSNorm backward sweep (`dx` per row, `dgain` accumulated).
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn rmsnorm_grad_rows(
     dx: &mut [f32],
     dgain: &mut [f32],
@@ -143,7 +144,7 @@ pub unsafe fn rmsnorm_grad_rows(
     cols: usize,
     eps: f32,
 ) {
-    lane::rmsnorm_grad_rows::<F32x4>(dx, dgain, dy, src, gain, cols, eps)
+    lane::rmsnorm_grad_rows::<F32x16>(dx, dgain, dy, src, gain, cols, eps)
 }
 
 /// `dst (mc×n) {=, +=} alpha · a (mc×k) · B` over the packed panels; see
@@ -151,7 +152,7 @@ pub unsafe fn rmsnorm_grad_rows(
 /// [`crate::tensor::PackedA`] panels, or empty for the packed-B-only
 /// path (bit-identical).
 #[allow(clippy::too_many_arguments)]
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn matmul_packed_rows(
     dst: &mut [f32],
     a: &[f32],
@@ -162,12 +163,12 @@ pub unsafe fn matmul_packed_rows(
     alpha: f32,
     accumulate: bool,
 ) {
-    lane::matmul_packed_rows::<F32x4, NV>(dst, a, pa, pb, k, n, alpha, accumulate)
+    lane::matmul_packed_rows::<F32x16, NV>(dst, a, pa, pb, k, n, alpha, accumulate)
 }
 
 /// Fused NS5 polynomial rows: `dst = b·a_rows + c·(a_rows · A)` with `A`
 /// (m×m) pre-packed — no m×m `A²` intermediate is materialized.
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn ns_poly_rows(
     dst: &mut [f32],
     a_rows: &[f32],
@@ -177,13 +178,13 @@ pub unsafe fn ns_poly_rows(
     b: f32,
     c: f32,
 ) {
-    lane::ns_poly_rows::<F32x4, NV>(dst, a_rows, pa, pb, m, b, c)
+    lane::ns_poly_rows::<F32x16, NV>(dst, a_rows, pa, pb, m, b, c)
 }
 
 /// Gram rows `i0..i1` of `a·aᵀ` into `dst_chunk` (full rows, length `m`
 /// each): 4-row tiles share each streamed `a_j` row across four fma
 /// accumulators; remainder rows fall back to [`dot`].
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn gram_rows(
     dst_chunk: &mut [f32],
     a: &[f32],
@@ -192,37 +193,37 @@ pub unsafe fn gram_rows(
     m: usize,
     k: usize,
 ) {
-    lane::gram_rows::<F32x4>(dst_chunk, a, i0, i1, m, k)
+    lane::gram_rows::<F32x16>(dst_chunk, a, i0, i1, m, k)
 }
 
 /// Pack f32 into bf16 bits (RNE); see [`lane::bf16_pack`].
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn bf16_pack(src: &[f32], dst: &mut [u16]) {
-    lane::bf16_pack::<F32x4>(src, dst)
+    lane::bf16_pack::<F32x16>(src, dst)
 }
 
 /// Unpack bf16 bits to f32 (exact); see [`lane::bf16_unpack`].
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn bf16_unpack(src: &[u16], dst: &mut [f32]) {
-    lane::bf16_unpack::<F32x4>(src, dst)
+    lane::bf16_unpack::<F32x16>(src, dst)
 }
 
 /// bf16 EMA sweep `x = rne(a·widen(x) + b·y)`; see
 /// [`lane::bf16_axpby_inplace`].
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn bf16_axpby_inplace(x: &mut [u16], a: f32, y: &[f32], b: f32) {
-    lane::bf16_axpby_inplace::<F32x4>(x, a, y, b)
+    lane::bf16_axpby_inplace::<F32x16>(x, a, y, b)
 }
 
 /// bf16/bf16 sweep `x = rne(a·widen(x) + b·widen(y))`; see
 /// [`lane::bf16_axpby_from_bf16`].
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn bf16_axpby_from_bf16(x: &mut [u16], a: f32, y: &[u16], b: f32) {
-    lane::bf16_axpby_from_bf16::<F32x4>(x, a, y, b)
+    lane::bf16_axpby_from_bf16::<F32x16>(x, a, y, b)
 }
 
 /// Widened sum of squares of a bf16 row; see [`lane::bf16_row_sumsq`].
-#[target_feature(enable = "neon")]
+#[target_feature(enable = "avx512f")]
 pub unsafe fn bf16_row_sumsq(x: &[u16]) -> f32 {
-    lane::bf16_row_sumsq::<F32x4>(x)
+    lane::bf16_row_sumsq::<F32x16>(x)
 }

@@ -1,7 +1,7 @@
 //! The backend-generic microkernel bodies, written once over a small
 //! [`SimdLane`] register abstraction and instantiated per backend
-//! ([`super::avx2`] with 8-lane `__m256`, [`super::neon`] with 4-lane
-//! `float32x4_t`).
+//! ([`super::avx2`] with 8-lane `__m256`, [`super::avx512`] with 16-lane
+//! `__m512`, [`super::neon`] with 4-lane `float32x4_t`).
 //!
 //! Everything here is `#[inline(always)]` and carries **no**
 //! `#[target_feature]` of its own: each backend module wraps these bodies
@@ -41,7 +41,7 @@ pub(crate) const MR: usize = PackedA::MR;
 /// which the dispatch ladder in [`super`] guarantees before any generic
 /// body runs.
 pub(crate) trait SimdLane: Copy {
-    /// f32 lanes per register (8 for AVX2, 4 for NEON).
+    /// f32 lanes per register (8 for AVX2, 16 for AVX-512, 4 for NEON).
     const LANES: usize;
     /// All-zero register.
     unsafe fn zero() -> Self;
@@ -211,6 +211,99 @@ pub(crate) unsafe fn bf16_unpack<V: SimdLane>(src: &[u16], dst: &mut [f32]) {
         *dst.get_unchecked_mut(i) = super::bf16_to_f32(*src.get_unchecked(i));
         i += 1;
     }
+}
+
+/// Fused bf16 EMA sweep: `x[i] = rne(a·widen(x[i]) + b·y[i])` with the
+/// accumulation in f32 and one RNE round-store per element — the
+/// momentum update of the bf16 storage mode, reading and writing bf16
+/// bits without materializing an f32 copy of `x`.
+///
+/// Like [`bf16_pack`], the body carries no explicit vector ops (the
+/// widen/round halves are integer bit arithmetic the f32-only
+/// [`SimdLane`] surface cannot express); the `LANES`-unrolled loop
+/// inlines into each backend's `#[target_feature]` wrapper for
+/// auto-vectorization. The f32 arithmetic is written as two rounded
+/// multiplies and one rounded add — no fused contraction — so **every
+/// rung produces identical bits**, a stronger contract than the f32
+/// kernels (where lane width changes reduction trees).
+#[inline(always)]
+pub(crate) unsafe fn bf16_axpby_inplace<V: SimdLane>(x: &mut [u16], a: f32, y: &[f32], b: f32) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let l = V::LANES;
+    let mut i = 0usize;
+    while i + l <= n {
+        for j in 0..l {
+            let xv = super::bf16_to_f32(*x.get_unchecked(i + j));
+            let r = a * xv + b * *y.get_unchecked(i + j);
+            *x.get_unchecked_mut(i + j) = super::bf16_from_f32(r);
+        }
+        i += l;
+    }
+    while i < n {
+        let xv = super::bf16_to_f32(*x.get_unchecked(i));
+        let r = a * xv + b * *y.get_unchecked(i);
+        *x.get_unchecked_mut(i) = super::bf16_from_f32(r);
+        i += 1;
+    }
+}
+
+/// Fused bf16/bf16 sweep: `x[i] = rne(a·widen(x[i]) + b·widen(y[i]))` —
+/// the weight update of the bf16 storage mode, where both the weights
+/// and the momentum live as bf16 bits. Same instantiation and
+/// rung-invariance story as [`bf16_axpby_inplace`].
+#[inline(always)]
+pub(crate) unsafe fn bf16_axpby_from_bf16<V: SimdLane>(x: &mut [u16], a: f32, y: &[u16], b: f32) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let l = V::LANES;
+    let mut i = 0usize;
+    while i + l <= n {
+        for j in 0..l {
+            let xv = super::bf16_to_f32(*x.get_unchecked(i + j));
+            let yv = super::bf16_to_f32(*y.get_unchecked(i + j));
+            *x.get_unchecked_mut(i + j) = super::bf16_from_f32(a * xv + b * yv);
+        }
+        i += l;
+    }
+    while i < n {
+        let xv = super::bf16_to_f32(*x.get_unchecked(i));
+        let yv = super::bf16_to_f32(*y.get_unchecked(i));
+        *x.get_unchecked_mut(i) = super::bf16_from_f32(a * xv + b * yv);
+        i += 1;
+    }
+}
+
+/// Sum of squares of a bf16 row, widened to f32 and accumulated in f32
+/// across a **fixed** bank of 8 independent accumulators (stride-8
+/// assignment, folded pairwise at the end) — the row-norm reduction of
+/// the bf16 RMNP step.
+///
+/// The accumulator structure is pinned independent of `V::LANES`, so the
+/// reduction order — and therefore the result bits — are identical on
+/// every rung; the generic parameter only instantiates the loop inside
+/// each backend's `#[target_feature]` wrapper, where LLVM can lift the
+/// stride-8 banks into vector registers. Eight banks also break the
+/// add-latency chain a serial scalar reduction would serialize on.
+#[inline(always)]
+pub(crate) unsafe fn bf16_row_sumsq<V: SimdLane>(x: &[u16]) -> f32 {
+    let n = x.len();
+    let mut acc = [0.0f32; 8];
+    let mut i = 0usize;
+    while i + 8 <= n {
+        for (j, a) in acc.iter_mut().enumerate() {
+            let v = super::bf16_to_f32(*x.get_unchecked(i + j));
+            *a += v * v;
+        }
+        i += 8;
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    while i < n {
+        let v = super::bf16_to_f32(*x.get_unchecked(i));
+        s += v * v;
+        i += 1;
+    }
+    s
 }
 
 /// Fused row normalization: `dst[i,:] = src[i,:] / max(‖src[i,:]‖₂, eps)`.

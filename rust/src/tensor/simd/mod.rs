@@ -10,6 +10,8 @@
 //! * `avx2` — the x86-64 backend: 8-lane `__m256` + FMA (bit-identical
 //!   to the pre-refactor hand-written kernels: same intrinsics, same
 //!   order);
+//! * `avx512` — the wider x86-64 backend: 16-lane `__m512` + FMA over
+//!   the same generic bodies, one full `NR`-wide strip per register;
 //! * `neon` — the aarch64 backend: 4-lane `float32x4_t` + `vfmaq`, the
 //!   rung that lets ARM hosts leave the scalar tiles.
 //!
@@ -17,19 +19,21 @@
 //! matters:
 //!
 //! 1. `perf.simd` config key / [`set_mode`] — explicit `"avx2"`,
-//!    `"neon"`, or `"scalar"` override (the CLI prints the chosen rung at
-//!    startup);
+//!    `"avx512"`, `"neon"`, or `"scalar"` override (the CLI prints the
+//!    chosen rung at startup);
 //! 2. the `RMNP_SIMD` environment variable (same values) — this is how
 //!    CI's forced-scalar job keeps the portable path green;
 //! 3. runtime detection ([`detected`]): `is_x86_feature_detected!` for
-//!    AVX2+FMA on x86-64, `is_aarch64_feature_detected!` for NEON on
-//!    aarch64, evaluated once per process and cached.
+//!    AVX-512F, else AVX2+FMA, on x86-64;
+//!    `is_aarch64_feature_detected!` for NEON on aarch64, evaluated once
+//!    per process and cached.
 //!
 //! Forcing a rung the CPU cannot execute quietly lands on the scalar
 //! tiles — [`active`] never returns a path the hardware cannot run, and
 //! a forced rung never silently substitutes a *different* vector rung
-//! (`RMNP_SIMD=neon` on x86 is scalar, not AVX2; the `tests/neon_rung.rs`
-//! suite pins that contract).
+//! (`RMNP_SIMD=neon` on x86 is scalar, not AVX2, and `RMNP_SIMD=avx512`
+//! on an AVX2-only host is scalar, not AVX2; the `tests/neon_rung.rs`
+//! and `tests/avx512_rung.rs` suites pin that contract).
 //!
 //! Numerics: the vector paths use fused multiply-add and lane-wide folds,
 //! so results differ from the scalar tiles by normal f32 rounding
@@ -50,6 +54,8 @@ use std::sync::OnceLock;
 
 #[cfg(target_arch = "x86_64")]
 pub(crate) mod avx2;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx512;
 #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
 pub(crate) mod lane;
 #[cfg(target_arch = "aarch64")]
@@ -62,6 +68,8 @@ pub enum SimdMode {
     Auto,
     /// Force the AVX2/FMA path (falls back to scalar if unsupported).
     Avx2,
+    /// Force the AVX-512F path (falls back to scalar if unsupported).
+    Avx512,
     /// Force the NEON path (falls back to scalar if unsupported).
     Neon,
     /// Force the portable scalar tiles.
@@ -74,10 +82,11 @@ impl SimdMode {
         Ok(match s {
             "auto" => SimdMode::Auto,
             "avx2" => SimdMode::Avx2,
+            "avx512" => SimdMode::Avx512,
             "neon" => SimdMode::Neon,
             "scalar" => SimdMode::Scalar,
             other => anyhow::bail!(
-                "unknown simd mode `{other}` (expected auto|avx2|neon|scalar)"
+                "unknown simd mode `{other}` (expected auto|avx2|avx512|neon|scalar)"
             ),
         })
     }
@@ -87,6 +96,7 @@ impl SimdMode {
         match self {
             SimdMode::Auto => "auto",
             SimdMode::Avx2 => "avx2",
+            SimdMode::Avx512 => "avx512",
             SimdMode::Neon => "neon",
             SimdMode::Scalar => "scalar",
         }
@@ -98,6 +108,8 @@ impl SimdMode {
 pub enum SimdPath {
     /// The x86-64 AVX2/FMA backend (8-lane f32 registers).
     Avx2,
+    /// The x86-64 AVX-512F backend (16-lane f32 registers).
+    Avx512,
     /// The aarch64 NEON backend (4-lane f32 registers).
     Neon,
     /// The portable scalar tiles.
@@ -110,6 +122,7 @@ impl SimdPath {
     pub fn to_mode(self) -> SimdMode {
         match self {
             SimdPath::Avx2 => SimdMode::Avx2,
+            SimdPath::Avx512 => SimdMode::Avx512,
             SimdPath::Neon => SimdMode::Neon,
             SimdPath::Scalar => SimdMode::Scalar,
         }
@@ -119,13 +132,14 @@ impl SimdPath {
     pub fn name(self) -> &'static str {
         match self {
             SimdPath::Avx2 => "avx2",
+            SimdPath::Avx512 => "avx512",
             SimdPath::Neon => "neon",
             SimdPath::Scalar => "scalar",
         }
     }
 }
 
-static MODE: AtomicU8 = AtomicU8::new(0); // 0 = auto, 1 = avx2, 2 = scalar, 3 = neon
+static MODE: AtomicU8 = AtomicU8::new(0); // 0 = auto, 1 = avx2, 2 = scalar, 3 = neon, 4 = avx512
 
 /// Set the dispatch mode (wired to the `perf.simd` config key and the
 /// CLI). `Auto` restores env-var/detection resolution.
@@ -135,6 +149,7 @@ pub fn set_mode(mode: SimdMode) {
         SimdMode::Avx2 => 1,
         SimdMode::Scalar => 2,
         SimdMode::Neon => 3,
+        SimdMode::Avx512 => 4,
     };
     MODE.store(v, Ordering::Relaxed);
 }
@@ -145,6 +160,7 @@ pub fn mode() -> SimdMode {
         1 => SimdMode::Avx2,
         2 => SimdMode::Scalar,
         3 => SimdMode::Neon,
+        4 => SimdMode::Avx512,
         _ => SimdMode::Auto,
     }
 }
@@ -175,6 +191,24 @@ pub fn avx2_available() -> bool {
     })
 }
 
+/// Whether this CPU can run the AVX-512F kernels (detected once). The
+/// f32x16 backend uses only `avx512f` intrinsics (loads, stores, FMA,
+/// and the `_mm512_reduce_*` folds), so the foundation subset is the
+/// whole requirement.
+pub fn avx512_available() -> bool {
+    static DET: OnceLock<bool> = OnceLock::new();
+    *DET.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            is_x86_feature_detected!("avx512f")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
+
 /// Whether this CPU can run the NEON kernels (detected once). aarch64
 /// guarantees NEON in its baseline, so on ARM hosts this is effectively
 /// always true; the check exists for ladder symmetry.
@@ -193,10 +227,12 @@ pub fn neon_available() -> bool {
 }
 
 /// The rung `Auto` resolves to on this host before any override — the
-/// best available backend. At most one vector rung exists per
-/// architecture, so there is no preference order to tune.
+/// best available backend, widest rung first (AVX-512F implies AVX2 on
+/// every real CPU, so the order only matters on x86-64).
 pub fn detected() -> SimdPath {
-    if avx2_available() {
+    if avx512_available() {
+        SimdPath::Avx512
+    } else if avx2_available() {
         SimdPath::Avx2
     } else if neon_available() {
         SimdPath::Neon
@@ -220,6 +256,13 @@ pub fn active() -> SimdPath {
                 SimdPath::Scalar
             }
         }
+        SimdMode::Avx512 => {
+            if avx512_available() {
+                SimdPath::Avx512
+            } else {
+                SimdPath::Scalar
+            }
+        }
         SimdMode::Neon => {
             if neon_available() {
                 SimdPath::Neon
@@ -236,6 +279,7 @@ pub fn active() -> SimdPath {
 pub fn label() -> &'static str {
     match active() {
         SimdPath::Avx2 => "avx2+fma (f32x8)",
+        SimdPath::Avx512 => "avx512f (f32x16)",
         SimdPath::Neon => "neon (f32x4)",
         SimdPath::Scalar => "scalar (autovec tiles)",
     }
@@ -287,6 +331,8 @@ pub fn bf16_pack(src: &[f32], dst: &mut [u16]) {
     match active() {
         #[cfg(target_arch = "x86_64")]
         SimdPath::Avx2 => unsafe { avx2::bf16_pack(src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx512 => unsafe { avx512::bf16_pack(src, dst) },
         #[cfg(target_arch = "aarch64")]
         SimdPath::Neon => unsafe { neon::bf16_pack(src, dst) },
         _ => bf16_pack_scalar(src, dst),
@@ -300,6 +346,8 @@ pub fn bf16_unpack(src: &[u16], dst: &mut [f32]) {
     match active() {
         #[cfg(target_arch = "x86_64")]
         SimdPath::Avx2 => unsafe { avx2::bf16_unpack(src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        SimdPath::Avx512 => unsafe { avx512::bf16_unpack(src, dst) },
         #[cfg(target_arch = "aarch64")]
         SimdPath::Neon => unsafe { neon::bf16_unpack(src, dst) },
         _ => bf16_unpack_scalar(src, dst),
@@ -314,12 +362,19 @@ mod tests {
     fn mode_parse_and_names() {
         assert_eq!(SimdMode::parse("auto").unwrap(), SimdMode::Auto);
         assert_eq!(SimdMode::parse("avx2").unwrap(), SimdMode::Avx2);
+        assert_eq!(SimdMode::parse("avx512").unwrap(), SimdMode::Avx512);
         assert_eq!(SimdMode::parse("neon").unwrap(), SimdMode::Neon);
         assert_eq!(SimdMode::parse("scalar").unwrap(), SimdMode::Scalar);
         assert!(SimdMode::parse("sse9").is_err());
         assert_eq!(SimdMode::Avx2.name(), "avx2");
+        assert_eq!(SimdMode::Avx512.name(), "avx512");
         assert_eq!(SimdMode::Neon.name(), "neon");
-        for path in [SimdPath::Avx2, SimdPath::Neon, SimdPath::Scalar] {
+        for path in [
+            SimdPath::Avx2,
+            SimdPath::Avx512,
+            SimdPath::Neon,
+            SimdPath::Scalar,
+        ] {
             assert_eq!(SimdMode::parse(path.name()).unwrap(), path.to_mode());
         }
     }
@@ -329,13 +384,19 @@ mod tests {
         // whatever the mode, the resolved path must be runnable
         match active() {
             SimdPath::Avx2 => assert!(avx2_available()),
+            SimdPath::Avx512 => assert!(avx512_available()),
             SimdPath::Neon => assert!(neon_available()),
             SimdPath::Scalar => {}
         }
         assert!(!label().is_empty());
-        // at most one vector rung per architecture
+        // the x86 and ARM rungs are mutually exclusive (avx512 is NOT
+        // exclusive with avx2 — every AVX-512F CPU also has AVX2)
         assert!(!(avx2_available() && neon_available()));
-        if !avx2_available() && !neon_available() {
+        assert!(!(avx512_available() && neon_available()));
+        if avx512_available() {
+            assert_eq!(detected(), SimdPath::Avx512);
+        }
+        if !avx2_available() && !avx512_available() && !neon_available() {
             assert_eq!(detected(), SimdPath::Scalar);
         }
     }

@@ -7,48 +7,61 @@ use std::collections::BTreeMap;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (JSON does not distinguish ints from floats).
     Num(f64),
+    /// A string, with escapes already decoded.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object; BTreeMap keeps key order deterministic for `render`.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object field by key (`None` for non-objects and missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
             _ => None,
         }
     }
+    /// Array element by index (`None` for non-arrays and out of range).
     pub fn idx(&self, i: usize) -> Option<&Json> {
         match self {
             Json::Arr(a) => a.get(i),
             _ => None,
         }
     }
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
             _ => None,
         }
     }
+    /// The numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
             _ => None,
         }
     }
+    /// The key/value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -100,6 +113,7 @@ impl Json {
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow::anyhow!("json: missing string `{key}`"))
     }
+    /// Convenience: `self[key]` or error.
     pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
         self.get(key)
             .ok_or_else(|| anyhow::anyhow!("json: missing key `{key}`"))

@@ -7,9 +7,13 @@ use std::time::{SystemTime, UNIX_EPOCH};
 /// Log severity.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
 pub enum Level {
+    /// Tracing detail, hidden by default.
     Debug = 0,
+    /// Routine progress (the default verbosity).
     Info = 1,
+    /// Recoverable anomalies worth surfacing.
     Warn = 2,
+    /// Failures.
     Error = 3,
 }
 
@@ -48,15 +52,17 @@ pub fn log_line(lvl: Level, msg: &str) {
     eprintln!("[{secs:.3} {tag}] {msg}");
 }
 
-/// `info!`-style convenience macros.
+/// Log a formatted line at [`crate::util::Level::Info`].
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => { $crate::util::log_line($crate::util::Level::Info, &format!($($arg)*)) };
 }
+/// Log a formatted line at [`crate::util::Level::Warn`].
 #[macro_export]
 macro_rules! warnln {
     ($($arg:tt)*) => { $crate::util::log_line($crate::util::Level::Warn, &format!($($arg)*)) };
 }
+/// Log a formatted line at [`crate::util::Level::Debug`].
 #[macro_export]
 macro_rules! debugln {
     ($($arg:tt)*) => { $crate::util::log_line($crate::util::Level::Debug, &format!($($arg)*)) };

@@ -2,10 +2,6 @@
 //! lightweight logging. Everything here is dependency-free so the rest of
 //! the crate (and the offline build) can rely on it.
 
-// The crate-level `missing_docs` warning is enforced for tensor/ and
-// optim/; this module's full docs pass is still pending (ROADMAP.md).
-#![allow(missing_docs)]
-
 pub mod crc32;
 pub mod fault;
 pub mod json;

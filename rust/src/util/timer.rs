@@ -13,6 +13,7 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Empty timer with no spans.
     pub fn new() -> Self {
         Self::default()
     }

@@ -15,7 +15,7 @@ use rmnp::model::{attention::AttentionArch, model_spec, ssm::SsmArch, Batch, Mod
 use rmnp::optim::plan::{OptKind, OptState, ParamTask, StepPlan};
 use rmnp::optim::registry::{MatrixOptimizer, REGISTRY};
 use rmnp::optim::{MuonState, RmnpState};
-use rmnp::tensor::Matrix;
+use rmnp::tensor::{Bf16Matrix, Matrix, Precision};
 use rmnp::util::Rng;
 
 struct CountingAlloc;
@@ -108,6 +108,28 @@ fn optimizer_steps_are_allocation_free_after_warmup() {
             allocs(),
             before,
             "warm {name} step must be allocation-free per call"
+        );
+    }
+
+    // --- bf16 storage mode: the same zoo contract. The fused bf16
+    // sweeps work on the u16 buffers in place, and the NS family widens
+    // into scratch owned by the state (allocated at construction or on
+    // the warmup step), so a warm `step_bf16` may not touch the heap
+    // either. ---
+    for (name, kind) in REGISTRY.iter().filter_map(|s| s.native.map(|k| (s.name, k))) {
+        let g = Matrix::randn(40, 56, 1.0, &mut rng);
+        let w0 = Matrix::randn(40, 56, 0.1, &mut rng);
+        let mut w = Bf16Matrix::from_matrix(&w0);
+        let mut st = OptState::new_with(kind, 40, 56, Precision::Bf16);
+        st.step_bf16(&mut w, &g, 1e-3); // warmup: fills any workspace pool
+        let before = allocs();
+        for _ in 0..5 {
+            st.step_bf16(&mut w, &g, 1e-3);
+        }
+        assert_eq!(
+            allocs(),
+            before,
+            "warm {name} step_bf16 must be allocation-free per call"
         );
     }
 

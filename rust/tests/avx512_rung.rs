@@ -1,0 +1,228 @@
+//! The forced-AVX-512 suite: what `RMNP_SIMD=avx512` must mean on every
+//! host.
+//!
+//! On an AVX-512F x86-64 this is the f32x16 twin of the forced-scalar CI
+//! job: force the rung, verify the ladder resolved to it, and run the
+//! op-level parity suite against the seed scalar baselines. On any other
+//! host (including AVX2-only x86-64) the suite is **cleanly skipped, not
+//! silently passed**: each test prints a visible `SKIP(avx512)` line to
+//! stderr and then pins the documented fallback contract — forcing a
+//! rung the CPU cannot run resolves to the scalar tiles, never to a
+//! *different* vector rung (not even AVX2, which every AVX-512 CPU also
+//! has) — so a plain runner still asserts something real about the
+//! ladder.
+//!
+//! Tests here flip the process-global dispatch mode, so every test holds
+//! the shared mode lock.
+
+use std::sync::{Mutex, MutexGuard};
+
+use rmnp::optim::{newton_schulz5_into, newton_schulz5_naive, ROW_EPS};
+use rmnp::tensor::simd::{self, SimdMode, SimdPath};
+use rmnp::tensor::{Matrix, Workspace};
+use rmnp::util::Rng;
+
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn mode_lock() -> MutexGuard<'static, ()> {
+    // a failed test poisons the lock; the () state cannot be corrupted
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Force the AVX-512 rung for the duration of `f` (restoring the
+/// previous mode), running `f` only when the host can actually execute
+/// it. On hosts without AVX-512F, print the skip marker and assert the
+/// fallback contract instead.
+fn with_forced_avx512(test: &str, f: impl FnOnce()) {
+    let _guard = mode_lock();
+    let prev = simd::mode();
+    simd::set_mode(SimdMode::Avx512);
+    if simd::avx512_available() {
+        assert_eq!(
+            simd::active(),
+            SimdPath::Avx512,
+            "avx512f detected but the ladder did not resolve to it"
+        );
+        f();
+    } else {
+        eprintln!(
+            "SKIP(avx512): {test}: no AVX-512F on this host ({})",
+            std::env::consts::ARCH
+        );
+        // the fallback contract: forced-but-unavailable rungs land on
+        // scalar, never on another vector rung
+        assert_eq!(simd::active(), SimdPath::Scalar);
+    }
+    simd::set_mode(prev);
+}
+
+fn max_abs_diff(a: &Matrix, b: &Matrix) -> f32 {
+    a.data()
+        .iter()
+        .zip(b.data())
+        .fold(0.0f32, |m, (x, y)| m.max((x - y).abs()))
+}
+
+/// Rect/tall/wide shapes, including one past the packed-A threshold with
+/// a remainder-row tail (and widths that leave an f32x16 remainder).
+const SHAPES: &[(usize, usize)] = &[(7, 13), (96, 24), (24, 96), (130, 66)];
+
+#[test]
+fn forced_avx512_matmul_and_gram_match_naive() {
+    with_forced_avx512("matmul/gram parity", || {
+        let mut rng = Rng::new(1);
+        for &(m, k) in SHAPES {
+            let n = (k / 2).max(1) + 3;
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let d = max_abs_diff(&a.matmul(&b), &a.matmul_naive(&b));
+            assert!(d < 1e-4, "matmul ({m},{k},{n}): {d}");
+            let d = max_abs_diff(&a.gram(), &a.gram_naive());
+            assert!(d < 1e-4, "gram ({m},{k}): {d}");
+        }
+    });
+}
+
+#[test]
+fn forced_avx512_rownorm_matches_naive_including_zero_rows() {
+    with_forced_avx512("rownorm parity", || {
+        let mut rng = Rng::new(2);
+        for &(m, n) in SHAPES {
+            let mut v = Matrix::randn(m, n, 2.0, &mut rng);
+            let mid = m / 2;
+            for x in v.data_mut()[mid * n..(mid + 1) * n].iter_mut() {
+                *x = 0.0; // zero row: eps-floor semantics must agree
+            }
+            let d = max_abs_diff(&v.row_normalize(ROW_EPS), &v.row_normalize_naive(ROW_EPS));
+            assert!(d < 1e-4, "rownorm ({m},{n}): {d}");
+        }
+    });
+}
+
+#[test]
+fn forced_avx512_ns5_matches_naive() {
+    with_forced_avx512("ns5 parity", || {
+        let mut rng = Rng::new(3);
+        let mut ws = Workspace::new();
+        for &(m, n) in &[(12usize, 40usize), (40, 12), (16, 16)] {
+            let g = Matrix::randn(m, n, 1.0, &mut rng);
+            let naive = newton_schulz5_naive(&g, 5);
+            let mut fast = Matrix::zeros(m, n);
+            newton_schulz5_into(&g, 5, &mut ws, &mut fast);
+            let d = max_abs_diff(&fast, &naive);
+            assert!(d < 1e-4, "ns5 ({m},{n}): {d}");
+        }
+    });
+}
+
+#[test]
+fn forced_avx512_model_sweeps_match_reference() {
+    // the model-layer kernels (row softmax ± mask, RMSNorm) on the
+    // AVX-512 rung against f64 references
+    with_forced_avx512("row_softmax/rmsnorm parity", || {
+        let mut rng = Rng::new(5);
+        for (rows, cols) in [(6usize, 16usize), (9, 33), (8, 96)] {
+            let mut src = vec![0.0f32; rows * cols];
+            rng.fill_normal(&mut src, 1.0);
+            for x in src[cols / 2..cols].iter_mut() {
+                *x = f32::NEG_INFINITY; // mask part of row 0
+            }
+            let mut gain = vec![0.0f32; cols];
+            rng.fill_normal(&mut gain, 0.2);
+            for g in gain.iter_mut() {
+                *g += 1.0;
+            }
+            let mut sm = vec![0.0f32; rows * cols];
+            rmnp::tensor::kernels::row_softmax_into(&mut sm, &src, rows, cols);
+            let mut rn = vec![0.0f32; rows * cols];
+            let mut positive = vec![0.0f32; rows * cols];
+            rng.fill_normal(&mut positive, 1.0);
+            rmnp::tensor::kernels::rmsnorm_into(&mut rn, &positive, &gain, rows, cols, 1e-6);
+            for i in 0..rows {
+                // softmax rows sum to 1
+                let s: f64 = sm[i * cols..(i + 1) * cols].iter().map(|&x| x as f64).sum();
+                assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+                // rmsnorm matches the f64 formula
+                let ss: f64 = positive[i * cols..(i + 1) * cols]
+                    .iter()
+                    .map(|&x| (x as f64) * (x as f64))
+                    .sum();
+                let r = 1.0 / (ss / cols as f64 + 1e-6).sqrt();
+                for j in 0..cols {
+                    let want = gain[j] as f64 * positive[i * cols + j] as f64 * r;
+                    assert!(
+                        (rn[i * cols + j] as f64 - want).abs() < 1e-4,
+                        "rmsnorm ({rows},{cols}) at ({i},{j})"
+                    );
+                }
+            }
+            for &p in &sm[cols / 2..cols] {
+                assert_eq!(p, 0.0, "masked prob must be exactly 0");
+            }
+        }
+    });
+}
+
+#[test]
+fn forced_avx512_bf16_sweeps_match_scalar_bits() {
+    // the bf16 storage kernels pin their accumulation order, so the
+    // forced-AVX-512 instantiation must be *bit-identical* to scalar —
+    // not merely within tolerance
+    let _guard = mode_lock();
+    let prev = simd::mode();
+    let mut rng = Rng::new(6);
+    for &(m, n) in SHAPES {
+        let len = m * n;
+        let mut x0 = vec![0.0f32; len];
+        rng.fill_normal(&mut x0, 0.5);
+        let mut y = vec![0.0f32; len];
+        rng.fill_normal(&mut y, 1.0);
+        let mut bits0 = vec![0u16; len];
+        simd::bf16_pack(&x0, &mut bits0);
+        let run = |mode: SimdMode| {
+            simd::set_mode(mode);
+            let mut bits = bits0.clone();
+            rmnp::tensor::kernels::bf16_axpby_inplace(&mut bits, 0.95, &y, 0.05);
+            let sq = rmnp::tensor::kernels::bf16_row_sumsq(&bits);
+            let mut w = bits0.clone();
+            rmnp::tensor::kernels::bf16_axpby_from_bf16(&mut w, 0.9, &bits, -0.02);
+            (bits, sq.to_bits(), w)
+        };
+        let scalar = run(SimdMode::Scalar);
+        let forced = run(SimdMode::Avx512); // avx512 or the scalar fallback
+        assert_eq!(scalar, forced, "bf16 sweeps diverged at ({m},{n})");
+    }
+    simd::set_mode(prev);
+}
+
+#[test]
+fn forced_avx512_thread_count_does_not_change_bits() {
+    with_forced_avx512("thread-count determinism", || {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(130, 90, 1.0, &mut rng);
+        let b = Matrix::randn(90, 110, 1.0, &mut rng);
+        rmnp::tensor::kernels::set_num_threads(1);
+        let serial = a.matmul(&b);
+        rmnp::tensor::kernels::set_num_threads(4);
+        let par = a.matmul(&b);
+        rmnp::tensor::kernels::set_num_threads(0);
+        assert_eq!(serial, par);
+    });
+}
+
+#[test]
+fn forcing_avx512_never_lands_on_another_vector_rung() {
+    // runs meaningfully on every host: forced avx512 is avx512 where it
+    // exists and scalar everywhere else — never avx2 or neon, even
+    // though every AVX-512F CPU also has AVX2
+    let _guard = mode_lock();
+    let prev = simd::mode();
+    simd::set_mode(SimdMode::Avx512);
+    let path = simd::active();
+    assert!(
+        path == SimdPath::Avx512 || path == SimdPath::Scalar,
+        "forced avx512 resolved to {path:?}"
+    );
+    assert_eq!(path == SimdPath::Avx512, simd::avx512_available());
+    simd::set_mode(prev);
+}

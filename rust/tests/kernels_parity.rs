@@ -481,8 +481,8 @@ fn step_plan_bits_identical_across_plan_threads() {
     // momentum state must agree too, not just the weights
     for plan in &plans[1..] {
         for i in 0..plan.len() {
-            let want = plans[0].with_task(i, |t| t.state.momentum().cloned());
-            let got = plan.with_task(i, |t| t.state.momentum().cloned());
+            let want = plans[0].with_task(i, |t| t.state.momentum());
+            let got = plan.with_task(i, |t| t.state.momentum());
             assert_eq!(got, want, "momentum diverged on task {i}");
         }
     }

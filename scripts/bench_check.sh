@@ -30,7 +30,14 @@
 #     skip), any run diverges at its registry default LR, or rmnp's
 #     isolated per-step preconditioning cost exceeds muon's at the
 #     d >= 512 gate shape (the paper's O(mn) vs O(mn·min(m,n)) claim,
-#     measured instead of asserted).
+#     measured instead of asserted),
+#   * the bf16 storage mode stops meeting its envelope: modeled
+#     parameter+momentum traffic must stay <= 0.55x the f32 mode, and the
+#     measured fused RMNP step must run >= 1.2x faster than f32 at the
+#     d >= 1024 gate shape (speed gate skipped with a notice when
+#     BENCH_MAX_D kept the big shape from running),
+#   * the data pipeline stops out-producing the training consumer: every
+#     corpus and the prefetching loader must clear 1e5 tokens/s.
 # On success it appends dated BENCH_precond / BENCH_train_step snapshots
 # to bench_history/ so the next PR has a trajectory baseline.
 set -euo pipefail
@@ -50,6 +57,9 @@ BENCH_MAX_D="${BENCH_MAX_D:-256}" BENCH_REPEATS="${BENCH_REPEATS:-2}" \
 
 echo "== cargo bench --bench optim_step =="
 BENCH_REPEATS="${BENCH_REPEATS:-2}" cargo bench --bench optim_step
+
+echo "== cargo bench --bench data_pipeline =="
+cargo bench --bench data_pipeline
 
 echo "== cargo bench --bench host_train (native backend end-to-end) =="
 BENCH_REPEATS="${BENCH_REPEATS:-2}" cargo bench --bench host_train
@@ -137,6 +147,76 @@ if bad:
         print("  " + b)
     sys.exit(1)
 print("bench check OK")
+EOF
+
+echo "== checking BENCH_train_step.json (precision envelope) =="
+python3 - <<'EOF'
+import json
+
+with open("BENCH_train_step.json") as f:
+    doc = json.load(f)
+
+bad = []
+prec = doc.get("precision", [])
+if not prec:
+    raise SystemExit("train_step lost its precision section (f32 vs bf16 cases)")
+for c in prec:
+    d = max(c["rows"], c["cols"])
+    ratio = c["bytes_ratio"]
+    speedup = c["speedup"]
+    print(
+        f"  rmnp {c['rows']}x{c['cols']}  state bytes/elem "
+        f"f32 {c['f32_state_bytes_per_elem']} -> bf16 {c['bf16_state_bytes_per_elem']} "
+        f"(ratio {ratio:.2f})  speedup {speedup:.2f}x"
+    )
+    # storage contract: bf16 halves every persistent-state access
+    if ratio > 0.55:
+        bad.append(f"bf16 state-byte ratio {ratio:.2f} at {d} exceeds the 0.55x bar")
+    # the speed gate only binds where the working set outruns cache and
+    # the step is genuinely bandwidth-bound
+    if d >= 1024 and speedup < 1.2:
+        bad.append(f"bf16 speedup {speedup:.2f}x at d={d} below the 1.2x bar")
+if not any(max(c["rows"], c["cols"]) >= 1024 for c in prec):
+    print("  no d >= 1024 case ran (BENCH_MAX_D cap) — skipping the bf16 speed gate")
+
+if bad:
+    print("FAIL:")
+    for b in bad:
+        print("  " + b)
+    raise SystemExit(1)
+print("precision envelope OK")
+EOF
+
+echo "== checking BENCH_data_pipeline.json =="
+python3 - <<'EOF'
+import json
+
+with open("BENCH_data_pipeline.json") as f:
+    doc = json.load(f)
+
+bad = []
+corpora = doc["corpora"]
+if {c["corpus"] for c in corpora} != {"markov", "zipf", "ngram"}:
+    bad.append(f"corpus coverage lost: {sorted(c['corpus'] for c in corpora)}")
+# the consumer bar: the largest CPU model eats ~1e5 tokens/s, so every
+# producer must clear it with room to spare
+for c in corpora:
+    print(f"  {c['corpus']:<8} {c['tokens_per_s']/1e6:8.1f}M tokens/s")
+    if c["tokens_per_s"] < 1e5:
+        bad.append(f"{c['corpus']} produces {c['tokens_per_s']:.0f} tokens/s < 1e5")
+loader = doc["loader"]
+print(f"  loader   {loader['tokens_per_s']/1e6:8.1f}M tokens/s")
+if loader["tokens_per_s"] < 1e5:
+    bad.append(f"prefetch loader produces {loader['tokens_per_s']:.0f} tokens/s < 1e5")
+print(f"  images   {doc['images']['images_per_s']:8.0f} images/s")
+print(f"  bpe      {doc['bpe']['bytes_per_s']/1e6:8.2f} MB/s")
+
+if bad:
+    print("FAIL:")
+    for b in bad:
+        print("  " + b)
+    raise SystemExit(1)
+print("data pipeline envelope OK")
 EOF
 
 echo "== checking BENCH_host_train.json =="
@@ -312,8 +392,9 @@ SHA="$(git -C "$ROOT" rev-parse --short HEAD 2>/dev/null || echo nogit)"
 STAMP="$(date -u +%Y%m%d%H%M%S)_${SHA}"
 cp BENCH_precond.json "$ROOT/bench_history/${STAMP}_precond.json"
 cp BENCH_train_step.json "$ROOT/bench_history/${STAMP}_train_step.json"
+cp BENCH_data_pipeline.json "$ROOT/bench_history/${STAMP}_data_pipeline.json"
 cp BENCH_host_train.json "$ROOT/bench_history/${STAMP}_host_train.json"
 cp BENCH_faults.json "$ROOT/bench_history/${STAMP}_faults.json"
 cp BENCH_dist.json "$ROOT/bench_history/${STAMP}_dist.json"
 cp BENCH_shootout.json "$ROOT/bench_history/${STAMP}_shootout.json"
-echo "recorded bench_history/${STAMP}_{precond,train_step,host_train,faults,dist,shootout}.json"
+echo "recorded bench_history/${STAMP}_{precond,train_step,data_pipeline,host_train,faults,dist,shootout}.json"
